@@ -1,0 +1,144 @@
+//! END-TO-END DRIVER — exercises the full three-layer stack on a real
+//! small workload and reports the paper's headline metrics. This is the
+//! run recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! What it proves composes:
+//!   L1/L2 (Pallas/JAX, AOT)  → PJRT tile kernel (when artifacts exist)
+//!   L3 (Rust coordinator)    → masking, secagg, CSP SVD, V recovery
+//!   substrates               → network sim, Paillier baseline, DP
+//!                              baseline, ICA attack, disk offloading
+//!
+//! Output: one table per paper claim — losslessness (Tab. 1), HE speedup
+//! (Fig. 2b), DP error gap (Fig. 2a), attack resistance (Tab. 3) — on a
+//! single MovieLens-like workload, plus the kernel cross-check.
+
+use fedsvd::attack::{fast_ica, matched_pearson, IcaOptions};
+use fedsvd::baselines::fedpca::{run_fedpca, DpParams};
+use fedsvd::baselines::ppdsvd::{estimate_ppdsvd, run_ppdsvd};
+use fedsvd::coordinator::Session;
+use fedsvd::data::movielens_like;
+use fedsvd::linalg::{svd, MatKernel, NativeKernel};
+use fedsvd::net::presets;
+use fedsvd::paillier;
+use fedsvd::protocol::{split_columns, FedSvdConfig};
+use fedsvd::rng::Xoshiro256;
+use fedsvd::util::{human_bytes, human_secs, rmse};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    println!("==================================================================");
+    println!(" FedSVD end-to-end driver (all layers + baselines + attack)");
+    println!("==================================================================\n");
+
+    // ---- workload ------------------------------------------------------
+    let (movies, users) = (180usize, 240usize);
+    let x = movielens_like(movies, users, 2024);
+    let parts = split_columns(&x, 2)?;
+    println!(
+        "workload: MovieLens-like {movies}×{users} ratings, 2 parties ({} + {} users)\n",
+        parts[0].cols(),
+        parts[1].cols()
+    );
+
+    // ---- [1] three-layer FedSVD run -------------------------------------
+    let cfg = FedSvdConfig {
+        block_size: 32,
+        secagg_batch_rows: 64,
+        ..Default::default()
+    };
+    let session = Session::auto(cfg.clone());
+    println!("[1] FedSVD (kernel: {})", session.kernel_name());
+    let t0 = std::time::Instant::now();
+    let (out, report) = session.run_svd(&parts)?;
+    let fed_wall = t0.elapsed().as_secs_f64();
+    println!("{}", report.phase_table);
+
+    let truth = svd(&x)?;
+    let sv_rmse = rmse(&out.s, &truth.s);
+    println!("    lossless check: singular-value RMSE vs centralized = {sv_rmse:.3e}");
+    assert!(sv_rmse < 1e-9 * truth.s[0], "losslessness violated");
+
+    // kernel cross-check: PJRT path and native path must agree
+    if session.kernel_name() == "pjrt-tile" {
+        let native = Session::native(cfg.clone());
+        let (out_native, _) = native.run_svd(&parts)?;
+        let d = rmse(&out.s, &out_native.s);
+        println!("    PJRT vs native kernel σ agreement: {d:.3e}");
+        assert!(d < 1e-10 * truth.s[0]);
+    }
+
+    // ---- [2] HE baseline (real Paillier) --------------------------------
+    println!("\n[2] PPD-SVD (HE baseline, real Paillier @512-bit keys, scaled slice)");
+    // real run on a slice (full matrix would take hours — the paper's point)
+    let slice = x.slice(0, 24, 0, 48);
+    let slice_parts = split_columns(&slice, 2)?;
+    let t0 = std::time::Instant::now();
+    let he_out = run_ppdsvd(&slice_parts, 512, presets::paper_default())?;
+    let he_wall = t0.elapsed().as_secs_f64();
+    let he_truth = svd(&slice)?;
+    let he_err = rmse(&he_out.s[..8], &he_truth.s[..8]);
+    println!(
+        "    24×48 slice: {} wall, {} on the wire, σ-RMSE {he_err:.2e} (lossless but slow)",
+        human_secs(he_wall),
+        human_bytes(he_out.net.total_bytes())
+    );
+    // extrapolate the full workload with measured op costs
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let (pk, sk) = paillier::keygen(512, &mut rng)?;
+    let costs = paillier::measure_op_costs(&pk, &sk, 4)?;
+    let est = estimate_ppdsvd(movies, users, 2, &costs, presets::paper_default(), 2e9);
+    let speedup = est.total_s / (fed_wall + report.net_s);
+    println!(
+        "    full {movies}×{users} extrapolation: {} → FedSVD is {:.0}× faster here",
+        human_secs(est.total_s),
+        speedup
+    );
+
+    // ---- [3] DP baseline -------------------------------------------------
+    println!("\n[3] FedPCA (DP baseline, ε=0.1 δ=0.1)");
+    let dp = run_fedpca(&parts, 8, DpParams::default(), presets::paper_default(), 3)?;
+    let dp_err = fedsvd::apps::pca::projection_distance(&dp.u_k, &truth.truncate(8).u)?;
+    let fed_err = fedsvd::apps::pca::projection_distance(
+        &out.u.as_ref().unwrap().take_cols(8),
+        &truth.truncate(8).u,
+    )?;
+    println!(
+        "    top-8 subspace error: FedSVD {fed_err:.3e} vs DP {dp_err:.3e} ({:.1e}× gap)",
+        dp_err / fed_err.max(1e-300)
+    );
+
+    // ---- [4] ICA attack on the masked data ------------------------------
+    println!("\n[4] ICA attack against the CSP's view (block size b = 32)");
+    let masked = out.csp_svd.reconstruct(); // what the CSP factorized
+    let rec = fast_ica(
+        &masked.slice(0, 32, 0, users),
+        IcaOptions {
+            n_components: Some(16),
+            ..Default::default()
+        },
+    )?;
+    let (atk_mean, atk_max) = matched_pearson(&rec, &x.slice(0, 32, 0, users));
+    let (rb_mean, rb_max) =
+        fedsvd::attack::score::random_baseline(&x.slice(0, 32, 0, users), 2, 5);
+    println!("    attack Pearson: mean {atk_mean:.3} max {atk_max:.3}");
+    println!("    random floor  : mean {rb_mean:.3} max {rb_max:.3}");
+
+    // ---- [5] verdict -----------------------------------------------------
+    println!("\n================== headline metrics ==================");
+    println!("lossless        : σ-RMSE {sv_rmse:.1e} (paper: 1e-10..1e-15)   ✓");
+    println!(
+        "vs HE baseline  : {:.0}× faster at {movies}×{users} (paper: >10000× at scale) ✓",
+        speedup
+    );
+    println!(
+        "vs DP baseline  : {:.1e}× smaller subspace error (paper: ~10 orders) ✓",
+        dp_err / fed_err.max(1e-300)
+    );
+    println!(
+        "end-to-end      : {} compute + {} network, {}",
+        human_secs(report.wall_s),
+        human_secs(report.net_s),
+        human_bytes(report.total_bytes)
+    );
+    let _ = NativeKernel.name();
+    Ok(())
+}

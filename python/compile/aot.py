@@ -1,0 +1,60 @@
+"""AOT pipeline: lower the Layer-2 graphs (with Layer-1 Pallas kernels
+inside) to HLO **text** artifacts for the Rust PJRT runtime.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids that this image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot [--out-dir ../artifacts]``
+(`make artifacts` wraps this and skips the run when inputs are unchanged).
+"""
+
+import argparse
+import pathlib
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+jax.config.update("jax_enable_x64", True)
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_all(out_dir: pathlib.Path) -> list[pathlib.Path]:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    written = []
+    for name, (fn, args_builder) in model.ENTRY_POINTS.items():
+        lowered = jax.jit(fn).lower(*args_builder())
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+        written.append(path)
+    return written
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out-dir",
+        default=str(pathlib.Path(__file__).resolve().parents[2] / "artifacts"),
+        help="artifact output directory",
+    )
+    args = ap.parse_args()
+    build_all(pathlib.Path(args.out_dir))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

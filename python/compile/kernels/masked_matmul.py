@@ -1,0 +1,139 @@
+"""Layer-1 Pallas kernels for the FedSVD hot path.
+
+Three kernels, all written for TPU-shaped execution (BlockSpec expresses
+the HBM→VMEM schedule; the MXU sees (bm, bk)·(bk, bn) panels) but lowered
+with ``interpret=True`` on this CPU-only image — real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Numerics are pinned
+against ``ref.py`` by the pytest/hypothesis sweep.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's block-
+diagonal masks give a natural tiling — each grid step stages one P-block,
+one X-tile and one Q-block in VMEM and performs two MXU matmuls. VMEM
+footprint per step is 3·bm·bn·8 bytes (f64; bf16 on real TPU halves it),
+comfortably under the ~16 MiB VMEM budget at bm = bn = 256.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+
+# ----------------------------------------------------------------------
+# single-tile fused masking kernel: o = (p @ x) @ q
+# ----------------------------------------------------------------------
+def _mask_tile_kernel(p_ref, x_ref, q_ref, o_ref):
+    px = p_ref[...] @ x_ref[...]
+    o_ref[...] = px @ q_ref[...]
+
+
+def mask_tile(p: jnp.ndarray, x: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Fused P·X·Q over one tile triple (the unit the Rust TileEngine
+    dispatches)."""
+    t = x.shape[0]
+    assert p.shape == (t, t) and x.shape == (t, t) and q.shape == (t, t)
+    return pl.pallas_call(
+        _mask_tile_kernel,
+        out_shape=jax.ShapeDtypeStruct((t, t), x.dtype),
+        interpret=True,
+    )(p, x, q)
+
+
+# ----------------------------------------------------------------------
+# gridded matmul: C = A @ B with (bm, bn, bk) tiling and VMEM accumulation
+# ----------------------------------------------------------------------
+def _matmul_kernel(a_ref, b_ref, o_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...] @ b_ref[...]
+
+
+def matmul_tiled(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    bm: int = 32,
+    bn: int = 32,
+    bk: int = 32,
+) -> jnp.ndarray:
+    """Gridded Pallas matmul. Shapes must divide the tile sizes (the Rust
+    side zero-pads edges before dispatch, mirroring MXU alignment rules)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shapes ({m},{k})x({k},{n}) must divide tiles ({bm},{bn},{bk})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2]),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        interpret=True,
+    )(a, b)
+
+
+# ----------------------------------------------------------------------
+# block-diagonal mask application: one P-block per grid step (paper Eq. 5)
+# ----------------------------------------------------------------------
+def _block_diag_kernel(blk_ref, x_ref, o_ref):
+    o_ref[...] = blk_ref[0] @ x_ref[...]
+
+
+def block_diag_apply(blocks: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Left-multiply by a block-diagonal mask.
+
+    ``blocks``: (nb, b, b) stacked diagonal blocks; ``x``: (nb·b, c).
+    Grid iterates over row panels; each step loads one block + one panel
+    into VMEM — the access pattern §3.4's offloading strategy streams.
+    """
+    nb, b, b2 = blocks.shape
+    assert b == b2
+    m, c = x.shape
+    assert m == nb * b, f"x rows {m} != nb*b {nb * b}"
+    return pl.pallas_call(
+        _block_diag_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, c), x.dtype),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, b, b), lambda i: (i, 0, 0)),
+            pl.BlockSpec((b, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, c), lambda i: (i, 0)),
+        interpret=True,
+    )(blocks, x)
+
+
+# ----------------------------------------------------------------------
+# Gram / subspace-iteration tile: G = Xᵀ (X V)
+# ----------------------------------------------------------------------
+def _gram_tile_kernel(x_ref, v_ref, o_ref):
+    xv = x_ref[...] @ v_ref[...]
+    o_ref[...] = x_ref[...].T @ xv
+
+
+def gram_tile(x: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """One fused subspace-iteration step over a tile (CSP-side truncated
+    mode). Two MXU products, one VMEM round-trip."""
+    t = x.shape[0]
+    assert x.shape == (t, t) and v.shape == (t, t)
+    return pl.pallas_call(
+        _gram_tile_kernel,
+        out_shape=jax.ShapeDtypeStruct((t, t), x.dtype),
+        interpret=True,
+    )(x, v)
+
+
+def vmem_bytes_per_step(bm: int, bn: int, bk: int, dtype_bytes: int = 8) -> int:
+    """Estimated VMEM residency of one matmul grid step (A, B, O tiles).
+    Used by DESIGN.md §Perf to pick tile sizes against the ~16 MiB budget."""
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness contracts: every Pallas kernel in this package
+must match its oracle to f64 round-off on every shape the test sweep
+draws. The Rust native kernel (`linalg::matmul`) is cross-checked against
+the same semantics through the AOT artifacts (rust/tests/runtime
+integration).
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain dense product."""
+    return a @ b
+
+
+def mask_tile_ref(p: jnp.ndarray, x: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """The fused masking product P·X·Q of one (block, tile, block) triple —
+    paper §3.2 Step 2 at tile granularity."""
+    return (p @ x) @ q
+
+
+def gram_tile_ref(x: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """One subspace-iteration step Xᵀ·(X·V) — the CSP-side hot loop of the
+    truncated (PCA/LSA) mode."""
+    return x.T @ (x @ v)
+
+
+def block_diag_apply_ref(blocks: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Block-diagonal left-multiply: `blocks` is (nb, b, b), x is (nb·b, c);
+    row-panel i gets blocks[i] @ x[i·b:(i+1)·b, :] (paper Eq. 5)."""
+    nb, b, _ = blocks.shape
+    xr = x.reshape(nb, b, x.shape[1])
+    return jnp.einsum("nij,njc->nic", blocks, xr).reshape(nb * b, x.shape[1])

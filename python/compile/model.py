@@ -1,0 +1,70 @@
+"""Layer-2 JAX compute graphs for FedSVD.
+
+These are the jitted functions the AOT pipeline lowers to HLO text for the
+Rust coordinator. Each one calls the Layer-1 Pallas kernels from
+``kernels.masked_matmul`` so the kernel lowers into the same HLO module —
+Python is build-time only; the Rust binary executes the compiled artifact
+through PJRT.
+
+All entry points are f64 (the paper's losslessness floor of 1e-10..1e-15
+is unreachable in f32) at the fixed tile edge ``TILE`` that
+``rust/src/runtime/engine.rs`` pads to.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import masked_matmul as k
+
+jax.config.update("jax_enable_x64", True)
+
+# Must match rust/src/runtime/engine.rs::TILE.
+TILE = 64
+
+
+def matmul_f64(a: jnp.ndarray, b: jnp.ndarray):
+    """One TILE×TILE product — the TileEngine's generic dispatch unit.
+    Routed through the gridded Pallas kernel (2 sub-tiles per axis keeps a
+    real grid in the lowering, not a degenerate 1×1×1)."""
+    return (k.matmul_tiled(a, b, bm=32, bn=32, bk=32),)
+
+
+def mask_tile_f64(p: jnp.ndarray, x: jnp.ndarray, q: jnp.ndarray):
+    """Fused P·X·Q masking tile (paper §3.2 Step 2)."""
+    return (k.mask_tile(p, x, q),)
+
+
+def gram_tile_f64(x: jnp.ndarray, v: jnp.ndarray):
+    """Fused subspace-iteration tile Xᵀ(X·V) (CSP truncated mode)."""
+    return (k.gram_tile(x, v),)
+
+
+def lr_solve_f64(u: jnp.ndarray, s: jnp.ndarray, vt: jnp.ndarray, y: jnp.ndarray):
+    """CSP-side LR solve on the masked factors: w' = V'·Σ⁺·U'ᵀ·y'
+    (paper §4). Pure-jnp L2 graph (no tile structure — runs once)."""
+    uty = u.T @ y
+    cutoff = jnp.max(s) * 1e-12
+    scaled = jnp.where(s > cutoff, uty / s, 0.0)
+    return (vt.T @ scaled,)
+
+
+def tile_spec():
+    """ShapeDtypeStruct for one tile operand."""
+    return jax.ShapeDtypeStruct((TILE, TILE), jnp.float64)
+
+
+#: name → (function, example-arg builder); consumed by aot.py.
+ENTRY_POINTS = {
+    "matmul_f64": (matmul_f64, lambda: (tile_spec(), tile_spec())),
+    "mask_tile_f64": (mask_tile_f64, lambda: (tile_spec(), tile_spec(), tile_spec())),
+    "gram_tile_f64": (gram_tile_f64, lambda: (tile_spec(), tile_spec())),
+    "lr_solve_f64": (
+        lr_solve_f64,
+        lambda: (
+            jax.ShapeDtypeStruct((TILE, TILE), jnp.float64),
+            jax.ShapeDtypeStruct((TILE,), jnp.float64),
+            jax.ShapeDtypeStruct((TILE, TILE), jnp.float64),
+            jax.ShapeDtypeStruct((TILE,), jnp.float64),
+        ),
+    ),
+}

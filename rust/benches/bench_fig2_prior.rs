@@ -1,0 +1,123 @@
+//! Fig. 2 — "Quantifying accuracy loss and performance penalty" of prior
+//! federated SVD work.
+//!
+//! (a) DP-SVD error vs FedSVD on four datasets (δ = 0.01 per the figure).
+//! (b) HE-based SVD time blow-up: measured small-scale runs + the
+//!     measured-cost extrapolation that shows the quadratic wall
+//!     (paper: 15.1 years at 1K×100K).
+
+use fedsvd::apps::pca::projection_distance;
+use fedsvd::baselines::fedpca::{run_fedpca, DpParams};
+use fedsvd::baselines::ppdsvd::{estimate_ppdsvd, run_ppdsvd};
+use fedsvd::bench::section;
+use fedsvd::data::Dataset;
+use fedsvd::linalg::svd;
+use fedsvd::net::presets;
+use fedsvd::paillier;
+use fedsvd::protocol::{run_fedsvd, split_columns, FedSvdConfig};
+use fedsvd::rng::Xoshiro256;
+use fedsvd::util::human_secs;
+
+fn main() {
+    fig2a();
+    fig2b();
+}
+
+fn fig2a() {
+    section(
+        "Fig 2(a)",
+        "DP-SVD (δ=0.01) error vs FedSVD, top-4 subspace projection distance",
+    );
+    println!(
+        "{:<12} {:>14} {:>14} {:>12}",
+        "dataset", "FedSVD err", "DP-SVD err", "gap"
+    );
+    for ds in [
+        Dataset::Wine,
+        Dataset::Mnist,
+        Dataset::Ml100k,
+        Dataset::Synthetic,
+    ] {
+        // scaled shapes with ≥16 features so top-4 is meaningful
+        let x = match ds {
+            Dataset::Wine => fedsvd::data::wine_like(12, 400, 1),
+            Dataset::Mnist => fedsvd::data::mnist_like(64, 300, 1),
+            Dataset::Ml100k => fedsvd::data::movielens_like(60, 200, 1),
+            Dataset::Synthetic => fedsvd::data::synthetic_powerlaw(40, 200, 1.0, 1),
+        };
+        let parts = split_columns(&x, 2).unwrap();
+        let truth = svd(&x).unwrap().truncate(4);
+
+        let fed = run_fedsvd(
+            &parts,
+            &FedSvdConfig {
+                block_size: 16,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let fed_err = projection_distance(&fed.u.unwrap().take_cols(4), &truth.u)
+            .unwrap()
+            .max(1e-16);
+
+        let dp = run_fedpca(
+            &parts,
+            4,
+            DpParams {
+                epsilon: 0.1,
+                delta: 0.01,
+            },
+            presets::paper_default(),
+            7,
+        )
+        .unwrap();
+        let dp_err = projection_distance(&dp.u_k, &truth.u).unwrap();
+
+        println!(
+            "{:<12} {:>14.3e} {:>14.3e} {:>11.1e}×",
+            ds.name(),
+            fed_err,
+            dp_err,
+            dp_err / fed_err
+        );
+    }
+}
+
+fn fig2b() {
+    section(
+        "Fig 2(b)",
+        "HE-based SVD time vs matrix width (measured + extrapolated)",
+    );
+    let mut rng = Xoshiro256::seed_from_u64(2);
+    let (pk, sk) = paillier::keygen(1024, &mut rng).unwrap();
+    let costs = paillier::measure_op_costs(&pk, &sk, 3).unwrap();
+    println!("measured Paillier-1024 costs: encrypt {:.2} ms, decrypt {:.2} ms, ct {} B",
+        costs.encrypt_s * 1e3, costs.decrypt_s * 1e3, costs.ciphertext_bytes);
+
+    println!("\n-- real runs (toy 256-bit keys, m=16) --");
+    println!("{:>8} {:>14}", "n", "PPDSVD time");
+    for n in [32usize, 64, 128] {
+        let x = fedsvd::data::synthetic_powerlaw(16, n, 0.5, 3);
+        let parts = split_columns(&x, 2).unwrap();
+        let t0 = std::time::Instant::now();
+        run_ppdsvd(&parts, 256, presets::paper_default()).unwrap();
+        println!("{n:>8} {:>14}", human_secs(t0.elapsed().as_secs_f64()));
+    }
+
+    println!("\n-- extrapolation at 1024-bit keys, m=1K (paper setting) --");
+    println!("{:>10} {:>16} {:>16}", "n", "PPDSVD est.", "in years");
+    for n in [1_000usize, 2_000, 10_000, 100_000] {
+        let est = estimate_ppdsvd(1000, n, 2, &costs, presets::paper_default(), 2e9);
+        println!(
+            "{n:>10} {:>16} {:>16.4}",
+            human_secs(est.total_s),
+            est.total_s / (365.25 * 24.0 * 3600.0)
+        );
+    }
+    println!(
+        "\npaper anchors: 53.1 h at 1K×2K, ~15.1 years at 1K×100K.\n\
+         Shape check: time grows quadratically in n (cross-party covariance\n\
+         blocks under HE) and reaches the years scale at n=100K — the wall\n\
+         that motivates FedSVD."
+    );
+}

@@ -1,0 +1,44 @@
+//! Fig. 5(e) — impact of the mask block size b on FedSVD's efficiency:
+//! time grows slowly with b (mask generation is O(b²n), masking O(mnb))
+//! while privacy strengthens (Tab. 3). Accuracy is untouched at every b.
+
+use fedsvd::bench::section;
+use fedsvd::data::synthetic_powerlaw;
+use fedsvd::linalg::svd;
+use fedsvd::protocol::{run_fedsvd, split_columns, FedSvdConfig};
+use fedsvd::util::{human_secs, rmse};
+
+fn main() {
+    section("Fig 5(e)", "FedSVD time vs block size b (accuracy shown to be b-independent)");
+    let m = 96usize;
+    let n = 256usize;
+    let x = synthetic_powerlaw(m, n, 0.01, 11);
+    let parts = split_columns(&x, 2).unwrap();
+    let truth = svd(&x).unwrap();
+
+    println!(
+        "{:>8} {:>12} {:>12} {:>14}",
+        "b", "wall", "network", "σ-RMSE"
+    );
+    for b in [2usize, 4, 8, 16, 32, 64, 96] {
+        let cfg = FedSvdConfig {
+            block_size: b,
+            secagg_batch_rows: 64,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let out = run_fedsvd(&parts, &cfg).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "{b:>8} {:>12} {:>12} {:>14.2e}",
+            human_secs(wall),
+            human_secs(out.net.sim_elapsed_s()),
+            rmse(&out.s, &truth.s)
+        );
+    }
+    println!(
+        "\npaper check: time increases slowly with b; error pinned at the\n\
+         f64 floor for every b (losslessness is b-independent; b only\n\
+         buys privacy, Tab. 3)"
+    );
+}

@@ -1,0 +1,83 @@
+//! Fig. 5(b) — communication size: FedSVD >10× smaller than PPDSVD.
+//! Fig. 5(f) — per-user communication vs local data size and user count
+//! (linear in nᵢ, flat in k).
+
+use fedsvd::bench::section;
+use fedsvd::data::synthetic_powerlaw;
+use fedsvd::net::link::USER_BASE;
+use fedsvd::protocol::{run_fedsvd, split_columns, FedSvdConfig};
+use fedsvd::util::human_bytes;
+
+fn main() {
+    fig5b();
+    fig5f();
+}
+
+fn fig5b() {
+    section("Fig 5(b)", "total communication: FedSVD vs PPDSVD (measured vs modeled)");
+    println!(
+        "{:>8} {:>14} {:>16} {:>8}",
+        "n", "FedSVD bytes", "PPDSVD bytes", "ratio"
+    );
+    let m = 48usize;
+    for n in [64usize, 128, 256, 512] {
+        let x = synthetic_powerlaw(m, n, 0.01, 3);
+        let parts = split_columns(&x, 2).unwrap();
+        let out = run_fedsvd(
+            &parts,
+            &FedSvdConfig {
+                block_size: 16,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let fed_bytes = out.net.total_bytes();
+        // PPDSVD wire model (matches baselines::ppdsvd::estimate): every
+        // data element ships as a 2048-bit ciphertext + cross-covariance
+        // results return encrypted
+        let ct = 256u64; // 2048-bit ciphertext
+        let cross = (n as u64 * n as u64) / 4;
+        let he_bytes = (m as u64 * n as u64 + cross) * ct;
+        println!(
+            "{n:>8} {:>14} {:>16} {:>7.1}×",
+            human_bytes(fed_bytes),
+            human_bytes(he_bytes),
+            he_bytes as f64 / fed_bytes as f64
+        );
+    }
+    println!("\npaper check: FedSVD ≥10× smaller at every n, gap widening with n");
+}
+
+fn fig5f() {
+    section(
+        "Fig 5(f)",
+        "per-user communication vs local data size nᵢ and #users",
+    );
+    let m = 48usize;
+    println!(
+        "{:>8} {:>8} {:>8} {:>16}",
+        "users", "n_i", "n", "bytes/user"
+    );
+    for k in [2usize, 4, 8] {
+        for ni in [32usize, 64, 128] {
+            let n = k * ni;
+            let x = synthetic_powerlaw(m, n, 0.01, 7);
+            let parts = split_columns(&x, k).unwrap();
+            let out = run_fedsvd(
+                &parts,
+                &FedSvdConfig {
+                    block_size: 16,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let u0 = out.net.party(USER_BASE);
+            let per_user = u0.bytes_sent + u0.bytes_received;
+            println!("{k:>8} {ni:>8} {n:>8} {:>16}", human_bytes(per_user));
+        }
+    }
+    println!(
+        "\npaper check: per-user bytes grow linearly with nᵢ;\n\
+         weak dependence on user count at fixed nᵢ"
+    );
+}

@@ -1,0 +1,63 @@
+//! Fig. 5(c,d) — SVD-task end-to-end time vs network bandwidth and
+//! latency: FedSVD is robust across link conditions because its traffic
+//! is raw-data-sized (vs ciphertext-inflated HE traffic).
+
+use fedsvd::bench::section;
+use fedsvd::data::synthetic_powerlaw;
+use fedsvd::net::LinkSpec;
+use fedsvd::protocol::{run_fedsvd, split_columns, FedSvdConfig};
+use fedsvd::util::human_secs;
+
+fn main() {
+    let m = 64usize;
+    let n = 256usize;
+    let x = synthetic_powerlaw(m, n, 0.01, 9);
+    let parts = split_columns(&x, 2).unwrap();
+
+    // run once on the reference link, reprice for the sweeps (identical
+    // traffic; only the link model changes — same method as tc-shaping)
+    let cfg = FedSvdConfig {
+        block_size: 32,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let out = run_fedsvd(&parts, &cfg).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+
+    section("Fig 5(c)", "time vs bandwidth (RTT fixed 50 ms)");
+    println!("{:>14} {:>12} {:>12} {:>12}", "bandwidth", "compute", "network", "total");
+    for bw_mbps in [10.0f64, 100.0, 1_000.0, 10_000.0] {
+        let net_s = out.net.reprice(LinkSpec {
+            bandwidth_bps: bw_mbps * 1e6,
+            rtt_s: 0.05,
+        });
+        println!(
+            "{:>11} Mbps {:>12} {:>12} {:>12}",
+            bw_mbps,
+            human_secs(wall),
+            human_secs(net_s),
+            human_secs(wall + net_s)
+        );
+    }
+
+    section("Fig 5(d)", "time vs RTT (bandwidth fixed 1 Gb/s)");
+    println!("{:>10} {:>12} {:>12} {:>12}", "RTT", "compute", "network", "total");
+    for rtt_ms in [1.0f64, 10.0, 50.0, 200.0] {
+        let net_s = out.net.reprice(LinkSpec {
+            bandwidth_bps: 1e9,
+            rtt_s: rtt_ms / 1e3,
+        });
+        println!(
+            "{:>7} ms {:>12} {:>12} {:>12}",
+            rtt_ms,
+            human_secs(wall),
+            human_secs(net_s),
+            human_secs(wall + net_s)
+        );
+    }
+    println!(
+        "\npaper check: total time degrades gracefully — bandwidth matters\n\
+         below ~100 Mbps, RTT adds rounds×latency; no cliff (vs HE whose\n\
+         inflated traffic multiplies both sensitivities)"
+    );
+}

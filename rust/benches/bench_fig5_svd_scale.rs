@@ -1,0 +1,79 @@
+//! Fig. 5(a) — time consumption on the SVD task: FedSVD grows *linearly*
+//! with n (m fixed), PPDSVD quadratically, with a >10000× gap at scale.
+//!
+//! Paper grid: m = 1K, n up to 50M (16.3 h). Scaled grid here + measured
+//! per-element extrapolation to the paper's sizes.
+
+use fedsvd::baselines::ppdsvd::estimate_ppdsvd;
+use fedsvd::bench::section;
+use fedsvd::data::synthetic_powerlaw;
+use fedsvd::net::presets;
+use fedsvd::paillier;
+use fedsvd::protocol::{run_fedsvd, split_columns, FedSvdConfig};
+use fedsvd::rng::Xoshiro256;
+use fedsvd::util::human_secs;
+
+fn main() {
+    section(
+        "Fig 5(a)",
+        "SVD-task time vs n (m fixed): FedSVD linear, PPDSVD quadratic",
+    );
+
+    let m = 64usize;
+    println!("-- measured FedSVD runs (m={m}) --");
+    println!(
+        "{:>8} {:>12} {:>12} {:>14}",
+        "n", "wall", "network", "per-element"
+    );
+    let mut per_elem_s = 0.0;
+    for n in [128usize, 256, 512, 1024] {
+        let x = synthetic_powerlaw(m, n, 0.01, 5);
+        let parts = split_columns(&x, 2).unwrap();
+        let cfg = FedSvdConfig {
+            block_size: 32,
+            secagg_batch_rows: 64,
+            recover_v: true,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let out = run_fedsvd(&parts, &cfg).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        per_elem_s = wall / (m * n) as f64;
+        println!(
+            "{n:>8} {:>12} {:>12} {:>11.2} ns",
+            human_secs(wall),
+            human_secs(out.net.sim_elapsed_s()),
+            per_elem_s * 1e9
+        );
+    }
+
+    println!("\n-- linearity check: wall time per element should be ~constant --");
+
+    // extrapolation to the paper's axis
+    println!("\n-- extrapolation (m=1K; FedSVD from measured per-element cost; PPDSVD from measured Paillier costs) --");
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let (pk, sk) = paillier::keygen(1024, &mut rng).unwrap();
+    let costs = paillier::measure_op_costs(&pk, &sk, 3).unwrap();
+    println!(
+        "{:>12} {:>16} {:>18} {:>12}",
+        "n", "FedSVD est.", "PPDSVD est.", "speedup"
+    );
+    for n in [2_000usize, 100_000, 1_000_000, 50_000_000] {
+        // FedSVD: masking O(mn·b) + CSP SVD O(min·min·max) amortized —
+        // at m=1K ≪ n the SVD is O(m²n); fold into per-element slope ×
+        // (1 + m/64 scaling of the measured slope)
+        let fed = per_elem_s * (1000.0 / m as f64) * (1000.0 * n as f64);
+        let he = estimate_ppdsvd(1000, n, 2, &costs, presets::paper_default(), 2e9);
+        println!(
+            "{n:>12} {:>16} {:>18} {:>11.0}×",
+            human_secs(fed),
+            human_secs(he.total_s),
+            he.total_s / fed
+        );
+    }
+    println!(
+        "\npaper anchors: PPDSVD 53.1 h @1K×2K (10000× slower than FedSVD);\n\
+         FedSVD 16.3 h @1K×50M. Check: linear vs quadratic growth + 4-5\n\
+         orders-of-magnitude speedup at large n."
+    );
+}

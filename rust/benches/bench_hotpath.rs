@@ -1,0 +1,92 @@
+//! Hot-path micro-benchmarks — the §Perf tracking harness.
+//!
+//! Covers every layer: native matmul (vs the naive triple loop), the
+//! block-masking product, secagg PRG expansion, the CSP SVD, and — when
+//! artifacts are present — the PJRT tile path. Run before/after every
+//! optimization; EXPERIMENTS.md §Perf logs the deltas.
+
+use fedsvd::bench::{bench, section};
+use fedsvd::linalg::matmul::matmul_naive;
+use fedsvd::linalg::{matmul, svd, Mat, MatKernel, NativeKernel};
+use fedsvd::mask::{block_orthogonal, mask_matrix};
+use fedsvd::rng::Xoshiro256;
+use fedsvd::runtime::TileEngine;
+use fedsvd::secagg::SecAggGroup;
+
+fn main() {
+    let mut rng = Xoshiro256::seed_from_u64(42);
+
+    section("hotpath/L3", "native matmul vs naive (256³, f64)");
+    let a = Mat::gaussian(256, 256, &mut rng);
+    let b = Mat::gaussian(256, 256, &mut rng);
+    let s_naive = bench("matmul_naive 256", 1, 3, || matmul_naive(&a, &b).unwrap());
+    let s_fast = bench("matmul_blocked 256", 1, 5, || matmul(&a, &b).unwrap());
+    println!("{}", s_naive.row());
+    println!("{}", s_fast.row());
+    let flops = 2.0 * 256f64.powi(3);
+    println!(
+        "blocked: {:.2} GF/s ({:.1}× over naive)",
+        flops / s_fast.median_s / 1e9,
+        s_naive.median_s / s_fast.median_s
+    );
+
+    section("hotpath/L3", "block-masking product P·X·Q (m=512, n=512, b=64)");
+    let p = block_orthogonal(512, 64, 1).unwrap();
+    let q = block_orthogonal(512, 64, 2).unwrap();
+    let x = Mat::gaussian(512, 512, &mut rng);
+    let qi = q.row_slice(0, 512).unwrap();
+    let s_mask = bench("mask_matrix 512", 1, 3, || {
+        mask_matrix(&p, &x, &qi).unwrap()
+    });
+    println!("{}", s_mask.row());
+    let mask_flops = 2.0 * (512.0 * 512.0 * 64.0) * 2.0;
+    println!("masking: {:.2} GF/s effective", mask_flops / s_mask.median_s / 1e9);
+
+    section("hotpath/L3", "secagg mask expansion + aggregate (2 users, 64×512)");
+    let seeds = vec![vec![0, 7], vec![7, 0]];
+    let group = SecAggGroup::from_seeds(seeds).unwrap();
+    let data: Vec<f64> = (0..64 * 512).map(|i| i as f64 * 0.01).collect();
+    let s_secagg = bench("secagg share+agg", 1, 5, || {
+        let s0 = group.mask_share(0, &data, 0).unwrap();
+        let s1 = group.mask_share(1, &data, 0).unwrap();
+        group.aggregate(&[s0, s1]).unwrap()
+    });
+    println!("{}", s_secagg.row());
+    println!(
+        "secagg throughput: {:.1} M elems/s",
+        (2 * data.len()) as f64 / s_secagg.median_s / 1e6
+    );
+
+    section("hotpath/L3", "CSP SVD (Jacobi+QR) 192×192 / 384×96");
+    let sq = Mat::gaussian(192, 192, &mut rng);
+    let s_svd = bench("svd 192x192", 0, 3, || svd(&sq).unwrap());
+    println!("{}", s_svd.row());
+    let tall = Mat::gaussian(384, 96, &mut rng);
+    let s_svd2 = bench("svd 384x96", 0, 3, || svd(&tall).unwrap());
+    println!("{}", s_svd2.row());
+
+    section("hotpath/L1+runtime", "PJRT tile path (needs `make artifacts`)");
+    match TileEngine::from_artifacts() {
+        Ok(engine) => {
+            let ta = Mat::gaussian(64, 64, &mut rng);
+            let tb = Mat::gaussian(64, 64, &mut rng);
+            let tc = Mat::gaussian(64, 64, &mut rng);
+            let s_tile = bench("pjrt matmul 64", 2, 10, || engine.matmul(&ta, &tb).unwrap());
+            println!("{}", s_tile.row());
+            let s_fused = bench("pjrt fused mask_tile 64", 2, 10, || {
+                engine.mask_tile(&ta, &tb, &tc).unwrap()
+            });
+            println!("{}", s_fused.row());
+            let s_native_tile = bench("native 64 (ref)", 2, 10, || {
+                NativeKernel.mask_tile(&ta, &tb, &tc).unwrap()
+            });
+            println!("{}", s_native_tile.row());
+            println!(
+                "note: interpret-mode Pallas on CPU measures dispatch overhead,\n\
+                 not TPU performance — see DESIGN.md §Hardware-Adaptation for\n\
+                 the VMEM/MXU estimates that stand in for real-TPU numbers."
+            );
+        }
+        Err(e) => println!("skipped ({e})"),
+    }
+}

@@ -1,0 +1,179 @@
+//! Tab. 1 — lossless evaluation on the SVD task and the three
+//! applications, across the four dataset families.
+//!
+//! Columns reproduced: SVD (FedPCA vs FedSVD singular-vector RMSE),
+//! PCA/LSA (FedPCA vs WDA vs FedSVD projection distance, r=10), and
+//! LR (SGD @10/100/1000 epochs vs FedSVD-LR train MSE). Plus the §5.2
+//! reconstruction-MAPE line.
+
+use fedsvd::apps::lr::{centralized_lr, run_federated_lr};
+use fedsvd::apps::pca::projection_distance;
+use fedsvd::baselines::fedpca::{run_fedpca, DpParams};
+use fedsvd::baselines::sgd_lr::{run_sgd_lr, SgdFramework};
+use fedsvd::baselines::wda::run_wda;
+use fedsvd::bench::section;
+use fedsvd::data;
+use fedsvd::linalg::{svd, Mat, NativeKernel, SvdResult};
+use fedsvd::net::presets;
+use fedsvd::paillier::OpCosts;
+use fedsvd::protocol::{run_fedsvd, split_columns, FedSvdConfig};
+use fedsvd::util::{mape, rmse};
+
+fn datasets() -> Vec<(&'static str, Mat)> {
+    vec![
+        ("Wine", data::wine_like(12, 600, 1)),
+        ("MNIST", data::mnist_like(64, 400, 1)),
+        ("ML100K", data::movielens_like(80, 300, 1)),
+        ("Synthetic", data::synthetic_powerlaw(48, 300, 1.0, 1)),
+    ]
+}
+
+fn cfg() -> FedSvdConfig {
+    FedSvdConfig {
+        block_size: 16,
+        secagg_batch_rows: 64,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    svd_columns();
+    pca_lsa_columns();
+    lr_columns();
+    reconstruction_line();
+}
+
+/// Sign-aligned singular-vector RMSE for the top-k (paper's SVD metric).
+fn sv_rmse(u_a: &Mat, u_b: &Mat, k: usize) -> f64 {
+    let mut acc = 0.0;
+    let mut cnt = 0usize;
+    for j in 0..k.min(u_a.cols()).min(u_b.cols()) {
+        let va = u_a.col(j);
+        let vb = u_b.col(j);
+        let dot: f64 = va.iter().zip(&vb).map(|(x, y)| x * y).sum();
+        let s = if dot >= 0.0 { 1.0 } else { -1.0 };
+        for (x, y) in va.iter().zip(&vb) {
+            acc += (x - s * y) * (x - s * y);
+            cnt += 1;
+        }
+    }
+    (acc / cnt as f64).sqrt()
+}
+
+fn svd_columns() {
+    section("Tab 1 (SVD)", "singular-vector RMSE vs centralized: FedPCA(DP) vs FedSVD");
+    println!("{:<12} {:>14} {:>14}", "dataset", "FedPCA", "FedSVD");
+    for (name, x) in datasets() {
+        let parts = split_columns(&x, 2).unwrap();
+        let truth = svd(&x).unwrap();
+        let k = 4usize;
+
+        let fed = run_fedsvd(&parts, &cfg()).unwrap();
+        // top-k vectors have separated σ on these generators → sign-aligned
+        let fed_err = sv_rmse(fed.u.as_ref().unwrap(), &truth.u, k).max(1e-16);
+
+        let dp = run_fedpca(&parts, k, DpParams::default(), presets::paper_default(), 3)
+            .unwrap();
+        let dp_err = sv_rmse(&dp.u_k, &truth.u, k);
+
+        println!("{name:<12} {dp_err:>14.3e} {fed_err:>14.3e}");
+    }
+    println!("\npaper check: FedSVD ~1e-10..1e-15, DP ~1e-1; ≥9 orders of magnitude gap");
+}
+
+fn pca_lsa_columns() {
+    section(
+        "Tab 1 (PCA/LSA)",
+        "projection distance ‖UUᵀ−ÛÛᵀ‖₂ (r=10): FedPCA vs WDA vs FedSVD",
+    );
+    println!(
+        "{:<12} {:>14} {:>14} {:>14}",
+        "dataset", "FedPCA", "WDA", "FedSVD"
+    );
+    for (name, x) in datasets() {
+        let parts = split_columns(&x, 2).unwrap();
+        let r = 10usize.min(x.rows() - 1);
+        let truth = svd(&x).unwrap().truncate(r);
+
+        let fed = run_fedsvd(&parts, &cfg()).unwrap();
+        let fed_err =
+            projection_distance(&fed.u.unwrap().take_cols(r), &truth.u).unwrap().max(1e-16);
+
+        let dp = run_fedpca(&parts, r, DpParams::default(), presets::paper_default(), 5)
+            .unwrap();
+        let dp_err = projection_distance(&dp.u_k, &truth.u).unwrap();
+
+        let wda = run_wda(&parts, r, presets::paper_default()).unwrap();
+        let wda_err = projection_distance(&wda.u_k, &truth.u).unwrap();
+
+        println!("{name:<12} {dp_err:>14.3e} {wda_err:>14.3e} {fed_err:>14.3e}");
+    }
+    println!("\npaper check: FedSVD ≥10 orders below both baselines; WDA between DP and FedSVD");
+}
+
+fn lr_columns() {
+    section(
+        "Tab 1 (LR)",
+        "train MSE: SGD @10/100/1000 epochs (FATE&SML trajectory) vs FedSVD-LR",
+    );
+    let costs = OpCosts {
+        encrypt_s: 1e-3,
+        decrypt_s: 1e-3,
+        add_s: 1e-5,
+        mul_plain_s: 5e-4,
+        ciphertext_bytes: 256,
+    };
+    println!(
+        "{:<12} {:>12} {:>12} {:>12} {:>12}",
+        "dataset", "SGD 10ep", "SGD 100ep", "SGD 1000ep", "FedSVD"
+    );
+    for (name, x) in datasets() {
+        // regression target: first row of data as labels over the rest
+        let xt = x.transpose(); // samples × features
+        let m = xt.rows();
+        let n = xt.cols().min(24);
+        let xf = xt.slice(0, m, 0, n);
+        let y: Vec<f64> = (0..m)
+            .map(|i| xf.row(i).iter().sum::<f64>() * 0.3 + (i % 7) as f64 * 0.01)
+            .collect();
+
+        let sgd = run_sgd_lr(&xf, &y, 1000, 0.5, 2, SgdFramework::Fate, &costs,
+            presets::paper_default()).unwrap();
+        let mse10 = sgd.mse_per_epoch[9];
+        let mse100 = sgd.mse_per_epoch[99];
+        let mse1000 = sgd.mse_per_epoch[999];
+
+        let parts = split_columns(&xf, 2).unwrap();
+        let fed = run_federated_lr(&parts, &y, 0, &cfg(), &NativeKernel).unwrap();
+
+        println!(
+            "{name:<12} {mse10:>12.4e} {mse100:>12.4e} {mse1000:>12.4e} {:>12.4e}",
+            fed.train_mse
+        );
+    }
+    println!("\npaper check: MSE decreases with epochs; FedSVD (closed form) is the floor");
+}
+
+fn reconstruction_line() {
+    section("§5.2", "reconstruction error ‖X−UΣVᵀ‖ as MAPE of raw data");
+    for (name, x) in datasets() {
+        let parts = split_columns(&x, 2).unwrap();
+        let out = run_fedsvd(&parts, &cfg()).unwrap();
+        let mut v = out.v_parts[0].clone();
+        for p in &out.v_parts[1..] {
+            v = v.hcat(p).unwrap();
+        }
+        let rec = SvdResult {
+            u: out.u.unwrap(),
+            s: out.s,
+            vt: v,
+        }
+        .reconstruct();
+        println!(
+            "{name:<12} MAPE {:.3e}   σ-RMSE {:.3e}",
+            mape(x.data(), rec.data()),
+            rmse(rec.data(), x.data())
+        );
+    }
+    println!("\npaper check: MAPE ≈ 1e-8 (\"0.000001% of the raw data\") or better");
+}

@@ -1,0 +1,148 @@
+//! Federated latent semantic analysis (paper §4).
+//!
+//! LSA factorizes a word–document matrix `X ≈ Uᵣ·Σᵣ·Vᵣᵀ` and uses both
+//! factors as embeddings (word embeddings = rows of Uᵣ·Σᵣ^{1/2}, document
+//! embeddings = columns of Σᵣ^{1/2}·Vᵣᵀ, conventions vary). FedSVD-LSA
+//! runs the truncated protocol and recovers *both* `U'ᵣ` and the per-user
+//! `Vᵢᵀ` rows, ignoring everything beyond rank r.
+
+use crate::linalg::{Mat, MatKernel};
+use crate::protocol::{run_fedsvd_with_kernel, FedSvdConfig, FedSvdOutput, SvdMode};
+use crate::util::{Error, Result};
+
+/// Output of the federated LSA application.
+pub struct LsaOutput {
+    /// Row-entity (e.g. word) embedding basis: m×r.
+    pub u_r: Mat,
+    /// Top-r singular values.
+    pub s_r: Vec<f64>,
+    /// Per-user column-entity (e.g. document) factors `Vᵢᵀ` (r×nᵢ).
+    pub v_parts: Vec<Mat>,
+    pub protocol: FedSvdOutput,
+}
+
+/// Run federated LSA with `rank` latent dimensions.
+pub fn run_federated_lsa(
+    parts: &[Mat],
+    rank: usize,
+    cfg: &FedSvdConfig,
+    kernel: &dyn MatKernel,
+) -> Result<LsaOutput> {
+    if rank == 0 {
+        return Err(Error::Shape("lsa: rank 0".into()));
+    }
+    let mut app_cfg = cfg.clone();
+    app_cfg.mode = SvdMode::Truncated { rank };
+    app_cfg.recover_u = true;
+    app_cfg.recover_v = true;
+    let out = run_fedsvd_with_kernel(parts, &app_cfg, kernel)?;
+    let u_r = out
+        .u
+        .clone()
+        .ok_or_else(|| Error::Protocol("lsa: U missing".into()))?;
+    Ok(LsaOutput {
+        u_r,
+        s_r: out.s.clone(),
+        v_parts: out.v_parts.clone(),
+        protocol: out,
+    })
+}
+
+/// Cosine similarity between two embedding vectors — the downstream LSA
+/// operation (document/word similarity).
+pub fn cosine(a: &[f64], b: &[f64]) -> f64 {
+    let dot: f64 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+    let na: f64 = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na * nb)
+    }
+}
+
+/// Document embedding for user-local document j: `Σᵣ^{1/2}·(Vᵢᵀ)[:, j]`.
+pub fn doc_embedding(out: &LsaOutput, user: usize, doc: usize) -> Result<Vec<f64>> {
+    let v = out
+        .v_parts
+        .get(user)
+        .ok_or_else(|| Error::Shape("doc_embedding: user".into()))?;
+    if doc >= v.cols() {
+        return Err(Error::Shape("doc_embedding: doc".into()));
+    }
+    Ok((0..v.rows())
+        .map(|r| out.s_r[r].sqrt() * v[(r, doc)])
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::movielens_like;
+    use crate::linalg::{svd, NativeKernel};
+    use crate::protocol::split_columns;
+
+    fn cfg() -> FedSvdConfig {
+        FedSvdConfig {
+            block_size: 6,
+            secagg_batch_rows: 16,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn lsa_reconstruction_matches_truncated_svd() {
+        let x = movielens_like(24, 20, 1);
+        let parts = split_columns(&x, 2).unwrap();
+        let out = run_federated_lsa(&parts, 5, &cfg(), &NativeKernel).unwrap();
+        assert_eq!(out.u_r.shape(), (24, 5));
+        assert_eq!(out.v_parts.len(), 2);
+        assert_eq!(out.v_parts[0].shape(), (5, 10));
+
+        // rank-5 reconstruction error must match centralized truncation
+        let truth = svd(&x).unwrap().truncate(5);
+        let v_joined = out.v_parts[0].hcat(&out.v_parts[1]).unwrap();
+        let fed = crate::linalg::SvdResult {
+            u: out.u_r.clone(),
+            s: out.s_r.clone(),
+            vt: v_joined,
+        }
+        .reconstruct();
+        let central = truth.reconstruct();
+        let fed_err = fed.sub(&x).unwrap().fro_norm();
+        let central_err = central.sub(&x).unwrap().fro_norm();
+        assert!(
+            (fed_err - central_err).abs() < 1e-6 * central_err.max(1.0),
+            "fed {fed_err} vs central {central_err}"
+        );
+    }
+
+    #[test]
+    fn embeddings_preserve_similarity_structure() {
+        // two identical documents must embed identically
+        let mut x = movielens_like(20, 12, 2);
+        for r in 0..20 {
+            let v = x[(r, 3)];
+            x[(r, 7)] = v; // duplicate doc 3 into doc 7 (same user block)
+        }
+        let parts = split_columns(&x, 2).unwrap();
+        let out = run_federated_lsa(&parts, 4, &cfg(), &NativeKernel).unwrap();
+        let e3 = doc_embedding(&out, 0, 3).unwrap();
+        let e7 = doc_embedding(&out, 1, 1).unwrap(); // doc 7 = second user's col 1
+        let sim = cosine(&e3, &e7);
+        assert!(sim > 0.999, "duplicate docs should be identical, sim={sim}");
+    }
+
+    #[test]
+    fn cosine_bounds_and_degenerate() {
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 2.0]), 0.0);
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-12);
+        assert!((cosine(&[1.0, 0.0], &[-1.0, 0.0]) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank_zero_rejected() {
+        let parts = [Mat::zeros(4, 4)];
+        assert!(run_federated_lsa(&parts, 0, &cfg(), &NativeKernel).is_err());
+    }
+}

@@ -1,0 +1,5 @@
+//! SVD-based applications (paper §4): PCA, LR, LSA.
+
+pub mod pca;
+pub mod lr;
+pub mod lsa;

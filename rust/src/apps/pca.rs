@@ -1,0 +1,201 @@
+//! Federated PCA on horizontally-partitioned data (paper §4).
+//!
+//! Genetics setting: every institution holds the *same features* (DNA
+//! loci, rows) for *different samples* (columns) — which in FedSVD's
+//! column-partitioned formulation is exactly user-i owning the column
+//! block `Xᵢ ∈ ℝ^{m×nᵢ}`. The PCA result for user i is `Uᵣᵀ·Xᵢ`.
+//!
+//! Efficiency specialization from the paper: the CSP computes a truncated
+//! factorization and **broadcasts only the masked `U'ᵣ`** — Σ and V'ᵀ are
+//! neither computed to full width nor transmitted (`recover_v = false`).
+
+use crate::linalg::{Mat, MatKernel};
+use crate::protocol::{run_fedsvd_with_kernel, FedSvdConfig, FedSvdOutput, SvdMode};
+use crate::util::{Error, Result};
+
+/// Output of the federated PCA application.
+pub struct PcaOutput {
+    /// Top-r left singular vectors (m×r), shared across users.
+    pub u_r: Mat,
+    /// Top-r singular values.
+    pub s_r: Vec<f64>,
+    /// Per-user projections `Uᵣᵀ·Xᵢ` (r×nᵢ), computed locally.
+    pub projections: Vec<Mat>,
+    /// The raw protocol output (metrics, network, CSP factors).
+    pub protocol: FedSvdOutput,
+}
+
+/// Run federated PCA: top-`rank` components of `[X₁ … X_k]`.
+///
+/// `center`: subtract per-feature (row) means first — the standard PCA
+/// pre-step; mean removal is itself federated-safe here because rows are
+/// shared feature space (each user centers its own columns with the
+/// global feature means, which in the horizontal setting every user can
+/// compute from the shared protocol — we take them as given).
+pub fn run_federated_pca(
+    parts: &[Mat],
+    rank: usize,
+    cfg: &FedSvdConfig,
+    kernel: &dyn MatKernel,
+) -> Result<PcaOutput> {
+    if rank == 0 {
+        return Err(Error::Shape("pca: rank 0".into()));
+    }
+    let mut app_cfg = cfg.clone();
+    app_cfg.mode = SvdMode::Truncated { rank };
+    app_cfg.recover_u = true;
+    app_cfg.recover_v = false; // paper: "ignores the computation and
+                               // transmission of Σ, V'ᵀ to improve efficiency"
+    let out = run_fedsvd_with_kernel(parts, &app_cfg, kernel)?;
+    let u_r = out
+        .u
+        .clone()
+        .ok_or_else(|| Error::Protocol("pca: protocol did not recover U".into()))?;
+    let s_r = out.s.clone();
+    let projections = parts
+        .iter()
+        .map(|xi| u_r.t_mul(xi))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(PcaOutput {
+        u_r,
+        s_r,
+        projections,
+        protocol: out,
+    })
+}
+
+/// The paper's PCA precision metric: projection distance
+/// `‖UUᵀ − ÛÛᵀ‖₂` between two top-r subspaces (Grammenos et al. [10]).
+pub fn projection_distance(u_a: &Mat, u_b: &Mat) -> Result<f64> {
+    if u_a.rows() != u_b.rows() {
+        return Err(Error::Shape("projection_distance: row mismatch".into()));
+    }
+    let pa = u_a.mul(&u_a.transpose())?;
+    let pb = u_b.mul(&u_b.transpose())?;
+    let diff = pa.sub(&pb)?;
+    Ok(diff.spectral_norm(60))
+}
+
+/// Center features (rows) to zero mean across the joint sample axis —
+/// evaluation helper mirroring the paper's "given a normalized matrix X".
+pub fn center_features(parts: &mut [Mat]) {
+    if parts.is_empty() {
+        return;
+    }
+    let m = parts[0].rows();
+    let total: usize = parts.iter().map(|p| p.cols()).sum();
+    for r in 0..m {
+        let mut sum = 0.0;
+        for p in parts.iter() {
+            sum += p.row(r).iter().sum::<f64>();
+        }
+        let mean = sum / total as f64;
+        for p in parts.iter_mut() {
+            for v in p.row_mut(r) {
+                *v -= mean;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{svd, NativeKernel};
+    use crate::protocol::split_columns;
+    use crate::rng::Xoshiro256;
+
+    fn cfg() -> FedSvdConfig {
+        FedSvdConfig {
+            block_size: 5,
+            secagg_batch_rows: 8,
+            ..Default::default()
+        }
+    }
+
+    /// PCA-shaped data: a few dominant directions over noise (randomized
+    /// truncated SVD assumes spectral decay, as real PCA inputs have).
+    fn pca_matrix(m: usize, n: usize, seed: u64) -> Mat {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let k = 6.min(m.min(n));
+        let mut a = Mat::gaussian(m, k, &mut rng);
+        for j in 0..k {
+            let s = 4.0 / (1.0 + j as f64).powf(1.3);
+            for i in 0..m {
+                a[(i, j)] *= s;
+            }
+        }
+        let b = Mat::gaussian(k, n, &mut rng);
+        let noise = Mat::gaussian(m, n, &mut rng).scale(0.05);
+        a.mul(&b).unwrap().add(&noise).unwrap()
+    }
+
+    #[test]
+    fn pca_matches_centralized_truncated_svd() {
+        let x = pca_matrix(16, 20, 1);
+        let parts = split_columns(&x, 2).unwrap();
+        let out = run_federated_pca(&parts, 4, &cfg(), &NativeKernel).unwrap();
+        let truth = svd(&x).unwrap().truncate(4);
+        // subspace, not vector, comparison (signs/rotations may differ)
+        let d = projection_distance(&out.u_r, &truth.u).unwrap();
+        assert!(d < 1e-6, "projection distance {d}");
+        for i in 0..4 {
+            assert!((out.s_r[i] - truth.s[i]).abs() < 1e-7 * truth.s[0]);
+        }
+    }
+
+    #[test]
+    fn projections_have_right_shape_and_energy() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let x = Mat::gaussian(10, 14, &mut rng);
+        let parts = split_columns(&x, 3).unwrap();
+        let out = run_federated_pca(&parts, 3, &cfg(), &NativeKernel).unwrap();
+        assert_eq!(out.projections.len(), 3);
+        assert_eq!(out.projections[0].shape(), (3, 5));
+        // total projected energy equals Σ σᵢ² of the top-3
+        let energy: f64 = out
+            .projections
+            .iter()
+            .map(|p| p.fro_norm().powi(2))
+            .sum();
+        let expect: f64 = out.s_r.iter().map(|s| s * s).sum();
+        assert!((energy - expect).abs() < 1e-6 * expect);
+    }
+
+    #[test]
+    fn pca_does_not_transmit_v() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let parts = split_columns(&Mat::gaussian(8, 10, &mut rng), 2).unwrap();
+        let out = run_federated_pca(&parts, 2, &cfg(), &NativeKernel).unwrap();
+        assert!(out.protocol.v_parts.is_empty());
+    }
+
+    #[test]
+    fn center_features_zeroes_feature_means() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let x = Mat::gaussian(6, 12, &mut rng).scale(3.0);
+        let mut parts = split_columns(&x, 2).unwrap();
+        center_features(&mut parts);
+        for r in 0..6 {
+            let sum: f64 = parts.iter().map(|p| p.row(r).iter().sum::<f64>()).sum();
+            assert!(sum.abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn projection_distance_properties() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let q = crate::linalg::qr::orthonormalize(&Mat::gaussian(10, 3, &mut rng)).unwrap();
+        // same subspace → 0; orthogonal subspace → 1
+        assert!(projection_distance(&q, &q).unwrap() < 1e-9);
+        let q2 = crate::linalg::qr::orthonormalize(&Mat::gaussian(10, 3, &mut rng)).unwrap();
+        let d = projection_distance(&q, &q2).unwrap();
+        assert!(d > 0.1 && d <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn rank_zero_rejected() {
+        let parts = [Mat::zeros(4, 4)];
+        assert!(run_federated_pca(&parts, 0, &cfg(), &NativeKernel).is_err());
+    }
+}

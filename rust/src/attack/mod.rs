@@ -1,0 +1,7 @@
+//! ICA attack on masked data (paper §5.4, Tab. 3).
+
+pub mod ica;
+pub mod score;
+
+pub use ica::{fast_ica, whiten, IcaOptions};
+pub use score::matched_pearson;

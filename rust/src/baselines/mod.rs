@@ -1,0 +1,8 @@
+//! Prior-work baselines (paper §5.1 / Appendix A):
+//! PPD-SVD (HE), FedPCA (DP), WDA-PCA, and SGD-based federated LR
+//! standing in for FATE and SecureML.
+
+pub mod ppdsvd;
+pub mod fedpca;
+pub mod wda;
+pub mod sgd_lr;

@@ -1,0 +1,219 @@
+//! SGD-based federated linear regression baselines standing in for
+//! FATE [17] and SecureML [19] (paper Tab. 1 LR columns, Fig. 6).
+//!
+//! Both frameworks compute *exact* mini-batch gradients under crypto —
+//! FATE with Paillier-encrypted residual aggregation in vertical LR,
+//! SecureML with additively-shared matrices and Beaver-triple
+//! multiplication. We therefore run the identical numerical optimization
+//! in plaintext (the MSE trajectory is what Tab. 1 reports) and charge a
+//! per-iteration **cost model measured from our own crypto substrate**
+//! (`paillier::OpCosts` on this very machine) plus metered network
+//! traffic — which is what Fig. 6's end-to-end times consist of. The
+//! substitution (and why it preserves the comparison) is documented in
+//! DESIGN.md §4.
+//!
+//! Cost models:
+//! * **FATE (vertical SGD-LR, HE aggregation):** per iteration the active
+//!   party encrypts m residuals; every feature party computes nᵢ encrypted
+//!   gradient entries via `mul_plain` over the batch (m·nᵢ ops); the
+//!   arbiter decrypts n gradient entries. Wire: m + n ciphertexts.
+//! * **SecureML (2PC secret sharing):** online phase is share-space linear
+//!   algebra (plaintext speed, 2 share-vectors exchanged per iteration);
+//!   the *offline* Beaver-triple generation (HE-based, per multiplication
+//!   m·n triples per epoch) dominates — the reason SecureML trails FATE
+//!   by ~10× in the paper's Fig. 6.
+
+use crate::linalg::Mat;
+use crate::net::{LinkSpec, NetSim};
+use crate::paillier::OpCosts;
+use crate::util::{Error, Result};
+
+/// Which framework's cost model to apply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SgdFramework {
+    Fate,
+    SecureMl,
+}
+
+/// Result of an SGD-LR baseline run.
+pub struct SgdLrResult {
+    pub w: Vec<f64>,
+    /// Training MSE after each epoch.
+    pub mse_per_epoch: Vec<f64>,
+    /// Estimated end-to-end time = measured plaintext compute
+    /// + modeled crypto + simulated network.
+    pub est_total_s: f64,
+    pub crypto_s: f64,
+    pub network_s: f64,
+    pub compute_s: f64,
+    pub comm_bytes: u64,
+}
+
+/// Full-batch gradient-descent LR with a per-framework crypto/network
+/// cost model. `k_users` controls the vertical feature split.
+pub fn run_sgd_lr(
+    x: &Mat,
+    y: &[f64],
+    epochs: usize,
+    learning_rate: f64,
+    k_users: usize,
+    framework: SgdFramework,
+    costs: &OpCosts,
+    link: LinkSpec,
+) -> Result<SgdLrResult> {
+    let (m, n) = x.shape();
+    if y.len() != m {
+        return Err(Error::Shape("sgd_lr: label length".into()));
+    }
+    if epochs == 0 || k_users == 0 {
+        return Err(Error::Shape("sgd_lr: zero epochs/users".into()));
+    }
+
+    let t0 = std::time::Instant::now();
+    let mut w = vec![0.0; n];
+    let mut mse_per_epoch = Vec::with_capacity(epochs);
+    let mut net = NetSim::new(link);
+
+    // feature-normalized step size for stability across datasets
+    let scale = x.fro_norm().powi(2).max(1e-12) / m as f64;
+    let step = learning_rate / scale;
+
+    for _epoch in 0..epochs {
+        let pred = x.mul_vec(&w)?;
+        let resid: Vec<f64> = pred.iter().zip(y).map(|(p, t)| p - t).collect();
+        let grad = x.t_mul_vec(&resid)?;
+        for (wi, g) in w.iter_mut().zip(&grad) {
+            *wi -= step * g / m as f64;
+        }
+        let mse = resid.iter().map(|r| r * r).sum::<f64>() / m as f64;
+        mse_per_epoch.push(mse);
+
+        // per-iteration wire traffic
+        match framework {
+            SgdFramework::Fate => {
+                // encrypted residuals to feature parties, encrypted
+                // gradients back to the arbiter
+                net.begin_round();
+                for u in 0..k_users {
+                    net.send(2 + u, 1, (costs.ciphertext_bytes * (n / k_users + 1)) as u64);
+                }
+                net.end_round();
+                net.begin_round();
+                net.send(1, 2, (costs.ciphertext_bytes * m) as u64);
+                net.end_round();
+            }
+            SgdFramework::SecureMl => {
+                // share exchange: masked batch + masked weights both ways
+                net.begin_round();
+                net.send(2, 3, ((m + n) * 8) as u64);
+                net.send(3, 2, ((m + n) * 8) as u64);
+                net.end_round();
+            }
+        }
+    }
+    let compute_s = t0.elapsed().as_secs_f64();
+
+    // crypto cost model (per epoch), from measured primitive costs
+    let crypto_per_epoch = match framework {
+        SgdFramework::Fate => {
+            let enc = m as f64 * costs.encrypt_s;
+            let grad_ops = (m * n) as f64 * costs.mul_plain_s * 0.05
+                + n as f64 * costs.add_s * m as f64 * 0.05;
+            // (0.05: FATE batches HE ops over mini-batches / packing)
+            let dec = n as f64 * costs.decrypt_s;
+            enc + grad_ops + dec
+        }
+        SgdFramework::SecureMl => {
+            // offline Beaver triples: one HE op pair per matrix element
+            // of the epoch's multiplications (m·n), amortized ×0.5 for
+            // packing; online phase is plaintext-speed (already counted).
+            (m * n) as f64 * (costs.encrypt_s + costs.add_s) * 0.5
+        }
+    };
+    let crypto_s = crypto_per_epoch * epochs as f64;
+    let network_s = net.sim_elapsed_s();
+
+    Ok(SgdLrResult {
+        w,
+        mse_per_epoch,
+        est_total_s: compute_s + crypto_s + network_s,
+        crypto_s,
+        network_s,
+        compute_s,
+        comm_bytes: net.total_bytes(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::regression_task;
+    use crate::net::presets;
+
+    fn toy_costs() -> OpCosts {
+        OpCosts {
+            encrypt_s: 2e-4,
+            decrypt_s: 2e-4,
+            add_s: 2e-6,
+            mul_plain_s: 1e-4,
+            ciphertext_bytes: 256,
+        }
+    }
+
+    #[test]
+    fn sgd_converges_toward_optimum() {
+        let (x, _w, y) = regression_task(80, 6, 0.1, 1);
+        let r10 = run_sgd_lr(&x, &y, 10, 0.5, 2, SgdFramework::Fate, &toy_costs(),
+            presets::paper_default()).unwrap();
+        let r100 = run_sgd_lr(&x, &y, 100, 0.5, 2, SgdFramework::Fate, &toy_costs(),
+            presets::paper_default()).unwrap();
+        let r1000 = run_sgd_lr(&x, &y, 1000, 0.5, 2, SgdFramework::Fate, &toy_costs(),
+            presets::paper_default()).unwrap();
+        // the Tab. 1 pattern: MSE decreases with epochs
+        let last = |r: &SgdLrResult| *r.mse_per_epoch.last().unwrap();
+        assert!(last(&r100) < last(&r10));
+        assert!(last(&r1000) <= last(&r100));
+        // and approaches (never beats) the SVD optimum
+        let w_opt = crate::apps::lr::centralized_lr(&x, &y).unwrap();
+        let pred = x.mul_vec(&w_opt).unwrap();
+        let mse_opt: f64 =
+            y.iter().zip(&pred).map(|(a, b)| (a - b) * (a - b)).sum::<f64>() / 80.0;
+        assert!(last(&r1000) >= mse_opt - 1e-12);
+    }
+
+    #[test]
+    fn secureml_slower_than_fate_slower_than_nothing() {
+        // the Fig. 6 ordering comes from the cost models
+        let (x, _w, y) = regression_task(100, 10, 0.1, 2);
+        let fate = run_sgd_lr(&x, &y, 10, 0.5, 2, SgdFramework::Fate, &toy_costs(),
+            presets::paper_default()).unwrap();
+        let sml = run_sgd_lr(&x, &y, 10, 0.5, 2, SgdFramework::SecureMl, &toy_costs(),
+            presets::paper_default()).unwrap();
+        assert!(
+            sml.est_total_s > fate.est_total_s,
+            "SecureML {} should exceed FATE {}",
+            sml.est_total_s,
+            fate.est_total_s
+        );
+        assert!(fate.crypto_s > 0.0 && sml.crypto_s > 0.0);
+    }
+
+    #[test]
+    fn fate_comm_is_ciphertext_heavy() {
+        let (x, _w, y) = regression_task(50, 8, 0.1, 3);
+        let fate = run_sgd_lr(&x, &y, 5, 0.5, 2, SgdFramework::Fate, &toy_costs(),
+            presets::paper_default()).unwrap();
+        let sml = run_sgd_lr(&x, &y, 5, 0.5, 2, SgdFramework::SecureMl, &toy_costs(),
+            presets::paper_default()).unwrap();
+        assert!(fate.comm_bytes > sml.comm_bytes);
+    }
+
+    #[test]
+    fn input_validation() {
+        let (x, _w, y) = regression_task(10, 3, 0.1, 4);
+        assert!(run_sgd_lr(&x, &y[..5], 1, 0.1, 2, SgdFramework::Fate, &toy_costs(),
+            presets::paper_default()).is_err());
+        assert!(run_sgd_lr(&x, &y, 0, 0.1, 2, SgdFramework::Fate, &toy_costs(),
+            presets::paper_default()).is_err());
+    }
+}

@@ -1,0 +1,87 @@
+//! Minimal benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Each `rust/benches/*.rs` binary (`harness = false`) uses [`Bench`] to
+//! time closures with warmup + repetitions and print median/min, plus the
+//! table-row printers shared by the per-figure reproduction benches.
+
+use std::time::Instant;
+
+/// Timing result for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub reps: usize,
+}
+
+/// Run `f` `reps` times after `warmup` unrecorded runs; report stats.
+pub fn bench<T>(name: &str, warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> Sample {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let reps = reps.max(1);
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Sample {
+        name: name.to_string(),
+        median_s: times[times.len() / 2],
+        min_s: times[0],
+        max_s: *times.last().unwrap(),
+        reps,
+    }
+}
+
+impl Sample {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<40} median {:>12}  min {:>12}  (n={})",
+            self.name,
+            crate::util::human_secs(self.median_s),
+            crate::util::human_secs(self.min_s),
+            self.reps
+        )
+    }
+}
+
+/// Print a bench-section header (figure/table id + caption).
+pub fn section(id: &str, caption: &str) {
+    println!("\n=== {id}: {caption} ===");
+}
+
+/// Print one row of a paper-style results table.
+pub fn row(cells: &[String]) {
+    println!("{}", cells.join(" | "));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_ordered_stats() {
+        let s = bench("noop", 1, 5, || 1 + 1);
+        assert!(s.min_s <= s.median_s && s.median_s <= s.max_s);
+        assert_eq!(s.reps, 5);
+        assert!(s.row().contains("noop"));
+    }
+
+    #[test]
+    fn bench_measures_work() {
+        let fast = bench("fast", 0, 3, || (0..10u64).sum::<u64>());
+        let slow = bench("slow", 0, 3, || {
+            let mut acc = 0f64;
+            for i in 0..200_000u64 {
+                acc += (i as f64).sqrt();
+            }
+            acc
+        });
+        assert!(slow.median_s > fast.median_s);
+    }
+}

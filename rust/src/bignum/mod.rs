@@ -1,0 +1,820 @@
+//! Arbitrary-precision unsigned integers, from scratch.
+//!
+//! `num-bigint` is not in the offline vendor set, and the paper's HE
+//! baseline (PPD-SVD [16], Appendix A: Paillier with 1024-bit keys)
+//! needs 2048-bit modular arithmetic. This module provides exactly what
+//! Paillier + Diffie–Hellman-style seed agreement need:
+//!
+//! * little-endian u64-limb [`BigUint`] with add/sub/mul/div-rem/shifts,
+//! * Montgomery-form modular exponentiation ([`ModPowCtx`]) for odd moduli,
+//! * extended-Euclid modular inverse,
+//! * Miller–Rabin primality and random prime generation (`prime`).
+//!
+//! Performance note: schoolbook multiplication is O(k²) in limbs; at the
+//! 32-limb (2048-bit) sizes Paillier uses, Montgomery CIOS dominates the
+//! cost and is the figure the HE-baseline cost model measures (Fig. 2b /
+//! Fig. 5a shape).
+
+use crate::rng::Xoshiro256;
+use crate::util::{Error, Result};
+use std::cmp::Ordering;
+
+pub mod prime;
+pub use prime::{gen_prime, is_probable_prime};
+
+/// Little-endian, normalized (no high zero limbs) unsigned big integer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BigUint {
+    limbs: Vec<u64>,
+}
+
+impl BigUint {
+    pub fn zero() -> Self {
+        Self { limbs: Vec::new() }
+    }
+
+    pub fn one() -> Self {
+        Self { limbs: vec![1] }
+    }
+
+    pub fn from_u64(v: u64) -> Self {
+        if v == 0 {
+            Self::zero()
+        } else {
+            Self { limbs: vec![v] }
+        }
+    }
+
+    pub fn from_u128(v: u128) -> Self {
+        let lo = v as u64;
+        let hi = (v >> 64) as u64;
+        let mut s = Self {
+            limbs: vec![lo, hi],
+        };
+        s.normalize();
+        s
+    }
+
+    /// From little-endian bytes.
+    pub fn from_bytes_le(bytes: &[u8]) -> Self {
+        let mut limbs = Vec::with_capacity(bytes.len().div_ceil(8));
+        for chunk in bytes.chunks(8) {
+            let mut b = [0u8; 8];
+            b[..chunk.len()].copy_from_slice(chunk);
+            limbs.push(u64::from_le_bytes(b));
+        }
+        let mut s = Self { limbs };
+        s.normalize();
+        s
+    }
+
+    /// To little-endian bytes (no trailing zeros beyond the last limb).
+    pub fn to_bytes_le(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.limbs.len() * 8);
+        for &l in &self.limbs {
+            out.extend_from_slice(&l.to_le_bytes());
+        }
+        while out.last() == Some(&0) {
+            out.pop();
+        }
+        out
+    }
+
+    fn normalize(&mut self) {
+        while self.limbs.last() == Some(&0) {
+            self.limbs.pop();
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.limbs.is_empty()
+    }
+
+    pub fn is_one(&self) -> bool {
+        self.limbs.len() == 1 && self.limbs[0] == 1
+    }
+
+    pub fn is_even(&self) -> bool {
+        self.limbs.first().is_none_or(|l| l & 1 == 0)
+    }
+
+    pub fn bit_length(&self) -> usize {
+        match self.limbs.last() {
+            None => 0,
+            Some(&top) => (self.limbs.len() - 1) * 64 + (64 - top.leading_zeros() as usize),
+        }
+    }
+
+    pub fn bit(&self, i: usize) -> bool {
+        let limb = i / 64;
+        if limb >= self.limbs.len() {
+            return false;
+        }
+        (self.limbs[limb] >> (i % 64)) & 1 == 1
+    }
+
+    pub fn set_bit(&mut self, i: usize) {
+        let limb = i / 64;
+        if limb >= self.limbs.len() {
+            self.limbs.resize(limb + 1, 0);
+        }
+        self.limbs[limb] |= 1u64 << (i % 64);
+    }
+
+    /// Number of limbs (after normalization).
+    pub fn limb_count(&self) -> usize {
+        self.limbs.len()
+    }
+
+    /// Serialized size in bytes (ceil(bit_length/8)); cost-model input.
+    pub fn byte_len(&self) -> usize {
+        self.bit_length().div_ceil(8)
+    }
+
+    /// Uniform random integer with exactly `bits` bits (top bit set).
+    pub fn random_bits(bits: usize, rng: &mut Xoshiro256) -> Self {
+        if bits == 0 {
+            return Self::zero();
+        }
+        let nbytes = bits.div_ceil(8);
+        let mut bytes = vec![0u8; nbytes];
+        rng.fill_bytes(&mut bytes);
+        let mut v = Self::from_bytes_le(&bytes);
+        // clamp to `bits` bits then force the top bit
+        v = v.mod_2k(bits);
+        v.set_bit(bits - 1);
+        v
+    }
+
+    /// Uniform random integer in [0, bound).
+    pub fn random_below(bound: &BigUint, rng: &mut Xoshiro256) -> Self {
+        assert!(!bound.is_zero());
+        let bits = bound.bit_length();
+        loop {
+            let nbytes = bits.div_ceil(8);
+            let mut bytes = vec![0u8; nbytes];
+            rng.fill_bytes(&mut bytes);
+            let v = Self::from_bytes_le(&bytes).mod_2k(bits);
+            if v.cmp_big(bound) == Ordering::Less {
+                return v;
+            }
+        }
+    }
+
+    /// self mod 2^k.
+    pub fn mod_2k(&self, k: usize) -> Self {
+        let limb = k / 64;
+        let rem = k % 64;
+        let take = if rem == 0 { limb } else { limb + 1 };
+        let mut limbs: Vec<u64> = self.limbs.iter().take(take).cloned().collect();
+        if rem != 0 && limbs.len() == limb + 1 {
+            limbs[limb] &= (1u64 << rem) - 1;
+        }
+        let mut s = Self { limbs };
+        s.normalize();
+        s
+    }
+
+    pub fn cmp_big(&self, other: &BigUint) -> Ordering {
+        match self.limbs.len().cmp(&other.limbs.len()) {
+            Ordering::Equal => {}
+            o => return o,
+        }
+        for i in (0..self.limbs.len()).rev() {
+            match self.limbs[i].cmp(&other.limbs[i]) {
+                Ordering::Equal => {}
+                o => return o,
+            }
+        }
+        Ordering::Equal
+    }
+
+    pub fn add_big(&self, other: &BigUint) -> BigUint {
+        let (long, short) = if self.limbs.len() >= other.limbs.len() {
+            (&self.limbs, &other.limbs)
+        } else {
+            (&other.limbs, &self.limbs)
+        };
+        let mut out = Vec::with_capacity(long.len() + 1);
+        let mut carry = 0u64;
+        for i in 0..long.len() {
+            let b = if i < short.len() { short[i] } else { 0 };
+            let (s1, c1) = long[i].overflowing_add(b);
+            let (s2, c2) = s1.overflowing_add(carry);
+            out.push(s2);
+            carry = (c1 as u64) + (c2 as u64);
+        }
+        if carry > 0 {
+            out.push(carry);
+        }
+        let mut r = BigUint { limbs: out };
+        r.normalize();
+        r
+    }
+
+    /// self - other; debug-asserts other <= self.
+    pub fn sub_big(&self, other: &BigUint) -> BigUint {
+        debug_assert!(self.cmp_big(other) != Ordering::Less, "sub underflow");
+        let mut out = Vec::with_capacity(self.limbs.len());
+        let mut borrow = 0u64;
+        for i in 0..self.limbs.len() {
+            let b = if i < other.limbs.len() { other.limbs[i] } else { 0 };
+            let (d1, b1) = self.limbs[i].overflowing_sub(b);
+            let (d2, b2) = d1.overflowing_sub(borrow);
+            out.push(d2);
+            borrow = (b1 as u64) + (b2 as u64);
+        }
+        debug_assert_eq!(borrow, 0);
+        let mut r = BigUint { limbs: out };
+        r.normalize();
+        r
+    }
+
+    /// Schoolbook multiplication with u128 accumulation.
+    pub fn mul_big(&self, other: &BigUint) -> BigUint {
+        if self.is_zero() || other.is_zero() {
+            return BigUint::zero();
+        }
+        let mut out = vec![0u64; self.limbs.len() + other.limbs.len()];
+        for (i, &a) in self.limbs.iter().enumerate() {
+            if a == 0 {
+                continue;
+            }
+            let mut carry = 0u128;
+            for (j, &b) in other.limbs.iter().enumerate() {
+                let cur = out[i + j] as u128 + (a as u128) * (b as u128) + carry;
+                out[i + j] = cur as u64;
+                carry = cur >> 64;
+            }
+            let mut k = i + other.limbs.len();
+            while carry > 0 {
+                let cur = out[k] as u128 + carry;
+                out[k] = cur as u64;
+                carry = cur >> 64;
+                k += 1;
+            }
+        }
+        let mut r = BigUint { limbs: out };
+        r.normalize();
+        r
+    }
+
+    pub fn shl_bits(&self, k: usize) -> BigUint {
+        if self.is_zero() {
+            return BigUint::zero();
+        }
+        if k == 0 {
+            return self.clone();
+        }
+        let limb_shift = k / 64;
+        let bit_shift = k % 64;
+        let mut out = vec![0u64; self.limbs.len() + limb_shift + 1];
+        for (i, &l) in self.limbs.iter().enumerate() {
+            if bit_shift == 0 {
+                out[i + limb_shift] |= l;
+            } else {
+                out[i + limb_shift] |= l << bit_shift;
+                out[i + limb_shift + 1] |= l >> (64 - bit_shift);
+            }
+        }
+        let mut r = BigUint { limbs: out };
+        r.normalize();
+        r
+    }
+
+    pub fn shr_bits(&self, k: usize) -> BigUint {
+        let limb_shift = k / 64;
+        if limb_shift >= self.limbs.len() {
+            return BigUint::zero();
+        }
+        let bit_shift = k % 64;
+        let mut out = Vec::with_capacity(self.limbs.len() - limb_shift);
+        for i in limb_shift..self.limbs.len() {
+            let mut v = self.limbs[i] >> bit_shift;
+            if bit_shift > 0 && i + 1 < self.limbs.len() {
+                v |= self.limbs[i + 1] << (64 - bit_shift);
+            }
+            out.push(v);
+        }
+        let mut r = BigUint { limbs: out };
+        r.normalize();
+        r
+    }
+
+    /// Shift-subtract long division: returns (quotient, remainder).
+    pub fn div_rem(&self, divisor: &BigUint) -> Result<(BigUint, BigUint)> {
+        if divisor.is_zero() {
+            return Err(Error::Numerical("div_rem: division by zero".into()));
+        }
+        if self.cmp_big(divisor) == Ordering::Less {
+            return Ok((BigUint::zero(), self.clone()));
+        }
+        let shift = self.bit_length() - divisor.bit_length();
+        let mut r = self.clone();
+        let mut d = divisor.shl_bits(shift);
+        let mut q = BigUint::zero();
+        for i in (0..=shift).rev() {
+            if r.cmp_big(&d) != Ordering::Less {
+                r = r.sub_big(&d);
+                q.set_bit(i);
+            }
+            d = d.shr_bits(1);
+        }
+        Ok((q, r))
+    }
+
+    pub fn rem_big(&self, m: &BigUint) -> Result<BigUint> {
+        Ok(self.div_rem(m)?.1)
+    }
+
+    /// (self + other) mod m, assuming self, other < m.
+    pub fn add_mod(&self, other: &BigUint, m: &BigUint) -> BigUint {
+        let s = self.add_big(other);
+        if s.cmp_big(m) == Ordering::Less {
+            s
+        } else {
+            s.sub_big(m)
+        }
+    }
+
+    /// (self * other) mod m (full multiply + reduce; the Montgomery path in
+    /// [`ModPowCtx`] is preferred inside exponentiation loops).
+    pub fn mul_mod(&self, other: &BigUint, m: &BigUint) -> Result<BigUint> {
+        self.mul_big(other).rem_big(m)
+    }
+
+    /// Modular exponentiation; uses Montgomery for odd moduli, square-and-
+    /// multiply with division fallback otherwise.
+    pub fn mod_pow(&self, exp: &BigUint, m: &BigUint) -> Result<BigUint> {
+        if m.is_zero() {
+            return Err(Error::Numerical("mod_pow: zero modulus".into()));
+        }
+        if m.is_one() {
+            return Ok(BigUint::zero());
+        }
+        if !m.is_even() {
+            let ctx = ModPowCtx::new(m)?;
+            return ctx.mod_pow(self, exp);
+        }
+        // generic fallback
+        let mut base = self.rem_big(m)?;
+        let mut result = BigUint::one();
+        for i in 0..exp.bit_length() {
+            if exp.bit(i) {
+                result = result.mul_mod(&base, m)?;
+            }
+            base = base.mul_mod(&base, m)?;
+        }
+        Ok(result)
+    }
+
+    /// Greatest common divisor (binary GCD).
+    pub fn gcd(&self, other: &BigUint) -> BigUint {
+        let mut a = self.clone();
+        let mut b = other.clone();
+        if a.is_zero() {
+            return b;
+        }
+        if b.is_zero() {
+            return a;
+        }
+        let mut shift = 0usize;
+        while a.is_even() && b.is_even() {
+            a = a.shr_bits(1);
+            b = b.shr_bits(1);
+            shift += 1;
+        }
+        while a.is_even() {
+            a = a.shr_bits(1);
+        }
+        loop {
+            while b.is_even() {
+                b = b.shr_bits(1);
+            }
+            if a.cmp_big(&b) == Ordering::Greater {
+                std::mem::swap(&mut a, &mut b);
+            }
+            b = b.sub_big(&a);
+            if b.is_zero() {
+                return a.shl_bits(shift);
+            }
+        }
+    }
+
+    /// Least common multiple.
+    pub fn lcm(&self, other: &BigUint) -> Result<BigUint> {
+        if self.is_zero() || other.is_zero() {
+            return Ok(BigUint::zero());
+        }
+        let g = self.gcd(other);
+        Ok(self.div_rem(&g)?.0.mul_big(other))
+    }
+
+    /// Modular inverse via extended Euclid; errors when gcd != 1.
+    pub fn mod_inverse(&self, m: &BigUint) -> Result<BigUint> {
+        if m.is_zero() || m.is_one() {
+            return Err(Error::Numerical("mod_inverse: bad modulus".into()));
+        }
+        // iterative extended Euclid with explicit signs
+        let mut old_r = self.rem_big(m)?;
+        let mut r = m.clone();
+        // (magnitude, is_positive): coefficient of self
+        let mut old_s = (BigUint::one(), true);
+        let mut s = (BigUint::zero(), true);
+        while !r.is_zero() {
+            let (q, rem) = old_r.div_rem(&r)?;
+            let qs = q.mul_big(&s.0);
+            let new_s = signed_sub(&old_s, &(qs, s.1));
+            old_r = std::mem::replace(&mut r, rem);
+            old_s = std::mem::replace(&mut s, new_s);
+        }
+        if !old_r.is_one() {
+            return Err(Error::Crypto("mod_inverse: not invertible".into()));
+        }
+        // map signed old_s into [0, m)
+        let red = old_s.0.rem_big(m)?;
+        if old_s.1 || red.is_zero() {
+            Ok(red)
+        } else {
+            Ok(m.sub_big(&red))
+        }
+    }
+
+    /// Decimal parsing for tests / config.
+    pub fn from_decimal(s: &str) -> Result<BigUint> {
+        let mut v = BigUint::zero();
+        let ten = BigUint::from_u64(10);
+        for ch in s.chars() {
+            let d = ch
+                .to_digit(10)
+                .ok_or_else(|| Error::Config(format!("bad digit {ch}")))?;
+            v = v.mul_big(&ten).add_big(&BigUint::from_u64(d as u64));
+        }
+        Ok(v)
+    }
+
+    /// Decimal rendering (repeated division — test/debug only).
+    pub fn to_decimal(&self) -> String {
+        if self.is_zero() {
+            return "0".into();
+        }
+        let mut digits = Vec::new();
+        let ten = BigUint::from_u64(10);
+        let mut v = self.clone();
+        while !v.is_zero() {
+            let (q, r) = v.div_rem(&ten).expect("ten != 0");
+            let d = r.limbs.first().cloned().unwrap_or(0);
+            digits.push(std::char::from_digit(d as u32, 10).unwrap());
+            v = q;
+        }
+        digits.iter().rev().collect()
+    }
+
+    /// Truncate to u64 (low limb).
+    pub fn low_u64(&self) -> u64 {
+        self.limbs.first().cloned().unwrap_or(0)
+    }
+}
+
+/// (a, sign_a) - (b, sign_b) on magnitude+sign pairs (true = non-negative).
+fn signed_sub(a: &(BigUint, bool), b: &(BigUint, bool)) -> (BigUint, bool) {
+    match (a.1, b.1) {
+        (true, false) => (a.0.add_big(&b.0), true),
+        (false, true) => (a.0.add_big(&b.0), false),
+        (sa, _) => match a.0.cmp_big(&b.0) {
+            Ordering::Greater | Ordering::Equal => (a.0.sub_big(&b.0), sa),
+            Ordering::Less => (b.0.sub_big(&a.0), !sa),
+        },
+    }
+}
+
+/// Montgomery-form modular exponentiation context for an odd modulus.
+pub struct ModPowCtx {
+    n: Vec<u64>,
+    n0_inv: u64, // -n^{-1} mod 2^64
+    rr: Vec<u64>, // R² mod n (R = 2^(64k))
+    k: usize,
+}
+
+impl ModPowCtx {
+    pub fn new(modulus: &BigUint) -> Result<Self> {
+        if modulus.is_even() || modulus.is_zero() {
+            return Err(Error::Numerical("montgomery needs odd modulus".into()));
+        }
+        let k = modulus.limbs.len();
+        let n = modulus.limbs.clone();
+        // n^{-1} mod 2^64 via Newton iteration, then negate
+        let n0 = n[0];
+        let mut inv = 1u64;
+        for _ in 0..6 {
+            inv = inv.wrapping_mul(2u64.wrapping_sub(n0.wrapping_mul(inv)));
+        }
+        let n0_inv = inv.wrapping_neg();
+        // R² mod n where R = 2^(64k)
+        let r2 = BigUint::one().shl_bits(128 * k).rem_big(modulus)?;
+        let mut rr = r2.limbs.clone();
+        rr.resize(k, 0);
+        Ok(Self { n, n0_inv, rr, k })
+    }
+
+    /// CIOS Montgomery multiplication: a*b*R⁻¹ mod n over fixed k limbs.
+    fn mont_mul(&self, a: &[u64], b: &[u64]) -> Vec<u64> {
+        let k = self.k;
+        let mut t = vec![0u64; k + 2];
+        for i in 0..k {
+            // t += a[i] * b
+            let ai = a[i];
+            let mut carry = 0u128;
+            for j in 0..k {
+                let cur = t[j] as u128 + (ai as u128) * (b[j] as u128) + carry;
+                t[j] = cur as u64;
+                carry = cur >> 64;
+            }
+            let cur = t[k] as u128 + carry;
+            t[k] = cur as u64;
+            t[k + 1] = (cur >> 64) as u64;
+            // m = t[0] * n0_inv mod 2^64 ; t = (t + m*n) / 2^64
+            let m = t[0].wrapping_mul(self.n0_inv);
+            let cur = t[0] as u128 + (m as u128) * (self.n[0] as u128);
+            let mut carry = cur >> 64;
+            for j in 1..k {
+                let cur = t[j] as u128 + (m as u128) * (self.n[j] as u128) + carry;
+                t[j - 1] = cur as u64;
+                carry = cur >> 64;
+            }
+            let cur = t[k] as u128 + carry;
+            t[k - 1] = cur as u64;
+            let hi = (cur >> 64) as u64;
+            let (s, c) = t[k + 1].overflowing_add(hi);
+            t[k] = s;
+            t[k + 1] = c as u64;
+        }
+        // conditional subtract n
+        let mut out = t[..k].to_vec();
+        let overflow = t[k] != 0 || t[k + 1] != 0;
+        if overflow || cmp_limbs(&out, &self.n) != Ordering::Less {
+            sub_limbs(&mut out, &self.n);
+        }
+        out
+    }
+
+    /// base^exp mod n.
+    pub fn mod_pow(&self, base: &BigUint, exp: &BigUint) -> Result<BigUint> {
+        let modulus = BigUint {
+            limbs: self.n.clone(),
+        };
+        let mut b = base.rem_big(&modulus)?.limbs;
+        b.resize(self.k, 0);
+        // to Montgomery form
+        let bm = self.mont_mul(&b, &self.rr);
+        // 1 in Montgomery form = R mod n = mont_mul(1, R²)
+        let mut one = vec![0u64; self.k];
+        one[0] = 1;
+        let mut result = self.mont_mul(&one, &self.rr);
+        for i in (0..exp.bit_length()).rev() {
+            result = self.mont_mul(&result, &result);
+            if exp.bit(i) {
+                result = self.mont_mul(&result, &bm);
+            }
+        }
+        // out of Montgomery form
+        let out = self.mont_mul(&result, &one);
+        let mut r = BigUint { limbs: out };
+        r.normalize();
+        Ok(r)
+    }
+}
+
+fn cmp_limbs(a: &[u64], b: &[u64]) -> Ordering {
+    debug_assert_eq!(a.len(), b.len());
+    for i in (0..a.len()).rev() {
+        match a[i].cmp(&b[i]) {
+            Ordering::Equal => {}
+            o => return o,
+        }
+    }
+    Ordering::Equal
+}
+
+fn sub_limbs(a: &mut [u64], b: &[u64]) {
+    let mut borrow = 0u64;
+    for i in 0..a.len() {
+        let (d1, b1) = a[i].overflowing_sub(b[i]);
+        let (d2, b2) = d1.overflowing_sub(borrow);
+        a[i] = d2;
+        borrow = (b1 as u64) + (b2 as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn big(s: &str) -> BigUint {
+        BigUint::from_decimal(s).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_decimal() {
+        let v = big("123456789012345678901234567890");
+        assert_eq!(v.to_decimal(), "123456789012345678901234567890");
+        assert_eq!(BigUint::zero().to_decimal(), "0");
+    }
+
+    #[test]
+    fn add_sub() {
+        let a = big("99999999999999999999999999");
+        let b = big("1");
+        let c = a.add_big(&b);
+        assert_eq!(c.to_decimal(), "100000000000000000000000000");
+        assert_eq!(c.sub_big(&b), a);
+        assert_eq!(a.sub_big(&a), BigUint::zero());
+    }
+
+    #[test]
+    fn mul_known() {
+        let a = big("123456789");
+        let b = big("987654321");
+        assert_eq!(a.mul_big(&b).to_decimal(), "121932631112635269");
+        let c = big("18446744073709551616"); // 2^64
+        assert_eq!(
+            c.mul_big(&c).to_decimal(),
+            "340282366920938463463374607431768211456"
+        );
+    }
+
+    #[test]
+    fn div_rem_known() {
+        let a = big("1000000000000000000000");
+        let b = big("7");
+        let (q, r) = a.div_rem(&b).unwrap();
+        assert_eq!(q.to_decimal(), "142857142857142857142");
+        assert_eq!(r.to_decimal(), "6");
+        assert!(a.div_rem(&BigUint::zero()).is_err());
+    }
+
+    #[test]
+    fn div_rem_exact_and_small() {
+        let (q, r) = big("100").div_rem(&big("10")).unwrap();
+        assert_eq!(q.to_decimal(), "10");
+        assert!(r.is_zero());
+        let (q2, r2) = big("5").div_rem(&big("9")).unwrap();
+        assert!(q2.is_zero());
+        assert_eq!(r2.to_decimal(), "5");
+    }
+
+    #[test]
+    fn shifts() {
+        let a = big("12345");
+        assert_eq!(a.shl_bits(64).shr_bits(64), a);
+        assert_eq!(a.shl_bits(1).to_decimal(), "24690");
+        assert_eq!(a.shr_bits(3).to_decimal(), "1543");
+        assert_eq!(BigUint::one().shl_bits(128).bit_length(), 129);
+        assert_eq!(a.shl_bits(0), a);
+    }
+
+    #[test]
+    fn mod_2k_boundaries() {
+        let v = BigUint::one().shl_bits(100).add_big(&big("7"));
+        assert_eq!(v.mod_2k(100), big("7"));
+        assert_eq!(v.mod_2k(64), big("7"));
+        assert_eq!(v.mod_2k(101), v);
+    }
+
+    #[test]
+    fn bit_ops() {
+        let mut v = BigUint::zero();
+        v.set_bit(100);
+        assert!(v.bit(100));
+        assert!(!v.bit(99));
+        assert_eq!(v.bit_length(), 101);
+    }
+
+    #[test]
+    fn mod_pow_small_montgomery() {
+        let r = BigUint::from_u64(3)
+            .mod_pow(&BigUint::from_u64(20), &BigUint::from_u64(1001))
+            .unwrap();
+        let expect = {
+            let mut x: u128 = 1;
+            for _ in 0..20 {
+                x = x * 3 % 1001;
+            }
+            x as u64
+        };
+        assert_eq!(r.low_u64(), expect);
+    }
+
+    #[test]
+    fn mod_pow_even_modulus_fallback() {
+        let r = BigUint::from_u64(7)
+            .mod_pow(&BigUint::from_u64(13), &BigUint::from_u64(1000))
+            .unwrap();
+        let expect = {
+            let mut x: u128 = 1;
+            for _ in 0..13 {
+                x = x * 7 % 1000;
+            }
+            x as u64
+        };
+        assert_eq!(r.low_u64(), expect);
+    }
+
+    #[test]
+    fn mod_pow_fermat() {
+        // Fermat: a^(p-1) ≡ 1 mod p for prime p
+        let p = big("1000000007");
+        let a = big("123456789");
+        let e = p.sub_big(&BigUint::one());
+        assert!(a.mod_pow(&e, &p).unwrap().is_one());
+    }
+
+    #[test]
+    fn mod_pow_zero_exponent_and_base() {
+        let m = big("97");
+        assert!(big("5").mod_pow(&BigUint::zero(), &m).unwrap().is_one());
+        assert!(BigUint::zero()
+            .mod_pow(&big("5"), &m)
+            .unwrap()
+            .is_zero());
+    }
+
+    #[test]
+    fn mod_pow_large_montgomery_vs_slow() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let mut m = BigUint::random_bits(256, &mut rng);
+        m.set_bit(0); // odd
+        let b = BigUint::random_bits(200, &mut rng);
+        let e = BigUint::from_u64(65537);
+        let fast = b.mod_pow(&e, &m).unwrap();
+        let mut slow = BigUint::one();
+        let mut base = b.rem_big(&m).unwrap();
+        for i in 0..e.bit_length() {
+            if e.bit(i) {
+                slow = slow.mul_mod(&base, &m).unwrap();
+            }
+            base = base.mul_mod(&base, &m).unwrap();
+        }
+        assert_eq!(fast, slow);
+    }
+
+    #[test]
+    fn gcd_lcm() {
+        assert_eq!(big("48").gcd(&big("36")).to_decimal(), "12");
+        assert_eq!(big("17").gcd(&big("13")).to_decimal(), "1");
+        assert_eq!(big("4").lcm(&big("6")).unwrap().to_decimal(), "12");
+        assert_eq!(BigUint::zero().gcd(&big("5")).to_decimal(), "5");
+    }
+
+    #[test]
+    fn mod_inverse_known() {
+        let inv = BigUint::from_u64(3)
+            .mod_inverse(&BigUint::from_u64(11))
+            .unwrap();
+        assert_eq!(inv.low_u64(), 4);
+        assert!(BigUint::from_u64(6)
+            .mod_inverse(&BigUint::from_u64(9))
+            .is_err());
+    }
+
+    #[test]
+    fn mod_inverse_large() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let m = big("170141183460469231731687303715884105727"); // 2^127-1
+        for _ in 0..5 {
+            let a = BigUint::random_below(&m, &mut rng);
+            if a.is_zero() {
+                continue;
+            }
+            let inv = a.mod_inverse(&m).unwrap();
+            assert!(a.mul_mod(&inv, &m).unwrap().is_one());
+        }
+    }
+
+    #[test]
+    fn random_bits_has_top_bit() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        for bits in [8usize, 64, 65, 200] {
+            let v = BigUint::random_bits(bits, &mut rng);
+            assert_eq!(v.bit_length(), bits);
+        }
+    }
+
+    #[test]
+    fn random_below_in_range() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let bound = big("1000000000000000000000");
+        for _ in 0..20 {
+            let v = BigUint::random_below(&bound, &mut rng);
+            assert!(v.cmp_big(&bound) == Ordering::Less);
+        }
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let v = big("98765432109876543210987654321");
+        let b = v.to_bytes_le();
+        assert_eq!(BigUint::from_bytes_le(&b), v);
+        assert_eq!(v.byte_len(), b.len());
+    }
+}

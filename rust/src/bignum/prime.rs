@@ -1,0 +1,205 @@
+//! Primality testing and random prime generation for Paillier keygen.
+
+use super::BigUint;
+use crate::rng::Xoshiro256;
+
+/// Small primes for trial division (sieve of Eratosthenes below 8192).
+fn small_primes() -> &'static [u64] {
+    use std::sync::OnceLock;
+    static PRIMES: OnceLock<Vec<u64>> = OnceLock::new();
+    PRIMES.get_or_init(|| {
+        const N: usize = 8192;
+        let mut sieve = vec![true; N];
+        sieve[0] = false;
+        sieve[1] = false;
+        let mut i = 2;
+        while i * i < N {
+            if sieve[i] {
+                let mut j = i * i;
+                while j < N {
+                    sieve[j] = false;
+                    j += i;
+                }
+            }
+            i += 1;
+        }
+        (2..N as u64).filter(|&p| sieve[p as usize]).collect()
+    })
+}
+
+/// Remainder of `v` modulo a small u64 (fast path for trial division).
+fn rem_u64(v: &BigUint, d: u64) -> u64 {
+    // Horner over the little-endian limbs, high to low.
+    let bytes = v.to_bytes_le();
+    let mut limbs: Vec<u64> = Vec::with_capacity(bytes.len().div_ceil(8));
+    for chunk in bytes.chunks(8) {
+        let mut b = [0u8; 8];
+        b[..chunk.len()].copy_from_slice(chunk);
+        limbs.push(u64::from_le_bytes(b));
+    }
+    let mut rem: u128 = 0;
+    for &l in limbs.iter().rev() {
+        rem = ((rem << 64) | l as u128) % d as u128;
+    }
+    rem as u64
+}
+
+/// Miller–Rabin probabilistic primality test with `rounds` random bases.
+pub fn is_probable_prime(n: &BigUint, rounds: usize, rng: &mut Xoshiro256) -> bool {
+    if n.is_zero() || n.is_one() {
+        return false;
+    }
+    let two = BigUint::from_u64(2);
+    if n.cmp_big(&two) == std::cmp::Ordering::Equal {
+        return true;
+    }
+    if n.is_even() {
+        return false;
+    }
+    // trial division
+    for &p in small_primes() {
+        let pb = BigUint::from_u64(p);
+        match n.cmp_big(&pb) {
+            std::cmp::Ordering::Equal => return true,
+            std::cmp::Ordering::Less => return false,
+            std::cmp::Ordering::Greater => {
+                if rem_u64(n, p) == 0 {
+                    return false;
+                }
+            }
+        }
+    }
+    // write n-1 = d * 2^s
+    let n_minus_1 = n.sub_big(&BigUint::one());
+    let mut d = n_minus_1.clone();
+    let mut s = 0usize;
+    while d.is_even() {
+        d = d.shr_bits(1);
+        s += 1;
+    }
+    'witness: for _ in 0..rounds {
+        // base in [2, n-2]
+        let a = loop {
+            let a = BigUint::random_below(&n_minus_1, rng);
+            if !a.is_zero() && !a.is_one() {
+                break a;
+            }
+        };
+        let mut x = a.mod_pow(&d, n).expect("odd modulus");
+        if x.is_one() || x == n_minus_1 {
+            continue 'witness;
+        }
+        for _ in 0..s - 1 {
+            x = x.mul_mod(&x, n).expect("modulus nonzero");
+            if x == n_minus_1 {
+                continue 'witness;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+/// Generate a random prime with exactly `bits` bits.
+pub fn gen_prime(bits: usize, rng: &mut Xoshiro256) -> BigUint {
+    assert!(bits >= 8, "gen_prime: need at least 8 bits");
+    loop {
+        let mut cand = BigUint::random_bits(bits, rng);
+        cand.set_bit(0); // odd
+        cand.set_bit(bits - 1); // exact length
+        // 20 Miller–Rabin rounds → error < 4^-20
+        if is_probable_prime(&cand, 20, rng) {
+            return cand;
+        }
+    }
+}
+
+/// Generate a prime p with `bits` bits such that gcd(p-1, e) == 1.
+/// (Paillier wants gcd(pq, (p-1)(q-1)) = 1, which holds for distinct
+/// equal-size primes, but we keep the hook for stricter settings.)
+pub fn gen_prime_coprime(bits: usize, e: &BigUint, rng: &mut Xoshiro256) -> BigUint {
+    loop {
+        let p = gen_prime(bits, rng);
+        let pm1 = p.sub_big(&BigUint::one());
+        if pm1.gcd(e).is_one() {
+            return p;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_prime_classification() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for p in [2u64, 3, 5, 7, 11, 13, 8191, 65537, 1_000_000_007] {
+            assert!(
+                is_probable_prime(&BigUint::from_u64(p), 20, &mut rng),
+                "{p} should be prime"
+            );
+        }
+        for c in [1u64, 4, 9, 15, 8192, 65541, 1_000_000_008] {
+            assert!(
+                !is_probable_prime(&BigUint::from_u64(c), 20, &mut rng),
+                "{c} should be composite"
+            );
+        }
+    }
+
+    #[test]
+    fn carmichael_numbers_rejected() {
+        // 561, 1105, 1729 fool Fermat but not Miller–Rabin
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        for c in [561u64, 1105, 1729, 2465, 2821, 6601] {
+            assert!(
+                !is_probable_prime(&BigUint::from_u64(c), 20, &mut rng),
+                "Carmichael {c} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn known_large_prime() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        // 2^127 - 1 is a Mersenne prime
+        let p = BigUint::from_decimal("170141183460469231731687303715884105727").unwrap();
+        assert!(is_probable_prime(&p, 10, &mut rng));
+        let p_plus_2 = p.add_big(&BigUint::from_u64(2));
+        assert!(!is_probable_prime(&p_plus_2, 10, &mut rng));
+    }
+
+    #[test]
+    fn gen_prime_has_requested_size() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let p = gen_prime(96, &mut rng);
+        assert_eq!(p.bit_length(), 96);
+        assert!(is_probable_prime(&p, 10, &mut rng));
+    }
+
+    #[test]
+    fn gen_prime_distinct() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let p = gen_prime(64, &mut rng);
+        let q = gen_prime(64, &mut rng);
+        assert_ne!(p, q);
+    }
+
+    #[test]
+    fn gen_prime_coprime_works() {
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let e = BigUint::from_u64(65537);
+        let p = gen_prime_coprime(64, &e, &mut rng);
+        assert!(p.sub_big(&BigUint::one()).gcd(&e).is_one());
+    }
+
+    #[test]
+    fn rem_u64_matches_div_rem() {
+        let v = BigUint::from_decimal("123456789012345678901234567890123").unwrap();
+        for d in [3u64, 7, 97, 8191] {
+            let slow = v.rem_big(&BigUint::from_u64(d)).unwrap().low_u64();
+            assert_eq!(rem_u64(&v, d), slow);
+        }
+    }
+}

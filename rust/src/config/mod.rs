@@ -1,0 +1,191 @@
+//! Configuration system: a small INI/TOML-subset parser (no serde in the
+//! offline vendor set) plus typed experiment presets used by the CLI and
+//! benches.
+//!
+//! Format: `key = value` lines, `#` comments, optional `[section]` headers
+//! flattening to `section.key`. Values: i64, f64, bool, string.
+
+use crate::net::LinkSpec;
+use crate::protocol::{FedSvdConfig, OptFlags, SvdMode};
+use crate::util::{Error, Result};
+use std::collections::HashMap;
+
+/// A parsed configuration: flat `section.key → raw string` map.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    values: HashMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = HashMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                return Err(Error::Config(format!(
+                    "line {}: expected key = value, got {line:?}",
+                    lineno + 1
+                )));
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let val = v.trim().trim_matches('"').to_string();
+            values.insert(key, val);
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.values
+            .get(key)
+            .map(|v| {
+                v.parse::<usize>()
+                    .map_err(|e| Error::Config(format!("{key}: {e}")))
+            })
+            .transpose()
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.values
+            .get(key)
+            .map(|v| {
+                v.parse::<f64>()
+                    .map_err(|e| Error::Config(format!("{key}: {e}")))
+            })
+            .transpose()
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<Option<bool>> {
+        self.values
+            .get(key)
+            .map(|v| match v.as_str() {
+                "true" | "1" | "yes" | "on" => Ok(true),
+                "false" | "0" | "no" | "off" => Ok(false),
+                other => Err(Error::Config(format!("{key}: bad bool {other:?}"))),
+            })
+            .transpose()
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    /// Build a protocol config from `[fedsvd]` + `[network]` sections,
+    /// starting from defaults.
+    pub fn fedsvd_config(&self) -> Result<FedSvdConfig> {
+        let mut cfg = FedSvdConfig::default();
+        if let Some(b) = self.get_usize("fedsvd.block_size")? {
+            cfg.block_size = b;
+        }
+        if let Some(r) = self.get_usize("fedsvd.secagg_batch_rows")? {
+            cfg.secagg_batch_rows = r;
+        }
+        if let Some(s) = self.get_usize("fedsvd.seed")? {
+            cfg.seed = s as u64;
+        }
+        if let Some(r) = self.get_usize("fedsvd.truncate_rank")? {
+            cfg.mode = SvdMode::Truncated { rank: r };
+        }
+        if let Some(v) = self.get_bool("fedsvd.recover_u")? {
+            cfg.recover_u = v;
+        }
+        if let Some(v) = self.get_bool("fedsvd.recover_v")? {
+            cfg.recover_v = v;
+        }
+        let mut opts = OptFlags::default();
+        if let Some(v) = self.get_bool("fedsvd.opt_block_masks")? {
+            opts.block_masks = v;
+        }
+        if let Some(v) = self.get_bool("fedsvd.opt_minibatch")? {
+            opts.minibatch_secagg = v;
+        }
+        cfg.opts = opts;
+        let mut link = LinkSpec::default();
+        if let Some(bw) = self.get_f64("network.bandwidth_gbps")? {
+            link.bandwidth_bps = bw * 1e9;
+        }
+        if let Some(rtt) = self.get_f64("network.rtt_ms")? {
+            link.rtt_s = rtt / 1e3;
+        }
+        cfg.link = link;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment preset
+[fedsvd]
+block_size = 128
+seed = 42
+opt_block_masks = true
+truncate_rank = 5
+
+[network]
+bandwidth_gbps = 1.0
+rtt_ms = 50
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_usize("fedsvd.block_size").unwrap(), Some(128));
+        assert_eq!(c.get_bool("fedsvd.opt_block_masks").unwrap(), Some(true));
+        assert_eq!(c.get_f64("network.rtt_ms").unwrap(), Some(50.0));
+        assert_eq!(c.get_str("missing.key"), None);
+    }
+
+    #[test]
+    fn fedsvd_config_built() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let cfg = c.fedsvd_config().unwrap();
+        assert_eq!(cfg.block_size, 128);
+        assert_eq!(cfg.seed, 42);
+        assert!(matches!(cfg.mode, SvdMode::Truncated { rank: 5 }));
+        assert!((cfg.link.rtt_s - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let c = Config::parse("# only comments\n\n  \n").unwrap();
+        assert!(c.get_str("anything").is_none());
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(Config::parse("key_without_value\n").is_err());
+        let c = Config::parse("x = notanumber").unwrap();
+        assert!(c.get_usize("x").is_err());
+        let c2 = Config::parse("b = maybe").unwrap();
+        assert!(c2.get_bool("b").is_err());
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = Config::parse("a = 1").unwrap();
+        c.set("a", "2");
+        assert_eq!(c.get_usize("a").unwrap(), Some(2));
+    }
+}

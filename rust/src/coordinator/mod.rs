@@ -1,0 +1,5 @@
+//! L3 coordinator: session orchestration above the raw protocol
+//! (populated in the coordinator build-out step).
+
+pub mod session;
+pub use session::{Session, SessionReport};

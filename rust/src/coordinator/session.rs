@@ -1,0 +1,134 @@
+//! Session layer: the entry point a deployment would call.
+//!
+//! A [`Session`] owns the kernel choice (PJRT tile engine when artifacts
+//! exist, native fallback otherwise), runs the FedSVD protocol or one of
+//! the applications, and produces a [`SessionReport`] with the metrics the
+//! paper reports (wall time, simulated network time, bytes, phases).
+
+use crate::linalg::{Mat, MatKernel, NativeKernel};
+use crate::protocol::{run_fedsvd_with_kernel, FedSvdConfig, FedSvdOutput};
+use crate::runtime::TileEngine;
+use crate::util::Result;
+
+/// Which compute kernel a session uses for tile products.
+pub enum KernelChoice {
+    Native(NativeKernel),
+    Pjrt(Box<TileEngine>),
+}
+
+impl KernelChoice {
+    pub fn as_kernel(&self) -> &dyn MatKernel {
+        match self {
+            KernelChoice::Native(k) => k,
+            KernelChoice::Pjrt(k) => k.as_ref(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.as_kernel().name()
+    }
+}
+
+/// A configured FedSVD session.
+pub struct Session {
+    pub cfg: FedSvdConfig,
+    kernel: KernelChoice,
+}
+
+/// Summary returned to the caller / printed by the CLI.
+pub struct SessionReport {
+    pub kernel: &'static str,
+    pub wall_s: f64,
+    pub net_s: f64,
+    pub total_bytes: u64,
+    pub phase_table: String,
+    pub singular_values: Vec<f64>,
+}
+
+impl Session {
+    /// Create a session, preferring the PJRT tile engine when artifacts
+    /// are present (set `FEDSVD_FORCE_NATIVE=1` to skip).
+    pub fn auto(cfg: FedSvdConfig) -> Self {
+        let force_native = std::env::var_os("FEDSVD_FORCE_NATIVE").is_some();
+        let kernel = if force_native {
+            KernelChoice::Native(NativeKernel)
+        } else {
+            match TileEngine::from_artifacts() {
+                Ok(engine) => KernelChoice::Pjrt(Box::new(engine)),
+                Err(_) => KernelChoice::Native(NativeKernel),
+            }
+        };
+        Self { cfg, kernel }
+    }
+
+    /// Create a session pinned to the native kernel.
+    pub fn native(cfg: FedSvdConfig) -> Self {
+        Self {
+            cfg,
+            kernel: KernelChoice::Native(NativeKernel),
+        }
+    }
+
+    /// Create a session pinned to a PJRT tile engine.
+    pub fn pjrt(cfg: FedSvdConfig, engine: TileEngine) -> Self {
+        Self {
+            cfg,
+            kernel: KernelChoice::Pjrt(Box::new(engine)),
+        }
+    }
+
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel.name()
+    }
+
+    pub fn kernel(&self) -> &dyn MatKernel {
+        self.kernel.as_kernel()
+    }
+
+    /// Run the core protocol over vertically-partitioned user parts.
+    pub fn run_svd(&self, parts: &[Mat]) -> Result<(FedSvdOutput, SessionReport)> {
+        let out = run_fedsvd_with_kernel(parts, &self.cfg, self.kernel.as_kernel())?;
+        let report = SessionReport {
+            kernel: self.kernel.name(),
+            wall_s: out.metrics.total_wall_s(),
+            net_s: out.metrics.total_net_s(),
+            total_bytes: out.net.total_bytes(),
+            phase_table: out.metrics.table(),
+            singular_values: out.s.clone(),
+        };
+        Ok((out, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::split_columns;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn native_session_runs() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let parts = split_columns(&Mat::gaussian(8, 10, &mut rng), 2).unwrap();
+        let cfg = FedSvdConfig {
+            block_size: 4,
+            ..Default::default()
+        };
+        let s = Session::native(cfg);
+        assert_eq!(s.kernel_name(), "native");
+        let (out, report) = s.run_svd(&parts).unwrap();
+        assert_eq!(out.s.len(), 8);
+        assert!(report.total_bytes > 0);
+        assert!(report.phase_table.contains("TOTAL"));
+        assert_eq!(report.singular_values.len(), 8);
+    }
+
+    #[test]
+    fn auto_session_falls_back_without_artifacts() {
+        // point at a nonexistent artifacts dir and force re-resolution
+        std::env::set_var("FEDSVD_ARTIFACTS", "/nonexistent_fedsvd_artifacts");
+        let s = Session::auto(FedSvdConfig::default());
+        assert_eq!(s.kernel_name(), "native");
+        std::env::remove_var("FEDSVD_ARTIFACTS");
+    }
+}

@@ -1,0 +1,44 @@
+//! # FedSVD — Practical Lossless Federated SVD over Billion-Scale Data
+//!
+//! Reproduction of Chai et al., KDD 2022 (DOI 10.1145/3534678.3539402) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the federated coordinator: trusted authority
+//!   (TA), computation service provider (CSP) and user roles, removable
+//!   orthogonal masking, secure aggregation, network simulation, disk
+//!   offloading, the three applications (PCA / LR / LSA), the baselines
+//!   (Paillier HE-SVD, DP FedPCA, WDA-PCA, SGD-LR) and the ICA attack.
+//! * **Layer 2** — `python/compile/model.py`: JAX compute graphs (masking,
+//!   Gram/subspace-iteration steps) lowered once to HLO text.
+//! * **Layer 1** — `python/compile/kernels/*.py`: Pallas tile kernels called
+//!   from Layer 2; correctness pinned against a pure-jnp oracle.
+//!
+//! The Rust binary is self-contained after `make artifacts`: Python never
+//! runs on the request path. AOT artifacts are loaded through
+//! [`runtime::PjrtEngine`] (PJRT CPU client from the `xla` crate).
+
+pub mod util;
+
+// Substrates (bottom-up)
+pub mod rng;
+pub mod linalg;
+pub mod bignum;
+pub mod paillier;
+pub mod net;
+pub mod storage;
+pub mod secagg;
+
+// Core library
+pub mod mask;
+pub mod protocol;
+pub mod runtime;
+pub mod coordinator;
+
+// Applications & evaluation
+pub mod apps;
+pub mod baselines;
+pub mod attack;
+pub mod data;
+pub mod metrics;
+pub mod config;
+pub mod bench;

@@ -1,0 +1,182 @@
+//! Symmetric eigendecomposition via the classical (two-sided) cyclic
+//! Jacobi method.
+//!
+//! Used by: the ICA attack's whitening step (eigendecomposition of the
+//! sample covariance), the HE baseline (PPD-SVD decomposes the decrypted
+//! covariance), and WDA-PCA (rank-k PCA of averaged covariance sketches).
+
+use super::Mat;
+use crate::util::{Error, Result};
+
+/// Eigendecomposition of a symmetric matrix: `a = V · diag(λ) · Vᵀ`,
+/// eigenvalues descending. `a` is symmetrized as (A+Aᵀ)/2 defensively.
+pub struct EigResult {
+    /// Eigenvalues, descending.
+    pub values: Vec<f64>,
+    /// Column j of `vectors` is the eigenvector for `values[j]`.
+    pub vectors: Mat,
+}
+
+/// Cyclic Jacobi eigendecomposition for symmetric matrices.
+pub fn sym_eig(a: &Mat) -> Result<EigResult> {
+    let (m, n) = a.shape();
+    if m != n {
+        return Err(Error::Shape(format!("sym_eig: non-square {m}x{n}")));
+    }
+    if n == 0 {
+        return Err(Error::Shape("sym_eig: empty".into()));
+    }
+    // defensively symmetrize
+    let mut s = Mat::from_fn(n, n, |i, j| 0.5 * (a[(i, j)] + a[(j, i)]));
+    let mut v = Mat::eye(n);
+
+    let max_sweeps = 60;
+    let mut converged = false;
+    for _sweep in 0..max_sweeps {
+        // off-diagonal Frobenius mass
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += s[(i, j)] * s[(i, j)];
+            }
+        }
+        if off.sqrt() <= 1e-15 * s.fro_norm().max(f64::MIN_POSITIVE) {
+            converged = true;
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = s[(p, q)];
+                if apq == 0.0 {
+                    continue;
+                }
+                let app = s[(p, p)];
+                let aqq = s[(q, q)];
+                if apq.abs() <= 1e-18 * (app.abs() + aqq.abs()) {
+                    s[(p, q)] = 0.0;
+                    s[(q, p)] = 0.0;
+                    continue;
+                }
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (1.0 + theta * theta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let sn = t * c;
+
+                // S ← Jᵀ S J on rows/cols p, q
+                for k in 0..n {
+                    let skp = s[(k, p)];
+                    let skq = s[(k, q)];
+                    s[(k, p)] = c * skp - sn * skq;
+                    s[(k, q)] = sn * skp + c * skq;
+                }
+                for k in 0..n {
+                    let spk = s[(p, k)];
+                    let sqk = s[(q, k)];
+                    s[(p, k)] = c * spk - sn * sqk;
+                    s[(q, k)] = sn * spk + c * sqk;
+                }
+                // V ← V J
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - sn * vkq;
+                    v[(k, q)] = sn * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    if !converged {
+        return Err(Error::Numerical(format!(
+            "sym_eig: no convergence after {max_sweeps} sweeps (n={n})"
+        )));
+    }
+
+    let mut vals: Vec<f64> = (0..n).map(|i| s[(i, i)]).collect();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| vals[j].partial_cmp(&vals[i]).unwrap());
+    let mut values = Vec::with_capacity(n);
+    let mut vectors = Mat::zeros(n, n);
+    for (new, &old) in order.iter().enumerate() {
+        values.push(vals[old]);
+        for r in 0..n {
+            vectors[(r, new)] = v[(r, old)];
+        }
+    }
+    vals.clear();
+    Ok(EigResult { values, vectors })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::rng::Xoshiro256;
+    use crate::util::max_abs_diff;
+
+    fn random_symmetric(n: usize, seed: u64) -> Mat {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let a = Mat::gaussian(n, n, &mut rng);
+        a.add(&a.transpose()).unwrap().scale(0.5)
+    }
+
+    #[test]
+    fn diag_matrix() {
+        let a = Mat::diag(3, 3, &[1.0, 5.0, 3.0]);
+        let e = sym_eig(&a).unwrap();
+        assert!((e.values[0] - 5.0).abs() < 1e-12);
+        assert!((e.values[1] - 3.0).abs() < 1e-12);
+        assert!((e.values[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] → λ = 3, 1; v₁ = (1,1)/√2
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]).unwrap();
+        let e = sym_eig(&a).unwrap();
+        assert!((e.values[0] - 3.0).abs() < 1e-12);
+        assert!((e.values[1] - 1.0).abs() < 1e-12);
+        let v0 = e.vectors.col(0);
+        assert!((v0[0].abs() - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-10);
+    }
+
+    #[test]
+    fn reconstruction_and_orthogonality() {
+        let a = random_symmetric(15, 1);
+        let e = sym_eig(&a).unwrap();
+        assert!(e.vectors.orthonormality_defect() < 1e-10);
+        let lam = Mat::diag(15, 15, &e.values);
+        let recon = matmul(&matmul(&e.vectors, &lam).unwrap(), &e.vectors.transpose()).unwrap();
+        assert!(max_abs_diff(recon.data(), a.data()) < 1e-9);
+    }
+
+    #[test]
+    fn negative_eigenvalues_ordered() {
+        let a = Mat::diag(3, 3, &[-5.0, 2.0, -1.0]);
+        let e = sym_eig(&a).unwrap();
+        assert!((e.values[0] - 2.0).abs() < 1e-12);
+        assert!((e.values[2] + 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eigenvalues_match_singular_values_psd() {
+        // for PSD AᵀA: eig(AᵀA) == svd(A).s²
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let a = Mat::gaussian(12, 6, &mut rng);
+        let g = a.t_mul(&a).unwrap();
+        let e = sym_eig(&g).unwrap();
+        let s = crate::linalg::svd(&a).unwrap();
+        for i in 0..6 {
+            assert!(
+                (e.values[i] - s.s[i] * s.s[i]).abs() < 1e-8,
+                "λ{i}={} σ²={}",
+                e.values[i],
+                s.s[i] * s.s[i]
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        assert!(sym_eig(&Mat::zeros(2, 3)).is_err());
+    }
+}

@@ -1,0 +1,76 @@
+//! Pluggable matmul kernel.
+//!
+//! The FedSVD hot path (block masking, Gram steps) issues dense tile
+//! products through this trait so the same protocol code can run on:
+//! * [`NativeKernel`] — the register-blocked Rust matmul (always available,
+//!   used as fallback and as the cross-check oracle), or
+//! * `runtime::TileEngine` — the AOT-compiled XLA executable produced by
+//!   the JAX/Pallas layer and executed through PJRT (the paper-stack path).
+//!
+//! Both implementations must agree to ≤1e-10 elementwise; an integration
+//! test enforces it.
+
+use super::{matmul, Mat};
+use crate::util::Result;
+
+/// A provider of dense f64 matrix products.
+pub trait MatKernel {
+    /// `A · B`.
+    fn matmul(&self, a: &Mat, b: &Mat) -> Result<Mat>;
+
+    /// `P_block · X_tile · Q_block` — the fused masking product. Default:
+    /// two calls to `matmul`; the PJRT engine overrides with one fused
+    /// executable (single HLO, fewer host round-trips).
+    fn mask_tile(&self, p_block: &Mat, x_tile: &Mat, q_block: &Mat) -> Result<Mat> {
+        let px = self.matmul(p_block, x_tile)?;
+        self.matmul(&px, q_block)
+    }
+
+    /// Human-readable name for logs.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust kernel.
+#[derive(Default, Clone, Copy)]
+pub struct NativeKernel;
+
+impl MatKernel for NativeKernel {
+    fn matmul(&self, a: &Mat, b: &Mat) -> Result<Mat> {
+        matmul(a, b)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+    use crate::util::max_abs_diff;
+
+    #[test]
+    fn native_kernel_matches_matmul() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let a = Mat::gaussian(5, 6, &mut rng);
+        let b = Mat::gaussian(6, 4, &mut rng);
+        let k = NativeKernel;
+        let r1 = k.matmul(&a, &b).unwrap();
+        let r2 = matmul(&a, &b).unwrap();
+        assert!(max_abs_diff(r1.data(), r2.data()) == 0.0);
+        assert_eq!(k.name(), "native");
+    }
+
+    #[test]
+    fn default_mask_tile_is_two_products() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let p = Mat::gaussian(4, 4, &mut rng);
+        let x = Mat::gaussian(4, 3, &mut rng);
+        let q = Mat::gaussian(3, 3, &mut rng);
+        let k = NativeKernel;
+        let fused = k.mask_tile(&p, &x, &q).unwrap();
+        let manual = matmul(&matmul(&p, &x).unwrap(), &q).unwrap();
+        assert!(max_abs_diff(fused.data(), manual.data()) == 0.0);
+    }
+}

@@ -1,0 +1,199 @@
+//! LU decomposition with partial pivoting: linear solves and inverses.
+//!
+//! FedSVD needs explicit inverses only for the small random blocks Rᵢ used
+//! in the V-recovery step (paper §3.3, Eq. 6–7 — the block structure keeps
+//! this O(nᵢ) overall because each block is b×b).
+
+use super::Mat;
+use crate::util::{Error, Result};
+
+/// LU factorization PA = LU, stored packed in `lu` with pivot vector `piv`.
+pub struct Lu {
+    lu: Mat,
+    piv: Vec<usize>,
+    /// +1.0 / -1.0 depending on permutation parity (for determinants).
+    sign: f64,
+}
+
+/// Factorize a square matrix with partial pivoting.
+pub fn lu_decompose(a: &Mat) -> Result<Lu> {
+    let (m, n) = a.shape();
+    if m != n {
+        return Err(Error::Shape(format!("lu: non-square {m}x{n}")));
+    }
+    let mut lu = a.clone();
+    let mut piv: Vec<usize> = (0..n).collect();
+    let mut sign = 1.0;
+
+    for k in 0..n {
+        // pivot search
+        let mut p = k;
+        let mut maxv = lu[(k, k)].abs();
+        for i in (k + 1)..n {
+            let v = lu[(i, k)].abs();
+            if v > maxv {
+                maxv = v;
+                p = i;
+            }
+        }
+        if maxv < 1e-300 {
+            return Err(Error::Numerical(format!("lu: singular at column {k}")));
+        }
+        if p != k {
+            // swap rows k and p
+            for j in 0..n {
+                let t = lu[(k, j)];
+                lu[(k, j)] = lu[(p, j)];
+                lu[(p, j)] = t;
+            }
+            piv.swap(k, p);
+            sign = -sign;
+        }
+        let pivot = lu[(k, k)];
+        for i in (k + 1)..n {
+            let f = lu[(i, k)] / pivot;
+            lu[(i, k)] = f;
+            if f != 0.0 {
+                for j in (k + 1)..n {
+                    let lkj = lu[(k, j)];
+                    lu[(i, j)] -= f * lkj;
+                }
+            }
+        }
+    }
+    Ok(Lu { lu, piv, sign })
+}
+
+impl Lu {
+    pub fn n(&self) -> usize {
+        self.lu.rows()
+    }
+
+    /// Solve A x = b for a single right-hand side.
+    pub fn solve_vec(&self, b: &[f64]) -> Result<Vec<f64>> {
+        let n = self.n();
+        if b.len() != n {
+            return Err(Error::Shape("lu solve: rhs length".into()));
+        }
+        // apply permutation
+        let mut x: Vec<f64> = self.piv.iter().map(|&p| b[p]).collect();
+        // forward substitution (L unit-diagonal)
+        for i in 1..n {
+            let mut acc = x[i];
+            for j in 0..i {
+                acc -= self.lu[(i, j)] * x[j];
+            }
+            x[i] = acc;
+        }
+        // back substitution
+        for i in (0..n).rev() {
+            let mut acc = x[i];
+            for j in (i + 1)..n {
+                acc -= self.lu[(i, j)] * x[j];
+            }
+            x[i] = acc / self.lu[(i, i)];
+        }
+        Ok(x)
+    }
+
+    /// Solve A X = B column by column.
+    pub fn solve_mat(&self, b: &Mat) -> Result<Mat> {
+        let n = self.n();
+        if b.rows() != n {
+            return Err(Error::Shape("lu solve: rhs rows".into()));
+        }
+        let mut out = Mat::zeros(n, b.cols());
+        for j in 0..b.cols() {
+            let col = b.col(j);
+            let x = self.solve_vec(&col)?;
+            for i in 0..n {
+                out[(i, j)] = x[i];
+            }
+        }
+        Ok(out)
+    }
+
+    /// Explicit inverse.
+    pub fn inverse(&self) -> Result<Mat> {
+        self.solve_mat(&Mat::eye(self.n()))
+    }
+
+    /// Determinant from the factorization.
+    pub fn det(&self) -> f64 {
+        let mut d = self.sign;
+        for i in 0..self.n() {
+            d *= self.lu[(i, i)];
+        }
+        d
+    }
+}
+
+/// Convenience: invert a square matrix.
+pub fn inverse(a: &Mat) -> Result<Mat> {
+    lu_decompose(a)?.inverse()
+}
+
+/// Convenience: solve A x = b.
+pub fn solve(a: &Mat, b: &[f64]) -> Result<Vec<f64>> {
+    lu_decompose(a)?.solve_vec(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::rng::Xoshiro256;
+    use crate::util::max_abs_diff;
+
+    #[test]
+    fn solve_known_system() {
+        // x + y = 3 ; 2x - y = 0 → x=1, y=2
+        let a = Mat::from_vec(2, 2, vec![1.0, 1.0, 2.0, -1.0]).unwrap();
+        let x = solve(&a, &[3.0, 0.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let a = Mat::gaussian(10, 10, &mut rng);
+        let inv = inverse(&a).unwrap();
+        let prod = matmul(&a, &inv).unwrap();
+        assert!(max_abs_diff(prod.data(), Mat::eye(10).data()) < 1e-9);
+    }
+
+    #[test]
+    fn det_of_diag_and_permutation_sign() {
+        let a = Mat::diag(3, 3, &[2.0, 3.0, 4.0]);
+        assert!((lu_decompose(&a).unwrap().det() - 24.0).abs() < 1e-12);
+        // row-swapped identity has det -1
+        let p = Mat::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]).unwrap();
+        assert!((lu_decompose(&p).unwrap().det() + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]).unwrap();
+        assert!(lu_decompose(&a).is_err());
+    }
+
+    #[test]
+    fn pivoting_handles_zero_leading_entry() {
+        let a = Mat::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]).unwrap();
+        let x = solve(&a, &[5.0, 7.0]).unwrap();
+        assert!((x[0] - 7.0).abs() < 1e-12);
+        assert!((x[1] - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_mat_matches_solve_vec() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let a = Mat::gaussian(6, 6, &mut rng);
+        let b = Mat::gaussian(6, 3, &mut rng);
+        let f = lu_decompose(&a).unwrap();
+        let x = f.solve_mat(&b).unwrap();
+        let recon = matmul(&a, &x).unwrap();
+        assert!(max_abs_diff(recon.data(), b.data()) < 1e-9);
+    }
+}

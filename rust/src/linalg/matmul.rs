@@ -1,0 +1,276 @@
+//! Register- and cache-blocked dense matmul.
+//!
+//! This is the native (non-PJRT) compute kernel under the FedSVD hot path:
+//! masking/unmasking is a stream of (b×b)·(b×t) block products (paper §3.2,
+//! Eq. 5). The PJRT path (`runtime::TileEngine`) offloads the same products
+//! to an AOT-compiled XLA executable; this kernel is both the fallback and
+//! the cross-check.
+//!
+//! Layout: row-major everywhere. The micro-kernel computes a 4×16 register
+//! tile of C (8 zmm accumulators on this AVX-512 core) with the k-loop
+//! innermost, streaming B rows sequentially — ~1.8× over the (auto-
+//! vectorized) naive triple loop at 256³; iteration log in
+//! EXPERIMENTS.md §Perf.
+
+use super::Mat;
+use crate::util::{Error, Result};
+
+/// Cache-block sizes (tuned on the 1-core target; see §Perf iteration log).
+const MC: usize = 128; // rows of A per L2 block
+const KC: usize = 256; // shared dim per block
+const NC: usize = 512; // cols of B per block
+
+/// `C = A * B`.
+pub fn matmul(a: &Mat, b: &Mat) -> Result<Mat> {
+    if a.cols() != b.rows() {
+        return Err(Error::Shape(format!(
+            "matmul: {}x{} * {}x{}",
+            a.rows(),
+            a.cols(),
+            b.rows(),
+            b.cols()
+        )));
+    }
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    matmul_acc(a, b, &mut c)?;
+    Ok(c)
+}
+
+/// `C = A * B` into a pre-allocated output (must be zeroed or hold a
+/// partial sum to accumulate onto).
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) -> Result<()> {
+    if a.cols() != b.rows() || c.rows() != a.rows() || c.cols() != b.cols() {
+        return Err(Error::Shape(format!(
+            "matmul_into: {}x{} * {}x{} -> {}x{}",
+            a.rows(),
+            a.cols(),
+            b.rows(),
+            b.cols(),
+            c.rows(),
+            c.cols()
+        )));
+    }
+    for v in c.data_mut().iter_mut() {
+        *v = 0.0;
+    }
+    matmul_acc(a, b, c)
+}
+
+/// `C += A * B` (shape-checked by callers above).
+pub fn matmul_acc(a: &Mat, b: &Mat, c: &mut Mat) -> Result<()> {
+    if a.cols() != b.rows() || c.rows() != a.rows() || c.cols() != b.cols() {
+        return Err(Error::Shape("matmul_acc: shape mismatch".into()));
+    }
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    if m == 0 || k == 0 || n == 0 {
+        return Ok(());
+    }
+    let ad = a.data();
+    let bd = b.data();
+    let cd = c.data_mut();
+
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kc = KC.min(k - pc);
+            for ic in (0..m).step_by(MC) {
+                let mc = MC.min(m - ic);
+                block_kernel(ad, bd, cd, k, n, ic, jc, pc, mc, nc, kc);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Inner block: C[ic..ic+mc, jc..jc+nc] += A[ic.., pc..] * B[pc.., jc..]
+/// with a 4×16 register micro-tile.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn block_kernel(
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    lda: usize, // = a.cols
+    ldb: usize, // = b.cols (also c.cols)
+    ic: usize,
+    jc: usize,
+    pc: usize,
+    mc: usize,
+    nc: usize,
+    kc: usize,
+) {
+    const MR: usize = 4;
+    const NR: usize = 16;
+    let mut i = 0;
+    while i < mc {
+        let mr = MR.min(mc - i);
+        let mut j = 0;
+        while j < nc {
+            let nr = NR.min(nc - j);
+            if mr == MR && nr == NR {
+                micro_4x16(a, b, c, lda, ldb, ic + i, jc + j, pc, kc);
+            } else {
+                // ragged edge: scalar loop
+                for ii in 0..mr {
+                    let arow = (ic + i + ii) * lda + pc;
+                    let crow = (ic + i + ii) * ldb + jc + j;
+                    for jj in 0..nr {
+                        let mut acc = 0.0;
+                        for p in 0..kc {
+                            acc += a[arow + p] * b[(pc + p) * ldb + jc + j + jj];
+                        }
+                        c[crow + jj] += acc;
+                    }
+                }
+            }
+            j += nr;
+        }
+        i += mr;
+    }
+}
+
+/// 4×16 register-tiled micro-kernel: 4 rows × two 8-lane f64 vectors of C
+/// stay in registers (8 zmm accumulators — enough independent FMA chains
+/// to cover the FMA latency on this AVX-512 core; see §Perf).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_4x16(
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    lda: usize,
+    ldb: usize,
+    i0: usize,
+    j0: usize,
+    pc: usize,
+    kc: usize,
+) {
+    let mut acc = [[0.0f64; 16]; 4];
+    let a0 = i0 * lda + pc;
+    let a1 = (i0 + 1) * lda + pc;
+    let a2 = (i0 + 2) * lda + pc;
+    let a3 = (i0 + 3) * lda + pc;
+    for p in 0..kc {
+        let brow = (pc + p) * ldb + j0;
+        let bvals = &b[brow..brow + 16];
+        let av = [a[a0 + p], a[a1 + p], a[a2 + p], a[a3 + p]];
+        for (ii, &ai) in av.iter().enumerate() {
+            let accr = &mut acc[ii];
+            for jj in 0..16 {
+                accr[jj] += ai * bvals[jj];
+            }
+        }
+    }
+    for (ii, accr) in acc.iter().enumerate() {
+        let crow = (i0 + ii) * ldb + j0;
+        for jj in 0..16 {
+            c[crow + jj] += accr[jj];
+        }
+    }
+}
+
+/// Naive triple-loop reference used in tests and as the §Perf baseline.
+pub fn matmul_naive(a: &Mat, b: &Mat) -> Result<Mat> {
+    if a.cols() != b.rows() {
+        return Err(Error::Shape("matmul_naive: shape mismatch".into()));
+    }
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[(i, p)];
+            if av != 0.0 {
+                for j in 0..n {
+                    c[(i, j)] += av * b[(p, j)];
+                }
+            }
+        }
+    }
+    Ok(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+    use crate::util::max_abs_diff;
+
+    fn check_against_naive(m: usize, k: usize, n: usize, seed: u64) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let a = Mat::gaussian(m, k, &mut rng);
+        let b = Mat::gaussian(k, n, &mut rng);
+        let fast = matmul(&a, &b).unwrap();
+        let slow = matmul_naive(&a, &b).unwrap();
+        let d = max_abs_diff(fast.data(), slow.data());
+        assert!(d < 1e-10, "({m},{k},{n}) diff={d}");
+    }
+
+    #[test]
+    fn matches_naive_small() {
+        check_against_naive(3, 4, 5, 1);
+        check_against_naive(1, 1, 1, 2);
+        check_against_naive(4, 8, 8, 3);
+    }
+
+    #[test]
+    fn matches_naive_ragged() {
+        // sizes straddling the 4x16 micro-tile and the cache blocks
+        check_against_naive(5, 7, 9, 4);
+        check_against_naive(13, 17, 11, 5);
+        check_against_naive(129, 257, 33, 6);
+    }
+
+    #[test]
+    fn matches_naive_tall_and_wide() {
+        check_against_naive(200, 3, 50, 7);
+        check_against_naive(3, 200, 50, 8);
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let a = Mat::gaussian(20, 20, &mut rng);
+        let i = Mat::eye(20);
+        let left = matmul(&i, &a).unwrap();
+        let right = matmul(&a, &i).unwrap();
+        assert!(max_abs_diff(left.data(), a.data()) < 1e-14);
+        assert!(max_abs_diff(right.data(), a.data()) < 1e-14);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(4, 2);
+        assert!(matmul(&a, &b).is_err());
+        let mut c = Mat::zeros(2, 2);
+        assert!(matmul_into(&a, &Mat::zeros(3, 3), &mut c).is_err());
+    }
+
+    #[test]
+    fn matmul_acc_accumulates() {
+        let a = Mat::eye(2);
+        let b = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]).unwrap();
+        let mut c = Mat::from_vec(2, 2, vec![10., 10., 10., 10.]).unwrap();
+        matmul_acc(&a, &b, &mut c).unwrap();
+        assert_eq!(c.data(), &[11., 12., 13., 14.]);
+    }
+
+    #[test]
+    fn zero_dims_ok() {
+        let a = Mat::zeros(0, 5);
+        let b = Mat::zeros(5, 3);
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.shape(), (0, 3));
+    }
+
+    #[test]
+    fn associativity_numerics() {
+        let mut rng = Xoshiro256::seed_from_u64(10);
+        let a = Mat::gaussian(6, 7, &mut rng);
+        let b = Mat::gaussian(7, 8, &mut rng);
+        let c = Mat::gaussian(8, 5, &mut rng);
+        let left = matmul(&matmul(&a, &b).unwrap(), &c).unwrap();
+        let right = matmul(&a, &matmul(&b, &c).unwrap()).unwrap();
+        assert!(max_abs_diff(left.data(), right.data()) < 1e-10);
+    }
+}

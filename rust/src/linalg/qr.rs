@@ -1,0 +1,250 @@
+//! QR factorizations: modified Gram–Schmidt (the paper's Algorithm 1 uses
+//! Gram–Schmidt on a Gaussian matrix to draw Haar-distributed orthogonal
+//! masks) and Householder QR (numerically robust path used inside the SVD
+//! and the randomized range finder).
+
+use super::{matmul, Mat};
+use crate::util::{Error, Result};
+
+/// Modified Gram–Schmidt with one re-orthogonalization pass.
+///
+/// Returns `(Q, R)` with `A = Q·R`, `Q` having orthonormal columns.
+/// Matches the paper's Algorithm 1 when fed an i.i.d. N(0,1) square matrix:
+/// the result is Haar-uniform on the orthogonal group (Gupta & Nagar).
+/// Deterministic — the TA and users regenerate identical masks from a seed.
+pub fn gram_schmidt(a: &Mat) -> Result<(Mat, Mat)> {
+    let (m, n) = a.shape();
+    if n > m {
+        return Err(Error::Shape(format!(
+            "gram_schmidt: need rows >= cols, got {m}x{n}"
+        )));
+    }
+    let mut q = a.clone();
+    let mut r = Mat::zeros(n, n);
+    for j in 0..n {
+        // two passes of MGS projection ("twice is enough", Kahan/Parlett)
+        for _pass in 0..2 {
+            for i in 0..j {
+                // r_ij = q_i · q_j
+                let mut dot = 0.0;
+                for k in 0..m {
+                    dot += q[(k, i)] * q[(k, j)];
+                }
+                r[(i, j)] += dot;
+                for k in 0..m {
+                    let qki = q[(k, i)];
+                    q[(k, j)] -= dot * qki;
+                }
+            }
+        }
+        let mut norm = 0.0;
+        for k in 0..m {
+            norm += q[(k, j)] * q[(k, j)];
+        }
+        let norm = norm.sqrt();
+        if norm < 1e-300 {
+            return Err(Error::Numerical(format!(
+                "gram_schmidt: rank deficiency at column {j}"
+            )));
+        }
+        r[(j, j)] = norm;
+        for k in 0..m {
+            q[(k, j)] /= norm;
+        }
+    }
+    Ok((q, r))
+}
+
+/// Householder QR. Returns `(Q, R)` with `A = Q·R`; `Q` is m×n (thin) when
+/// `thin` is true, m×m otherwise.
+pub fn householder_qr(a: &Mat, thin: bool) -> Result<(Mat, Mat)> {
+    let (m, n) = a.shape();
+    let mut r = a.clone();
+    let t = m.min(n);
+    // Householder vectors stored column-packed below the diagonal of `v`.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(t);
+
+    for k in 0..t {
+        // compute the reflector for column k
+        let mut alpha = 0.0;
+        for i in k..m {
+            alpha += r[(i, k)] * r[(i, k)];
+        }
+        let alpha = alpha.sqrt();
+        if alpha < 1e-300 {
+            vs.push(vec![0.0; m - k]); // zero column: identity reflector
+            continue;
+        }
+        let sign = if r[(k, k)] >= 0.0 { 1.0 } else { -1.0 };
+        let mut v: Vec<f64> = (k..m).map(|i| r[(i, k)]).collect();
+        v[0] += sign * alpha;
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 < 1e-300 {
+            vs.push(vec![0.0; m - k]);
+            continue;
+        }
+        // apply (I - 2 v vᵀ / vᵀv) to R[k.., k..]
+        for j in k..n {
+            let mut dot = 0.0;
+            for (idx, i) in (k..m).enumerate() {
+                dot += v[idx] * r[(i, j)];
+            }
+            let scale = 2.0 * dot / vnorm2;
+            for (idx, i) in (k..m).enumerate() {
+                r[(i, j)] -= scale * v[idx];
+            }
+        }
+        vs.push(v);
+    }
+
+    // zero out the strict lower triangle of R (numerically already ~0)
+    for i in 1..m {
+        for j in 0..i.min(n) {
+            r[(i, j)] = 0.0;
+        }
+    }
+
+    // accumulate Q = H_0 H_1 ... H_{t-1} applied to I
+    let qcols = if thin { n.min(m) } else { m };
+    let mut q = Mat::zeros(m, qcols);
+    for i in 0..qcols.min(m) {
+        q[(i, i)] = 1.0;
+    }
+    for k in (0..t).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 < 1e-300 {
+            continue;
+        }
+        for j in 0..qcols {
+            let mut dot = 0.0;
+            for (idx, i) in (k..m).enumerate() {
+                dot += v[idx] * q[(i, j)];
+            }
+            let scale = 2.0 * dot / vnorm2;
+            for (idx, i) in (k..m).enumerate() {
+                q[(i, j)] -= scale * v[idx];
+            }
+        }
+    }
+    let r_out = if thin {
+        r.take_rows(n.min(m))
+    } else {
+        r
+    };
+    Ok((q, r_out))
+}
+
+/// Orthonormalize the columns of `a` (thin Q of Householder QR).
+pub fn orthonormalize(a: &Mat) -> Result<Mat> {
+    Ok(householder_qr(a, true)?.0)
+}
+
+/// Check `A ≈ Q·R` to tolerance; helper shared by tests.
+pub fn qr_residual(a: &Mat, q: &Mat, r: &Mat) -> f64 {
+    let qr = matmul(q, r).expect("qr shapes");
+    crate::util::max_abs_diff(a.data(), qr.data())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+    use crate::util::prop::PropRunner;
+    use crate::prop_assert;
+
+    #[test]
+    fn gram_schmidt_square_orthogonal() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let a = Mat::gaussian(12, 12, &mut rng);
+        let (q, r) = gram_schmidt(&a).unwrap();
+        assert!(q.orthonormality_defect() < 1e-12);
+        assert!(qr_residual(&a, &q, &r) < 1e-12);
+        // R upper-triangular with positive diagonal
+        for i in 0..12 {
+            assert!(r[(i, i)] > 0.0);
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn gram_schmidt_deterministic_from_seed() {
+        // The mask-delivery optimisation (paper §3.2) depends on this.
+        let a1 = Mat::gaussian(8, 8, &mut Xoshiro256::seed_from_u64(99));
+        let a2 = Mat::gaussian(8, 8, &mut Xoshiro256::seed_from_u64(99));
+        let (q1, _) = gram_schmidt(&a1).unwrap();
+        let (q2, _) = gram_schmidt(&a2).unwrap();
+        assert_eq!(q1.data(), q2.data());
+    }
+
+    #[test]
+    fn gram_schmidt_rejects_wide() {
+        assert!(gram_schmidt(&Mat::zeros(2, 3)).is_err());
+    }
+
+    #[test]
+    fn gram_schmidt_rank_deficient_errors() {
+        let mut a = Mat::zeros(4, 3);
+        a[(0, 0)] = 1.0;
+        a[(1, 1)] = 1.0;
+        // third column is a copy of the first => deficiency
+        a[(0, 2)] = 1.0;
+        assert!(gram_schmidt(&a).is_err());
+    }
+
+    #[test]
+    fn householder_square() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let a = Mat::gaussian(10, 10, &mut rng);
+        let (q, r) = householder_qr(&a, false).unwrap();
+        assert!(q.orthonormality_defect() < 1e-12);
+        assert!(qr_residual(&a, &q, &r) < 1e-10);
+    }
+
+    #[test]
+    fn householder_tall_thin() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let a = Mat::gaussian(20, 6, &mut rng);
+        let (q, r) = householder_qr(&a, true).unwrap();
+        assert_eq!(q.shape(), (20, 6));
+        assert_eq!(r.shape(), (6, 6));
+        assert!(q.orthonormality_defect() < 1e-12);
+        assert!(qr_residual(&a, &q, &r) < 1e-10);
+    }
+
+    #[test]
+    fn householder_handles_zero_column() {
+        let mut a = Mat::zeros(5, 3);
+        a[(0, 0)] = 2.0;
+        a[(2, 2)] = 1.0; // middle column all zero
+        let (q, r) = householder_qr(&a, true).unwrap();
+        assert!(qr_residual(&a, &q, &r) < 1e-12);
+    }
+
+    #[test]
+    fn prop_qr_reconstructs() {
+        PropRunner::new(0xbeef, 12).run("qr reconstruct", |rng| {
+            let m = 3 + (rng.next_below(20) as usize);
+            let n = 1 + (rng.next_below(m as u64) as usize);
+            let a = Mat::gaussian(m, n, rng);
+            let (q, r) = householder_qr(&a, true).map_err(|e| e.to_string())?;
+            let resid = qr_residual(&a, &q, &r);
+            prop_assert!(resid < 1e-9, "residual {resid} for {m}x{n}");
+            let defect = q.orthonormality_defect();
+            prop_assert!(defect < 1e-10, "defect {defect} for {m}x{n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn orthonormalize_idempotent_subspace() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let a = Mat::gaussian(15, 4, &mut rng);
+        let q = orthonormalize(&a).unwrap();
+        // Q spans the same subspace: a = q (qᵀ a)
+        let proj = q.mul(&q.t_mul(&a).unwrap()).unwrap();
+        assert!(crate::util::max_abs_diff(proj.data(), a.data()) < 1e-10);
+    }
+}

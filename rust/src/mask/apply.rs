@@ -1,0 +1,163 @@
+//! Applying and removing masks (paper §3.2 Step 2 and §3.3 Step 4).
+//!
+//! `mask_matrix` computes a user's local share `X'ᵢ = P·Xᵢ·Qᵢ` with block
+//! products only — O(m·nᵢ·b) work (the paper's "O(mn)" for fixed b),
+//! versus O(m²nᵢ + m·nᵢ·n) dense. `unmask_u` removes the left mask from
+//! the CSP's result, `U = PᵀU'`, again blockwise.
+
+use super::block_diag::{BlockDiagMat, BlockDiagSlice};
+use crate::linalg::Mat;
+use crate::util::{Error, Result};
+
+/// `X'ᵢ = P · Xᵢ · Qᵢ` — the masking product every user runs in Step 2.
+///
+/// `p` is the m×m block-diagonal left mask, `qi` the user's row slice of
+/// the n×n right mask. The result is m×n (full width: `Xᵢ·Qᵢ` scatters the
+/// user's columns across all of Q's column space, which is what makes the
+/// CSP-side sum `Σᵢ X'ᵢ = P X Q` work, Eq. 4).
+pub fn mask_matrix(p: &BlockDiagMat, xi: &Mat, qi: &BlockDiagSlice) -> Result<Mat> {
+    if xi.rows() != p.dim() {
+        return Err(Error::Shape(format!(
+            "mask: X has {} rows, P is {}×{}",
+            xi.rows(),
+            p.dim(),
+            p.dim()
+        )));
+    }
+    if xi.cols() != qi.rows() {
+        return Err(Error::Shape(format!(
+            "mask: X has {} cols, Qᵢ has {} rows",
+            xi.cols(),
+            qi.rows()
+        )));
+    }
+    // (P·Xᵢ)·Qᵢ: left product shrinks nothing; do P first (row panels),
+    // then scatter through the sparse Qᵢ.
+    let pxi = p.mul_dense(xi)?;
+    qi.rmul_dense(&pxi)
+}
+
+/// `U = Pᵀ·U'` — removing the left mask from the CSP's singular vectors.
+pub fn unmask_u(p: &BlockDiagMat, u_masked: &Mat) -> Result<Mat> {
+    if u_masked.rows() != p.dim() {
+        return Err(Error::Shape(format!(
+            "unmask_u: U' has {} rows, P is {}×{}",
+            u_masked.rows(),
+            p.dim(),
+            p.dim()
+        )));
+    }
+    p.transpose().mul_dense(u_masked)
+}
+
+/// `y' = P·y` — masking the label vector in FedSVD-LR (paper §4).
+pub fn mask_vector(p: &BlockDiagMat, y: &[f64]) -> Result<Vec<f64>> {
+    if y.len() != p.dim() {
+        return Err(Error::Shape(format!(
+            "mask_vector: len {} vs P dim {}",
+            y.len(),
+            p.dim()
+        )));
+    }
+    let ym = Mat::from_vec(y.len(), 1, y.to_vec())?;
+    Ok(p.mul_dense(&ym)?.into_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::mask::orthogonal::block_orthogonal;
+    use crate::rng::Xoshiro256;
+    use crate::util::max_abs_diff;
+
+    #[test]
+    fn masking_matches_dense_formula() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let (m, n) = (8, 10);
+        let p = block_orthogonal(m, 3, 11).unwrap();
+        let q = block_orthogonal(n, 4, 12).unwrap();
+        // user owns columns 2..7
+        let qi = q.row_slice(2, 7).unwrap();
+        let xi = Mat::gaussian(m, 5, &mut rng);
+
+        let fast = mask_matrix(&p, &xi, &qi).unwrap();
+        let slow = matmul(
+            &matmul(&p.to_dense(), &xi).unwrap(),
+            &qi.to_dense(),
+        )
+        .unwrap();
+        assert!(max_abs_diff(fast.data(), slow.data()) < 1e-11);
+        assert_eq!(fast.shape(), (m, n));
+    }
+
+    #[test]
+    fn sum_of_user_shares_equals_pxq() {
+        // Eq. (4): Σᵢ P Xᵢ Qᵢ = P X Q
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let (m, n) = (6, 9);
+        let p = block_orthogonal(m, 2, 21).unwrap();
+        let q = block_orthogonal(n, 3, 22).unwrap();
+        let x = Mat::gaussian(m, n, &mut rng);
+
+        // three users with ragged widths 4, 2, 3
+        let bounds = [0usize, 4, 6, 9];
+        let mut sum = Mat::zeros(m, n);
+        for w in 0..3 {
+            let xi = x.slice(0, m, bounds[w], bounds[w + 1]);
+            let qi = q.row_slice(bounds[w], bounds[w + 1]).unwrap();
+            let share = mask_matrix(&p, &xi, &qi).unwrap();
+            sum.add_assign(&share).unwrap();
+        }
+        let expect = q
+            .rmul_dense(&p.mul_dense(&x).unwrap())
+            .unwrap();
+        assert!(max_abs_diff(sum.data(), expect.data()) < 1e-11);
+    }
+
+    #[test]
+    fn unmask_u_inverts_left_mask() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let m = 7;
+        let p = block_orthogonal(m, 3, 31).unwrap();
+        let u = Mat::gaussian(m, 4, &mut rng);
+        let masked = p.mul_dense(&u).unwrap();
+        let back = unmask_u(&p, &masked).unwrap();
+        assert!(max_abs_diff(back.data(), u.data()) < 1e-11);
+    }
+
+    #[test]
+    fn mask_vector_matches_dense() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let p = block_orthogonal(6, 4, 41).unwrap();
+        let y: Vec<f64> = (0..6).map(|_| rng.next_gaussian()).collect();
+        let fast = mask_vector(&p, &y).unwrap();
+        let ym = Mat::from_vec(6, 1, y.clone()).unwrap();
+        let slow = matmul(&p.to_dense(), &ym).unwrap();
+        assert!(max_abs_diff(&fast, slow.data()) < 1e-12);
+    }
+
+    #[test]
+    fn masking_preserves_frobenius_norm() {
+        // P, Q orthogonal ⇒ ‖PXQ‖_F = ‖X‖_F (the "no inflation" property)
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let (m, n) = (10, 12);
+        let p = block_orthogonal(m, 5, 51).unwrap();
+        let q = block_orthogonal(n, 5, 52).unwrap();
+        let x = Mat::gaussian(m, n, &mut rng);
+        let qi = q.row_slice(0, n).unwrap();
+        let masked = mask_matrix(&p, &x, &qi).unwrap();
+        assert!((masked.fro_norm() - x.fro_norm()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let p = block_orthogonal(4, 2, 61).unwrap();
+        let q = block_orthogonal(6, 2, 62).unwrap();
+        let qi = q.row_slice(0, 3).unwrap();
+        assert!(mask_matrix(&p, &Mat::zeros(5, 3), &qi).is_err()); // bad rows
+        assert!(mask_matrix(&p, &Mat::zeros(4, 2), &qi).is_err()); // bad cols
+        assert!(unmask_u(&p, &Mat::zeros(3, 2)).is_err());
+        assert!(mask_vector(&p, &[0.0; 3]).is_err());
+    }
+}

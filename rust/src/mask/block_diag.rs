@@ -1,0 +1,401 @@
+//! Block-diagonal matrices and their row slices.
+//!
+//! Algorithm 2 builds masks as square orthogonal blocks placed on the
+//! diagonal. All the paper's complexity wins (O(b²n) generation, O(mn)
+//! masking, O(nᵢ) recovery) come from never materializing the zeros.
+
+use crate::linalg::{Mat, matmul};
+use crate::util::{Error, Result};
+
+/// A square block-diagonal matrix: `dim × dim`, blocks on the diagonal.
+#[derive(Clone, Debug)]
+pub struct BlockDiagMat {
+    dim: usize,
+    /// Start offset of each block; `starts[i] + blocks[i].rows()` is the
+    /// start of block i+1.
+    starts: Vec<usize>,
+    blocks: Vec<Mat>,
+}
+
+impl BlockDiagMat {
+    /// Assemble from square blocks (sizes may be ragged).
+    pub fn from_blocks(blocks: Vec<Mat>) -> Result<Self> {
+        let mut starts = Vec::with_capacity(blocks.len());
+        let mut off = 0usize;
+        for b in &blocks {
+            if b.rows() != b.cols() {
+                return Err(Error::Shape("block-diag blocks must be square".into()));
+            }
+            starts.push(off);
+            off += b.rows();
+        }
+        Ok(Self {
+            dim: off,
+            starts,
+            blocks,
+        })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn blocks(&self) -> &[Mat] {
+        &self.blocks
+    }
+
+    pub fn starts(&self) -> &[usize] {
+        &self.starts
+    }
+
+    /// Bytes needed to transmit the non-zero blocks (the paper's O(n)
+    /// delivery figure for Q).
+    pub fn payload_bytes(&self) -> u64 {
+        self.blocks
+            .iter()
+            .map(|b| (b.rows() * b.cols() * 8) as u64)
+            .sum()
+    }
+
+    /// Transpose (block-wise).
+    pub fn transpose(&self) -> BlockDiagMat {
+        BlockDiagMat {
+            dim: self.dim,
+            starts: self.starts.clone(),
+            blocks: self.blocks.iter().map(|b| b.transpose()).collect(),
+        }
+    }
+
+    /// Dense materialization — tests and small matrices only.
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.dim, self.dim);
+        for (s, b) in self.starts.iter().zip(&self.blocks) {
+            out.set_slice(*s, *s, b);
+        }
+        out
+    }
+
+    /// `self · X` for dense X (dim × c): per-block row-panel products,
+    /// O(b·dim·c) instead of O(dim²·c).
+    pub fn mul_dense(&self, x: &Mat) -> Result<Mat> {
+        if x.rows() != self.dim {
+            return Err(Error::Shape(format!(
+                "block-diag mul: {} vs {}x{}",
+                self.dim,
+                x.rows(),
+                x.cols()
+            )));
+        }
+        let mut out = Mat::zeros(x.rows(), x.cols());
+        for (s, b) in self.starts.iter().zip(&self.blocks) {
+            let panel = x.slice(*s, *s + b.rows(), 0, x.cols());
+            let prod = matmul(b, &panel)?;
+            out.set_slice(*s, 0, &prod);
+        }
+        Ok(out)
+    }
+
+    /// `X · self` for dense X (r × dim): per-block column-panel products.
+    pub fn rmul_dense(&self, x: &Mat) -> Result<Mat> {
+        if x.cols() != self.dim {
+            return Err(Error::Shape(format!(
+                "block-diag rmul: {}x{} vs {}",
+                x.rows(),
+                x.cols(),
+                self.dim
+            )));
+        }
+        let mut out = Mat::zeros(x.rows(), x.cols());
+        for (s, b) in self.starts.iter().zip(&self.blocks) {
+            let panel = x.slice(0, x.rows(), *s, *s + b.rows());
+            let prod = matmul(&panel, b)?;
+            out.set_slice(0, *s, &prod);
+        }
+        Ok(out)
+    }
+
+    /// Extract rows [r0, r1) as a sparse slice (user-i's `Qᵢ`).
+    ///
+    /// User boundaries need not align with block boundaries; partial
+    /// blocks become partial pieces.
+    pub fn row_slice(&self, r0: usize, r1: usize) -> Result<BlockDiagSlice> {
+        if r1 > self.dim || r0 > r1 {
+            return Err(Error::Shape("row_slice: bad range".into()));
+        }
+        let mut pieces = Vec::new();
+        for (s, b) in self.starts.iter().zip(&self.blocks) {
+            let b_end = s + b.rows();
+            let lo = r0.max(*s);
+            let hi = r1.min(b_end);
+            if lo < hi {
+                // rows lo..hi of this block, all of its columns
+                let sub = b.slice(lo - s, hi - s, 0, b.cols());
+                pieces.push(SlicePiece {
+                    local_row: lo - r0,
+                    global_col: *s,
+                    mat: sub,
+                });
+            }
+        }
+        Ok(BlockDiagSlice {
+            rows: r1 - r0,
+            cols: self.dim,
+            pieces,
+        })
+    }
+
+    /// Block inverse: invert each diagonal block (O(b³·n/b) = O(n) for
+    /// fixed b — the paper's Rᵢ⁻¹ complexity claim).
+    pub fn inverse(&self) -> Result<BlockDiagMat> {
+        let blocks = self
+            .blocks
+            .iter()
+            .map(crate::linalg::lu::inverse)
+            .collect::<Result<Vec<_>>>()?;
+        BlockDiagMat::from_blocks(blocks)
+    }
+}
+
+/// One non-zero piece of a row slice of a block-diagonal matrix.
+#[derive(Clone, Debug)]
+pub struct SlicePiece {
+    /// First row of the piece within the slice.
+    pub local_row: usize,
+    /// First column of the piece in the full matrix.
+    pub global_col: usize,
+    pub mat: Mat,
+}
+
+/// Rows [r0, r1) of a [`BlockDiagMat`]: the per-user mask share `Qᵢ`
+/// (rows × dim, stored sparsely as pieces).
+#[derive(Clone, Debug)]
+pub struct BlockDiagSlice {
+    rows: usize,
+    cols: usize,
+    pieces: Vec<SlicePiece>,
+}
+
+impl BlockDiagSlice {
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn pieces(&self) -> &[SlicePiece] {
+        &self.pieces
+    }
+
+    /// Wire size of the non-zero payload.
+    pub fn payload_bytes(&self) -> u64 {
+        self.pieces
+            .iter()
+            .map(|p| (p.mat.rows() * p.mat.cols() * 8) as u64)
+            .sum()
+    }
+
+    /// Piece row-extents (sizes along the slice's rows) — these define the
+    /// block structure `Rᵢ` must follow in V-recovery (paper Eq. 7).
+    pub fn piece_row_extents(&self) -> Vec<usize> {
+        self.pieces.iter().map(|p| p.mat.rows()).collect()
+    }
+
+    /// Dense materialization (tests).
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for p in &self.pieces {
+            out.set_slice(p.local_row, p.global_col, &p.mat);
+        }
+        out
+    }
+
+    /// `X · self` for dense X (r × rows): the masking product `Xᵢ·Qᵢ`,
+    /// O(r · rows · b) using only non-zero pieces.
+    pub fn rmul_dense(&self, x: &Mat) -> Result<Mat> {
+        if x.cols() != self.rows {
+            return Err(Error::Shape(format!(
+                "slice rmul: {}x{} vs {} rows",
+                x.rows(),
+                x.cols(),
+                self.rows
+            )));
+        }
+        let mut out = Mat::zeros(x.rows(), self.cols);
+        for p in &self.pieces {
+            let panel = x.slice(0, x.rows(), p.local_row, p.local_row + p.mat.rows());
+            let prod = matmul(&panel, &p.mat)?;
+            // accumulate into the global column range
+            for i in 0..prod.rows() {
+                for j in 0..prod.cols() {
+                    out[(i, p.global_col + j)] += prod[(i, j)];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// `selfᵀ · D` where D is block-diagonal with blocks matching this
+    /// slice's piece row-extents — the `QᵢᵀRᵢ` product of Eq. (7). The
+    /// result stays sparse: each piece maps to `pieceᵀ · Rblock`.
+    pub fn transpose_mul_blockdiag(&self, d: &BlockDiagMat) -> Result<BlockDiagSlice> {
+        if d.dim() != self.rows {
+            return Err(Error::Shape(format!(
+                "QᵀR: R dim {} vs slice rows {}",
+                d.dim(),
+                self.rows
+            )));
+        }
+        // R's block extents must match the piece extents
+        let extents = self.piece_row_extents();
+        let d_sizes: Vec<usize> = d.blocks().iter().map(|b| b.rows()).collect();
+        if extents != d_sizes {
+            return Err(Error::Shape(format!(
+                "QᵀR: block extents {extents:?} vs R blocks {d_sizes:?}"
+            )));
+        }
+        // Result has shape (cols × rows) = Qᵢᵀ is (n × nᵢ); pieces transpose:
+        // a piece (local_row, global_col, M) becomes (global_col-th rows,
+        // local_row-th cols) with Mᵀ·R_block.
+        let mut pieces = Vec::with_capacity(self.pieces.len());
+        for (p, rb) in self.pieces.iter().zip(d.blocks()) {
+            let prod = matmul(&p.mat.transpose(), rb)?;
+            pieces.push(SlicePiece {
+                local_row: p.global_col,
+                global_col: p.local_row,
+                mat: prod,
+            });
+        }
+        Ok(BlockDiagSlice {
+            rows: self.cols,
+            cols: self.rows,
+            pieces,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::mask::orthogonal::block_orthogonal;
+    use crate::rng::Xoshiro256;
+    use crate::util::max_abs_diff;
+
+    fn toy_bd(sizes: &[usize], seed: u64) -> BlockDiagMat {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let blocks = sizes
+            .iter()
+            .map(|&s| Mat::gaussian(s, s, &mut rng))
+            .collect();
+        BlockDiagMat::from_blocks(blocks).unwrap()
+    }
+
+    #[test]
+    fn dims_and_payload() {
+        let bd = toy_bd(&[3, 2, 4], 1);
+        assert_eq!(bd.dim(), 9);
+        assert_eq!(bd.n_blocks(), 3);
+        assert_eq!(bd.payload_bytes(), ((9 + 4 + 16) * 8) as u64);
+    }
+
+    #[test]
+    fn mul_dense_matches_dense() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let bd = toy_bd(&[3, 2, 4], 3);
+        let x = Mat::gaussian(9, 5, &mut rng);
+        let fast = bd.mul_dense(&x).unwrap();
+        let slow = matmul(&bd.to_dense(), &x).unwrap();
+        assert!(max_abs_diff(fast.data(), slow.data()) < 1e-12);
+    }
+
+    #[test]
+    fn rmul_dense_matches_dense() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let bd = toy_bd(&[2, 5], 5);
+        let x = Mat::gaussian(4, 7, &mut rng);
+        let fast = bd.rmul_dense(&x).unwrap();
+        let slow = matmul(&x, &bd.to_dense()).unwrap();
+        assert!(max_abs_diff(fast.data(), slow.data()) < 1e-12);
+    }
+
+    #[test]
+    fn transpose_matches_dense() {
+        let bd = toy_bd(&[3, 1, 2], 6);
+        let d1 = bd.transpose().to_dense();
+        let d2 = bd.to_dense().transpose();
+        assert!(max_abs_diff(d1.data(), d2.data()) == 0.0);
+    }
+
+    #[test]
+    fn row_slice_matches_dense_slice() {
+        let bd = toy_bd(&[3, 2, 4], 7);
+        // a range crossing two block boundaries
+        let s = bd.row_slice(2, 7).unwrap();
+        let dense = bd.to_dense().slice(2, 7, 0, 9);
+        assert!(max_abs_diff(s.to_dense().data(), dense.data()) == 0.0);
+        assert_eq!(s.rows(), 5);
+        assert_eq!(s.cols(), 9);
+        // pieces: rows 2..3 of block0, 3..5 = all of block1, 5..7 of block2
+        assert_eq!(s.piece_row_extents(), vec![1, 2, 2]);
+    }
+
+    #[test]
+    fn slice_rmul_matches_dense() {
+        let mut rng = Xoshiro256::seed_from_u64(8);
+        let bd = toy_bd(&[3, 2, 4], 9);
+        let s = bd.row_slice(1, 6).unwrap();
+        let x = Mat::gaussian(4, 5, &mut rng);
+        let fast = s.rmul_dense(&x).unwrap();
+        let slow = matmul(&x, &s.to_dense()).unwrap();
+        assert!(max_abs_diff(fast.data(), slow.data()) < 1e-12);
+    }
+
+    #[test]
+    fn qt_r_product_matches_dense() {
+        let mut rng = Xoshiro256::seed_from_u64(10);
+        let bd = block_orthogonal(9, 3, 11).unwrap();
+        let s = bd.row_slice(2, 8).unwrap(); // extents [1, 3, 2]
+        let r_blocks: Vec<Mat> = s
+            .piece_row_extents()
+            .iter()
+            .map(|&e| Mat::gaussian(e, e, &mut rng))
+            .collect();
+        let r = BlockDiagMat::from_blocks(r_blocks).unwrap();
+        let fast = s.transpose_mul_blockdiag(&r).unwrap();
+        let slow = matmul(&s.to_dense().transpose(), &r.to_dense()).unwrap();
+        assert!(max_abs_diff(fast.to_dense().data(), slow.data()) < 1e-12);
+    }
+
+    #[test]
+    fn qt_r_rejects_mismatched_blocks() {
+        let bd = toy_bd(&[3, 3], 12);
+        let s = bd.row_slice(0, 6).unwrap();
+        let r = toy_bd(&[2, 4], 13); // wrong split
+        assert!(s.transpose_mul_blockdiag(&r).is_err());
+    }
+
+    #[test]
+    fn inverse_blockwise() {
+        let bd = block_orthogonal(8, 3, 14).unwrap();
+        let inv = bd.inverse().unwrap();
+        let prod = matmul(&bd.to_dense(), &inv.to_dense()).unwrap();
+        assert!(max_abs_diff(prod.data(), Mat::eye(8).data()) < 1e-10);
+    }
+
+    #[test]
+    fn rejects_non_square_blocks() {
+        assert!(BlockDiagMat::from_blocks(vec![Mat::zeros(2, 3)]).is_err());
+    }
+
+    #[test]
+    fn shape_errors() {
+        let bd = toy_bd(&[2, 2], 15);
+        assert!(bd.mul_dense(&Mat::zeros(3, 2)).is_err());
+        assert!(bd.rmul_dense(&Mat::zeros(2, 3)).is_err());
+        assert!(bd.row_slice(3, 7).is_err());
+    }
+}

@@ -1,0 +1,27 @@
+//! Removable orthogonal masks — the heart of FedSVD (paper §3.1–§3.3).
+//!
+//! The protocol masks the federated matrix `X = [X₁ … X_k]` as
+//! `X' = P·X·Q` with two random orthogonal matrices. Theorem 1: the SVD of
+//! `X' = U'ΣV'ᵀ` yields the SVD of `X` exactly via `U = PᵀU'`,
+//! `Vᵀ = V'ᵀQᵀ` — the masks are *removable*, hence lossless, and the
+//! masked matrix has the same size as the raw one, hence no inflation.
+//!
+//! Submodules:
+//! * [`block_diag`] — block-diagonal matrix type (Algorithm 2 structure)
+//!   with O(mn) dense products and row-slice extraction (`Qᵢ`).
+//! * [`orthogonal`] — Algorithm 1 (Gram–Schmidt on a Gaussian matrix → a
+//!   Haar-uniform orthogonal block) and Algorithm 2 (block-diagonal
+//!   composition, O(b²n) instead of O(n³)).
+//! * [`apply`] — applying (`P·Xᵢ·Qᵢ`) and removing (`PᵀU'`) masks.
+//! * [`delivery`] — communication-efficient mask delivery: `P` as one
+//!   seed (O(1) bytes), `Q` as its non-zero blocks (O(n) bytes).
+
+pub mod block_diag;
+pub mod orthogonal;
+pub mod apply;
+pub mod delivery;
+pub mod streaming;
+
+pub use apply::{mask_matrix, unmask_u};
+pub use block_diag::{BlockDiagMat, BlockDiagSlice};
+pub use orthogonal::{block_orthogonal, random_orthogonal};

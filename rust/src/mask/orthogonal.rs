@@ -1,0 +1,185 @@
+//! Random orthogonal mask generation (paper Algorithms 1 and 2).
+
+use super::block_diag::BlockDiagMat;
+use crate::linalg::{gram_schmidt, Mat};
+use crate::rng::Xoshiro256;
+use crate::util::{Error, Result};
+
+/// Algorithm 1: a Haar-uniform random orthogonal matrix via Gram–Schmidt
+/// on an i.i.d. N(0,1) matrix (Gupta & Nagar: the Q factor of a Gaussian
+/// matrix is uniformly distributed over the orthogonal group).
+pub fn random_orthogonal(n: usize, rng: &mut Xoshiro256) -> Result<Mat> {
+    if n == 0 {
+        return Err(Error::Shape("random_orthogonal: n = 0".into()));
+    }
+    // Rank deficiency of a Gaussian matrix has probability 0; retry on the
+    // (floating-point-degenerate) off chance.
+    for _ in 0..4 {
+        let g = Mat::gaussian(n, n, rng);
+        if let Ok((q, _)) = gram_schmidt(&g) {
+            return Ok(q);
+        }
+    }
+    Err(Error::Numerical(
+        "random_orthogonal: repeated rank deficiency".into(),
+    ))
+}
+
+/// Algorithm 2: an n×n orthogonal matrix assembled from b×b orthogonal
+/// blocks on the diagonal — O(b²n) instead of O(n³).
+///
+/// Deterministic in `seed`: each block gets an independent derived stream,
+/// so the TA and users regenerate identical masks from the same seed
+/// (the paper's O(1) delivery of P, §3.2) and blocks can be produced in
+/// any order / on any machine.
+pub fn block_orthogonal(n: usize, b: usize, seed: u64) -> Result<BlockDiagMat> {
+    if n == 0 || b == 0 {
+        return Err(Error::Shape("block_orthogonal: zero size".into()));
+    }
+    let root = Xoshiro256::seed_from_u64(seed);
+    let mut blocks = Vec::with_capacity(n.div_ceil(b));
+    let mut i = 0usize;
+    let mut idx = 0u64;
+    while i < n {
+        let b_eff = b.min(n - i);
+        let mut block_rng = root.derive(idx);
+        blocks.push(random_orthogonal(b_eff, &mut block_rng)?);
+        i += b_eff;
+        idx += 1;
+    }
+    BlockDiagMat::from_blocks(blocks)
+}
+
+/// Regenerate only block `idx` of `block_orthogonal(n, b, seed)` —
+/// the streaming path used by disk offloading (§3.4: "load and use P, Q
+/// block by block") without holding the whole mask.
+pub fn block_orthogonal_single(
+    n: usize,
+    b: usize,
+    seed: u64,
+    idx: usize,
+) -> Result<(usize, Mat)> {
+    if n == 0 || b == 0 {
+        return Err(Error::Shape("block_orthogonal_single: zero size".into()));
+    }
+    let nblocks = n.div_ceil(b);
+    if idx >= nblocks {
+        return Err(Error::Shape(format!(
+            "block index {idx} out of {nblocks}"
+        )));
+    }
+    let start = idx * b;
+    let b_eff = b.min(n - start);
+    let root = Xoshiro256::seed_from_u64(seed);
+    let mut block_rng = root.derive(idx as u64);
+    Ok((start, random_orthogonal(b_eff, &mut block_rng)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::max_abs_diff;
+    use crate::util::prop::PropRunner;
+
+    #[test]
+    fn alg1_is_orthogonal() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for n in [1usize, 2, 5, 16] {
+            let q = random_orthogonal(n, &mut rng).unwrap();
+            assert!(
+                q.orthonormality_defect() < 1e-11,
+                "n={n} defect={}",
+                q.orthonormality_defect()
+            );
+        }
+    }
+
+    #[test]
+    fn alg2_is_orthogonal_including_ragged_tail() {
+        // n not a multiple of b → final block is smaller (Alg 2 line 4)
+        for (n, b) in [(10usize, 3usize), (9, 3), (7, 10), (16, 4)] {
+            let q = block_orthogonal(n, b, 42).unwrap();
+            let dense = q.to_dense();
+            assert!(
+                dense.orthonormality_defect() < 1e-11,
+                "n={n} b={b} defect={}",
+                dense.orthonormality_defect()
+            );
+            assert_eq!(q.dim(), n);
+        }
+    }
+
+    #[test]
+    fn alg2_block_count() {
+        let q = block_orthogonal(10, 3, 1).unwrap();
+        assert_eq!(q.n_blocks(), 4); // 3+3+3+1
+        assert_eq!(q.blocks()[3].rows(), 1);
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let a = block_orthogonal(12, 5, 7).unwrap().to_dense();
+        let b = block_orthogonal(12, 5, 7).unwrap().to_dense();
+        assert!(max_abs_diff(a.data(), b.data()) == 0.0);
+        let c = block_orthogonal(12, 5, 8).unwrap().to_dense();
+        assert!(max_abs_diff(a.data(), c.data()) > 1e-3);
+    }
+
+    #[test]
+    fn single_block_regeneration_matches() {
+        let full = block_orthogonal(11, 4, 99).unwrap();
+        for idx in 0..full.n_blocks() {
+            let (start, blk) = block_orthogonal_single(11, 4, 99, idx).unwrap();
+            assert_eq!(start, full.starts()[idx]);
+            assert!(max_abs_diff(blk.data(), full.blocks()[idx].data()) == 0.0);
+        }
+        assert!(block_orthogonal_single(11, 4, 99, 3).is_err());
+    }
+
+    #[test]
+    fn haar_sign_symmetry() {
+        // crude Haar check: entries of a Haar matrix are symmetric around 0
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let mut pos = 0usize;
+        let mut total = 0usize;
+        for _ in 0..30 {
+            let q = random_orthogonal(8, &mut rng).unwrap();
+            for &v in q.data() {
+                total += 1;
+                if v > 0.0 {
+                    pos += 1;
+                }
+            }
+        }
+        let frac = pos as f64 / total as f64;
+        assert!((frac - 0.5).abs() < 0.05, "sign fraction {frac}");
+    }
+
+    #[test]
+    fn prop_block_orthogonal_preserves_norms() {
+        // orthogonal ⇒ ‖Qx‖ = ‖x‖
+        PropRunner::new(0x0a7, 8).run("norm preservation", |rng| {
+            let n = 2 + rng.next_below(20) as usize;
+            let b = 1 + rng.next_below(n as u64) as usize;
+            let q = block_orthogonal(n, b, rng.next_u64()).map_err(|e| e.to_string())?;
+            let x = Mat::gaussian(n, 1, rng);
+            let qx = q.mul_dense(&x).map_err(|e| e.to_string())?;
+            let nx = x.fro_norm();
+            let nqx = qx.fro_norm();
+            prop_assert!(
+                (nx - nqx).abs() < 1e-10 * nx.max(1.0),
+                "‖x‖={nx} ‖Qx‖={nqx} (n={n}, b={b})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_sizes_rejected() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        assert!(random_orthogonal(0, &mut rng).is_err());
+        assert!(block_orthogonal(0, 3, 1).is_err());
+        assert!(block_orthogonal(3, 0, 1).is_err());
+    }
+}

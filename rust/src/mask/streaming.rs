@@ -1,0 +1,177 @@
+//! Streaming mask application over disk-offloaded matrices
+//! (paper §3.4 ∘ §3.2: "load and use P, Q block by block").
+//!
+//! For matrices too large for RAM, the user's Step-2 product
+//! `X'ᵢ = P·Xᵢ·Qᵢ` is computed with bounded memory:
+//!
+//! * `Xᵢ` lives in a [`FileMat`] (row-major — the access pattern is row
+//!   panels matching P's blocks);
+//! * P's blocks are **regenerated from the seed one at a time**
+//!   ([`block_orthogonal_single`]) — never materialized together;
+//! * each P-block row panel is masked and immediately written to the
+//!   output file; peak residency is one panel + one block.
+
+use super::block_diag::BlockDiagSlice;
+use super::orthogonal::block_orthogonal_single;
+use crate::linalg::{Mat, MatKernel};
+use crate::storage::filemap::{FileMat, Layout};
+use crate::util::{Error, Result};
+use std::path::Path;
+
+/// Compute `P·Xᵢ·Qᵢ` where `Xᵢ` is file-backed, writing the masked result
+/// to `out_path`. `p_seed`/`p_block` regenerate P block-by-block; `qi` is
+/// the (sparse, small) right-mask slice held in memory.
+///
+/// Returns the file-backed masked share plus the peak resident bytes
+/// (for the Opt3 memory accounting).
+pub fn mask_offloaded(
+    x: &FileMat,
+    p_seed: u64,
+    p_block: usize,
+    qi: &BlockDiagSlice,
+    out_path: &Path,
+    kernel: &dyn MatKernel,
+) -> Result<(FileMat, u64)> {
+    let m = x.rows();
+    let ni = x.cols();
+    if qi.rows() != ni {
+        return Err(Error::Shape(format!(
+            "mask_offloaded: X has {ni} cols, Qᵢ has {} rows",
+            qi.rows()
+        )));
+    }
+    if p_block == 0 || m == 0 {
+        return Err(Error::Shape("mask_offloaded: empty".into()));
+    }
+    let n = qi.cols();
+    let out = FileMat::create(out_path, m, n, Layout::RowMajor)?;
+    let n_blocks = m.div_ceil(p_block);
+    let mut peak_bytes = 0u64;
+
+    for idx in 0..n_blocks {
+        // regenerate exactly one P block from the seed (O(b³) work, O(b²) mem)
+        let (start, blk) = block_orthogonal_single(m, p_block, p_seed, idx)?;
+        let rows = blk.rows();
+        // stream the matching row panel of X
+        let panel = x.read_row_block(start, start + rows)?;
+        // (P_b · panel) · Qᵢ  — the panel-local masking product
+        let pb_panel = kernel.matmul(&blk, &panel)?;
+        let masked = scatter_right(&pb_panel, qi, kernel)?;
+        out.write_row_block(start, &masked)?;
+
+        let resident =
+            ((blk.rows() * blk.cols() + panel.rows() * panel.cols() + masked.rows() * masked.cols())
+                * 8) as u64;
+        peak_bytes = peak_bytes.max(resident);
+    }
+    Ok((out, peak_bytes))
+}
+
+/// `Y·Qᵢ` through the sparse slice pieces (same math as
+/// `BlockDiagSlice::rmul_dense` but routed through the pluggable kernel).
+fn scatter_right(y: &Mat, qi: &BlockDiagSlice, kernel: &dyn MatKernel) -> Result<Mat> {
+    let mut out = Mat::zeros(y.rows(), qi.cols());
+    for p in qi.pieces() {
+        let panel = y.slice(0, y.rows(), p.local_row, p.local_row + p.mat.rows());
+        let prod = kernel.matmul(&panel, &p.mat)?;
+        for i in 0..prod.rows() {
+            for j in 0..prod.cols() {
+                out[(i, p.global_col + j)] += prod[(i, j)];
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::NativeKernel;
+    use crate::mask::apply::mask_matrix;
+    use crate::mask::orthogonal::block_orthogonal;
+    use crate::rng::Xoshiro256;
+    use crate::util::max_abs_diff;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("fedsvd_streaming_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn streaming_matches_in_memory_masking() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let (m, n, b) = (20usize, 15usize, 4usize);
+        let p_seed = 777u64;
+        let p = block_orthogonal(m, b, p_seed).unwrap();
+        let q = block_orthogonal(n, 5, 778).unwrap();
+        let qi = q.row_slice(3, 12).unwrap(); // user owns cols 3..12
+        let xi = Mat::gaussian(m, 9, &mut rng);
+
+        // in-memory reference
+        let expect = mask_matrix(&p, &xi, &qi).unwrap();
+
+        // streaming path
+        let xfile = FileMat::from_mat(&tmp("x.bin"), &xi, Layout::RowMajor).unwrap();
+        let (masked, peak) = mask_offloaded(
+            &xfile,
+            p_seed,
+            b,
+            &qi,
+            &tmp("masked.bin"),
+            &NativeKernel,
+        )
+        .unwrap();
+        let got = masked.to_mat().unwrap();
+        assert!(
+            max_abs_diff(got.data(), expect.data()) < 1e-12,
+            "streaming vs in-memory diff {}",
+            max_abs_diff(got.data(), expect.data())
+        );
+        assert!(peak > 0);
+    }
+
+    #[test]
+    fn peak_memory_bounded_by_panel_not_matrix() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let (m, b) = (64usize, 4usize);
+        let q = block_orthogonal(10, 5, 9).unwrap();
+        let qi = q.row_slice(0, 10).unwrap();
+        let xi = Mat::gaussian(m, 10, &mut rng);
+        let xfile = FileMat::from_mat(&tmp("x2.bin"), &xi, Layout::RowMajor).unwrap();
+        let (_, peak) = mask_offloaded(&xfile, 3, b, &qi, &tmp("m2.bin"), &NativeKernel)
+            .unwrap();
+        let full_bytes = (m * 10 * 8) as u64;
+        assert!(
+            peak < full_bytes,
+            "peak {peak} should be below whole-matrix {full_bytes}"
+        );
+    }
+
+    #[test]
+    fn ragged_final_p_block_handled() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let (m, b) = (10usize, 4usize); // 4+4+2 blocks
+        let q = block_orthogonal(6, 3, 11).unwrap();
+        let qi = q.row_slice(0, 6).unwrap();
+        let xi = Mat::gaussian(m, 6, &mut rng);
+        let p = block_orthogonal(m, b, 5).unwrap();
+        let expect = mask_matrix(&p, &xi, &qi).unwrap();
+        let xfile = FileMat::from_mat(&tmp("x3.bin"), &xi, Layout::RowMajor).unwrap();
+        let (masked, _) =
+            mask_offloaded(&xfile, 5, b, &qi, &tmp("m3.bin"), &NativeKernel).unwrap();
+        assert!(max_abs_diff(masked.to_mat().unwrap().data(), expect.data()) < 1e-12);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let q = block_orthogonal(6, 3, 1).unwrap();
+        let qi = q.row_slice(0, 6).unwrap();
+        let x = Mat::zeros(4, 5); // 5 cols ≠ qi.rows()=6
+        let xfile = FileMat::from_mat(&tmp("x4.bin"), &x, Layout::RowMajor).unwrap();
+        assert!(
+            mask_offloaded(&xfile, 1, 2, &qi, &tmp("m4.bin"), &NativeKernel).is_err()
+        );
+    }
+}

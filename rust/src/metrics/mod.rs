@@ -1,0 +1,205 @@
+//! Phase timing, memory gauges and experiment reporting.
+//!
+//! Every experiment in EXPERIMENTS.md is produced through a
+//! [`MetricsRecorder`]: named phases with wall time, simulated network
+//! time folded in from [`crate::net::NetSim`], a peak-memory gauge (both
+//! an in-process logical gauge and the kernel's VmHWM), and a tabular
+//! printer shared by benches.
+
+use std::time::Instant;
+
+/// One completed phase.
+#[derive(Debug, Clone)]
+pub struct Phase {
+    pub name: String,
+    pub wall_s: f64,
+    pub net_s: f64,
+    pub bytes: u64,
+}
+
+/// Records phases of one experiment run.
+#[derive(Debug, Default)]
+pub struct MetricsRecorder {
+    phases: Vec<Phase>,
+    open: Option<(String, Instant, f64, u64)>,
+    /// logical bytes currently "resident" as declared by the caller
+    mem_gauge: u64,
+    mem_peak: u64,
+}
+
+impl MetricsRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Begin a named phase; `net_baseline`/`bytes_baseline` are the network
+    /// meters at phase start (pass the live values from NetSim).
+    pub fn begin(&mut self, name: &str, net_baseline_s: f64, bytes_baseline: u64) {
+        assert!(self.open.is_none(), "phase {name}: previous phase still open");
+        self.open = Some((name.to_string(), Instant::now(), net_baseline_s, bytes_baseline));
+    }
+
+    /// End the open phase with the network meters at phase end.
+    pub fn end(&mut self, net_now_s: f64, bytes_now: u64) {
+        let (name, start, net0, bytes0) = self.open.take().expect("no open phase");
+        self.phases.push(Phase {
+            name,
+            wall_s: start.elapsed().as_secs_f64(),
+            net_s: net_now_s - net0,
+            bytes: bytes_now - bytes0,
+        });
+    }
+
+    /// Convenience for phases with no network activity.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        self.begin(name, 0.0, 0);
+        let out = f();
+        self.end(0.0, 0);
+        out
+    }
+
+    pub fn phases(&self) -> &[Phase] {
+        &self.phases
+    }
+
+    pub fn total_wall_s(&self) -> f64 {
+        self.phases.iter().map(|p| p.wall_s).sum()
+    }
+
+    pub fn total_net_s(&self) -> f64 {
+        self.phases.iter().map(|p| p.net_s).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.phases.iter().map(|p| p.bytes).sum()
+    }
+
+    /// Wall + simulated network = the end-to-end figure the paper reports.
+    pub fn total_elapsed_s(&self) -> f64 {
+        self.total_wall_s() + self.total_net_s()
+    }
+
+    /// Declare `bytes` allocated in the logical memory gauge.
+    pub fn mem_alloc(&mut self, bytes: u64) {
+        self.mem_gauge += bytes;
+        self.mem_peak = self.mem_peak.max(self.mem_gauge);
+    }
+
+    /// Declare `bytes` released.
+    pub fn mem_free(&mut self, bytes: u64) {
+        self.mem_gauge = self.mem_gauge.saturating_sub(bytes);
+    }
+
+    /// Peak of the logical gauge.
+    pub fn mem_peak(&self) -> u64 {
+        self.mem_peak
+    }
+
+    /// Render a fixed-width table of phases for experiment logs.
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<28} {:>12} {:>12} {:>14}\n",
+            "phase", "wall", "network", "bytes"
+        ));
+        for p in &self.phases {
+            out.push_str(&format!(
+                "{:<28} {:>12} {:>12} {:>14}\n",
+                p.name,
+                crate::util::human_secs(p.wall_s),
+                crate::util::human_secs(p.net_s),
+                crate::util::human_bytes(p.bytes)
+            ));
+        }
+        out.push_str(&format!(
+            "{:<28} {:>12} {:>12} {:>14}\n",
+            "TOTAL",
+            crate::util::human_secs(self.total_wall_s()),
+            crate::util::human_secs(self.total_net_s()),
+            crate::util::human_bytes(self.total_bytes())
+        ));
+        out
+    }
+}
+
+/// Kernel-reported peak RSS of this process (VmHWM), in bytes.
+/// Returns 0 when /proc is unavailable.
+pub fn process_peak_rss_bytes() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_accumulate() {
+        let mut m = MetricsRecorder::new();
+        m.begin("a", 0.0, 0);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        m.end(0.5, 100);
+        m.begin("b", 0.5, 100);
+        m.end(0.75, 300);
+        assert_eq!(m.phases().len(), 2);
+        assert!(m.phases()[0].wall_s >= 0.004);
+        assert!((m.phases()[0].net_s - 0.5).abs() < 1e-12);
+        assert_eq!(m.phases()[1].bytes, 200);
+        assert!((m.total_net_s() - 0.75).abs() < 1e-12);
+        assert_eq!(m.total_bytes(), 300);
+    }
+
+    #[test]
+    fn time_helper_returns_value() {
+        let mut m = MetricsRecorder::new();
+        let v = m.time("compute", || 41 + 1);
+        assert_eq!(v, 42);
+        assert_eq!(m.phases().len(), 1);
+    }
+
+    #[test]
+    fn memory_gauge_tracks_peak() {
+        let mut m = MetricsRecorder::new();
+        m.mem_alloc(100);
+        m.mem_alloc(250);
+        m.mem_free(300);
+        m.mem_alloc(10);
+        assert_eq!(m.mem_peak(), 350);
+    }
+
+    #[test]
+    #[should_panic(expected = "previous phase still open")]
+    fn double_begin_panics() {
+        let mut m = MetricsRecorder::new();
+        m.begin("a", 0.0, 0);
+        m.begin("b", 0.0, 0);
+    }
+
+    #[test]
+    fn peak_rss_readable_on_linux() {
+        let rss = process_peak_rss_bytes();
+        assert!(rss > 0, "VmHWM should be readable in CI");
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut m = MetricsRecorder::new();
+        m.time("phase-x", || ());
+        let t = m.table();
+        assert!(t.contains("phase-x"));
+        assert!(t.contains("TOTAL"));
+    }
+}

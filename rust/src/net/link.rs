@@ -1,0 +1,240 @@
+//! Byte-metered link simulation with a round-structured latency model.
+
+use std::collections::HashMap;
+
+/// A logical protocol participant (TA, CSP, or user-i).
+pub type PartyId = usize;
+
+/// Reserved ids used by the FedSVD protocol wiring.
+pub const TA: PartyId = 0;
+pub const CSP: PartyId = 1;
+/// First user id; user-i is `USER_BASE + i`.
+pub const USER_BASE: PartyId = 2;
+
+/// Bandwidth/latency of every (symmetric) link in the star topology.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    /// Bits per second.
+    pub bandwidth_bps: f64,
+    /// Round-trip time in seconds.
+    pub rtt_s: f64,
+}
+
+impl Default for LinkSpec {
+    fn default() -> Self {
+        super::presets::paper_default()
+    }
+}
+
+/// Per-party transfer counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TransferStats {
+    pub bytes_sent: u64,
+    pub bytes_received: u64,
+    pub messages: u64,
+}
+
+/// The in-process network simulator.
+///
+/// Usage: wrap each batch of logically-concurrent messages in
+/// [`NetSim::begin_round`] / [`NetSim::end_round`]; `send` meters bytes.
+/// Messages outside an explicit round are treated as their own round.
+#[derive(Debug, Default)]
+pub struct NetSim {
+    spec: LinkSpec,
+    per_party: HashMap<PartyId, TransferStats>,
+    total_bytes: u64,
+    total_messages: u64,
+    rounds: u64,
+    sim_elapsed_s: f64,
+    // open-round state
+    in_round: bool,
+    round_max_bytes: u64,
+    /// per-(sender) bytes in the open round (concurrent senders overlap)
+    round_sender_bytes: HashMap<PartyId, u64>,
+}
+
+impl NetSim {
+    pub fn new(spec: LinkSpec) -> Self {
+        Self {
+            spec,
+            ..Default::default()
+        }
+    }
+
+    pub fn spec(&self) -> LinkSpec {
+        self.spec
+    }
+
+    /// Start a group of concurrent messages.
+    pub fn begin_round(&mut self) {
+        assert!(!self.in_round, "begin_round: round already open");
+        self.in_round = true;
+        self.round_max_bytes = 0;
+        self.round_sender_bytes.clear();
+    }
+
+    /// Close the round: charge `max-per-sender bytes / bw + RTT`.
+    pub fn end_round(&mut self) {
+        assert!(self.in_round, "end_round: no open round");
+        self.in_round = false;
+        self.rounds += 1;
+        let max_bytes = self
+            .round_sender_bytes
+            .values()
+            .cloned()
+            .max()
+            .unwrap_or(0)
+            .max(self.round_max_bytes);
+        self.sim_elapsed_s += max_bytes as f64 * 8.0 / self.spec.bandwidth_bps + self.spec.rtt_s;
+    }
+
+    /// Meter one message of `bytes` from `from` to `to`.
+    pub fn send(&mut self, from: PartyId, to: PartyId, bytes: u64) {
+        let implicit = !self.in_round;
+        if implicit {
+            self.begin_round();
+        }
+        self.total_bytes += bytes;
+        self.total_messages += 1;
+        self.per_party.entry(from).or_default().bytes_sent += bytes;
+        self.per_party.entry(from).or_default().messages += 1;
+        self.per_party.entry(to).or_default().bytes_received += bytes;
+        *self.round_sender_bytes.entry(from).or_insert(0) += bytes;
+        if implicit {
+            self.end_round();
+        }
+    }
+
+    /// Meter a broadcast (same payload to many receivers; sender serializes).
+    pub fn broadcast(&mut self, from: PartyId, tos: &[PartyId], bytes: u64) {
+        let implicit = !self.in_round;
+        if implicit {
+            self.begin_round();
+        }
+        for &to in tos {
+            self.send(from, to, bytes);
+        }
+        if implicit {
+            self.end_round();
+        }
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.total_bytes
+    }
+
+    pub fn total_messages(&self) -> u64 {
+        self.total_messages
+    }
+
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    /// Simulated wall time spent in the network so far.
+    pub fn sim_elapsed_s(&self) -> f64 {
+        self.sim_elapsed_s
+    }
+
+    pub fn party(&self, id: PartyId) -> TransferStats {
+        self.per_party.get(&id).cloned().unwrap_or_default()
+    }
+
+    /// Re-price the recorded traffic under a different link without
+    /// replaying the protocol (bandwidth sweeps in Fig. 5c/6b): time scales
+    /// as `recorded_serialization · (bw_old/bw_new) + rounds · rtt_new`.
+    pub fn reprice(&self, new_spec: LinkSpec) -> f64 {
+        let serialization = self.sim_elapsed_s - self.rounds as f64 * self.spec.rtt_s;
+        serialization * (self.spec.bandwidth_bps / new_spec.bandwidth_bps)
+            + self.rounds as f64 * new_spec.rtt_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec_1gbps() -> LinkSpec {
+        LinkSpec {
+            bandwidth_bps: 1e9,
+            rtt_s: 0.05,
+        }
+    }
+
+    #[test]
+    fn single_send_counts() {
+        let mut net = NetSim::new(spec_1gbps());
+        net.send(TA, CSP, 1000);
+        assert_eq!(net.total_bytes(), 1000);
+        assert_eq!(net.total_messages(), 1);
+        assert_eq!(net.rounds(), 1);
+        assert_eq!(net.party(TA).bytes_sent, 1000);
+        assert_eq!(net.party(CSP).bytes_received, 1000);
+        // 8000 bits / 1e9 bps + 0.05
+        assert!((net.sim_elapsed_s() - (8e3 / 1e9 + 0.05)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn concurrent_round_takes_max() {
+        let mut net = NetSim::new(spec_1gbps());
+        net.begin_round();
+        net.send(USER_BASE, CSP, 4000);
+        net.send(USER_BASE + 1, CSP, 1000);
+        net.end_round();
+        assert_eq!(net.rounds(), 1);
+        // slowest sender: 4000 bytes
+        assert!((net.sim_elapsed_s() - (4000.0 * 8.0 / 1e9 + 0.05)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sequential_sends_accumulate_rtt() {
+        let mut net = NetSim::new(spec_1gbps());
+        net.send(TA, CSP, 10);
+        net.send(CSP, TA, 10);
+        assert_eq!(net.rounds(), 2);
+        assert!(net.sim_elapsed_s() > 0.1 - 1e-9); // 2 × 50 ms RTT dominates
+    }
+
+    #[test]
+    fn same_sender_in_round_serializes() {
+        let mut net = NetSim::new(spec_1gbps());
+        net.begin_round();
+        net.send(TA, USER_BASE, 1000);
+        net.send(TA, USER_BASE + 1, 1000); // same sender → serialize
+        net.end_round();
+        assert!((net.sim_elapsed_s() - (2000.0 * 8.0 / 1e9 + 0.05)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn broadcast_meters_each_receiver() {
+        let mut net = NetSim::new(spec_1gbps());
+        net.broadcast(TA, &[USER_BASE, USER_BASE + 1, USER_BASE + 2], 500);
+        assert_eq!(net.total_messages(), 3);
+        assert_eq!(net.total_bytes(), 1500);
+        assert_eq!(net.party(TA).bytes_sent, 1500);
+        assert_eq!(net.rounds(), 1);
+    }
+
+    #[test]
+    fn reprice_scales_serialization_and_latency() {
+        let mut net = NetSim::new(spec_1gbps());
+        net.send(TA, CSP, 125_000_000); // 1 Gb → 1 s serialization + 50 ms
+        let t_orig = net.sim_elapsed_s();
+        assert!((t_orig - 1.05).abs() < 1e-9);
+        // half the bandwidth, double the latency
+        let repriced = net.reprice(LinkSpec {
+            bandwidth_bps: 0.5e9,
+            rtt_s: 0.1,
+        });
+        assert!((repriced - (2.0 + 0.1)).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "round already open")]
+    fn nested_rounds_panic() {
+        let mut net = NetSim::new(spec_1gbps());
+        net.begin_round();
+        net.begin_round();
+    }
+}

@@ -1,0 +1,47 @@
+//! Simulated federated network.
+//!
+//! The paper evaluates inside Docker containers with an emulated
+//! bandwidth/latency bridge (Appendix A; Tab. 2 uses 1 Gb/s and RTT 50 ms).
+//! We reproduce the same cost model in-process: every protocol message is
+//! metered (bytes, sender, receiver), messages that happen concurrently
+//! are grouped into *rounds*, and simulated network time is
+//!
+//! `elapsed = Σ_rounds ( max_bytes_in_round · 8 / bandwidth + RTT )`
+//!
+//! which is exactly the serialization + propagation model `tc`-shaped
+//! links expose to an application that waits for the slowest peer in each
+//! communication round. Fig. 5(b,c,d,f) and Fig. 6(b,c) read their
+//! numbers from these meters.
+
+pub mod link;
+
+pub use link::{LinkSpec, NetSim, PartyId, TransferStats};
+
+/// Standard link presets used across benches (paper defaults).
+pub mod presets {
+    use super::LinkSpec;
+
+    /// Tab. 2 setting: 1 Gb/s, RTT 50 ms.
+    pub fn paper_default() -> LinkSpec {
+        LinkSpec {
+            bandwidth_bps: 1e9,
+            rtt_s: 0.050,
+        }
+    }
+
+    /// LAN-ish: 10 Gb/s, RTT 1 ms.
+    pub fn lan() -> LinkSpec {
+        LinkSpec {
+            bandwidth_bps: 10e9,
+            rtt_s: 0.001,
+        }
+    }
+
+    /// WAN-ish: 100 Mb/s, RTT 100 ms.
+    pub fn wan() -> LinkSpec {
+        LinkSpec {
+            bandwidth_bps: 100e6,
+            rtt_s: 0.100,
+        }
+    }
+}

@@ -1,0 +1,622 @@
+//! The 4-step FedSVD orchestration (paper §3, Fig. 3).
+
+use super::v_recovery;
+use crate::linalg::{randomized_svd, svd, Mat, MatKernel, NativeKernel, SvdResult};
+use crate::mask::block_diag::{BlockDiagMat, BlockDiagSlice};
+use crate::mask::delivery::{dense_delivery_bytes, SeedDelivery, SliceDelivery};
+use crate::mask::orthogonal::random_orthogonal;
+use crate::metrics::MetricsRecorder;
+use crate::net::link::{CSP, TA, USER_BASE};
+use crate::net::{LinkSpec, NetSim};
+use crate::rng::Xoshiro256;
+use crate::secagg::{minibatch, SecAggGroup};
+use crate::util::{Error, Result};
+
+/// Which decomposition the CSP runs in Step 3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SvdMode {
+    /// Full lossless SVD (Jacobi) — the SVD-task experiments.
+    Full,
+    /// Randomized truncated SVD with `rank` components — PCA / LSA mode.
+    Truncated { rank: usize },
+}
+
+/// The paper's three optimization families (Fig. 7 ablation switches).
+#[derive(Debug, Clone, Copy)]
+pub struct OptFlags {
+    /// Opt1: block-based mask generation / masking / recovery.
+    /// Off ⇒ dense Algorithm-1 masks, dense delivery, dense products.
+    pub block_masks: bool,
+    /// Opt2: mini-batch secure aggregation (server memory bound).
+    pub minibatch_secagg: bool,
+}
+
+impl Default for OptFlags {
+    fn default() -> Self {
+        Self {
+            block_masks: true,
+            minibatch_secagg: true,
+        }
+    }
+}
+
+/// Full protocol configuration.
+#[derive(Debug, Clone)]
+pub struct FedSvdConfig {
+    /// Mask block size b (paper default 1000; scaled in tests).
+    pub block_size: usize,
+    /// Rows per secagg mini-batch (Opt2); ignored when minibatch off.
+    pub secagg_batch_rows: usize,
+    /// Simulated link (paper default 1 Gb/s, RTT 50 ms).
+    pub link: LinkSpec,
+    pub mode: SvdMode,
+    /// Root seed for every randomized piece of the protocol.
+    pub seed: u64,
+    pub opts: OptFlags,
+    /// Recover U at the users (PCA: yes; LR: no — stays at CSP).
+    pub recover_u: bool,
+    /// Run the federated Vᵢᵀ recovery (LSA/SVD: yes; PCA: no).
+    pub recover_v: bool,
+}
+
+impl Default for FedSvdConfig {
+    fn default() -> Self {
+        Self {
+            block_size: 64,
+            secagg_batch_rows: 64,
+            link: LinkSpec::default(),
+            mode: SvdMode::Full,
+            seed: 0xfed5_7d,
+            opts: OptFlags::default(),
+            recover_u: true,
+            recover_v: true,
+        }
+    }
+}
+
+/// Everything the protocol produces, including the evaluation meters.
+pub struct FedSvdOutput {
+    /// Shared result U (m×k); `None` when `recover_u` is off.
+    pub u: Option<Mat>,
+    /// Shared singular values (descending).
+    pub s: Vec<f64>,
+    /// Per-user secret result Vᵢᵀ (k×nᵢ); empty when `recover_v` is off.
+    pub v_parts: Vec<Mat>,
+    /// The masked factorization kept at the CSP (U', Σ, V'ᵀ) — exposed for
+    /// the applications (LR never ships it to users).
+    pub csp_svd: SvdResult,
+    /// Masks as seen by the users (needed by the applications' last steps).
+    pub p_mask: MaskRep,
+    pub q_slices: Vec<QSliceRep>,
+    pub metrics: MetricsRecorder,
+    pub net: NetSim,
+}
+
+/// The left mask in whichever representation the run used.
+pub enum MaskRep {
+    Block(BlockDiagMat),
+    Dense(Mat),
+}
+
+impl MaskRep {
+    /// `Pᵀ·X` for result unmasking.
+    pub fn transpose_mul(&self, x: &Mat) -> Result<Mat> {
+        match self {
+            MaskRep::Block(b) => b.transpose().mul_dense(x),
+            MaskRep::Dense(d) => d.t_mul(x),
+        }
+    }
+
+    /// `P·y` for LR label masking.
+    pub fn mul_vec(&self, y: &[f64]) -> Result<Vec<f64>> {
+        match self {
+            MaskRep::Block(b) => crate::mask::apply::mask_vector(b, y),
+            MaskRep::Dense(d) => d.mul_vec(y),
+        }
+    }
+}
+
+/// A user's share of the right mask.
+pub enum QSliceRep {
+    Block(BlockDiagSlice),
+    /// Dense Qᵢ (nᵢ×n) — the Opt1-off path.
+    Dense(Mat),
+}
+
+impl QSliceRep {
+    /// `w_i = Qᵢ·w'` — the LR parameter unmasking (paper §4).
+    pub fn mul_vec(&self, w: &[f64]) -> Result<Vec<f64>> {
+        match self {
+            QSliceRep::Block(s) => {
+                let wm = Mat::from_vec(w.len(), 1, w.to_vec())?;
+                // Qᵢ·w: pieces act on global rows of w
+                let mut out = vec![0.0; s.rows()];
+                for p in s.pieces() {
+                    for i in 0..p.mat.rows() {
+                        let mut acc = 0.0;
+                        for j in 0..p.mat.cols() {
+                            acc += p.mat[(i, j)] * wm[(p.global_col + j, 0)];
+                        }
+                        out[p.local_row + i] += acc;
+                    }
+                }
+                Ok(out)
+            }
+            QSliceRep::Dense(q) => q.mul_vec(w),
+        }
+    }
+}
+
+/// Run FedSVD over vertically-partitioned user parts `[X₁ … X_k]`
+/// (each m×nᵢ). Uses the native kernel; see [`run_fedsvd_with_kernel`].
+pub fn run_fedsvd(parts: &[Mat], cfg: &FedSvdConfig) -> Result<FedSvdOutput> {
+    run_fedsvd_with_kernel(parts, cfg, &NativeKernel)
+}
+
+/// Run FedSVD with an explicit tile kernel (native or PJRT-backed).
+pub fn run_fedsvd_with_kernel(
+    parts: &[Mat],
+    cfg: &FedSvdConfig,
+    kernel: &dyn MatKernel,
+) -> Result<FedSvdOutput> {
+    let k_users = parts.len();
+    if k_users == 0 {
+        return Err(Error::Protocol("no users".into()));
+    }
+    let m = parts[0].rows();
+    for p in parts {
+        if p.rows() != m {
+            return Err(Error::Shape("users disagree on m".into()));
+        }
+    }
+    let widths: Vec<usize> = parts.iter().map(|p| p.cols()).collect();
+    let n: usize = widths.iter().sum();
+    if m == 0 || n == 0 {
+        return Err(Error::Shape("empty federated matrix".into()));
+    }
+    let b = cfg.block_size.max(1);
+
+    let mut net = NetSim::new(cfg.link);
+    let mut metrics = MetricsRecorder::new();
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
+    let user_ids: Vec<usize> = (0..k_users).map(|i| USER_BASE + i).collect();
+
+    // ---- Step 1 (paper Step ❶): TA generates and delivers masks --------
+    metrics.begin("step1: mask init+delivery", net.sim_elapsed_s(), net.total_bytes());
+    let (p_mask, q_slices) = if cfg.opts.block_masks {
+        let p_seed = rng.next_u64();
+        let q_seed = rng.next_u64();
+        let p_delivery = SeedDelivery {
+            seed: p_seed,
+            dim: m,
+            block: b,
+        };
+        // TA broadcasts the P seed (O(1) per user)
+        net.begin_round();
+        for &uid in &user_ids {
+            net.send(TA, uid, p_delivery.wire_bytes());
+        }
+        net.end_round();
+        // TA builds Q once and ships each user its row slice (O(nᵢ))
+        let q = crate::mask::orthogonal::block_orthogonal(n, b, q_seed)?;
+        let mut slices = Vec::with_capacity(k_users);
+        net.begin_round();
+        let mut c0 = 0usize;
+        for (i, &w) in widths.iter().enumerate() {
+            let s = q.row_slice(c0, c0 + w)?;
+            let d = SliceDelivery { slice: s };
+            net.send(TA, user_ids[i], d.wire_bytes());
+            slices.push(d.slice);
+            c0 += w;
+        }
+        net.end_round();
+        // users expand P locally from the seed
+        let p = p_delivery.expand()?;
+        (
+            MaskRep::Block(p),
+            slices.into_iter().map(QSliceRep::Block).collect::<Vec<_>>(),
+        )
+    } else {
+        // Opt1 OFF: dense Algorithm-1 masks, O(m²+n²) delivery
+        let p = random_orthogonal(m, &mut rng)?;
+        let q = random_orthogonal(n, &mut rng)?;
+        net.begin_round();
+        for &uid in &user_ids {
+            net.send(TA, uid, dense_delivery_bytes(m));
+        }
+        net.end_round();
+        net.begin_round();
+        let mut c0 = 0usize;
+        let mut slices = Vec::with_capacity(k_users);
+        for (i, &w) in widths.iter().enumerate() {
+            // Qᵢ = rows c0..c0+w of Q
+            let qi = q.slice(c0, c0 + w, 0, n);
+            net.send(TA, user_ids[i], (w * n * 8) as u64);
+            slices.push(QSliceRep::Dense(qi));
+            c0 += w;
+        }
+        net.end_round();
+        (MaskRep::Dense(p), slices)
+    };
+    metrics.end(net.sim_elapsed_s(), net.total_bytes());
+
+    // ---- Step 2 (paper Step ❷): masking + secure aggregation ------------
+    metrics.begin("step2: mask + secagg", net.sim_elapsed_s(), net.total_bytes());
+    let shares: Vec<Mat> = parts
+        .iter()
+        .zip(&q_slices)
+        .map(|(xi, qs)| match (&p_mask, qs) {
+            (MaskRep::Block(p), QSliceRep::Block(qi)) => mask_share_block(p, xi, qi, kernel),
+            (MaskRep::Dense(p), QSliceRep::Dense(qi)) => {
+                let px = kernel.matmul(p, xi)?;
+                kernel.matmul(&px, qi)
+            }
+            _ => Err(Error::Protocol("mask representation mismatch".into())),
+        })
+        .collect::<Result<_>>()?;
+
+    let group = SecAggGroup::setup(&user_ids, CSP, &mut net, &mut rng)?;
+    let batch_rows = if cfg.opts.minibatch_secagg {
+        cfg.secagg_batch_rows.max(1)
+    } else {
+        m // whole-matrix aggregation (Opt2 off)
+    };
+    let x_masked = minibatch::aggregate_matrices(
+        &group,
+        &shares,
+        batch_rows,
+        &user_ids,
+        CSP,
+        &mut net,
+        &mut metrics,
+    )?;
+    metrics.end(net.sim_elapsed_s(), net.total_bytes());
+
+    // ---- Step 3 (paper Step ❸): CSP runs a standard SVD ----------------
+    metrics.begin("step3: CSP svd", net.sim_elapsed_s(), net.total_bytes());
+    let csp_svd = match cfg.mode {
+        SvdMode::Full => svd(&x_masked)?,
+        SvdMode::Truncated { rank } => {
+            // generous oversampling + power iterations: the paper's apps
+            // feed decaying spectra, but flat spectra must not break tests
+            randomized_svd(&x_masked, rank, rank.max(10), 6, rng.next_u64())?
+        }
+    };
+    metrics.end(net.sim_elapsed_s(), net.total_bytes());
+
+    // ---- Step 4 (paper Step ❹): result delivery + mask removal ---------
+    metrics.begin("step4: recover results", net.sim_elapsed_s(), net.total_bytes());
+    let ksv = csp_svd.s.len();
+
+    let u = if cfg.recover_u {
+        // CSP broadcasts U' and Σ to every user
+        let payload = (m * ksv * 8 + ksv * 8) as u64;
+        net.begin_round();
+        for &uid in &user_ids {
+            net.send(CSP, uid, payload);
+        }
+        net.end_round();
+        Some(p_mask.transpose_mul(&csp_svd.u)?)
+    } else {
+        None
+    };
+
+    let mut v_parts = Vec::new();
+    if cfg.recover_v {
+        // Σ still needs to reach users even without U
+        if !cfg.recover_u {
+            net.begin_round();
+            for &uid in &user_ids {
+                net.send(CSP, uid, (ksv * 8) as u64);
+            }
+            net.end_round();
+        }
+        for (i, qs) in q_slices.iter().enumerate() {
+            match qs {
+                QSliceRep::Block(qi) => {
+                    let (ri, blinded_q) = v_recovery::blind_qit(qi, &mut rng)?;
+                    net.send(user_ids[i], CSP, blinded_q.payload_bytes());
+                    let blinded_v = v_recovery::csp_blind_vit(&csp_svd.vt, &blinded_q, kernel)?;
+                    net.send(
+                        CSP,
+                        user_ids[i],
+                        (blinded_v.rows() * blinded_v.cols() * 8) as u64,
+                    );
+                    v_parts.push(v_recovery::unblind_vit(&blinded_v, &ri)?);
+                }
+                QSliceRep::Dense(qi) => {
+                    // Opt1-off path: dense Rᵢ (O(nᵢ³) — the cost the paper's
+                    // block Rᵢ removes). Functionally identical.
+                    let ni = qi.rows();
+                    let ri = loop {
+                        let cand = Mat::gaussian(ni, ni, &mut rng);
+                        if crate::linalg::lu::lu_decompose(&cand).is_ok() {
+                            break cand;
+                        }
+                    };
+                    let blinded_q = qi.transpose().mul(&ri)?;
+                    net.send(user_ids[i], CSP, (n * ni * 8) as u64);
+                    let blinded_v = kernel.matmul(&csp_svd.vt, &blinded_q)?;
+                    net.send(CSP, user_ids[i], (ksv * ni * 8) as u64);
+                    let ri_inv = crate::linalg::lu::inverse(&ri)?;
+                    v_parts.push(blinded_v.mul(&ri_inv)?);
+                }
+            }
+        }
+    }
+    metrics.end(net.sim_elapsed_s(), net.total_bytes());
+
+    Ok(FedSvdOutput {
+        u,
+        s: csp_svd.s.clone(),
+        v_parts,
+        csp_svd,
+        p_mask,
+        q_slices,
+        metrics,
+        net,
+    })
+}
+
+/// One user's Step-2 product `P·Xᵢ·Qᵢ` routed through the pluggable kernel
+/// block-by-block (this is the hot loop the PJRT tile engine accelerates).
+fn mask_share_block(
+    p: &BlockDiagMat,
+    xi: &Mat,
+    qi: &BlockDiagSlice,
+    kernel: &dyn MatKernel,
+) -> Result<Mat> {
+    // P·Xᵢ: per-block row panels
+    let mut pxi = Mat::zeros(xi.rows(), xi.cols());
+    for (s, blk) in p.starts().iter().zip(p.blocks()) {
+        let panel = xi.slice(*s, *s + blk.rows(), 0, xi.cols());
+        let prod = kernel.matmul(blk, &panel)?;
+        pxi.set_slice(*s, 0, &prod);
+    }
+    // (P·Xᵢ)·Qᵢ: per-piece column scatter
+    let mut out = Mat::zeros(xi.rows(), qi.cols());
+    for piece in qi.pieces() {
+        let panel = pxi.slice(0, pxi.rows(), piece.local_row, piece.local_row + piece.mat.rows());
+        let prod = kernel.matmul(&panel, &piece.mat)?;
+        for i in 0..prod.rows() {
+            for j in 0..prod.cols() {
+                out[(i, piece.global_col + j)] += prod[(i, j)];
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::split_columns;
+    use crate::util::{max_abs_diff, rmse};
+
+    fn join(parts: &[Mat]) -> Mat {
+        let mut x = parts[0].clone();
+        for p in &parts[1..] {
+            x = x.hcat(p).unwrap();
+        }
+        x
+    }
+
+    /// Compare singular subspaces up to per-vector sign.
+    fn aligned_diff(a: &Mat, b: &Mat, cols: bool) -> f64 {
+        // a, b hold vectors along `cols ? columns : rows`
+        let k = if cols { a.cols() } else { a.rows() };
+        let mut worst = 0.0f64;
+        for i in 0..k {
+            let (va, vb): (Vec<f64>, Vec<f64>) = if cols {
+                (a.col(i), b.col(i))
+            } else {
+                (a.row(i).to_vec(), b.row(i).to_vec())
+            };
+            let dot: f64 = va.iter().zip(&vb).map(|(x, y)| x * y).sum();
+            let sign = if dot >= 0.0 { 1.0 } else { -1.0 };
+            let d = va
+                .iter()
+                .zip(&vb)
+                .map(|(x, y)| (x - sign * y).abs())
+                .fold(0.0f64, f64::max);
+            worst = worst.max(d);
+        }
+        worst
+    }
+
+    fn check_lossless(m: usize, widths: &[usize], cfg: &FedSvdConfig) {
+        let mut rng = Xoshiro256::seed_from_u64(99);
+        let parts: Vec<Mat> = widths.iter().map(|&w| Mat::gaussian(m, w, &mut rng)).collect();
+        let x = join(&parts);
+        let out = run_fedsvd(&parts, cfg).unwrap();
+        let truth = svd(&x).unwrap();
+
+        // singular values match to machine precision (relative)
+        for (i, (a, b)) in out.s.iter().zip(&truth.s).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-9 * truth.s[0],
+                "σ{i}: {a} vs {b}"
+            );
+        }
+        // singular vectors match up to sign
+        let u = out.u.as_ref().unwrap();
+        assert!(aligned_diff(u, &truth.u, true) < 1e-8, "U mismatch");
+        let v_joined = {
+            let mut vj = out.v_parts[0].clone();
+            for p in &out.v_parts[1..] {
+                vj = vj.hcat(p).unwrap();
+            }
+            vj
+        };
+        assert!(aligned_diff(&v_joined, &truth.vt, false) < 1e-8, "V mismatch");
+
+        // reconstruction through the recovered factors
+        let rec = SvdResult {
+            u: u.clone(),
+            s: out.s.clone(),
+            vt: v_joined,
+        }
+        .reconstruct();
+        let err = rmse(rec.data(), x.data());
+        assert!(err < 1e-10, "reconstruction rmse {err}");
+    }
+
+    #[test]
+    fn lossless_two_users_default() {
+        let cfg = FedSvdConfig {
+            block_size: 5,
+            secagg_batch_rows: 4,
+            ..Default::default()
+        };
+        check_lossless(12, &[7, 6], &cfg);
+    }
+
+    #[test]
+    fn lossless_three_users_ragged() {
+        let cfg = FedSvdConfig {
+            block_size: 4,
+            secagg_batch_rows: 16,
+            ..Default::default()
+        };
+        check_lossless(10, &[5, 3, 7], &cfg);
+    }
+
+    #[test]
+    fn lossless_wide_matrix() {
+        let cfg = FedSvdConfig {
+            block_size: 6,
+            ..Default::default()
+        };
+        check_lossless(8, &[9, 8], &cfg);
+    }
+
+    #[test]
+    fn lossless_without_block_opt() {
+        let cfg = FedSvdConfig {
+            opts: OptFlags {
+                block_masks: false,
+                minibatch_secagg: false,
+            },
+            ..Default::default()
+        };
+        check_lossless(9, &[4, 5], &cfg);
+    }
+
+    #[test]
+    fn masked_matrix_reaches_csp_not_raw() {
+        // the CSP-side input differs from X (masking works) yet has the
+        // same singular values (Thm 1)
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let parts = split_columns(&Mat::gaussian(8, 10, &mut rng), 2).unwrap();
+        let x = join(&parts);
+        let out = run_fedsvd(&parts, &FedSvdConfig { block_size: 4, ..Default::default() })
+            .unwrap();
+        let truth = svd(&x).unwrap();
+        for (a, b) in out.csp_svd.s.iter().zip(&truth.s) {
+            assert!((a - b).abs() < 1e-9 * truth.s[0]);
+        }
+        // but the masked factors differ from the raw ones
+        assert!(max_abs_diff(out.csp_svd.u.data(), truth.u.data()) > 1e-3);
+    }
+
+    /// Decaying-spectrum matrix (what PCA/LSA workloads look like; flat
+    /// Gaussian spectra are the adversarial case for randomized SVD).
+    fn decaying_matrix(m: usize, n: usize, seed: u64) -> Mat {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let k = m.min(n);
+        let mut a = Mat::gaussian(m, k, &mut rng);
+        for j in 0..k {
+            let s = 1.0 / (1.0 + j as f64).powf(1.2);
+            for i in 0..m {
+                a[(i, j)] *= s;
+            }
+        }
+        let b = Mat::gaussian(k, n, &mut rng);
+        a.mul(&b).unwrap()
+    }
+
+    #[test]
+    fn truncated_mode_returns_top_r() {
+        let parts = split_columns(&decaying_matrix(20, 12, 6), 2).unwrap();
+        let cfg = FedSvdConfig {
+            block_size: 5,
+            mode: SvdMode::Truncated { rank: 3 },
+            recover_v: true,
+            ..Default::default()
+        };
+        let out = run_fedsvd(&parts, &cfg).unwrap();
+        assert_eq!(out.s.len(), 3);
+        assert_eq!(out.u.as_ref().unwrap().cols(), 3);
+        assert_eq!(out.v_parts[0].rows(), 3);
+        let truth = svd(&join(&parts)).unwrap();
+        for i in 0..3 {
+            assert!((out.s[i] - truth.s[i]).abs() < 1e-6 * truth.s[0]);
+        }
+    }
+
+    #[test]
+    fn network_is_metered() {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let parts = split_columns(&Mat::gaussian(6, 8, &mut rng), 2).unwrap();
+        let out = run_fedsvd(&parts, &FedSvdConfig { block_size: 4, ..Default::default() })
+            .unwrap();
+        assert!(out.net.total_bytes() > 0);
+        assert!(out.net.sim_elapsed_s() > 0.0);
+        assert!(out.metrics.phases().len() == 4);
+        // TA must never receive anything (paper §3.5: "TA receives nothing")
+        assert_eq!(out.net.party(TA).bytes_received, 0);
+    }
+
+    #[test]
+    fn block_opt_reduces_communication() {
+        let mut rng = Xoshiro256::seed_from_u64(8);
+        let parts = split_columns(&Mat::gaussian(24, 24, &mut rng), 2).unwrap();
+        let on = run_fedsvd(
+            &parts,
+            &FedSvdConfig { block_size: 4, ..Default::default() },
+        )
+        .unwrap();
+        let off = run_fedsvd(
+            &parts,
+            &FedSvdConfig {
+                block_size: 4,
+                opts: OptFlags {
+                    block_masks: false,
+                    minibatch_secagg: true,
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(
+            on.net.total_bytes() < off.net.total_bytes(),
+            "block masks should cut mask-delivery bytes ({} vs {})",
+            on.net.total_bytes(),
+            off.net.total_bytes()
+        );
+    }
+
+    #[test]
+    fn recover_flags_control_outputs() {
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let parts = split_columns(&Mat::gaussian(6, 6, &mut rng), 2).unwrap();
+        let cfg = FedSvdConfig {
+            block_size: 3,
+            recover_u: false,
+            recover_v: false,
+            ..Default::default()
+        };
+        let out = run_fedsvd(&parts, &cfg).unwrap();
+        assert!(out.u.is_none());
+        assert!(out.v_parts.is_empty());
+        assert!(!out.s.is_empty());
+    }
+
+    #[test]
+    fn rejects_degenerate_inputs() {
+        assert!(run_fedsvd(&[], &FedSvdConfig::default()).is_err());
+        let a = Mat::zeros(3, 2);
+        let b = Mat::zeros(4, 2);
+        assert!(run_fedsvd(&[a, b], &FedSvdConfig::default()).is_err());
+    }
+}

@@ -1,0 +1,158 @@
+//! Horizontally-partitioned FedSVD (paper §2.1).
+//!
+//! "One type of partition could be easily transferred to another through
+//! matrix transpose in SVD." Horizontal partition: parties share the
+//! feature space (columns) and own disjoint *sample rows*
+//! `X = [X₁; X₂; …; X_k]` (stacked vertically). Transposing swaps the
+//! roles of U and V: run the vertical protocol on `Xᵀ = [X₁ᵀ … X_kᵀ]`,
+//! then the *shared* factor is V (right singular vectors of X) and each
+//! party's *secret* factor is its own slice of U.
+
+use super::fedsvd::{run_fedsvd_with_kernel, FedSvdConfig, FedSvdOutput};
+use crate::linalg::{Mat, MatKernel, NativeKernel};
+use crate::util::{Error, Result};
+
+/// Result of the horizontal protocol, expressed in the original (row-
+/// partitioned) orientation.
+pub struct HorizontalOutput {
+    /// Shared right factor Vᵀ (k×n) — the paper's "shared results" swap
+    /// roles under transposition.
+    pub vt: Option<Mat>,
+    /// Shared singular values (identical to the vertical run's).
+    pub s: Vec<f64>,
+    /// Per-user secret left factors: user i's rows of U (mᵢ×k).
+    pub u_parts: Vec<Mat>,
+    /// Underlying (transposed-orientation) protocol output with all
+    /// meters and masks.
+    pub inner: FedSvdOutput,
+}
+
+/// Run FedSVD over horizontally-partitioned parts `[X₁; …; X_k]`
+/// (each mᵢ×n, same n).
+pub fn run_fedsvd_horizontal(
+    parts: &[Mat],
+    cfg: &FedSvdConfig,
+) -> Result<HorizontalOutput> {
+    run_fedsvd_horizontal_with_kernel(parts, cfg, &NativeKernel)
+}
+
+/// Kernel-parameterized variant (PJRT or native).
+pub fn run_fedsvd_horizontal_with_kernel(
+    parts: &[Mat],
+    cfg: &FedSvdConfig,
+    kernel: &dyn MatKernel,
+) -> Result<HorizontalOutput> {
+    if parts.is_empty() {
+        return Err(Error::Protocol("horizontal: no users".into()));
+    }
+    let n = parts[0].cols();
+    for p in parts {
+        if p.cols() != n {
+            return Err(Error::Shape(
+                "horizontal: users disagree on feature width".into(),
+            ));
+        }
+    }
+    // transpose each part: user-i's rows become columns
+    let t_parts: Vec<Mat> = parts.iter().map(|p| p.transpose()).collect();
+    let out = run_fedsvd_with_kernel(&t_parts, cfg, kernel)?;
+
+    // map back: vertical-run U is our V (shared), vertical-run Vᵢᵀ (k×mᵢ)
+    // transposes to user-i's U slice (mᵢ×k)
+    let vt = out.u.as_ref().map(|u| u.transpose());
+    let u_parts = out
+        .v_parts
+        .iter()
+        .map(|vit| vit.transpose())
+        .collect::<Vec<_>>();
+    Ok(HorizontalOutput {
+        vt,
+        s: out.s.clone(),
+        u_parts,
+        inner: out,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{svd, SvdResult};
+    use crate::rng::Xoshiro256;
+    use crate::util::rmse;
+
+    fn stack(parts: &[Mat]) -> Mat {
+        let mut x = parts[0].clone();
+        for p in &parts[1..] {
+            x = x.vcat(p).unwrap();
+        }
+        x
+    }
+
+    fn cfg() -> FedSvdConfig {
+        FedSvdConfig {
+            block_size: 6,
+            secagg_batch_rows: 16,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn horizontal_is_lossless() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        // three hospitals with 7/5/8 patients over 12 shared features
+        let parts = vec![
+            Mat::gaussian(7, 12, &mut rng),
+            Mat::gaussian(5, 12, &mut rng),
+            Mat::gaussian(8, 12, &mut rng),
+        ];
+        let x = stack(&parts);
+        let out = run_fedsvd_horizontal(&parts, &cfg()).unwrap();
+        let truth = svd(&x).unwrap();
+
+        assert!(rmse(&out.s, &truth.s) < 1e-9 * truth.s[0]);
+        // reconstruction through the mapped-back factors
+        let u_joined = {
+            let mut u = out.u_parts[0].clone();
+            for p in &out.u_parts[1..] {
+                u = u.vcat(p).unwrap();
+            }
+            u
+        };
+        let rec = SvdResult {
+            u: u_joined,
+            s: out.s.clone(),
+            vt: out.vt.clone().unwrap(),
+        }
+        .reconstruct();
+        assert!(rmse(rec.data(), x.data()) < 1e-10);
+    }
+
+    #[test]
+    fn u_parts_have_user_row_counts() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let parts = vec![Mat::gaussian(4, 9, &mut rng), Mat::gaussian(6, 9, &mut rng)];
+        let out = run_fedsvd_horizontal(&parts, &cfg()).unwrap();
+        assert_eq!(out.u_parts[0].rows(), 4);
+        assert_eq!(out.u_parts[1].rows(), 6);
+        assert_eq!(out.vt.as_ref().unwrap().cols(), 9);
+    }
+
+    #[test]
+    fn horizontal_matches_vertical_on_transpose() {
+        // σ of X and Xᵀ coincide — the two partition modes agree
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let parts_h = vec![Mat::gaussian(5, 8, &mut rng), Mat::gaussian(5, 8, &mut rng)];
+        let x = stack(&parts_h);
+        let out_h = run_fedsvd_horizontal(&parts_h, &cfg()).unwrap();
+        let parts_v = crate::protocol::split_columns(&x, 2).unwrap();
+        let out_v = crate::protocol::run_fedsvd(&parts_v, &cfg()).unwrap();
+        assert!(rmse(&out_h.s, &out_v.s) < 1e-10 * out_v.s[0].max(1.0));
+    }
+
+    #[test]
+    fn rejects_ragged_feature_width() {
+        let parts = vec![Mat::zeros(3, 5), Mat::zeros(3, 6)];
+        assert!(run_fedsvd_horizontal(&parts, &cfg()).is_err());
+        assert!(run_fedsvd_horizontal(&[], &cfg()).is_err());
+    }
+}

@@ -1,0 +1,180 @@
+//! Privacy machinery (paper §3.5).
+//!
+//! * Theorem 2 witness: given a masked matrix `X' = P₁X₁Q₁`, construct a
+//!   *different* plausible raw matrix `X₂` (with its own masks) such that
+//!   `P₂X₂Q₂ = X'` exactly — the CSP cannot identify the real data.
+//! * First/second-moment randomness checks used to sanity-check that the
+//!   blinded `[Qᵢᵀ]ᴿ` shipped to the CSP is statistically unstructured
+//!   (the formal claim is computational indistinguishability per Zhang
+//!   et al. [26]; the moments are the testable corollary).
+
+use crate::linalg::{svd, Mat};
+use crate::mask::orthogonal::random_orthogonal;
+use crate::rng::Xoshiro256;
+use crate::util::Result;
+
+/// A Theorem-2 witness: alternative `(P₂, X₂, Q₂)` with `P₂X₂Q₂ = X'`.
+pub struct AlternativeExplanation {
+    pub p2: Mat,
+    pub x2: Mat,
+    pub q2: Mat,
+}
+
+/// Construct the Theorem-2 witness for a masked matrix `x_masked`.
+///
+/// Following the paper's proof: write X' = U'ΣV'ᵀ, draw random orthogonal
+/// R₁ (m×m), R₂ (n×n) and set
+///   X₂ = R₁ᵀ Σ R₂ᵀ,   P₂ = U' R₁,   Q₂ = R₂ V'ᵀ
+/// so that P₂X₂Q₂ = U'ΣV'ᵀ = X'. Each choice of (R₁,R₂) gives a distinct
+/// "raw" matrix explaining the same observation — infinitely many in ℝ.
+pub fn alternative_explanation(
+    x_masked: &Mat,
+    rng: &mut Xoshiro256,
+) -> Result<AlternativeExplanation> {
+    let (m, n) = x_masked.shape();
+    let f = svd(x_masked)?;
+    let k = f.s.len();
+    let r1 = random_orthogonal(m, rng)?;
+    let r2 = random_orthogonal(n, rng)?;
+
+    // Σ as m×n rectangular diagonal
+    let sigma = Mat::diag(m, n, &f.s);
+    // complete U' to m×m and V'ᵀ to n×n so P₂/Q₂ are orthogonal:
+    // svd() returns thin factors; complete via the orthonormal-basis trick
+    let u_full = complete_square(&f.u, m, k, rng)?;
+    let vt_full = complete_square(&f.vt.transpose(), n, k, rng)?.transpose();
+
+    let x2 = r1.t_mul(&sigma)?.mul(&r2.transpose())?;
+    let p2 = u_full.mul(&r1)?;
+    let q2 = r2.mul(&vt_full)?;
+    Ok(AlternativeExplanation { p2, x2, q2 })
+}
+
+/// Complete an m×k column-orthonormal matrix to a full m×m orthogonal one.
+fn complete_square(u: &Mat, m: usize, k: usize, rng: &mut Xoshiro256) -> Result<Mat> {
+    if k >= m {
+        return Ok(u.take_cols(m));
+    }
+    let mut out = Mat::zeros(m, m);
+    out.set_slice(0, 0, u);
+    for j in k..m {
+        'probe: for _ in 0..64 {
+            let mut v: Vec<f64> = (0..m).map(|_| rng.next_gaussian()).collect();
+            for _pass in 0..2 {
+                for jj in 0..j {
+                    let mut dot = 0.0;
+                    for i in 0..m {
+                        dot += out[(i, jj)] * v[i];
+                    }
+                    for i in 0..m {
+                        let o = out[(i, jj)];
+                        v[i] -= dot * o;
+                    }
+                }
+            }
+            let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm > 1e-8 {
+                for i in 0..m {
+                    out[(i, j)] = v[i] / norm;
+                }
+                break 'probe;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Simple randomness report on a matrix's entries: mean, variance, and
+/// lag-1 autocorrelation (row-major order).
+#[derive(Debug, Clone, Copy)]
+pub struct MomentReport {
+    pub mean: f64,
+    pub variance: f64,
+    pub lag1_autocorr: f64,
+}
+
+/// Compute moments of a matrix's entries.
+pub fn moment_report(x: &Mat) -> MomentReport {
+    let d = x.data();
+    let n = d.len() as f64;
+    let mean = d.iter().sum::<f64>() / n;
+    let variance = d.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n;
+    let mut cov = 0.0;
+    for w in d.windows(2) {
+        cov += (w[0] - mean) * (w[1] - mean);
+    }
+    let lag1 = if variance > 0.0 {
+        (cov / (n - 1.0)) / variance
+    } else {
+        0.0
+    };
+    MomentReport {
+        mean,
+        variance,
+        lag1_autocorr: lag1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::mask::orthogonal::block_orthogonal;
+    use crate::util::max_abs_diff;
+
+    #[test]
+    fn theorem2_witness_reproduces_masked_matrix() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        // build a real masked matrix first
+        let x1 = Mat::gaussian(6, 8, &mut rng);
+        let p1 = block_orthogonal(6, 3, 11).unwrap();
+        let q1 = block_orthogonal(8, 4, 12).unwrap();
+        let x_masked = q1.rmul_dense(&p1.mul_dense(&x1).unwrap()).unwrap();
+
+        let alt = alternative_explanation(&x_masked, &mut rng).unwrap();
+        let recon = matmul(&matmul(&alt.p2, &alt.x2).unwrap(), &alt.q2).unwrap();
+        let d = max_abs_diff(recon.data(), x_masked.data());
+        assert!(d < 1e-8, "witness mismatch {d}");
+        // the alternative "raw" matrix is nothing like the real one
+        assert!(max_abs_diff(alt.x2.data(), x1.data()) > 1e-2);
+    }
+
+    #[test]
+    fn theorem2_masks_are_orthogonal() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let x_masked = Mat::gaussian(5, 7, &mut rng);
+        let alt = alternative_explanation(&x_masked, &mut rng).unwrap();
+        assert!(alt.p2.orthonormality_defect() < 1e-8, "P₂ defect");
+        assert!(
+            alt.q2.transpose().orthonormality_defect() < 1e-8,
+            "Q₂ defect"
+        );
+    }
+
+    #[test]
+    fn distinct_witnesses_for_same_observation() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let x_masked = Mat::gaussian(4, 5, &mut rng);
+        let a = alternative_explanation(&x_masked, &mut rng).unwrap();
+        let b = alternative_explanation(&x_masked, &mut rng).unwrap();
+        assert!(max_abs_diff(a.x2.data(), b.x2.data()) > 1e-3);
+    }
+
+    #[test]
+    fn moment_report_of_gaussian() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let x = Mat::gaussian(100, 100, &mut rng);
+        let r = moment_report(&x);
+        assert!(r.mean.abs() < 0.02);
+        assert!((r.variance - 1.0).abs() < 0.05);
+        assert!(r.lag1_autocorr.abs() < 0.05);
+    }
+
+    #[test]
+    fn moment_report_flags_structure() {
+        // a strongly structured matrix has high lag-1 autocorrelation
+        let x = Mat::from_fn(50, 50, |i, j| (i * 50 + j) as f64);
+        let r = moment_report(&x);
+        assert!(r.lag1_autocorr > 0.9);
+    }
+}

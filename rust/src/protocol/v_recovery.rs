@@ -1,0 +1,171 @@
+//! Federated recovery of `Vᵢᵀ` (paper §3.3, Eq. 6–7).
+//!
+//! The CSP may not broadcast `V'ᵀ` (users hold `Qᵢ` and could unmask other
+//! users' eigenvectors), and users may not reveal `Qᵢᵀ` to the CSP. The
+//! paper's two-sided blinding:
+//!
+//! ```text
+//! user i:  [Qᵢᵀ]ᴿ = Qᵢᵀ·Rᵢ          (Rᵢ block-diagonal random, Eq. 7)
+//! CSP:     [Vᵢᵀ]ᴿ = V'ᵀ·[Qᵢᵀ]ᴿ
+//! user i:  Vᵢᵀ    = [Vᵢᵀ]ᴿ·Rᵢ⁻¹
+//! ```
+//!
+//! `Rᵢ`'s block sizes follow `Qᵢ`'s piece extents so `QᵢᵀRᵢ` stays sparse:
+//! computing it is O(nᵢ·b²) = O(nᵢ) and inverting `Rᵢ` is O(nᵢ·b²) too.
+
+use crate::linalg::{Mat, MatKernel};
+use crate::mask::block_diag::{BlockDiagMat, BlockDiagSlice};
+use crate::rng::Xoshiro256;
+use crate::util::{Error, Result};
+
+/// User-side step 1: draw `Rᵢ` matching `qi`'s piece structure and blind
+/// `Qᵢᵀ`. Returns `(Rᵢ, [Qᵢᵀ]ᴿ)`.
+pub fn blind_qit(
+    qi: &BlockDiagSlice,
+    rng: &mut Xoshiro256,
+) -> Result<(BlockDiagMat, BlockDiagSlice)> {
+    let extents = qi.piece_row_extents();
+    if extents.is_empty() {
+        return Err(Error::Protocol("blind_qit: empty slice".into()));
+    }
+    // Gaussian blocks are invertible w.p. 1; retry on numerical degeneracy.
+    let ri = loop {
+        let blocks: Vec<Mat> = extents
+            .iter()
+            .map(|&e| Mat::gaussian(e, e, rng))
+            .collect();
+        let cand = BlockDiagMat::from_blocks(blocks)?;
+        if cand.inverse().is_ok() {
+            break cand;
+        }
+    };
+    let blinded = qi.transpose_mul_blockdiag(&ri)?;
+    Ok((ri, blinded))
+}
+
+/// CSP-side step 2: `[Vᵢᵀ]ᴿ = V'ᵀ·[Qᵢᵀ]ᴿ` (dense k×n · sparse n×nᵢ).
+pub fn csp_blind_vit(
+    vt_masked: &Mat,
+    blinded_qit: &BlockDiagSlice,
+    kernel: &dyn MatKernel,
+) -> Result<Mat> {
+    if vt_masked.cols() != blinded_qit.rows() {
+        return Err(Error::Shape(format!(
+            "csp_blind_vit: V'ᵀ is {}x{}, [Qᵢᵀ]ᴿ has {} rows",
+            vt_masked.rows(),
+            vt_masked.cols(),
+            blinded_qit.rows()
+        )));
+    }
+    // multiply against the sparse pieces: out[:, piece_cols] += V'ᵀ[:, piece_rows]·piece
+    let mut out = Mat::zeros(vt_masked.rows(), blinded_qit.cols());
+    for p in blinded_qit.pieces() {
+        let panel = vt_masked.slice(
+            0,
+            vt_masked.rows(),
+            p.local_row,
+            p.local_row + p.mat.rows(),
+        );
+        let prod = kernel.matmul(&panel, &p.mat)?;
+        for i in 0..prod.rows() {
+            for j in 0..prod.cols() {
+                out[(i, p.global_col + j)] += prod[(i, j)];
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// User-side step 3: strip the blinding, `Vᵢᵀ = [Vᵢᵀ]ᴿ·Rᵢ⁻¹`.
+pub fn unblind_vit(blinded_vit: &Mat, ri: &BlockDiagMat) -> Result<Mat> {
+    if blinded_vit.cols() != ri.dim() {
+        return Err(Error::Shape(format!(
+            "unblind_vit: [Vᵢᵀ]ᴿ is {}x{}, Rᵢ dim {}",
+            blinded_vit.rows(),
+            blinded_vit.cols(),
+            ri.dim()
+        )));
+    }
+    let ri_inv = ri.inverse()?;
+    ri_inv.rmul_dense(blinded_vit)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, NativeKernel};
+    use crate::mask::orthogonal::block_orthogonal;
+    use crate::util::max_abs_diff;
+
+    /// End-to-end Eq. 6 check: the three-step dance returns exactly
+    /// V'ᵀ·Qᵢᵀ (which equals Vᵢᵀ when V'ᵀ is the masked right factor).
+    #[test]
+    fn recovery_roundtrip_equals_direct_product() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let n = 12;
+        let q = block_orthogonal(n, 4, 7).unwrap();
+        let qi = q.row_slice(3, 9).unwrap(); // user owns cols 3..9
+        let vt_masked = Mat::gaussian(5, n, &mut rng); // stand-in for V'ᵀ
+
+        let (ri, blinded_q) = blind_qit(&qi, &mut rng).unwrap();
+        let blinded_v = csp_blind_vit(&vt_masked, &blinded_q, &NativeKernel).unwrap();
+        let vit = unblind_vit(&blinded_v, &ri).unwrap();
+
+        let direct = matmul(&vt_masked, &qi.to_dense().transpose()).unwrap();
+        assert!(
+            max_abs_diff(vit.data(), direct.data()) < 1e-9,
+            "diff {}",
+            max_abs_diff(vit.data(), direct.data())
+        );
+        assert_eq!(vit.shape(), (5, 6));
+    }
+
+    #[test]
+    fn blinded_q_differs_from_plain_q() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let q = block_orthogonal(8, 4, 3).unwrap();
+        let qi = q.row_slice(0, 4).unwrap();
+        let (_ri, blinded) = blind_qit(&qi, &mut rng).unwrap();
+        let plain_t = qi.to_dense().transpose();
+        let d = max_abs_diff(blinded.to_dense().data(), plain_t.data());
+        assert!(d > 1e-2, "blinding changed nothing (diff {d})");
+    }
+
+    #[test]
+    fn blinding_is_randomized() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let q = block_orthogonal(6, 3, 4).unwrap();
+        let qi = q.row_slice(0, 6).unwrap();
+        let (_, b1) = blind_qit(&qi, &mut rng).unwrap();
+        let (_, b2) = blind_qit(&qi, &mut rng).unwrap();
+        assert!(max_abs_diff(b1.to_dense().data(), b2.to_dense().data()) > 1e-3);
+    }
+
+    #[test]
+    fn csp_never_sees_unblinded_q() {
+        // structural check: csp step consumes only the blinded slice type
+        // and the masked V — compile-time guarantee; here we verify the
+        // sparse product matches its dense equivalent.
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let q = block_orthogonal(10, 5, 5).unwrap();
+        let qi = q.row_slice(2, 8).unwrap();
+        let (_ri, blinded) = blind_qit(&qi, &mut rng).unwrap();
+        let vt = Mat::gaussian(4, 10, &mut rng);
+        let fast = csp_blind_vit(&vt, &blinded, &NativeKernel).unwrap();
+        let slow = matmul(&vt, &blinded.to_dense()).unwrap();
+        assert!(max_abs_diff(fast.data(), slow.data()) < 1e-11);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let q = block_orthogonal(6, 3, 6).unwrap();
+        let qi = q.row_slice(0, 3).unwrap();
+        let (ri, blinded) = blind_qit(&qi, &mut rng).unwrap();
+        // V'ᵀ with wrong width
+        let bad_vt = Mat::zeros(4, 5);
+        assert!(csp_blind_vit(&bad_vt, &blinded, &NativeKernel).is_err());
+        // blinded V with wrong width vs Rᵢ
+        assert!(unblind_vit(&Mat::zeros(4, 5), &ri).is_err());
+    }
+}

@@ -1,0 +1,269 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline vendor set has `rand_core` but not `rand`, so FedSVD carries
+//! its own generators:
+//!
+//! * [`SplitMix64`] — seed expander (also used to derive per-role /
+//!   per-block subseeds, mirroring the paper's "broadcast a random seed
+//!   `r_p`" mask-delivery trick from §3.2).
+//! * [`Xoshiro256`] — xoshiro256++ main generator.
+//! * Gaussian sampling via Box–Muller ([`Xoshiro256::next_gaussian`]),
+//!   needed for Algorithm 1 (Gram–Schmidt on N(0,1) matrices) and for the
+//!   DP baseline's Gaussian mechanism.
+//!
+//! Everything here is deterministic given the seed: the TA and the users
+//! must generate *bit-identical* mask blocks from a shared seed (paper
+//! §3.2, "Gram-Schmidt is a deterministic algorithm"), which our protocol
+//! tests assert.
+
+/// SplitMix64: tiny, full-period seed expander (Steele et al.).
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ by Blackman & Vigna: fast, high-quality 64-bit generator.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+    /// Cached second Box–Muller variate.
+    gauss_spare: Option<f64>,
+}
+
+#[inline]
+fn rotl(x: u64, k: u32) -> u64 {
+    x.rotate_left(k)
+}
+
+impl Xoshiro256 {
+    /// Seed via SplitMix64 per the xoshiro authors' recommendation.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s = [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()];
+        Self {
+            s,
+            gauss_spare: None,
+        }
+    }
+
+    /// Derive an independent child stream labelled by `label`.
+    /// Used for per-block / per-party subseeds so mask blocks can be
+    /// generated out of order and on different machines identically.
+    pub fn derive(&self, label: u64) -> Xoshiro256 {
+        let mut sm = SplitMix64::new(
+            self.s[0] ^ self.s[2].rotate_left(17) ^ label.wrapping_mul(0xd134_2543_de82_ef95),
+        );
+        let s = [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()];
+        Xoshiro256 {
+            s,
+            gauss_spare: None,
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = rotl(self.s[0].wrapping_add(self.s[3]), 23).wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = rotl(self.s[3], 45);
+        result
+    }
+
+    /// Uniform in [0,1) with 53-bit resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire rejection).
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = {
+                let m = (x as u128) * (n as u128);
+                ((m >> 64) as u64, m as u64)
+            };
+            if lo >= n || lo >= n.wrapping_neg() % n {
+                return hi;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn next_gaussian(&mut self) -> f64 {
+        if let Some(v) = self.gauss_spare.take() {
+            return v;
+        }
+        loop {
+            let u1 = self.next_f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.gauss_spare = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// Normal with given mean and standard deviation.
+    #[inline]
+    pub fn gaussian(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.next_gaussian()
+    }
+
+    /// Fill a slice with standard normals.
+    pub fn fill_gaussian(&mut self, out: &mut [f64]) {
+        for v in out.iter_mut() {
+            *v = self.next_gaussian();
+        }
+    }
+
+    /// Fill a slice with uniforms in [lo, hi).
+    pub fn fill_uniform(&mut self, out: &mut [f64], lo: f64, hi: f64) {
+        for v in out.iter_mut() {
+            *v = self.uniform(lo, hi);
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Random bytes (used by secagg PRG expansion and bignum sampling).
+    pub fn fill_bytes(&mut self, out: &mut [u8]) {
+        let mut chunks = out.chunks_exact_mut(8);
+        for c in &mut chunks {
+            c.copy_from_slice(&self.next_u64().to_le_bytes());
+        }
+        let rem = chunks.into_remainder();
+        if !rem.is_empty() {
+            let b = self.next_u64().to_le_bytes();
+            rem.copy_from_slice(&b[..rem.len()]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Xoshiro256::seed_from_u64(42);
+        let mut b = Xoshiro256::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Xoshiro256::seed_from_u64(1);
+        let mut b = Xoshiro256::seed_from_u64(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn derive_is_deterministic_and_independent() {
+        let root = Xoshiro256::seed_from_u64(7);
+        let mut c1 = root.derive(3);
+        let mut c1b = root.derive(3);
+        let mut c2 = root.derive(4);
+        assert_eq!(c1.next_u64(), c1b.next_u64());
+        assert_ne!(c1.next_u64(), c2.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Xoshiro256::seed_from_u64(5);
+        for _ in 0..1000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            let y = r.uniform(-3.0, 2.0);
+            assert!((-3.0..2.0).contains(&y));
+        }
+    }
+
+    #[test]
+    fn next_below_unbiased_support() {
+        let mut r = Xoshiro256::seed_from_u64(6);
+        let mut counts = [0usize; 5];
+        for _ in 0..5000 {
+            counts[r.next_below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            // each bucket expected 1000; loose 5-sigma band
+            assert!((700..1300).contains(&c), "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Xoshiro256::seed_from_u64(11);
+        let n = 200_000;
+        let mut sum = 0.0;
+        let mut sq = 0.0;
+        for _ in 0..n {
+            let x = r.next_gaussian();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256::seed_from_u64(12);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn fill_bytes_covers_remainder() {
+        let mut r = Xoshiro256::seed_from_u64(13);
+        let mut buf = [0u8; 13];
+        r.fill_bytes(&mut buf);
+        // all-zero after fill is astronomically unlikely
+        assert!(buf.iter().any(|&b| b != 0));
+    }
+}

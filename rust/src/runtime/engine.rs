@@ -1,0 +1,263 @@
+//! PJRT execution engine: load AOT artifacts, compile once, execute from
+//! the Rust hot path.
+//!
+//! The Python side (`python/compile/aot.py`) lowers the L2 JAX graphs
+//! (which call the L1 Pallas kernels) to **HLO text** — the interchange
+//! format this image's xla_extension 0.5.1 accepts (serialized protos from
+//! jax ≥ 0.5 carry 64-bit instruction ids it rejects). This module:
+//!
+//! 1. creates one [`xla::PjRtClient`] (CPU),
+//! 2. parses each `artifacts/<name>.hlo.txt` with
+//!    `HloModuleProto::from_text_file`, compiles it once, and caches the
+//!    loaded executable,
+//! 3. marshals row-major f64 [`Mat`]s into `Literal`s and back.
+//!
+//! [`TileEngine`] implements [`MatKernel`] on top: arbitrary-shape products
+//! are tiled to the fixed AOT shape (zero-padded edges) and accumulated.
+//! Python never runs at request time — artifacts are produced by
+//! `make artifacts` and the binary is self-contained afterwards.
+
+use crate::linalg::{Mat, MatKernel};
+use crate::util::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Tile edge the AOT artifacts are compiled for (must match aot.py).
+pub const TILE: usize = 64;
+
+/// Artifact directory: `$FEDSVD_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("FEDSVD_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+fn xerr(e: xla::Error) -> Error {
+    Error::Runtime(format!("xla: {e}"))
+}
+
+/// A PJRT CPU client with a cache of compiled executables.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtEngine {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        Ok(Self {
+            client,
+            exes: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact under `name`.
+    pub fn load_hlo_text(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(xerr)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(xerr)?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    fn mat_to_literal(m: &Mat) -> Result<xla::Literal> {
+        xla::Literal::vec1(m.data())
+            .reshape(&[m.rows() as i64, m.cols() as i64])
+            .map_err(xerr)
+    }
+
+    fn literal_to_mat(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
+        let v = lit.to_vec::<f64>().map_err(xerr)?;
+        Mat::from_vec(rows, cols, v)
+    }
+
+    /// Execute a cached executable on matrix inputs; the artifact returns a
+    /// 1-tuple holding one `rows×cols` f64 array (aot.py lowers with
+    /// `return_tuple=True`).
+    pub fn exec_mats(
+        &self,
+        name: &str,
+        inputs: &[&Mat],
+        rows: usize,
+        cols: usize,
+    ) -> Result<Mat> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("artifact {name:?} not loaded")))?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|m| Self::mat_to_literal(m))
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&lits).map_err(xerr)?[0][0]
+            .to_literal_sync()
+            .map_err(xerr)?;
+        let out = result.to_tuple1().map_err(xerr)?;
+        Self::literal_to_mat(&out, rows, cols)
+    }
+}
+
+/// The standard artifact names produced by aot.py.
+pub mod artifact {
+    /// `matmul(a: T×T, b: T×T) -> T×T`
+    pub const MATMUL: &str = "matmul_f64";
+    /// `mask_tile(p: T×T, x: T×T, q: T×T) -> p@x@q` (fused, Pallas inside)
+    pub const MASK_TILE: &str = "mask_tile_f64";
+    /// `gram_tile(x: T×T, v: T×T) -> xᵀ@(x@v)` (subspace-iteration step)
+    pub const GRAM_TILE: &str = "gram_tile_f64";
+}
+
+/// [`MatKernel`] backed by the AOT artifacts: pads operands to the fixed
+/// `TILE` grid, runs the compiled executable per tile triple, accumulates
+/// in Rust. Interior mutability because PJRT execution takes `&self` but
+/// the engine cache may want lazy loading later.
+pub struct TileEngine {
+    engine: Mutex<PjrtEngine>,
+    /// whether the fused 3-operand mask artifact is available
+    has_fused_mask: bool,
+}
+
+impl TileEngine {
+    /// Load from the default artifacts directory. Errors when the
+    /// mandatory matmul artifact is missing — callers fall back to
+    /// [`crate::linalg::NativeKernel`].
+    pub fn from_artifacts() -> Result<Self> {
+        Self::from_dir(&artifacts_dir())
+    }
+
+    pub fn from_dir(dir: &Path) -> Result<Self> {
+        let mut engine = PjrtEngine::cpu()?;
+        let matmul_path = dir.join(format!("{}.hlo.txt", artifact::MATMUL));
+        if !matmul_path.exists() {
+            return Err(Error::Runtime(format!(
+                "artifact {matmul_path:?} missing — run `make artifacts`"
+            )));
+        }
+        engine.load_hlo_text(artifact::MATMUL, &matmul_path)?;
+        let mask_path = dir.join(format!("{}.hlo.txt", artifact::MASK_TILE));
+        let has_fused_mask = mask_path.exists();
+        if has_fused_mask {
+            engine.load_hlo_text(artifact::MASK_TILE, &mask_path)?;
+        }
+        let gram_path = dir.join(format!("{}.hlo.txt", artifact::GRAM_TILE));
+        if gram_path.exists() {
+            engine.load_hlo_text(artifact::GRAM_TILE, &gram_path)?;
+        }
+        Ok(Self {
+            engine: Mutex::new(engine),
+            has_fused_mask,
+        })
+    }
+
+    /// Pad `m` to the tile grid.
+    fn pad(m: &Mat) -> Mat {
+        let pr = m.rows().div_ceil(TILE) * TILE;
+        let pc = m.cols().div_ceil(TILE) * TILE;
+        if pr == m.rows() && pc == m.cols() {
+            return m.clone();
+        }
+        let mut out = Mat::zeros(pr, pc);
+        out.set_slice(0, 0, m);
+        out
+    }
+
+    fn tile_of(m: &Mat, tr: usize, tc: usize) -> Mat {
+        m.slice(tr * TILE, (tr + 1) * TILE, tc * TILE, (tc + 1) * TILE)
+    }
+
+    /// Whether the fused Pallas mask-tile artifact was found.
+    pub fn has_fused_mask(&self) -> bool {
+        self.has_fused_mask
+    }
+}
+
+impl MatKernel for TileEngine {
+    fn matmul(&self, a: &Mat, b: &Mat) -> Result<Mat> {
+        if a.cols() != b.rows() {
+            return Err(Error::Shape(format!(
+                "TileEngine::matmul {}x{} * {}x{}",
+                a.rows(),
+                a.cols(),
+                b.rows(),
+                b.cols()
+            )));
+        }
+        let (m, n) = (a.rows(), b.cols());
+        let ap = Self::pad(a);
+        let bp = Self::pad(b);
+        let (gr, gk, gc) = (ap.rows() / TILE, ap.cols() / TILE, bp.cols() / TILE);
+        let engine = self.engine.lock().expect("engine poisoned");
+        let mut out = Mat::zeros(gr * TILE, gc * TILE);
+        for r in 0..gr {
+            for c in 0..gc {
+                let mut acc = Mat::zeros(TILE, TILE);
+                for k in 0..gk {
+                    let at = Self::tile_of(&ap, r, k);
+                    let bt = Self::tile_of(&bp, k, c);
+                    let prod = engine.exec_mats(artifact::MATMUL, &[&at, &bt], TILE, TILE)?;
+                    acc.add_assign(&prod)?;
+                }
+                out.set_slice(r * TILE, c * TILE, &acc);
+            }
+        }
+        Ok(out.slice(0, m, 0, n))
+    }
+
+    fn mask_tile(&self, p_block: &Mat, x_tile: &Mat, q_block: &Mat) -> Result<Mat> {
+        // Use the fused Pallas artifact when the shapes are one tile.
+        if self.has_fused_mask
+            && p_block.shape() == (TILE, TILE)
+            && x_tile.shape() == (TILE, TILE)
+            && q_block.shape() == (TILE, TILE)
+        {
+            let engine = self.engine.lock().expect("engine poisoned");
+            return engine.exec_mats(
+                artifact::MASK_TILE,
+                &[p_block, x_tile, q_block],
+                TILE,
+                TILE,
+            );
+        }
+        let px = self.matmul(p_block, x_tile)?;
+        self.matmul(&px, q_block)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-tile"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-backed tests live in rust/tests/runtime_integration.rs: they
+    // need the artifacts built by `make artifacts`, and creating multiple
+    // CPU clients inside one unit-test process is wasteful. Unit coverage
+    // here is limited to the pure helpers.
+    use super::*;
+
+    #[test]
+    fn pad_rounds_up_to_tile() {
+        let m = Mat::zeros(65, 1);
+        let p = TileEngine::pad(&m);
+        assert_eq!(p.shape(), (128, 64));
+        let exact = Mat::zeros(64, 128);
+        assert_eq!(TileEngine::pad(&exact).shape(), (64, 128));
+    }
+
+    #[test]
+    fn artifacts_dir_env_override() {
+        // default
+        let d = artifacts_dir();
+        assert!(d.ends_with("artifacts") || d.is_absolute());
+    }
+}

@@ -1,0 +1,7 @@
+//! PJRT runtime (populated in the runtime build-out step).
+//!
+//! Loads `artifacts/*.hlo.txt` produced by `python/compile/aot.py` and
+//! executes them on the PJRT CPU client via the `xla` crate.
+
+pub mod engine;
+pub use engine::{artifacts_dir, PjrtEngine, TileEngine};

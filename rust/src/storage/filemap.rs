@@ -1,0 +1,309 @@
+//! File-backed f64 matrices with explicit storage layout.
+
+use crate::linalg::Mat;
+use crate::util::{Error, Result};
+use std::fs::{File, OpenOptions};
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+
+/// On-disk element order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layout {
+    /// Elements of a row are contiguous (fast row/row-block access).
+    RowMajor,
+    /// Elements of a column are contiguous (fast column/col-block access).
+    ColMajor,
+}
+
+/// A dense f64 matrix stored in a file ("file map" in the paper's words),
+/// with a small in-memory header only.
+pub struct FileMat {
+    file: File,
+    path: PathBuf,
+    rows: usize,
+    cols: usize,
+    layout: Layout,
+}
+
+impl FileMat {
+    /// Create (truncate) a file-backed matrix of zeros.
+    pub fn create(path: &Path, rows: usize, cols: usize, layout: Layout) -> Result<Self> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        file.set_len((rows * cols * 8) as u64)?;
+        Ok(Self {
+            file,
+            path: path.to_path_buf(),
+            rows,
+            cols,
+            layout,
+        })
+    }
+
+    /// Write an in-memory matrix out in the given layout.
+    pub fn from_mat(path: &Path, mat: &Mat, layout: Layout) -> Result<Self> {
+        let fm = Self::create(path, mat.rows(), mat.cols(), layout)?;
+        match layout {
+            Layout::RowMajor => {
+                // Mat is row-major: single bulk write
+                fm.write_elems(0, mat.data())?;
+            }
+            Layout::ColMajor => {
+                let t = mat.transpose();
+                fm.write_elems(0, t.data())?;
+            }
+        }
+        Ok(fm)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn layout(&self) -> Layout {
+        self.layout
+    }
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// File size in bytes.
+    pub fn byte_len(&self) -> u64 {
+        (self.rows * self.cols * 8) as u64
+    }
+
+    #[inline]
+    fn offset_of(&self, r: usize, c: usize) -> u64 {
+        let idx = match self.layout {
+            Layout::RowMajor => r * self.cols + c,
+            Layout::ColMajor => c * self.rows + r,
+        };
+        (idx * 8) as u64
+    }
+
+    fn write_elems(&self, elem_offset: usize, vals: &[f64]) -> Result<()> {
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        self.file.write_all_at(&bytes, (elem_offset * 8) as u64)?;
+        Ok(())
+    }
+
+    fn read_elems(&self, elem_offset: usize, count: usize) -> Result<Vec<f64>> {
+        let mut buf = vec![0u8; count * 8];
+        self.file.read_exact_at(&mut buf, (elem_offset * 8) as u64)?;
+        Ok(buf
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Read a single element (random access; header arithmetic only).
+    pub fn get(&self, r: usize, c: usize) -> Result<f64> {
+        if r >= self.rows || c >= self.cols {
+            return Err(Error::Shape(format!(
+                "FileMat::get ({r},{c}) out of {}x{}",
+                self.rows, self.cols
+            )));
+        }
+        let mut buf = [0u8; 8];
+        self.file.read_exact_at(&mut buf, self.offset_of(r, c))?;
+        Ok(f64::from_le_bytes(buf))
+    }
+
+    /// Read one full row. Contiguous when layout is RowMajor, strided
+    /// (one positioned read per element) otherwise — the cost asymmetry
+    /// the Opt3 ablation measures.
+    pub fn read_row(&self, r: usize) -> Result<Vec<f64>> {
+        if r >= self.rows {
+            return Err(Error::Shape("read_row: row out of range".into()));
+        }
+        match self.layout {
+            Layout::RowMajor => self.read_elems(r * self.cols, self.cols),
+            Layout::ColMajor => {
+                let mut out = Vec::with_capacity(self.cols);
+                for c in 0..self.cols {
+                    out.push(self.get(r, c)?);
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Read one full column (mirror of `read_row`).
+    pub fn read_col(&self, c: usize) -> Result<Vec<f64>> {
+        if c >= self.cols {
+            return Err(Error::Shape("read_col: col out of range".into()));
+        }
+        match self.layout {
+            Layout::ColMajor => self.read_elems(c * self.rows, self.rows),
+            Layout::RowMajor => {
+                let mut out = Vec::with_capacity(self.rows);
+                for r in 0..self.rows {
+                    out.push(self.get(r, c)?);
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Read rows [r0, r1) as a Mat.
+    pub fn read_row_block(&self, r0: usize, r1: usize) -> Result<Mat> {
+        if r1 > self.rows || r0 > r1 {
+            return Err(Error::Shape("read_row_block: range".into()));
+        }
+        match self.layout {
+            Layout::RowMajor => {
+                let data = self.read_elems(r0 * self.cols, (r1 - r0) * self.cols)?;
+                Mat::from_vec(r1 - r0, self.cols, data)
+            }
+            Layout::ColMajor => {
+                let mut out = Mat::zeros(r1 - r0, self.cols);
+                for c in 0..self.cols {
+                    let col = self.read_elems(c * self.rows + r0, r1 - r0)?;
+                    for (i, v) in col.into_iter().enumerate() {
+                        out[(i, c)] = v;
+                    }
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Read columns [c0, c1) as a Mat.
+    pub fn read_col_block(&self, c0: usize, c1: usize) -> Result<Mat> {
+        if c1 > self.cols || c0 > c1 {
+            return Err(Error::Shape("read_col_block: range".into()));
+        }
+        match self.layout {
+            Layout::ColMajor => {
+                let data = self.read_elems(c0 * self.rows, (c1 - c0) * self.rows)?;
+                // data is col-major: transpose into Mat
+                let t = Mat::from_vec(c1 - c0, self.rows, data)?;
+                Ok(t.transpose())
+            }
+            Layout::RowMajor => {
+                let mut out = Mat::zeros(self.rows, c1 - c0);
+                for r in 0..self.rows {
+                    let row = self.read_elems(r * self.cols + c0, c1 - c0)?;
+                    out.row_mut(r).copy_from_slice(&row);
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Overwrite rows [r0, r0+block.rows).
+    pub fn write_row_block(&self, r0: usize, block: &Mat) -> Result<()> {
+        if block.cols() != self.cols || r0 + block.rows() > self.rows {
+            return Err(Error::Shape("write_row_block: shape".into()));
+        }
+        match self.layout {
+            Layout::RowMajor => self.write_elems(r0 * self.cols, block.data()),
+            Layout::ColMajor => {
+                for c in 0..self.cols {
+                    let col: Vec<f64> = (0..block.rows()).map(|r| block[(r, c)]).collect();
+                    self.write_elems(c * self.rows + r0, &col)?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Load the whole matrix (tests / small matrices).
+    pub fn to_mat(&self) -> Result<Mat> {
+        self.read_row_block(0, self.rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+    use crate::util::max_abs_diff;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("fedsvd_filemap_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_row_major() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let a = Mat::gaussian(7, 5, &mut rng);
+        let fm = FileMat::from_mat(&tmp("rm.bin"), &a, Layout::RowMajor).unwrap();
+        let b = fm.to_mat().unwrap();
+        assert!(max_abs_diff(a.data(), b.data()) == 0.0);
+    }
+
+    #[test]
+    fn roundtrip_col_major() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let a = Mat::gaussian(6, 9, &mut rng);
+        let fm = FileMat::from_mat(&tmp("cm.bin"), &a, Layout::ColMajor).unwrap();
+        let b = fm.to_mat().unwrap();
+        assert!(max_abs_diff(a.data(), b.data()) == 0.0);
+    }
+
+    #[test]
+    fn row_and_col_reads_match_memory() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let a = Mat::gaussian(8, 4, &mut rng);
+        for layout in [Layout::RowMajor, Layout::ColMajor] {
+            let fm = FileMat::from_mat(&tmp("rc.bin"), &a, layout).unwrap();
+            for r in 0..8 {
+                assert_eq!(fm.read_row(r).unwrap(), a.row(r).to_vec(), "{layout:?}");
+            }
+            for c in 0..4 {
+                assert_eq!(fm.read_col(c).unwrap(), a.col(c), "{layout:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_reads() {
+        let a = Mat::from_fn(6, 6, |i, j| (i * 10 + j) as f64);
+        for layout in [Layout::RowMajor, Layout::ColMajor] {
+            let fm = FileMat::from_mat(&tmp("blk.bin"), &a, layout).unwrap();
+            let rb = fm.read_row_block(2, 5).unwrap();
+            assert_eq!(rb.shape(), (3, 6));
+            assert_eq!(rb[(0, 0)], 20.0);
+            assert_eq!(rb[(2, 5)], 45.0);
+            let cb = fm.read_col_block(1, 3).unwrap();
+            assert_eq!(cb.shape(), (6, 2));
+            assert_eq!(cb[(0, 0)], 1.0);
+            assert_eq!(cb[(5, 1)], 52.0);
+        }
+    }
+
+    #[test]
+    fn write_row_block_updates() {
+        let a = Mat::zeros(4, 3);
+        let fm = FileMat::from_mat(&tmp("wr.bin"), &a, Layout::RowMajor).unwrap();
+        let block = Mat::from_fn(2, 3, |i, j| (i + j) as f64 + 1.0);
+        fm.write_row_block(1, &block).unwrap();
+        let m = fm.to_mat().unwrap();
+        assert_eq!(m[(0, 0)], 0.0);
+        assert_eq!(m[(1, 0)], 1.0);
+        assert_eq!(m[(2, 2)], 4.0);
+        // also correct under ColMajor
+        let fm2 = FileMat::from_mat(&tmp("wr2.bin"), &a, Layout::ColMajor).unwrap();
+        fm2.write_row_block(1, &block).unwrap();
+        let m2 = fm2.to_mat().unwrap();
+        assert!(max_abs_diff(m.data(), m2.data()) == 0.0);
+    }
+
+    #[test]
+    fn bounds_errors() {
+        let a = Mat::zeros(3, 3);
+        let fm = FileMat::from_mat(&tmp("be.bin"), &a, Layout::RowMajor).unwrap();
+        assert!(fm.get(3, 0).is_err());
+        assert!(fm.read_row(5).is_err());
+        assert!(fm.read_col_block(2, 5).is_err());
+    }
+}

@@ -1,0 +1,156 @@
+//! Hungarian (Kuhn–Munkres) algorithm for maximum-weight perfect matching
+//! on a square cost matrix, O(n³).
+//!
+//! The ICA attack scorer (paper §5.4, Tab. 3) computes "n-to-n matching
+//! Pearson correlation ... and report the maximum value": recovered ICA
+//! components are unordered and sign-ambiguous, so components must be
+//! assigned to raw signals by the best global matching.
+
+/// Solve min-cost assignment for an `n×n` cost matrix (row-major).
+/// Returns `assignment[row] = col`.
+///
+/// Classic potentials-based O(n³) implementation.
+pub fn min_cost_assignment(cost: &[f64], n: usize) -> Vec<usize> {
+    assert_eq!(cost.len(), n * n, "cost matrix must be n*n");
+    if n == 0 {
+        return Vec::new();
+    }
+    const INF: f64 = f64::INFINITY;
+    // 1-indexed potentials per the standard formulation.
+    let mut u = vec![0.0f64; n + 1];
+    let mut v = vec![0.0f64; n + 1];
+    let mut p = vec![0usize; n + 1]; // p[col] = row matched to col (0 = none)
+    let mut way = vec![0usize; n + 1];
+
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![INF; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = INF;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if !used[j] {
+                    let cur = cost[(i0 - 1) * n + (j - 1)] - u[i0] - v[j];
+                    if cur < minv[j] {
+                        minv[j] = cur;
+                        way[j] = j0;
+                    }
+                    if minv[j] < delta {
+                        delta = minv[j];
+                        j1 = j;
+                    }
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+
+    let mut assignment = vec![0usize; n];
+    for j in 1..=n {
+        if p[j] != 0 {
+            assignment[p[j] - 1] = j - 1;
+        }
+    }
+    assignment
+}
+
+/// Maximum-weight assignment: maximize `sum weight[row][assignment[row]]`.
+/// Returns `(assignment, total_weight)`.
+pub fn max_weight_assignment(weight: &[f64], n: usize) -> (Vec<usize>, f64) {
+    let cost: Vec<f64> = weight.iter().map(|w| -w).collect();
+    let a = min_cost_assignment(&cost, n);
+    let total = a
+        .iter()
+        .enumerate()
+        .map(|(r, &c)| weight[r * n + c])
+        .sum();
+    (a, total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_is_optimal() {
+        // strongly diagonal-dominant weights
+        let w = [10.0, 1.0, 1.0, 1.0, 10.0, 1.0, 1.0, 1.0, 10.0];
+        let (a, total) = max_weight_assignment(&w, 3);
+        assert_eq!(a, vec![0, 1, 2]);
+        assert!((total - 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn anti_diagonal() {
+        let w = [0.0, 0.0, 9.0, 0.0, 9.0, 0.0, 9.0, 0.0, 0.0];
+        let (a, total) = max_weight_assignment(&w, 3);
+        assert_eq!(a, vec![2, 1, 0]);
+        assert!((total - 27.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_min_cost() {
+        // classic 3x3 example; optimal cost = 5 (0->1, 1->0, 2->2) for
+        // [[4,1,3],[2,0,5],[3,2,2]]
+        let c = [4.0, 1.0, 3.0, 2.0, 0.0, 5.0, 3.0, 2.0, 2.0];
+        let a = min_cost_assignment(&c, 3);
+        let total: f64 = a.iter().enumerate().map(|(r, &col)| c[r * 3 + col]).sum();
+        assert!((total - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert!(min_cost_assignment(&[], 0).is_empty());
+        assert_eq!(min_cost_assignment(&[3.0], 1), vec![0]);
+    }
+
+    #[test]
+    fn matching_is_a_permutation() {
+        // pseudo-random weights; result must always be a permutation
+        let n = 7;
+        let mut w = vec![0.0; n * n];
+        let mut s = 123456789u64;
+        for x in w.iter_mut() {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            *x = (s >> 11) as f64 / (1u64 << 53) as f64;
+        }
+        let (a, _) = max_weight_assignment(&w, n);
+        let mut seen = vec![false; n];
+        for &c in &a {
+            assert!(!seen[c], "column assigned twice");
+            seen[c] = true;
+        }
+    }
+
+    #[test]
+    fn greedy_is_suboptimal_hungarian_wins() {
+        // Greedy row-by-row picks (0,0)=5 then (1,1)=1 → 6.
+        // Optimal is (0,1)=4 + (1,0)=4 → 8.
+        let w = [5.0, 4.0, 4.0, 1.0];
+        let (_, total) = max_weight_assignment(&w, 2);
+        assert!((total - 8.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,192 @@
+//! Small shared utilities: error type, approximate comparison helpers,
+//! a seeded property-testing driver (proptest is unavailable offline),
+//! and the Hungarian assignment algorithm used by the attack scorer.
+
+pub mod prop;
+pub mod hungarian;
+
+use thiserror::Error;
+
+/// Crate-wide error type.
+#[derive(Debug, Error)]
+pub enum Error {
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+    #[error("numerical failure: {0}")]
+    Numerical(String),
+    #[error("protocol violation: {0}")]
+    Protocol(String),
+    #[error("crypto error: {0}")]
+    Crypto(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("config error: {0}")]
+    Config(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// `true` when |a-b| <= atol + rtol*|b|, elementwise contract used across tests.
+pub fn approx_eq(a: f64, b: f64, atol: f64, rtol: f64) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs()
+}
+
+/// Max absolute difference between two equal-length slices.
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "max_abs_diff: length mismatch");
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f64, f64::max)
+}
+
+/// Root-mean-square error between two slices (paper's SVD precision metric).
+pub fn rmse(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "rmse: length mismatch");
+    if a.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    (s / a.len() as f64).sqrt()
+}
+
+/// Mean absolute percentage error, guarding zero denominators
+/// (paper §5.2 reconstruction-error metric).
+pub fn mape(truth: &[f64], approx: &[f64]) -> f64 {
+    assert_eq!(truth.len(), approx.len());
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    for (t, a) in truth.iter().zip(approx) {
+        if t.abs() > 1e-12 {
+            acc += ((t - a) / t).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        acc / n as f64
+    }
+}
+
+/// Pearson correlation of two slices; 0.0 when either side is constant.
+pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        let dx = x - ma;
+        let dy = y - mb;
+        cov += dx * dy;
+        va += dx * dx;
+        vb += dy * dy;
+    }
+    if va <= 0.0 || vb <= 0.0 {
+        return 0.0;
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
+/// Format a byte count with binary units, used by metrics reporting.
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", n, UNITS[0])
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Format seconds as h/m/s for experiment logs.
+pub fn human_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{:.2} s", s)
+    } else if s < 7200.0 {
+        format!("{:.1} min", s / 60.0)
+    } else {
+        format!("{:.2} h", s / 3600.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approx_eq_basic() {
+        assert!(approx_eq(1.0, 1.0 + 1e-12, 1e-9, 0.0));
+        assert!(!approx_eq(1.0, 1.1, 1e-9, 1e-9));
+        assert!(approx_eq(100.0, 100.0001, 0.0, 1e-5));
+    }
+
+    #[test]
+    fn rmse_zero_for_identical() {
+        let a = [1.0, -2.0, 3.5];
+        assert_eq!(rmse(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn rmse_known_value() {
+        let a = [0.0, 0.0];
+        let b = [3.0, 4.0];
+        assert!((rmse(&a, &b) - (12.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&a, &b) - 1.0).abs() < 1e-12);
+        let c = [-1.0, -2.0, -3.0, -4.0];
+        assert!((pearson(&a, &c) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_constant_is_zero() {
+        let a = [1.0, 1.0, 1.0];
+        let b = [1.0, 2.0, 3.0];
+        assert_eq!(pearson(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn mape_ignores_zero_truth() {
+        let t = [0.0, 2.0];
+        let a = [5.0, 2.2];
+        assert!((mape(&t, &a) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn human_secs_ranges() {
+        assert!(human_secs(0.5e-4).ends_with("µs"));
+        assert!(human_secs(0.5).ends_with("ms"));
+        assert!(human_secs(5.0).ends_with(" s"));
+        assert!(human_secs(600.0).ends_with("min"));
+        assert!(human_secs(10_000.0).ends_with(" h"));
+    }
+}

@@ -1,0 +1,170 @@
+//! The losslessness suite — the paper's central claim (Thm 1, Tab. 1),
+//! verified end to end through the full federated protocol (masking,
+//! secure aggregation, CSP SVD, federated V recovery) on every dataset
+//! family, across user counts, block sizes and partition raggedness.
+
+use fedsvd::data::Dataset;
+use fedsvd::linalg::{svd, Mat, SvdResult};
+use fedsvd::protocol::{run_fedsvd, split_columns, FedSvdConfig};
+use fedsvd::rng::Xoshiro256;
+use fedsvd::util::rmse;
+
+/// Sign-aligned RMSE between singular-vector sets (paper's Tab. 1 metric:
+/// "distance of singular vectors ... root-mean-square-error").
+fn singular_vector_rmse(a_cols: &Mat, b_cols: &Mat) -> f64 {
+    let k = a_cols.cols().min(b_cols.cols());
+    let mut acc = 0.0;
+    let mut count = 0usize;
+    for j in 0..k {
+        let va = a_cols.col(j);
+        let vb = b_cols.col(j);
+        let dot: f64 = va.iter().zip(&vb).map(|(x, y)| x * y).sum();
+        let sign = if dot >= 0.0 { 1.0 } else { -1.0 };
+        for (x, y) in va.iter().zip(&vb) {
+            acc += (x - sign * y) * (x - sign * y);
+            count += 1;
+        }
+    }
+    (acc / count as f64).sqrt()
+}
+
+fn run_and_check(x: &Mat, users: usize, block: usize, tol_vec: f64) {
+    let parts = split_columns(x, users).unwrap();
+    let cfg = FedSvdConfig {
+        block_size: block,
+        secagg_batch_rows: 16,
+        ..Default::default()
+    };
+    let out = run_fedsvd(&parts, &cfg).unwrap();
+    let truth = svd(x).unwrap();
+
+    // Σ lossless
+    let sv_rmse = rmse(&out.s, &truth.s);
+    assert!(sv_rmse < 1e-9 * truth.s[0].max(1.0), "σ rmse {sv_rmse}");
+
+    // reconstruction through recovered factors (convention-free check)
+    let v_joined = {
+        let mut v = out.v_parts[0].clone();
+        for p in &out.v_parts[1..] {
+            v = v.hcat(p).unwrap();
+        }
+        v
+    };
+    let rec = SvdResult {
+        u: out.u.clone().unwrap(),
+        s: out.s.clone(),
+        vt: v_joined,
+    }
+    .reconstruct();
+    let rec_err = rmse(rec.data(), x.data());
+    let scale = x.fro_norm() / (x.data().len() as f64).sqrt();
+    assert!(
+        rec_err < tol_vec * scale.max(1e-300),
+        "reconstruction rmse {rec_err} (scale {scale})"
+    );
+}
+
+#[test]
+fn lossless_on_all_dataset_families() {
+    // paper Tab. 1: Wine / MNIST / ML100K / Synthetic, scaled down
+    for (ds, scale) in [
+        (Dataset::Wine, 0.02),
+        (Dataset::Mnist, 0.035),
+        (Dataset::Ml100k, 0.02),
+        (Dataset::Synthetic, 0.03),
+    ] {
+        let x = ds.generate(scale, 42);
+        run_and_check(&x, 2, 8, 1e-9);
+    }
+}
+
+#[test]
+fn lossless_across_user_counts() {
+    // "partitioning data to more users will not impact our evaluations"
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let x = Mat::gaussian(18, 24, &mut rng);
+    for users in [2usize, 3, 4, 6] {
+        run_and_check(&x, users, 6, 1e-9);
+    }
+}
+
+#[test]
+fn lossless_across_block_sizes() {
+    // Fig. 5(e): block size trades efficiency, never accuracy
+    let mut rng = Xoshiro256::seed_from_u64(2);
+    let x = Mat::gaussian(20, 16, &mut rng);
+    for b in [1usize, 2, 5, 16, 64] {
+        run_and_check(&x, 2, b, 1e-9);
+    }
+}
+
+#[test]
+fn reconstruction_mape_matches_paper_floor() {
+    // §5.2: "FedSVD's reconstruction error is only 0.000001% of the raw
+    // data" — i.e. MAPE ≈ 1e-8. We should beat that in f64.
+    let x = Dataset::Synthetic.generate(0.03, 7);
+    let parts = split_columns(&x, 2).unwrap();
+    let out = run_fedsvd(
+        &parts,
+        &FedSvdConfig {
+            block_size: 8,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let v_joined = out.v_parts[0].hcat(&out.v_parts[1]).unwrap();
+    let rec = SvdResult {
+        u: out.u.unwrap(),
+        s: out.s,
+        vt: v_joined,
+    }
+    .reconstruct();
+    let mape = fedsvd::util::mape(x.data(), rec.data());
+    assert!(mape < 1e-8, "reconstruction MAPE {mape} above paper floor");
+}
+
+#[test]
+fn fedsvd_vs_dp_error_gap_is_many_orders() {
+    // the Fig. 2(a) / Tab. 1 headline: a huge gap between FedSVD's error
+    // and the DP baseline's
+    // full 12 wine features (k=4 < m=12 keeps the projector comparison
+    // meaningful; a tiny scale would clamp m to 4 and trivialize it)
+    let x = fedsvd::data::wine_like(12, 400, 11);
+    let parts = split_columns(&x, 2).unwrap();
+    let truth = svd(&x).unwrap();
+
+    let fed = run_fedsvd(
+        &parts,
+        &FedSvdConfig {
+            block_size: 8,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // subspace comparison (projection distance) for both methods: the
+    // per-vector metric is ill-posed under nearly-degenerate σ's
+    let fed_err = fedsvd::apps::pca::projection_distance(
+        &fed.u.as_ref().unwrap().take_cols(4),
+        &truth.truncate(4).u,
+    )
+    .unwrap()
+    .max(1e-300);
+
+    let dp = fedsvd::baselines::fedpca::run_fedpca(
+        &parts,
+        4,
+        fedsvd::baselines::fedpca::DpParams::default(),
+        fedsvd::net::presets::paper_default(),
+        13,
+    )
+    .unwrap();
+    let dp_err = fedsvd::apps::pca::projection_distance(&dp.u_k, &truth.truncate(4).u)
+        .unwrap()
+        .max(1e-300);
+
+    let gap = dp_err / fed_err;
+    assert!(
+        gap > 1e5,
+        "expected many-orders gap, got fed {fed_err:.3e} vs dp {dp_err:.3e} (gap {gap:.1e})"
+    );
+}
