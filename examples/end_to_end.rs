@@ -17,7 +17,7 @@ use fedsvd::baselines::fedpca::{run_fedpca, DpParams};
 use fedsvd::baselines::ppdsvd::{estimate_ppdsvd, run_ppdsvd};
 use fedsvd::coordinator::Session;
 use fedsvd::data::movielens_like;
-use fedsvd::linalg::{svd, MatKernel, NativeKernel};
+use fedsvd::linalg::{svd, CpuBackend, GemmBackend};
 use fedsvd::net::presets;
 use fedsvd::paillier;
 use fedsvd::protocol::{split_columns, FedSvdConfig};
@@ -59,10 +59,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     // kernel cross-check: PJRT path and native path must agree
     if session.kernel_name() == "pjrt-tile" {
-        let native = Session::native(cfg.clone());
+        let native = Session::cpu(cfg.clone());
         let (out_native, _) = native.run_svd(&parts)?;
         let d = rmse(&out.s, &out_native.s);
-        println!("    PJRT vs native kernel σ agreement: {d:.3e}");
+        println!("    PJRT vs cpu backend σ agreement: {d:.3e}");
         assert!(d < 1e-10 * truth.s[0]);
     }
 
@@ -139,6 +139,6 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         human_secs(report.net_s),
         human_bytes(report.total_bytes)
     );
-    let _ = NativeKernel.name();
+    let _ = CpuBackend::global().name();
     Ok(())
 }

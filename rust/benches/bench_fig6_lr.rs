@@ -7,7 +7,7 @@ use fedsvd::apps::lr::run_federated_lr;
 use fedsvd::baselines::sgd_lr::{run_sgd_lr, SgdFramework};
 use fedsvd::bench::section;
 use fedsvd::data::regression_task;
-use fedsvd::linalg::NativeKernel;
+use fedsvd::linalg::CpuBackend;
 use fedsvd::net::{presets, LinkSpec};
 use fedsvd::paillier;
 use fedsvd::protocol::{split_columns, FedSvdConfig};
@@ -43,7 +43,7 @@ fn fig6a(costs: &paillier::OpCosts) {
             ..Default::default()
         };
         let t0 = std::time::Instant::now();
-        let out = run_federated_lr(&parts, &y, 0, &cfg, &NativeKernel).unwrap();
+        let out = run_federated_lr(&parts, &y, 0, &cfg, CpuBackend::global()).unwrap();
         let fed = t0.elapsed().as_secs_f64() + out.protocol.net.sim_elapsed_s();
 
         let fate = run_sgd_lr(&x, &y, 100, 0.5, 2, SgdFramework::Fate, costs,
@@ -77,7 +77,7 @@ fn fig6bc(costs: &paillier::OpCosts) {
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
-    let out = run_federated_lr(&parts, &y, 0, &cfg, &NativeKernel).unwrap();
+    let out = run_federated_lr(&parts, &y, 0, &cfg, CpuBackend::global()).unwrap();
     let fed_wall = t0.elapsed().as_secs_f64();
 
     println!("-- (b) bandwidth sweep (RTT 50 ms) --");

@@ -1,17 +1,21 @@
 //! Hot-path micro-benchmarks — the §Perf tracking harness.
 //!
 //! Covers every layer: native matmul (vs the naive triple loop), the
-//! block-masking product, secagg PRG expansion, the CSP SVD, and — when
-//! artifacts are present — the PJRT tile path. Run before/after every
-//! optimization; EXPERIMENTS.md §Perf logs the deltas.
+//! block-masking product, the Step-2 thread-scaling sweep (JSON rows for
+//! the perf trajectory), secagg PRG expansion, the CSP SVD, and — when
+//! built with `--features pjrt` and artifacts are present — the PJRT tile
+//! path. Run before/after every optimization; EXPERIMENTS.md §Perf logs
+//! the deltas.
 
 use fedsvd::bench::{bench, section};
 use fedsvd::linalg::matmul::matmul_naive;
-use fedsvd::linalg::{matmul, svd, Mat, MatKernel, NativeKernel};
-use fedsvd::mask::{block_orthogonal, mask_matrix};
+use fedsvd::linalg::{matmul, svd, CpuBackend, Mat};
+use fedsvd::mask::{block_orthogonal, mask_matrix, mask_matrix_with};
 use fedsvd::rng::Xoshiro256;
-use fedsvd::runtime::TileEngine;
 use fedsvd::secagg::SecAggGroup;
+
+#[cfg(feature = "pjrt")]
+use fedsvd::linalg::GemmBackend;
 
 fn main() {
     let mut rng = Xoshiro256::seed_from_u64(42);
@@ -42,6 +46,60 @@ fn main() {
     let mask_flops = 2.0 * (512.0 * 512.0 * 64.0) * 2.0;
     println!("masking: {:.2} GF/s effective", mask_flops / s_mask.median_s / 1e9);
 
+    // ---- Step-2 masking thread-scaling sweep (acceptance workload) -----
+    // 4096×4096 federated matrix, two users (2048 columns each), block 64.
+    // One JSON row per thread count so future PRs can chart the perf
+    // trajectory; outputs are asserted bit-identical across counts.
+    section(
+        "hotpath/L3",
+        "Step-2 masking thread scaling (4096×4096, 2 users, b=64) — JSON rows",
+    );
+    {
+        let (m, n, blk) = (4096usize, 4096usize, 64usize);
+        let p = block_orthogonal(m, blk, 3).unwrap();
+        let q = block_orthogonal(n, blk, 4).unwrap();
+        let x1 = Mat::gaussian(m, n / 2, &mut rng);
+        let x2 = Mat::gaussian(m, n - n / 2, &mut rng);
+        let qi1 = q.row_slice(0, n / 2).unwrap();
+        let qi2 = q.row_slice(n / 2, n).unwrap();
+        let mut base_median = 0.0f64;
+        let mut reference: Option<(Mat, Mat)> = None;
+        for threads in [1usize, 2, 4, 8] {
+            let backend = CpuBackend::with_threads(threads);
+            let s = bench(&format!("step2 mask 4096² {threads}t"), 1, 3, || {
+                (
+                    mask_matrix_with(&p, &x1, &qi1, &backend).unwrap(),
+                    mask_matrix_with(&p, &x2, &qi2, &backend).unwrap(),
+                )
+            });
+            println!("{}", s.row());
+            let out = (
+                mask_matrix_with(&p, &x1, &qi1, &backend).unwrap(),
+                mask_matrix_with(&p, &x2, &qi2, &backend).unwrap(),
+            );
+            let bit_identical = if let Some((r1, r2)) = reference.as_ref() {
+                let same = fedsvd::util::bits_equal(r1.data(), out.0.data())
+                    && fedsvd::util::bits_equal(r2.data(), out.1.data());
+                assert!(same, "thread count {threads} changed output bits!");
+                same
+            } else {
+                base_median = s.median_s;
+                true
+            };
+            if reference.is_none() {
+                reference = Some(out);
+            }
+            println!(
+                "{{\"bench\":\"step2_mask_scaling\",\"m\":{m},\"n\":{n},\"block\":{blk},\"users\":2,\
+                 \"threads\":{threads},\"median_s\":{:.6},\"min_s\":{:.6},\
+                 \"speedup_vs_1t\":{:.3},\"bit_identical_vs_1t\":{bit_identical}}}",
+                s.median_s,
+                s.min_s,
+                base_median / s.median_s
+            );
+        }
+    }
+
     section("hotpath/L3", "secagg mask expansion + aggregate (2 users, 64×512)");
     let seeds = vec![vec![0, 7], vec![7, 0]];
     let group = SecAggGroup::from_seeds(seeds).unwrap();
@@ -65,28 +123,37 @@ fn main() {
     let s_svd2 = bench("svd 384x96", 0, 3, || svd(&tall).unwrap());
     println!("{}", s_svd2.row());
 
-    section("hotpath/L1+runtime", "PJRT tile path (needs `make artifacts`)");
-    match TileEngine::from_artifacts() {
-        Ok(engine) => {
-            let ta = Mat::gaussian(64, 64, &mut rng);
-            let tb = Mat::gaussian(64, 64, &mut rng);
-            let tc = Mat::gaussian(64, 64, &mut rng);
-            let s_tile = bench("pjrt matmul 64", 2, 10, || engine.matmul(&ta, &tb).unwrap());
-            println!("{}", s_tile.row());
-            let s_fused = bench("pjrt fused mask_tile 64", 2, 10, || {
-                engine.mask_tile(&ta, &tb, &tc).unwrap()
-            });
-            println!("{}", s_fused.row());
-            let s_native_tile = bench("native 64 (ref)", 2, 10, || {
-                NativeKernel.mask_tile(&ta, &tb, &tc).unwrap()
-            });
-            println!("{}", s_native_tile.row());
-            println!(
-                "note: interpret-mode Pallas on CPU measures dispatch overhead,\n\
-                 not TPU performance — see DESIGN.md §Hardware-Adaptation for\n\
-                 the VMEM/MXU estimates that stand in for real-TPU numbers."
-            );
+    #[cfg(feature = "pjrt")]
+    {
+        use fedsvd::runtime::TileEngine;
+        section("hotpath/L1+runtime", "PJRT tile path (needs `make artifacts`)");
+        match TileEngine::from_artifacts() {
+            Ok(engine) => {
+                let ta = Mat::gaussian(64, 64, &mut rng);
+                let tb = Mat::gaussian(64, 64, &mut rng);
+                let tc = Mat::gaussian(64, 64, &mut rng);
+                let s_tile = bench("pjrt matmul 64", 2, 10, || engine.matmul(&ta, &tb).unwrap());
+                println!("{}", s_tile.row());
+                let s_fused = bench("pjrt fused mask_tile 64", 2, 10, || {
+                    engine.mask_tile(&ta, &tb, &tc).unwrap()
+                });
+                println!("{}", s_fused.row());
+                let s_native_tile = bench("cpu 64 (ref)", 2, 10, || {
+                    CpuBackend::global().mask_tile(&ta, &tb, &tc).unwrap()
+                });
+                println!("{}", s_native_tile.row());
+                println!(
+                    "note: interpret-mode Pallas on CPU measures dispatch overhead,\n\
+                     not TPU performance — see DESIGN.md §Hardware-Adaptation for\n\
+                     the VMEM/MXU estimates that stand in for real-TPU numbers."
+                );
+            }
+            Err(e) => println!("skipped ({e})"),
         }
-        Err(e) => println!("skipped ({e})"),
     }
+    #[cfg(not(feature = "pjrt"))]
+    section(
+        "hotpath/L1+runtime",
+        "PJRT tile path compiled out (build with --features pjrt)",
+    );
 }

@@ -13,7 +13,7 @@ use fedsvd::baselines::sgd_lr::{run_sgd_lr, SgdFramework};
 use fedsvd::baselines::wda::run_wda;
 use fedsvd::bench::section;
 use fedsvd::data;
-use fedsvd::linalg::{svd, Mat, NativeKernel, SvdResult};
+use fedsvd::linalg::{svd, CpuBackend, Mat, SvdResult};
 use fedsvd::net::presets;
 use fedsvd::paillier::OpCosts;
 use fedsvd::protocol::{run_fedsvd, split_columns, FedSvdConfig};
@@ -144,7 +144,7 @@ fn lr_columns() {
         let mse1000 = sgd.mse_per_epoch[999];
 
         let parts = split_columns(&xf, 2).unwrap();
-        let fed = run_federated_lr(&parts, &y, 0, &cfg(), &NativeKernel).unwrap();
+        let fed = run_federated_lr(&parts, &y, 0, &cfg(), CpuBackend::global()).unwrap();
 
         println!(
             "{name:<12} {mse10:>12.4e} {mse100:>12.4e} {mse1000:>12.4e} {:>12.4e}",

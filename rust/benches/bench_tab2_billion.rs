@@ -10,7 +10,7 @@
 use fedsvd::apps::{lr, lsa, pca};
 use fedsvd::bench::section;
 use fedsvd::data::{movielens_like, regression_task, synthetic_powerlaw};
-use fedsvd::linalg::NativeKernel;
+use fedsvd::linalg::CpuBackend;
 use fedsvd::protocol::{split_columns, FedSvdConfig};
 use fedsvd::util::human_secs;
 
@@ -64,7 +64,7 @@ fn main() {
         let x = synthetic_powerlaw(m, n, 0.01, 3);
         let parts = split_columns(&x, 2).unwrap();
         let t0 = std::time::Instant::now();
-        let out = pca::run_federated_pca(&parts, r, &cfg(), &NativeKernel).unwrap();
+        let out = pca::run_federated_pca(&parts, r, &cfg(), CpuBackend::global()).unwrap();
         let wall = t0.elapsed().as_secs_f64() + out.protocol.net.sim_elapsed_s();
         let est = fedsvd_est(100_000.0, 1_000_000.0, Some(5.0));
         println!(
@@ -84,7 +84,7 @@ fn main() {
         let x = movielens_like(m, n, 5);
         let parts = split_columns(&x, 2).unwrap();
         let t0 = std::time::Instant::now();
-        let out = lsa::run_federated_lsa(&parts, r, &cfg(), &NativeKernel).unwrap();
+        let out = lsa::run_federated_lsa(&parts, r, &cfg(), CpuBackend::global()).unwrap();
         let wall = t0.elapsed().as_secs_f64() + out.protocol.net.sim_elapsed_s();
         let est = fedsvd_est(62_000.0, 162_000.0, Some(256.0));
         println!(
@@ -104,7 +104,7 @@ fn main() {
         let (x, _w, y) = regression_task(m, n, 0.1, 7);
         let parts = split_columns(&x, 2).unwrap();
         let t0 = std::time::Instant::now();
-        let out = lr::run_federated_lr(&parts, &y, 0, &cfg(), &NativeKernel).unwrap();
+        let out = lr::run_federated_lr(&parts, &y, 0, &cfg(), CpuBackend::global()).unwrap();
         let wall = t0.elapsed().as_secs_f64() + out.protocol.net.sim_elapsed_s();
         let est = fedsvd_est(50_000_000.0, 1_000.0, None);
         println!(

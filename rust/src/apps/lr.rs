@@ -12,9 +12,9 @@
 //! * the CSP computes `w' = V'·Σ⁻¹·U'ᵀ·y' = Qᵀ·w` and broadcasts it;
 //! * user i recovers its own coefficients `wᵢ = Qᵢ·w'`.
 
-use crate::linalg::{Mat, MatKernel};
+use crate::linalg::{GemmBackend, Mat};
 use crate::net::link::{CSP, USER_BASE};
-use crate::protocol::{run_fedsvd_with_kernel, FedSvdConfig, FedSvdOutput, SvdMode};
+use crate::protocol::{run_fedsvd_with_backend, FedSvdConfig, FedSvdOutput, SvdMode};
 use crate::util::{Error, Result};
 
 /// Output of the federated LR application.
@@ -38,7 +38,7 @@ pub fn run_federated_lr(
     y: &[f64],
     label_owner: usize,
     cfg: &FedSvdConfig,
-    kernel: &dyn MatKernel,
+    backend: &dyn GemmBackend,
 ) -> Result<LrOutput> {
     if parts.is_empty() || label_owner >= parts.len() {
         return Err(Error::Protocol("lr: bad label owner".into()));
@@ -55,7 +55,7 @@ pub fn run_federated_lr(
     app_cfg.mode = SvdMode::Full;
     app_cfg.recover_u = false;
     app_cfg.recover_v = false;
-    let mut out = run_fedsvd_with_kernel(parts, &app_cfg, kernel)?;
+    let mut out = run_fedsvd_with_backend(parts, &app_cfg, backend)?;
 
     // label owner masks y and uploads: y' = P·y
     let y_masked = out.p_mask.mul_vec(y)?;
@@ -84,7 +84,7 @@ pub fn run_federated_lr(
     // user i: wᵢ = Qᵢ·w'
     let mut w_parts = Vec::with_capacity(parts.len());
     for qs in &out.q_slices {
-        w_parts.push(qs.mul_vec(&w_masked)?);
+        w_parts.push(qs.mul_vec_with(&w_masked, backend)?);
     }
 
     // federated training-MSE evaluation: partial predictions summed
@@ -126,7 +126,7 @@ pub fn centralized_lr(x: &Mat, y: &[f64]) -> Result<Vec<f64>> {
 mod tests {
     use super::*;
     use crate::data::regression_task;
-    use crate::linalg::NativeKernel;
+    use crate::linalg::CpuBackend;
     use crate::protocol::{split_bounds, split_columns};
     use crate::util::max_abs_diff;
 
@@ -142,7 +142,7 @@ mod tests {
     fn federated_lr_matches_centralized() {
         let (x, _w_true, y) = regression_task(40, 9, 0.1, 1);
         let parts = split_columns(&x, 2).unwrap();
-        let out = run_federated_lr(&parts, &y, 0, &cfg(), &NativeKernel).unwrap();
+        let out = run_federated_lr(&parts, &y, 0, &cfg(), CpuBackend::global()).unwrap();
         let w_central = centralized_lr(&x, &y).unwrap();
         let w_fed: Vec<f64> = out.w_parts.concat();
         assert!(
@@ -156,7 +156,7 @@ mod tests {
     fn recovers_true_weights_noiseless() {
         let (x, w_true, y) = regression_task(50, 7, 0.0, 2);
         let parts = split_columns(&x, 3).unwrap();
-        let out = run_federated_lr(&parts, &y, 1, &cfg(), &NativeKernel).unwrap();
+        let out = run_federated_lr(&parts, &y, 1, &cfg(), CpuBackend::global()).unwrap();
         let w_fed: Vec<f64> = out.w_parts.concat();
         assert!(max_abs_diff(&w_fed, &w_true) < 1e-8);
         assert!(out.train_mse < 1e-16);
@@ -167,7 +167,7 @@ mod tests {
         let (x, _w, y) = regression_task(30, 10, 0.05, 3);
         let parts = split_columns(&x, 3).unwrap();
         let bounds = split_bounds(10, 3);
-        let out = run_federated_lr(&parts, &y, 0, &cfg(), &NativeKernel).unwrap();
+        let out = run_federated_lr(&parts, &y, 0, &cfg(), CpuBackend::global()).unwrap();
         let w_central = centralized_lr(&x, &y).unwrap();
         for (i, wp) in out.w_parts.iter().enumerate() {
             assert_eq!(wp.len(), bounds[i + 1] - bounds[i]);
@@ -180,7 +180,7 @@ mod tests {
     fn csp_never_ships_factors_in_lr_mode() {
         let (x, _w, y) = regression_task(20, 6, 0.1, 4);
         let parts = split_columns(&x, 2).unwrap();
-        let out = run_federated_lr(&parts, &y, 0, &cfg(), &NativeKernel).unwrap();
+        let out = run_federated_lr(&parts, &y, 0, &cfg(), CpuBackend::global()).unwrap();
         assert!(out.protocol.u.is_none());
         assert!(out.protocol.v_parts.is_empty());
     }
@@ -190,7 +190,7 @@ mod tests {
         // SVD-LR is the global optimum: MSE must lower-bound a few SGD steps
         let (x, _w, y) = regression_task(60, 8, 0.3, 5);
         let parts = split_columns(&x, 2).unwrap();
-        let out = run_federated_lr(&parts, &y, 0, &cfg(), &NativeKernel).unwrap();
+        let out = run_federated_lr(&parts, &y, 0, &cfg(), CpuBackend::global()).unwrap();
         // crude SGD for comparison
         let mut w = vec![0.0; 8];
         let lr = 0.05;
@@ -213,7 +213,7 @@ mod tests {
     #[test]
     fn input_validation() {
         let parts = [Mat::zeros(5, 2)];
-        assert!(run_federated_lr(&parts, &[0.0; 4], 0, &cfg(), &NativeKernel).is_err());
-        assert!(run_federated_lr(&parts, &[0.0; 5], 3, &cfg(), &NativeKernel).is_err());
+        assert!(run_federated_lr(&parts, &[0.0; 4], 0, &cfg(), CpuBackend::global()).is_err());
+        assert!(run_federated_lr(&parts, &[0.0; 5], 3, &cfg(), CpuBackend::global()).is_err());
     }
 }

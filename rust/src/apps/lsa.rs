@@ -6,8 +6,8 @@
 //! runs the truncated protocol and recovers *both* `U'ᵣ` and the per-user
 //! `Vᵢᵀ` rows, ignoring everything beyond rank r.
 
-use crate::linalg::{Mat, MatKernel};
-use crate::protocol::{run_fedsvd_with_kernel, FedSvdConfig, FedSvdOutput, SvdMode};
+use crate::linalg::{GemmBackend, Mat};
+use crate::protocol::{run_fedsvd_with_backend, FedSvdConfig, FedSvdOutput, SvdMode};
 use crate::util::{Error, Result};
 
 /// Output of the federated LSA application.
@@ -26,7 +26,7 @@ pub fn run_federated_lsa(
     parts: &[Mat],
     rank: usize,
     cfg: &FedSvdConfig,
-    kernel: &dyn MatKernel,
+    backend: &dyn GemmBackend,
 ) -> Result<LsaOutput> {
     if rank == 0 {
         return Err(Error::Shape("lsa: rank 0".into()));
@@ -35,7 +35,7 @@ pub fn run_federated_lsa(
     app_cfg.mode = SvdMode::Truncated { rank };
     app_cfg.recover_u = true;
     app_cfg.recover_v = true;
-    let out = run_fedsvd_with_kernel(parts, &app_cfg, kernel)?;
+    let out = run_fedsvd_with_backend(parts, &app_cfg, backend)?;
     let u_r = out
         .u
         .clone()
@@ -79,7 +79,7 @@ pub fn doc_embedding(out: &LsaOutput, user: usize, doc: usize) -> Result<Vec<f64
 mod tests {
     use super::*;
     use crate::data::movielens_like;
-    use crate::linalg::{svd, NativeKernel};
+    use crate::linalg::{svd, CpuBackend};
     use crate::protocol::split_columns;
 
     fn cfg() -> FedSvdConfig {
@@ -94,7 +94,7 @@ mod tests {
     fn lsa_reconstruction_matches_truncated_svd() {
         let x = movielens_like(24, 20, 1);
         let parts = split_columns(&x, 2).unwrap();
-        let out = run_federated_lsa(&parts, 5, &cfg(), &NativeKernel).unwrap();
+        let out = run_federated_lsa(&parts, 5, &cfg(), CpuBackend::global()).unwrap();
         assert_eq!(out.u_r.shape(), (24, 5));
         assert_eq!(out.v_parts.len(), 2);
         assert_eq!(out.v_parts[0].shape(), (5, 10));
@@ -126,7 +126,7 @@ mod tests {
             x[(r, 7)] = v; // duplicate doc 3 into doc 7 (same user block)
         }
         let parts = split_columns(&x, 2).unwrap();
-        let out = run_federated_lsa(&parts, 4, &cfg(), &NativeKernel).unwrap();
+        let out = run_federated_lsa(&parts, 4, &cfg(), CpuBackend::global()).unwrap();
         let e3 = doc_embedding(&out, 0, 3).unwrap();
         let e7 = doc_embedding(&out, 1, 1).unwrap(); // doc 7 = second user's col 1
         let sim = cosine(&e3, &e7);
@@ -143,6 +143,6 @@ mod tests {
     #[test]
     fn rank_zero_rejected() {
         let parts = [Mat::zeros(4, 4)];
-        assert!(run_federated_lsa(&parts, 0, &cfg(), &NativeKernel).is_err());
+        assert!(run_federated_lsa(&parts, 0, &cfg(), CpuBackend::global()).is_err());
     }
 }

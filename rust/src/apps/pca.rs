@@ -9,8 +9,8 @@
 //! factorization and **broadcasts only the masked `U'ᵣ`** — Σ and V'ᵀ are
 //! neither computed to full width nor transmitted (`recover_v = false`).
 
-use crate::linalg::{Mat, MatKernel};
-use crate::protocol::{run_fedsvd_with_kernel, FedSvdConfig, FedSvdOutput, SvdMode};
+use crate::linalg::{GemmBackend, Mat};
+use crate::protocol::{run_fedsvd_with_backend, FedSvdConfig, FedSvdOutput, SvdMode};
 use crate::util::{Error, Result};
 
 /// Output of the federated PCA application.
@@ -36,7 +36,7 @@ pub fn run_federated_pca(
     parts: &[Mat],
     rank: usize,
     cfg: &FedSvdConfig,
-    kernel: &dyn MatKernel,
+    backend: &dyn GemmBackend,
 ) -> Result<PcaOutput> {
     if rank == 0 {
         return Err(Error::Shape("pca: rank 0".into()));
@@ -46,7 +46,7 @@ pub fn run_federated_pca(
     app_cfg.recover_u = true;
     app_cfg.recover_v = false; // paper: "ignores the computation and
                                // transmission of Σ, V'ᵀ to improve efficiency"
-    let out = run_fedsvd_with_kernel(parts, &app_cfg, kernel)?;
+    let out = run_fedsvd_with_backend(parts, &app_cfg, backend)?;
     let u_r = out
         .u
         .clone()
@@ -101,7 +101,7 @@ pub fn center_features(parts: &mut [Mat]) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::{svd, NativeKernel};
+    use crate::linalg::{svd, CpuBackend};
     use crate::protocol::split_columns;
     use crate::rng::Xoshiro256;
 
@@ -134,7 +134,7 @@ mod tests {
     fn pca_matches_centralized_truncated_svd() {
         let x = pca_matrix(16, 20, 1);
         let parts = split_columns(&x, 2).unwrap();
-        let out = run_federated_pca(&parts, 4, &cfg(), &NativeKernel).unwrap();
+        let out = run_federated_pca(&parts, 4, &cfg(), CpuBackend::global()).unwrap();
         let truth = svd(&x).unwrap().truncate(4);
         // subspace, not vector, comparison (signs/rotations may differ)
         let d = projection_distance(&out.u_r, &truth.u).unwrap();
@@ -149,7 +149,7 @@ mod tests {
         let mut rng = Xoshiro256::seed_from_u64(2);
         let x = Mat::gaussian(10, 14, &mut rng);
         let parts = split_columns(&x, 3).unwrap();
-        let out = run_federated_pca(&parts, 3, &cfg(), &NativeKernel).unwrap();
+        let out = run_federated_pca(&parts, 3, &cfg(), CpuBackend::global()).unwrap();
         assert_eq!(out.projections.len(), 3);
         assert_eq!(out.projections[0].shape(), (3, 5));
         // total projected energy equals Σ σᵢ² of the top-3
@@ -166,7 +166,7 @@ mod tests {
     fn pca_does_not_transmit_v() {
         let mut rng = Xoshiro256::seed_from_u64(3);
         let parts = split_columns(&Mat::gaussian(8, 10, &mut rng), 2).unwrap();
-        let out = run_federated_pca(&parts, 2, &cfg(), &NativeKernel).unwrap();
+        let out = run_federated_pca(&parts, 2, &cfg(), CpuBackend::global()).unwrap();
         assert!(out.protocol.v_parts.is_empty());
     }
 
@@ -196,6 +196,6 @@ mod tests {
     #[test]
     fn rank_zero_rejected() {
         let parts = [Mat::zeros(4, 4)];
-        assert!(run_federated_pca(&parts, 0, &cfg(), &NativeKernel).is_err());
+        assert!(run_federated_pca(&parts, 0, &cfg(), CpuBackend::global()).is_err());
     }
 }

@@ -1,31 +1,37 @@
 //! Session layer: the entry point a deployment would call.
 //!
-//! A [`Session`] owns the kernel choice (PJRT tile engine when artifacts
-//! exist, native fallback otherwise), runs the FedSVD protocol or one of
-//! the applications, and produces a [`SessionReport`] with the metrics the
+//! A [`Session`] owns the backend choice (PJRT tile engine when the
+//! `pjrt` feature is compiled in and artifacts exist, the pooled CPU
+//! backend otherwise), runs the FedSVD protocol or one of the
+//! applications, and produces a [`SessionReport`] with the metrics the
 //! paper reports (wall time, simulated network time, bytes, phases).
 
-use crate::linalg::{Mat, MatKernel, NativeKernel};
-use crate::protocol::{run_fedsvd_with_kernel, FedSvdConfig, FedSvdOutput};
+use crate::linalg::{CpuBackend, GemmBackend, Mat};
+use crate::protocol::{run_fedsvd_with_backend, FedSvdConfig, FedSvdOutput};
+#[cfg(feature = "pjrt")]
 use crate::runtime::TileEngine;
 use crate::util::Result;
 
-/// Which compute kernel a session uses for tile products.
+/// Which compute backend a session uses for dense products.
 pub enum KernelChoice {
-    Native(NativeKernel),
+    /// The pooled CPU backend (`FEDSVD_THREADS` lanes).
+    Cpu(&'static CpuBackend),
+    /// The AOT/PJRT tile engine (feature `pjrt`).
+    #[cfg(feature = "pjrt")]
     Pjrt(Box<TileEngine>),
 }
 
 impl KernelChoice {
-    pub fn as_kernel(&self) -> &dyn MatKernel {
+    pub fn as_backend(&self) -> &dyn GemmBackend {
         match self {
-            KernelChoice::Native(k) => k,
-            KernelChoice::Pjrt(k) => k.as_ref(),
+            KernelChoice::Cpu(b) => *b,
+            #[cfg(feature = "pjrt")]
+            KernelChoice::Pjrt(e) => e.as_ref(),
         }
     }
 
     pub fn name(&self) -> &'static str {
-        self.as_kernel().name()
+        self.as_backend().name()
     }
 }
 
@@ -46,30 +52,37 @@ pub struct SessionReport {
 }
 
 impl Session {
-    /// Create a session, preferring the PJRT tile engine when artifacts
-    /// are present (set `FEDSVD_FORCE_NATIVE=1` to skip).
+    /// Create a session, preferring the PJRT tile engine when compiled in
+    /// and artifacts are present (set `FEDSVD_FORCE_NATIVE=1` to skip).
     pub fn auto(cfg: FedSvdConfig) -> Self {
-        let force_native = std::env::var_os("FEDSVD_FORCE_NATIVE").is_some();
-        let kernel = if force_native {
-            KernelChoice::Native(NativeKernel)
-        } else {
-            match TileEngine::from_artifacts() {
-                Ok(engine) => KernelChoice::Pjrt(Box::new(engine)),
-                Err(_) => KernelChoice::Native(NativeKernel),
+        #[cfg(feature = "pjrt")]
+        {
+            let force_native = std::env::var_os("FEDSVD_FORCE_NATIVE").is_some();
+            if !force_native {
+                if let Ok(engine) = TileEngine::from_artifacts() {
+                    return Self {
+                        cfg,
+                        kernel: KernelChoice::Pjrt(Box::new(engine)),
+                    };
+                }
             }
-        };
-        Self { cfg, kernel }
-    }
-
-    /// Create a session pinned to the native kernel.
-    pub fn native(cfg: FedSvdConfig) -> Self {
+        }
         Self {
             cfg,
-            kernel: KernelChoice::Native(NativeKernel),
+            kernel: KernelChoice::Cpu(CpuBackend::global()),
+        }
+    }
+
+    /// Create a session pinned to the pooled CPU backend.
+    pub fn cpu(cfg: FedSvdConfig) -> Self {
+        Self {
+            cfg,
+            kernel: KernelChoice::Cpu(CpuBackend::global()),
         }
     }
 
     /// Create a session pinned to a PJRT tile engine.
+    #[cfg(feature = "pjrt")]
     pub fn pjrt(cfg: FedSvdConfig, engine: TileEngine) -> Self {
         Self {
             cfg,
@@ -81,13 +94,13 @@ impl Session {
         self.kernel.name()
     }
 
-    pub fn kernel(&self) -> &dyn MatKernel {
-        self.kernel.as_kernel()
+    pub fn kernel(&self) -> &dyn GemmBackend {
+        self.kernel.as_backend()
     }
 
     /// Run the core protocol over vertically-partitioned user parts.
     pub fn run_svd(&self, parts: &[Mat]) -> Result<(FedSvdOutput, SessionReport)> {
-        let out = run_fedsvd_with_kernel(parts, &self.cfg, self.kernel.as_kernel())?;
+        let out = run_fedsvd_with_backend(parts, &self.cfg, self.kernel.as_backend())?;
         let report = SessionReport {
             kernel: self.kernel.name(),
             wall_s: out.metrics.total_wall_s(),
@@ -107,15 +120,15 @@ mod tests {
     use crate::rng::Xoshiro256;
 
     #[test]
-    fn native_session_runs() {
+    fn cpu_session_runs() {
         let mut rng = Xoshiro256::seed_from_u64(1);
         let parts = split_columns(&Mat::gaussian(8, 10, &mut rng), 2).unwrap();
         let cfg = FedSvdConfig {
             block_size: 4,
             ..Default::default()
         };
-        let s = Session::native(cfg);
-        assert_eq!(s.kernel_name(), "native");
+        let s = Session::cpu(cfg);
+        assert_eq!(s.kernel_name(), "cpu");
         let (out, report) = s.run_svd(&parts).unwrap();
         assert_eq!(out.s.len(), 8);
         assert!(report.total_bytes > 0);
@@ -125,10 +138,11 @@ mod tests {
 
     #[test]
     fn auto_session_falls_back_without_artifacts() {
-        // point at a nonexistent artifacts dir and force re-resolution
+        // point at a nonexistent artifacts dir: auto must resolve to the
+        // CPU backend both with and without the pjrt feature
         std::env::set_var("FEDSVD_ARTIFACTS", "/nonexistent_fedsvd_artifacts");
         let s = Session::auto(FedSvdConfig::default());
-        assert_eq!(s.kernel_name(), "native");
+        assert_eq!(s.kernel_name(), "cpu");
         std::env::remove_var("FEDSVD_ARTIFACTS");
     }
 }

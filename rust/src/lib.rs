@@ -13,13 +13,34 @@
 //! * **Layer 1** — `python/compile/kernels/*.py`: Pallas tile kernels called
 //!   from Layer 2; correctness pinned against a pure-jnp oracle.
 //!
-//! The Rust binary is self-contained after `make artifacts`: Python never
-//! runs on the request path. AOT artifacts are loaded through
-//! [`runtime::PjrtEngine`] (PJRT CPU client from the `xla` crate).
+//! ## Compute architecture
+//!
+//! All dense math flows through one seam, [`linalg::GemmBackend`]:
+//! accumulating output-buffer GEMM ops (`gemm_into`, `gemm_view_acc`),
+//! fused block-diagonal masking (`mask_apply_into`) and backend-mediated
+//! task parallelism (`run_parallel`). Two implementations exist:
+//!
+//! * [`linalg::CpuBackend`] — always available: the register-blocked
+//!   native GEMM parallelized over disjoint row panels by the std-only
+//!   [`pool::ThreadPool`]. Lane count comes from `FEDSVD_THREADS`
+//!   (default: all cores) and results are **bit-identical at any thread
+//!   count** — partition-invariant accumulation keeps the paper's
+//!   lossless guarantees (Tab. 1) intact while scaling the Step-2 hot
+//!   loop across cores.
+//! * `runtime::TileEngine` (cargo feature `pjrt`, off by default) — the
+//!   AOT-compiled XLA tile path executed through PJRT; requires the
+//!   vendored `xla` crate and `make artifacts`. Python never runs on the
+//!   request path; without the feature the crate builds dependency-free.
+
+// Dense-kernel house style: index-heavy loops mirror the BLAS-layout math
+// and keep the per-element op order explicit (the bit-determinism
+// contract), and GEMM entry points legitimately take many scalars.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 pub mod util;
 
 // Substrates (bottom-up)
+pub mod pool;
 pub mod rng;
 pub mod linalg;
 pub mod bignum;

@@ -1,0 +1,607 @@
+//! The pluggable GEMM backend — the compute seam every protocol layer
+//! drives.
+//!
+//! [`GemmBackend`] replaces the old single-method `MatKernel` trait with
+//! accumulating, output-buffer operations so the Step-2 masking hot loop
+//! (paper §3.2, Eq. 5) performs **zero heap allocations per block
+//! product**:
+//!
+//! * [`GemmBackend::gemm_into`] — BLAS-style `C = α·op(A)·op(B) + β·C`
+//!   with transpose flags;
+//! * [`GemmBackend::gemm_view_acc`] — scatter-accumulate of a view product
+//!   into a window of a larger output (the block-diagonal column scatter);
+//! * [`GemmBackend::block_mul_into`] / [`GemmBackend::mask_apply_into`] —
+//!   the fused block-diagonal products `D·X` and `P·Xᵢ·Qᵢ`, parallelized
+//!   over disjoint row panels by [`CpuBackend`];
+//! * [`GemmBackend::run_parallel`] — backend-mediated task parallelism the
+//!   protocol uses to run per-user work concurrently.
+//!
+//! Implementations must be **bit-deterministic**: the same inputs produce
+//! the same output bits at any thread count (the lossless guarantees of
+//! Tab. 1 are asserted down to 1e-10..1e-15, and the determinism suite
+//! pins exact bit equality). [`CpuBackend`] achieves this by partitioning
+//! outputs into disjoint row panels whose per-element accumulation order
+//! is independent of the partition — see `linalg::matmul` module docs.
+//!
+//! The optional PJRT tile engine (`runtime::TileEngine`, cargo feature
+//! `pjrt`) implements this trait too, overriding the tile-shaped entry
+//! points with AOT-compiled XLA executables.
+
+use super::matmul::{gemm, gemm_nn, gemm_tn, gemm_view_acc_impl};
+use super::{Mat, MatView};
+use crate::pool::{self, ThreadPool};
+use crate::util::{Error, Result};
+use std::cell::RefCell;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// One scatter target of a fused masking panel: columns
+/// `[src_col, src_col + mat.rows())` of the `P·X` panel multiply `mat` and
+/// accumulate into columns `[out_col, out_col + mat.cols())` of the
+/// output. Mirrors `mask::block_diag::SlicePiece` without the ownership.
+pub struct ScatterPiece<'a> {
+    pub src_col: usize,
+    pub out_col: usize,
+    pub mat: &'a Mat,
+}
+
+thread_local! {
+    /// Per-lane scratch for the `P·X` panel intermediate — reused across
+    /// panels and calls so the Step-2 hot loop allocates at most once per
+    /// worker thread for the whole protocol run.
+    static PANEL_SCRATCH: RefCell<Vec<f64>> = RefCell::new(Vec::new());
+}
+
+/// A provider of dense f64 GEMM ops (see module docs for the contract).
+///
+/// Default method bodies delegate to [`CpuBackend::global`], so a backend
+/// that only accelerates some entry points (the PJRT tile engine overrides
+/// `matmul`/`mask_tile`) still gets pooled, bit-deterministic behavior for
+/// everything else from the single CPU fallback path.
+pub trait GemmBackend: Sync {
+    /// `C = α·op(A)·op(B) + β·C`.
+    fn gemm_into(
+        &self,
+        alpha: f64,
+        a: &Mat,
+        trans_a: bool,
+        b: &Mat,
+        trans_b: bool,
+        beta: f64,
+        c: &mut Mat,
+    ) -> Result<()> {
+        CpuBackend::global().gemm_into(alpha, a, trans_a, b, trans_b, beta, c)
+    }
+
+    /// `C[r0+i, c0+j] += α·(A·B)[i, j]` — allocation-free
+    /// scatter-accumulate of a view product into a window of `c`.
+    fn gemm_view_acc(
+        &self,
+        alpha: f64,
+        a: MatView<'_>,
+        b: MatView<'_>,
+        c: &mut Mat,
+        r0: usize,
+        c0: usize,
+    ) -> Result<()> {
+        CpuBackend::global().gemm_view_acc(alpha, a, b, c, r0, c0)
+    }
+
+    /// Block-diagonal product `out += D·X` (or `Dᵀ·X` with the flag):
+    /// block `i` acts on rows `[starts[i], starts[i] + blocks[i].rows())`
+    /// of both `x` and `out`. `out` must match `x`'s shape; callers zero
+    /// it for plain assignment.
+    fn block_mul_into(
+        &self,
+        starts: &[usize],
+        blocks: &[Mat],
+        trans_blocks: bool,
+        x: &Mat,
+        out: &mut Mat,
+    ) -> Result<()> {
+        CpuBackend::global().block_mul_into(starts, blocks, trans_blocks, x, out)
+    }
+
+    /// The fused Step-2 masking product `out += P·X·Q` with `P` given as
+    /// diagonal blocks and `Q` as scatter pieces: per P-block, the panel
+    /// `P_b·X[s.., :]` lands in a reused scratch buffer and is scattered
+    /// through the pieces straight into `out[s.., :]` — no per-block `Mat`
+    /// allocations (the old `MatKernel` hot-loop cost).
+    fn mask_apply_into(
+        &self,
+        starts: &[usize],
+        blocks: &[Mat],
+        x: &Mat,
+        pieces: &[ScatterPiece<'_>],
+        out: &mut Mat,
+    ) -> Result<()> {
+        CpuBackend::global().mask_apply_into(starts, blocks, x, pieces, out)
+    }
+
+    /// `A·B`, allocating.
+    fn matmul(&self, a: &Mat, b: &Mat) -> Result<Mat> {
+        let mut c = Mat::zeros(a.rows(), b.cols());
+        self.gemm_into(1.0, a, false, b, false, 0.0, &mut c)?;
+        Ok(c)
+    }
+
+    /// `P·X·Q` one-tile fused product. Default: two GEMMs; the PJRT
+    /// engine overrides with a single compiled executable.
+    fn mask_tile(&self, p_block: &Mat, x_tile: &Mat, q_block: &Mat) -> Result<Mat> {
+        let px = self.matmul(p_block, x_tile)?;
+        self.matmul(&px, q_block)
+    }
+
+    /// Run `f(0) … f(n-1)`, possibly concurrently. Implementations must
+    /// not split or reorder the work *inside* an index — protocol layers
+    /// rely on per-index bit-determinism and index-addressed outputs.
+    fn run_parallel(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        CpuBackend::global().run_parallel(n, f);
+    }
+
+    /// Degree of parallelism this backend aims for.
+    fn threads(&self) -> usize {
+        CpuBackend::global().threads()
+    }
+
+    /// Human-readable name for logs.
+    fn name(&self) -> &'static str;
+}
+
+/// Run `f(0) … f(n-1)` through the backend's task parallelism and collect
+/// the per-index results **in index order**, propagating the first error.
+/// The protocol layers use this for per-user fan-out (Step-2 masking
+/// shares, per-round secagg encodings): outputs are slot-addressed, so the
+/// schedule cannot affect the result.
+pub fn run_parallel_collect<T: Send>(
+    backend: &dyn GemmBackend,
+    n: usize,
+    f: impl Fn(usize) -> Result<T> + Sync,
+) -> Result<Vec<T>> {
+    let slots: Vec<Mutex<Option<Result<T>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    backend.run_parallel(n, &|i| {
+        *slots[i].lock().expect("result slot") = Some(f(i));
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().expect("result slot").expect("task ran"))
+        .collect()
+}
+
+/// Validate the contiguous block-diagonal structure against `x`/`out`.
+fn check_block_structure(starts: &[usize], blocks: &[Mat], x: &Mat, out: &Mat) -> Result<()> {
+    if starts.len() != blocks.len() {
+        return Err(Error::Shape(format!(
+            "block structure: {} starts for {} blocks",
+            starts.len(),
+            blocks.len()
+        )));
+    }
+    let mut expect = 0usize;
+    for (s, b) in starts.iter().zip(blocks) {
+        if *s != expect || b.rows() != b.cols() {
+            return Err(Error::Shape(format!(
+                "block structure: block at {s} (expected {expect}), {}x{}",
+                b.rows(),
+                b.cols()
+            )));
+        }
+        expect += b.rows();
+    }
+    if x.rows() != expect {
+        return Err(Error::Shape(format!(
+            "block structure: blocks span {expect} rows, X has {}",
+            x.rows()
+        )));
+    }
+    if out.shape() != x.shape() {
+        return Err(Error::Shape(format!(
+            "block structure: out {}x{} vs X {}x{}",
+            out.rows(),
+            out.cols(),
+            x.rows(),
+            x.cols()
+        )));
+    }
+    Ok(())
+}
+
+/// Validate a fused masking call: P blocks against `x`'s rows, pieces
+/// against `x`'s columns (the `P·X` panel width) and `out`'s columns.
+fn check_mask_apply(
+    starts: &[usize],
+    blocks: &[Mat],
+    x: &Mat,
+    pieces: &[ScatterPiece<'_>],
+    out: &Mat,
+) -> Result<()> {
+    if starts.len() != blocks.len() {
+        return Err(Error::Shape("mask_apply: starts/blocks mismatch".into()));
+    }
+    let mut expect = 0usize;
+    for (s, b) in starts.iter().zip(blocks) {
+        if *s != expect || b.rows() != b.cols() {
+            return Err(Error::Shape(format!(
+                "mask_apply: block at {s} (expected {expect}), {}x{}",
+                b.rows(),
+                b.cols()
+            )));
+        }
+        expect += b.rows();
+    }
+    if x.rows() != expect {
+        return Err(Error::Shape(format!(
+            "mask_apply: P spans {expect} rows, X has {}",
+            x.rows()
+        )));
+    }
+    if out.rows() != x.rows() {
+        return Err(Error::Shape(format!(
+            "mask_apply: out has {} rows, X has {}",
+            out.rows(),
+            x.rows()
+        )));
+    }
+    for p in pieces {
+        if p.src_col + p.mat.rows() > x.cols() || p.out_col + p.mat.cols() > out.cols() {
+            return Err(Error::Shape(format!(
+                "mask_apply: piece {}x{} at (src {}, out {}) vs X cols {} / out cols {}",
+                p.mat.rows(),
+                p.mat.cols(),
+                p.src_col,
+                p.out_col,
+                x.cols(),
+                out.cols()
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// `out_panel += op(blk)·x_panel` on full-row panel slices — the
+/// per-range body of [`CpuBackend`]'s `block_mul_into`.
+fn block_panel_slices(blk: &Mat, trans: bool, xpanel: &[f64], opanel: &mut [f64], t: usize) {
+    let r = blk.rows();
+    if trans {
+        gemm_tn(r, t, r, 1.0, blk.data(), blk.cols(), xpanel, t, opanel, t, None);
+    } else {
+        gemm_nn(r, t, r, 1.0, blk.data(), blk.cols(), xpanel, t, opanel, t, None);
+    }
+}
+
+/// One Step-2 panel: `out_panel += (P_blk·X_panel)·Q_pieces`.
+///
+/// `x_panel` is `r×t` contiguous; `out_panel` holds `r` full rows at
+/// stride `ldc`; `scratch` is resized to `r·t` and fully overwritten
+/// (shapes already validated by [`check_mask_apply`]).
+fn mask_panel_core(
+    p_block: &Mat,
+    x_panel: &[f64],
+    t: usize,
+    pieces: &[ScatterPiece<'_>],
+    out_panel: &mut [f64],
+    ldc: usize,
+    scratch: &mut Vec<f64>,
+) {
+    let r = p_block.rows();
+    if r == 0 || t == 0 {
+        return;
+    }
+    scratch.clear();
+    scratch.resize(r * t, 0.0);
+    gemm_nn(
+        r,
+        t,
+        r,
+        1.0,
+        p_block.data(),
+        p_block.cols(),
+        x_panel,
+        t,
+        scratch,
+        t,
+        None,
+    );
+    for piece in pieces {
+        let (kk, w) = (piece.mat.rows(), piece.mat.cols());
+        if kk == 0 || w == 0 {
+            continue;
+        }
+        gemm_nn(
+            r,
+            w,
+            kk,
+            1.0,
+            &scratch[piece.src_col..],
+            t,
+            piece.mat.data(),
+            w,
+            &mut out_panel[piece.out_col..],
+            ldc,
+            None,
+        );
+    }
+}
+
+/// The always-available CPU backend: the blocked GEMM core on the std-only
+/// [`crate::pool::ThreadPool`].
+///
+/// [`CpuBackend::global`] shares the process-wide pool (sized from
+/// `FEDSVD_THREADS`, default: available parallelism);
+/// [`CpuBackend::with_threads`] pins a private pool so tests and benches
+/// can prove partition invariance at 1, 2, …, N lanes. Results are
+/// bit-identical at any thread count.
+pub struct CpuBackend {
+    pool: PoolHandle,
+}
+
+enum PoolHandle {
+    Global,
+    Owned(Arc<ThreadPool>),
+}
+
+impl CpuBackend {
+    /// Shared backend on the process-wide pool.
+    pub fn global() -> &'static CpuBackend {
+        static G: OnceLock<CpuBackend> = OnceLock::new();
+        G.get_or_init(|| CpuBackend {
+            pool: PoolHandle::Global,
+        })
+    }
+
+    /// Backend with its own pool of exactly `threads` lanes.
+    pub fn with_threads(threads: usize) -> Self {
+        CpuBackend {
+            pool: PoolHandle::Owned(Arc::new(ThreadPool::new(threads))),
+        }
+    }
+
+    fn pool(&self) -> &ThreadPool {
+        match &self.pool {
+            PoolHandle::Global => pool::global(),
+            PoolHandle::Owned(p) => p,
+        }
+    }
+}
+
+impl GemmBackend for CpuBackend {
+    fn gemm_into(
+        &self,
+        alpha: f64,
+        a: &Mat,
+        trans_a: bool,
+        b: &Mat,
+        trans_b: bool,
+        beta: f64,
+        c: &mut Mat,
+    ) -> Result<()> {
+        gemm(alpha, a, trans_a, b, trans_b, beta, c, Some(self.pool()))
+    }
+
+    fn gemm_view_acc(
+        &self,
+        alpha: f64,
+        a: MatView<'_>,
+        b: MatView<'_>,
+        c: &mut Mat,
+        r0: usize,
+        c0: usize,
+    ) -> Result<()> {
+        gemm_view_acc_impl(alpha, a, b, c, r0, c0, Some(self.pool()))
+    }
+
+    fn block_mul_into(
+        &self,
+        starts: &[usize],
+        blocks: &[Mat],
+        trans_blocks: bool,
+        x: &Mat,
+        out: &mut Mat,
+    ) -> Result<()> {
+        check_block_structure(starts, blocks, x, out)?;
+        let t = x.cols();
+        if x.rows() == 0 || t == 0 {
+            return Ok(());
+        }
+        let ranges: Vec<(usize, usize)> = starts
+            .iter()
+            .zip(blocks)
+            .map(|(s, b)| (*s, b.rows()))
+            .collect();
+        pool::for_disjoint_row_panels(
+            Some(self.pool()),
+            out.data_mut(),
+            t,
+            &ranges,
+            &|i, opanel| {
+                let (s, blk) = (ranges[i].0, &blocks[i]);
+                let xpanel = &x.data()[s * t..(s + blk.rows()) * t];
+                block_panel_slices(blk, trans_blocks, xpanel, opanel, t);
+            },
+        );
+        Ok(())
+    }
+
+    fn mask_apply_into(
+        &self,
+        starts: &[usize],
+        blocks: &[Mat],
+        x: &Mat,
+        pieces: &[ScatterPiece<'_>],
+        out: &mut Mat,
+    ) -> Result<()> {
+        check_mask_apply(starts, blocks, x, pieces, out)?;
+        let (t, ldc) = (x.cols(), out.cols());
+        if x.rows() == 0 || t == 0 || ldc == 0 {
+            return Ok(());
+        }
+        let ranges: Vec<(usize, usize)> = starts
+            .iter()
+            .zip(blocks)
+            .map(|(s, b)| (*s, b.rows()))
+            .collect();
+        pool::for_disjoint_row_panels(
+            Some(self.pool()),
+            out.data_mut(),
+            ldc,
+            &ranges,
+            &|i, opanel| {
+                let (s, blk) = (ranges[i].0, &blocks[i]);
+                let xpanel = &x.data()[s * t..(s + blk.rows()) * t];
+                PANEL_SCRATCH.with(|cell| {
+                    mask_panel_core(blk, xpanel, t, pieces, opanel, ldc, &mut cell.borrow_mut());
+                });
+            },
+        );
+        Ok(())
+    }
+
+    fn run_parallel(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        self.pool().parallel_for(n, f);
+    }
+
+    fn threads(&self) -> usize {
+        self.pool().threads()
+    }
+
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::rng::Xoshiro256;
+    use crate::util::max_abs_diff;
+
+    fn bits_equal(a: &Mat, b: &Mat) -> bool {
+        a.shape() == b.shape() && crate::util::bits_equal(a.data(), b.data())
+    }
+
+    fn toy_blocks(sizes: &[usize], seed: u64) -> (Vec<usize>, Vec<Mat>) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut starts = Vec::new();
+        let mut blocks = Vec::new();
+        let mut off = 0usize;
+        for &s in sizes {
+            starts.push(off);
+            blocks.push(Mat::gaussian(s, s, &mut rng));
+            off += s;
+        }
+        (starts, blocks)
+    }
+
+    fn dense_of(starts: &[usize], blocks: &[Mat], dim: usize) -> Mat {
+        let mut d = Mat::zeros(dim, dim);
+        for (s, b) in starts.iter().zip(blocks) {
+            d.set_slice(*s, *s, b);
+        }
+        d
+    }
+
+    #[test]
+    fn backend_matmul_matches_free_function() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let a = Mat::gaussian(5, 6, &mut rng);
+        let b = Mat::gaussian(6, 4, &mut rng);
+        let k = CpuBackend::with_threads(1);
+        let r1 = k.matmul(&a, &b).unwrap();
+        let r2 = matmul(&a, &b).unwrap();
+        assert!(max_abs_diff(r1.data(), r2.data()) == 0.0);
+        assert_eq!(k.name(), "cpu");
+        assert_eq!(k.threads(), 1);
+    }
+
+    #[test]
+    fn default_mask_tile_is_two_products() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let p = Mat::gaussian(4, 4, &mut rng);
+        let x = Mat::gaussian(4, 3, &mut rng);
+        let q = Mat::gaussian(3, 3, &mut rng);
+        let k = CpuBackend::with_threads(2);
+        let fused = k.mask_tile(&p, &x, &q).unwrap();
+        let manual = matmul(&matmul(&p, &x).unwrap(), &q).unwrap();
+        assert!(max_abs_diff(fused.data(), manual.data()) == 0.0);
+    }
+
+    #[test]
+    fn block_mul_matches_dense_product() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let (starts, blocks) = toy_blocks(&[3, 2, 4], 30);
+        let x = Mat::gaussian(9, 5, &mut rng);
+        let dense = dense_of(&starts, &blocks, 9);
+        for threads in [1usize, 3] {
+            let be = CpuBackend::with_threads(threads);
+            let mut out = Mat::zeros(9, 5);
+            be.block_mul_into(&starts, &blocks, false, &x, &mut out).unwrap();
+            let expect = matmul(&dense, &x).unwrap();
+            assert!(max_abs_diff(out.data(), expect.data()) < 1e-12);
+            // transpose flag
+            let mut out_t = Mat::zeros(9, 5);
+            be.block_mul_into(&starts, &blocks, true, &x, &mut out_t).unwrap();
+            let expect_t = matmul(&dense.transpose(), &x).unwrap();
+            assert!(max_abs_diff(out_t.data(), expect_t.data()) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn mask_apply_matches_dense_triple_product() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let (starts, blocks) = toy_blocks(&[3, 4, 2], 40);
+        let x = Mat::gaussian(9, 6, &mut rng);
+        // two pieces scattering the 6 panel columns into a 10-wide output
+        let q1 = Mat::gaussian(4, 4, &mut rng);
+        let q2 = Mat::gaussian(2, 3, &mut rng);
+        let pieces = vec![
+            ScatterPiece { src_col: 0, out_col: 1, mat: &q1 },
+            ScatterPiece { src_col: 4, out_col: 7, mat: &q2 },
+        ];
+        // dense reference: Q dense 6x10 assembled from the pieces
+        let mut qd = Mat::zeros(6, 10);
+        qd.set_slice(0, 1, &q1);
+        qd.set_slice(4, 7, &q2);
+        let pd = dense_of(&starts, &blocks, 9);
+        let expect = matmul(&matmul(&pd, &x).unwrap(), &qd).unwrap();
+
+        let single = CpuBackend::with_threads(1);
+        let mut ref_out = Mat::zeros(9, 10);
+        single
+            .mask_apply_into(&starts, &blocks, &x, &pieces, &mut ref_out)
+            .unwrap();
+        assert!(max_abs_diff(ref_out.data(), expect.data()) < 1e-11);
+
+        for threads in [2usize, 5] {
+            let be = CpuBackend::with_threads(threads);
+            let mut out = Mat::zeros(9, 10);
+            be.mask_apply_into(&starts, &blocks, &x, &pieces, &mut out).unwrap();
+            assert!(bits_equal(&ref_out, &out), "threads={threads} bits differ");
+        }
+    }
+
+    #[test]
+    fn mask_apply_rejects_bad_shapes() {
+        let (starts, blocks) = toy_blocks(&[2, 2], 50);
+        let x = Mat::zeros(5, 3); // 5 rows vs blocks spanning 4
+        let be = CpuBackend::with_threads(1);
+        let mut out = Mat::zeros(5, 3);
+        assert!(be.mask_apply_into(&starts, &blocks, &x, &[], &mut out).is_err());
+        // piece out of range
+        let x2 = Mat::zeros(4, 3);
+        let mut out2 = Mat::zeros(4, 3);
+        let q = Mat::zeros(2, 2);
+        let bad = vec![ScatterPiece { src_col: 2, out_col: 2, mat: &q }];
+        assert!(be.mask_apply_into(&starts, &blocks, &x2, &bad, &mut out2).is_err());
+    }
+
+    #[test]
+    fn run_parallel_covers_indices() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let be = CpuBackend::with_threads(3);
+        let sum = AtomicUsize::new(0);
+        be.run_parallel(9, &|i| {
+            sum.fetch_add(i + 1, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+}

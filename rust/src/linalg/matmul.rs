@@ -1,47 +1,130 @@
-//! Register- and cache-blocked dense matmul.
+//! Register- and cache-blocked dense GEMM — the allocation-free compute
+//! core under the FedSVD hot path.
 //!
-//! This is the native (non-PJRT) compute kernel under the FedSVD hot path:
-//! masking/unmasking is a stream of (b×b)·(b×t) block products (paper §3.2,
-//! Eq. 5). The PJRT path (`runtime::TileEngine`) offloads the same products
-//! to an AOT-compiled XLA executable; this kernel is both the fallback and
-//! the cross-check.
+//! Masking/unmasking is a stream of (b×b)·(b×t) block products (paper
+//! §3.2, Eq. 5). Every entry point here is *output-buffer* style
+//! ([`gemm`]: `C = α·op(A)·op(B) + β·C`) so protocol layers accumulate
+//! into pre-allocated matrices instead of heap-allocating a fresh product
+//! per block. The optional PJRT path (`runtime::TileEngine`, feature
+//! `pjrt`) offloads tile products to an AOT-compiled XLA executable; this
+//! kernel is both the fallback and the cross-check oracle.
 //!
-//! Layout: row-major everywhere. The micro-kernel computes a 4×16 register
-//! tile of C (8 zmm accumulators on this AVX-512 core) with the k-loop
-//! innermost, streaming B rows sequentially — ~1.8× over the (auto-
-//! vectorized) naive triple loop at 256³; iteration log in
-//! EXPERIMENTS.md §Perf.
+//! Layout: row-major everywhere, explicit row strides (`lda`/`ldb`/`ldc`)
+//! so panels and scatter targets are views, not copies. The no-transpose
+//! micro-kernel computes a 4×16 register tile of C (8 zmm accumulators on
+//! this AVX-512 core) with the k-loop innermost, streaming B rows
+//! sequentially — ~1.8× over the (auto-vectorized) naive triple loop at
+//! 256³; iteration log in EXPERIMENTS.md §Perf.
+//!
+//! **Determinism contract.** Multi-threading partitions C into row chunks;
+//! each output element is produced by exactly one chunk with an identical
+//! per-element accumulation order — (jc, pc) cache blocks in fixed order,
+//! k ascending inside a block — regardless of chunk boundaries or thread
+//! count. Results are therefore bit-identical for any [`ThreadPool`],
+//! which is what keeps the protocol lossless *and* reproducible.
 
-use super::Mat;
+use super::{Mat, MatView};
+use crate::pool::{SendPtr, ThreadPool};
 use crate::util::{Error, Result};
 
 /// Cache-block sizes (tuned on the 1-core target; see §Perf iteration log).
-const MC: usize = 128; // rows of A per L2 block
+const MC: usize = 128; // rows of A per L2 block — also the parallel row-chunk
 const KC: usize = 256; // shared dim per block
 const NC: usize = 512; // cols of B per block
 
-/// `C = A * B`.
+/// Row-chunk size for the transpose-path kernels.
+const TC: usize = 64;
+
+/// `C = A * B` (allocating convenience; runs on the global pool).
 pub fn matmul(a: &Mat, b: &Mat) -> Result<Mat> {
-    if a.cols() != b.rows() {
-        return Err(Error::Shape(format!(
-            "matmul: {}x{} * {}x{}",
-            a.rows(),
-            a.cols(),
-            b.rows(),
-            b.cols()
-        )));
-    }
     let mut c = Mat::zeros(a.rows(), b.cols());
-    matmul_acc(a, b, &mut c)?;
+    gemm(1.0, a, false, b, false, 0.0, &mut c, Some(crate::pool::global()))?;
     Ok(c)
 }
 
-/// `C = A * B` into a pre-allocated output (must be zeroed or hold a
-/// partial sum to accumulate onto).
+/// `C = A * B` into a pre-allocated output. Existing contents of `c` are
+/// overwritten (β = 0 semantics); use [`matmul_acc`] — or [`gemm`] with
+/// β = 1 — to accumulate onto a partial sum instead.
 pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) -> Result<()> {
-    if a.cols() != b.rows() || c.rows() != a.rows() || c.cols() != b.cols() {
+    gemm(1.0, a, false, b, false, 0.0, c, Some(crate::pool::global()))
+}
+
+/// `C += A * B`.
+pub fn matmul_acc(a: &Mat, b: &Mat, c: &mut Mat) -> Result<()> {
+    gemm(1.0, a, false, b, false, 1.0, c, Some(crate::pool::global()))
+}
+
+/// General matrix multiply-accumulate: `C = α·op(A)·op(B) + β·C`, where
+/// `op(M)` is `M` or `Mᵀ` per the transpose flags.
+///
+/// `β = 0` overwrites `c` (its prior contents are never read), `β = 1`
+/// accumulates, other values scale first. Supplying a `pool` parallelizes
+/// over row chunks of `C`; see the module docs for the bit-determinism
+/// contract.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm(
+    alpha: f64,
+    a: &Mat,
+    trans_a: bool,
+    b: &Mat,
+    trans_b: bool,
+    beta: f64,
+    c: &mut Mat,
+    pool: Option<&ThreadPool>,
+) -> Result<()> {
+    let (m, ka) = if trans_a {
+        (a.cols(), a.rows())
+    } else {
+        (a.rows(), a.cols())
+    };
+    let (kb, n) = if trans_b {
+        (b.cols(), b.rows())
+    } else {
+        (b.rows(), b.cols())
+    };
+    if ka != kb || c.rows() != m || c.cols() != n {
         return Err(Error::Shape(format!(
-            "matmul_into: {}x{} * {}x{} -> {}x{}",
+            "gemm: op(A) {m}x{ka} · op(B) {kb}x{n} -> C {}x{}",
+            c.rows(),
+            c.cols()
+        )));
+    }
+    if beta == 0.0 {
+        c.data_mut().fill(0.0);
+    } else if beta != 1.0 {
+        for v in c.data_mut().iter_mut() {
+            *v *= beta;
+        }
+    }
+    if m == 0 || n == 0 || ka == 0 || alpha == 0.0 {
+        return Ok(());
+    }
+    let k = ka;
+    let (lda, ldb, ldc) = (a.cols(), b.cols(), n);
+    let (ad, bd) = (a.data(), b.data());
+    match (trans_a, trans_b) {
+        (false, false) => gemm_nn(m, n, k, alpha, ad, lda, bd, ldb, c.data_mut(), ldc, pool),
+        (true, false) => gemm_tn(m, n, k, alpha, ad, lda, bd, ldb, c.data_mut(), ldc, pool),
+        (false, true) => gemm_nt(m, n, k, alpha, ad, lda, bd, ldb, c.data_mut(), ldc, pool),
+        (true, true) => gemm_tt(m, n, k, alpha, ad, lda, bd, ldb, c.data_mut(), ldc, pool),
+    }
+    Ok(())
+}
+
+/// `C[r0+i, c0+j] += α·(A·B)[i, j]` for view operands — the scatter
+/// primitive behind the block-diagonal mask products (no temporaries).
+pub(crate) fn gemm_view_acc_impl(
+    alpha: f64,
+    a: MatView<'_>,
+    b: MatView<'_>,
+    c: &mut Mat,
+    r0: usize,
+    c0: usize,
+    pool: Option<&ThreadPool>,
+) -> Result<()> {
+    if a.cols() != b.rows() || r0 + a.rows() > c.rows() || c0 + b.cols() > c.cols() {
+        return Err(Error::Shape(format!(
+            "gemm_view_acc: {}x{} · {}x{} into {}x{} at ({r0},{c0})",
             a.rows(),
             a.cols(),
             b.rows(),
@@ -50,49 +133,203 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) -> Result<()> {
             c.cols()
         )));
     }
-    for v in c.data_mut().iter_mut() {
-        *v = 0.0;
-    }
-    matmul_acc(a, b, c)
-}
-
-/// `C += A * B` (shape-checked by callers above).
-pub fn matmul_acc(a: &Mat, b: &Mat, c: &mut Mat) -> Result<()> {
-    if a.cols() != b.rows() || c.rows() != a.rows() || c.cols() != b.cols() {
-        return Err(Error::Shape("matmul_acc: shape mismatch".into()));
-    }
-    let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    if m == 0 || k == 0 || n == 0 {
+    let (m, n, k) = (a.rows(), b.cols(), a.cols());
+    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
         return Ok(());
     }
-    let ad = a.data();
-    let bd = b.data();
-    let cd = c.data_mut();
-
-    for jc in (0..n).step_by(NC) {
-        let nc = NC.min(n - jc);
-        for pc in (0..k).step_by(KC) {
-            let kc = KC.min(k - pc);
-            for ic in (0..m).step_by(MC) {
-                let mc = MC.min(m - ic);
-                block_kernel(ad, bd, cd, k, n, ic, jc, pc, mc, nc, kc);
-            }
-        }
-    }
+    let ldc = c.cols();
+    let off = r0 * ldc + c0;
+    let clen = (m - 1) * ldc + n;
+    let csub = &mut c.data_mut()[off..off + clen];
+    gemm_nn(m, n, k, alpha, a.data(), a.ld(), b.data(), b.ld(), csub, ldc, pool);
     Ok(())
 }
 
-/// Inner block: C[ic..ic+mc, jc..jc+nc] += A[ic.., pc..] * B[pc.., jc..]
-/// with a 4×16 register micro-tile.
+/// Partition `c` into row chunks and run `body(r0, rows, c_chunk)` on each,
+/// in parallel when a multi-lane pool is supplied. `c_chunk` starts at row
+/// `r0` and is exactly `(rows-1)*ldc + n` long, so short trailing rows of
+/// offset views stay in bounds. Chunk boundaries never change results:
+/// each output row is produced by exactly one chunk with an identical op
+/// order (see module docs).
+fn parallel_rows(
+    pool: Option<&ThreadPool>,
+    m: usize,
+    n: usize,
+    c: &mut [f64],
+    ldc: usize,
+    chunk: usize,
+    body: &(dyn Fn(usize, usize, &mut [f64]) + Sync),
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    debug_assert!((m - 1) * ldc + n <= c.len());
+    let tasks = m.div_ceil(chunk);
+    if tasks <= 1 || pool.map_or(true, |p| p.threads() <= 1) {
+        for t in 0..tasks {
+            let r0 = t * chunk;
+            let rows = chunk.min(m - r0);
+            let clen = (rows - 1) * ldc + n;
+            body(r0, rows, &mut c[r0 * ldc..r0 * ldc + clen]);
+        }
+    } else {
+        let base = SendPtr(c.as_mut_ptr());
+        pool.expect("pool checked above").parallel_for(tasks, &move |t| {
+            let r0 = t * chunk;
+            let rows = chunk.min(m - r0);
+            let clen = (rows - 1) * ldc + n;
+            // SAFETY: row chunks are pairwise disjoint and in bounds.
+            let csub = unsafe { std::slice::from_raw_parts_mut(base.0.add(r0 * ldc), clen) };
+            body(r0, rows, csub);
+        });
+    }
+}
+
+/// `C[0..m, 0..n] += α·A·B` on pre-offset row-major slices (no transpose).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_nn(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    c: &mut [f64],
+    ldc: usize,
+    pool: Option<&ThreadPool>,
+) {
+    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+        return;
+    }
+    parallel_rows(pool, m, n, c, ldc, MC, &|r0, rows, csub| {
+        let asub = &a[r0 * lda..];
+        for jc in (0..n).step_by(NC) {
+            let nc = NC.min(n - jc);
+            for pc in (0..k).step_by(KC) {
+                let kc = KC.min(k - pc);
+                block_kernel(asub, b, csub, lda, ldb, ldc, alpha, jc, pc, rows, nc, kc);
+            }
+        }
+    });
+}
+
+/// `C += α·Aᵀ·B`: k-outer accumulation of scaled B rows — the cache
+/// pattern `Mat::t_mul` always used, now row-chunk parallel.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_tn(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    c: &mut [f64],
+    ldc: usize,
+    pool: Option<&ThreadPool>,
+) {
+    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+        return;
+    }
+    parallel_rows(pool, m, n, c, ldc, TC, &|r0, rows, csub| {
+        for p in 0..k {
+            let brow = &b[p * ldb..p * ldb + n];
+            let arow = &a[p * lda..];
+            for i in 0..rows {
+                let av = alpha * arow[r0 + i];
+                if av != 0.0 {
+                    let crow = &mut csub[i * ldc..i * ldc + n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// `C += α·A·Bᵀ`: row-row dot products.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_nt(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    c: &mut [f64],
+    ldc: usize,
+    pool: Option<&ThreadPool>,
+) {
+    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+        return;
+    }
+    parallel_rows(pool, m, n, c, ldc, TC, &|r0, rows, csub| {
+        for i in 0..rows {
+            let ar = &a[(r0 + i) * lda..(r0 + i) * lda + k];
+            let crow = &mut csub[i * ldc..i * ldc + n];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                let br = &b[j * ldb..j * ldb + k];
+                let mut acc = 0.0;
+                for (x, y) in ar.iter().zip(br) {
+                    acc += x * y;
+                }
+                *cv += alpha * acc;
+            }
+        }
+    });
+}
+
+/// `C += α·Aᵀ·Bᵀ` — cold path (no hot caller), scalar loops.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_tt(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    c: &mut [f64],
+    ldc: usize,
+    pool: Option<&ThreadPool>,
+) {
+    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+        return;
+    }
+    parallel_rows(pool, m, n, c, ldc, TC, &|r0, rows, csub| {
+        for i in 0..rows {
+            let crow = &mut csub[i * ldc..i * ldc + n];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                let br = &b[j * ldb..j * ldb + k];
+                let mut acc = 0.0;
+                for (p, &bv) in br.iter().enumerate() {
+                    acc += a[p * lda + r0 + i] * bv;
+                }
+                *cv += alpha * acc;
+            }
+        }
+    });
+}
+
+/// Inner cache block: `C[0..mc, jc..jc+nc] += α·A[0.., pc..]·B[pc.., jc..]`
+/// with a 4×16 register micro-tile. Row indices are relative to the chunk.
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn block_kernel(
     a: &[f64],
     b: &[f64],
     c: &mut [f64],
-    lda: usize, // = a.cols
-    ldb: usize, // = b.cols (also c.cols)
-    ic: usize,
+    lda: usize,
+    ldb: usize,
+    ldc: usize,
+    alpha: f64,
     jc: usize,
     pc: usize,
     mc: usize,
@@ -108,18 +345,19 @@ fn block_kernel(
         while j < nc {
             let nr = NR.min(nc - j);
             if mr == MR && nr == NR {
-                micro_4x16(a, b, c, lda, ldb, ic + i, jc + j, pc, kc);
+                micro_4x16(a, b, c, lda, ldb, ldc, alpha, i, jc + j, pc, kc);
             } else {
-                // ragged edge: scalar loop
+                // ragged edge: scalar loop (same per-element k order as the
+                // micro-tile, so tiling raggedness never changes bits)
                 for ii in 0..mr {
-                    let arow = (ic + i + ii) * lda + pc;
-                    let crow = (ic + i + ii) * ldb + jc + j;
+                    let arow = (i + ii) * lda + pc;
+                    let crow = (i + ii) * ldc + jc + j;
                     for jj in 0..nr {
                         let mut acc = 0.0;
                         for p in 0..kc {
                             acc += a[arow + p] * b[(pc + p) * ldb + jc + j + jj];
                         }
-                        c[crow + jj] += acc;
+                        c[crow + jj] += alpha * acc;
                     }
                 }
             }
@@ -140,6 +378,8 @@ fn micro_4x16(
     c: &mut [f64],
     lda: usize,
     ldb: usize,
+    ldc: usize,
+    alpha: f64,
     i0: usize,
     j0: usize,
     pc: usize,
@@ -162,9 +402,9 @@ fn micro_4x16(
         }
     }
     for (ii, accr) in acc.iter().enumerate() {
-        let crow = (i0 + ii) * ldb + j0;
+        let crow = (i0 + ii) * ldc + j0;
         for jj in 0..16 {
-            c[crow + jj] += accr[jj];
+            c[crow + jj] += alpha * accr[jj];
         }
     }
 }
@@ -192,6 +432,7 @@ pub fn matmul_naive(a: &Mat, b: &Mat) -> Result<Mat> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pool::ThreadPool;
     use crate::rng::Xoshiro256;
     use crate::util::max_abs_diff;
 
@@ -247,6 +488,15 @@ mod tests {
     }
 
     #[test]
+    fn matmul_into_overwrites_stale_contents() {
+        let a = Mat::eye(2);
+        let b = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]).unwrap();
+        let mut c = Mat::from_vec(2, 2, vec![9., 9., 9., 9.]).unwrap();
+        matmul_into(&a, &b, &mut c).unwrap();
+        assert_eq!(c.data(), &[1., 2., 3., 4.]);
+    }
+
+    #[test]
     fn matmul_acc_accumulates() {
         let a = Mat::eye(2);
         let b = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]).unwrap();
@@ -272,5 +522,83 @@ mod tests {
         let left = matmul(&matmul(&a, &b).unwrap(), &c).unwrap();
         let right = matmul(&a, &matmul(&b, &c).unwrap()).unwrap();
         assert!(max_abs_diff(left.data(), right.data()) < 1e-10);
+    }
+
+    #[test]
+    fn gemm_transpose_flags_match_explicit_transpose() {
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let a = Mat::gaussian(9, 5, &mut rng);
+        let b = Mat::gaussian(9, 7, &mut rng);
+        // AᵀB
+        let mut c = Mat::zeros(5, 7);
+        gemm(1.0, &a, true, &b, false, 0.0, &mut c, None).unwrap();
+        let slow = matmul(&a.transpose(), &b).unwrap();
+        assert!(max_abs_diff(c.data(), slow.data()) < 1e-12);
+        // ABᵀ with A 9x5, B 7x5
+        let b2 = Mat::gaussian(7, 5, &mut rng);
+        let mut c2 = Mat::zeros(9, 7);
+        gemm(1.0, &a, false, &b2, true, 0.0, &mut c2, None).unwrap();
+        let slow2 = matmul(&a, &b2.transpose()).unwrap();
+        assert!(max_abs_diff(c2.data(), slow2.data()) < 1e-12);
+        // AᵀBᵀ with A 9x5, B 7x9
+        let b3 = Mat::gaussian(7, 9, &mut rng);
+        let mut c3 = Mat::zeros(5, 7);
+        gemm(1.0, &a, true, &b3, true, 0.0, &mut c3, None).unwrap();
+        let slow3 = matmul(&a.transpose(), &b3.transpose()).unwrap();
+        assert!(max_abs_diff(c3.data(), slow3.data()) < 1e-12);
+    }
+
+    #[test]
+    fn gemm_alpha_beta_semantics() {
+        let mut rng = Xoshiro256::seed_from_u64(12);
+        let a = Mat::gaussian(6, 4, &mut rng);
+        let b = Mat::gaussian(4, 5, &mut rng);
+        let c0 = Mat::gaussian(6, 5, &mut rng);
+        let mut c = c0.clone();
+        gemm(2.0, &a, false, &b, false, 0.5, &mut c, None).unwrap();
+        let expect = matmul(&a, &b).unwrap().scale(2.0).add(&c0.scale(0.5)).unwrap();
+        assert!(max_abs_diff(c.data(), expect.data()) < 1e-12);
+        // α = 0 leaves β·C
+        let mut c2 = c0.clone();
+        gemm(0.0, &a, false, &b, false, 1.0, &mut c2, None).unwrap();
+        assert_eq!(c2.data(), c0.data());
+    }
+
+    #[test]
+    fn gemm_pool_is_bit_identical_to_sequential() {
+        let pool = ThreadPool::new(4);
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        for &(m, k, n) in &[(257usize, 130usize, 33usize), (513, 64, 17), (100, 300, 100)] {
+            let a = Mat::gaussian(m, k, &mut rng);
+            let b = Mat::gaussian(k, n, &mut rng);
+            let mut c_seq = Mat::zeros(m, n);
+            gemm(1.0, &a, false, &b, false, 0.0, &mut c_seq, None).unwrap();
+            let mut c_par = Mat::zeros(m, n);
+            gemm(1.0, &a, false, &b, false, 0.0, &mut c_par, Some(&pool)).unwrap();
+            assert!(
+                crate::util::bits_equal(c_seq.data(), c_par.data()),
+                "({m},{k},{n}) parallel bits differ"
+            );
+        }
+    }
+
+    #[test]
+    fn gemm_view_acc_scatters_at_offset() {
+        let mut rng = Xoshiro256::seed_from_u64(14);
+        let big = Mat::gaussian(10, 12, &mut rng);
+        let a = big.view(2, 7, 3, 6); // 5x3
+        let b = Mat::gaussian(3, 4, &mut rng);
+        let mut c = Mat::zeros(8, 9);
+        gemm_view_acc_impl(1.0, a, b.as_view(), &mut c, 2, 4, None).unwrap();
+        let a_dense = big.slice(2, 7, 3, 6);
+        let expect = matmul(&a_dense, &b).unwrap();
+        for i in 0..5 {
+            for j in 0..4 {
+                assert!((c[(2 + i, 4 + j)] - expect[(i, j)]).abs() < 1e-12);
+            }
+        }
+        // untouched elsewhere
+        assert_eq!(c[(0, 0)], 0.0);
+        assert_eq!(c[(7, 8)], 0.0);
     }
 }

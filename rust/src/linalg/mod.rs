@@ -1,21 +1,24 @@
 //! Dense linear algebra substrate.
 //!
 //! Everything FedSVD needs, built from scratch (no BLAS/LAPACK in the
-//! offline image): a row-major [`Mat`] type, register-blocked matmul,
-//! Householder QR and (modified) Gram–Schmidt, a full Golub–Kahan SVD,
-//! randomized truncated SVD, a Jacobi symmetric eigendecomposition and an
-//! LU solver. All f64 — the paper's losslessness claims (Tab. 1: errors at
+//! offline image): a row-major [`Mat`] type with borrowed [`MatView`]
+//! windows, a register-blocked multi-threaded GEMM behind the
+//! [`GemmBackend`] seam (accumulating output-buffer ops, transpose flags,
+//! bit-deterministic at any `FEDSVD_THREADS`), Householder QR and
+//! (modified) Gram–Schmidt, a full one-sided-Jacobi SVD, randomized
+//! truncated SVD, a Jacobi symmetric eigendecomposition and an LU solver.
+//! All f64 — the paper's losslessness claims (Tab. 1: errors at
 //! 1e-10..1e-15) are only reproducible in double precision.
 
 pub mod matmul;
-pub mod kernel;
+pub mod backend;
 pub mod qr;
 pub mod svd;
 pub mod eig;
 pub mod lu;
 
-pub use kernel::{MatKernel, NativeKernel};
-pub use matmul::{matmul, matmul_into};
+pub use backend::{run_parallel_collect, CpuBackend, GemmBackend, ScatterPiece};
+pub use matmul::{gemm, matmul, matmul_acc, matmul_into};
 pub use qr::{gram_schmidt, householder_qr};
 pub use svd::{randomized_svd, svd, SvdResult};
 
@@ -175,7 +178,8 @@ impl Mat {
         matmul(self, other)
     }
 
-    /// `selfᵀ * other` without materializing the transpose.
+    /// `selfᵀ * other` without materializing the transpose (runs the
+    /// backend's k-outer accumulation kernel on the global pool).
     pub fn t_mul(&self, other: &Mat) -> Result<Mat> {
         if self.rows != other.rows {
             return Err(Error::Shape(format!(
@@ -183,20 +187,17 @@ impl Mat {
                 self.rows, self.cols, other.rows, other.cols
             )));
         }
-        // (AᵀB)ᵢⱼ = Σ_k A[k,i] B[k,j] — accumulate row-by-row, cache friendly.
         let mut out = Mat::zeros(self.cols, other.cols);
-        for k in 0..self.rows {
-            let arow = self.row(k);
-            let brow = other.row(k);
-            for (i, &a) in arow.iter().enumerate() {
-                if a != 0.0 {
-                    let orow = out.row_mut(i);
-                    for (o, &b) in orow.iter_mut().zip(brow) {
-                        *o += a * b;
-                    }
-                }
-            }
-        }
+        matmul::gemm(
+            1.0,
+            self,
+            true,
+            other,
+            false,
+            0.0,
+            &mut out,
+            Some(crate::pool::global()),
+        )?;
         Ok(out)
     }
 
@@ -308,6 +309,24 @@ impl Mat {
         norm.sqrt()
     }
 
+    /// Borrow the sub-matrix `[r0..r1) × [c0..c1)` without copying — the
+    /// operand form the allocation-free GEMM entry points take.
+    pub fn view(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> MatView<'_> {
+        assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
+        let off = (r0 * self.cols + c0).min(self.data.len());
+        MatView {
+            data: &self.data[off..],
+            ld: self.cols,
+            rows: r1 - r0,
+            cols: c1 - c0,
+        }
+    }
+
+    /// Whole-matrix view.
+    pub fn as_view(&self) -> MatView<'_> {
+        self.view(0, self.rows, 0, self.cols)
+    }
+
     /// Extract the sub-matrix `[r0..r1) x [c0..c1)`.
     pub fn slice(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Mat {
         assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
@@ -395,6 +414,63 @@ impl Mat {
     }
 }
 
+/// Borrowed rectangular window into a [`Mat`] (or any row-major buffer):
+/// `rows × cols` elements at row stride `ld`. Views let the GEMM backend
+/// consume panels and blocks without the copies `Mat::slice` makes.
+#[derive(Clone, Copy)]
+pub struct MatView<'a> {
+    data: &'a [f64],
+    ld: usize,
+    rows: usize,
+    cols: usize,
+}
+
+impl<'a> MatView<'a> {
+    /// View over a raw row-major buffer. `data` must hold at least
+    /// `(rows-1)·ld + cols` elements when `rows > 0`.
+    pub fn new(data: &'a [f64], rows: usize, cols: usize, ld: usize) -> Result<Self> {
+        if ld < cols || (rows > 0 && cols > 0 && (rows - 1) * ld + cols > data.len()) {
+            return Err(Error::Shape(format!(
+                "MatView: {rows}x{cols} (ld {ld}) over {} elements",
+                data.len()
+            )));
+        }
+        Ok(Self {
+            data,
+            ld,
+            rows,
+            cols,
+        })
+    }
+
+    /// Column-vector view of a slice (`len × 1`).
+    pub fn col(v: &'a [f64]) -> Self {
+        Self {
+            data: v,
+            ld: 1,
+            rows: v.len(),
+            cols: 1,
+        }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    #[inline]
+    pub fn ld(&self) -> usize {
+        self.ld
+    }
+    #[inline]
+    pub fn data(&self) -> &'a [f64] {
+        self.data
+    }
+}
+
 impl std::ops::Index<(usize, usize)> for Mat {
     type Output = f64;
     #[inline]
@@ -454,6 +530,23 @@ mod tests {
         assert_eq!(a.mul_vec(&[1., 0., -1.]).unwrap(), vec![-2., -2.]);
         assert_eq!(a.t_mul_vec(&[1., 1.]).unwrap(), vec![5., 7., 9.]);
         assert!(a.mul_vec(&[1., 2.]).is_err());
+    }
+
+    #[test]
+    fn views_share_layout_with_slices() {
+        let a = Mat::from_fn(5, 6, |i, j| (i * 6 + j) as f64);
+        let v = a.view(1, 4, 2, 5);
+        assert_eq!((v.rows(), v.cols(), v.ld()), (3, 3, 6));
+        assert_eq!(v.data()[0], a[(1, 2)]);
+        assert_eq!(v.data()[v.ld() + 1], a[(2, 3)]);
+        let col = [1.0, 2.0];
+        let cv = MatView::col(&col);
+        assert_eq!((cv.rows(), cv.cols()), (2, 1));
+        assert!(MatView::new(&[0.0; 5], 2, 3, 3).is_err());
+        assert!(MatView::new(&[0.0; 6], 2, 3, 3).is_ok());
+        // empty view at the very end of the buffer is fine
+        let e = a.view(5, 5, 0, 6);
+        assert_eq!(e.rows(), 0);
     }
 
     #[test]

@@ -215,15 +215,22 @@ fn cmd_attack(flags: &HashMap<String, String>) -> Result<(), String> {
 
 fn cmd_info() -> Result<(), String> {
     println!("fedsvd {} — lossless federated SVD (KDD'22 reproduction)", env!("CARGO_PKG_VERSION"));
+    println!(
+        "compute threads: {} (override with FEDSVD_THREADS; results are bit-identical at any count)",
+        fedsvd::pool::global().threads()
+    );
     let dir = fedsvd::runtime::artifacts_dir();
     println!("artifacts dir: {}", dir.display());
+    #[cfg(feature = "pjrt")]
     match fedsvd::runtime::TileEngine::from_artifacts() {
         Ok(e) => println!(
             "PJRT tile engine: available (fused mask kernel: {})",
             e.has_fused_mask()
         ),
-        Err(e) => println!("PJRT tile engine: unavailable ({e}) — native fallback"),
+        Err(e) => println!("PJRT tile engine: unavailable ({e}) — cpu fallback"),
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("PJRT tile engine: compiled out (feature `pjrt`; needs the vendored xla crate — see rust/Cargo.toml)");
     Ok(())
 }
 

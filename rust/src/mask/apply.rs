@@ -6,16 +6,31 @@
 //! the CSP's result, `U = PᵀU'`, again blockwise.
 
 use super::block_diag::{BlockDiagMat, BlockDiagSlice};
-use crate::linalg::Mat;
+use crate::linalg::{CpuBackend, GemmBackend, Mat};
 use crate::util::{Error, Result};
 
 /// `X'ᵢ = P · Xᵢ · Qᵢ` — the masking product every user runs in Step 2.
+/// Runs on the global backend; see [`mask_matrix_with`].
+pub fn mask_matrix(p: &BlockDiagMat, xi: &Mat, qi: &BlockDiagSlice) -> Result<Mat> {
+    mask_matrix_with(p, xi, qi, CpuBackend::global())
+}
+
+/// `X'ᵢ = P · Xᵢ · Qᵢ` on an explicit backend.
 ///
 /// `p` is the m×m block-diagonal left mask, `qi` the user's row slice of
 /// the n×n right mask. The result is m×n (full width: `Xᵢ·Qᵢ` scatters the
 /// user's columns across all of Q's column space, which is what makes the
-/// CSP-side sum `Σᵢ X'ᵢ = P X Q` work, Eq. 4).
-pub fn mask_matrix(p: &BlockDiagMat, xi: &Mat, qi: &BlockDiagSlice) -> Result<Mat> {
+/// CSP-side sum `Σᵢ X'ᵢ = P X Q` work, Eq. 4). The whole product runs
+/// through the backend's fused `mask_apply_into`: P-block panels execute
+/// concurrently (disjoint output rows), the `P·X` intermediate lives in a
+/// reused per-lane scratch, and the `Qᵢ` scatter accumulates in place —
+/// no per-block allocations.
+pub fn mask_matrix_with(
+    p: &BlockDiagMat,
+    xi: &Mat,
+    qi: &BlockDiagSlice,
+    backend: &dyn GemmBackend,
+) -> Result<Mat> {
     if xi.rows() != p.dim() {
         return Err(Error::Shape(format!(
             "mask: X has {} rows, P is {}×{}",
@@ -31,13 +46,14 @@ pub fn mask_matrix(p: &BlockDiagMat, xi: &Mat, qi: &BlockDiagSlice) -> Result<Ma
             qi.rows()
         )));
     }
-    // (P·Xᵢ)·Qᵢ: left product shrinks nothing; do P first (row panels),
-    // then scatter through the sparse Qᵢ.
-    let pxi = p.mul_dense(xi)?;
-    qi.rmul_dense(&pxi)
+    let mut out = Mat::zeros(xi.rows(), qi.cols());
+    let pieces = qi.scatter_pieces();
+    backend.mask_apply_into(p.starts(), p.blocks(), xi, &pieces, &mut out)?;
+    Ok(out)
 }
 
-/// `U = Pᵀ·U'` — removing the left mask from the CSP's singular vectors.
+/// `U = Pᵀ·U'` — removing the left mask from the CSP's singular vectors
+/// (backend transpose flag; no transposed-block materialization).
 pub fn unmask_u(p: &BlockDiagMat, u_masked: &Mat) -> Result<Mat> {
     if u_masked.rows() != p.dim() {
         return Err(Error::Shape(format!(
@@ -47,7 +63,7 @@ pub fn unmask_u(p: &BlockDiagMat, u_masked: &Mat) -> Result<Mat> {
             p.dim()
         )));
     }
-    p.transpose().mul_dense(u_masked)
+    p.t_mul_dense(u_masked)
 }
 
 /// `y' = P·y` — masking the label vector in FedSVD-LR (paper §4).
@@ -135,6 +151,26 @@ mod tests {
         let ym = Mat::from_vec(6, 1, y.clone()).unwrap();
         let slow = matmul(&p.to_dense(), &ym).unwrap();
         assert!(max_abs_diff(&fast, slow.data()) < 1e-12);
+    }
+
+    #[test]
+    fn masking_is_bit_identical_across_thread_counts() {
+        use crate::linalg::CpuBackend;
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let (m, n) = (23, 17); // ragged against every block boundary
+        let p = block_orthogonal(m, 4, 61).unwrap();
+        let q = block_orthogonal(n, 5, 62).unwrap();
+        let qi = q.row_slice(2, 13).unwrap();
+        let xi = Mat::gaussian(m, 11, &mut rng);
+        let reference = mask_matrix_with(&p, &xi, &qi, &CpuBackend::with_threads(1)).unwrap();
+        for threads in [2usize, 3, 8] {
+            let out =
+                mask_matrix_with(&p, &xi, &qi, &CpuBackend::with_threads(threads)).unwrap();
+            assert!(
+                crate::util::bits_equal(reference.data(), out.data()),
+                "threads={threads}: masking bits differ"
+            );
+        }
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! diagonal. All the paper's complexity wins (O(b²n) generation, O(mn)
 //! masking, O(nᵢ) recovery) come from never materializing the zeros.
 
-use crate::linalg::{Mat, matmul};
+use crate::linalg::{matmul, CpuBackend, GemmBackend, Mat, ScatterPiece};
 use crate::util::{Error, Result};
 
 /// A square block-diagonal matrix: `dim × dim`, blocks on the diagonal.
@@ -80,8 +80,14 @@ impl BlockDiagMat {
     }
 
     /// `self · X` for dense X (dim × c): per-block row-panel products,
-    /// O(b·dim·c) instead of O(dim²·c).
+    /// O(b·dim·c) instead of O(dim²·c). Runs on the global backend.
     pub fn mul_dense(&self, x: &Mat) -> Result<Mat> {
+        self.mul_dense_with(x, CpuBackend::global())
+    }
+
+    /// [`Self::mul_dense`] on an explicit backend: panels run concurrently
+    /// (disjoint row ranges of the output) with no per-block allocations.
+    pub fn mul_dense_with(&self, x: &Mat, backend: &dyn GemmBackend) -> Result<Mat> {
         if x.rows() != self.dim {
             return Err(Error::Shape(format!(
                 "block-diag mul: {} vs {}x{}",
@@ -91,16 +97,40 @@ impl BlockDiagMat {
             )));
         }
         let mut out = Mat::zeros(x.rows(), x.cols());
-        for (s, b) in self.starts.iter().zip(&self.blocks) {
-            let panel = x.slice(*s, *s + b.rows(), 0, x.cols());
-            let prod = matmul(b, &panel)?;
-            out.set_slice(*s, 0, &prod);
+        backend.block_mul_into(&self.starts, &self.blocks, false, x, &mut out)?;
+        Ok(out)
+    }
+
+    /// `selfᵀ · X` without materializing transposed blocks (the Step-4
+    /// unmasking product `PᵀU'`, routed through the backend's transpose
+    /// flag).
+    pub fn t_mul_dense(&self, x: &Mat) -> Result<Mat> {
+        self.t_mul_dense_with(x, CpuBackend::global())
+    }
+
+    /// [`Self::t_mul_dense`] on an explicit backend.
+    pub fn t_mul_dense_with(&self, x: &Mat, backend: &dyn GemmBackend) -> Result<Mat> {
+        if x.rows() != self.dim {
+            return Err(Error::Shape(format!(
+                "block-diag t_mul: {} vs {}x{}",
+                self.dim,
+                x.rows(),
+                x.cols()
+            )));
         }
+        let mut out = Mat::zeros(x.rows(), x.cols());
+        backend.block_mul_into(&self.starts, &self.blocks, true, x, &mut out)?;
         Ok(out)
     }
 
     /// `X · self` for dense X (r × dim): per-block column-panel products.
     pub fn rmul_dense(&self, x: &Mat) -> Result<Mat> {
+        self.rmul_dense_with(x, CpuBackend::global())
+    }
+
+    /// [`Self::rmul_dense`] on an explicit backend — per-block
+    /// view-accumulate into the column window, no temporaries.
+    pub fn rmul_dense_with(&self, x: &Mat, backend: &dyn GemmBackend) -> Result<Mat> {
         if x.cols() != self.dim {
             return Err(Error::Shape(format!(
                 "block-diag rmul: {}x{} vs {}",
@@ -111,9 +141,14 @@ impl BlockDiagMat {
         }
         let mut out = Mat::zeros(x.rows(), x.cols());
         for (s, b) in self.starts.iter().zip(&self.blocks) {
-            let panel = x.slice(0, x.rows(), *s, *s + b.rows());
-            let prod = matmul(&panel, b)?;
-            out.set_slice(0, *s, &prod);
+            backend.gemm_view_acc(
+                1.0,
+                x.view(0, x.rows(), *s, *s + b.rows()),
+                b.as_view(),
+                &mut out,
+                0,
+                *s,
+            )?;
         }
         Ok(out)
     }
@@ -213,9 +248,28 @@ impl BlockDiagSlice {
         out
     }
 
+    /// Borrow the pieces as backend scatter descriptors — the operand
+    /// shape `GemmBackend::mask_apply_into` fuses `Xᵢ·Qᵢ` through.
+    pub fn scatter_pieces(&self) -> Vec<ScatterPiece<'_>> {
+        self.pieces
+            .iter()
+            .map(|p| ScatterPiece {
+                src_col: p.local_row,
+                out_col: p.global_col,
+                mat: &p.mat,
+            })
+            .collect()
+    }
+
     /// `X · self` for dense X (r × rows): the masking product `Xᵢ·Qᵢ`,
     /// O(r · rows · b) using only non-zero pieces.
     pub fn rmul_dense(&self, x: &Mat) -> Result<Mat> {
+        self.rmul_dense_with(x, CpuBackend::global())
+    }
+
+    /// [`Self::rmul_dense`] on an explicit backend — per-piece
+    /// view-accumulate into the global column window, no temporaries.
+    pub fn rmul_dense_with(&self, x: &Mat, backend: &dyn GemmBackend) -> Result<Mat> {
         if x.cols() != self.rows {
             return Err(Error::Shape(format!(
                 "slice rmul: {}x{} vs {} rows",
@@ -226,14 +280,14 @@ impl BlockDiagSlice {
         }
         let mut out = Mat::zeros(x.rows(), self.cols);
         for p in &self.pieces {
-            let panel = x.slice(0, x.rows(), p.local_row, p.local_row + p.mat.rows());
-            let prod = matmul(&panel, &p.mat)?;
-            // accumulate into the global column range
-            for i in 0..prod.rows() {
-                for j in 0..prod.cols() {
-                    out[(i, p.global_col + j)] += prod[(i, j)];
-                }
-            }
+            backend.gemm_view_acc(
+                1.0,
+                x.view(0, x.rows(), p.local_row, p.local_row + p.mat.rows()),
+                p.mat.as_view(),
+                &mut out,
+                0,
+                p.global_col,
+            )?;
         }
         Ok(out)
     }
@@ -320,6 +374,29 @@ mod tests {
         let fast = bd.rmul_dense(&x).unwrap();
         let slow = matmul(&x, &bd.to_dense()).unwrap();
         assert!(max_abs_diff(fast.data(), slow.data()) < 1e-12);
+    }
+
+    #[test]
+    fn t_mul_dense_matches_transposed_dense() {
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        let bd = toy_bd(&[3, 2, 4], 20);
+        let x = Mat::gaussian(9, 5, &mut rng);
+        let fast = bd.t_mul_dense(&x).unwrap();
+        let slow = matmul(&bd.to_dense().transpose(), &x).unwrap();
+        assert!(max_abs_diff(fast.data(), slow.data()) < 1e-12);
+    }
+
+    #[test]
+    fn backend_variants_are_bit_identical_across_threads() {
+        use crate::linalg::CpuBackend;
+        let mut rng = Xoshiro256::seed_from_u64(22);
+        let bd = toy_bd(&[3, 5, 2, 4], 23);
+        let x = Mat::gaussian(14, 7, &mut rng);
+        let b1 = CpuBackend::with_threads(1);
+        let b4 = CpuBackend::with_threads(4);
+        let r1 = bd.mul_dense_with(&x, &b1).unwrap();
+        let r4 = bd.mul_dense_with(&x, &b4).unwrap();
+        assert!(crate::util::bits_equal(r1.data(), r4.data()));
     }
 
     #[test]

@@ -22,6 +22,6 @@ pub mod apply;
 pub mod delivery;
 pub mod streaming;
 
-pub use apply::{mask_matrix, unmask_u};
+pub use apply::{mask_matrix, mask_matrix_with, unmask_u};
 pub use block_diag::{BlockDiagMat, BlockDiagSlice};
 pub use orthogonal::{block_orthogonal, random_orthogonal};

@@ -13,14 +13,16 @@
 
 use super::block_diag::BlockDiagSlice;
 use super::orthogonal::block_orthogonal_single;
-use crate::linalg::{Mat, MatKernel};
+use crate::linalg::{GemmBackend, Mat};
 use crate::storage::filemap::{FileMat, Layout};
 use crate::util::{Error, Result};
 use std::path::Path;
 
 /// Compute `P·Xᵢ·Qᵢ` where `Xᵢ` is file-backed, writing the masked result
 /// to `out_path`. `p_seed`/`p_block` regenerate P block-by-block; `qi` is
-/// the (sparse, small) right-mask slice held in memory.
+/// the (sparse, small) right-mask slice held in memory. Each panel runs
+/// through the backend's fused `mask_apply_into` (scratch-buffer `P·X`
+/// intermediate + in-place `Qᵢ` scatter — no per-piece allocations).
 ///
 /// Returns the file-backed masked share plus the peak resident bytes
 /// (for the Opt3 memory accounting).
@@ -30,7 +32,7 @@ pub fn mask_offloaded(
     p_block: usize,
     qi: &BlockDiagSlice,
     out_path: &Path,
-    kernel: &dyn MatKernel,
+    backend: &dyn GemmBackend,
 ) -> Result<(FileMat, u64)> {
     let m = x.rows();
     let ni = x.cols();
@@ -47,6 +49,7 @@ pub fn mask_offloaded(
     let out = FileMat::create(out_path, m, n, Layout::RowMajor)?;
     let n_blocks = m.div_ceil(p_block);
     let mut peak_bytes = 0u64;
+    let pieces = qi.scatter_pieces();
 
     for idx in 0..n_blocks {
         // regenerate exactly one P block from the seed (O(b³) work, O(b²) mem)
@@ -54,9 +57,9 @@ pub fn mask_offloaded(
         let rows = blk.rows();
         // stream the matching row panel of X
         let panel = x.read_row_block(start, start + rows)?;
-        // (P_b · panel) · Qᵢ  — the panel-local masking product
-        let pb_panel = kernel.matmul(&blk, &panel)?;
-        let masked = scatter_right(&pb_panel, qi, kernel)?;
+        // (P_b · panel) · Qᵢ — the panel-local fused masking product
+        let mut masked = Mat::zeros(rows, n);
+        backend.mask_apply_into(&[0], std::slice::from_ref(&blk), &panel, &pieces, &mut masked)?;
         out.write_row_block(start, &masked)?;
 
         let resident =
@@ -67,26 +70,10 @@ pub fn mask_offloaded(
     Ok((out, peak_bytes))
 }
 
-/// `Y·Qᵢ` through the sparse slice pieces (same math as
-/// `BlockDiagSlice::rmul_dense` but routed through the pluggable kernel).
-fn scatter_right(y: &Mat, qi: &BlockDiagSlice, kernel: &dyn MatKernel) -> Result<Mat> {
-    let mut out = Mat::zeros(y.rows(), qi.cols());
-    for p in qi.pieces() {
-        let panel = y.slice(0, y.rows(), p.local_row, p.local_row + p.mat.rows());
-        let prod = kernel.matmul(&panel, &p.mat)?;
-        for i in 0..prod.rows() {
-            for j in 0..prod.cols() {
-                out[(i, p.global_col + j)] += prod[(i, j)];
-            }
-        }
-    }
-    Ok(out)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::NativeKernel;
+    use crate::linalg::CpuBackend;
     use crate::mask::apply::mask_matrix;
     use crate::mask::orthogonal::block_orthogonal;
     use crate::rng::Xoshiro256;
@@ -120,7 +107,7 @@ mod tests {
             b,
             &qi,
             &tmp("masked.bin"),
-            &NativeKernel,
+            CpuBackend::global(),
         )
         .unwrap();
         let got = masked.to_mat().unwrap();
@@ -140,7 +127,7 @@ mod tests {
         let qi = q.row_slice(0, 10).unwrap();
         let xi = Mat::gaussian(m, 10, &mut rng);
         let xfile = FileMat::from_mat(&tmp("x2.bin"), &xi, Layout::RowMajor).unwrap();
-        let (_, peak) = mask_offloaded(&xfile, 3, b, &qi, &tmp("m2.bin"), &NativeKernel)
+        let (_, peak) = mask_offloaded(&xfile, 3, b, &qi, &tmp("m2.bin"), CpuBackend::global())
             .unwrap();
         let full_bytes = (m * 10 * 8) as u64;
         assert!(
@@ -160,7 +147,7 @@ mod tests {
         let expect = mask_matrix(&p, &xi, &qi).unwrap();
         let xfile = FileMat::from_mat(&tmp("x3.bin"), &xi, Layout::RowMajor).unwrap();
         let (masked, _) =
-            mask_offloaded(&xfile, 5, b, &qi, &tmp("m3.bin"), &NativeKernel).unwrap();
+            mask_offloaded(&xfile, 5, b, &qi, &tmp("m3.bin"), CpuBackend::global()).unwrap();
         assert!(max_abs_diff(masked.to_mat().unwrap().data(), expect.data()) < 1e-12);
     }
 
@@ -171,7 +158,7 @@ mod tests {
         let x = Mat::zeros(4, 5); // 5 cols ≠ qi.rows()=6
         let xfile = FileMat::from_mat(&tmp("x4.bin"), &x, Layout::RowMajor).unwrap();
         assert!(
-            mask_offloaded(&xfile, 1, 2, &qi, &tmp("m4.bin"), &NativeKernel).is_err()
+            mask_offloaded(&xfile, 1, 2, &qi, &tmp("m4.bin"), CpuBackend::global()).is_err()
         );
     }
 }

@@ -1,0 +1,408 @@
+//! Lightweight std-only thread pool under the compute backend.
+//!
+//! The FedSVD hot paths (blocked GEMM row panels, per-block masking, the
+//! per-user Step-2 shares) are all *partitioned* workloads: every task
+//! writes a disjoint region of the output and performs exactly the same
+//! per-element operation sequence it would perform single-threaded. The
+//! pool therefore guarantees the property the lossless protocol depends
+//! on: **results are bit-identical at any thread count** — parallelism
+//! only changes which lane executes a task, never what the task computes.
+//!
+//! Sizing: [`global()`] builds the process-wide pool once, from
+//! `FEDSVD_THREADS` when set to a positive integer, otherwise from the
+//! machine's available parallelism. Tests and benches construct private
+//! pools via [`ThreadPool::new`] to pin 1/2/…/N lanes and prove partition
+//! invariance.
+//!
+//! Design notes:
+//! * a plain `Mutex<VecDeque>` + `Condvar` queue (std `mpsc` senders are
+//!   not `Sync` on older toolchains);
+//! * [`ThreadPool::parallel_for`] enqueues helper tasks and *participates*
+//!   from the calling thread, so nested `parallel_for` calls (user-level ×
+//!   panel-level) always make progress even when every worker is busy;
+//! * worker panics are caught and re-raised on the calling thread so a
+//!   failing assertion inside a parallel region fails the test instead of
+//!   hanging it.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Raw mutable base pointer that may cross thread boundaries. Every user
+/// must guarantee that concurrent accesses touch disjoint index ranges.
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr(pub *mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+struct QueueState {
+    tasks: VecDeque<Task>,
+    shutdown: bool,
+}
+
+struct Queue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+/// A fixed-size pool of worker threads executing queued closures.
+pub struct ThreadPool {
+    queue: Arc<Queue>,
+    handles: Vec<thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Pool with `threads` total compute lanes. The calling thread counts
+    /// as one lane, so `threads - 1` workers are spawned; `threads <= 1`
+    /// yields a fully inline (sequential) pool.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let queue = Arc::new(Queue {
+            state: Mutex::new(QueueState {
+                tasks: VecDeque::new(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(threads - 1);
+        for i in 0..threads - 1 {
+            let q = Arc::clone(&queue);
+            let h = thread::Builder::new()
+                .name(format!("fedsvd-worker-{i}"))
+                .spawn(move || worker_loop(&q))
+                .expect("spawn fedsvd worker");
+            handles.push(h);
+        }
+        Self {
+            queue,
+            handles,
+            threads,
+        }
+    }
+
+    /// Total compute lanes (workers + the participating caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0)`, `f(1)`, …, `f(n_tasks - 1)`, distributing indices over
+    /// the pool. Blocks until every index has completed. Index *claiming*
+    /// order is nondeterministic; callers must make each `f(i)` write only
+    /// its own region and perform a thread-count-independent op sequence —
+    /// every compute kernel in this crate is structured that way.
+    pub fn parallel_for(&self, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n_tasks == 0 {
+            return;
+        }
+        if self.threads <= 1 || n_tasks == 1 {
+            for i in 0..n_tasks {
+                f(i);
+            }
+            return;
+        }
+        // SAFETY: the erased pointer is only dereferenced by Job::run
+        // invocations counted into `completed`, and we block on the
+        // completion latch below until all `n_tasks` completions are
+        // visible — `f` outlives every use.
+        let f_erased: *const (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(f)
+        };
+        let job = Arc::new(Job {
+            f: f_erased,
+            total: n_tasks,
+            next: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            panic_payload: Mutex::new(None),
+            done_lock: Mutex::new(false),
+            done_cv: Condvar::new(),
+        });
+        let helpers = (self.threads - 1).min(n_tasks - 1);
+        {
+            let mut st = self.queue.state.lock().expect("pool queue poisoned");
+            for _ in 0..helpers {
+                let j = Arc::clone(&job);
+                st.tasks.push_back(Box::new(move || j.run()));
+            }
+        }
+        if helpers == 1 {
+            self.queue.cv.notify_one();
+        } else {
+            self.queue.cv.notify_all();
+        }
+        // participate from this thread: guarantees progress under nesting
+        job.run();
+        // park until the last completer raises the done flag (no busy-spin:
+        // the caller's lane would otherwise burn a core while the final
+        // in-flight chunk drains on a worker)
+        {
+            let mut done = job.done_lock.lock().expect("job latch poisoned");
+            while !*done {
+                done = job.done_cv.wait(done).expect("job latch poisoned");
+            }
+        }
+        if job.panicked.load(Ordering::Acquire) {
+            // re-raise the first captured payload so assertion messages
+            // from inside parallel regions survive to the test harness
+            if let Some(payload) = job
+                .panic_payload
+                .lock()
+                .expect("job panic slot poisoned")
+                .take()
+            {
+                std::panic::resume_unwind(payload);
+            }
+            panic!("ThreadPool: a parallel task panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.queue.state.lock().expect("pool queue poisoned");
+            st.shutdown = true;
+        }
+        self.queue.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One `parallel_for` invocation: an atomically claimed index range over an
+/// erased closure.
+struct Job {
+    f: *const (dyn Fn(usize) + Sync),
+    total: usize,
+    next: AtomicUsize,
+    completed: AtomicUsize,
+    panicked: AtomicBool,
+    /// First captured panic payload — re-raised on the calling thread.
+    panic_payload: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+    /// Completion latch: set by the thread that finishes the last task.
+    done_lock: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+// SAFETY: `f` is only dereferenced while the issuing `parallel_for` frame
+// is alive (it blocks on `completed`), and the pointee is `Sync`.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    fn run(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.total {
+                break;
+            }
+            // SAFETY: see `parallel_for` — the closure outlives every
+            // counted invocation.
+            let f = unsafe { &*self.f };
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+                let mut slot = self.panic_payload.lock().expect("job panic slot poisoned");
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+                drop(slot);
+                self.panicked.store(true, Ordering::Release);
+            }
+            // AcqRel: the last completer acquires every earlier lane's
+            // writes before publishing the done flag through the mutex.
+            if self.completed.fetch_add(1, Ordering::AcqRel) + 1 == self.total {
+                let mut done = self.done_lock.lock().expect("job latch poisoned");
+                *done = true;
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+fn worker_loop(q: &Queue) {
+    loop {
+        let task = {
+            let mut st = q.state.lock().expect("pool queue poisoned");
+            loop {
+                if let Some(t) = st.tasks.pop_front() {
+                    break Some(t);
+                }
+                if st.shutdown {
+                    break None;
+                }
+                st = q.cv.wait(st).expect("pool queue poisoned");
+            }
+        };
+        match task {
+            Some(t) => t(),
+            None => return,
+        }
+    }
+}
+
+/// The process-wide pool, built once from [`default_threads`].
+pub fn global() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| ThreadPool::new(default_threads()))
+}
+
+/// `FEDSVD_THREADS` policy: a positive integer pins the lane count; unset,
+/// empty, zero or unparsable falls back to the machine's available
+/// parallelism. Read once — the global pool never resizes.
+pub fn default_threads() -> usize {
+    thread_count_from(std::env::var("FEDSVD_THREADS").ok().as_deref())
+}
+
+pub(crate) fn thread_count_from(v: Option<&str>) -> usize {
+    match v.and_then(|s| s.trim().parse::<usize>().ok()) {
+        Some(n) if n >= 1 => n,
+        _ => thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+/// Run `f(i, panel_i)` for each `(row0, nrows)` range in `ranges`, where
+/// `panel_i` is the mutable row block `[row0, row0 + nrows)` of `data`
+/// (row stride `ld`, full rows). Panels run in parallel when a pool is
+/// supplied. Ranges must be pairwise disjoint and in bounds — checked up
+/// front (panics on violation, it is a caller bug).
+pub(crate) fn for_disjoint_row_panels(
+    pool: Option<&ThreadPool>,
+    data: &mut [f64],
+    ld: usize,
+    ranges: &[(usize, usize)],
+    f: &(dyn Fn(usize, &mut [f64]) + Sync),
+) {
+    if ranges.is_empty() {
+        return;
+    }
+    let mut sorted: Vec<(usize, usize)> = ranges.to_vec();
+    sorted.sort_unstable();
+    for w in sorted.windows(2) {
+        assert!(
+            w[0].0 + w[0].1 <= w[1].0,
+            "for_disjoint_row_panels: overlapping ranges"
+        );
+    }
+    let (last0, lastn) = *sorted.last().expect("nonempty");
+    assert!(
+        (last0 + lastn) * ld <= data.len() || ld == 0,
+        "for_disjoint_row_panels: range out of bounds"
+    );
+    let base = SendPtr(data.as_mut_ptr());
+    let run = move |i: usize| {
+        let (r0, nr) = ranges[i];
+        if nr == 0 || ld == 0 {
+            return;
+        }
+        // SAFETY: ranges are pairwise disjoint and in bounds (checked
+        // above), so concurrent panels never alias.
+        let panel = unsafe { std::slice::from_raw_parts_mut(base.0.add(r0 * ld), nr * ld) };
+        f(i, panel);
+    };
+    match pool {
+        Some(p) if p.threads() > 1 => p.parallel_for(ranges.len(), &run),
+        _ => (0..ranges.len()).for_each(run),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_for_covers_every_index_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..257).map(|_| AtomicUsize::new(0)).collect();
+        pool.parallel_for(hits.len(), &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let sum = AtomicUsize::new(0);
+        pool.parallel_for(10, &|i| {
+            sum.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn nested_parallel_for_makes_progress() {
+        let pool = ThreadPool::new(3);
+        let sum = AtomicUsize::new(0);
+        pool.parallel_for(5, &|_outer| {
+            pool.parallel_for(7, &|inner| {
+                sum.fetch_add(inner + 1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 5 * 28);
+    }
+
+    #[test]
+    fn disjoint_row_panels_write_their_rows() {
+        let mut data = vec![0.0f64; 10 * 4];
+        let ranges = [(0usize, 3usize), (3, 4), (7, 3)];
+        let pool = ThreadPool::new(2);
+        for_disjoint_row_panels(Some(&pool), &mut data, 4, &ranges, &|i, panel| {
+            for v in panel.iter_mut() {
+                *v = (i + 1) as f64;
+            }
+        });
+        for r in 0..10 {
+            let expect = if r < 3 {
+                1.0
+            } else if r < 7 {
+                2.0
+            } else {
+                3.0
+            };
+            for c in 0..4 {
+                assert_eq!(data[r * 4 + c], expect, "row {r}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "overlapping")]
+    fn overlapping_panels_rejected() {
+        let mut data = vec![0.0f64; 12];
+        for_disjoint_row_panels(None, &mut data, 3, &[(0, 2), (1, 2)], &|_, _| {});
+    }
+
+    #[test]
+    fn thread_count_env_policy() {
+        assert_eq!(thread_count_from(Some("3")), 3);
+        assert_eq!(thread_count_from(Some(" 8 ")), 8);
+        let auto = thread_count_from(None);
+        assert!(auto >= 1);
+        assert_eq!(thread_count_from(Some("0")), auto);
+        assert_eq!(thread_count_from(Some("nope")), auto);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn worker_panic_payload_is_reraised() {
+        let pool = ThreadPool::new(2);
+        pool.parallel_for(4, &|i| {
+            if i == 2 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn global_pool_has_at_least_one_lane() {
+        assert!(global().threads() >= 1);
+    }
+}

@@ -1,7 +1,9 @@
 //! The 4-step FedSVD orchestration (paper §3, Fig. 3).
 
 use super::v_recovery;
-use crate::linalg::{randomized_svd, svd, Mat, MatKernel, NativeKernel, SvdResult};
+use crate::linalg::{
+    randomized_svd, run_parallel_collect, svd, CpuBackend, GemmBackend, Mat, MatView, SvdResult,
+};
 use crate::mask::block_diag::{BlockDiagMat, BlockDiagSlice};
 use crate::mask::delivery::{dense_delivery_bytes, SeedDelivery, SliceDelivery};
 use crate::mask::orthogonal::random_orthogonal;
@@ -101,9 +103,19 @@ pub enum MaskRep {
 impl MaskRep {
     /// `Pᵀ·X` for result unmasking.
     pub fn transpose_mul(&self, x: &Mat) -> Result<Mat> {
+        self.transpose_mul_with(x, CpuBackend::global())
+    }
+
+    /// `Pᵀ·X` on an explicit backend (transpose flag; no transposed-block
+    /// materialization on the block path).
+    pub fn transpose_mul_with(&self, x: &Mat, backend: &dyn GemmBackend) -> Result<Mat> {
         match self {
-            MaskRep::Block(b) => b.transpose().mul_dense(x),
-            MaskRep::Dense(d) => d.t_mul(x),
+            MaskRep::Block(b) => b.t_mul_dense_with(x, backend),
+            MaskRep::Dense(d) => {
+                let mut out = Mat::zeros(d.cols(), x.cols());
+                backend.gemm_into(1.0, d, true, x, false, 0.0, &mut out)?;
+                Ok(out)
+            }
         }
     }
 
@@ -126,21 +138,29 @@ pub enum QSliceRep {
 impl QSliceRep {
     /// `w_i = Qᵢ·w'` — the LR parameter unmasking (paper §4).
     pub fn mul_vec(&self, w: &[f64]) -> Result<Vec<f64>> {
+        self.mul_vec_with(w, CpuBackend::global())
+    }
+
+    /// `w_i = Qᵢ·w'` routed through the backend's scatter GEMM: each piece
+    /// multiplies the matching window of `w'` and accumulates into its
+    /// local rows — no dense temporaries, no scalar scatter loop.
+    pub fn mul_vec_with(&self, w: &[f64], backend: &dyn GemmBackend) -> Result<Vec<f64>> {
         match self {
             QSliceRep::Block(s) => {
-                let wm = Mat::from_vec(w.len(), 1, w.to_vec())?;
-                // Qᵢ·w: pieces act on global rows of w
-                let mut out = vec![0.0; s.rows()];
-                for p in s.pieces() {
-                    for i in 0..p.mat.rows() {
-                        let mut acc = 0.0;
-                        for j in 0..p.mat.cols() {
-                            acc += p.mat[(i, j)] * wm[(p.global_col + j, 0)];
-                        }
-                        out[p.local_row + i] += acc;
-                    }
+                if w.len() != s.cols() {
+                    return Err(Error::Shape(format!(
+                        "mul_vec: w' has {} entries, Qᵢ is {}x{}",
+                        w.len(),
+                        s.rows(),
+                        s.cols()
+                    )));
                 }
-                Ok(out)
+                let mut out = Mat::zeros(s.rows(), 1);
+                for p in s.pieces() {
+                    let wv = MatView::col(&w[p.global_col..p.global_col + p.mat.cols()]);
+                    backend.gemm_view_acc(1.0, p.mat.as_view(), wv, &mut out, p.local_row, 0)?;
+                }
+                Ok(out.into_vec())
             }
             QSliceRep::Dense(q) => q.mul_vec(w),
         }
@@ -148,16 +168,21 @@ impl QSliceRep {
 }
 
 /// Run FedSVD over vertically-partitioned user parts `[X₁ … X_k]`
-/// (each m×nᵢ). Uses the native kernel; see [`run_fedsvd_with_kernel`].
+/// (each m×nᵢ) on the global CPU backend (`FEDSVD_THREADS` lanes); see
+/// [`run_fedsvd_with_backend`].
 pub fn run_fedsvd(parts: &[Mat], cfg: &FedSvdConfig) -> Result<FedSvdOutput> {
-    run_fedsvd_with_kernel(parts, cfg, &NativeKernel)
+    run_fedsvd_with_backend(parts, cfg, CpuBackend::global())
 }
 
-/// Run FedSVD with an explicit tile kernel (native or PJRT-backed).
-pub fn run_fedsvd_with_kernel(
+/// Run FedSVD with an explicit GEMM backend (CPU pool or PJRT tiles).
+///
+/// Outputs are bit-identical for any backend thread count: every parallel
+/// region is partitioned (per-user shares, per-block panels, GEMM row
+/// chunks) with a thread-count-independent per-element op order.
+pub fn run_fedsvd_with_backend(
     parts: &[Mat],
     cfg: &FedSvdConfig,
-    kernel: &dyn MatKernel,
+    backend: &dyn GemmBackend,
 ) -> Result<FedSvdOutput> {
     let k_users = parts.len();
     if k_users == 0 {
@@ -241,19 +266,21 @@ pub fn run_fedsvd_with_kernel(
     metrics.end(net.sim_elapsed_s(), net.total_bytes());
 
     // ---- Step 2 (paper Step ❷): masking + secure aggregation ------------
+    // Users are independent: their masking shares run concurrently (one
+    // lane per user), and the backend nests per-P-block panel parallelism
+    // inside each share. Results land in index-addressed slots, so the
+    // schedule cannot affect the output.
     metrics.begin("step2: mask + secagg", net.sim_elapsed_s(), net.total_bytes());
-    let shares: Vec<Mat> = parts
-        .iter()
-        .zip(&q_slices)
-        .map(|(xi, qs)| match (&p_mask, qs) {
-            (MaskRep::Block(p), QSliceRep::Block(qi)) => mask_share_block(p, xi, qi, kernel),
-            (MaskRep::Dense(p), QSliceRep::Dense(qi)) => {
-                let px = kernel.matmul(p, xi)?;
-                kernel.matmul(&px, qi)
+    let shares: Vec<Mat> =
+        run_parallel_collect(backend, k_users, |i| match (&p_mask, &q_slices[i]) {
+            (MaskRep::Block(p), QSliceRep::Block(qi)) => {
+                mask_share_block(p, &parts[i], qi, backend)
             }
+            (MaskRep::Dense(p), QSliceRep::Dense(qi)) => backend
+                .matmul(p, &parts[i])
+                .and_then(|px| backend.matmul(&px, qi)),
             _ => Err(Error::Protocol("mask representation mismatch".into())),
-        })
-        .collect::<Result<_>>()?;
+        })?;
 
     let group = SecAggGroup::setup(&user_ids, CSP, &mut net, &mut rng)?;
     let batch_rows = if cfg.opts.minibatch_secagg {
@@ -269,6 +296,7 @@ pub fn run_fedsvd_with_kernel(
         CSP,
         &mut net,
         &mut metrics,
+        backend,
     )?;
     metrics.end(net.sim_elapsed_s(), net.total_bytes());
 
@@ -296,7 +324,7 @@ pub fn run_fedsvd_with_kernel(
             net.send(CSP, uid, payload);
         }
         net.end_round();
-        Some(p_mask.transpose_mul(&csp_svd.u)?)
+        Some(p_mask.transpose_mul_with(&csp_svd.u, backend)?)
     } else {
         None
     };
@@ -316,7 +344,7 @@ pub fn run_fedsvd_with_kernel(
                 QSliceRep::Block(qi) => {
                     let (ri, blinded_q) = v_recovery::blind_qit(qi, &mut rng)?;
                     net.send(user_ids[i], CSP, blinded_q.payload_bytes());
-                    let blinded_v = v_recovery::csp_blind_vit(&csp_svd.vt, &blinded_q, kernel)?;
+                    let blinded_v = v_recovery::csp_blind_vit(&csp_svd.vt, &blinded_q, backend)?;
                     net.send(
                         CSP,
                         user_ids[i],
@@ -336,7 +364,7 @@ pub fn run_fedsvd_with_kernel(
                     };
                     let blinded_q = qi.transpose().mul(&ri)?;
                     net.send(user_ids[i], CSP, (n * ni * 8) as u64);
-                    let blinded_v = kernel.matmul(&csp_svd.vt, &blinded_q)?;
+                    let blinded_v = backend.matmul(&csp_svd.vt, &blinded_q)?;
                     net.send(CSP, user_ids[i], (ksv * ni * 8) as u64);
                     let ri_inv = crate::linalg::lu::inverse(&ri)?;
                     v_parts.push(blinded_v.mul(&ri_inv)?);
@@ -358,32 +386,20 @@ pub fn run_fedsvd_with_kernel(
     })
 }
 
-/// One user's Step-2 product `P·Xᵢ·Qᵢ` routed through the pluggable kernel
-/// block-by-block (this is the hot loop the PJRT tile engine accelerates).
+/// One user's Step-2 product `P·Xᵢ·Qᵢ` through the backend's fused
+/// masking op — the hot loop of the whole protocol. Per P-block: the
+/// `P_b·Xᵢ` panel lands in a reused per-lane scratch buffer and is
+/// scattered through `Qᵢ`'s pieces straight into the output's disjoint
+/// row panel. Zero per-block heap allocations; panels run concurrently.
 fn mask_share_block(
     p: &BlockDiagMat,
     xi: &Mat,
     qi: &BlockDiagSlice,
-    kernel: &dyn MatKernel,
+    backend: &dyn GemmBackend,
 ) -> Result<Mat> {
-    // P·Xᵢ: per-block row panels
-    let mut pxi = Mat::zeros(xi.rows(), xi.cols());
-    for (s, blk) in p.starts().iter().zip(p.blocks()) {
-        let panel = xi.slice(*s, *s + blk.rows(), 0, xi.cols());
-        let prod = kernel.matmul(blk, &panel)?;
-        pxi.set_slice(*s, 0, &prod);
-    }
-    // (P·Xᵢ)·Qᵢ: per-piece column scatter
     let mut out = Mat::zeros(xi.rows(), qi.cols());
-    for piece in qi.pieces() {
-        let panel = pxi.slice(0, pxi.rows(), piece.local_row, piece.local_row + piece.mat.rows());
-        let prod = kernel.matmul(&panel, &piece.mat)?;
-        for i in 0..prod.rows() {
-            for j in 0..prod.cols() {
-                out[(i, piece.global_col + j)] += prod[(i, j)];
-            }
-        }
-    }
+    let pieces = qi.scatter_pieces();
+    backend.mask_apply_into(p.starts(), p.blocks(), xi, &pieces, &mut out)?;
     Ok(out)
 }
 

@@ -8,8 +8,8 @@
 //! then the *shared* factor is V (right singular vectors of X) and each
 //! party's *secret* factor is its own slice of U.
 
-use super::fedsvd::{run_fedsvd_with_kernel, FedSvdConfig, FedSvdOutput};
-use crate::linalg::{Mat, MatKernel, NativeKernel};
+use super::fedsvd::{run_fedsvd_with_backend, FedSvdConfig, FedSvdOutput};
+use crate::linalg::{CpuBackend, GemmBackend, Mat};
 use crate::util::{Error, Result};
 
 /// Result of the horizontal protocol, expressed in the original (row-
@@ -33,14 +33,14 @@ pub fn run_fedsvd_horizontal(
     parts: &[Mat],
     cfg: &FedSvdConfig,
 ) -> Result<HorizontalOutput> {
-    run_fedsvd_horizontal_with_kernel(parts, cfg, &NativeKernel)
+    run_fedsvd_horizontal_with_backend(parts, cfg, CpuBackend::global())
 }
 
-/// Kernel-parameterized variant (PJRT or native).
-pub fn run_fedsvd_horizontal_with_kernel(
+/// Backend-parameterized variant (CPU pool or PJRT tiles).
+pub fn run_fedsvd_horizontal_with_backend(
     parts: &[Mat],
     cfg: &FedSvdConfig,
-    kernel: &dyn MatKernel,
+    backend: &dyn GemmBackend,
 ) -> Result<HorizontalOutput> {
     if parts.is_empty() {
         return Err(Error::Protocol("horizontal: no users".into()));
@@ -55,7 +55,7 @@ pub fn run_fedsvd_horizontal_with_kernel(
     }
     // transpose each part: user-i's rows become columns
     let t_parts: Vec<Mat> = parts.iter().map(|p| p.transpose()).collect();
-    let out = run_fedsvd_with_kernel(&t_parts, cfg, kernel)?;
+    let out = run_fedsvd_with_backend(&t_parts, cfg, backend)?;
 
     // map back: vertical-run U is our V (shared), vertical-run Vᵢᵀ (k×mᵢ)
     // transposes to user-i's U slice (mᵢ×k)

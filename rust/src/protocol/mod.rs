@@ -17,9 +17,11 @@ pub mod horizontal;
 pub mod v_recovery;
 pub mod privacy;
 
-pub use horizontal::{run_fedsvd_horizontal, HorizontalOutput};
+pub use horizontal::{
+    run_fedsvd_horizontal, run_fedsvd_horizontal_with_backend, HorizontalOutput,
+};
 pub use fedsvd::{
-    run_fedsvd, run_fedsvd_with_kernel, FedSvdConfig, FedSvdOutput, OptFlags, SvdMode,
+    run_fedsvd, run_fedsvd_with_backend, FedSvdConfig, FedSvdOutput, OptFlags, SvdMode,
 };
 
 use crate::linalg::Mat;

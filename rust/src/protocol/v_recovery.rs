@@ -13,7 +13,7 @@
 //! `Rᵢ`'s block sizes follow `Qᵢ`'s piece extents so `QᵢᵀRᵢ` stays sparse:
 //! computing it is O(nᵢ·b²) = O(nᵢ) and inverting `Rᵢ` is O(nᵢ·b²) too.
 
-use crate::linalg::{Mat, MatKernel};
+use crate::linalg::{GemmBackend, Mat};
 use crate::mask::block_diag::{BlockDiagMat, BlockDiagSlice};
 use crate::rng::Xoshiro256;
 use crate::util::{Error, Result};
@@ -44,10 +44,12 @@ pub fn blind_qit(
 }
 
 /// CSP-side step 2: `[Vᵢᵀ]ᴿ = V'ᵀ·[Qᵢᵀ]ᴿ` (dense k×n · sparse n×nᵢ).
+/// Each sparse piece view-multiplies the matching `V'ᵀ` column window and
+/// accumulates into the output's global columns — no temporaries.
 pub fn csp_blind_vit(
     vt_masked: &Mat,
     blinded_qit: &BlockDiagSlice,
-    kernel: &dyn MatKernel,
+    backend: &dyn GemmBackend,
 ) -> Result<Mat> {
     if vt_masked.cols() != blinded_qit.rows() {
         return Err(Error::Shape(format!(
@@ -57,21 +59,16 @@ pub fn csp_blind_vit(
             blinded_qit.rows()
         )));
     }
-    // multiply against the sparse pieces: out[:, piece_cols] += V'ᵀ[:, piece_rows]·piece
     let mut out = Mat::zeros(vt_masked.rows(), blinded_qit.cols());
     for p in blinded_qit.pieces() {
-        let panel = vt_masked.slice(
+        backend.gemm_view_acc(
+            1.0,
+            vt_masked.view(0, vt_masked.rows(), p.local_row, p.local_row + p.mat.rows()),
+            p.mat.as_view(),
+            &mut out,
             0,
-            vt_masked.rows(),
-            p.local_row,
-            p.local_row + p.mat.rows(),
-        );
-        let prod = kernel.matmul(&panel, &p.mat)?;
-        for i in 0..prod.rows() {
-            for j in 0..prod.cols() {
-                out[(i, p.global_col + j)] += prod[(i, j)];
-            }
-        }
+            p.global_col,
+        )?;
     }
     Ok(out)
 }
@@ -93,7 +90,7 @@ pub fn unblind_vit(blinded_vit: &Mat, ri: &BlockDiagMat) -> Result<Mat> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::{matmul, NativeKernel};
+    use crate::linalg::{matmul, CpuBackend};
     use crate::mask::orthogonal::block_orthogonal;
     use crate::util::max_abs_diff;
 
@@ -108,7 +105,7 @@ mod tests {
         let vt_masked = Mat::gaussian(5, n, &mut rng); // stand-in for V'ᵀ
 
         let (ri, blinded_q) = blind_qit(&qi, &mut rng).unwrap();
-        let blinded_v = csp_blind_vit(&vt_masked, &blinded_q, &NativeKernel).unwrap();
+        let blinded_v = csp_blind_vit(&vt_masked, &blinded_q, CpuBackend::global()).unwrap();
         let vit = unblind_vit(&blinded_v, &ri).unwrap();
 
         let direct = matmul(&vt_masked, &qi.to_dense().transpose()).unwrap();
@@ -151,7 +148,7 @@ mod tests {
         let qi = q.row_slice(2, 8).unwrap();
         let (_ri, blinded) = blind_qit(&qi, &mut rng).unwrap();
         let vt = Mat::gaussian(4, 10, &mut rng);
-        let fast = csp_blind_vit(&vt, &blinded, &NativeKernel).unwrap();
+        let fast = csp_blind_vit(&vt, &blinded, CpuBackend::global()).unwrap();
         let slow = matmul(&vt, &blinded.to_dense()).unwrap();
         assert!(max_abs_diff(fast.data(), slow.data()) < 1e-11);
     }
@@ -164,7 +161,7 @@ mod tests {
         let (ri, blinded) = blind_qit(&qi, &mut rng).unwrap();
         // V'ᵀ with wrong width
         let bad_vt = Mat::zeros(4, 5);
-        assert!(csp_blind_vit(&bad_vt, &blinded, &NativeKernel).is_err());
+        assert!(csp_blind_vit(&bad_vt, &blinded, CpuBackend::global()).is_err());
         // blinded V with wrong width vs Rᵢ
         assert!(unblind_vit(&Mat::zeros(4, 5), &ri).is_err());
     }

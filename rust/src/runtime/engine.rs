@@ -12,26 +12,20 @@
 //!    loaded executable,
 //! 3. marshals row-major f64 [`Mat`]s into `Literal`s and back.
 //!
-//! [`TileEngine`] implements [`MatKernel`] on top: arbitrary-shape products
+//! [`TileEngine`] implements [`GemmBackend`] on top: arbitrary-shape products
 //! are tiled to the fixed AOT shape (zero-padded edges) and accumulated.
 //! Python never runs at request time — artifacts are produced by
 //! `make artifacts` and the binary is self-contained afterwards.
 
-use crate::linalg::{Mat, MatKernel};
+use super::artifacts_dir;
+use crate::linalg::{GemmBackend, Mat};
 use crate::util::{Error, Result};
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 use std::sync::Mutex;
 
 /// Tile edge the AOT artifacts are compiled for (must match aot.py).
 pub const TILE: usize = 64;
-
-/// Artifact directory: `$FEDSVD_ARTIFACTS` or `./artifacts`.
-pub fn artifacts_dir() -> PathBuf {
-    std::env::var_os("FEDSVD_ARTIFACTS")
-        .map(PathBuf::from)
-        .unwrap_or_else(|| PathBuf::from("artifacts"))
-}
 
 fn xerr(e: xla::Error) -> Error {
     Error::Runtime(format!("xla: {e}"))
@@ -117,10 +111,14 @@ pub mod artifact {
     pub const GRAM_TILE: &str = "gram_tile_f64";
 }
 
-/// [`MatKernel`] backed by the AOT artifacts: pads operands to the fixed
-/// `TILE` grid, runs the compiled executable per tile triple, accumulates
-/// in Rust. Interior mutability because PJRT execution takes `&self` but
-/// the engine cache may want lazy loading later.
+/// [`GemmBackend`] backed by the AOT artifacts: pads operands to the
+/// fixed `TILE` grid, runs the compiled executable per tile triple,
+/// accumulates in Rust into a reused scratch tile (no per-tile
+/// `Mat::zeros`). The trait's accumulating/view default methods fall back
+/// to the CPU core; the tile-shaped entry points (`matmul`, `mask_tile`)
+/// are the PJRT-accelerated ones. Interior mutability because PJRT
+/// execution takes `&self` but the engine cache may want lazy loading
+/// later.
 pub struct TileEngine {
     engine: Mutex<PjrtEngine>,
     /// whether the fused 3-operand mask artifact is available
@@ -130,7 +128,7 @@ pub struct TileEngine {
 impl TileEngine {
     /// Load from the default artifacts directory. Errors when the
     /// mandatory matmul artifact is missing — callers fall back to
-    /// [`crate::linalg::NativeKernel`].
+    /// [`crate::linalg::CpuBackend`].
     pub fn from_artifacts() -> Result<Self> {
         Self::from_dir(&artifacts_dir())
     }
@@ -181,7 +179,12 @@ impl TileEngine {
     }
 }
 
-impl MatKernel for TileEngine {
+impl GemmBackend for TileEngine {
+    // The trait's default methods already delegate non-tile-shaped ops to
+    // the pooled CPU backend, so the protocol keeps its multi-threaded
+    // panel parallelism under the PJRT engine; only the tile-shaped entry
+    // points are overridden here. Overloading `mask_apply_into` with the
+    // fused Pallas artifact is a ROADMAP item.
     fn matmul(&self, a: &Mat, b: &Mat) -> Result<Mat> {
         if a.cols() != b.rows() {
             return Err(Error::Shape(format!(
@@ -198,9 +201,11 @@ impl MatKernel for TileEngine {
         let (gr, gk, gc) = (ap.rows() / TILE, ap.cols() / TILE, bp.cols() / TILE);
         let engine = self.engine.lock().expect("engine poisoned");
         let mut out = Mat::zeros(gr * TILE, gc * TILE);
+        // one scratch accumulator reused for every (r, c) tile
+        let mut acc = Mat::zeros(TILE, TILE);
         for r in 0..gr {
             for c in 0..gc {
-                let mut acc = Mat::zeros(TILE, TILE);
+                acc.data_mut().fill(0.0);
                 for k in 0..gk {
                     let at = Self::tile_of(&ap, r, k);
                     let bt = Self::tile_of(&bp, k, c);

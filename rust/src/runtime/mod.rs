@@ -1,7 +1,30 @@
-//! PJRT runtime (populated in the runtime build-out step).
+//! Runtime execution: artifact discovery plus the optional PJRT engine.
 //!
-//! Loads `artifacts/*.hlo.txt` produced by `python/compile/aot.py` and
-//! executes them on the PJRT CPU client via the `xla` crate.
+//! The PJRT/XLA tile path (`engine`) is gated behind the off-by-default
+//! `pjrt` cargo feature: it needs the vendored `xla` crate and the AOT
+//! artifacts produced by `python/compile/aot.py` (`make artifacts`).
+//! Without the feature the crate builds dependency-free and every caller
+//! uses [`crate::linalg::CpuBackend`].
 
+use std::path::PathBuf;
+
+#[cfg(feature = "pjrt")]
 pub mod engine;
-pub use engine::{artifacts_dir, PjrtEngine, TileEngine};
+#[cfg(feature = "pjrt")]
+pub use engine::{PjrtEngine, TileEngine};
+
+/// Artifact directory: `$FEDSVD_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("FEDSVD_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn artifacts_dir_has_default() {
+        let d = super::artifacts_dir();
+        assert!(d.as_os_str().len() > 0);
+    }
+}

@@ -11,7 +11,7 @@
 //! Fig. 7 compares exactly these two paths.
 
 use super::SecAggGroup;
-use crate::linalg::Mat;
+use crate::linalg::{run_parallel_collect, GemmBackend, Mat};
 use crate::metrics::MetricsRecorder;
 use crate::net::{NetSim, PartyId};
 use crate::util::{Error, Result};
@@ -22,6 +22,10 @@ use crate::util::{Error, Result};
 ///   unoptimized baseline; used for the Fig. 7 ablation).
 /// * `metrics` gets a `mem_alloc`/`mem_free` pair per round so the Fig. 7
 ///   memory curve can be read off `metrics.mem_peak()`.
+/// * per-round user masking (fixed-point encode + PRG expansion) runs
+///   concurrently through `backend.run_parallel` — users are independent
+///   and the integer masks are exact, so the aggregate is unchanged at
+///   any thread count; network sends stay in user order.
 pub fn aggregate_matrices(
     group: &SecAggGroup,
     parts: &[Mat],
@@ -30,6 +34,7 @@ pub fn aggregate_matrices(
     server: PartyId,
     net: &mut NetSim,
     metrics: &mut MetricsRecorder,
+    backend: &dyn GemmBackend,
 ) -> Result<Mat> {
     let k = parts.len();
     if k != group.n_parties() {
@@ -57,17 +62,18 @@ pub fn aggregate_matrices(
         let rows = r1 - r0;
         let flat_len = rows * n;
 
-        // users mask their batch and upload concurrently
-        let mut shares: Vec<Vec<u128>> = Vec::with_capacity(k);
-        net.begin_round();
-        for (i, part) in parts.iter().enumerate() {
+        // users mask their batch concurrently (independent PRG streams)…
+        let shares: Vec<Vec<u128>> = run_parallel_collect(backend, k, |i| {
             let mut flat = Vec::with_capacity(flat_len);
             for r in r0..r1 {
-                flat.extend_from_slice(part.row(r));
+                flat.extend_from_slice(parts[i].row(r));
             }
-            let share = group.mask_share(i, &flat, round)?;
+            group.mask_share(i, &flat, round)
+        })?;
+        // …and upload in user order (deterministic metering)
+        net.begin_round();
+        for (i, share) in shares.iter().enumerate() {
             net.send(user_ids[i], server, (share.len() * 16) as u64);
-            shares.push(share);
         }
         net.end_round();
 
@@ -90,6 +96,7 @@ pub fn aggregate_matrices(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::CpuBackend;
     use crate::net::presets;
     use crate::rng::Xoshiro256;
     use crate::util::max_abs_diff;
@@ -123,7 +130,7 @@ mod tests {
         let mut net = NetSim::new(presets::paper_default());
         let mut metrics = MetricsRecorder::new();
         let agg =
-            aggregate_matrices(&g, &parts, 3, &[2, 3, 4], 1, &mut net, &mut metrics).unwrap();
+            aggregate_matrices(&g, &parts, 3, &[2, 3, 4], 1, &mut net, &mut metrics, CpuBackend::global()).unwrap();
         let expect = plain_sum(&parts);
         assert!(max_abs_diff(agg.data(), expect.data()) < 1e-10);
     }
@@ -138,7 +145,7 @@ mod tests {
             let mut net = NetSim::new(presets::paper_default());
             let mut metrics = MetricsRecorder::new();
             let agg =
-                aggregate_matrices(&g, &parts, batch, &[2, 3], 1, &mut net, &mut metrics).unwrap();
+                aggregate_matrices(&g, &parts, batch, &[2, 3], 1, &mut net, &mut metrics, CpuBackend::global()).unwrap();
             results.push(agg);
         }
         for r in &results[1..] {
@@ -154,11 +161,11 @@ mod tests {
 
         let mut net = NetSim::new(presets::paper_default());
         let mut m_full = MetricsRecorder::new();
-        aggregate_matrices(&g, &parts, 64, &[2, 3], 1, &mut net, &mut m_full).unwrap();
+        aggregate_matrices(&g, &parts, 64, &[2, 3], 1, &mut net, &mut m_full, CpuBackend::global()).unwrap();
 
         let mut net2 = NetSim::new(presets::paper_default());
         let mut m_batch = MetricsRecorder::new();
-        aggregate_matrices(&g, &parts, 4, &[2, 3], 1, &mut net2, &mut m_batch).unwrap();
+        aggregate_matrices(&g, &parts, 4, &[2, 3], 1, &mut net2, &mut m_batch, CpuBackend::global()).unwrap();
 
         assert!(
             m_batch.mem_peak() * 8 <= m_full.mem_peak(),
@@ -180,11 +187,11 @@ mod tests {
         let a = Mat::zeros(3, 3);
         let b = Mat::zeros(4, 3);
         assert!(
-            aggregate_matrices(&g, &[a.clone(), b], 2, &[2, 3], 1, &mut net, &mut metrics)
+            aggregate_matrices(&g, &[a.clone(), b], 2, &[2, 3], 1, &mut net, &mut metrics, CpuBackend::global())
                 .is_err()
         );
         assert!(
-            aggregate_matrices(&g, &[a], 2, &[2], 1, &mut net, &mut metrics).is_err()
+            aggregate_matrices(&g, &[a], 2, &[2], 1, &mut net, &mut metrics, CpuBackend::global()).is_err()
         );
     }
 }

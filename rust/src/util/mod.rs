@@ -5,25 +5,47 @@
 pub mod prop;
 pub mod hungarian;
 
-use thiserror::Error;
-
-/// Crate-wide error type.
-#[derive(Debug, Error)]
+/// Crate-wide error type. Hand-rolled `Display`/`Error` impls keep the
+/// crate dependency-free so `cargo build` works from a bare offline
+/// toolchain (no proc-macro crates in the image).
+#[derive(Debug)]
 pub enum Error {
-    #[error("shape mismatch: {0}")]
     Shape(String),
-    #[error("numerical failure: {0}")]
     Numerical(String),
-    #[error("protocol violation: {0}")]
     Protocol(String),
-    #[error("crypto error: {0}")]
     Crypto(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("runtime error: {0}")]
+    Io(std::io::Error),
     Runtime(String),
-    #[error("config error: {0}")]
     Config(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::Numerical(m) => write!(f, "numerical failure: {m}"),
+            Error::Protocol(m) => write!(f, "protocol violation: {m}"),
+            Error::Crypto(m) => write!(f, "crypto error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
@@ -31,6 +53,13 @@ pub type Result<T> = std::result::Result<T, Error>;
 /// `true` when |a-b| <= atol + rtol*|b|, elementwise contract used across tests.
 pub fn approx_eq(a: f64, b: f64, atol: f64, rtol: f64) -> bool {
     (a - b).abs() <= atol + rtol * b.abs()
+}
+
+/// Exact bitwise equality of two f64 slices — the comparison behind the
+/// backend's thread-count determinism contract (unlike `==`, it
+/// distinguishes ±0.0 and NaN payloads).
+pub fn bits_equal(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
 }
 
 /// Max absolute difference between two equal-length slices.
@@ -132,10 +161,28 @@ mod tests {
     use super::*;
 
     #[test]
+    fn error_display_and_source() {
+        let e = Error::Shape("2x3 vs 4x5".into());
+        assert_eq!(e.to_string(), "shape mismatch: 2x3 vs 4x5");
+        let io: Error = std::io::Error::new(std::io::ErrorKind::Other, "disk").into();
+        assert!(io.to_string().contains("disk"));
+        assert!(std::error::Error::source(&io).is_some());
+        assert!(std::error::Error::source(&e).is_none());
+    }
+
+    #[test]
     fn approx_eq_basic() {
         assert!(approx_eq(1.0, 1.0 + 1e-12, 1e-9, 0.0));
         assert!(!approx_eq(1.0, 1.1, 1e-9, 1e-9));
         assert!(approx_eq(100.0, 100.0001, 0.0, 1e-5));
+    }
+
+    #[test]
+    fn bits_equal_is_exact() {
+        assert!(bits_equal(&[1.0, -0.0], &[1.0, -0.0]));
+        assert!(!bits_equal(&[0.0], &[-0.0])); // == would say equal
+        assert!(!bits_equal(&[1.0], &[1.0, 2.0]));
+        assert!(bits_equal(&[f64::NAN], &[f64::NAN])); // == would say unequal
     }
 
     #[test]

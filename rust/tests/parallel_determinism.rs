@@ -1,0 +1,170 @@
+//! Determinism suite for the multi-threaded GEMM backend.
+//!
+//! The lossless protocol (paper Thm 1, Tab. 1) is only as reproducible as
+//! its compute core, so the parallel CPU backend must be **bit-identical**
+//! to the single-threaded reference at every thread count — across ragged
+//! shapes straddling the tile/panel boundaries, for every transpose flag,
+//! for the fused masking product, and end-to-end through `run_fedsvd`
+//! (same seed + different thread counts ⇒ byte-equal `U`, `Σ`, `Vᵢᵀ`).
+
+use fedsvd::linalg::matmul::matmul_naive;
+use fedsvd::linalg::{gemm, CpuBackend, GemmBackend, Mat};
+use fedsvd::mask::{block_orthogonal, mask_matrix_with};
+use fedsvd::protocol::{run_fedsvd_with_backend, split_columns, FedSvdConfig};
+use fedsvd::rng::Xoshiro256;
+use fedsvd::util::{bits_equal as vec_bits_equal, max_abs_diff};
+
+fn bits_equal(a: &Mat, b: &Mat) -> bool {
+    a.shape() == b.shape() && vec_bits_equal(a.data(), b.data())
+}
+
+/// Shapes chosen to straddle the micro-tile (4×16), the cache blocks
+/// (MC=128, KC=256, NC=512) and the transpose-path chunk (64).
+const RAGGED_SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (4, 16, 16),
+    (5, 7, 9),
+    (13, 17, 11),
+    (63, 65, 17),
+    (127, 129, 65),
+    (129, 257, 33),
+    (130, 300, 100),
+    (257, 64, 513),
+];
+
+#[test]
+fn parallel_matmul_bit_identical_across_thread_counts() {
+    let single = CpuBackend::with_threads(1);
+    let pools = [
+        CpuBackend::with_threads(2),
+        CpuBackend::with_threads(3),
+        CpuBackend::with_threads(8),
+    ];
+    let mut rng = Xoshiro256::seed_from_u64(42);
+    for &(m, k, n) in RAGGED_SHAPES {
+        let a = Mat::gaussian(m, k, &mut rng);
+        let b = Mat::gaussian(k, n, &mut rng);
+        let reference = single.matmul(&a, &b).unwrap();
+        // correctness against the naive oracle
+        let naive = matmul_naive(&a, &b).unwrap();
+        assert!(
+            max_abs_diff(reference.data(), naive.data()) < 1e-9,
+            "({m},{k},{n}) wrong vs naive"
+        );
+        for be in &pools {
+            let out = be.matmul(&a, &b).unwrap();
+            assert!(
+                bits_equal(&reference, &out),
+                "({m},{k},{n}) threads={} bits differ",
+                be.threads()
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_gemm_transpose_paths_bit_identical() {
+    let single = CpuBackend::with_threads(1);
+    let quad = CpuBackend::with_threads(4);
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    for &(m, k, n) in &[(70usize, 130usize, 65usize), (129, 66, 200)] {
+        // AᵀB: A is k×m, B is k×n
+        let a = Mat::gaussian(k, m, &mut rng);
+        let b = Mat::gaussian(k, n, &mut rng);
+        let mut c1 = Mat::zeros(m, n);
+        single.gemm_into(1.5, &a, true, &b, false, 0.0, &mut c1).unwrap();
+        let mut c4 = Mat::zeros(m, n);
+        quad.gemm_into(1.5, &a, true, &b, false, 0.0, &mut c4).unwrap();
+        assert!(bits_equal(&c1, &c4), "tn ({m},{k},{n})");
+        // ABᵀ: A is m×k, B is n×k
+        let a2 = Mat::gaussian(m, k, &mut rng);
+        let b2 = Mat::gaussian(n, k, &mut rng);
+        let mut d1 = Mat::zeros(m, n);
+        single.gemm_into(1.0, &a2, false, &b2, true, 0.0, &mut d1).unwrap();
+        let mut d4 = Mat::zeros(m, n);
+        quad.gemm_into(1.0, &a2, false, &b2, true, 0.0, &mut d4).unwrap();
+        assert!(bits_equal(&d1, &d4), "nt ({m},{k},{n})");
+        // β-accumulation is deterministic too
+        let mut e1 = d1.clone();
+        single.gemm_into(0.5, &a2, false, &b2, true, 1.0, &mut e1).unwrap();
+        let mut e4 = d4.clone();
+        quad.gemm_into(0.5, &a2, false, &b2, true, 1.0, &mut e4).unwrap();
+        assert!(bits_equal(&e1, &e4), "beta ({m},{k},{n})");
+    }
+}
+
+#[test]
+fn free_gemm_matches_backend_gemm() {
+    // the free function (sequential) and an explicit 5-thread backend
+    // must agree bitwise — partition invariance, not just tolerance
+    let mut rng = Xoshiro256::seed_from_u64(11);
+    let a = Mat::gaussian(141, 87, &mut rng);
+    let b = Mat::gaussian(87, 53, &mut rng);
+    let mut via_free = Mat::zeros(141, 53);
+    gemm(1.0, &a, false, &b, false, 0.0, &mut via_free, None).unwrap();
+    let via_backend = CpuBackend::with_threads(5).matmul(&a, &b).unwrap();
+    assert!(bits_equal(&via_free, &via_backend));
+}
+
+#[test]
+fn masking_product_bit_identical_across_thread_counts() {
+    let mut rng = Xoshiro256::seed_from_u64(13);
+    // ragged: m not a multiple of the P block, user slice crossing Q blocks
+    let (m, n) = (37, 29);
+    let p = block_orthogonal(m, 5, 101).unwrap();
+    let q = block_orthogonal(n, 4, 102).unwrap();
+    let qi = q.row_slice(3, 22).unwrap();
+    let xi = Mat::gaussian(m, 19, &mut rng);
+    let reference = mask_matrix_with(&p, &xi, &qi, &CpuBackend::with_threads(1)).unwrap();
+    for threads in [2usize, 4, 7] {
+        let out = mask_matrix_with(&p, &xi, &qi, &CpuBackend::with_threads(threads)).unwrap();
+        assert!(bits_equal(&reference, &out), "threads={threads}");
+    }
+}
+
+#[test]
+fn fedsvd_outputs_byte_equal_across_thread_counts() {
+    let mut rng = Xoshiro256::seed_from_u64(17);
+    let x = Mat::gaussian(24, 18, &mut rng);
+    let parts = split_columns(&x, 3).unwrap();
+    let cfg = FedSvdConfig {
+        block_size: 5,
+        secagg_batch_rows: 8,
+        ..Default::default()
+    };
+    let o1 = run_fedsvd_with_backend(&parts, &cfg, &CpuBackend::with_threads(1)).unwrap();
+    for threads in [2usize, 4] {
+        let on = run_fedsvd_with_backend(&parts, &cfg, &CpuBackend::with_threads(threads)).unwrap();
+        assert!(
+            vec_bits_equal(&o1.s, &on.s),
+            "Σ bits differ at {threads} threads"
+        );
+        assert!(
+            bits_equal(o1.u.as_ref().unwrap(), on.u.as_ref().unwrap()),
+            "U bits differ at {threads} threads"
+        );
+        assert_eq!(o1.v_parts.len(), on.v_parts.len());
+        for (i, (a, b)) in o1.v_parts.iter().zip(&on.v_parts).enumerate() {
+            assert!(bits_equal(a, b), "Vᵀ part {i} bits differ at {threads} threads");
+        }
+        // simulated network metering must be schedule-independent too
+        assert_eq!(o1.net.total_bytes(), on.net.total_bytes());
+    }
+}
+
+#[test]
+fn fedsvd_parallel_stays_lossless() {
+    // belt and braces: the parallel run still reconstructs X
+    let mut rng = Xoshiro256::seed_from_u64(19);
+    let x = Mat::gaussian(16, 14, &mut rng);
+    let parts = split_columns(&x, 2).unwrap();
+    let cfg = FedSvdConfig {
+        block_size: 4,
+        ..Default::default()
+    };
+    let out = run_fedsvd_with_backend(&parts, &cfg, &CpuBackend::with_threads(4)).unwrap();
+    let truth = fedsvd::linalg::svd(&x).unwrap();
+    for (a, b) in out.s.iter().zip(&truth.s) {
+        assert!((a - b).abs() < 1e-9 * truth.s[0]);
+    }
+}

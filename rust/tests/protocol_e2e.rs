@@ -5,7 +5,7 @@
 use fedsvd::apps::{lr, lsa, pca};
 use fedsvd::coordinator::Session;
 use fedsvd::data::{regression_task, Dataset};
-use fedsvd::linalg::{svd, Mat, NativeKernel};
+use fedsvd::linalg::{svd, CpuBackend, Mat};
 use fedsvd::net::LinkSpec;
 use fedsvd::protocol::{run_fedsvd, split_columns, FedSvdConfig, OptFlags};
 use fedsvd::rng::Xoshiro256;
@@ -26,10 +26,10 @@ fn pca_lr_lsa_compose_on_one_dataset() {
     let x = Dataset::Ml100k.generate(0.025, 3);
     let parts = split_columns(&x, 2).unwrap();
 
-    let p = pca::run_federated_pca(&parts, 4, &cfg(8), &NativeKernel).unwrap();
+    let p = pca::run_federated_pca(&parts, 4, &cfg(8), CpuBackend::global()).unwrap();
     assert_eq!(p.u_r.cols(), 4);
 
-    let l = lsa::run_federated_lsa(&parts, 4, &cfg(8), &NativeKernel).unwrap();
+    let l = lsa::run_federated_lsa(&parts, 4, &cfg(8), CpuBackend::global()).unwrap();
     assert_eq!(l.v_parts.len(), 2);
 
     // PCA and LSA share the truncated-SVD core: singular values agree
@@ -47,7 +47,7 @@ fn pca_lr_lsa_compose_on_one_dataset() {
 fn lr_end_to_end_with_network_accounting() {
     let (x, _w, y) = regression_task(60, 12, 0.05, 5);
     let parts = split_columns(&x, 3).unwrap();
-    let out = lr::run_federated_lr(&parts, &y, 0, &cfg(6), &NativeKernel).unwrap();
+    let out = lr::run_federated_lr(&parts, &y, 0, &cfg(6), CpuBackend::global()).unwrap();
     // network meters must cover: masks, secagg, y', w' broadcast, eval
     assert!(out.protocol.net.total_bytes() > 0);
     assert!(out.protocol.net.rounds() >= 6);
@@ -186,7 +186,7 @@ fn offloaded_input_composes_with_protocol() {
 fn session_layer_report_is_consistent() {
     let mut rng = Xoshiro256::seed_from_u64(13);
     let parts = split_columns(&Mat::gaussian(10, 10, &mut rng), 2).unwrap();
-    let session = Session::native(cfg(5));
+    let session = Session::cpu(cfg(5));
     let (out, report) = session.run_svd(&parts).unwrap();
     assert_eq!(report.singular_values, out.s);
     assert_eq!(report.total_bytes, out.net.total_bytes());

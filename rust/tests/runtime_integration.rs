@@ -1,12 +1,14 @@
 //! Integration tests for the AOT → PJRT path: artifacts produced by
 //! `make artifacts` are loaded, compiled and executed from Rust, and the
-//! PJRT tile engine must agree with the native kernel to f64 round-off.
+//! PJRT tile engine must agree with the CPU backend to f64 round-off.
 //!
-//! These tests are skipped (with a loud message) when artifacts are
-//! missing, so `cargo test` stays green pre-`make artifacts`; CI runs
-//! `make test`, which builds artifacts first.
+//! The whole file is compiled only with the `pjrt` cargo feature (the
+//! engine needs the vendored `xla` crate); tests are further skipped
+//! (with a loud message) when artifacts are missing, so
+//! `cargo test --features pjrt` stays green pre-`make artifacts`.
+#![cfg(feature = "pjrt")]
 
-use fedsvd::linalg::{Mat, MatKernel, NativeKernel};
+use fedsvd::linalg::{CpuBackend, GemmBackend, Mat};
 use fedsvd::rng::Xoshiro256;
 use fedsvd::runtime::{artifacts_dir, TileEngine};
 use fedsvd::util::max_abs_diff;
@@ -35,9 +37,9 @@ fn pjrt_matmul_matches_native_exact_tile() {
     let a = Mat::gaussian(64, 64, &mut rng);
     let b = Mat::gaussian(64, 64, &mut rng);
     let pjrt = engine.matmul(&a, &b).unwrap();
-    let native = NativeKernel.matmul(&a, &b).unwrap();
+    let native = CpuBackend::global().matmul(&a, &b).unwrap();
     let d = max_abs_diff(pjrt.data(), native.data());
-    assert!(d < 1e-10, "pjrt vs native diff {d}");
+    assert!(d < 1e-10, "pjrt vs cpu diff {d}");
 }
 
 #[test]
@@ -49,7 +51,7 @@ fn pjrt_matmul_handles_padding() {
         let a = Mat::gaussian(m, k, &mut rng);
         let b = Mat::gaussian(k, n, &mut rng);
         let pjrt = engine.matmul(&a, &b).unwrap();
-        let native = NativeKernel.matmul(&a, &b).unwrap();
+        let native = CpuBackend::global().matmul(&a, &b).unwrap();
         let d = max_abs_diff(pjrt.data(), native.data());
         assert!(d < 1e-10, "({m},{k},{n}) diff {d}");
         assert_eq!(pjrt.shape(), (m, n));
@@ -65,7 +67,7 @@ fn pjrt_fused_mask_tile_matches_native() {
     let x = Mat::gaussian(64, 64, &mut rng);
     let q = Mat::gaussian(64, 64, &mut rng);
     let fused = engine.mask_tile(&p, &x, &q).unwrap();
-    let native = NativeKernel.mask_tile(&p, &x, &q).unwrap();
+    let native = CpuBackend::global().mask_tile(&p, &x, &q).unwrap();
     let d = max_abs_diff(fused.data(), native.data());
     assert!(d < 1e-9, "fused mask tile diff {d}");
 }
@@ -79,7 +81,7 @@ fn pjrt_shape_errors_are_reported() {
 }
 
 #[test]
-fn full_protocol_runs_on_pjrt_kernel_losslessly() {
+fn full_protocol_runs_on_pjrt_backend_losslessly() {
     let Some(engine) = engine_or_skip() else { return };
     let mut rng = Xoshiro256::seed_from_u64(4);
     let x = Mat::gaussian(16, 20, &mut rng);
@@ -88,7 +90,7 @@ fn full_protocol_runs_on_pjrt_kernel_losslessly() {
         block_size: 8,
         ..Default::default()
     };
-    let out = fedsvd::protocol::run_fedsvd_with_kernel(&parts, &cfg, &engine).unwrap();
+    let out = fedsvd::protocol::run_fedsvd_with_backend(&parts, &cfg, &engine).unwrap();
     let truth = fedsvd::linalg::svd(&x).unwrap();
     for (i, (a, b)) in out.s.iter().zip(&truth.s).enumerate() {
         assert!(
