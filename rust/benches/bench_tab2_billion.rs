@@ -9,8 +9,10 @@
 
 use fedsvd::apps::{lr, lsa, pca};
 use fedsvd::bench::section;
+use fedsvd::coordinator::{ExecMode, Session};
 use fedsvd::data::{movielens_like, regression_task, synthetic_powerlaw};
 use fedsvd::linalg::CpuBackend;
+use fedsvd::metrics::process_peak_rss_bytes;
 use fedsvd::protocol::{split_columns, FedSvdConfig};
 use fedsvd::util::human_secs;
 
@@ -124,4 +126,50 @@ fn main() {
          baseline's years (Fig 2b). Constants differ (their Python stack,\n\
          their exact solver); the order of magnitude is the claim."
     );
+
+    // ---- cluster shard-scaling sweep (JSON rows) -----------------------
+    // The out-of-core path behind the billion-scale claim, at laptop
+    // scale: same matrix, increasing shard counts, CSP budget pinned
+    // *below* the masked matrix. One JSON row per shard count, same
+    // row style as bench_hotpath's thread-scaling sweep, so the
+    // trajectory is trackable across PRs.
+    section(
+        "Tab 2/cluster",
+        "sharded multi-party runtime, CSP budget < masked matrix — JSON rows",
+    );
+    {
+        let (m, n) = (512usize, 96usize);
+        let matrix_bytes = (m * n * 8) as u64;
+        let mem_budget = 256 * 1024u64; // 256 KiB < 384 KiB matrix
+        let x = synthetic_powerlaw(m, n, 0.01, 9);
+        let parts = split_columns(&x, 2).unwrap();
+        println!(
+            "matrix {m}x{n} ({} B), budget {} B\n",
+            matrix_bytes, mem_budget
+        );
+        for shards in [1usize, 2, 4, 8] {
+            let session = Session::cpu(cfg()).with_exec(ExecMode::Cluster {
+                shards,
+                mem_budget,
+            });
+            let t0 = std::time::Instant::now();
+            let (out, report) = session.run_svd(&parts).unwrap();
+            let wall_s = t0.elapsed().as_secs_f64();
+            let stats = report.cluster.expect("cluster stats");
+            assert!(stats.csp_peak_matrix_bytes <= mem_budget);
+            std::hint::black_box(&out.s);
+            println!(
+                "{{\"bench\":\"tab2_cluster_scaling\",\"m\":{m},\"n\":{n},\
+                 \"shards\":{shards},\"mem_budget\":{mem_budget},\
+                 \"wall_s\":{wall_s:.6},\"net_s\":{:.6},\
+                 \"peak_rss\":{},\"total_bytes\":{},\
+                 \"csp_peak_matrix_bytes\":{},\"shard_spills\":{}}}",
+                report.net_s,
+                process_peak_rss_bytes(),
+                report.total_bytes,
+                stats.csp_peak_matrix_bytes,
+                stats.shard_spills
+            );
+        }
+    }
 }

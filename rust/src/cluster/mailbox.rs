@@ -1,0 +1,144 @@
+//! Typed blocking mailboxes between cluster parties.
+//!
+//! Each party owns one unbounded FIFO inbox; any thread holding a clone
+//! may post into it. Delivery is decoupled from network *metering*: the
+//! sender meters bytes through the [`crate::cluster::round`] scheduler,
+//! then posts the payload here. `recv` blocks until a message arrives or
+//! the mailbox is closed — closing is the runtime's abort path, so a
+//! party that dies can never strand its peers on an empty queue.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::util::{Error, Result};
+
+struct State<T> {
+    queue: VecDeque<T>,
+    closed: bool,
+}
+
+struct Inner<T> {
+    state: Mutex<State<T>>,
+    cv: Condvar,
+}
+
+/// A cloneable handle to one party's inbox.
+pub struct Mailbox<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T> Clone for Mailbox<T> {
+    fn clone(&self) -> Self {
+        Self {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+}
+
+impl<T> Default for Mailbox<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Mailbox<T> {
+    pub fn new() -> Self {
+        Self {
+            inner: Arc::new(Inner {
+                state: Mutex::new(State {
+                    queue: VecDeque::new(),
+                    closed: false,
+                }),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Enqueue a message (never blocks). Posting to a closed mailbox is a
+    /// no-op: the receiver is already gone or aborting.
+    pub fn post(&self, msg: T) {
+        let mut st = self.inner.state.lock().expect("mailbox poisoned");
+        if !st.closed {
+            st.queue.push_back(msg);
+            self.inner.cv.notify_one();
+        }
+    }
+
+    /// Block until a message arrives; errors once the mailbox is closed
+    /// and drained.
+    pub fn recv(&self) -> Result<T> {
+        let mut st = self.inner.state.lock().expect("mailbox poisoned");
+        loop {
+            if let Some(m) = st.queue.pop_front() {
+                return Ok(m);
+            }
+            if st.closed {
+                return Err(Error::Runtime(
+                    "mailbox closed: a peer party aborted".into(),
+                ));
+            }
+            st = self.inner.cv.wait(st).expect("mailbox poisoned");
+        }
+    }
+
+    /// Close the inbox, waking every blocked receiver (abort path).
+    pub fn close(&self) {
+        let mut st = self.inner.state.lock().expect("mailbox poisoned");
+        st.closed = true;
+        self.inner.cv.notify_all();
+    }
+
+    /// Queued (undelivered) message count.
+    pub fn len(&self) -> usize {
+        self.inner.state.lock().expect("mailbox poisoned").queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_across_threads() {
+        let mb: Mailbox<usize> = Mailbox::new();
+        let tx = mb.clone();
+        let h = std::thread::spawn(move || {
+            for i in 0..100 {
+                tx.post(i);
+            }
+        });
+        let mut got = Vec::new();
+        for _ in 0..100 {
+            got.push(mb.recv().unwrap());
+        }
+        h.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+        assert!(mb.is_empty());
+    }
+
+    #[test]
+    fn close_wakes_blocked_receiver() {
+        let mb: Mailbox<u8> = Mailbox::new();
+        let rx = mb.clone();
+        let h = std::thread::spawn(move || rx.recv());
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        mb.close();
+        assert!(h.join().unwrap().is_err());
+        // posts after close are dropped, recv still errors
+        mb.post(1);
+        assert!(mb.recv().is_err());
+    }
+
+    #[test]
+    fn drains_queued_before_reporting_closed() {
+        let mb: Mailbox<u8> = Mailbox::new();
+        mb.post(7);
+        mb.close();
+        assert_eq!(mb.recv().unwrap(), 7);
+        assert!(mb.recv().is_err());
+    }
+}

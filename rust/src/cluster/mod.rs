@@ -1,0 +1,37 @@
+//! Sharded multi-party runtime with an out-of-core CSP SVD.
+//!
+//! The sequential protocol in [`crate::protocol`] drives all parties from
+//! one loop — the reference oracle. This subsystem is the scaling path
+//! the paper's billion-scale results imply (Tab. 2, Fig. 5): TA, CSP and
+//! each user run as **real threads** connected by typed [`mailbox`]
+//! channels, sends are metered through the shared byte/latency model via
+//! the [`round`] scheduler (concurrent uploads overlap instead of
+//! serializing), and the CSP ingests masked row shards into a budgeted
+//! [`shard::ShardStore`] — spilling through [`crate::storage`] — so the
+//! full masked matrix is never resident on any party. The factorization
+//! itself ([`ooc`]) streams every product over shards and emits `U'` row
+//! blocks back to the users as they are produced.
+//!
+//! Layering: `mailbox`/`round` are transport (over [`crate::net`]),
+//! `shard` is budgeted storage (over [`crate::storage`]), `ooc` is the
+//! solver (over [`crate::linalg`]), and [`runtime`] is the protocol
+//! choreography (mirroring [`crate::protocol::fedsvd`]). Entry point:
+//! `coordinator::Session` with `ExecMode::Cluster`.
+//!
+//! Shard lifecycle: user upload (secagg round per shard) → CSP aggregate
+//! (exact fixed-point cancellation ⇒ bit-identical to the sequential
+//! masked matrix) → resident in the store, LRU-spilled under the budget
+//! → streamed back through every solver pass in bounded row chunks →
+//! dropped; `U'` chunks leave the CSP the moment they are computed.
+
+pub mod mailbox;
+pub mod ooc;
+pub mod round;
+pub mod runtime;
+pub mod shard;
+
+pub use mailbox::Mailbox;
+pub use ooc::{ooc_svd, OocParams, OocSvdResult};
+pub use round::RoundScheduler;
+pub use runtime::{run_fedsvd_cluster, ClusterConfig, ClusterStats};
+pub use shard::ShardStore;

@@ -1,0 +1,454 @@
+//! Out-of-core CSP SVD over a [`ShardStore`] (paper Step 3 at scale).
+//!
+//! The CSP factorizes the masked matrix without ever materializing it:
+//! every pass streams row shards (and, inside a spilled shard, bounded
+//! row chunks) through `GemmBackend::gemm_into`, and the left factor is
+//! *emitted* shard-by-shard to a sink instead of being assembled — Step
+//! 2→4 never holds the full m×n masked matrix (or the full m×k U') on
+//! the CSP.
+//!
+//! Two algorithms, chosen by [`SvdMode`]:
+//!
+//! * **Full** (tall, m ≥ n): one streamed Gram pass `G = Σᵢ AᵢᵀAᵢ`
+//!   (n×n resident), a Jacobi eigendecomposition `G = V Λ Vᵀ`, then a
+//!   second streamed pass emitting `U'ᵢ = Aᵢ·V·Σ⁻¹`. Exact up to
+//!   `O(ε·κ(A))` on the singular values — within the paper's 1e-9
+//!   losslessness bar for the conditioning its workloads exhibit. Wide
+//!   full inputs are rejected (their right factor is itself m×n-sized;
+//!   run those sequentially or truncated).
+//! * **Truncated** (any shape): the randomized range finder + block
+//!   power iteration of [`crate::linalg::randomized_svd`], restructured
+//!   so every product with A streams over shards. Probes are drawn from
+//!   the explicit `probe_seed` — no ambient RNG state, so runs are
+//!   bit-reproducible.
+//!
+//! All factor and accumulator matrices are declared against the store's
+//! budget; [`ShardStore::peak_bytes`] after a run is the provable CSP
+//! matrix-memory high-water mark.
+
+use crate::linalg::eig::sym_eig;
+use crate::linalg::qr::orthonormalize;
+use crate::linalg::{svd_with_probe_seed, GemmBackend, Mat};
+use crate::protocol::SvdMode;
+use crate::rng::Xoshiro256;
+use crate::util::{Error, Result};
+
+use super::shard::ShardStore;
+
+/// Tuning for the out-of-core factorization.
+#[derive(Debug, Clone)]
+pub struct OocParams {
+    pub mode: SvdMode,
+    /// Extra probe columns beyond the target rank (truncated mode).
+    pub oversample: usize,
+    /// Subspace (block power) iterations (truncated mode).
+    pub power_iters: usize,
+    /// Explicit seed for every random probe drawn by the factorization.
+    pub probe_seed: u64,
+}
+
+/// What stays resident at the CSP after the factorization: the spectrum
+/// and the (k×n) right factor. The left factor was streamed to the sink.
+pub struct OocSvdResult {
+    pub s: Vec<f64>,
+    pub vt: Mat,
+}
+
+fn bytes_of(rows: usize, cols: usize) -> u64 {
+    (rows * cols * 8) as u64
+}
+
+/// Factorize the store's matrix. `emit_u(global_r0, rows_block)` receives
+/// the left factor in row order when `want_u` is set; blocks never
+/// overlap and cover all m rows.
+pub fn ooc_svd(
+    store: &mut ShardStore,
+    params: &OocParams,
+    backend: &dyn GemmBackend,
+    want_u: bool,
+    emit_u: &mut dyn FnMut(usize, Mat) -> Result<()>,
+) -> Result<OocSvdResult> {
+    let (m, n) = (store.rows(), store.cols());
+    if m == 0 || n == 0 {
+        return Err(Error::Shape("ooc_svd: empty matrix".into()));
+    }
+    match params.mode {
+        SvdMode::Full => ooc_full_tall(store, backend, want_u, emit_u, m, n),
+        SvdMode::Truncated { rank } => {
+            ooc_truncated(store, params, backend, want_u, emit_u, m, n, rank)
+        }
+    }
+}
+
+fn ooc_full_tall(
+    store: &mut ShardStore,
+    backend: &dyn GemmBackend,
+    want_u: bool,
+    emit_u: &mut dyn FnMut(usize, Mat) -> Result<()>,
+    m: usize,
+    n: usize,
+) -> Result<OocSvdResult> {
+    if m < n {
+        return Err(Error::Protocol(format!(
+            "cluster full SVD needs a tall masked matrix (m ≥ n), got \
+             {m}×{n}; use SvdMode::Truncated or the sequential oracle"
+        )));
+    }
+    let nn = bytes_of(n, n);
+
+    // pass 1: G = Σᵢ AᵢᵀAᵢ, streamed
+    store.alloc(nn)?;
+    let mut g = Mat::zeros(n, n);
+    let chunk = store.chunk_rows((n * 8) as u64);
+    for idx in 0..store.n_shards() {
+        store.for_each_chunk(idx, chunk, &mut |_, a| {
+            backend.gemm_into(1.0, a, true, a, false, 1.0, &mut g)
+        })?;
+    }
+
+    // eigendecomposition (Jacobi): declare its working set (symmetrized
+    // copy + accumulated V) alongside G, then release everything but V
+    store.alloc(2 * nn)?;
+    let eig = sym_eig(&g)?;
+    drop(g);
+    store.free(2 * nn); // G + the eig scratch copy; V stays declared
+    let s: Vec<f64> = eig.values.iter().map(|&l| l.max(0.0).sqrt()).collect();
+    let v = eig.vectors; // n×n, column j ↔ s[j]
+
+    // pass 2: stream U'ᵢ = Aᵢ·V·Σ⁻¹ out through the sink
+    if want_u {
+        let smax = s[0];
+        let tol = smax * f64::EPSILON * (m.max(n) as f64);
+        // σ_j ≈ 0: no left direction is recoverable from A·v_j — emit a
+        // zero column (the sequential Jacobi completes these to an
+        // orthonormal basis instead; full-rank inputs are unaffected)
+        let inv_s: Vec<f64> = s
+            .iter()
+            .map(|&x| if x > tol { 1.0 / x } else { 0.0 })
+            .collect();
+        let chunk = store.chunk_rows(((n + n) * 8) as u64);
+        let reserve = bytes_of(chunk, n);
+        store.alloc(reserve)?;
+        let mut failed = None;
+        for idx in 0..store.n_shards() {
+            let r = store.for_each_chunk(idx, chunk, &mut |r0, a| {
+                let mut uc = Mat::zeros(a.rows(), n);
+                backend.gemm_into(1.0, a, false, &v, false, 0.0, &mut uc)?;
+                for j in 0..n {
+                    let scale = inv_s[j];
+                    for i in 0..uc.rows() {
+                        uc[(i, j)] *= scale;
+                    }
+                }
+                emit_u(r0, uc)
+            });
+            if let Err(e) = r {
+                failed = Some(e);
+                break;
+            }
+        }
+        store.free(reserve);
+        if let Some(e) = failed {
+            return Err(e);
+        }
+    }
+
+    // vt replaces V in the declared set (transpose is a transient copy)
+    store.alloc(nn)?;
+    let vt = v.transpose();
+    drop(v);
+    store.free(nn);
+    Ok(OocSvdResult { s, vt })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn ooc_truncated(
+    store: &mut ShardStore,
+    params: &OocParams,
+    backend: &dyn GemmBackend,
+    want_u: bool,
+    emit_u: &mut dyn FnMut(usize, Mat) -> Result<()>,
+    m: usize,
+    n: usize,
+    rank: usize,
+) -> Result<OocSvdResult> {
+    let k = rank.min(m.min(n));
+    if k == 0 {
+        return Err(Error::Shape("ooc_svd: rank 0".into()));
+    }
+    let l = (k + params.oversample).min(m.min(n));
+    let mut rng = Xoshiro256::seed_from_u64(params.probe_seed);
+    let (nl, ml) = (bytes_of(n, l), bytes_of(m, l));
+
+    // range finder: Y = A·Ω, streamed per shard into Y's row window
+    store.alloc(nl)?;
+    let omega = Mat::gaussian(n, l, &mut rng);
+    store.alloc(ml)?;
+    let mut y = Mat::zeros(m, l);
+    let chunk = store.chunk_rows((n * 8) as u64);
+    for idx in 0..store.n_shards() {
+        store.for_each_chunk(idx, chunk, &mut |r0, a| {
+            backend.gemm_view_acc(1.0, a.as_view(), omega.as_view(), &mut y, r0, 0)
+        })?;
+    }
+    drop(omega);
+    store.free(nl);
+
+    store.alloc(ml)?; // Q lives beside Y transiently
+    let mut q = orthonormalize(&y)?;
+    drop(y);
+    store.free(ml);
+
+    for _ in 0..params.power_iters {
+        // Z = orth(Aᵀ·Q): n×l accumulated over shards
+        store.alloc(nl)?;
+        let mut z = Mat::zeros(n, l);
+        // chunk sizes track the *current* declared set — each pass pins a
+        // different working set, so a stale chunk could overrun the budget
+        let chunk = store.chunk_rows((n * 8) as u64);
+        for idx in 0..store.n_shards() {
+            store.for_each_chunk(idx, chunk, &mut |r0, a| {
+                let qr = q.slice(r0, r0 + a.rows(), 0, l);
+                backend.gemm_into(1.0, a, true, &qr, false, 1.0, &mut z)
+            })?;
+        }
+        let zo = orthonormalize(&z)?;
+        drop(z);
+        // Q = orth(A·Z): m×l assembled per shard row window
+        store.alloc(ml)?;
+        let mut y2 = Mat::zeros(m, l);
+        let chunk = store.chunk_rows((n * 8) as u64);
+        for idx in 0..store.n_shards() {
+            store.for_each_chunk(idx, chunk, &mut |r0, a| {
+                backend.gemm_view_acc(1.0, a.as_view(), zo.as_view(), &mut y2, r0, 0)
+            })?;
+        }
+        drop(zo);
+        store.free(nl);
+        q = orthonormalize(&y2)?;
+        drop(y2);
+        store.free(ml); // y2 released; Q keeps its ml declaration
+    }
+
+    // B = Qᵀ·A (l×n), then the small in-core SVD
+    store.alloc(bytes_of(l, n))?;
+    let mut b = Mat::zeros(l, n);
+    let chunk = store.chunk_rows((n * 8) as u64);
+    for idx in 0..store.n_shards() {
+        store.for_each_chunk(idx, chunk, &mut |r0, a| {
+            let qr = q.slice(r0, r0 + a.rows(), 0, l);
+            backend.gemm_into(1.0, &qr, true, a, false, 1.0, &mut b)
+        })?;
+    }
+    store.alloc(2 * bytes_of(l, n))?; // inner U/Vᵀ working set
+    let inner = svd_with_probe_seed(&b, rng.next_u64())?;
+    drop(b);
+    store.free(2 * bytes_of(l, n));
+
+    // stream U = Q·U_B (top-k columns) out in bounded row blocks
+    if want_u {
+        let uk = inner.u.take_cols(k); // l×k
+        let rows_per = store.chunk_rows((2 * k * 8) as u64).min(m);
+        let reserve = bytes_of(rows_per, k);
+        store.alloc(reserve)?;
+        let mut r0 = 0usize;
+        let mut failed = None;
+        while r0 < m {
+            let r1 = (r0 + rows_per).min(m);
+            let qr = q.slice(r0, r1, 0, l);
+            let mut uc = Mat::zeros(r1 - r0, k);
+            let res = match backend.gemm_into(1.0, &qr, false, &uk, false, 0.0, &mut uc) {
+                Ok(()) => emit_u(r0, uc),
+                Err(e) => Err(e),
+            };
+            if let Err(e) = res {
+                failed = Some(e);
+                break;
+            }
+            r0 = r1;
+        }
+        store.free(reserve);
+        if let Some(e) = failed {
+            return Err(e);
+        }
+    }
+    drop(q);
+    store.free(ml);
+    store.free(bytes_of(l, n)); // B's slot, handed to vt below
+    store.alloc(bytes_of(k, n))?;
+    Ok(OocSvdResult {
+        s: inner.s[..k].to_vec(),
+        vt: inner.vt.take_rows(k),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, svd, CpuBackend};
+    use crate::util::max_abs_diff;
+
+    fn store_from(x: &Mat, shard_rows: usize, budget: u64) -> ShardStore {
+        let mut st = ShardStore::new(&std::env::temp_dir(), x.cols(), budget).unwrap();
+        let mut r0 = 0;
+        while r0 < x.rows() {
+            let r1 = (r0 + shard_rows).min(x.rows());
+            st.insert(r0, x.slice(r0, r1, 0, x.cols())).unwrap();
+            r0 = r1;
+        }
+        st
+    }
+
+    #[test]
+    fn full_tall_matches_in_core_svd_under_tight_budget() {
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let x = Mat::gaussian(40, 8, &mut rng); // 2560 B
+        let budget = 2048u64; // smaller than the matrix
+        let mut st = store_from(&x, 10, budget);
+        let mut u = Mat::zeros(40, 8);
+        let params = OocParams {
+            mode: SvdMode::Full,
+            oversample: 0,
+            power_iters: 0,
+            probe_seed: 1,
+        };
+        let out = ooc_svd(&mut st, &params, CpuBackend::global(), true, &mut |r0, blk| {
+            u.set_slice(r0, 0, &blk);
+            Ok(())
+        })
+        .unwrap();
+        let truth = svd(&x).unwrap();
+        for i in 0..8 {
+            assert!(
+                (out.s[i] - truth.s[i]).abs() <= 1e-10 * truth.s[0],
+                "σ{i}: {} vs {}",
+                out.s[i],
+                truth.s[i]
+            );
+        }
+        // reconstruction through the streamed factors
+        let mut us = u.clone();
+        for j in 0..8 {
+            for i in 0..40 {
+                us[(i, j)] *= out.s[j];
+            }
+        }
+        let rec = matmul(&us, &out.vt).unwrap();
+        assert!(max_abs_diff(rec.data(), x.data()) < 1e-9 * truth.s[0]);
+        assert!(u.orthonormality_defect() < 1e-9);
+        assert!(st.peak_bytes() <= budget, "peak {}", st.peak_bytes());
+        assert!(st.spill_count() > 0);
+    }
+
+    #[test]
+    fn full_rejects_wide() {
+        let mut rng = Xoshiro256::seed_from_u64(12);
+        let x = Mat::gaussian(5, 9, &mut rng);
+        let mut st = store_from(&x, 5, 1 << 20);
+        let params = OocParams {
+            mode: SvdMode::Full,
+            oversample: 0,
+            power_iters: 0,
+            probe_seed: 1,
+        };
+        let mut sink = |_: usize, _: Mat| -> Result<()> { Ok(()) };
+        assert!(ooc_svd(&mut st, &params, CpuBackend::global(), false, &mut sink).is_err());
+    }
+
+    #[test]
+    fn truncated_matches_in_core_randomized_spectrum() {
+        // low-rank input: both in-core and streamed range finders are exact
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        let a = Mat::gaussian(30, 4, &mut rng);
+        let b = Mat::gaussian(4, 22, &mut rng);
+        let x = matmul(&a, &b).unwrap();
+        let mut st = store_from(&x, 7, 1 << 20);
+        let params = OocParams {
+            mode: SvdMode::Truncated { rank: 4 },
+            oversample: 4,
+            power_iters: 2,
+            probe_seed: 42,
+        };
+        let mut u = Mat::zeros(30, 4);
+        let out = ooc_svd(&mut st, &params, CpuBackend::global(), true, &mut |r0, blk| {
+            u.set_slice(r0, 0, &blk);
+            Ok(())
+        })
+        .unwrap();
+        let truth = svd(&x).unwrap();
+        for i in 0..4 {
+            assert!(
+                (out.s[i] - truth.s[i]).abs() < 1e-8 * truth.s[0],
+                "σ{i}: {} vs {}",
+                out.s[i],
+                truth.s[i]
+            );
+        }
+        let mut us = u.clone();
+        for j in 0..4 {
+            for i in 0..30 {
+                us[(i, j)] *= out.s[j];
+            }
+        }
+        let rec = matmul(&us, &out.vt).unwrap();
+        assert!(max_abs_diff(rec.data(), x.data()) < 1e-7 * truth.s[0]);
+    }
+
+    #[test]
+    fn truncated_stays_under_tight_budget_with_spilled_shard() {
+        // regression: the power-iteration passes pin a larger working set
+        // than the range finder, so chunk sizes must be recomputed per
+        // pass — a stale range-finder chunk overruns the budget here
+        let mut rng = Xoshiro256::seed_from_u64(15);
+        let a = Mat::gaussian(128, 2, &mut rng);
+        let b = Mat::gaussian(2, 16, &mut rng);
+        let x = matmul(&a, &b).unwrap(); // 16384 B, rank 2
+        let budget = 12_288u64; // < matrix, ≥ factors (2·ml + nl + 1 row)
+        let mut st = store_from(&x, 128, budget); // single spilled shard
+        assert!(st.spill_count() > 0);
+        let params = OocParams {
+            mode: SvdMode::Truncated { rank: 2 },
+            oversample: 2,
+            power_iters: 2,
+            probe_seed: 5,
+        };
+        let mut u = Mat::zeros(128, 2);
+        let out = ooc_svd(&mut st, &params, CpuBackend::global(), true, &mut |r0, blk| {
+            u.set_slice(r0, 0, &blk);
+            Ok(())
+        })
+        .unwrap();
+        assert!(st.peak_bytes() <= budget, "peak {}", st.peak_bytes());
+        let truth = svd(&x).unwrap();
+        for i in 0..2 {
+            assert!((out.s[i] - truth.s[i]).abs() < 1e-8 * truth.s[0]);
+        }
+    }
+
+    #[test]
+    fn repeatable_from_probe_seed() {
+        let mut rng = Xoshiro256::seed_from_u64(14);
+        let x = Mat::gaussian(18, 6, &mut rng);
+        let params = OocParams {
+            mode: SvdMode::Truncated { rank: 3 },
+            oversample: 3,
+            power_iters: 1,
+            probe_seed: 99,
+        };
+        let run = |x: &Mat| {
+            let mut st = store_from(x, 5, 1 << 20);
+            let mut u = Mat::zeros(18, 3);
+            let out = ooc_svd(&mut st, &params, CpuBackend::global(), true, &mut |r0, blk| {
+                u.set_slice(r0, 0, &blk);
+                Ok(())
+            })
+            .unwrap();
+            (out.s, u, out.vt)
+        };
+        let (s1, u1, vt1) = run(&x);
+        let (s2, u2, vt2) = run(&x);
+        assert!(crate::util::bits_equal(&s1, &s2));
+        assert!(crate::util::bits_equal(u1.data(), u2.data()));
+        assert!(crate::util::bits_equal(vt1.data(), vt2.data()));
+    }
+}

@@ -1,0 +1,214 @@
+//! Round scheduler: concurrent senders share one metered [`NetSim`] round.
+//!
+//! The sequential protocol brackets logically-concurrent messages with
+//! `begin_round`/`end_round` from a single thread. In the cluster runtime
+//! the senders are real threads, so the bracketing becomes a rendezvous:
+//! every sender of a logical round calls [`RoundScheduler::enter`] with
+//! the round's label and its total sender count, meters its bytes with
+//! [`RoundScheduler::send`], and calls [`RoundScheduler::leave`]. The
+//! first entrant opens the underlying `NetSim` round; the last leaver
+//! closes it, which charges `max-per-sender bytes / bw + RTT` — the k
+//! user uploads of one shard overlap instead of serializing, exactly the
+//! star-topology model the paper's Appendix-A testbed emulates.
+//!
+//! Rounds with different labels serialize: `enter` blocks while another
+//! label is open. The protocol's round DAG must therefore be designed so
+//! that an open round's senders never wait on a blocked-out party — every
+//! round used by [`crate::cluster::runtime`] satisfies this (senders of a
+//! round depend only on earlier rounds). Simulated time is deterministic:
+//! membership is by label, not by wall-clock arrival, so thread timing
+//! can never change what lands in which round.
+
+use std::sync::{Condvar, Mutex};
+
+use crate::net::link::PartyId;
+use crate::net::{LinkSpec, NetSim};
+use crate::util::{Error, Result};
+
+struct SchedState {
+    /// Label of the open round, if any.
+    open: Option<u64>,
+    /// Senders of the open round that have not left yet.
+    pending_leaves: usize,
+    aborted: bool,
+}
+
+/// Shared network meter + round rendezvous for the cluster runtime.
+pub struct RoundScheduler {
+    net: Mutex<NetSim>,
+    state: Mutex<SchedState>,
+    cv: Condvar,
+}
+
+impl RoundScheduler {
+    pub fn new(spec: LinkSpec) -> Self {
+        Self {
+            net: Mutex::new(NetSim::new(spec)),
+            state: Mutex::new(SchedState {
+                open: None,
+                pending_leaves: 0,
+                aborted: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Join round `label` as one of `senders` total senders, opening it if
+    /// this thread is the first. Blocks while a different round is open.
+    pub fn enter(&self, label: u64, senders: usize) -> Result<()> {
+        assert!(senders > 0, "a round needs at least one sender");
+        let mut st = self.state.lock().expect("scheduler poisoned");
+        loop {
+            if st.aborted {
+                return Err(Error::Runtime("round scheduler aborted".into()));
+            }
+            match st.open {
+                None => {
+                    st.open = Some(label);
+                    st.pending_leaves = senders;
+                    self.net.lock().expect("netsim poisoned").begin_round();
+                    return Ok(());
+                }
+                Some(l) if l == label => return Ok(()),
+                Some(_) => st = self.cv.wait(st).expect("scheduler poisoned"),
+            }
+        }
+    }
+
+    /// Meter one message. Callers bracket sends with `enter`/`leave`; a
+    /// send outside any open round is charged as its own round (the
+    /// `NetSim` implicit-round rule).
+    pub fn send(&self, from: PartyId, to: PartyId, bytes: u64) {
+        self.net.lock().expect("netsim poisoned").send(from, to, bytes);
+    }
+
+    /// Declare this sender done with round `label`; the last leaver
+    /// closes and charges the round.
+    pub fn leave(&self, label: u64) -> Result<()> {
+        let mut st = self.state.lock().expect("scheduler poisoned");
+        if st.aborted {
+            return Err(Error::Runtime("round scheduler aborted".into()));
+        }
+        if st.open != Some(label) {
+            return Err(Error::Runtime(format!(
+                "leave({label}): round not open (open: {:?})",
+                st.open
+            )));
+        }
+        st.pending_leaves -= 1;
+        if st.pending_leaves == 0 {
+            st.open = None;
+            self.net.lock().expect("netsim poisoned").end_round();
+            self.cv.notify_all();
+        }
+        Ok(())
+    }
+
+    /// Abort: wake every blocked `enter` with an error (a party failed).
+    pub fn abort(&self) {
+        let mut st = self.state.lock().expect("scheduler poisoned");
+        st.aborted = true;
+        self.cv.notify_all();
+    }
+
+    /// Read the live meters.
+    pub fn with_net<R>(&self, f: impl FnOnce(&NetSim) -> R) -> R {
+        f(&self.net.lock().expect("netsim poisoned"))
+    }
+
+    /// Recover the meter once all parties have joined.
+    pub fn into_net(self) -> NetSim {
+        self.net.into_inner().expect("netsim poisoned")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::link::{CSP, USER_BASE};
+    use std::sync::Arc;
+
+    fn spec() -> LinkSpec {
+        LinkSpec {
+            bandwidth_bps: 1e9,
+            rtt_s: 0.05,
+        }
+    }
+
+    #[test]
+    fn concurrent_senders_overlap_in_one_round() {
+        let sched = Arc::new(RoundScheduler::new(spec()));
+        let handles: Vec<_> = (0..4u64)
+            .map(|i| {
+                let s = Arc::clone(&sched);
+                std::thread::spawn(move || {
+                    s.enter(7, 4).unwrap();
+                    s.send(USER_BASE + i as usize, CSP, 1000 * (i + 1));
+                    s.leave(7).unwrap();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let net = Arc::try_unwrap(sched).ok().unwrap().into_net();
+        assert_eq!(net.rounds(), 1);
+        assert_eq!(net.total_messages(), 4);
+        // the slowest sender (4000 B) gates the round
+        assert!((net.sim_elapsed_s() - (4000.0 * 8.0 / 1e9 + 0.05)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distinct_rounds_serialize_without_deadlock() {
+        let sched = Arc::new(RoundScheduler::new(spec()));
+        let s2 = Arc::clone(&sched);
+        // round 2's sender only depends on round 1 closing
+        let h = std::thread::spawn(move || {
+            s2.enter(2, 1).unwrap();
+            s2.send(CSP, USER_BASE, 500);
+            s2.leave(2).unwrap();
+        });
+        sched.enter(1, 1).unwrap();
+        sched.send(USER_BASE, CSP, 500);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        sched.leave(1).unwrap();
+        h.join().unwrap();
+        assert_eq!(sched.with_net(|n| n.rounds()), 2);
+    }
+
+    #[test]
+    fn abort_unblocks_waiters() {
+        let sched = Arc::new(RoundScheduler::new(spec()));
+        sched.enter(1, 2).unwrap(); // second sender never shows up
+        let s2 = Arc::clone(&sched);
+        let h = std::thread::spawn(move || s2.enter(9, 1));
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        sched.abort();
+        assert!(h.join().unwrap().is_err());
+        assert!(sched.leave(1).is_err());
+    }
+
+    #[test]
+    fn late_joiner_lands_in_its_labelled_round() {
+        // three senders, one slow: the round must stay open for it
+        let sched = Arc::new(RoundScheduler::new(spec()));
+        let handles: Vec<_> = (0..3u64)
+            .map(|i| {
+                let s = Arc::clone(&sched);
+                std::thread::spawn(move || {
+                    if i == 2 {
+                        std::thread::sleep(std::time::Duration::from_millis(10));
+                    }
+                    s.enter(5, 3).unwrap();
+                    s.send(USER_BASE + i as usize, CSP, 100);
+                    s.leave(5).unwrap();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(sched.with_net(|n| n.rounds()), 1);
+        assert_eq!(sched.with_net(|n| n.total_messages()), 3);
+    }
+}

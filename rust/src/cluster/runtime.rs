@@ -1,0 +1,671 @@
+//! The sharded multi-party FedSVD runtime.
+//!
+//! TA, CSP and every user run as real OS threads exchanging typed
+//! messages over [`Mailbox`]es; every send is metered through the
+//! [`RoundScheduler`] so logically-concurrent uploads overlap in the
+//! simulated network exactly as the paper's star topology prescribes.
+//! Compute inside each party still flows through the shared
+//! [`GemmBackend`] (its pooled lanes are the machine's cores; parties
+//! are control threads that block on I/O, not compute lanes).
+//!
+//! Protocol flow (paper Fig. 3, distributed):
+//!
+//! 1. **TA** draws the same `P`/`Q` seeds as the sequential oracle from
+//!    `cfg.seed` and ships the `P` seed + per-user `Q` row slices.
+//! 2. **Users** mask (`X'ᵢ = P·Xᵢ·Qᵢ`), run pairwise DH through the CSP
+//!    bulletin board, then upload `X'ᵢ` in secagg-masked row shards —
+//!    one scheduler round per shard, all k users concurrent.
+//! 3. **CSP** aggregates each shard as it completes (fixed-point masks
+//!    cancel exactly, so the assembled masked matrix is bit-identical to
+//!    the sequential path's), parks it in a budgeted [`ShardStore`], and
+//!    runs the out-of-core SVD of [`super::ooc`] — streaming `U'` row
+//!    blocks back to the users as they are produced. The full masked
+//!    matrix is never resident on any party.
+//! 4. **Users** unmask `U = PᵀU'` and run the blinded `Vᵢᵀ` recovery.
+//!
+//! Failure of any party aborts the scheduler and closes every mailbox,
+//! so errors propagate instead of deadlocking.
+
+use std::collections::HashMap;
+use std::panic::AssertUnwindSafe;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::bignum::BigUint;
+use crate::linalg::{GemmBackend, Mat, SvdResult};
+use crate::mask::block_diag::{BlockDiagMat, BlockDiagSlice};
+use crate::mask::delivery::{SeedDelivery, SliceDelivery};
+use crate::mask::{block_orthogonal, mask_matrix_with};
+use crate::metrics::MetricsRecorder;
+use crate::net::link::{CSP, TA, USER_BASE};
+use crate::protocol::fedsvd::{MaskRep, QSliceRep};
+use crate::protocol::{v_recovery, FedSvdConfig, FedSvdOutput, SvdMode};
+use crate::rng::Xoshiro256;
+use crate::secagg::{DhKeyPair, SecAggGroup};
+use crate::util::{Error, Result};
+
+use super::mailbox::Mailbox;
+use super::ooc::{ooc_svd, OocParams};
+use super::round::RoundScheduler;
+use super::shard::ShardStore;
+
+/// Cluster execution knobs (see `ExecMode::Cluster`).
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Row-shard count the masked matrix is ingested as (≥ 1; clamped
+    /// to one row per shard).
+    pub shards: usize,
+    /// CSP matrix-memory budget in bytes; may be smaller than the masked
+    /// matrix — shards spill and every pass streams bounded chunks.
+    pub mem_budget: u64,
+    /// Where spill files go (default: the system temp dir); each run
+    /// uses a fresh unique subdirectory.
+    pub spill_root: Option<PathBuf>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            shards: 4,
+            mem_budget: 64 << 20,
+            spill_root: None,
+        }
+    }
+}
+
+/// What the cluster run proved about itself, for reports and benches.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterStats {
+    /// Shards actually ingested (after clamping).
+    pub shards: usize,
+    pub mem_budget: u64,
+    /// High-water mark of CSP-resident matrix bytes (shards + factors +
+    /// streamed chunks) — provably ≤ `mem_budget` on success.
+    pub csp_peak_matrix_bytes: u64,
+    /// Shard spill events at the CSP.
+    pub shard_spills: u64,
+}
+
+/// DH public key wire size (1536-bit MODP group element).
+const PK_BYTES: u64 = 1536 / 8;
+
+// Round labels: disjoint bases; senders of a round depend only on
+// earlier-labelled rounds, which is what keeps the scheduler's
+// serialization of distinct labels deadlock-free.
+const R_PSEED: u64 = 0;
+const R_QSLICE: u64 = 1;
+const R_PK: u64 = 2;
+const R_PKLIST: u64 = 3;
+const R_UPLOAD: u64 = 1_000; // + shard index
+const R_UBLOCK: u64 = 10_000_000; // + emitted chunk index
+const R_SIGMA: u64 = 20_000_000;
+const R_VREQ: u64 = 20_000_001;
+const R_VRESP: u64 = 20_000_002;
+
+enum Msg {
+    PSeed(SeedDelivery),
+    QSlice(BlockDiagSlice),
+    Pk { user: usize, public: BigUint },
+    PkList(Vec<BigUint>),
+    Batch { batch: usize, user: usize, share: Vec<u128> },
+    UBlock { r0: usize, data: Mat },
+    Sigma(Vec<f64>),
+    VReq { user: usize, blinded: BlockDiagSlice },
+    VResp(Mat),
+}
+
+fn proto(msg: &str) -> Error {
+    Error::Protocol(format!("cluster: {msg}"))
+}
+
+fn meters(sched: &RoundScheduler) -> (f64, u64) {
+    sched.with_net(|n| (n.sim_elapsed_s(), n.total_bytes()))
+}
+
+/// Run `body`, converting panics to errors; on any failure abort the
+/// scheduler and close every mailbox so peers unblock.
+fn party<T>(
+    sched: &RoundScheduler,
+    boxes: &[Mailbox<Msg>],
+    body: impl FnOnce() -> Result<T>,
+) -> Result<T> {
+    let r = std::panic::catch_unwind(AssertUnwindSafe(body))
+        .unwrap_or_else(|_| Err(Error::Runtime("cluster party panicked".into())));
+    if r.is_err() {
+        sched.abort();
+        for b in boxes {
+            b.close();
+        }
+    }
+    r
+}
+
+fn join_party<T>(h: std::thread::ScopedJoinHandle<'_, Result<T>>) -> Result<T> {
+    h.join()
+        .unwrap_or_else(|_| Err(Error::Runtime("cluster party thread died".into())))
+}
+
+struct UserOut {
+    metrics: MetricsRecorder,
+    q_slice: BlockDiagSlice,
+    p: Option<BlockDiagMat>,
+    u_masked: Option<Mat>,
+    u: Option<Mat>,
+    vt_part: Option<Mat>,
+}
+
+struct CspOut {
+    metrics: MetricsRecorder,
+    s: Vec<f64>,
+    vt: Mat,
+    peak: u64,
+    spills: u64,
+}
+
+/// Run FedSVD on the sharded multi-party runtime. Produces the same
+/// [`FedSvdOutput`] as [`crate::protocol::run_fedsvd_with_backend`] —
+/// the sequential path stays the reference oracle, and the cluster
+/// result matches it to ≤ 1e-9 on Σ (the masked matrix the CSP
+/// factorizes is bit-identical; only the solver differs).
+pub fn run_fedsvd_cluster(
+    parts: &[Mat],
+    cfg: &FedSvdConfig,
+    ccfg: &ClusterConfig,
+    backend: &dyn GemmBackend,
+) -> Result<(FedSvdOutput, ClusterStats)> {
+    let k = parts.len();
+    if k < 2 {
+        return Err(proto("needs at least 2 users (secure aggregation)"));
+    }
+    let m = parts[0].rows();
+    for p in parts {
+        if p.rows() != m {
+            return Err(Error::Shape("users disagree on m".into()));
+        }
+    }
+    let widths: Vec<usize> = parts.iter().map(|p| p.cols()).collect();
+    let n: usize = widths.iter().sum();
+    if m == 0 || n == 0 {
+        return Err(Error::Shape("empty federated matrix".into()));
+    }
+    if !cfg.opts.block_masks {
+        return Err(Error::Config(
+            "cluster mode requires Opt1 block masks (run the dense-mask \
+             ablation on the sequential path)"
+            .into(),
+        ));
+    }
+    let b = cfg.block_size.max(1);
+    let shard_rows = m.div_ceil(ccfg.shards.max(1)).max(1);
+    let n_batches = m.div_ceil(shard_rows);
+    let spill_root = ccfg
+        .spill_root
+        .clone()
+        .unwrap_or_else(std::env::temp_dir);
+    let mem_budget = ccfg.mem_budget;
+
+    let sched = Arc::new(RoundScheduler::new(cfg.link));
+    let csp_box: Mailbox<Msg> = Mailbox::new();
+    let user_boxes: Vec<Mailbox<Msg>> = (0..k).map(|_| Mailbox::new()).collect();
+    let all_boxes: Vec<Mailbox<Msg>> = std::iter::once(csp_box.clone())
+        .chain(user_boxes.iter().cloned())
+        .collect();
+
+    let (ta_res, csp_res, users_res) = std::thread::scope(|scope| {
+        // ---- TA ----------------------------------------------------------
+        let ta_handle = {
+            let sched = Arc::clone(&sched);
+            let user_boxes = user_boxes.clone();
+            let all_boxes = all_boxes.clone();
+            let widths = widths.clone();
+            scope.spawn(move || {
+                party(&sched, &all_boxes, || {
+                    ta_body(&sched, &user_boxes, &widths, cfg, m, n, b)
+                })
+            })
+        };
+
+        // ---- CSP ---------------------------------------------------------
+        let csp_handle = {
+            let sched = Arc::clone(&sched);
+            let csp_box = csp_box.clone();
+            let user_boxes = user_boxes.clone();
+            let all_boxes = all_boxes.clone();
+            let spill_root = spill_root.clone();
+            scope.spawn(move || {
+                party(&sched, &all_boxes, || {
+                    csp_body(
+                        &sched, &csp_box, &user_boxes, cfg, backend, k, n, n_batches,
+                        shard_rows, mem_budget, &spill_root,
+                    )
+                })
+            })
+        };
+
+        // ---- users -------------------------------------------------------
+        let user_handles: Vec<_> = (0..k)
+            .map(|i| {
+                let sched = Arc::clone(&sched);
+                let inbox = user_boxes[i].clone();
+                let csp_box = csp_box.clone();
+                let all_boxes = all_boxes.clone();
+                scope.spawn(move || {
+                    party(&sched, &all_boxes, || {
+                        user_body(
+                            &sched, &inbox, &csp_box, cfg, backend, &parts[i], i, k, m,
+                            n_batches, shard_rows,
+                        )
+                    })
+                })
+            })
+            .collect();
+
+        let ta_r = join_party(ta_handle);
+        let csp_r = join_party(csp_handle);
+        let users_r: Vec<Result<UserOut>> =
+            user_handles.into_iter().map(join_party).collect();
+        (ta_r, csp_r, users_r)
+    });
+
+    let ta_metrics = ta_res?;
+    let csp_out = csp_res?;
+    let users_out = users_res.into_iter().collect::<Result<Vec<UserOut>>>()?;
+
+    let net = Arc::try_unwrap(sched)
+        .map_err(|_| Error::Runtime("round scheduler still shared after join".into()))?
+        .into_net();
+
+    let mut metrics = MetricsRecorder::new();
+    metrics.absorb_prefixed("ta", &ta_metrics);
+    metrics.absorb_prefixed("csp", &csp_out.metrics);
+
+    let mut p_opt = None;
+    let mut u = None;
+    let mut u_masked = None;
+    let mut q_slices = Vec::with_capacity(k);
+    let mut v_parts = Vec::new();
+    for (idx, uo) in users_out.into_iter().enumerate() {
+        metrics.absorb_prefixed(&format!("user{idx}"), &uo.metrics);
+        if idx == 0 {
+            p_opt = uo.p;
+            u = uo.u;
+            u_masked = uo.u_masked;
+        }
+        q_slices.push(QSliceRep::Block(uo.q_slice));
+        if let Some(v) = uo.vt_part {
+            v_parts.push(v);
+        }
+    }
+    let p = p_opt.ok_or_else(|| Error::Runtime("user 0 did not return P".into()))?;
+
+    let stats = ClusterStats {
+        shards: n_batches,
+        mem_budget,
+        csp_peak_matrix_bytes: csp_out.peak,
+        shard_spills: csp_out.spills,
+    };
+    let out = FedSvdOutput {
+        u,
+        s: csp_out.s.clone(),
+        v_parts,
+        // the masked factors as the *users* saw them (the CSP streamed
+        // U' away and never held it whole); empty U when recover_u is off
+        csp_svd: SvdResult {
+            u: u_masked.unwrap_or_else(|| Mat::zeros(0, 0)),
+            s: csp_out.s,
+            vt: csp_out.vt,
+        },
+        p_mask: MaskRep::Block(p),
+        q_slices,
+        metrics,
+        net,
+    };
+    Ok((out, stats))
+}
+
+// ---------------------------------------------------------------------------
+// party bodies
+// ---------------------------------------------------------------------------
+
+fn ta_body(
+    sched: &RoundScheduler,
+    user_boxes: &[Mailbox<Msg>],
+    widths: &[usize],
+    cfg: &FedSvdConfig,
+    m: usize,
+    n: usize,
+    b: usize,
+) -> Result<MetricsRecorder> {
+    let mut metrics = MetricsRecorder::new();
+    // identical first draws to the sequential oracle ⇒ identical masks
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
+    let p_seed = rng.next_u64();
+    let q_seed = rng.next_u64();
+
+    let (n0, b0) = meters(sched);
+    metrics.begin("step1: mask init+delivery", n0, b0);
+    sched.enter(R_PSEED, 1)?;
+    for (i, ub) in user_boxes.iter().enumerate() {
+        let d = SeedDelivery {
+            seed: p_seed,
+            dim: m,
+            block: b,
+        };
+        sched.send(TA, USER_BASE + i, d.wire_bytes());
+        ub.post(Msg::PSeed(d));
+    }
+    sched.leave(R_PSEED)?;
+
+    let q = block_orthogonal(n, b, q_seed)?;
+    sched.enter(R_QSLICE, 1)?;
+    let mut c0 = 0usize;
+    for (i, ub) in user_boxes.iter().enumerate() {
+        let s = q.row_slice(c0, c0 + widths[i])?;
+        let d = SliceDelivery { slice: s };
+        sched.send(TA, USER_BASE + i, d.wire_bytes());
+        ub.post(Msg::QSlice(d.slice));
+        c0 += widths[i];
+    }
+    sched.leave(R_QSLICE)?;
+    let (n1, b1) = meters(sched);
+    metrics.end(n1, b1);
+    // the TA goes offline here (paper §3.5) — it receives nothing
+    Ok(metrics)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn user_body(
+    sched: &RoundScheduler,
+    inbox: &Mailbox<Msg>,
+    csp_box: &Mailbox<Msg>,
+    cfg: &FedSvdConfig,
+    backend: &dyn GemmBackend,
+    xi: &Mat,
+    i: usize,
+    k: usize,
+    m: usize,
+    n_batches: usize,
+    shard_rows: usize,
+) -> Result<UserOut> {
+    let mut metrics = MetricsRecorder::new();
+    let uid = USER_BASE + i;
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed).derive(0x75e2 + i as u64);
+
+    // ---- step 1: receive masks ----------------------------------------
+    let Msg::PSeed(pd) = inbox.recv()? else {
+        return Err(proto("expected P seed"));
+    };
+    let Msg::QSlice(qi) = inbox.recv()? else {
+        return Err(proto("expected Q slice"));
+    };
+    let p = pd.expand()?;
+
+    // ---- step 2: mask the local part ----------------------------------
+    let (n0, b0) = meters(sched);
+    metrics.begin("step2: mask share", n0, b0);
+    let xi_masked = mask_matrix_with(&p, xi, &qi, backend)?;
+    let (n1, b1) = meters(sched);
+    metrics.end(n1, b1);
+
+    // ---- step 2: secagg key agreement + sharded upload ----------------
+    metrics.begin("step2: secagg upload", n1, b1);
+    let key = DhKeyPair::generate(&mut rng);
+    sched.enter(R_PK, k)?;
+    sched.send(uid, CSP, PK_BYTES);
+    sched.leave(R_PK)?;
+    csp_box.post(Msg::Pk {
+        user: i,
+        public: key.public.clone(),
+    });
+    let Msg::PkList(pks) = inbox.recv()? else {
+        return Err(proto("expected public-key list"));
+    };
+    if pks.len() != k {
+        return Err(proto("public-key list has wrong size"));
+    }
+    let mut seeds = vec![vec![0u64; k]; k];
+    for (j, pk) in pks.iter().enumerate() {
+        if j != i {
+            let s = key.shared_seed(pk);
+            seeds[i][j] = s;
+            seeds[j][i] = s;
+        }
+    }
+    let group = SecAggGroup::from_seeds(seeds)?;
+
+    let nw = xi_masked.cols();
+    for t in 0..n_batches {
+        let r0 = t * shard_rows;
+        let r1 = ((t + 1) * shard_rows).min(m);
+        let mut flat = Vec::with_capacity((r1 - r0) * nw);
+        for r in r0..r1 {
+            flat.extend_from_slice(xi_masked.row(r));
+        }
+        let share = group.mask_share(i, &flat, t as u64)?;
+        let bytes = (share.len() * 16) as u64;
+        sched.enter(R_UPLOAD + t as u64, k)?;
+        sched.send(uid, CSP, bytes);
+        sched.leave(R_UPLOAD + t as u64)?;
+        csp_box.post(Msg::Batch {
+            batch: t,
+            user: i,
+            share,
+        });
+    }
+    let (n2, b2) = meters(sched);
+    metrics.end(n2, b2);
+
+    // ---- step 4: receive Σ + streamed U' blocks -----------------------
+    metrics.begin("step4: recover results", n2, b2);
+    let mut sigma: Option<Vec<f64>> = None;
+    let mut um: Option<Mat> = None;
+    let mut got_rows = 0usize;
+    while sigma.is_none() || (cfg.recover_u && got_rows < m) {
+        match inbox.recv()? {
+            Msg::Sigma(s) => sigma = Some(s),
+            Msg::UBlock { r0, data } => {
+                got_rows += data.rows();
+                if i == 0 {
+                    let um = um.get_or_insert_with(|| Mat::zeros(m, data.cols()));
+                    um.set_slice(r0, 0, &data);
+                }
+            }
+            _ => return Err(proto("unexpected message while awaiting results")),
+        }
+    }
+    // only user 0 materializes the shared U (all users are metered)
+    let mut u = None;
+    let mut u_masked = None;
+    if cfg.recover_u && i == 0 {
+        let um = um.take().ok_or_else(|| proto("no U' blocks received"))?;
+        u = Some(p.t_mul_dense_with(&um, backend)?);
+        u_masked = Some(um);
+    }
+
+    // ---- step 4: blinded Vᵢᵀ recovery ---------------------------------
+    let mut vt_part = None;
+    if cfg.recover_v {
+        let (ri, blinded) = v_recovery::blind_qit(&qi, &mut rng)?;
+        sched.enter(R_VREQ, k)?;
+        sched.send(uid, CSP, blinded.payload_bytes());
+        sched.leave(R_VREQ)?;
+        csp_box.post(Msg::VReq { user: i, blinded });
+        let Msg::VResp(bv) = inbox.recv()? else {
+            return Err(proto("expected blinded V response"));
+        };
+        vt_part = Some(v_recovery::unblind_vit(&bv, &ri)?);
+    }
+    let (n3, b3) = meters(sched);
+    metrics.end(n3, b3);
+
+    Ok(UserOut {
+        metrics,
+        q_slice: qi,
+        p: (i == 0).then_some(p),
+        u_masked,
+        u,
+        vt_part,
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn csp_body(
+    sched: &RoundScheduler,
+    inbox: &Mailbox<Msg>,
+    user_boxes: &[Mailbox<Msg>],
+    cfg: &FedSvdConfig,
+    backend: &dyn GemmBackend,
+    k: usize,
+    n: usize,
+    n_batches: usize,
+    shard_rows: usize,
+    mem_budget: u64,
+    spill_root: &std::path::Path,
+) -> Result<CspOut> {
+    let mut metrics = MetricsRecorder::new();
+
+    // ---- secagg bulletin board ----------------------------------------
+    let (n0, b0) = meters(sched);
+    metrics.begin("step2: secagg key board", n0, b0);
+    let mut pks: Vec<Option<BigUint>> = (0..k).map(|_| None).collect();
+    for _ in 0..k {
+        let Msg::Pk { user, public } = inbox.recv()? else {
+            return Err(proto("expected a public key"));
+        };
+        if user >= k || pks[user].replace(public).is_some() {
+            return Err(proto("bad or duplicate public key"));
+        }
+    }
+    let pk_list: Vec<BigUint> = pks
+        .into_iter()
+        .map(|p| p.ok_or_else(|| proto("missing public key")))
+        .collect::<Result<_>>()?;
+    sched.enter(R_PKLIST, 1)?;
+    for (j, ub) in user_boxes.iter().enumerate() {
+        sched.send(CSP, USER_BASE + j, PK_BYTES * k as u64);
+        ub.post(Msg::PkList(pk_list.clone()));
+    }
+    sched.leave(R_PKLIST)?;
+    let (n1, b1) = meters(sched);
+    metrics.end(n1, b1);
+
+    // ---- shard ingest: aggregate as uploads complete ------------------
+    metrics.begin("step2: shard ingest", n1, b1);
+    let agg_group = SecAggGroup::from_seeds(vec![vec![0u64; k]; k])?;
+    let mut store = ShardStore::new(spill_root, n, mem_budget)?;
+    let mut pending: HashMap<usize, Vec<Option<Vec<u128>>>> = HashMap::new();
+    let mut next = 0usize;
+    while next < n_batches {
+        let Msg::Batch { batch, user, share } = inbox.recv()? else {
+            return Err(proto("expected an upload batch"));
+        };
+        if batch >= n_batches || user >= k {
+            return Err(proto("batch out of range"));
+        }
+        let slot = pending.entry(batch).or_insert_with(|| vec![None; k]);
+        if slot[user].replace(share).is_some() {
+            return Err(proto("duplicate batch share"));
+        }
+        // shards are inserted strictly in row order (deterministic SVD
+        // accumulation order); later batches buffer until their turn
+        while pending
+            .get(&next)
+            .is_some_and(|s| s.iter().all(|x| x.is_some()))
+        {
+            let shares: Vec<Vec<u128>> = pending
+                .remove(&next)
+                .expect("checked present")
+                .into_iter()
+                .map(|x| x.expect("checked complete"))
+                .collect();
+            let rows = shares[0].len() / n;
+            // transient u128 codewords: metered like the sequential
+            // mini-batch path (not matrix memory)
+            let round_bytes = ((k + 1) * shares[0].len() * 16) as u64;
+            metrics.mem_alloc(round_bytes);
+            let flat = agg_group.aggregate(&shares)?;
+            metrics.mem_free(round_bytes);
+            store.insert(next * shard_rows, Mat::from_vec(rows, n, flat)?)?;
+            next += 1;
+        }
+    }
+    let (n2, b2) = meters(sched);
+    metrics.end(n2, b2);
+
+    // ---- step 3: out-of-core SVD, streaming U' back -------------------
+    metrics.begin("step3: ooc csp svd", n2, b2);
+    let probe_seed = Xoshiro256::seed_from_u64(cfg.seed).derive(0xc5b).next_u64();
+    let (oversample, power_iters) = match cfg.mode {
+        SvdMode::Full => (0, 0),
+        // one shared constant with the sequential oracle — no drift
+        SvdMode::Truncated { rank } => crate::protocol::fedsvd::truncated_svd_tuning(rank),
+    };
+    let params = OocParams {
+        mode: cfg.mode,
+        oversample,
+        power_iters,
+        probe_seed,
+    };
+    let mut chunk_no = 0u64;
+    let ooc = ooc_svd(
+        &mut store,
+        &params,
+        backend,
+        cfg.recover_u,
+        &mut |r0, blk| {
+            let bytes = (blk.rows() * blk.cols() * 8) as u64;
+            sched.enter(R_UBLOCK + chunk_no, 1)?;
+            for (j, ub) in user_boxes.iter().enumerate() {
+                sched.send(CSP, USER_BASE + j, bytes);
+                ub.post(Msg::UBlock {
+                    r0,
+                    data: blk.clone(),
+                });
+            }
+            sched.leave(R_UBLOCK + chunk_no)?;
+            chunk_no += 1;
+            Ok(())
+        },
+    )?;
+    let (n3, b3) = meters(sched);
+    metrics.end(n3, b3);
+
+    // ---- step 4: Σ broadcast + blinded V recovery service -------------
+    metrics.begin("step4: deliver results", n3, b3);
+    sched.enter(R_SIGMA, 1)?;
+    for (j, ub) in user_boxes.iter().enumerate() {
+        sched.send(CSP, USER_BASE + j, (ooc.s.len() * 8) as u64);
+        ub.post(Msg::Sigma(ooc.s.clone()));
+    }
+    sched.leave(R_SIGMA)?;
+
+    if cfg.recover_v {
+        let mut reqs: Vec<Option<BlockDiagSlice>> = (0..k).map(|_| None).collect();
+        for _ in 0..k {
+            let Msg::VReq { user, blinded } = inbox.recv()? else {
+                return Err(proto("expected a blinded V request"));
+            };
+            if user >= k || reqs[user].replace(blinded).is_some() {
+                return Err(proto("bad or duplicate V request"));
+            }
+        }
+        sched.enter(R_VRESP, 1)?;
+        for (j, ub) in user_boxes.iter().enumerate() {
+            let blinded = reqs[j].take().expect("all requests collected");
+            let bv = v_recovery::csp_blind_vit(&ooc.vt, &blinded, backend)?;
+            sched.send(CSP, USER_BASE + j, (bv.rows() * bv.cols() * 8) as u64);
+            ub.post(Msg::VResp(bv));
+        }
+        sched.leave(R_VRESP)?;
+    }
+    let (n4, b4) = meters(sched);
+    metrics.end(n4, b4);
+
+    Ok(CspOut {
+        metrics,
+        s: ooc.s,
+        vt: ooc.vt,
+        peak: store.peak_bytes(),
+        spills: store.spill_count(),
+    })
+}

@@ -2,4 +2,4 @@
 //! (populated in the coordinator build-out step).
 
 pub mod session;
-pub use session::{Session, SessionReport};
+pub use session::{ExecMode, Session, SessionReport};

@@ -2,10 +2,12 @@
 //!
 //! A [`Session`] owns the backend choice (PJRT tile engine when the
 //! `pjrt` feature is compiled in and artifacts exist, the pooled CPU
-//! backend otherwise), runs the FedSVD protocol or one of the
-//! applications, and produces a [`SessionReport`] with the metrics the
-//! paper reports (wall time, simulated network time, bytes, phases).
+//! backend otherwise) and the execution mode ([`ExecMode`]), runs the
+//! FedSVD protocol or one of the applications, and produces a
+//! [`SessionReport`] with the metrics the paper reports (wall time,
+//! simulated network time, bytes, phases).
 
+use crate::cluster::{run_fedsvd_cluster, ClusterConfig, ClusterStats};
 use crate::linalg::{CpuBackend, GemmBackend, Mat};
 use crate::protocol::{run_fedsvd_with_backend, FedSvdConfig, FedSvdOutput};
 #[cfg(feature = "pjrt")]
@@ -35,10 +37,36 @@ impl KernelChoice {
     }
 }
 
+/// How the protocol executes.
+///
+/// * [`ExecMode::Sequential`] — every party driven from one in-process
+///   loop, masked matrix fully resident at the CSP. This is the lossless
+///   **reference oracle**: simplest, exact, and what all Tab. 1 numbers
+///   are produced with.
+/// * [`ExecMode::Cluster`] — the sharded multi-party runtime of
+///   [`crate::cluster`]: TA/CSP/users on real threads, uploads in
+///   `shards` concurrent secagg rounds, and the CSP factorizing
+///   out-of-core under `mem_budget` bytes of matrix memory (spilling
+///   shards to disk). Results match the sequential oracle to ≤ 1e-9
+///   relative error on Σ and U/V up to sign; the report additionally
+///   carries [`ClusterStats`] proving the CSP stayed under budget.
+#[derive(Debug, Clone)]
+pub enum ExecMode {
+    Sequential,
+    Cluster {
+        /// Row-shard count for the masked-matrix upload/ingest.
+        shards: usize,
+        /// CSP matrix-memory budget in bytes (may be smaller than the
+        /// masked matrix).
+        mem_budget: u64,
+    },
+}
+
 /// A configured FedSVD session.
 pub struct Session {
     pub cfg: FedSvdConfig,
     kernel: KernelChoice,
+    exec: ExecMode,
 }
 
 /// Summary returned to the caller / printed by the CLI.
@@ -49,6 +77,8 @@ pub struct SessionReport {
     pub total_bytes: u64,
     pub phase_table: String,
     pub singular_values: Vec<f64>,
+    /// Present for [`ExecMode::Cluster`] runs.
+    pub cluster: Option<ClusterStats>,
 }
 
 impl Session {
@@ -63,6 +93,7 @@ impl Session {
                     return Self {
                         cfg,
                         kernel: KernelChoice::Pjrt(Box::new(engine)),
+                        exec: ExecMode::Sequential,
                     };
                 }
             }
@@ -70,6 +101,7 @@ impl Session {
         Self {
             cfg,
             kernel: KernelChoice::Cpu(CpuBackend::global()),
+            exec: ExecMode::Sequential,
         }
     }
 
@@ -78,6 +110,7 @@ impl Session {
         Self {
             cfg,
             kernel: KernelChoice::Cpu(CpuBackend::global()),
+            exec: ExecMode::Sequential,
         }
     }
 
@@ -87,7 +120,18 @@ impl Session {
         Self {
             cfg,
             kernel: KernelChoice::Pjrt(Box::new(engine)),
+            exec: ExecMode::Sequential,
         }
+    }
+
+    /// Select the execution mode (builder style; default Sequential).
+    pub fn with_exec(mut self, exec: ExecMode) -> Self {
+        self.exec = exec;
+        self
+    }
+
+    pub fn exec_mode(&self) -> &ExecMode {
+        &self.exec
     }
 
     pub fn kernel_name(&self) -> &'static str {
@@ -100,14 +144,38 @@ impl Session {
 
     /// Run the core protocol over vertically-partitioned user parts.
     pub fn run_svd(&self, parts: &[Mat]) -> Result<(FedSvdOutput, SessionReport)> {
-        let out = run_fedsvd_with_backend(parts, &self.cfg, self.kernel.as_backend())?;
+        let t0 = std::time::Instant::now();
+        let (out, cluster) = match &self.exec {
+            ExecMode::Sequential => (
+                run_fedsvd_with_backend(parts, &self.cfg, self.kernel.as_backend())?,
+                None,
+            ),
+            ExecMode::Cluster { shards, mem_budget } => {
+                let ccfg = ClusterConfig {
+                    shards: *shards,
+                    mem_budget: *mem_budget,
+                    spill_root: None,
+                };
+                let (out, stats) =
+                    run_fedsvd_cluster(parts, &self.cfg, &ccfg, self.kernel.as_backend())?;
+                (out, Some(stats))
+            }
+        };
+        // cluster parties run concurrently (and their phases include time
+        // blocked on peers), so summing per-party phase walls would
+        // overstate elapsed time ~(k+2)×; report the session-level clock
+        let wall_s = match &self.exec {
+            ExecMode::Sequential => out.metrics.total_wall_s(),
+            ExecMode::Cluster { .. } => t0.elapsed().as_secs_f64(),
+        };
         let report = SessionReport {
             kernel: self.kernel.name(),
-            wall_s: out.metrics.total_wall_s(),
-            net_s: out.metrics.total_net_s(),
+            wall_s,
+            net_s: out.net.sim_elapsed_s(),
             total_bytes: out.net.total_bytes(),
             phase_table: out.metrics.table(),
             singular_values: out.s.clone(),
+            cluster,
         };
         Ok((out, report))
     }
@@ -134,6 +202,27 @@ mod tests {
         assert!(report.total_bytes > 0);
         assert!(report.phase_table.contains("TOTAL"));
         assert_eq!(report.singular_values.len(), 8);
+        assert!(report.cluster.is_none());
+    }
+
+    #[test]
+    fn cluster_session_reports_stats() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let parts = split_columns(&Mat::gaussian(16, 6, &mut rng), 2).unwrap();
+        let cfg = FedSvdConfig {
+            block_size: 3,
+            ..Default::default()
+        };
+        let s = Session::cpu(cfg).with_exec(ExecMode::Cluster {
+            shards: 2,
+            mem_budget: 1 << 20,
+        });
+        let (out, report) = s.run_svd(&parts).unwrap();
+        assert_eq!(out.s.len(), 6);
+        let stats = report.cluster.expect("cluster stats");
+        assert_eq!(stats.shards, 2);
+        assert!(stats.csp_peak_matrix_bytes <= stats.mem_budget);
+        assert!(report.phase_table.contains("csp/"));
     }
 
     #[test]

@@ -31,6 +31,21 @@
 //!   AOT-compiled XLA tile path executed through PJRT; requires the
 //!   vendored `xla` crate and `make artifacts`. Python never runs on the
 //!   request path; without the feature the crate builds dependency-free.
+//!
+//! ## Execution architecture
+//!
+//! Two ways to run the protocol, selected by `coordinator::ExecMode`:
+//!
+//! * **Sequential** — [`protocol::run_fedsvd_with_backend`]: every party
+//!   driven from one loop over [`net::NetSim`]. The lossless reference
+//!   oracle.
+//! * **Cluster** — [`cluster::run_fedsvd_cluster`]: TA/CSP/users as real
+//!   threads over typed mailboxes ([`cluster::mailbox`]), sends grouped
+//!   into overlapping rounds by [`cluster::round::RoundScheduler`], and
+//!   the CSP factorizing out-of-core ([`cluster::ooc`]) from a budgeted,
+//!   spill-to-disk [`cluster::shard::ShardStore`] — the full masked
+//!   matrix is never resident on any party. Matches the oracle to
+//!   ≤ 1e-9 on Σ (pinned by `tests/cluster_equivalence.rs`).
 
 // Dense-kernel house style: index-heavy loops mirror the BLAS-layout math
 // and keep the per-element op order explicit (the bit-determinism
@@ -52,6 +67,7 @@ pub mod secagg;
 // Core library
 pub mod mask;
 pub mod protocol;
+pub mod cluster;
 pub mod runtime;
 pub mod coordinator;
 

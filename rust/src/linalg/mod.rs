@@ -20,7 +20,7 @@ pub mod lu;
 pub use backend::{run_parallel_collect, CpuBackend, GemmBackend, ScatterPiece};
 pub use matmul::{gemm, matmul, matmul_acc, matmul_into};
 pub use qr::{gram_schmidt, householder_qr};
-pub use svd::{randomized_svd, svd, SvdResult};
+pub use svd::{randomized_svd, svd, svd_with_probe_seed, SvdResult};
 
 use crate::rng::Xoshiro256;
 use crate::util::{Error, Result};

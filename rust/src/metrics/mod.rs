@@ -95,6 +95,24 @@ impl MetricsRecorder {
         self.mem_peak
     }
 
+    /// Fold another recorder's phases into this one, each renamed to
+    /// `prefix/name`. Used by the cluster runtime to merge the per-party
+    /// recorders (TA, CSP, user-i run on their own threads) into one
+    /// report whose rows stay attributable to a party. The memory peak
+    /// takes the max — parties are concurrent, but each gauge tracks a
+    /// different process-role's resident set, so max is the honest bound
+    /// per party (sums would double-count simulated machines).
+    pub fn absorb_prefixed(&mut self, prefix: &str, other: &MetricsRecorder) {
+        assert!(other.open.is_none(), "absorb_prefixed: donor has open phase");
+        for p in &other.phases {
+            self.phases.push(Phase {
+                name: format!("{prefix}/{}", p.name),
+                ..p.clone()
+            });
+        }
+        self.mem_peak = self.mem_peak.max(other.mem_peak);
+    }
+
     /// Render a fixed-width table of phases for experiment logs.
     pub fn table(&self) -> String {
         let mut out = String::new();
@@ -192,6 +210,23 @@ mod tests {
     fn peak_rss_readable_on_linux() {
         let rss = process_peak_rss_bytes();
         assert!(rss > 0, "VmHWM should be readable in CI");
+    }
+
+    #[test]
+    fn absorb_prefixed_renames_and_merges() {
+        let mut a = MetricsRecorder::new();
+        a.time("ingest", || ());
+        a.mem_alloc(100);
+        let mut b = MetricsRecorder::new();
+        b.time("mask", || ());
+        b.mem_alloc(300);
+        b.mem_free(300);
+        let mut merged = MetricsRecorder::new();
+        merged.absorb_prefixed("csp", &a);
+        merged.absorb_prefixed("user0", &b);
+        let names: Vec<&str> = merged.phases().iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, vec!["csp/ingest", "user0/mask"]);
+        assert_eq!(merged.mem_peak(), 300);
     }
 
     #[test]

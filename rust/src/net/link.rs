@@ -39,6 +39,18 @@ pub struct TransferStats {
 /// Usage: wrap each batch of logically-concurrent messages in
 /// [`NetSim::begin_round`] / [`NetSim::end_round`]; `send` meters bytes.
 /// Messages outside an explicit round are treated as their own round.
+///
+/// Rounds nest: `begin_round`/`end_round` pairs are depth-counted, and an
+/// inner pair merges its messages into the outermost open round (they are
+/// logically concurrent with it). The round only closes — and its cost is
+/// only charged — when the depth returns to zero. The explicit counter is
+/// the nesting guard: an unmatched `end_round` panics instead of silently
+/// corrupting the accounting, and [`NetSim::round_depth`] lets callers
+/// assert their bracketing. Nesting exists for composability: protocol
+/// helpers that bracket their own sends (or concurrent senders that each
+/// bracket, as in the tests below) can run under a round someone else —
+/// e.g. the cluster round scheduler — already opened, instead of
+/// panicking or silently splitting the round.
 #[derive(Debug, Default)]
 pub struct NetSim {
     spec: LinkSpec,
@@ -48,7 +60,7 @@ pub struct NetSim {
     rounds: u64,
     sim_elapsed_s: f64,
     // open-round state
-    in_round: bool,
+    round_depth: u32,
     round_max_bytes: u64,
     /// per-(sender) bytes in the open round (concurrent senders overlap)
     round_sender_bytes: HashMap<PartyId, u64>,
@@ -66,18 +78,24 @@ impl NetSim {
         self.spec
     }
 
-    /// Start a group of concurrent messages.
+    /// Start a group of concurrent messages. Nested calls join the
+    /// outermost open round (depth-counted); see the type docs.
     pub fn begin_round(&mut self) {
-        assert!(!self.in_round, "begin_round: round already open");
-        self.in_round = true;
-        self.round_max_bytes = 0;
-        self.round_sender_bytes.clear();
+        if self.round_depth == 0 {
+            self.round_max_bytes = 0;
+            self.round_sender_bytes.clear();
+        }
+        self.round_depth += 1;
     }
 
-    /// Close the round: charge `max-per-sender bytes / bw + RTT`.
+    /// Close one nesting level; at depth zero the round is charged as
+    /// `max-per-sender bytes / bw + RTT`.
     pub fn end_round(&mut self) {
-        assert!(self.in_round, "end_round: no open round");
-        self.in_round = false;
+        assert!(self.round_depth > 0, "end_round: no open round");
+        self.round_depth -= 1;
+        if self.round_depth > 0 {
+            return; // inner bracket: stays merged into the outer round
+        }
         self.rounds += 1;
         let max_bytes = self
             .round_sender_bytes
@@ -89,9 +107,14 @@ impl NetSim {
         self.sim_elapsed_s += max_bytes as f64 * 8.0 / self.spec.bandwidth_bps + self.spec.rtt_s;
     }
 
+    /// Current `begin_round` nesting depth (0 = no open round).
+    pub fn round_depth(&self) -> u32 {
+        self.round_depth
+    }
+
     /// Meter one message of `bytes` from `from` to `to`.
     pub fn send(&mut self, from: PartyId, to: PartyId, bytes: u64) {
-        let implicit = !self.in_round;
+        let implicit = self.round_depth == 0;
         if implicit {
             self.begin_round();
         }
@@ -108,7 +131,7 @@ impl NetSim {
 
     /// Meter a broadcast (same payload to many receivers; sender serializes).
     pub fn broadcast(&mut self, from: PartyId, tos: &[PartyId], bytes: u64) {
-        let implicit = !self.in_round;
+        let implicit = self.round_depth == 0;
         if implicit {
             self.begin_round();
         }
@@ -231,10 +254,62 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "round already open")]
-    fn nested_rounds_panic() {
+    fn nested_rounds_merge_into_outer() {
+        // two senders each bracket their own sends inside an outer round:
+        // everything lands in ONE round and the slowest sender sets the time
         let mut net = NetSim::new(spec_1gbps());
         net.begin_round();
-        net.begin_round();
+        net.begin_round(); // sender A's bracket
+        net.send(USER_BASE, CSP, 4000);
+        net.end_round();
+        assert_eq!(net.round_depth(), 1, "outer round must still be open");
+        assert_eq!(net.rounds(), 0, "inner end_round must not charge");
+        net.begin_round(); // sender B's bracket
+        net.send(USER_BASE + 1, CSP, 1000);
+        net.end_round();
+        net.end_round();
+        assert_eq!(net.rounds(), 1);
+        assert_eq!(net.round_depth(), 0);
+        assert!((net.sim_elapsed_s() - (4000.0 * 8.0 / 1e9 + 0.05)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlapping_concurrent_senders_share_one_round() {
+        // the cluster-runtime shape: threads interleave begin/send/end
+        // brackets under a shared open round — accounting must stay the
+        // concurrent-overlap model (max per sender), not serialize.
+        use std::sync::{Arc, Barrier, Mutex};
+        let net = Arc::new(Mutex::new(NetSim::new(spec_1gbps())));
+        net.lock().unwrap().begin_round();
+        let gate = Arc::new(Barrier::new(2));
+        let handles: Vec<_> = (0..2)
+            .map(|i| {
+                let net = Arc::clone(&net);
+                let gate = Arc::clone(&gate);
+                std::thread::spawn(move || {
+                    gate.wait();
+                    let mut n = net.lock().unwrap();
+                    n.begin_round();
+                    n.send(USER_BASE + i, CSP, 2000 * (i as u64 + 1));
+                    n.end_round();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut n = net.lock().unwrap();
+        n.end_round();
+        assert_eq!(n.rounds(), 1);
+        assert_eq!(n.total_messages(), 2);
+        // slowest sender (4000 B) gates the round
+        assert!((n.sim_elapsed_s() - (4000.0 * 8.0 / 1e9 + 0.05)).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "no open round")]
+    fn unmatched_end_round_panics() {
+        let mut net = NetSim::new(spec_1gbps());
+        net.end_round();
     }
 }

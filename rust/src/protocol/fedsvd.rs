@@ -23,6 +23,15 @@ pub enum SvdMode {
     Truncated { rank: usize },
 }
 
+/// `(oversample, power_iters)` for the randomized truncated CSP SVD.
+/// Shared by the sequential oracle and the cluster runtime so the two
+/// execution paths cannot drift apart: generous oversampling + power
+/// iterations because the paper's apps feed decaying spectra, but flat
+/// spectra must not break tests.
+pub fn truncated_svd_tuning(rank: usize) -> (usize, usize) {
+    (rank.max(10), 6)
+}
+
 /// The paper's three optimization families (Fig. 7 ablation switches).
 #[derive(Debug, Clone, Copy)]
 pub struct OptFlags {
@@ -305,9 +314,8 @@ pub fn run_fedsvd_with_backend(
     let csp_svd = match cfg.mode {
         SvdMode::Full => svd(&x_masked)?,
         SvdMode::Truncated { rank } => {
-            // generous oversampling + power iterations: the paper's apps
-            // feed decaying spectra, but flat spectra must not break tests
-            randomized_svd(&x_masked, rank, rank.max(10), 6, rng.next_u64())?
+            let (oversample, power_iters) = truncated_svd_tuning(rank);
+            randomized_svd(&x_masked, rank, oversample, power_iters, rng.next_u64())?
         }
     };
     metrics.end(net.sim_elapsed_s(), net.total_bytes());

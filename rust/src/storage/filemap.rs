@@ -299,6 +299,58 @@ mod tests {
     }
 
     #[test]
+    fn col_block_roundtrip_ragged_widths_both_layouts() {
+        // 7×5 with block widths that never divide the axis: the shard
+        // spill path reads exactly these ragged tails
+        let a = Mat::from_fn(7, 5, |i, j| (i * 100 + j) as f64);
+        for layout in [Layout::RowMajor, Layout::ColMajor] {
+            let fm = FileMat::from_mat(&tmp("ragc.bin"), &a, layout).unwrap();
+            for width in [2usize, 3, 4] {
+                let mut c0 = 0usize;
+                let mut rebuilt = Mat::zeros(7, 5);
+                while c0 < 5 {
+                    let c1 = (c0 + width).min(5);
+                    let blk = fm.read_col_block(c0, c1).unwrap();
+                    assert_eq!(blk.shape(), (7, c1 - c0), "{layout:?} w={width}");
+                    rebuilt.set_slice(0, c0, &blk);
+                    c0 = c1;
+                }
+                assert!(
+                    max_abs_diff(rebuilt.data(), a.data()) == 0.0,
+                    "{layout:?} width {width}"
+                );
+            }
+            // empty block at the very end is legal and zero-sized
+            let empty = fm.read_col_block(5, 5).unwrap();
+            assert_eq!(empty.shape(), (7, 0));
+        }
+    }
+
+    #[test]
+    fn write_row_block_roundtrip_ragged_heights_both_layouts() {
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let a = Mat::gaussian(11, 4, &mut rng);
+        for layout in [Layout::RowMajor, Layout::ColMajor] {
+            let zero = Mat::zeros(11, 4);
+            let fm = FileMat::from_mat(&tmp("ragw.bin"), &zero, layout).unwrap();
+            // write back in ragged row blocks (11 = 4 + 4 + 3)
+            let mut r0 = 0usize;
+            while r0 < 11 {
+                let r1 = (r0 + 4).min(11);
+                fm.write_row_block(r0, &a.slice(r0, r1, 0, 4)).unwrap();
+                r0 = r1;
+            }
+            // read back through BOTH access paths
+            let whole = fm.to_mat().unwrap();
+            assert!(max_abs_diff(whole.data(), a.data()) == 0.0, "{layout:?}");
+            let tail = fm.read_row_block(8, 11).unwrap();
+            assert!(max_abs_diff(tail.data(), a.slice(8, 11, 0, 4).data()) == 0.0);
+            let cols = fm.read_col_block(1, 4).unwrap();
+            assert!(max_abs_diff(cols.data(), a.slice(0, 11, 1, 4).data()) == 0.0);
+        }
+    }
+
+    #[test]
     fn bounds_errors() {
         let a = Mat::zeros(3, 3);
         let fm = FileMat::from_mat(&tmp("be.bin"), &a, Layout::RowMajor).unwrap();

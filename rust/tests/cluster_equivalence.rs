@@ -1,0 +1,252 @@
+//! Cluster-vs-sequential equivalence (the paper's losslessness claim,
+//! preserved by the sharded multi-party runtime).
+//!
+//! `ExecMode::Cluster` with {1, 2, 4} shards under a memory budget
+//! *smaller than the masked matrix* must reproduce the sequential
+//! oracle's Σ to ≤ 1e-9 relative error and U/V up to sign, end to end
+//! (masks applied and removed), with the CSP's peak resident matrix
+//! memory provably below the budget. Plus: run-to-run bit
+//! reproducibility and thread-count invariance.
+
+use fedsvd::coordinator::{ExecMode, Session};
+use fedsvd::linalg::{CpuBackend, Mat, SvdResult};
+use fedsvd::protocol::{run_fedsvd_with_backend, FedSvdConfig, FedSvdOutput, SvdMode};
+use fedsvd::rng::Xoshiro256;
+use fedsvd::util::{bits_equal, rmse};
+
+fn join(parts: &[Mat]) -> Mat {
+    let mut x = parts[0].clone();
+    for p in &parts[1..] {
+        x = x.hcat(p).unwrap();
+    }
+    x
+}
+
+fn join_v(v_parts: &[Mat]) -> Mat {
+    let mut v = v_parts[0].clone();
+    for p in &v_parts[1..] {
+        v = v.hcat(p).unwrap();
+    }
+    v
+}
+
+/// Worst per-vector deviation after sign alignment (`cols`: vectors are
+/// columns of a/b, else rows).
+fn aligned_diff(a: &Mat, b: &Mat, cols: bool) -> f64 {
+    assert_eq!(a.shape(), b.shape());
+    let kv = if cols { a.cols() } else { a.rows() };
+    let mut worst = 0.0f64;
+    for i in 0..kv {
+        let (va, vb): (Vec<f64>, Vec<f64>) = if cols {
+            (a.col(i), b.col(i))
+        } else {
+            (a.row(i).to_vec(), b.row(i).to_vec())
+        };
+        let dot: f64 = va.iter().zip(&vb).map(|(x, y)| x * y).sum();
+        let sign = if dot >= 0.0 { 1.0 } else { -1.0 };
+        let d = va
+            .iter()
+            .zip(&vb)
+            .map(|(x, y)| (x - sign * y).abs())
+            .fold(0.0f64, f64::max);
+        worst = worst.max(d);
+    }
+    worst
+}
+
+fn test_parts(m: usize, widths: &[usize], seed: u64) -> Vec<Mat> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    widths.iter().map(|&w| Mat::gaussian(m, w, &mut rng)).collect()
+}
+
+fn cfg() -> FedSvdConfig {
+    FedSvdConfig {
+        block_size: 5,
+        secagg_batch_rows: 16,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn cluster_matches_sequential_oracle_under_memory_budget() {
+    let (m, widths) = (64usize, [5usize, 4, 3]);
+    let n: usize = widths.iter().sum();
+    let parts = test_parts(m, &widths, 2024);
+    let x = join(&parts);
+    let matrix_bytes = (m * n * 8) as u64;
+    let budget = 4096u64;
+    assert!(
+        budget < matrix_bytes,
+        "the budget must be smaller than the masked matrix"
+    );
+
+    // the sequential reference oracle
+    let oracle = run_fedsvd_with_backend(&parts, &cfg(), CpuBackend::global()).unwrap();
+    let o_u = oracle.u.as_ref().unwrap();
+    let o_v = join_v(&oracle.v_parts);
+
+    for shards in [1usize, 2, 4] {
+        let session = Session::cpu(cfg()).with_exec(ExecMode::Cluster {
+            shards,
+            mem_budget: budget,
+        });
+        let (out, report) = session.run_svd(&parts).unwrap();
+        let stats = report.cluster.expect("cluster stats");
+
+        // the CSP provably stayed under budget, and had to spill to do so
+        assert!(
+            stats.csp_peak_matrix_bytes <= budget,
+            "shards={shards}: peak {} > budget {budget}",
+            stats.csp_peak_matrix_bytes
+        );
+        assert!(stats.shard_spills > 0, "shards={shards}: nothing spilled");
+        assert_eq!(stats.shards, shards);
+
+        // Σ matches the oracle to ≤ 1e-9 relative
+        assert_eq!(out.s.len(), oracle.s.len());
+        for (i, (a, b)) in out.s.iter().zip(&oracle.s).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-9 * oracle.s[0],
+                "shards={shards} σ{i}: {a} vs {b}"
+            );
+        }
+        // U and V match the oracle up to per-vector sign
+        let c_u = out.u.as_ref().unwrap();
+        assert!(
+            aligned_diff(c_u, o_u, true) < 1e-6,
+            "shards={shards}: U deviates"
+        );
+        let c_v = join_v(&out.v_parts);
+        assert!(
+            aligned_diff(&c_v, &o_v, false) < 1e-6,
+            "shards={shards}: V deviates"
+        );
+        // end to end: masks applied and removed losslessly
+        let rec = SvdResult {
+            u: c_u.clone(),
+            s: out.s.clone(),
+            vt: c_v,
+        }
+        .reconstruct();
+        let err = rmse(rec.data(), x.data());
+        assert!(err < 1e-9, "shards={shards}: reconstruction rmse {err}");
+    }
+}
+
+#[test]
+fn cluster_is_bit_reproducible_run_to_run() {
+    let parts = test_parts(32, &[6, 6], 7);
+    let run = || -> FedSvdOutput {
+        let session = Session::cpu(cfg()).with_exec(ExecMode::Cluster {
+            shards: 4,
+            mem_budget: 4096,
+        });
+        session.run_svd(&parts).unwrap().0
+    };
+    let a = run();
+    let b = run();
+    assert!(bits_equal(&a.s, &b.s));
+    assert!(bits_equal(
+        a.u.as_ref().unwrap().data(),
+        b.u.as_ref().unwrap().data()
+    ));
+    for (va, vb) in a.v_parts.iter().zip(&b.v_parts) {
+        assert!(bits_equal(va.data(), vb.data()));
+    }
+}
+
+#[test]
+fn cluster_is_thread_count_invariant() {
+    // the backend's determinism contract must survive the multi-party
+    // runtime: 1-lane and 4-lane backends produce byte-equal results
+    let parts = test_parts(24, &[5, 4], 11);
+    let ccfg = fedsvd::cluster::ClusterConfig {
+        shards: 3,
+        mem_budget: 4096,
+        spill_root: None,
+    };
+    let b1 = CpuBackend::with_threads(1);
+    let b4 = CpuBackend::with_threads(4);
+    let (o1, _) = fedsvd::cluster::run_fedsvd_cluster(&parts, &cfg(), &ccfg, &b1).unwrap();
+    let (o4, _) = fedsvd::cluster::run_fedsvd_cluster(&parts, &cfg(), &ccfg, &b4).unwrap();
+    assert!(bits_equal(&o1.s, &o4.s));
+    assert!(bits_equal(
+        o1.u.as_ref().unwrap().data(),
+        o4.u.as_ref().unwrap().data()
+    ));
+}
+
+#[test]
+fn cluster_truncated_mode_matches_truth() {
+    // decaying spectrum (the PCA/LSA workload shape)
+    let mut rng = Xoshiro256::seed_from_u64(40);
+    let (m, n, r) = (40usize, 16usize, 3usize);
+    let a = {
+        let k = m.min(n);
+        let mut a = Mat::gaussian(m, k, &mut rng);
+        for j in 0..k {
+            let s = 1.0 / (1.0 + j as f64).powf(1.2);
+            for i in 0..m {
+                a[(i, j)] *= s;
+            }
+        }
+        a.mul(&Mat::gaussian(k, n, &mut rng)).unwrap()
+    };
+    let parts = fedsvd::protocol::split_columns(&a, 2).unwrap();
+    let mut c = cfg();
+    c.mode = SvdMode::Truncated { rank: r };
+    let session = Session::cpu(c).with_exec(ExecMode::Cluster {
+        shards: 4,
+        mem_budget: 1 << 20, // truncated factors must fit; streaming still sharded
+    });
+    let (out, _) = session.run_svd(&parts).unwrap();
+    assert_eq!(out.s.len(), r);
+    assert_eq!(out.u.as_ref().unwrap().cols(), r);
+    let truth = fedsvd::linalg::svd(&a).unwrap();
+    for i in 0..r {
+        assert!(
+            (out.s[i] - truth.s[i]).abs() < 1e-6 * truth.s[0],
+            "σ{i}: {} vs {}",
+            out.s[i],
+            truth.s[i]
+        );
+    }
+}
+
+#[test]
+fn cluster_respects_recover_flags() {
+    let parts = test_parts(16, &[4, 4], 5);
+    let mut c = cfg();
+    c.recover_u = false;
+    c.recover_v = false;
+    let session = Session::cpu(c).with_exec(ExecMode::Cluster {
+        shards: 2,
+        mem_budget: 1 << 20,
+    });
+    let (out, _) = session.run_svd(&parts).unwrap();
+    assert!(out.u.is_none());
+    assert!(out.v_parts.is_empty());
+    assert!(!out.s.is_empty());
+    // TA receives nothing in cluster mode either (paper §3.5)
+    assert_eq!(out.net.party(fedsvd::net::link::TA).bytes_received, 0);
+}
+
+#[test]
+fn cluster_rejects_degenerate_setups() {
+    // one user: secure aggregation is undefined
+    let parts = test_parts(8, &[4], 1);
+    let session = Session::cpu(cfg()).with_exec(ExecMode::Cluster {
+        shards: 2,
+        mem_budget: 1 << 20,
+    });
+    assert!(session.run_svd(&parts).is_err());
+    // dense-mask ablation must stay on the sequential oracle
+    let parts2 = test_parts(8, &[3, 3], 2);
+    let mut c = cfg();
+    c.opts.block_masks = false;
+    let session2 = Session::cpu(c).with_exec(ExecMode::Cluster {
+        shards: 2,
+        mem_budget: 1 << 20,
+    });
+    assert!(session2.run_svd(&parts2).is_err());
+}
