@@ -2,10 +2,13 @@
 //! (a) FedSVD-LR vs FATE-like vs SecureML-like, n=1K fixed, m swept
 //!     (paper: 100× over SecureML, 10× over FATE).
 //! (b,c) LR time vs bandwidth and latency.
+//! Plus: a cluster-mode sweep (JSON rows, `exec × shards`) tracking the
+//! app-level trajectory of `ExecMode::Cluster` across PRs.
 
 use fedsvd::apps::lr::run_federated_lr;
 use fedsvd::baselines::sgd_lr::{run_sgd_lr, SgdFramework};
 use fedsvd::bench::section;
+use fedsvd::coordinator::{ExecMode, Session};
 use fedsvd::data::regression_task;
 use fedsvd::linalg::CpuBackend;
 use fedsvd::net::{presets, LinkSpec};
@@ -22,6 +25,7 @@ fn main() {
 
     fig6a(&costs);
     fig6bc(&costs);
+    fig6_cluster();
 }
 
 fn fig6a(costs: &paillier::OpCosts) {
@@ -115,4 +119,49 @@ fn fig6bc(costs: &paillier::OpCosts) {
         "\npaper check: FedSVD least network-sensitive (few rounds, raw-size\n\
          traffic); SGD baselines pay per-iteration round trips"
     );
+}
+
+/// FedSVD-LR through the coordinator seam on both exec modes — one JSON
+/// row per (exec, shards), same style as the tab2_cluster_scaling rows,
+/// so BENCH_* can track the app-over-cluster trajectory across PRs.
+fn fig6_cluster() {
+    section(
+        "Fig 6/cluster",
+        "FedSVD-LR on ExecMode::{Sequential, Cluster} — JSON rows (exec × shards)",
+    );
+    let (m, n) = (400usize, 24usize);
+    let (x, _w, y) = regression_task(m, n, 0.1, 5);
+    let parts = split_columns(&x, 2).unwrap();
+    let cfg = FedSvdConfig {
+        block_size: 32,
+        secagg_batch_rows: 256,
+        ..Default::default()
+    };
+    let mem_budget = 64 * 1024u64; // < the 400×24×8 B masked matrix
+    assert!(mem_budget < (m * n * 8) as u64);
+
+    let run = |exec: ExecMode, shards: usize| {
+        let session = Session::cpu(cfg.clone()).with_exec(exec);
+        let t0 = std::time::Instant::now();
+        let (out, report) = session.run_lr(&parts, &y, 0).unwrap();
+        let wall_s = t0.elapsed().as_secs_f64();
+        let exec_name = if shards == 0 { "sequential" } else { "cluster" };
+        let peak = report
+            .cluster
+            .as_ref()
+            .map(|s| s.csp_peak_matrix_bytes)
+            .unwrap_or(0);
+        println!(
+            "{{\"bench\":\"fig6_lr_app\",\"exec\":\"{exec_name}\",\
+             \"shards\":{shards},\"m\":{m},\"n\":{n},\
+             \"wall_s\":{wall_s:.6},\"net_s\":{:.6},\"total_bytes\":{},\
+             \"csp_peak_matrix_bytes\":{peak},\"train_mse\":{:.6e}}}",
+            report.net_s, report.total_bytes, out.train_mse
+        );
+    };
+
+    run(ExecMode::Sequential, 0);
+    for shards in [1usize, 2, 4, 8] {
+        run(ExecMode::Cluster { shards, mem_budget }, shards);
+    }
 }

@@ -12,6 +12,7 @@
 //! * the CSP computes `w' = V'·Σ⁻¹·U'ᵀ·y' = Qᵀ·w` and broadcasts it;
 //! * user i recovers its own coefficients `wᵢ = Qᵢ·w'`.
 
+use crate::cluster::{run_app_cluster, ClusterApp, ClusterConfig, ClusterStats};
 use crate::linalg::{GemmBackend, Mat};
 use crate::net::link::{CSP, USER_BASE};
 use crate::protocol::{run_fedsvd_with_backend, FedSvdConfig, FedSvdOutput, SvdMode};
@@ -40,21 +41,9 @@ pub fn run_federated_lr(
     cfg: &FedSvdConfig,
     backend: &dyn GemmBackend,
 ) -> Result<LrOutput> {
-    if parts.is_empty() || label_owner >= parts.len() {
-        return Err(Error::Protocol("lr: bad label owner".into()));
-    }
+    validate_lr(parts, y, label_owner)?;
     let m = parts[0].rows();
-    if y.len() != m {
-        return Err(Error::Shape(format!(
-            "lr: {} labels for {} samples",
-            y.len(),
-            m
-        )));
-    }
-    let mut app_cfg = cfg.clone();
-    app_cfg.mode = SvdMode::Full;
-    app_cfg.recover_u = false;
-    app_cfg.recover_v = false;
+    let app_cfg = lr_config(cfg);
     let mut out = run_fedsvd_with_backend(parts, &app_cfg, backend)?;
 
     // label owner masks y and uploads: y' = P·y
@@ -64,13 +53,7 @@ pub fn run_federated_lr(
 
     // CSP: w' = V'·Σ⁺·U'ᵀ·y'
     let uty = out.csp_svd.u.t_mul_vec(&y_masked)?;
-    let smax = out.csp_svd.s.first().cloned().unwrap_or(0.0);
-    let cutoff = smax * 1e-12;
-    let scaled: Vec<f64> = uty
-        .iter()
-        .zip(&out.csp_svd.s)
-        .map(|(v, s)| if *s > cutoff { v / s } else { 0.0 })
-        .collect();
+    let scaled = crate::protocol::fedsvd::pinv_scale(&out.csp_svd.s, &uty);
     let w_masked = out.csp_svd.vt.t_mul_vec(&scaled)?; // V'·(Σ⁺U'ᵀy') — length n
 
     // CSP broadcasts w' to every user
@@ -87,12 +70,16 @@ pub fn run_federated_lr(
         w_parts.push(qs.mul_vec_with(&w_masked, backend)?);
     }
 
-    // federated training-MSE evaluation: partial predictions summed
+    // federated training-MSE evaluation: partial predictions sum at the
+    // label owner (the only party holding y); its own part stays local
     let mut pred = vec![0.0; m];
     out.net.begin_round();
     for (i, (xi, wi)) in parts.iter().zip(&w_parts).enumerate() {
         let pi = xi.mul_vec(wi)?;
-        out.net.send(USER_BASE + i, CSP, (m * 8) as u64);
+        if i != label_owner {
+            out.net
+                .send(USER_BASE + i, USER_BASE + label_owner, (m * 8) as u64);
+        }
         for (p, v) in pred.iter_mut().zip(&pi) {
             *p += v;
         }
@@ -108,17 +95,68 @@ pub fn run_federated_lr(
     })
 }
 
+/// [`run_federated_lr`] on the sharded multi-party runtime
+/// (`ExecMode::Cluster`): the label owner uploads `y' = P·y` behind its
+/// shard uploads, the CSP folds the streamed `U'` blocks into `U'ᵀ·y'`
+/// (so `U'` is never resident and never transmitted), broadcasts
+/// `w' = V'·Σ⁺·U'ᵀ·y'`, and every user unmasks `wᵢ = Qᵢ·w'` inside its
+/// own thread; partial predictions sum at the label owner.
+pub fn run_federated_lr_cluster(
+    parts: &[Mat],
+    y: &[f64],
+    label_owner: usize,
+    cfg: &FedSvdConfig,
+    ccfg: &ClusterConfig,
+    backend: &dyn GemmBackend,
+) -> Result<(LrOutput, ClusterStats)> {
+    validate_lr(parts, y, label_owner)?;
+    let app_cfg = lr_config(cfg);
+    let (out, stats, app) =
+        run_app_cluster(parts, &app_cfg, ccfg, backend, &ClusterApp::Lr { y, label_owner })?;
+    let train_mse = app
+        .train_mse
+        .ok_or_else(|| Error::Protocol("lr: label owner produced no MSE".into()))?;
+    Ok((
+        LrOutput {
+            w_parts: app.w_parts,
+            train_mse,
+            protocol: out,
+        },
+        stats,
+    ))
+}
+
+/// Validation shared by both execution modes.
+fn validate_lr(parts: &[Mat], y: &[f64], label_owner: usize) -> Result<()> {
+    if parts.is_empty() || label_owner >= parts.len() {
+        return Err(Error::Protocol("lr: bad label owner".into()));
+    }
+    let m = parts[0].rows();
+    if y.len() != m {
+        return Err(Error::Shape(format!(
+            "lr: {} labels for {} samples",
+            y.len(),
+            m
+        )));
+    }
+    Ok(())
+}
+
+/// Protocol flags shared by both execution modes: full SVD, no factor
+/// recovery — `U'`, `Σ`, `V'ᵀ` never leave the CSP (paper §4).
+fn lr_config(cfg: &FedSvdConfig) -> FedSvdConfig {
+    let mut app_cfg = cfg.clone();
+    app_cfg.mode = SvdMode::Full;
+    app_cfg.recover_u = false;
+    app_cfg.recover_v = false;
+    app_cfg
+}
+
 /// Centralized least-squares reference (evaluation only).
 pub fn centralized_lr(x: &Mat, y: &[f64]) -> Result<Vec<f64>> {
     let f = crate::linalg::svd(x)?;
     let uty = f.u.t_mul_vec(y)?;
-    let smax = f.s.first().cloned().unwrap_or(0.0);
-    let cutoff = smax * 1e-12;
-    let scaled: Vec<f64> = uty
-        .iter()
-        .zip(&f.s)
-        .map(|(v, s)| if *s > cutoff { v / s } else { 0.0 })
-        .collect();
+    let scaled = crate::protocol::fedsvd::pinv_scale(&f.s, &uty);
     f.vt.t_mul_vec(&scaled)
 }
 

@@ -6,6 +6,7 @@
 //! runs the truncated protocol and recovers *both* `U'ᵣ` and the per-user
 //! `Vᵢᵀ` rows, ignoring everything beyond rank r.
 
+use crate::cluster::{run_app_cluster, ClusterApp, ClusterConfig, ClusterStats};
 use crate::linalg::{GemmBackend, Mat};
 use crate::protocol::{run_fedsvd_with_backend, FedSvdConfig, FedSvdOutput, SvdMode};
 use crate::util::{Error, Result};
@@ -18,6 +19,9 @@ pub struct LsaOutput {
     pub s_r: Vec<f64>,
     /// Per-user column-entity (e.g. document) factors `Vᵢᵀ` (r×nᵢ).
     pub v_parts: Vec<Mat>,
+    /// Per-user doc-embedding blocks `Σᵣ^{1/2}·Vᵢᵀ` (r×nᵢ) — computed
+    /// locally by each user (in cluster mode: inside its thread).
+    pub doc_embeds: Vec<Mat>,
     pub protocol: FedSvdOutput,
 }
 
@@ -28,24 +32,76 @@ pub fn run_federated_lsa(
     cfg: &FedSvdConfig,
     backend: &dyn GemmBackend,
 ) -> Result<LsaOutput> {
-    if rank == 0 {
-        return Err(Error::Shape("lsa: rank 0".into()));
-    }
-    let mut app_cfg = cfg.clone();
-    app_cfg.mode = SvdMode::Truncated { rank };
-    app_cfg.recover_u = true;
-    app_cfg.recover_v = true;
+    let app_cfg = lsa_config(parts, rank, cfg)?;
     let out = run_fedsvd_with_backend(parts, &app_cfg, backend)?;
     let u_r = out
         .u
         .clone()
         .ok_or_else(|| Error::Protocol("lsa: U missing".into()))?;
+    let doc_embeds = out
+        .v_parts
+        .iter()
+        .map(|v| embed_block(&out.s, v))
+        .collect();
     Ok(LsaOutput {
         u_r,
         s_r: out.s.clone(),
         v_parts: out.v_parts.clone(),
+        doc_embeds,
         protocol: out,
     })
+}
+
+/// [`run_federated_lsa`] on the sharded multi-party runtime
+/// (`ExecMode::Cluster`): the truncated protocol streams `U'ᵣ` blocks
+/// and serves the per-user blinded `Vᵢᵀ` recovery; each user then builds
+/// its doc-embedding block `Σᵣ^{1/2}·Vᵢᵀ` inside its own thread.
+pub fn run_federated_lsa_cluster(
+    parts: &[Mat],
+    rank: usize,
+    cfg: &FedSvdConfig,
+    ccfg: &ClusterConfig,
+    backend: &dyn GemmBackend,
+) -> Result<(LsaOutput, ClusterStats)> {
+    let app_cfg = lsa_config(parts, rank, cfg)?;
+    let (out, stats, app) = run_app_cluster(parts, &app_cfg, ccfg, backend, &ClusterApp::Lsa)?;
+    let u_r = out
+        .u
+        .clone()
+        .ok_or_else(|| Error::Protocol("lsa: U missing".into()))?;
+    Ok((
+        LsaOutput {
+            u_r,
+            s_r: out.s.clone(),
+            v_parts: out.v_parts.clone(),
+            doc_embeds: app.doc_embeds,
+            protocol: out,
+        },
+        stats,
+    ))
+}
+
+/// Validation + protocol flags shared by both execution modes.
+fn lsa_config(parts: &[Mat], rank: usize, cfg: &FedSvdConfig) -> Result<FedSvdConfig> {
+    super::validate_rank("lsa", parts, rank)?;
+    let mut app_cfg = cfg.clone();
+    app_cfg.mode = SvdMode::Truncated { rank };
+    app_cfg.recover_u = true;
+    app_cfg.recover_v = true;
+    Ok(app_cfg)
+}
+
+/// `Σᵣ^{1/2}·Vᵢᵀ`: scale row r of the user's `Vᵢᵀ` by `√σᵣ`. One shared
+/// rule for the sequential app and the cluster user threads.
+pub(crate) fn embed_block(s: &[f64], v: &Mat) -> Mat {
+    let mut e = v.clone();
+    for r in 0..e.rows() {
+        let f = s[r].max(0.0).sqrt();
+        for x in e.row_mut(r) {
+            *x *= f;
+        }
+    }
+    e
 }
 
 /// Cosine similarity between two embedding vectors — the downstream LSA
@@ -144,5 +200,29 @@ mod tests {
     fn rank_zero_rejected() {
         let parts = [Mat::zeros(4, 4)];
         assert!(run_federated_lsa(&parts, 0, &cfg(), CpuBackend::global()).is_err());
+    }
+
+    #[test]
+    fn rank_above_min_dim_rejected() {
+        let parts = [Mat::zeros(4, 6)];
+        assert!(run_federated_lsa(&parts, 5, &cfg(), CpuBackend::global()).is_err());
+    }
+
+    #[test]
+    fn doc_embeds_match_per_document_embeddings() {
+        let x = movielens_like(16, 10, 3);
+        let parts = split_columns(&x, 2).unwrap();
+        let out = run_federated_lsa(&parts, 3, &cfg(), CpuBackend::global()).unwrap();
+        assert_eq!(out.doc_embeds.len(), 2);
+        for (user, e) in out.doc_embeds.iter().enumerate() {
+            assert_eq!(e.shape(), out.v_parts[user].shape());
+            for doc in 0..e.cols() {
+                let col: Vec<f64> = e.col(doc);
+                let direct = doc_embedding(&out, user, doc).unwrap();
+                for (a, b) in col.iter().zip(&direct) {
+                    assert!((a - b).abs() < 1e-12);
+                }
+            }
+        }
     }
 }

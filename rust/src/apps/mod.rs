@@ -1,5 +1,39 @@
 //! SVD-based applications (paper §4): PCA, LR, LSA.
+//!
+//! Every application has two entry points sharing one validation and
+//! configuration path: `run_federated_*` drives the sequential reference
+//! protocol, `run_federated_*_cluster` rides the sharded multi-party
+//! runtime ([`crate::cluster`]) with the app-specific rounds and all
+//! per-user post-processing inside the user threads. Results agree to
+//! ≤ 1e-9 across the two (pinned by `tests/apps_cluster_equivalence.rs`).
+//! Deployments normally call them through
+//! `coordinator::Session::{run_pca, run_lr, run_lsa}`, which dispatch on
+//! the session's `ExecMode`.
 
 pub mod pca;
 pub mod lr;
 pub mod lsa;
+
+use crate::linalg::Mat;
+use crate::util::{Error, Result};
+
+/// Shared input validation for the truncated applications: a non-empty
+/// federation and `1 ≤ rank ≤ min(m, n)` — the protocol cannot produce
+/// more components than the joint matrix has, and silently clamping
+/// would let the two exec modes disagree on output shapes.
+pub(crate) fn validate_rank(app: &str, parts: &[Mat], rank: usize) -> Result<()> {
+    if parts.is_empty() {
+        return Err(Error::Protocol(format!("{app}: no users")));
+    }
+    if rank == 0 {
+        return Err(Error::Shape(format!("{app}: rank 0")));
+    }
+    let m = parts[0].rows();
+    let n: usize = parts.iter().map(|p| p.cols()).sum();
+    if rank > m.min(n) {
+        return Err(Error::Shape(format!(
+            "{app}: rank {rank} exceeds min(m={m}, n={n})"
+        )));
+    }
+    Ok(())
+}

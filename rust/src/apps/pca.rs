@@ -9,6 +9,7 @@
 //! factorization and **broadcasts only the masked `U'ᵣ`** — Σ and V'ᵀ are
 //! neither computed to full width nor transmitted (`recover_v = false`).
 
+use crate::cluster::{run_app_cluster, ClusterApp, ClusterConfig, ClusterStats};
 use crate::linalg::{GemmBackend, Mat};
 use crate::protocol::{run_fedsvd_with_backend, FedSvdConfig, FedSvdOutput, SvdMode};
 use crate::util::{Error, Result};
@@ -38,14 +39,7 @@ pub fn run_federated_pca(
     cfg: &FedSvdConfig,
     backend: &dyn GemmBackend,
 ) -> Result<PcaOutput> {
-    if rank == 0 {
-        return Err(Error::Shape("pca: rank 0".into()));
-    }
-    let mut app_cfg = cfg.clone();
-    app_cfg.mode = SvdMode::Truncated { rank };
-    app_cfg.recover_u = true;
-    app_cfg.recover_v = false; // paper: "ignores the computation and
-                               // transmission of Σ, V'ᵀ to improve efficiency"
+    let app_cfg = pca_config(parts, rank, cfg)?;
     let out = run_fedsvd_with_backend(parts, &app_cfg, backend)?;
     let u_r = out
         .u
@@ -62,6 +56,46 @@ pub fn run_federated_pca(
         projections,
         protocol: out,
     })
+}
+
+/// [`run_federated_pca`] on the sharded multi-party runtime
+/// (`ExecMode::Cluster`): same truncated protocol, with every user
+/// materializing `Uᵣ` from the streamed `U'` blocks and projecting its
+/// own columns inside its thread. `V'ᵀ` is neither recovered nor
+/// transmitted, exactly as on the sequential path.
+pub fn run_federated_pca_cluster(
+    parts: &[Mat],
+    rank: usize,
+    cfg: &FedSvdConfig,
+    ccfg: &ClusterConfig,
+    backend: &dyn GemmBackend,
+) -> Result<(PcaOutput, ClusterStats)> {
+    let app_cfg = pca_config(parts, rank, cfg)?;
+    let (out, stats, app) = run_app_cluster(parts, &app_cfg, ccfg, backend, &ClusterApp::Pca)?;
+    let u_r = out
+        .u
+        .clone()
+        .ok_or_else(|| Error::Protocol("pca: protocol did not recover U".into()))?;
+    Ok((
+        PcaOutput {
+            u_r,
+            s_r: out.s.clone(),
+            projections: app.projections,
+            protocol: out,
+        },
+        stats,
+    ))
+}
+
+/// Validation + protocol flags shared by both execution modes.
+fn pca_config(parts: &[Mat], rank: usize, cfg: &FedSvdConfig) -> Result<FedSvdConfig> {
+    super::validate_rank("pca", parts, rank)?;
+    let mut app_cfg = cfg.clone();
+    app_cfg.mode = SvdMode::Truncated { rank };
+    app_cfg.recover_u = true;
+    app_cfg.recover_v = false; // paper: "ignores the computation and
+                               // transmission of Σ, V'ᵀ to improve efficiency"
+    Ok(app_cfg)
 }
 
 /// The paper's PCA precision metric: projection distance
@@ -197,5 +231,11 @@ mod tests {
     fn rank_zero_rejected() {
         let parts = [Mat::zeros(4, 4)];
         assert!(run_federated_pca(&parts, 0, &cfg(), CpuBackend::global()).is_err());
+    }
+
+    #[test]
+    fn rank_above_min_dim_rejected() {
+        let parts = [Mat::zeros(4, 6)];
+        assert!(run_federated_pca(&parts, 5, &cfg(), CpuBackend::global()).is_err());
     }
 }

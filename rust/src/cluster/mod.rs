@@ -23,6 +23,13 @@
 //! masked matrix) → resident in the store, LRU-spilled under the budget
 //! → streamed back through every solver pass in bounded row chunks →
 //! dropped; `U'` chunks leave the CSP the moment they are computed.
+//!
+//! The §4 applications run on the same fabric: [`runtime::ClusterApp`]
+//! adds the app-specific rounds (LR's `y'` upload / `w'` broadcast,
+//! metered under their own [`runtime::labels`]) and per-user local
+//! post-processing inside the user threads; the entry points are the
+//! `run_federated_*_cluster` functions in `crate::apps` and
+//! `coordinator::Session::{run_pca, run_lr, run_lsa}`.
 
 pub mod mailbox;
 pub mod ooc;
@@ -33,5 +40,8 @@ pub mod shard;
 pub use mailbox::Mailbox;
 pub use ooc::{ooc_svd, OocParams, OocSvdResult};
 pub use round::RoundScheduler;
-pub use runtime::{run_fedsvd_cluster, ClusterConfig, ClusterStats};
+pub use runtime::{
+    labels, run_app_cluster, run_fedsvd_cluster, AppClusterOut, ClusterApp, ClusterConfig,
+    ClusterStats,
+};
 pub use shard::ShardStore;

@@ -60,7 +60,10 @@ fn bytes_of(rows: usize, cols: usize) -> u64 {
 
 /// Factorize the store's matrix. `emit_u(global_r0, rows_block)` receives
 /// the left factor in row order when `want_u` is set; blocks never
-/// overlap and cover all m rows.
+/// overlap and cover all m rows. The sink decides what "emitting" means:
+/// the SVD/PCA runtime broadcasts each block to the users, while
+/// FedSVD-LR folds it into `U'ᵀ·y'` on the spot — `U'` is then never
+/// resident and never transmitted.
 pub fn ooc_svd(
     store: &mut ShardStore,
     params: &OocParams,

@@ -19,11 +19,16 @@
 //! membership is by label, not by wall-clock arrival, so thread timing
 //! can never change what lands in which round.
 
+use std::collections::HashMap;
 use std::sync::{Condvar, Mutex};
 
 use crate::net::link::PartyId;
 use crate::net::{LinkSpec, NetSim};
 use crate::util::{Error, Result};
+
+/// Label that [`RoundScheduler::labelled_bytes`] attributes to sends made
+/// outside any open round (the `NetSim` implicit-round rule).
+pub const UNLABELLED: u64 = u64::MAX;
 
 struct SchedState {
     /// Label of the open round, if any.
@@ -31,6 +36,10 @@ struct SchedState {
     /// Senders of the open round that have not left yet.
     pending_leaves: usize,
     aborted: bool,
+    /// Total bytes metered under each round label — the per-round
+    /// traffic ledger the application-level communication tests pin
+    /// (e.g. "FedSVD-LR ships no U'/V'ᵀ payloads").
+    label_bytes: HashMap<u64, u64>,
 }
 
 /// Shared network meter + round rendezvous for the cluster runtime.
@@ -48,6 +57,7 @@ impl RoundScheduler {
                 open: None,
                 pending_leaves: 0,
                 aborted: false,
+                label_bytes: HashMap::new(),
             }),
             cv: Condvar::new(),
         }
@@ -77,8 +87,13 @@ impl RoundScheduler {
 
     /// Meter one message. Callers bracket sends with `enter`/`leave`; a
     /// send outside any open round is charged as its own round (the
-    /// `NetSim` implicit-round rule).
+    /// `NetSim` implicit-round rule) and attributed to [`UNLABELLED`].
     pub fn send(&self, from: PartyId, to: PartyId, bytes: u64) {
+        {
+            let mut st = self.state.lock().expect("scheduler poisoned");
+            let label = st.open.unwrap_or(UNLABELLED);
+            *st.label_bytes.entry(label).or_insert(0) += bytes;
+        }
         self.net.lock().expect("netsim poisoned").send(from, to, bytes);
     }
 
@@ -114,6 +129,16 @@ impl RoundScheduler {
     /// Read the live meters.
     pub fn with_net<R>(&self, f: impl FnOnce(&NetSim) -> R) -> R {
         f(&self.net.lock().expect("netsim poisoned"))
+    }
+
+    /// Bytes metered under each round label, sorted by label. Only labels
+    /// that actually carried traffic appear — the application traffic
+    /// tests assert both on present payloads and on *absent* labels.
+    pub fn labelled_bytes(&self) -> Vec<(u64, u64)> {
+        let st = self.state.lock().expect("scheduler poisoned");
+        let mut v: Vec<(u64, u64)> = st.label_bytes.iter().map(|(&l, &b)| (l, b)).collect();
+        v.sort_unstable();
+        v
     }
 
     /// Recover the meter once all parties have joined.
@@ -186,6 +211,24 @@ mod tests {
         sched.abort();
         assert!(h.join().unwrap().is_err());
         assert!(sched.leave(1).is_err());
+    }
+
+    #[test]
+    fn bytes_are_attributed_to_their_round_label() {
+        let sched = RoundScheduler::new(spec());
+        sched.enter(3, 1).unwrap();
+        sched.send(USER_BASE, CSP, 100);
+        sched.send(USER_BASE + 1, CSP, 150);
+        sched.leave(3).unwrap();
+        sched.enter(8, 1).unwrap();
+        sched.send(CSP, USER_BASE, 40);
+        sched.leave(8).unwrap();
+        // a bracket-less send lands under the UNLABELLED sentinel
+        sched.send(CSP, USER_BASE, 7);
+        assert_eq!(
+            sched.labelled_bytes(),
+            vec![(3, 250), (8, 40), (UNLABELLED, 7)]
+        );
     }
 
     #[test]

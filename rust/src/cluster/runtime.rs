@@ -23,6 +23,15 @@
 //!    matrix is never resident on any party.
 //! 4. **Users** unmask `U = PᵀU'` and run the blinded `Vᵢᵀ` recovery.
 //!
+//! The §4 applications ride the same fabric through [`ClusterApp`]: the
+//! LR label owner uploads `y' = P·y` and the CSP broadcasts
+//! `w' = V'·Σ⁺·U'ᵀ·y'` as metered rounds (`U'` folds into `U'ᵀ·y'` as it
+//! streams past the emit sink, so it never leaves — or even fully
+//! resides at — the CSP), while PCA/LSA users run their local
+//! post-processing (projections, doc embeddings) inside their own
+//! threads. Every round's bytes are attributed to its [`labels`] entry
+//! and surfaced as [`ClusterStats::round_traffic`].
+//!
 //! Failure of any party aborts the scheduler and closes every mailbox,
 //! so errors propagate instead of deadlocking.
 
@@ -74,7 +83,7 @@ impl Default for ClusterConfig {
 }
 
 /// What the cluster run proved about itself, for reports and benches.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ClusterStats {
     /// Shards actually ingested (after clamping).
     pub shards: usize,
@@ -84,23 +93,79 @@ pub struct ClusterStats {
     pub csp_peak_matrix_bytes: u64,
     /// Shard spill events at the CSP.
     pub shard_spills: u64,
+    /// Bytes metered under each round label (see [`labels`]), sorted by
+    /// label — the ledger the communication tests pin (e.g. FedSVD-LR
+    /// must carry no `U'` stream and no V-recovery rounds).
+    pub round_traffic: Vec<(u64, u64)>,
+}
+
+/// Which §4 application rides on a cluster run — the app-specific rounds
+/// executed through the same scheduler/mailbox fabric as the core
+/// protocol, with all per-user post-processing inside the user threads.
+pub enum ClusterApp<'a> {
+    /// Raw FedSVD: no app rounds.
+    None,
+    /// FedSVD-PCA: every user materializes `Uᵣ` from the streamed `U'`
+    /// blocks and projects its own columns locally. `recover_v` stays
+    /// off — `V'ᵀ` is neither computed to full width nor transmitted.
+    Pca,
+    /// FedSVD-LR: the label owner uploads `y' = P·y`, the CSP broadcasts
+    /// `w' = V'·Σ⁺·U'ᵀ·y'`, user i unmasks `wᵢ = Qᵢ·w'`, and partial
+    /// predictions sum at the label owner for the training-MSE meter.
+    Lr { y: &'a [f64], label_owner: usize },
+    /// FedSVD-LSA: users additionally build their doc-embedding blocks
+    /// `Σᵣ^{1/2}·Vᵢᵀ` locally after the blinded `Vᵢᵀ` recovery.
+    Lsa,
+}
+
+/// Per-user application results produced inside the user threads,
+/// in user order.
+#[derive(Default)]
+pub struct AppClusterOut {
+    /// PCA: per-user projections `Uᵣᵀ·Xᵢ` (r×nᵢ).
+    pub projections: Vec<Mat>,
+    /// LR: per-user coefficient blocks `wᵢ = Qᵢ·w'`.
+    pub w_parts: Vec<Vec<f64>>,
+    /// LR: training MSE, evaluated at the label owner.
+    pub train_mse: Option<f64>,
+    /// LSA: per-user doc-embedding blocks `Σᵣ^{1/2}·Vᵢᵀ` (r×nᵢ).
+    pub doc_embeds: Vec<Mat>,
 }
 
 /// DH public key wire size (1536-bit MODP group element).
 const PK_BYTES: u64 = 1536 / 8;
 
-// Round labels: disjoint bases; senders of a round depend only on
-// earlier-labelled rounds, which is what keeps the scheduler's
-// serialization of distinct labels deadlock-free.
-const R_PSEED: u64 = 0;
-const R_QSLICE: u64 = 1;
-const R_PK: u64 = 2;
-const R_PKLIST: u64 = 3;
-const R_UPLOAD: u64 = 1_000; // + shard index
-const R_UBLOCK: u64 = 10_000_000; // + emitted chunk index
-const R_SIGMA: u64 = 20_000_000;
-const R_VREQ: u64 = 20_000_001;
-const R_VRESP: u64 = 20_000_002;
+/// Round labels — disjoint bases; senders of a round depend only on
+/// earlier-labelled rounds, which is what keeps the scheduler's
+/// serialization of distinct labels deadlock-free. Public so traffic
+/// tests can attribute the per-round bytes of
+/// [`ClusterStats::round_traffic`].
+pub mod labels {
+    /// TA → users: P seed broadcast.
+    pub const PSEED: u64 = 0;
+    /// TA → user i: its `Qᵢ` row slice.
+    pub const QSLICE: u64 = 1;
+    /// Users → CSP: DH public keys.
+    pub const PK: u64 = 2;
+    /// CSP → users: the assembled public-key list.
+    pub const PKLIST: u64 = 3;
+    /// + shard index: the k concurrent secagg uploads of one shard.
+    pub const UPLOAD_BASE: u64 = 1_000;
+    /// + emitted chunk index: CSP streaming `U'` row blocks to users.
+    pub const UBLOCK_BASE: u64 = 10_000_000;
+    /// CSP → users: Σ broadcast.
+    pub const SIGMA: u64 = 20_000_000;
+    /// User i → CSP: blinded `Qᵢᵀ·Rᵢ` for the V recovery.
+    pub const VREQ: u64 = 20_000_001;
+    /// CSP → user i: blinded `Vᵢᵀ` response.
+    pub const VRESP: u64 = 20_000_002;
+    /// LR: label owner → CSP, the masked label vector `y' = P·y`.
+    pub const Y_UPLOAD: u64 = 20_000_003;
+    /// LR: CSP → users, the masked coefficients `w' = V'·Σ⁺·U'ᵀ·y'`.
+    pub const W_BCAST: u64 = 20_000_004;
+    /// LR: non-owner users → label owner, partial predictions `Xᵢ·wᵢ`.
+    pub const PRED: u64 = 20_000_005;
+}
 
 enum Msg {
     PSeed(SeedDelivery),
@@ -112,6 +177,14 @@ enum Msg {
     Sigma(Vec<f64>),
     VReq { user: usize, blinded: BlockDiagSlice },
     VResp(Mat),
+    /// LR: the masked label vector `y' = P·y` (label owner → CSP).
+    YMasked(Vec<f64>),
+    /// LR: the masked coefficient vector `w'` (CSP → every user).
+    WMasked(Vec<f64>),
+    /// LR: a partial prediction `Xᵢ·wᵢ` (non-owner user → label owner).
+    /// Tagged with the sender so the owner folds in user order — FP
+    /// addition is not associative, and arrival order is thread timing.
+    Pred { user: usize, pred: Vec<f64> },
 }
 
 fn proto(msg: &str) -> Error {
@@ -152,6 +225,11 @@ struct UserOut {
     u_masked: Option<Mat>,
     u: Option<Mat>,
     vt_part: Option<Mat>,
+    // per-user application results (see ClusterApp)
+    proj: Option<Mat>,
+    w_i: Option<Vec<f64>>,
+    mse: Option<f64>,
+    embed: Option<Mat>,
 }
 
 struct CspOut {
@@ -173,6 +251,21 @@ pub fn run_fedsvd_cluster(
     ccfg: &ClusterConfig,
     backend: &dyn GemmBackend,
 ) -> Result<(FedSvdOutput, ClusterStats)> {
+    let (out, stats, _) = run_app_cluster(parts, cfg, ccfg, backend, &ClusterApp::None)?;
+    Ok((out, stats))
+}
+
+/// [`run_fedsvd_cluster`] with an application riding on the run: the
+/// entry point the `apps` layer uses for `ExecMode::Cluster`. The third
+/// return value carries the per-user app results computed inside the
+/// user threads.
+pub fn run_app_cluster(
+    parts: &[Mat],
+    cfg: &FedSvdConfig,
+    ccfg: &ClusterConfig,
+    backend: &dyn GemmBackend,
+    app: &ClusterApp<'_>,
+) -> Result<(FedSvdOutput, ClusterStats, AppClusterOut)> {
     let k = parts.len();
     if k < 2 {
         return Err(proto("needs at least 2 users (secure aggregation)"));
@@ -194,6 +287,18 @@ pub fn run_fedsvd_cluster(
              ablation on the sequential path)"
             .into(),
         ));
+    }
+    if let ClusterApp::Lr { y, label_owner } = app {
+        if *label_owner >= k {
+            return Err(Error::Protocol("lr: bad label owner".into()));
+        }
+        if y.len() != m {
+            return Err(Error::Shape(format!(
+                "lr: {} labels for {} samples",
+                y.len(),
+                m
+            )));
+        }
     }
     let b = cfg.block_size.max(1);
     let shard_rows = m.div_ceil(ccfg.shards.max(1)).max(1);
@@ -235,7 +340,7 @@ pub fn run_fedsvd_cluster(
             scope.spawn(move || {
                 party(&sched, &all_boxes, || {
                     csp_body(
-                        &sched, &csp_box, &user_boxes, cfg, backend, k, n, n_batches,
+                        &sched, &csp_box, &user_boxes, cfg, backend, app, k, n, n_batches,
                         shard_rows, mem_budget, &spill_root,
                     )
                 })
@@ -246,14 +351,14 @@ pub fn run_fedsvd_cluster(
         let user_handles: Vec<_> = (0..k)
             .map(|i| {
                 let sched = Arc::clone(&sched);
-                let inbox = user_boxes[i].clone();
+                let user_boxes = user_boxes.clone();
                 let csp_box = csp_box.clone();
                 let all_boxes = all_boxes.clone();
                 scope.spawn(move || {
                     party(&sched, &all_boxes, || {
                         user_body(
-                            &sched, &inbox, &csp_box, cfg, backend, &parts[i], i, k, m,
-                            n_batches, shard_rows,
+                            &sched, &user_boxes, &csp_box, cfg, backend, app, &parts[i],
+                            i, k, m, n_batches, shard_rows,
                         )
                     })
                 })
@@ -271,6 +376,7 @@ pub fn run_fedsvd_cluster(
     let csp_out = csp_res?;
     let users_out = users_res.into_iter().collect::<Result<Vec<UserOut>>>()?;
 
+    let round_traffic = sched.labelled_bytes();
     let net = Arc::try_unwrap(sched)
         .map_err(|_| Error::Runtime("round scheduler still shared after join".into()))?
         .into_net();
@@ -284,6 +390,7 @@ pub fn run_fedsvd_cluster(
     let mut u_masked = None;
     let mut q_slices = Vec::with_capacity(k);
     let mut v_parts = Vec::new();
+    let mut app_out = AppClusterOut::default();
     for (idx, uo) in users_out.into_iter().enumerate() {
         metrics.absorb_prefixed(&format!("user{idx}"), &uo.metrics);
         if idx == 0 {
@@ -295,6 +402,18 @@ pub fn run_fedsvd_cluster(
         if let Some(v) = uo.vt_part {
             v_parts.push(v);
         }
+        if let Some(pm) = uo.proj {
+            app_out.projections.push(pm);
+        }
+        if let Some(wv) = uo.w_i {
+            app_out.w_parts.push(wv);
+        }
+        if let Some(e) = uo.embed {
+            app_out.doc_embeds.push(e);
+        }
+        if let Some(ms) = uo.mse {
+            app_out.train_mse = Some(ms);
+        }
     }
     let p = p_opt.ok_or_else(|| Error::Runtime("user 0 did not return P".into()))?;
 
@@ -303,6 +422,7 @@ pub fn run_fedsvd_cluster(
         mem_budget,
         csp_peak_matrix_bytes: csp_out.peak,
         shard_spills: csp_out.spills,
+        round_traffic,
     };
     let out = FedSvdOutput {
         u,
@@ -320,7 +440,7 @@ pub fn run_fedsvd_cluster(
         metrics,
         net,
     };
-    Ok((out, stats))
+    Ok((out, stats, app_out))
 }
 
 // ---------------------------------------------------------------------------
@@ -344,7 +464,7 @@ fn ta_body(
 
     let (n0, b0) = meters(sched);
     metrics.begin("step1: mask init+delivery", n0, b0);
-    sched.enter(R_PSEED, 1)?;
+    sched.enter(labels::PSEED, 1)?;
     for (i, ub) in user_boxes.iter().enumerate() {
         let d = SeedDelivery {
             seed: p_seed,
@@ -354,10 +474,10 @@ fn ta_body(
         sched.send(TA, USER_BASE + i, d.wire_bytes());
         ub.post(Msg::PSeed(d));
     }
-    sched.leave(R_PSEED)?;
+    sched.leave(labels::PSEED)?;
 
     let q = block_orthogonal(n, b, q_seed)?;
-    sched.enter(R_QSLICE, 1)?;
+    sched.enter(labels::QSLICE, 1)?;
     let mut c0 = 0usize;
     for (i, ub) in user_boxes.iter().enumerate() {
         let s = q.row_slice(c0, c0 + widths[i])?;
@@ -366,7 +486,7 @@ fn ta_body(
         ub.post(Msg::QSlice(d.slice));
         c0 += widths[i];
     }
-    sched.leave(R_QSLICE)?;
+    sched.leave(labels::QSLICE)?;
     let (n1, b1) = meters(sched);
     metrics.end(n1, b1);
     // the TA goes offline here (paper §3.5) — it receives nothing
@@ -376,10 +496,11 @@ fn ta_body(
 #[allow(clippy::too_many_arguments)]
 fn user_body(
     sched: &RoundScheduler,
-    inbox: &Mailbox<Msg>,
+    user_boxes: &[Mailbox<Msg>],
     csp_box: &Mailbox<Msg>,
     cfg: &FedSvdConfig,
     backend: &dyn GemmBackend,
+    app: &ClusterApp<'_>,
     xi: &Mat,
     i: usize,
     k: usize,
@@ -387,6 +508,7 @@ fn user_body(
     n_batches: usize,
     shard_rows: usize,
 ) -> Result<UserOut> {
+    let inbox = &user_boxes[i];
     let mut metrics = MetricsRecorder::new();
     let uid = USER_BASE + i;
     let mut rng = Xoshiro256::seed_from_u64(cfg.seed).derive(0x75e2 + i as u64);
@@ -410,9 +532,9 @@ fn user_body(
     // ---- step 2: secagg key agreement + sharded upload ----------------
     metrics.begin("step2: secagg upload", n1, b1);
     let key = DhKeyPair::generate(&mut rng);
-    sched.enter(R_PK, k)?;
+    sched.enter(labels::PK, k)?;
     sched.send(uid, CSP, PK_BYTES);
-    sched.leave(R_PK)?;
+    sched.leave(labels::PK)?;
     csp_box.post(Msg::Pk {
         user: i,
         public: key.public.clone(),
@@ -443,20 +565,34 @@ fn user_body(
         }
         let share = group.mask_share(i, &flat, t as u64)?;
         let bytes = (share.len() * 16) as u64;
-        sched.enter(R_UPLOAD + t as u64, k)?;
+        sched.enter(labels::UPLOAD_BASE + t as u64, k)?;
         sched.send(uid, CSP, bytes);
-        sched.leave(R_UPLOAD + t as u64)?;
+        sched.leave(labels::UPLOAD_BASE + t as u64)?;
         csp_box.post(Msg::Batch {
             batch: t,
             user: i,
             share,
         });
     }
+    // LR app round: the label owner masks its labels with the very same
+    // P and uploads y' = P·y right behind its last shard
+    if let ClusterApp::Lr { y, label_owner } = app {
+        if i == *label_owner {
+            let y_masked = crate::mask::apply::mask_vector(&p, y)?;
+            sched.enter(labels::Y_UPLOAD, 1)?;
+            sched.send(uid, CSP, (y_masked.len() * 8) as u64);
+            sched.leave(labels::Y_UPLOAD)?;
+            csp_box.post(Msg::YMasked(y_masked));
+        }
+    }
     let (n2, b2) = meters(sched);
     metrics.end(n2, b2);
 
     // ---- step 4: receive Σ + streamed U' blocks -----------------------
     metrics.begin("step4: recover results", n2, b2);
+    // user 0 always materializes the shared U; in PCA mode *every* user
+    // does (each needs Uᵣ for its local projection) — all are metered
+    let keep_u = cfg.recover_u && (i == 0 || matches!(app, ClusterApp::Pca));
     let mut sigma: Option<Vec<f64>> = None;
     let mut um: Option<Mat> = None;
     let mut got_rows = 0usize;
@@ -465,7 +601,7 @@ fn user_body(
             Msg::Sigma(s) => sigma = Some(s),
             Msg::UBlock { r0, data } => {
                 got_rows += data.rows();
-                if i == 0 {
+                if keep_u {
                     let um = um.get_or_insert_with(|| Mat::zeros(m, data.cols()));
                     um.set_slice(r0, 0, &data);
                 }
@@ -473,22 +609,23 @@ fn user_body(
             _ => return Err(proto("unexpected message while awaiting results")),
         }
     }
-    // only user 0 materializes the shared U (all users are metered)
     let mut u = None;
     let mut u_masked = None;
-    if cfg.recover_u && i == 0 {
+    if keep_u {
         let um = um.take().ok_or_else(|| proto("no U' blocks received"))?;
         u = Some(p.t_mul_dense_with(&um, backend)?);
-        u_masked = Some(um);
+        // only user 0's masked copy travels back to the session; PCA
+        // users ≠ 0 needed U' solely to unmask their local Uᵣ
+        u_masked = (i == 0).then_some(um);
     }
 
     // ---- step 4: blinded Vᵢᵀ recovery ---------------------------------
     let mut vt_part = None;
     if cfg.recover_v {
         let (ri, blinded) = v_recovery::blind_qit(&qi, &mut rng)?;
-        sched.enter(R_VREQ, k)?;
+        sched.enter(labels::VREQ, k)?;
         sched.send(uid, CSP, blinded.payload_bytes());
-        sched.leave(R_VREQ)?;
+        sched.leave(labels::VREQ)?;
         csp_box.post(Msg::VReq { user: i, blinded });
         let Msg::VResp(bv) = inbox.recv()? else {
             return Err(proto("expected blinded V response"));
@@ -498,6 +635,107 @@ fn user_body(
     let (n3, b3) = meters(sched);
     metrics.end(n3, b3);
 
+    // ---- application post-processing (paper §4), local to this user ---
+    let mut proj = None;
+    let mut w_i = None;
+    let mut mse = None;
+    let mut embed = None;
+    match app {
+        ClusterApp::None => {}
+        ClusterApp::Pca => {
+            let (na, ba) = meters(sched);
+            metrics.begin("app: local projection", na, ba);
+            let ur = u.as_ref().ok_or_else(|| proto("pca: U not recovered"))?;
+            proj = Some(ur.t_mul(xi)?);
+            let (nb, bb) = meters(sched);
+            metrics.end(nb, bb);
+        }
+        ClusterApp::Lsa => {
+            let (na, ba) = meters(sched);
+            metrics.begin("app: local embeddings", na, ba);
+            let vp = vt_part
+                .as_ref()
+                .ok_or_else(|| proto("lsa: Vᵢᵀ not recovered"))?;
+            let s = sigma.as_ref().ok_or_else(|| proto("lsa: Σ not received"))?;
+            embed = Some(crate::apps::lsa::embed_block(s, vp));
+            let (nb, bb) = meters(sched);
+            metrics.end(nb, bb);
+        }
+        ClusterApp::Lr { y, label_owner } => {
+            let (na, ba) = meters(sched);
+            metrics.begin("app: recover model", na, ba);
+            if i == *label_owner {
+                // w' and the k−1 partial predictions interleave freely in
+                // the owner's inbox (peers race the CSP's broadcast loop)
+                let mut w_masked: Option<Vec<f64>> = None;
+                let mut preds: Vec<Option<Vec<f64>>> = (0..k).map(|_| None).collect();
+                let mut got = 0usize;
+                while w_masked.is_none() || got < k - 1 {
+                    match inbox.recv()? {
+                        Msg::WMasked(w) => {
+                            if w_masked.replace(w).is_some() {
+                                return Err(proto("duplicate masked coefficients"));
+                            }
+                        }
+                        Msg::Pred { user, pred } => {
+                            if user >= k || user == i || pred.len() != m {
+                                return Err(proto("bad partial prediction"));
+                            }
+                            if preds[user].replace(pred).is_some() {
+                                return Err(proto("duplicate partial prediction"));
+                            }
+                            got += 1;
+                        }
+                        _ => return Err(proto("unexpected message while recovering model")),
+                    }
+                }
+                let wm = w_masked.expect("loop exits with w'");
+                let wi = crate::protocol::fedsvd::block_q_mul_vec(&qi, &wm, backend)?;
+                let own = xi.mul_vec(&wi)?;
+                // fold in user order — the sequential oracle's exact FP
+                // accumulation order, independent of arrival timing
+                let mut pred = vec![0.0; m];
+                for j in 0..k {
+                    let pj = if j == i {
+                        &own
+                    } else {
+                        preds[j].as_ref().expect("all predictions collected")
+                    };
+                    for (a, b) in pred.iter_mut().zip(pj) {
+                        *a += b;
+                    }
+                }
+                mse = Some(
+                    y.iter()
+                        .zip(&pred)
+                        .map(|(a, b)| (a - b) * (a - b))
+                        .sum::<f64>()
+                        / m as f64,
+                );
+                w_i = Some(wi);
+            } else {
+                let Msg::WMasked(wm) = inbox.recv()? else {
+                    return Err(proto("expected masked coefficients"));
+                };
+                let wi = crate::protocol::fedsvd::block_q_mul_vec(&qi, &wm, backend)?;
+                let pi = xi.mul_vec(&wi)?;
+                sched.enter(labels::PRED, k - 1)?;
+                sched.send(uid, USER_BASE + *label_owner, (m * 8) as u64);
+                sched.leave(labels::PRED)?;
+                user_boxes[*label_owner].post(Msg::Pred { user: i, pred: pi });
+                w_i = Some(wi);
+            }
+            let (nb, bb) = meters(sched);
+            metrics.end(nb, bb);
+        }
+    }
+
+    // only user 0's U travels back to the session (PCA users ≠ 0
+    // materialized it purely as a local input to their projection above)
+    if i != 0 {
+        u = None;
+    }
+
     Ok(UserOut {
         metrics,
         q_slice: qi,
@@ -505,6 +743,10 @@ fn user_body(
         u_masked,
         u,
         vt_part,
+        proj,
+        w_i,
+        mse,
+        embed,
     })
 }
 
@@ -515,6 +757,7 @@ fn csp_body(
     user_boxes: &[Mailbox<Msg>],
     cfg: &FedSvdConfig,
     backend: &dyn GemmBackend,
+    app: &ClusterApp<'_>,
     k: usize,
     n: usize,
     n_batches: usize,
@@ -523,6 +766,7 @@ fn csp_body(
     spill_root: &std::path::Path,
 ) -> Result<CspOut> {
     let mut metrics = MetricsRecorder::new();
+    let lr_mode = matches!(app, ClusterApp::Lr { .. });
 
     // ---- secagg bulletin board ----------------------------------------
     let (n0, b0) = meters(sched);
@@ -540,12 +784,12 @@ fn csp_body(
         .into_iter()
         .map(|p| p.ok_or_else(|| proto("missing public key")))
         .collect::<Result<_>>()?;
-    sched.enter(R_PKLIST, 1)?;
+    sched.enter(labels::PKLIST, 1)?;
     for (j, ub) in user_boxes.iter().enumerate() {
         sched.send(CSP, USER_BASE + j, PK_BYTES * k as u64);
         ub.post(Msg::PkList(pk_list.clone()));
     }
-    sched.leave(R_PKLIST)?;
+    sched.leave(labels::PKLIST)?;
     let (n1, b1) = meters(sched);
     metrics.end(n1, b1);
 
@@ -554,17 +798,27 @@ fn csp_body(
     let agg_group = SecAggGroup::from_seeds(vec![vec![0u64; k]; k])?;
     let mut store = ShardStore::new(spill_root, n, mem_budget)?;
     let mut pending: HashMap<usize, Vec<Option<Vec<u128>>>> = HashMap::new();
+    let mut y_masked: Option<Vec<f64>> = None;
     let mut next = 0usize;
     while next < n_batches {
-        let Msg::Batch { batch, user, share } = inbox.recv()? else {
-            return Err(proto("expected an upload batch"));
-        };
-        if batch >= n_batches || user >= k {
-            return Err(proto("batch out of range"));
-        }
-        let slot = pending.entry(batch).or_insert_with(|| vec![None; k]);
-        if slot[user].replace(share).is_some() {
-            return Err(proto("duplicate batch share"));
+        match inbox.recv()? {
+            Msg::Batch { batch, user, share } => {
+                if batch >= n_batches || user >= k {
+                    return Err(proto("batch out of range"));
+                }
+                let slot = pending.entry(batch).or_insert_with(|| vec![None; k]);
+                if slot[user].replace(share).is_some() {
+                    return Err(proto("duplicate batch share"));
+                }
+            }
+            // LR: the masked label vector interleaves freely with the
+            // shard uploads of the other users
+            Msg::YMasked(yv) if lr_mode => {
+                if y_masked.replace(yv).is_some() {
+                    return Err(proto("duplicate masked label upload"));
+                }
+            }
+            _ => return Err(proto("expected an upload batch")),
         }
         // shards are inserted strictly in row order (deterministic SVD
         // accumulation order); later batches buffer until their turn
@@ -589,12 +843,29 @@ fn csp_body(
             next += 1;
         }
     }
+    if lr_mode && y_masked.is_none() {
+        // the label owner uploads behind its last shard — drain it now
+        match inbox.recv()? {
+            Msg::YMasked(yv) => y_masked = Some(yv),
+            _ => return Err(proto("expected the masked label upload")),
+        }
+    }
+    if let Some(yv) = &y_masked {
+        if yv.len() != store.rows() {
+            return Err(Error::Shape(format!(
+                "lr: {} masked labels for {} rows",
+                yv.len(),
+                store.rows()
+            )));
+        }
+    }
     let (n2, b2) = meters(sched);
     metrics.end(n2, b2);
 
     // ---- step 3: out-of-core SVD, streaming U' back -------------------
     metrics.begin("step3: ooc csp svd", n2, b2);
-    let probe_seed = Xoshiro256::seed_from_u64(cfg.seed).derive(0xc5b).next_u64();
+    // the very same probe stream as the sequential oracle's Step 3
+    let probe_seed = crate::protocol::fedsvd::step3_probe_seed(cfg.seed);
     let (oversample, power_iters) = match cfg.mode {
         SvdMode::Full => (0, 0),
         // one shared constant with the sequential oracle — no drift
@@ -606,24 +877,39 @@ fn csp_body(
         power_iters,
         probe_seed,
     };
+    // LR needs U'ᵀ·y' but must not ship (or hold) U': fold each streamed
+    // block into the accumulator as it passes the sink
+    let want_u = cfg.recover_u || lr_mode;
+    let mut uty = vec![0.0f64; n];
     let mut chunk_no = 0u64;
     let ooc = ooc_svd(
         &mut store,
         &params,
         backend,
-        cfg.recover_u,
+        want_u,
         &mut |r0, blk| {
-            let bytes = (blk.rows() * blk.cols() * 8) as u64;
-            sched.enter(R_UBLOCK + chunk_no, 1)?;
-            for (j, ub) in user_boxes.iter().enumerate() {
-                sched.send(CSP, USER_BASE + j, bytes);
-                ub.post(Msg::UBlock {
-                    r0,
-                    data: blk.clone(),
-                });
+            if lr_mode {
+                let yv = y_masked.as_ref().expect("y' ingested before the SVD");
+                for r in 0..blk.rows() {
+                    let w = yv[r0 + r];
+                    for c in 0..blk.cols() {
+                        uty[c] += blk[(r, c)] * w;
+                    }
+                }
             }
-            sched.leave(R_UBLOCK + chunk_no)?;
-            chunk_no += 1;
+            if cfg.recover_u {
+                let bytes = (blk.rows() * blk.cols() * 8) as u64;
+                sched.enter(labels::UBLOCK_BASE + chunk_no, 1)?;
+                for (j, ub) in user_boxes.iter().enumerate() {
+                    sched.send(CSP, USER_BASE + j, bytes);
+                    ub.post(Msg::UBlock {
+                        r0,
+                        data: blk.clone(),
+                    });
+                }
+                sched.leave(labels::UBLOCK_BASE + chunk_no)?;
+                chunk_no += 1;
+            }
             Ok(())
         },
     )?;
@@ -632,12 +918,25 @@ fn csp_body(
 
     // ---- step 4: Σ broadcast + blinded V recovery service -------------
     metrics.begin("step4: deliver results", n3, b3);
-    sched.enter(R_SIGMA, 1)?;
+    sched.enter(labels::SIGMA, 1)?;
     for (j, ub) in user_boxes.iter().enumerate() {
         sched.send(CSP, USER_BASE + j, (ooc.s.len() * 8) as u64);
         ub.post(Msg::Sigma(ooc.s.clone()));
     }
-    sched.leave(R_SIGMA)?;
+    sched.leave(labels::SIGMA)?;
+
+    if lr_mode {
+        // w' = V'·Σ⁺·(U'ᵀ·y'), with the pseudo-inverse cutoff shared
+        // with the sequential path — broadcast to every user
+        let scaled = crate::protocol::fedsvd::pinv_scale(&ooc.s, &uty);
+        let w_masked = ooc.vt.t_mul_vec(&scaled)?;
+        sched.enter(labels::W_BCAST, 1)?;
+        for (j, ub) in user_boxes.iter().enumerate() {
+            sched.send(CSP, USER_BASE + j, (w_masked.len() * 8) as u64);
+            ub.post(Msg::WMasked(w_masked.clone()));
+        }
+        sched.leave(labels::W_BCAST)?;
+    }
 
     if cfg.recover_v {
         let mut reqs: Vec<Option<BlockDiagSlice>> = (0..k).map(|_| None).collect();
@@ -649,14 +948,14 @@ fn csp_body(
                 return Err(proto("bad or duplicate V request"));
             }
         }
-        sched.enter(R_VRESP, 1)?;
+        sched.enter(labels::VRESP, 1)?;
         for (j, ub) in user_boxes.iter().enumerate() {
             let blinded = reqs[j].take().expect("all requests collected");
             let bv = v_recovery::csp_blind_vit(&ooc.vt, &blinded, backend)?;
             sched.send(CSP, USER_BASE + j, (bv.rows() * bv.cols() * 8) as u64);
             ub.post(Msg::VResp(bv));
         }
-        sched.leave(R_VRESP)?;
+        sched.leave(labels::VRESP)?;
     }
     let (n4, b4) = meters(sched);
     metrics.end(n4, b4);

@@ -6,7 +6,16 @@
 //! FedSVD protocol or one of the applications, and produces a
 //! [`SessionReport`] with the metrics the paper reports (wall time,
 //! simulated network time, bytes, phases).
+//!
+//! The applications go through the same seam: [`Session::run_pca`],
+//! [`Session::run_lr`] and [`Session::run_lsa`] execute on whichever
+//! [`ExecMode`] the session selected — `Sequential` is the lossless
+//! oracle, `Cluster` the sharded multi-party runtime — and agree to
+//! ≤ 1e-9 (pinned by `tests/apps_cluster_equivalence.rs`).
 
+use crate::apps::lr::{run_federated_lr, run_federated_lr_cluster, LrOutput};
+use crate::apps::lsa::{run_federated_lsa, run_federated_lsa_cluster, LsaOutput};
+use crate::apps::pca::{run_federated_pca, run_federated_pca_cluster, PcaOutput};
 use crate::cluster::{run_fedsvd_cluster, ClusterConfig, ClusterStats};
 use crate::linalg::{CpuBackend, GemmBackend, Mat};
 use crate::protocol::{run_fedsvd_with_backend, FedSvdConfig, FedSvdOutput};
@@ -142,6 +151,39 @@ impl Session {
         self.kernel.as_backend()
     }
 
+    fn cluster_config(shards: usize, mem_budget: u64) -> ClusterConfig {
+        ClusterConfig {
+            shards,
+            mem_budget,
+            spill_root: None,
+        }
+    }
+
+    /// Build the caller-facing report from a finished protocol run.
+    fn report(
+        &self,
+        protocol: &FedSvdOutput,
+        cluster: Option<ClusterStats>,
+        t0: std::time::Instant,
+    ) -> SessionReport {
+        // cluster parties run concurrently (and their phases include time
+        // blocked on peers), so summing per-party phase walls would
+        // overstate elapsed time ~(k+2)×; report the session-level clock
+        let wall_s = match &self.exec {
+            ExecMode::Sequential => protocol.metrics.total_wall_s(),
+            ExecMode::Cluster { .. } => t0.elapsed().as_secs_f64(),
+        };
+        SessionReport {
+            kernel: self.kernel.name(),
+            wall_s,
+            net_s: protocol.net.sim_elapsed_s(),
+            total_bytes: protocol.net.total_bytes(),
+            phase_table: protocol.metrics.table(),
+            singular_values: protocol.s.clone(),
+            cluster,
+        }
+    }
+
     /// Run the core protocol over vertically-partitioned user parts.
     pub fn run_svd(&self, parts: &[Mat]) -> Result<(FedSvdOutput, SessionReport)> {
         let t0 = std::time::Instant::now();
@@ -151,32 +193,94 @@ impl Session {
                 None,
             ),
             ExecMode::Cluster { shards, mem_budget } => {
-                let ccfg = ClusterConfig {
-                    shards: *shards,
-                    mem_budget: *mem_budget,
-                    spill_root: None,
-                };
+                let ccfg = Self::cluster_config(*shards, *mem_budget);
                 let (out, stats) =
                     run_fedsvd_cluster(parts, &self.cfg, &ccfg, self.kernel.as_backend())?;
                 (out, Some(stats))
             }
         };
-        // cluster parties run concurrently (and their phases include time
-        // blocked on peers), so summing per-party phase walls would
-        // overstate elapsed time ~(k+2)×; report the session-level clock
-        let wall_s = match &self.exec {
-            ExecMode::Sequential => out.metrics.total_wall_s(),
-            ExecMode::Cluster { .. } => t0.elapsed().as_secs_f64(),
+        let report = self.report(&out, cluster, t0);
+        Ok((out, report))
+    }
+
+    /// Run FedSVD-PCA (paper §4): top-`rank` components plus per-user
+    /// projections, on whichever execution mode the session selected.
+    pub fn run_pca(&self, parts: &[Mat], rank: usize) -> Result<(PcaOutput, SessionReport)> {
+        let t0 = std::time::Instant::now();
+        let (out, cluster) = match &self.exec {
+            ExecMode::Sequential => (
+                run_federated_pca(parts, rank, &self.cfg, self.kernel.as_backend())?,
+                None,
+            ),
+            ExecMode::Cluster { shards, mem_budget } => {
+                let ccfg = Self::cluster_config(*shards, *mem_budget);
+                let (out, stats) = run_federated_pca_cluster(
+                    parts,
+                    rank,
+                    &self.cfg,
+                    &ccfg,
+                    self.kernel.as_backend(),
+                )?;
+                (out, Some(stats))
+            }
         };
-        let report = SessionReport {
-            kernel: self.kernel.name(),
-            wall_s,
-            net_s: out.net.sim_elapsed_s(),
-            total_bytes: out.net.total_bytes(),
-            phase_table: out.metrics.table(),
-            singular_values: out.s.clone(),
-            cluster,
+        let report = self.report(&out.protocol, cluster, t0);
+        Ok((out, report))
+    }
+
+    /// Run FedSVD-LR (paper §4): one-shot least squares with the labels
+    /// held by `parts[label_owner]`, on the selected execution mode.
+    pub fn run_lr(
+        &self,
+        parts: &[Mat],
+        y: &[f64],
+        label_owner: usize,
+    ) -> Result<(LrOutput, SessionReport)> {
+        let t0 = std::time::Instant::now();
+        let (out, cluster) = match &self.exec {
+            ExecMode::Sequential => (
+                run_federated_lr(parts, y, label_owner, &self.cfg, self.kernel.as_backend())?,
+                None,
+            ),
+            ExecMode::Cluster { shards, mem_budget } => {
+                let ccfg = Self::cluster_config(*shards, *mem_budget);
+                let (out, stats) = run_federated_lr_cluster(
+                    parts,
+                    y,
+                    label_owner,
+                    &self.cfg,
+                    &ccfg,
+                    self.kernel.as_backend(),
+                )?;
+                (out, Some(stats))
+            }
         };
+        let report = self.report(&out.protocol, cluster, t0);
+        Ok((out, report))
+    }
+
+    /// Run FedSVD-LSA (paper §4): `rank` latent dimensions with per-user
+    /// `Vᵢᵀ` and doc embeddings, on the selected execution mode.
+    pub fn run_lsa(&self, parts: &[Mat], rank: usize) -> Result<(LsaOutput, SessionReport)> {
+        let t0 = std::time::Instant::now();
+        let (out, cluster) = match &self.exec {
+            ExecMode::Sequential => (
+                run_federated_lsa(parts, rank, &self.cfg, self.kernel.as_backend())?,
+                None,
+            ),
+            ExecMode::Cluster { shards, mem_budget } => {
+                let ccfg = Self::cluster_config(*shards, *mem_budget);
+                let (out, stats) = run_federated_lsa_cluster(
+                    parts,
+                    rank,
+                    &self.cfg,
+                    &ccfg,
+                    self.kernel.as_backend(),
+                )?;
+                (out, Some(stats))
+            }
+        };
+        let report = self.report(&out.protocol, cluster, t0);
         Ok((out, report))
     }
 }
@@ -223,6 +327,40 @@ mod tests {
         assert_eq!(stats.shards, 2);
         assert!(stats.csp_peak_matrix_bytes <= stats.mem_budget);
         assert!(report.phase_table.contains("csp/"));
+    }
+
+    #[test]
+    fn session_runs_apps_on_both_exec_modes() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let parts = split_columns(&Mat::gaussian(24, 8, &mut rng), 2).unwrap();
+        let y: Vec<f64> = (0..24).map(|i| i as f64 / 24.0).collect();
+        let cfg = FedSvdConfig {
+            block_size: 4,
+            ..Default::default()
+        };
+        // sequential
+        let seq = Session::cpu(cfg.clone());
+        let (p, pr) = seq.run_pca(&parts, 3).unwrap();
+        assert_eq!(p.u_r.shape(), (24, 3));
+        assert!(pr.cluster.is_none());
+        let (l, _) = seq.run_lr(&parts, &y, 0).unwrap();
+        assert_eq!(l.w_parts.len(), 2);
+        let (s, _) = seq.run_lsa(&parts, 3).unwrap();
+        assert_eq!(s.doc_embeds.len(), 2);
+        // cluster
+        let clu = Session::cpu(cfg).with_exec(ExecMode::Cluster {
+            shards: 2,
+            mem_budget: 1 << 20,
+        });
+        let (pc, rep) = clu.run_pca(&parts, 3).unwrap();
+        assert_eq!(pc.projections.len(), 2);
+        assert!(rep.cluster.is_some());
+        let (lc, rep) = clu.run_lr(&parts, &y, 1).unwrap();
+        assert_eq!(lc.w_parts.len(), 2);
+        assert!(rep.cluster.is_some());
+        let (sc, rep) = clu.run_lsa(&parts, 3).unwrap();
+        assert_eq!(sc.doc_embeds.len(), 2);
+        assert!(rep.cluster.is_some());
     }
 
     #[test]

@@ -46,6 +46,20 @@
 //!   spill-to-disk [`cluster::shard::ShardStore`] — the full masked
 //!   matrix is never resident on any party. Matches the oracle to
 //!   ≤ 1e-9 on Σ (pinned by `tests/cluster_equivalence.rs`).
+//!
+//! The §4 applications (PCA / LR / LSA) run through the same seam:
+//! `coordinator::Session::{run_pca, run_lr, run_lsa}` execute on either
+//! mode unchanged. On the cluster they ride `cluster::ClusterApp` — the
+//! LR label owner uploads `y' = P·y` and the CSP broadcasts
+//! `w' = V'·Σ⁺·U'ᵀ·y'` as metered rounds (`U'` folds into `U'ᵀ·y'` as it
+//! streams, so it never leaves the CSP), while PCA projections, LR
+//! coefficient unmasking and LSA doc embeddings all happen inside the
+//! user threads. Both exec modes draw identical Step-3 probes
+//! (`protocol::fedsvd::step3_probe_seed`), and app-level agreement to
+//! ≤ 1e-9 at 1/2/4 shards is pinned by
+//! `tests/apps_cluster_equivalence.rs`, with per-round traffic
+//! attribution (`cluster::ClusterStats::round_traffic`) proving LR ships
+//! no `U'`/`V'ᵀ` payloads.
 
 // Dense-kernel house style: index-heavy loops mirror the BLAS-layout math
 // and keep the per-element op order explicit (the bit-determinism

@@ -10,10 +10,14 @@
 //! fedsvd attack [--dataset name] [--block B]
 //! fedsvd info
 //! ```
+//!
+//! `svd`, `pca`, `lr` and `lsa` additionally take `--shards S`
+//! (+ optional `--budget-mb MB`, default 64) to run on the sharded
+//! multi-party cluster runtime instead of the sequential oracle.
 
-use fedsvd::apps::{lr, lsa, pca};
+use fedsvd::apps::lr;
 use fedsvd::attack::{fast_ica, matched_pearson, IcaOptions};
-use fedsvd::coordinator::Session;
+use fedsvd::coordinator::{ExecMode, Session};
 use fedsvd::config::Config;
 use fedsvd::data::{regression_task, Dataset};
 use fedsvd::linalg::Mat;
@@ -58,6 +62,37 @@ fn dataset_by_name(name: &str) -> Option<Dataset> {
     }
 }
 
+/// `--shards S [--budget-mb MB]` selects the cluster runtime; no flag
+/// keeps the sequential reference oracle. A malformed value is an error
+/// (silently falling back would change the execution mode).
+fn exec_mode(flags: &HashMap<String, String>) -> Result<ExecMode, String> {
+    let Some(raw) = flags.get("shards") else {
+        return Ok(ExecMode::Sequential);
+    };
+    let shards: usize = raw
+        .parse()
+        .map_err(|_| format!("--shards: `{raw}` is not a shard count"))?;
+    let mem_budget = match flags.get("budget-mb") {
+        Some(v) => v
+            .parse::<u64>()
+            .map_err(|_| format!("--budget-mb: `{v}` is not a size in MiB"))?,
+        None => 64,
+    } << 20;
+    Ok(ExecMode::Cluster { shards, mem_budget })
+}
+
+fn print_cluster_stats(report: &fedsvd::coordinator::SessionReport) {
+    if let Some(stats) = &report.cluster {
+        println!(
+            "cluster: {} shards, CSP peak matrix memory {} / budget {}, {} spills",
+            stats.shards,
+            human_bytes(stats.csp_peak_matrix_bytes),
+            human_bytes(stats.mem_budget),
+            stats.shard_spills
+        );
+    }
+}
+
 fn base_config(flags: &HashMap<String, String>) -> FedSvdConfig {
     let mut cfg = if let Some(path) = flags.get("config") {
         Config::load(std::path::Path::new(path))
@@ -88,9 +123,10 @@ fn cmd_svd(flags: &HashMap<String, String>) -> Result<(), String> {
     let mut rng = Xoshiro256::seed_from_u64(7);
     let x = Mat::gaussian(m, n, &mut rng);
     let parts = split_columns(&x, k).map_err(|e| e.to_string())?;
-    let session = Session::auto(cfg);
+    let session = Session::auto(cfg).with_exec(exec_mode(flags)?);
     println!("kernel: {}", session.kernel_name());
     let (out, report) = session.run_svd(&parts).map_err(|e| e.to_string())?;
+    print_cluster_stats(&report);
 
     println!("\n{}", report.phase_table);
     println!(
@@ -129,13 +165,14 @@ fn cmd_pca(flags: &HashMap<String, String>) -> Result<(), String> {
         x.cols()
     );
     let parts = split_columns(&x, k).map_err(|e| e.to_string())?;
-    let session = Session::auto(cfg);
-    let out = pca::run_federated_pca(&parts, rank, &session.cfg, session.kernel())
-        .map_err(|e| e.to_string())?;
-    println!("{}", out.protocol.metrics.table());
+    let session = Session::auto(cfg).with_exec(exec_mode(flags)?);
+    let (out, report) = session.run_pca(&parts, rank).map_err(|e| e.to_string())?;
+    print_cluster_stats(&report);
+    println!("{}", report.phase_table);
     println!("top singular values: {:?}", out.s_r);
     let truth = fedsvd::linalg::svd(&x).map_err(|e| e.to_string())?.truncate(rank);
-    let d = pca::projection_distance(&out.u_r, &truth.u).map_err(|e| e.to_string())?;
+    let d = fedsvd::apps::pca::projection_distance(&out.u_r, &truth.u)
+        .map_err(|e| e.to_string())?;
     println!("projection distance to centralized PCA: {d:.3e}");
     Ok(())
 }
@@ -148,10 +185,10 @@ fn cmd_lr(flags: &HashMap<String, String>) -> Result<(), String> {
     println!("Federated LR: {m} samples × {n} features, {k} users");
     let (x, _w_true, y) = regression_task(m, n, 0.1, 13);
     let parts = split_columns(&x, k).map_err(|e| e.to_string())?;
-    let session = Session::auto(cfg);
-    let out = lr::run_federated_lr(&parts, &y, 0, &session.cfg, session.kernel())
-        .map_err(|e| e.to_string())?;
-    println!("{}", out.protocol.metrics.table());
+    let session = Session::auto(cfg).with_exec(exec_mode(flags)?);
+    let (out, report) = session.run_lr(&parts, &y, 0).map_err(|e| e.to_string())?;
+    print_cluster_stats(&report);
+    println!("{}", report.phase_table);
     println!("train MSE: {:.6e}", out.train_mse);
     let w_central = lr::centralized_lr(&x, &y).map_err(|e| e.to_string())?;
     let w_fed: Vec<f64> = out.w_parts.concat();
@@ -179,10 +216,10 @@ fn cmd_lsa(flags: &HashMap<String, String>) -> Result<(), String> {
         x.cols()
     );
     let parts = split_columns(&x, 2).map_err(|e| e.to_string())?;
-    let session = Session::auto(cfg);
-    let out = lsa::run_federated_lsa(&parts, rank, &session.cfg, session.kernel())
-        .map_err(|e| e.to_string())?;
-    println!("{}", out.protocol.metrics.table());
+    let session = Session::auto(cfg).with_exec(exec_mode(flags)?);
+    let (out, report) = session.run_lsa(&parts, rank).map_err(|e| e.to_string())?;
+    print_cluster_stats(&report);
+    println!("{}", report.phase_table);
     println!("top singular values: {:?}", &out.s_r[..out.s_r.len().min(8)]);
     Ok(())
 }
@@ -248,7 +285,8 @@ fn main() -> ExitCode {
         _ => {
             println!(
                 "usage: fedsvd <svd|pca|lr|lsa|attack|info> [--m M] [--n N] [--users K] \
-                 [--block B] [--rank R] [--dataset name] [--scale S] [--config file]"
+                 [--block B] [--rank R] [--dataset name] [--scale S] [--config file] \
+                 [--shards S [--budget-mb MB]]"
             );
             Ok(())
         }

@@ -32,6 +32,16 @@ pub fn truncated_svd_tuning(rank: usize) -> (usize, usize) {
     (rank.max(10), 6)
 }
 
+/// The Step-3 randomized-probe seed stream, derived from the protocol
+/// seed. One shared derivation for the sequential oracle and the cluster
+/// CSP ([`crate::cluster`]) so both execution paths draw *identical*
+/// probes — together with the partition-invariant GEMM accumulation this
+/// is what lets the app-level equivalence suite hold the truncated
+/// applications (PCA / LSA) to ≤ 1e-9 across exec modes.
+pub fn step3_probe_seed(protocol_seed: u64) -> u64 {
+    Xoshiro256::seed_from_u64(protocol_seed).derive(0xc5b).next_u64()
+}
+
 /// The paper's three optimization families (Fig. 7 ablation switches).
 #[derive(Debug, Clone, Copy)]
 pub struct OptFlags {
@@ -155,25 +165,48 @@ impl QSliceRep {
     /// local rows — no dense temporaries, no scalar scatter loop.
     pub fn mul_vec_with(&self, w: &[f64], backend: &dyn GemmBackend) -> Result<Vec<f64>> {
         match self {
-            QSliceRep::Block(s) => {
-                if w.len() != s.cols() {
-                    return Err(Error::Shape(format!(
-                        "mul_vec: w' has {} entries, Qᵢ is {}x{}",
-                        w.len(),
-                        s.rows(),
-                        s.cols()
-                    )));
-                }
-                let mut out = Mat::zeros(s.rows(), 1);
-                for p in s.pieces() {
-                    let wv = MatView::col(&w[p.global_col..p.global_col + p.mat.cols()]);
-                    backend.gemm_view_acc(1.0, p.mat.as_view(), wv, &mut out, p.local_row, 0)?;
-                }
-                Ok(out.into_vec())
-            }
+            QSliceRep::Block(s) => block_q_mul_vec(s, w, backend),
             QSliceRep::Dense(q) => q.mul_vec(w),
         }
     }
+}
+
+/// `Σ⁺·x`: scale each entry by the inverse singular value, with the
+/// relative pseudo-inverse cutoff (σ ≤ σ₁·1e-12 treated as a null
+/// direction). One shared rule for every LR path — the sequential app,
+/// the cluster CSP and the centralized reference — so the cutoff cannot
+/// drift between them and break the ≤ 1e-9 cross-mode equivalence.
+pub fn pinv_scale(s: &[f64], x: &[f64]) -> Vec<f64> {
+    let smax = s.first().cloned().unwrap_or(0.0);
+    let cutoff = smax * 1e-12;
+    x.iter()
+        .zip(s)
+        .map(|(v, sv)| if *sv > cutoff { v / sv } else { 0.0 })
+        .collect()
+}
+
+/// `Qᵢ·w'` on a borrowed block slice — the LR coefficient unmasking,
+/// shared by [`QSliceRep::mul_vec_with`] and the cluster user threads
+/// (which hold their `Qᵢ` slice directly, not wrapped in a `QSliceRep`).
+pub fn block_q_mul_vec(
+    s: &BlockDiagSlice,
+    w: &[f64],
+    backend: &dyn GemmBackend,
+) -> Result<Vec<f64>> {
+    if w.len() != s.cols() {
+        return Err(Error::Shape(format!(
+            "mul_vec: w' has {} entries, Qᵢ is {}x{}",
+            w.len(),
+            s.rows(),
+            s.cols()
+        )));
+    }
+    let mut out = Mat::zeros(s.rows(), 1);
+    for p in s.pieces() {
+        let wv = MatView::col(&w[p.global_col..p.global_col + p.mat.cols()]);
+        backend.gemm_view_acc(1.0, p.mat.as_view(), wv, &mut out, p.local_row, 0)?;
+    }
+    Ok(out.into_vec())
 }
 
 /// Run FedSVD over vertically-partitioned user parts `[X₁ … X_k]`
@@ -291,7 +324,14 @@ pub fn run_fedsvd_with_backend(
             _ => Err(Error::Protocol("mask representation mismatch".into())),
         })?;
 
-    let group = SecAggGroup::setup(&user_ids, CSP, &mut net, &mut rng)?;
+    // a single-user federation has no pairwise masks to agree on (DH
+    // setup needs ≥ 2 parties); its one share still passes through the
+    // same fixed-point codec so k = 1 results match any k ≥ 2 run
+    let group = if k_users == 1 {
+        SecAggGroup::from_seeds(vec![vec![0u64]])?
+    } else {
+        SecAggGroup::setup(&user_ids, CSP, &mut net, &mut rng)?
+    };
     let batch_rows = if cfg.opts.minibatch_secagg {
         cfg.secagg_batch_rows.max(1)
     } else {
@@ -315,7 +355,15 @@ pub fn run_fedsvd_with_backend(
         SvdMode::Full => svd(&x_masked)?,
         SvdMode::Truncated { rank } => {
             let (oversample, power_iters) = truncated_svd_tuning(rank);
-            randomized_svd(&x_masked, rank, oversample, power_iters, rng.next_u64())?
+            // derived (not drawn from the ambient rng) so the cluster CSP
+            // consumes the very same probe stream — see step3_probe_seed
+            randomized_svd(
+                &x_masked,
+                rank,
+                oversample,
+                power_iters,
+                step3_probe_seed(cfg.seed),
+            )?
         }
     };
     metrics.end(net.sim_elapsed_s(), net.total_bytes());
@@ -493,6 +541,17 @@ mod tests {
             ..Default::default()
         };
         check_lossless(12, &[7, 6], &cfg);
+    }
+
+    #[test]
+    fn lossless_single_user_federation() {
+        // degenerate k = 1: no pairwise secagg masks, same codec path
+        let cfg = FedSvdConfig {
+            block_size: 4,
+            secagg_batch_rows: 8,
+            ..Default::default()
+        };
+        check_lossless(10, &[6], &cfg);
     }
 
     #[test]

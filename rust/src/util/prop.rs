@@ -58,6 +58,20 @@ macro_rules! prop_assert {
     };
 }
 
+/// Split `total` columns into `k` uneven positive widths — the ragged
+/// user splits the federation property tests sweep (`split_columns` only
+/// produces near-equal parts). Requires `total ≥ k ≥ 1`; every width is
+/// at least 1 and the widths sum to `total`.
+pub fn ragged_widths(rng: &mut Xoshiro256, total: usize, k: usize) -> Vec<usize> {
+    assert!(k >= 1 && total >= k, "ragged_widths: total {total} < k {k}");
+    let mut widths = vec![1usize; k];
+    for _ in 0..total - k {
+        let i = rng.next_below(k as u64) as usize;
+        widths[i] += 1;
+    }
+    widths
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -83,5 +97,22 @@ mod tests {
     #[should_panic(expected = "property `fails`")]
     fn runner_reports_failure() {
         PropRunner::new(1, 3).run("fails", |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn ragged_widths_cover_total_with_positive_parts() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        for k in [1usize, 2, 5] {
+            for total in [k, k + 3, 17] {
+                let w = ragged_widths(&mut rng, total, k);
+                assert_eq!(w.len(), k);
+                assert_eq!(w.iter().sum::<usize>(), total);
+                assert!(w.iter().all(|&x| x >= 1));
+            }
+        }
+        // deterministic given the rng state
+        let a = ragged_widths(&mut Xoshiro256::seed_from_u64(9), 20, 5);
+        let b = ragged_widths(&mut Xoshiro256::seed_from_u64(9), 20, 5);
+        assert_eq!(a, b);
     }
 }

@@ -1,0 +1,437 @@
+//! App-level equivalence: PCA / LR / LSA on the sharded cluster runtime
+//! vs the sequential oracle (the paper's §4 applications at cluster
+//! scale, through the `Session::{run_pca, run_lr, run_lsa}` seam).
+//!
+//! For each application, `ExecMode::Cluster` with {1, 2, 4} shards on
+//! the same seeded inputs must reproduce the sequential results to
+//! ≤ 1e-9 relative (up to per-component sign where singular vectors are
+//! involved), with the CSP's peak matrix memory under the configured
+//! budget. Plus: property tests over ragged user splits against a local
+//! plain-SVD reference, negative paths through both exec modes (errors,
+//! not panics or hangs), and the FedSVD-LR traffic pin — no U'/V'ᵀ
+//! payloads ever leave the CSP.
+
+use fedsvd::apps::lr::centralized_lr;
+use fedsvd::apps::pca::projection_distance;
+use fedsvd::apps::{lr, lsa, pca};
+use fedsvd::cluster::{labels, ClusterConfig};
+use fedsvd::coordinator::{ExecMode, Session};
+use fedsvd::data::regression_task;
+use fedsvd::linalg::{svd, CpuBackend, Mat};
+use fedsvd::prop_assert;
+use fedsvd::protocol::{split_columns, FedSvdConfig};
+use fedsvd::rng::Xoshiro256;
+use fedsvd::util::max_abs_diff;
+use fedsvd::util::prop::{ragged_widths, PropRunner};
+
+fn cfg() -> FedSvdConfig {
+    FedSvdConfig {
+        block_size: 5,
+        secagg_batch_rows: 16,
+        ..Default::default()
+    }
+}
+
+/// Decaying-spectrum matrix — the PCA/LSA workload shape, which also
+/// keeps the top-r subspace well separated so cross-solver comparisons
+/// stay tight.
+fn decaying_matrix(m: usize, n: usize, seed: u64) -> Mat {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let k = m.min(n);
+    let mut a = Mat::gaussian(m, k, &mut rng);
+    for j in 0..k {
+        let s = 4.0 / (1.0 + j as f64).powf(1.3);
+        for i in 0..m {
+            a[(i, j)] *= s;
+        }
+    }
+    a.mul(&Mat::gaussian(k, n, &mut rng)).unwrap()
+}
+
+/// Cut a joint matrix into the given (possibly ragged) column widths.
+fn split_ragged(x: &Mat, widths: &[usize]) -> Vec<Mat> {
+    let mut parts = Vec::with_capacity(widths.len());
+    let mut c0 = 0usize;
+    for &w in widths {
+        parts.push(x.slice(0, x.rows(), c0, c0 + w));
+        c0 += w;
+    }
+    assert_eq!(c0, x.cols());
+    parts
+}
+
+/// Max |a − b| after aligning the sign of each row of `b` to `a`
+/// (projection / embedding rows follow singular-vector signs).
+fn row_aligned_diff(a: &Mat, b: &Mat) -> f64 {
+    assert_eq!(a.shape(), b.shape());
+    let mut worst = 0.0f64;
+    for r in 0..a.rows() {
+        let ra = a.row(r);
+        let rb = b.row(r);
+        let dot: f64 = ra.iter().zip(rb).map(|(x, y)| x * y).sum();
+        let sign = if dot >= 0.0 { 1.0 } else { -1.0 };
+        let d = ra
+            .iter()
+            .zip(rb)
+            .map(|(x, y)| (x - sign * y).abs())
+            .fold(0.0f64, f64::max);
+        worst = worst.max(d);
+    }
+    worst
+}
+
+fn cluster(shards: usize, mem_budget: u64) -> ExecMode {
+    ExecMode::Cluster { shards, mem_budget }
+}
+
+// ---------------------------------------------------------------------------
+// equivalence: cluster vs sequential oracle at 1/2/4 shards
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pca_cluster_matches_sequential_oracle() {
+    let (m, widths, rank) = (48usize, [9usize, 4, 7], 4usize);
+    let x = decaying_matrix(m, widths.iter().sum(), 101);
+    let parts = split_ragged(&x, &widths);
+
+    let (o_seq, _) = Session::cpu(cfg()).run_pca(&parts, rank).unwrap();
+    let scale = o_seq.s_r[0];
+
+    for shards in [1usize, 2, 4] {
+        let sess = Session::cpu(cfg()).with_exec(cluster(shards, 1 << 20));
+        let (o_cl, report) = sess.run_pca(&parts, rank).unwrap();
+        let stats = report.cluster.expect("cluster stats");
+        assert!(
+            stats.csp_peak_matrix_bytes <= stats.mem_budget,
+            "shards={shards}: peak {} over budget",
+            stats.csp_peak_matrix_bytes
+        );
+        // Σ ≤ 1e-9 relative
+        assert_eq!(o_cl.s_r.len(), rank);
+        for i in 0..rank {
+            assert!(
+                (o_cl.s_r[i] - o_seq.s_r[i]).abs() <= 1e-9 * scale,
+                "shards={shards} σ{i}: {} vs {}",
+                o_cl.s_r[i],
+                o_seq.s_r[i]
+            );
+        }
+        // shared basis spans the same subspace
+        let d = projection_distance(&o_cl.u_r, &o_seq.u_r).unwrap();
+        assert!(d <= 1e-9, "shards={shards}: u_r subspace distance {d}");
+        // per-user projections, up to per-component sign
+        assert_eq!(o_cl.projections.len(), parts.len());
+        for (u, (pc, ps)) in o_cl.projections.iter().zip(&o_seq.projections).enumerate() {
+            assert_eq!(pc.shape(), ps.shape());
+            let d = row_aligned_diff(ps, pc);
+            assert!(
+                d <= 1e-9 * scale,
+                "shards={shards} user {u}: projection diff {d}"
+            );
+        }
+        // PCA never recovers or ships V'ᵀ — no payloads under the
+        // V-recovery labels, and no v_parts in the output
+        assert!(o_cl.protocol.v_parts.is_empty());
+        assert!(!stats
+            .round_traffic
+            .iter()
+            .any(|&(l, _)| l == labels::VREQ || l == labels::VRESP));
+    }
+}
+
+#[test]
+fn lr_cluster_matches_sequential_oracle() {
+    let (m, widths) = (64usize, [5usize, 4, 3]);
+    let n: usize = widths.iter().sum();
+    let label_owner = 1usize;
+    let (x, _w_true, y) = regression_task(m, n, 0.1, 7);
+    let parts = split_ragged(&x, &widths);
+    let budget = 4096u64; // < the 64×12×8 B masked matrix — must spill
+    assert!(budget < (m * n * 8) as u64);
+
+    let (o_seq, _) = Session::cpu(cfg()).run_lr(&parts, &y, label_owner).unwrap();
+    let w_seq: Vec<f64> = o_seq.w_parts.concat();
+    let w_scale = w_seq.iter().fold(0.0f64, |a, &b| a.max(b.abs())).max(1.0);
+
+    for shards in [1usize, 2, 4] {
+        let sess = Session::cpu(cfg()).with_exec(cluster(shards, budget));
+        let (o_cl, report) = sess.run_lr(&parts, &y, label_owner).unwrap();
+        let stats = report.cluster.expect("cluster stats");
+        assert!(
+            stats.csp_peak_matrix_bytes <= budget,
+            "shards={shards}: peak {} > budget {budget}",
+            stats.csp_peak_matrix_bytes
+        );
+        assert!(stats.shard_spills > 0, "shards={shards}: nothing spilled");
+
+        // per-user coefficient blocks match the oracle ≤ 1e-9
+        assert_eq!(o_cl.w_parts.len(), o_seq.w_parts.len());
+        for (u, (wc, ws)) in o_cl.w_parts.iter().zip(&o_seq.w_parts).enumerate() {
+            assert_eq!(wc.len(), ws.len(), "user {u} width");
+            let d = max_abs_diff(wc, ws);
+            assert!(d <= 1e-9 * w_scale, "shards={shards} user {u}: w diff {d}");
+        }
+        // training MSE agrees
+        let mse_d = (o_cl.train_mse - o_seq.train_mse).abs();
+        assert!(
+            mse_d <= 1e-9 * o_seq.train_mse.max(1.0),
+            "shards={shards}: mse {} vs {}",
+            o_cl.train_mse,
+            o_seq.train_mse
+        );
+    }
+}
+
+#[test]
+fn lsa_cluster_matches_sequential_oracle() {
+    let (m, widths, rank) = (40usize, [7usize, 11], 5usize);
+    let x = decaying_matrix(m, widths.iter().sum(), 202);
+    let parts = split_ragged(&x, &widths);
+
+    let (o_seq, _) = Session::cpu(cfg()).run_lsa(&parts, rank).unwrap();
+    let scale = o_seq.s_r[0].max(1.0);
+
+    for shards in [1usize, 2, 4] {
+        let sess = Session::cpu(cfg()).with_exec(cluster(shards, 1 << 20));
+        let (o_cl, report) = sess.run_lsa(&parts, rank).unwrap();
+        let stats = report.cluster.expect("cluster stats");
+        assert!(stats.csp_peak_matrix_bytes <= stats.mem_budget);
+
+        for i in 0..rank {
+            assert!(
+                (o_cl.s_r[i] - o_seq.s_r[i]).abs() <= 1e-9 * scale,
+                "shards={shards} σ{i}"
+            );
+        }
+        let d = projection_distance(&o_cl.u_r, &o_seq.u_r).unwrap();
+        assert!(d <= 1e-9, "shards={shards}: u_r subspace distance {d}");
+        // per-user doc-embedding blocks (computed inside the user
+        // threads) match the sequential ones up to per-component sign
+        assert_eq!(o_cl.doc_embeds.len(), parts.len());
+        for (u, (ec, es)) in o_cl.doc_embeds.iter().zip(&o_seq.doc_embeds).enumerate() {
+            assert_eq!(ec.shape(), es.shape());
+            let d = row_aligned_diff(es, ec);
+            assert!(
+                d <= 1e-9 * scale,
+                "shards={shards} user {u}: embedding diff {d}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// property tests: ragged splits vs a local plain-SVD reference
+// ---------------------------------------------------------------------------
+
+/// Draw (k, m, n, rank) with k ∈ {1,2,5}, both tall and wide shapes, and
+/// rank ∈ {1, min(m,n)−1}. The small dimension stays ≤ 10 so the
+/// truncated solver's oversampled range spans the full space (exact).
+fn draw_shape(rng: &mut Xoshiro256) -> (usize, usize, usize, usize) {
+    let k = [1usize, 2, 5][rng.next_below(3) as usize];
+    let small = 6 + rng.next_below(5) as usize; // 6..=10
+    let large = 14 + rng.next_below(12) as usize; // 14..=25
+    let (m, n) = if rng.next_below(2) == 0 {
+        (large, small.max(k)) // tall
+    } else {
+        (small, large) // wide (n ≥ 14 ≥ k always)
+    };
+    let rank = if rng.next_below(2) == 0 {
+        1
+    } else {
+        m.min(n) - 1
+    };
+    (k, m, n, rank)
+}
+
+#[test]
+fn prop_pca_ragged_splits_match_plain_svd() {
+    PropRunner::new(0xbca1, 8).run("pca ragged splits", |rng| {
+        let (k, m, n, rank) = draw_shape(rng);
+        let x = decaying_matrix(m, n, rng.next_u64());
+        let widths = ragged_widths(rng, n, k);
+        let parts = split_ragged(&x, &widths);
+        let out = pca::run_federated_pca(&parts, rank, &cfg(), CpuBackend::global())
+            .map_err(|e| e.to_string())?;
+        let truth = svd(&x).map_err(|e| e.to_string())?.truncate(rank);
+        for i in 0..rank {
+            prop_assert!(
+                (out.s_r[i] - truth.s[i]).abs() <= 1e-7 * truth.s[0],
+                "k={k} {m}x{n} rank={rank} σ{i}: {} vs {}",
+                out.s_r[i],
+                truth.s[i]
+            );
+        }
+        let d = projection_distance(&out.u_r, &truth.u).map_err(|e| e.to_string())?;
+        prop_assert!(d < 1e-6, "k={k} {m}x{n} rank={rank}: subspace distance {d}");
+        // projected energy identity: Σᵢ ‖Uᵣᵀ·Xᵢ‖_F² = Σ_j σ_j²
+        let energy: f64 = out.projections.iter().map(|p| p.fro_norm().powi(2)).sum();
+        let expect: f64 = out.s_r.iter().map(|s| s * s).sum();
+        prop_assert!(
+            (energy - expect).abs() <= 1e-6 * expect.max(1e-12),
+            "k={k} {m}x{n} rank={rank}: energy {energy} vs {expect}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lr_ragged_splits_match_centralized_least_squares() {
+    PropRunner::new(0x11a2, 8).run("lr ragged splits", |rng| {
+        let (k, m, n, _rank) = draw_shape(rng);
+        let (x, _w_true, y) = regression_task(m, n, 0.1, rng.next_u64());
+        let widths = ragged_widths(rng, n, k);
+        let parts = split_ragged(&x, &widths);
+        let owner = rng.next_below(k as u64) as usize;
+        let out = lr::run_federated_lr(&parts, &y, owner, &cfg(), CpuBackend::global())
+            .map_err(|e| e.to_string())?;
+        let w_central = centralized_lr(&x, &y).map_err(|e| e.to_string())?;
+        let w_fed: Vec<f64> = out.w_parts.concat();
+        let scale = w_central
+            .iter()
+            .fold(0.0f64, |a, &b| a.max(b.abs()))
+            .max(1.0);
+        let d = max_abs_diff(&w_fed, &w_central);
+        prop_assert!(
+            d <= 1e-7 * scale,
+            "k={k} {m}x{n} owner={owner}: w diff {d} (scale {scale})"
+        );
+        // per-user blocks line up with the ragged column widths
+        for (i, wp) in out.w_parts.iter().enumerate() {
+            prop_assert!(wp.len() == widths[i], "user {i} width {}", wp.len());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lsa_ragged_splits_match_truncated_svd() {
+    PropRunner::new(0x15a3, 8).run("lsa ragged splits", |rng| {
+        let (k, m, n, rank) = draw_shape(rng);
+        let x = decaying_matrix(m, n, rng.next_u64());
+        let widths = ragged_widths(rng, n, k);
+        let parts = split_ragged(&x, &widths);
+        let out = lsa::run_federated_lsa(&parts, rank, &cfg(), CpuBackend::global())
+            .map_err(|e| e.to_string())?;
+        let truth = svd(&x).map_err(|e| e.to_string())?.truncate(rank);
+        // rank-r reconstruction error matches the central truncation
+        let v_joined = {
+            let mut vj = out.v_parts[0].clone();
+            for p in &out.v_parts[1..] {
+                vj = vj.hcat(p).map_err(|e| e.to_string())?;
+            }
+            vj
+        };
+        let fed = fedsvd::linalg::SvdResult {
+            u: out.u_r.clone(),
+            s: out.s_r.clone(),
+            vt: v_joined,
+        }
+        .reconstruct();
+        let central = truth.reconstruct();
+        let fed_err = fed.sub(&x).map_err(|e| e.to_string())?.fro_norm();
+        let central_err = central.sub(&x).map_err(|e| e.to_string())?.fro_norm();
+        prop_assert!(
+            (fed_err - central_err).abs() <= 1e-6 * central_err.max(1.0),
+            "k={k} {m}x{n} rank={rank}: fed {fed_err} vs central {central_err}"
+        );
+        for i in 0..rank {
+            prop_assert!(
+                (out.s_r[i] - truth.s[i]).abs() <= 1e-7 * truth.s[0],
+                "k={k} {m}x{n} rank={rank} σ{i}"
+            );
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// negative paths: errors (not panics, not hangs) through both exec modes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn negative_paths_error_through_both_exec_modes() {
+    let x = decaying_matrix(12, 8, 5);
+    let parts = split_columns(&x, 2).unwrap();
+    let y_good = vec![0.5; 12];
+    let y_bad = vec![0.5; 11];
+    let seq = || Session::cpu(cfg());
+    let clu = || Session::cpu(cfg()).with_exec(cluster(2, 1 << 20));
+
+    // LR label-length mismatch
+    assert!(seq().run_lr(&parts, &y_bad, 0).is_err());
+    assert!(clu().run_lr(&parts, &y_bad, 0).is_err());
+    // label owner out of range
+    assert!(seq().run_lr(&parts, &y_good, 5).is_err());
+    assert!(clu().run_lr(&parts, &y_good, 5).is_err());
+    // rank 0 and rank > min(m, n)
+    for rank in [0usize, 9] {
+        assert!(seq().run_pca(&parts, rank).is_err());
+        assert!(clu().run_pca(&parts, rank).is_err());
+        assert!(seq().run_lsa(&parts, rank).is_err());
+        assert!(clu().run_lsa(&parts, rank).is_err());
+    }
+}
+
+#[test]
+fn cluster_error_inside_csp_thread_propagates_and_joins() {
+    // wide matrix + full-mode LR: the out-of-core full SVD rejects m < n
+    // *inside the CSP thread*. The abort path must close every mailbox
+    // and every party must join with an error instead of hanging.
+    let x = decaying_matrix(6, 14, 9);
+    let parts = split_columns(&x, 2).unwrap();
+    let y = vec![0.25; 6];
+    let sess = Session::cpu(cfg()).with_exec(cluster(2, 1 << 20));
+    let t0 = std::time::Instant::now();
+    assert!(sess.run_lr(&parts, &y, 0).is_err());
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(30),
+        "cluster did not join cleanly"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// traffic accounting: FedSVD-LR is communication-minimal
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lr_cluster_ships_no_factor_payloads() {
+    let (m, n, k) = (32usize, 10usize, 2usize);
+    let (x, _w_true, y) = regression_task(m, n, 0.1, 11);
+    let parts = split_columns(&x, k).unwrap();
+    let ccfg = ClusterConfig {
+        shards: 2,
+        mem_budget: 1 << 20,
+        spill_root: None,
+    };
+    let (out, stats) =
+        lr::run_federated_lr_cluster(&parts, &y, 0, &cfg(), &ccfg, CpuBackend::global()).unwrap();
+    let traffic: std::collections::HashMap<u64, u64> =
+        stats.round_traffic.iter().cloned().collect();
+
+    // no U' stream rounds, no V-recovery rounds: the factors stay at the
+    // CSP (recover_u = recover_v = false is the paper's LR mode)
+    assert!(
+        !traffic
+            .keys()
+            .any(|l| (labels::UBLOCK_BASE..labels::SIGMA).contains(l)),
+        "U' blocks were transmitted: {:?}",
+        stats.round_traffic
+    );
+    assert!(!traffic.contains_key(&labels::VREQ));
+    assert!(!traffic.contains_key(&labels::VRESP));
+
+    // beyond the standard upload: exactly y' up and w' down (plus the
+    // partial-prediction evaluation round to the label owner)
+    assert_eq!(traffic[&labels::Y_UPLOAD], (m * 8) as u64);
+    assert_eq!(traffic[&labels::W_BCAST], (k * n * 8) as u64);
+    assert_eq!(traffic[&labels::PRED], ((k - 1) * m * 8) as u64);
+
+    // the standard shard upload did happen
+    assert!(traffic
+        .keys()
+        .any(|l| (labels::UPLOAD_BASE..labels::UBLOCK_BASE).contains(l)));
+
+    // and no factor ever reached a user through the output either
+    assert!(out.protocol.u.is_none());
+    assert!(out.protocol.v_parts.is_empty());
+}
