@@ -127,7 +127,7 @@ pub fn run_federated_lr_cluster(
 }
 
 /// Validation shared by both execution modes.
-fn validate_lr(parts: &[Mat], y: &[f64], label_owner: usize) -> Result<()> {
+pub(crate) fn validate_lr(parts: &[Mat], y: &[f64], label_owner: usize) -> Result<()> {
     if parts.is_empty() || label_owner >= parts.len() {
         return Err(Error::Protocol("lr: bad label owner".into()));
     }
@@ -144,7 +144,7 @@ fn validate_lr(parts: &[Mat], y: &[f64], label_owner: usize) -> Result<()> {
 
 /// Protocol flags shared by both execution modes: full SVD, no factor
 /// recovery — `U'`, `Σ`, `V'ᵀ` never leave the CSP (paper §4).
-fn lr_config(cfg: &FedSvdConfig) -> FedSvdConfig {
+pub(crate) fn lr_config(cfg: &FedSvdConfig) -> FedSvdConfig {
     let mut app_cfg = cfg.clone();
     app_cfg.mode = SvdMode::Full;
     app_cfg.recover_u = false;

@@ -82,7 +82,7 @@ pub fn run_federated_lsa_cluster(
 }
 
 /// Validation + protocol flags shared by both execution modes.
-fn lsa_config(parts: &[Mat], rank: usize, cfg: &FedSvdConfig) -> Result<FedSvdConfig> {
+pub(crate) fn lsa_config(parts: &[Mat], rank: usize, cfg: &FedSvdConfig) -> Result<FedSvdConfig> {
     super::validate_rank("lsa", parts, rank)?;
     let mut app_cfg = cfg.clone();
     app_cfg.mode = SvdMode::Truncated { rank };

@@ -88,7 +88,7 @@ pub fn run_federated_pca_cluster(
 }
 
 /// Validation + protocol flags shared by both execution modes.
-fn pca_config(parts: &[Mat], rank: usize, cfg: &FedSvdConfig) -> Result<FedSvdConfig> {
+pub(crate) fn pca_config(parts: &[Mat], rank: usize, cfg: &FedSvdConfig) -> Result<FedSvdConfig> {
     super::validate_rank("pca", parts, rank)?;
     let mut app_cfg = cfg.clone();
     app_cfg.mode = SvdMode::Truncated { rank };

@@ -1,0 +1,416 @@
+//! Multi-process deployment: one cluster party per OS process.
+//!
+//! [`run_party_distributed`] runs exactly one party body of
+//! [`super::runtime`] over a [`TcpTransport`] — what `fedsvd serve
+//! --role ta|csp|userN` executes, and what
+//! `coordinator::ExecMode::Distributed` dispatches to. A federation is
+//! then N real processes (possibly on N hosts) exchanging
+//! [`crate::transport::wire`] frames; no thread of any process ever
+//! touches another party's state.
+//!
+//! Address discovery ([`PeerSpec`]): either a fully explicit address
+//! book (`--peers ta=host:port,csp=host:port,user0=…`) or a shared
+//! **rendezvous directory** (`--peers-dir`) where each party writes
+//! `<role>.addr` after binding and polls for the others — the
+//! ephemeral-port path the loopback smoke test uses, race-free because
+//! nobody sends before every listener is bound and published.
+//!
+//! The returned [`DistOutcome`] is this party's *partial* view of the
+//! federation (a single process cannot hold the full federated output:
+//! that is the point of the deployment). The CSP knows Σ and the masked
+//! `V'ᵀ`; user 0 additionally unmasks the shared `U`; each user holds
+//! only its own `Vᵢᵀ` / `wᵢ` / projection block; the TA knows nothing
+//! beyond its metrics — exactly the paper's visibility matrix.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use crate::linalg::{GemmBackend, Mat};
+use crate::metrics::MetricsRecorder;
+use crate::net::link::{PartyId, CSP, TA, USER_BASE};
+use crate::transport::wire::ClusterMsg;
+use crate::transport::{TcpTransport, Transport};
+use crate::util::{Error, Result};
+
+use super::runtime::{
+    csp_body, labels, run_party, ta_body, user_body, validate_cluster_inputs, ClusterApp,
+};
+use crate::protocol::FedSvdConfig;
+
+/// Which party this process plays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartyRole {
+    Ta,
+    Csp,
+    User(usize),
+}
+
+impl PartyRole {
+    pub fn party_id(&self) -> PartyId {
+        match self {
+            PartyRole::Ta => TA,
+            PartyRole::Csp => CSP,
+            PartyRole::User(i) => USER_BASE + i,
+        }
+    }
+
+    /// Stable name used by the CLI and the rendezvous files
+    /// (`ta`, `csp`, `user0`, `user1`, …).
+    pub fn name(&self) -> String {
+        match self {
+            PartyRole::Ta => "ta".into(),
+            PartyRole::Csp => "csp".into(),
+            PartyRole::User(i) => format!("user{i}"),
+        }
+    }
+
+    /// Parse a role name as printed by [`PartyRole::name`].
+    pub fn parse(s: &str) -> Result<PartyRole> {
+        match s {
+            "ta" => Ok(PartyRole::Ta),
+            "csp" => Ok(PartyRole::Csp),
+            _ => s
+                .strip_prefix("user")
+                .and_then(|d| d.parse::<usize>().ok())
+                .map(PartyRole::User)
+                .ok_or_else(|| {
+                    Error::Config(format!("bad role `{s}` (want ta|csp|user<i>)"))
+                }),
+        }
+    }
+
+    /// All roles of a `k`-user federation, in `PartyId` order.
+    pub fn all(k: usize) -> Vec<PartyRole> {
+        let mut v = vec![PartyRole::Ta, PartyRole::Csp];
+        v.extend((0..k).map(PartyRole::User));
+        v
+    }
+}
+
+/// How a party learns its peers' addresses.
+#[derive(Debug, Clone)]
+pub enum PeerSpec {
+    /// Explicit address book: `(role, "host:port")` pairs.
+    Addrs(Vec<(PartyRole, String)>),
+    /// Rendezvous directory: each party writes `<role>.addr` after
+    /// binding and polls for every other party's file.
+    Dir(PathBuf),
+}
+
+/// Deployment knobs for one `fedsvd serve` process.
+#[derive(Debug, Clone)]
+pub struct DistConfig {
+    pub role: PartyRole,
+    /// Listen address (`127.0.0.1:0` binds an ephemeral port).
+    pub listen: String,
+    pub peers: PeerSpec,
+    /// Federation session id — the handshake rejects peers from a
+    /// different session, so two federations can share hosts safely.
+    pub session: u64,
+    /// Row-shard count for the masked-matrix upload/ingest.
+    pub shards: usize,
+    /// CSP matrix-memory budget in bytes.
+    pub mem_budget: u64,
+    /// CSP spill directory (default: the system temp dir).
+    pub spill_root: Option<PathBuf>,
+    /// How long to wait for peers to publish their addresses.
+    pub rendezvous_timeout: Duration,
+    /// Test instrumentation: fail right after leaving this round label
+    /// (drives the injected-abort path of the multi-process smoke test;
+    /// see [`parse_fault_point`]).
+    pub fault_after_label: Option<u64>,
+}
+
+impl DistConfig {
+    pub fn new(role: PartyRole, listen: impl Into<String>, peers: PeerSpec) -> Self {
+        Self {
+            role,
+            listen: listen.into(),
+            peers,
+            session: 0,
+            shards: 4,
+            mem_budget: 64 << 20,
+            spill_root: None,
+            rendezvous_timeout: Duration::from_secs(30),
+            fault_after_label: None,
+        }
+    }
+}
+
+/// This party's share of a finished distributed run. Fields are `None`
+/// (or empty) when the paper's visibility rules keep them away from
+/// this role.
+pub struct DistOutcome {
+    pub role: PartyRole,
+    pub metrics: MetricsRecorder,
+    /// Σ — known to the CSP and every user; empty at the TA.
+    pub sigma: Vec<f64>,
+    /// The shared U — user 0 (and every PCA user locally; only user 0
+    /// reports it).
+    pub u: Option<Mat>,
+    /// This user's secret `Vᵢᵀ` block.
+    pub vt_part: Option<Mat>,
+    /// The masked right factor `V'ᵀ` — CSP only.
+    pub vt_masked: Option<Mat>,
+    /// LR: this user's coefficient block `wᵢ`.
+    pub w_i: Option<Vec<f64>>,
+    /// LR: training MSE (label owner only).
+    pub train_mse: Option<f64>,
+    /// PCA: this user's projection block.
+    pub proj: Option<Mat>,
+    /// LSA: this user's doc-embedding block.
+    pub embed: Option<Mat>,
+    /// CSP only: matrix-memory high-water mark / spill count.
+    pub csp_peak_matrix_bytes: u64,
+    pub shard_spills: u64,
+    /// Real bytes that crossed this endpoint, per round label.
+    pub round_traffic: Vec<(u64, u64)>,
+    /// Total real bytes (sent + received) at this endpoint.
+    pub real_bytes: u64,
+    /// Shards actually ingested (after clamping).
+    pub shards: usize,
+}
+
+/// Map a human fault-point name to the round label it fires after
+/// (CLI `--inject-abort`); bare integers are accepted verbatim.
+pub fn parse_fault_point(s: &str) -> Result<u64> {
+    Ok(match s {
+        "pseed" => labels::PSEED,
+        "qslice" => labels::QSLICE,
+        "pk" => labels::PK,
+        "pklist" => labels::PKLIST,
+        "upload" => labels::UPLOAD_BASE,
+        "sigma" => labels::SIGMA,
+        "y-upload" => labels::Y_UPLOAD,
+        "w-bcast" => labels::W_BCAST,
+        "pred" => labels::PRED,
+        _ => s.parse::<u64>().map_err(|_| {
+            Error::Config(format!("bad fault point `{s}` (name or round label)"))
+        })?,
+    })
+}
+
+/// Transport decorator that errors out right after this party leaves
+/// round `trip` — the controlled mid-protocol crash the abort-path
+/// smoke test injects. Forwarding everything else keeps the failure
+/// realistic: the party has already sent its round payload when it dies.
+struct FaultTransport<'a> {
+    inner: &'a TcpTransport,
+    trip: u64,
+}
+
+impl Transport for FaultTransport<'_> {
+    fn party(&self) -> PartyId {
+        self.inner.party()
+    }
+    fn round_enter(&self, label: u64, senders: usize) -> Result<()> {
+        self.inner.round_enter(label, senders)
+    }
+    fn send(&self, to: PartyId, msg: ClusterMsg) -> Result<()> {
+        self.inner.send(to, msg)
+    }
+    fn round_leave(&self, label: u64) -> Result<()> {
+        self.inner.round_leave(label)?;
+        if label == self.trip {
+            return Err(Error::Runtime(format!(
+                "injected fault after round {label}"
+            )));
+        }
+        Ok(())
+    }
+    fn recv(&self) -> Result<ClusterMsg> {
+        self.inner.recv()
+    }
+    fn meters(&self) -> (f64, u64) {
+        self.inner.meters()
+    }
+    fn abort(&self, reason: &str) {
+        self.inner.abort(reason)
+    }
+    fn close(&self) {
+        self.inner.close()
+    }
+}
+
+/// Best-effort removal of this party's rendezvous file on exit (success
+/// *or* error), so a cleanly-finished federation leaves the directory
+/// reusable for the next launch.
+struct RendezvousGuard(Option<std::path::PathBuf>);
+
+impl Drop for RendezvousGuard {
+    fn drop(&mut self) {
+        if let Some(p) = &self.0 {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+/// Resolve the peer address book, publishing our own address first when
+/// a rendezvous directory is used. Each `<role>.addr` file carries the
+/// federation session id (`<session> <addr>`); files from a *different*
+/// session — e.g. stale leftovers of a crashed run under another seed —
+/// are ignored rather than connected to, and the timeout error says so.
+/// Same-session leftovers cannot be told apart from live peers, hence
+/// the on-exit cleanup ([`RendezvousGuard`]) and the recommendation to
+/// use a fresh directory after a crash.
+fn resolve_peers(
+    spec: &PeerSpec,
+    k: usize,
+    me: PartyRole,
+    my_addr: &str,
+    session: u64,
+    timeout: Duration,
+) -> Result<(HashMap<PartyId, String>, RendezvousGuard)> {
+    match spec {
+        PeerSpec::Addrs(list) => Ok((
+            list.iter()
+                .map(|(r, a)| (r.party_id(), a.clone()))
+                .collect(),
+            RendezvousGuard(None),
+        )),
+        PeerSpec::Dir(dir) => {
+            std::fs::create_dir_all(dir)?;
+            let own = dir.join(format!("{}.addr", me.name()));
+            std::fs::write(&own, format!("{session} {my_addr}"))?;
+            let guard = RendezvousGuard(Some(own));
+            let mut peers = HashMap::new();
+            peers.insert(me.party_id(), my_addr.to_string());
+            let t0 = Instant::now();
+            for role in PartyRole::all(k) {
+                if role == me {
+                    continue;
+                }
+                let path = dir.join(format!("{}.addr", role.name()));
+                let addr = loop {
+                    let fresh = std::fs::read_to_string(&path).ok().and_then(|s| {
+                        let (sess, addr) = s.trim().split_once(' ')?;
+                        (sess.parse::<u64>().ok()? == session && !addr.is_empty())
+                            .then(|| addr.to_string())
+                    });
+                    match fresh {
+                        Some(a) => break a,
+                        None if t0.elapsed() >= timeout => {
+                            return Err(Error::Runtime(format!(
+                                "rendezvous timeout: {} never published {} for \
+                                 session {session} (a leftover file from an old \
+                                 run is ignored — use a fresh --peers-dir after \
+                                 a crash)",
+                                role.name(),
+                                path.display()
+                            )));
+                        }
+                        None => std::thread::sleep(Duration::from_millis(25)),
+                    }
+                };
+                peers.insert(role.party_id(), addr);
+            }
+            Ok((peers, guard))
+        }
+    }
+}
+
+/// Run this process's party of a distributed federation.
+///
+/// `parts` is the full set of user blocks as every process of the demo
+/// deployment derives it (deterministic synthetic data); only the slice
+/// belonging to this role is ever touched — a user reads `parts[i]`,
+/// the TA only the widths, the CSP only the dimensions. `cfg` must be
+/// identical across processes (same seed ⇒ same masks, same probes),
+/// which the session-id handshake cross-checks by convention
+/// (`session` defaults to the seed in the CLI).
+pub fn run_party_distributed(
+    parts: &[Mat],
+    cfg: &FedSvdConfig,
+    dcfg: &DistConfig,
+    backend: &dyn GemmBackend,
+    app: &ClusterApp<'_>,
+) -> Result<DistOutcome> {
+    let (k, m, widths, n, b, shard_rows, n_batches) =
+        validate_cluster_inputs(parts, cfg, dcfg.shards, app)?;
+    if let PartyRole::User(i) = dcfg.role {
+        if i >= k {
+            return Err(Error::Config(format!("role user{i} but only {k} users")));
+        }
+    }
+    let transport = TcpTransport::bind(&dcfg.listen, dcfg.role.party_id(), dcfg.session)?;
+    let (peers, _rendezvous_guard) = resolve_peers(
+        &dcfg.peers,
+        k,
+        dcfg.role,
+        &transport.local_addr().to_string(),
+        dcfg.session,
+        dcfg.rendezvous_timeout,
+    )?;
+    transport.set_peers(peers)?;
+
+    let fault;
+    let link: &dyn Transport = match dcfg.fault_after_label {
+        Some(trip) => {
+            fault = FaultTransport {
+                inner: &transport,
+                trip,
+            };
+            &fault
+        }
+        None => &transport,
+    };
+
+    let mut out = DistOutcome {
+        role: dcfg.role,
+        metrics: MetricsRecorder::new(),
+        sigma: Vec::new(),
+        u: None,
+        vt_part: None,
+        vt_masked: None,
+        w_i: None,
+        train_mse: None,
+        proj: None,
+        embed: None,
+        csp_peak_matrix_bytes: 0,
+        shard_spills: 0,
+        round_traffic: Vec::new(),
+        real_bytes: 0,
+        shards: n_batches,
+    };
+    match dcfg.role {
+        PartyRole::Ta => {
+            out.metrics = run_party(link, |l| ta_body(l, &widths, cfg, m, n, b))?;
+        }
+        PartyRole::Csp => {
+            let spill_root = dcfg
+                .spill_root
+                .clone()
+                .unwrap_or_else(std::env::temp_dir);
+            let csp = run_party(link, |l| {
+                csp_body(
+                    l, cfg, backend, app, k, n, n_batches, shard_rows, dcfg.mem_budget,
+                    &spill_root,
+                )
+            })?;
+            out.metrics = csp.metrics;
+            out.sigma = csp.s;
+            out.vt_masked = Some(csp.vt);
+            out.csp_peak_matrix_bytes = csp.peak;
+            out.shard_spills = csp.spills;
+        }
+        PartyRole::User(i) => {
+            let uo = run_party(link, |l| {
+                user_body(
+                    l, cfg, backend, app, &parts[i], i, k, m, n_batches, shard_rows,
+                )
+            })?;
+            out.metrics = uo.metrics;
+            out.sigma = uo.sigma.unwrap_or_default();
+            out.u = uo.u;
+            out.vt_part = uo.vt_part;
+            out.w_i = uo.w_i;
+            out.train_mse = uo.mse;
+            out.proj = uo.proj;
+            out.embed = uo.embed;
+        }
+    }
+    out.round_traffic = transport.seen_ledger();
+    out.real_bytes = transport.total_bytes();
+    Ok(out)
+}

@@ -54,14 +54,21 @@ impl<T> Mailbox<T> {
         }
     }
 
-    /// Enqueue a message (never blocks). Posting to a closed mailbox is a
-    /// no-op: the receiver is already gone or aborting.
-    pub fn post(&self, msg: T) {
+    /// Enqueue a message (never blocks). Posting to a closed mailbox is
+    /// an **error**, not a silent drop: the receiver is gone or aborting,
+    /// and the sender must find out now instead of hanging a later round
+    /// waiting for a reply that can never come. Senders treat this as
+    /// "peer aborted" and propagate the error.
+    pub fn post(&self, msg: T) -> Result<()> {
         let mut st = self.inner.state.lock().expect("mailbox poisoned");
-        if !st.closed {
-            st.queue.push_back(msg);
-            self.inner.cv.notify_one();
+        if st.closed {
+            return Err(Error::Runtime(
+                "mailbox closed: receiver is gone or aborting".into(),
+            ));
         }
+        st.queue.push_back(msg);
+        self.inner.cv.notify_one();
+        Ok(())
     }
 
     /// Block until a message arrives; errors once the mailbox is closed
@@ -108,7 +115,7 @@ mod tests {
         let tx = mb.clone();
         let h = std::thread::spawn(move || {
             for i in 0..100 {
-                tx.post(i);
+                tx.post(i).unwrap();
             }
         });
         let mut got = Vec::new();
@@ -128,15 +135,16 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(10));
         mb.close();
         assert!(h.join().unwrap().is_err());
-        // posts after close are dropped, recv still errors
-        mb.post(1);
+        // posting to a closed inbox reports the aborted peer, and recv
+        // still errors (nothing was enqueued)
+        assert!(mb.post(1).is_err());
         assert!(mb.recv().is_err());
     }
 
     #[test]
     fn drains_queued_before_reporting_closed() {
         let mb: Mailbox<u8> = Mailbox::new();
-        mb.post(7);
+        mb.post(7).unwrap();
         mb.close();
         assert_eq!(mb.recv().unwrap(), 7);
         assert!(mb.recv().is_err());

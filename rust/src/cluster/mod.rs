@@ -3,20 +3,33 @@
 //! The sequential protocol in [`crate::protocol`] drives all parties from
 //! one loop — the reference oracle. This subsystem is the scaling path
 //! the paper's billion-scale results imply (Tab. 2, Fig. 5): TA, CSP and
-//! each user run as **real threads** connected by typed [`mailbox`]
-//! channels, sends are metered through the shared byte/latency model via
-//! the [`round`] scheduler (concurrent uploads overlap instead of
-//! serializing), and the CSP ingests masked row shards into a budgeted
-//! [`shard::ShardStore`] — spilling through [`crate::storage`] — so the
-//! full masked matrix is never resident on any party. The factorization
-//! itself ([`ooc`]) streams every product over shards and emits `U'` row
-//! blocks back to the users as they are produced.
+//! each user run as **independent party loops** talking only through the
+//! [`crate::transport::Transport`] seam, and the CSP ingests masked row
+//! shards into a budgeted [`shard::ShardStore`] — spilling through
+//! [`crate::storage`] — so the full masked matrix is never resident on
+//! any party. The factorization itself ([`ooc`]) streams every product
+//! over shards and emits `U'` row blocks back to the users as they are
+//! produced.
 //!
-//! Layering: `mailbox`/`round` are transport (over [`crate::net`]),
+//! Three deployments of the same choreography:
+//!
+//! * **threads + simulated network** ([`runtime::run_app_cluster`],
+//!   `ExecMode::Cluster`) — mailbox delivery, sends grouped into
+//!   overlapping metered rounds by [`round::RoundScheduler`];
+//! * **threads + real loopback sockets**
+//!   ([`runtime::run_app_cluster_tcp`]) — every message wire-encoded
+//!   through [`crate::transport::wire`] and carried by TCP;
+//! * **one process per party** ([`dist::run_party_distributed`],
+//!   `ExecMode::Distributed`, `fedsvd serve`) — a real federation of
+//!   OS processes on loopback or distinct hosts.
+//!
+//! Layering: [`mailbox`]/[`round`] are the in-process fabric that
+//! [`crate::transport::LocalTransport`] adapts (over [`crate::net`]),
 //! `shard` is budgeted storage (over [`crate::storage`]), `ooc` is the
-//! solver (over [`crate::linalg`]), and [`runtime`] is the protocol
-//! choreography (mirroring [`crate::protocol::fedsvd`]). Entry point:
-//! `coordinator::Session` with `ExecMode::Cluster`.
+//! solver (over [`crate::linalg`]), [`runtime`] is the protocol
+//! choreography (mirroring [`crate::protocol::fedsvd`]) written against
+//! the transport trait, and [`dist`] is the multi-process driver. Entry
+//! point: `coordinator::Session` with `ExecMode::{Cluster, Distributed}`.
 //!
 //! Shard lifecycle: user upload (secagg round per shard) → CSP aggregate
 //! (exact fixed-point cancellation ⇒ bit-identical to the sequential
@@ -31,17 +44,21 @@
 //! `run_federated_*_cluster` functions in `crate::apps` and
 //! `coordinator::Session::{run_pca, run_lr, run_lsa}`.
 
+pub mod dist;
 pub mod mailbox;
 pub mod ooc;
 pub mod round;
 pub mod runtime;
 pub mod shard;
 
+pub use dist::{
+    parse_fault_point, run_party_distributed, DistConfig, DistOutcome, PartyRole, PeerSpec,
+};
 pub use mailbox::Mailbox;
 pub use ooc::{ooc_svd, OocParams, OocSvdResult};
 pub use round::RoundScheduler;
 pub use runtime::{
-    labels, run_app_cluster, run_fedsvd_cluster, AppClusterOut, ClusterApp, ClusterConfig,
-    ClusterStats,
+    labels, run_app_cluster, run_app_cluster_tcp, run_fedsvd_cluster, run_fedsvd_cluster_tcp,
+    AppClusterOut, ClusterApp, ClusterConfig, ClusterStats,
 };
 pub use shard::ShardStore;

@@ -1,12 +1,26 @@
 //! The sharded multi-party FedSVD runtime.
 //!
-//! TA, CSP and every user run as real OS threads exchanging typed
-//! messages over [`Mailbox`]es; every send is metered through the
-//! [`RoundScheduler`] so logically-concurrent uploads overlap in the
-//! simulated network exactly as the paper's star topology prescribes.
+//! TA, CSP and every user run as independent party loops exchanging
+//! typed messages through the [`crate::transport::Transport`] seam —
+//! the choreography below is deployment-agnostic. Three fabrics run it:
+//!
+//! * [`run_app_cluster`] — every party a thread in this process over
+//!   [`LocalTransport`]: mailbox delivery, every send metered through
+//!   the [`RoundScheduler`] so logically-concurrent uploads overlap in
+//!   the simulated network exactly as the paper's star topology
+//!   prescribes (the PR 2/3 execution model, bit-identical meters).
+//! * [`run_app_cluster_tcp`] — the same threads wired by real loopback
+//!   sockets ([`TcpTransport`]): frames encoded by the
+//!   [`crate::transport::wire`] codec, traffic ledgers in real bytes.
+//!   The bench/test harness proving the wire path end-to-end without
+//!   process orchestration.
+//! * [`super::dist`] — one party per **OS process** (`fedsvd serve`,
+//!   `ExecMode::Distributed`), each running exactly one body below over
+//!   its own `TcpTransport`.
+//!
 //! Compute inside each party still flows through the shared
 //! [`GemmBackend`] (its pooled lanes are the machine's cores; parties
-//! are control threads that block on I/O, not compute lanes).
+//! are control loops that block on I/O, not compute lanes).
 //!
 //! Protocol flow (paper Fig. 3, distributed):
 //!
@@ -32,28 +46,36 @@
 //! threads. Every round's bytes are attributed to its [`labels`] entry
 //! and surfaced as [`ClusterStats::round_traffic`].
 //!
-//! Failure of any party aborts the scheduler and closes every mailbox,
-//! so errors propagate instead of deadlocking.
+//! Ordering: the simulated fabric serializes labelled rounds globally,
+//! but real sockets only guarantee FIFO per peer pair — so each party
+//! reads through a [`PartyLink`] hold-back queue that stashes frames
+//! arriving ahead of the protocol step that consumes them.
+//!
+//! Failure of any party aborts its transport (peers' `recv`s error, on
+//! TCP via explicit `Abort` frames), so errors propagate instead of
+//! deadlocking.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::panic::AssertUnwindSafe;
 use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::bignum::BigUint;
 use crate::linalg::{GemmBackend, Mat, SvdResult};
-use crate::mask::block_diag::{BlockDiagMat, BlockDiagSlice};
-use crate::mask::delivery::{SeedDelivery, SliceDelivery};
+use crate::mask::block_diag::BlockDiagMat;
+use crate::mask::delivery::SeedDelivery;
 use crate::mask::{block_orthogonal, mask_matrix_with};
 use crate::metrics::MetricsRecorder;
-use crate::net::link::{CSP, TA, USER_BASE};
+use crate::net::link::{PartyId, CSP, USER_BASE};
+use crate::net::NetSim;
 use crate::protocol::fedsvd::{MaskRep, QSliceRep};
 use crate::protocol::{v_recovery, FedSvdConfig, FedSvdOutput, SvdMode};
 use crate::rng::Xoshiro256;
 use crate::secagg::{DhKeyPair, SecAggGroup};
+use crate::transport::wire::ClusterMsg as Msg;
+use crate::transport::{LocalTransport, TcpTransport, Transport};
 use crate::util::{Error, Result};
 
-use super::mailbox::Mailbox;
 use super::ooc::{ooc_svd, OocParams};
 use super::round::RoundScheduler;
 use super::shard::ShardStore;
@@ -85,6 +107,10 @@ impl Default for ClusterConfig {
 /// What the cluster run proved about itself, for reports and benches.
 #[derive(Debug, Clone)]
 pub struct ClusterStats {
+    /// Which fabric carried the messages: `"local-sim"` (mailboxes +
+    /// simulated metering), `"tcp-loopback"` (in-process real sockets)
+    /// or `"tcp"` (one party per OS process).
+    pub transport: &'static str,
     /// Shards actually ingested (after clamping).
     pub shards: usize,
     pub mem_budget: u64,
@@ -95,13 +121,17 @@ pub struct ClusterStats {
     pub shard_spills: u64,
     /// Bytes metered under each round label (see [`labels`]), sorted by
     /// label — the ledger the communication tests pin (e.g. FedSVD-LR
-    /// must carry no `U'` stream and no V-recovery rounds).
+    /// must carry no `U'` stream and no V-recovery rounds). Simulated
+    /// payload bytes on `local-sim`; real on-the-wire bytes (frame
+    /// headers included) on the TCP fabrics.
     pub round_traffic: Vec<(u64, u64)>,
+    /// Total bytes actually written to sockets (0 on `local-sim`).
+    pub real_bytes: u64,
 }
 
 /// Which §4 application rides on a cluster run — the app-specific rounds
-/// executed through the same scheduler/mailbox fabric as the core
-/// protocol, with all per-user post-processing inside the user threads.
+/// executed through the same transport fabric as the core protocol,
+/// with all per-user post-processing inside the user threads.
 pub enum ClusterApp<'a> {
     /// Raw FedSVD: no app rounds.
     None,
@@ -131,9 +161,6 @@ pub struct AppClusterOut {
     /// LSA: per-user doc-embedding blocks `Σᵣ^{1/2}·Vᵢᵀ` (r×nᵢ).
     pub doc_embeds: Vec<Mat>,
 }
-
-/// DH public key wire size (1536-bit MODP group element).
-const PK_BYTES: u64 = 1536 / 8;
 
 /// Round labels — disjoint bases; senders of a round depend only on
 /// earlier-labelled rounds, which is what keeps the scheduler's
@@ -167,105 +194,120 @@ pub mod labels {
     pub const PRED: u64 = 20_000_005;
 }
 
-enum Msg {
-    PSeed(SeedDelivery),
-    QSlice(BlockDiagSlice),
-    Pk { user: usize, public: BigUint },
-    PkList(Vec<BigUint>),
-    Batch { batch: usize, user: usize, share: Vec<u128> },
-    UBlock { r0: usize, data: Mat },
-    Sigma(Vec<f64>),
-    VReq { user: usize, blinded: BlockDiagSlice },
-    VResp(Mat),
-    /// LR: the masked label vector `y' = P·y` (label owner → CSP).
-    YMasked(Vec<f64>),
-    /// LR: the masked coefficient vector `w'` (CSP → every user).
-    WMasked(Vec<f64>),
-    /// LR: a partial prediction `Xᵢ·wᵢ` (non-owner user → label owner).
-    /// Tagged with the sender so the owner folds in user order — FP
-    /// addition is not associative, and arrival order is thread timing.
-    Pred { user: usize, pred: Vec<f64> },
-}
-
 fn proto(msg: &str) -> Error {
     Error::Protocol(format!("cluster: {msg}"))
 }
 
-fn meters(sched: &RoundScheduler) -> (f64, u64) {
-    sched.with_net(|n| (n.sim_elapsed_s(), n.total_bytes()))
+// ---------------------------------------------------------------------------
+// the party-side link: transport + hold-back queue
+// ---------------------------------------------------------------------------
+
+/// One party's view of the federation during a run.
+///
+/// Thin forwarding over [`Transport`] plus a hold-back queue:
+/// [`PartyLink::recv_where`] returns the first pending message matching
+/// the current protocol step and stashes the rest. On the simulated
+/// fabric the stash stays empty (global round serialization already
+/// orders deliveries); on real sockets it absorbs the legal cross-peer
+/// races — e.g. a fast user's shard upload arriving at the CSP before a
+/// slow user's DH key, or an LR partial prediction reaching the label
+/// owner ahead of the CSP's Σ broadcast.
+pub(crate) struct PartyLink<'a> {
+    t: &'a dyn Transport,
+    stash: std::cell::RefCell<VecDeque<Msg>>,
 }
 
-/// Run `body`, converting panics to errors; on any failure abort the
-/// scheduler and close every mailbox so peers unblock.
-fn party<T>(
-    sched: &RoundScheduler,
-    boxes: &[Mailbox<Msg>],
-    body: impl FnOnce() -> Result<T>,
-) -> Result<T> {
-    let r = std::panic::catch_unwind(AssertUnwindSafe(body))
-        .unwrap_or_else(|_| Err(Error::Runtime("cluster party panicked".into())));
-    if r.is_err() {
-        sched.abort();
-        for b in boxes {
-            b.close();
+impl<'a> PartyLink<'a> {
+    pub(crate) fn new(t: &'a dyn Transport) -> Self {
+        Self {
+            t,
+            stash: std::cell::RefCell::new(VecDeque::new()),
         }
+    }
+
+    fn enter(&self, label: u64, senders: usize) -> Result<()> {
+        self.t.round_enter(label, senders)
+    }
+
+    fn send(&self, to: PartyId, msg: Msg) -> Result<()> {
+        self.t.send(to, msg)
+    }
+
+    fn leave(&self, label: u64) -> Result<()> {
+        self.t.round_leave(label)
+    }
+
+    fn meters(&self) -> (f64, u64) {
+        self.t.meters()
+    }
+
+    /// Next message matching `want`; anything else waits its turn in
+    /// the stash. Control frames never reach here — the transports
+    /// turn them into `recv` errors.
+    fn recv_where(&self, want: impl Fn(&Msg) -> bool) -> Result<Msg> {
+        let mut stash = self.stash.borrow_mut();
+        if let Some(i) = stash.iter().position(&want) {
+            return Ok(stash.remove(i).expect("index in range"));
+        }
+        loop {
+            let msg = self.t.recv()?;
+            if want(&msg) {
+                return Ok(msg);
+            }
+            stash.push_back(msg);
+        }
+    }
+}
+
+/// Run `body` over `t` with panic containment; on failure abort the
+/// federation through the transport so peers unblock, on success tear
+/// the endpoint down cleanly.
+pub(crate) fn run_party<T>(
+    t: &dyn Transport,
+    body: impl FnOnce(&PartyLink<'_>) -> Result<T>,
+) -> Result<T> {
+    let link = PartyLink::new(t);
+    let r = std::panic::catch_unwind(AssertUnwindSafe(|| body(&link)))
+        .unwrap_or_else(|_| Err(Error::Runtime("cluster party panicked".into())));
+    match &r {
+        Ok(_) => t.close(),
+        Err(e) => t.abort(&e.to_string()),
     }
     r
 }
 
-fn join_party<T>(h: std::thread::ScopedJoinHandle<'_, Result<T>>) -> Result<T> {
-    h.join()
-        .unwrap_or_else(|_| Err(Error::Runtime("cluster party thread died".into())))
-}
-
-struct UserOut {
-    metrics: MetricsRecorder,
-    q_slice: BlockDiagSlice,
-    p: Option<BlockDiagMat>,
-    u_masked: Option<Mat>,
-    u: Option<Mat>,
-    vt_part: Option<Mat>,
+pub(crate) struct UserOut {
+    pub(crate) metrics: MetricsRecorder,
+    pub(crate) q_slice: crate::mask::block_diag::BlockDiagSlice,
+    pub(crate) p: Option<BlockDiagMat>,
+    pub(crate) sigma: Option<Vec<f64>>,
+    pub(crate) u_masked: Option<Mat>,
+    pub(crate) u: Option<Mat>,
+    pub(crate) vt_part: Option<Mat>,
     // per-user application results (see ClusterApp)
-    proj: Option<Mat>,
-    w_i: Option<Vec<f64>>,
-    mse: Option<f64>,
-    embed: Option<Mat>,
+    pub(crate) proj: Option<Mat>,
+    pub(crate) w_i: Option<Vec<f64>>,
+    pub(crate) mse: Option<f64>,
+    pub(crate) embed: Option<Mat>,
 }
 
-struct CspOut {
-    metrics: MetricsRecorder,
-    s: Vec<f64>,
-    vt: Mat,
-    peak: u64,
-    spills: u64,
+pub(crate) struct CspOut {
+    pub(crate) metrics: MetricsRecorder,
+    pub(crate) s: Vec<f64>,
+    pub(crate) vt: Mat,
+    pub(crate) peak: u64,
+    pub(crate) spills: u64,
 }
 
-/// Run FedSVD on the sharded multi-party runtime. Produces the same
-/// [`FedSvdOutput`] as [`crate::protocol::run_fedsvd_with_backend`] —
-/// the sequential path stays the reference oracle, and the cluster
-/// result matches it to ≤ 1e-9 on Σ (the masked matrix the CSP
-/// factorizes is bit-identical; only the solver differs).
-pub fn run_fedsvd_cluster(
+/// Shape/flag validation shared by every fabric (threads or processes).
+/// Returns `(k, m, widths, n, b, shard_rows, n_batches)`.
+#[allow(clippy::type_complexity)]
+pub(crate) fn validate_cluster_inputs(
     parts: &[Mat],
     cfg: &FedSvdConfig,
-    ccfg: &ClusterConfig,
-    backend: &dyn GemmBackend,
-) -> Result<(FedSvdOutput, ClusterStats)> {
-    let (out, stats, _) = run_app_cluster(parts, cfg, ccfg, backend, &ClusterApp::None)?;
-    Ok((out, stats))
-}
-
-/// [`run_fedsvd_cluster`] with an application riding on the run: the
-/// entry point the `apps` layer uses for `ExecMode::Cluster`. The third
-/// return value carries the per-user app results computed inside the
-/// user threads.
-pub fn run_app_cluster(
-    parts: &[Mat],
-    cfg: &FedSvdConfig,
-    ccfg: &ClusterConfig,
-    backend: &dyn GemmBackend,
+    shards: usize,
     app: &ClusterApp<'_>,
-) -> Result<(FedSvdOutput, ClusterStats, AppClusterOut)> {
+) -> Result<(usize, usize, Vec<usize>, usize, usize, usize, usize)> {
     let k = parts.len();
     if k < 2 {
         return Err(proto("needs at least 2 users (secure aggregation)"));
@@ -301,85 +343,233 @@ pub fn run_app_cluster(
         }
     }
     let b = cfg.block_size.max(1);
-    let shard_rows = m.div_ceil(ccfg.shards.max(1)).max(1);
+    let shard_rows = m.div_ceil(shards.max(1)).max(1);
     let n_batches = m.div_ceil(shard_rows);
+    Ok((k, m, widths, n, b, shard_rows, n_batches))
+}
+
+/// Run FedSVD on the sharded multi-party runtime (in-process threads
+/// over the simulated network). Produces the same [`FedSvdOutput`] as
+/// [`crate::protocol::run_fedsvd_with_backend`] — the sequential path
+/// stays the reference oracle, and the cluster result matches it to
+/// ≤ 1e-9 on Σ (the masked matrix the CSP factorizes is bit-identical;
+/// only the solver differs).
+pub fn run_fedsvd_cluster(
+    parts: &[Mat],
+    cfg: &FedSvdConfig,
+    ccfg: &ClusterConfig,
+    backend: &dyn GemmBackend,
+) -> Result<(FedSvdOutput, ClusterStats)> {
+    let (out, stats, _) = run_app_cluster(parts, cfg, ccfg, backend, &ClusterApp::None)?;
+    Ok((out, stats))
+}
+
+/// [`run_fedsvd_cluster`] with every message crossing a real loopback
+/// TCP socket (see [`run_app_cluster_tcp`]).
+pub fn run_fedsvd_cluster_tcp(
+    parts: &[Mat],
+    cfg: &FedSvdConfig,
+    ccfg: &ClusterConfig,
+    backend: &dyn GemmBackend,
+) -> Result<(FedSvdOutput, ClusterStats)> {
+    let (out, stats, _) = run_app_cluster_tcp(parts, cfg, ccfg, backend, &ClusterApp::None)?;
+    Ok((out, stats))
+}
+
+/// [`run_fedsvd_cluster`] with an application riding on the run: the
+/// entry point the `apps` layer uses for `ExecMode::Cluster`. The third
+/// return value carries the per-user app results computed inside the
+/// user threads.
+pub fn run_app_cluster(
+    parts: &[Mat],
+    cfg: &FedSvdConfig,
+    ccfg: &ClusterConfig,
+    backend: &dyn GemmBackend,
+    app: &ClusterApp<'_>,
+) -> Result<(FedSvdOutput, ClusterStats, AppClusterOut)> {
+    run_app_cluster_impl(parts, cfg, ccfg, backend, app, Fabric::Local)
+}
+
+/// [`run_app_cluster`] on real sockets: the same party threads, but
+/// every message is wire-encoded and carried over loopback TCP by
+/// [`TcpTransport`] on ephemeral ports. The bench/test harness for the
+/// wire path — results must match `run_app_cluster` (and therefore the
+/// sequential oracle) to FP level, while `round_traffic` reports real
+/// frame bytes. For true multi-process deployment see [`super::dist`].
+pub fn run_app_cluster_tcp(
+    parts: &[Mat],
+    cfg: &FedSvdConfig,
+    ccfg: &ClusterConfig,
+    backend: &dyn GemmBackend,
+    app: &ClusterApp<'_>,
+) -> Result<(FedSvdOutput, ClusterStats, AppClusterOut)> {
+    run_app_cluster_impl(parts, cfg, ccfg, backend, app, Fabric::TcpLoopback)
+}
+
+enum Fabric {
+    Local,
+    TcpLoopback,
+}
+
+/// Driver-side endpoint wrapper: keeps the concrete type around so the
+/// TCP ledgers can be read back after the party joins.
+enum Endpoint {
+    Local(LocalTransport),
+    Tcp(TcpTransport),
+}
+
+impl Endpoint {
+    fn as_transport(&self) -> &dyn Transport {
+        match self {
+            Endpoint::Local(t) => t,
+            Endpoint::Tcp(t) => t,
+        }
+    }
+
+    /// Real sent-bytes ledger (TCP only): summing these across all
+    /// endpoints counts each wire byte exactly once.
+    fn sent_ledger(&self) -> Option<Vec<(u64, u64)>> {
+        match self {
+            Endpoint::Local(_) => None,
+            Endpoint::Tcp(t) => Some(t.sent_ledger()),
+        }
+    }
+}
+
+type Ledger = Option<Vec<(u64, u64)>>;
+
+fn join_party<T>(
+    h: std::thread::ScopedJoinHandle<'_, (Result<T>, Ledger)>,
+) -> (Result<T>, Ledger) {
+    h.join().unwrap_or_else(|_| {
+        (
+            Err(Error::Runtime("cluster party thread died".into())),
+            None,
+        )
+    })
+}
+
+fn run_app_cluster_impl(
+    parts: &[Mat],
+    cfg: &FedSvdConfig,
+    ccfg: &ClusterConfig,
+    backend: &dyn GemmBackend,
+    app: &ClusterApp<'_>,
+    fabric: Fabric,
+) -> Result<(FedSvdOutput, ClusterStats, AppClusterOut)> {
+    let (k, m, widths, n, b, shard_rows, n_batches) =
+        validate_cluster_inputs(parts, cfg, ccfg.shards, app)?;
     let spill_root = ccfg
         .spill_root
         .clone()
         .unwrap_or_else(std::env::temp_dir);
     let mem_budget = ccfg.mem_budget;
 
-    let sched = Arc::new(RoundScheduler::new(cfg.link));
-    let csp_box: Mailbox<Msg> = Mailbox::new();
-    let user_boxes: Vec<Mailbox<Msg>> = (0..k).map(|_| Mailbox::new()).collect();
-    let all_boxes: Vec<Mailbox<Msg>> = std::iter::once(csp_box.clone())
-        .chain(user_boxes.iter().cloned())
-        .collect();
+    // ---- build one endpoint per party ---------------------------------
+    let (endpoints, sched): (Vec<Endpoint>, Option<Arc<RoundScheduler>>) = match fabric {
+        Fabric::Local => {
+            let (eps, sched) = LocalTransport::fabric(k, cfg.link);
+            (eps.into_iter().map(Endpoint::Local).collect(), Some(sched))
+        }
+        Fabric::TcpLoopback => {
+            let session = cfg.seed ^ 0x7c97_10c4;
+            let mut eps = Vec::with_capacity(k + 2);
+            for pid in 0..k + 2 {
+                eps.push(TcpTransport::bind("127.0.0.1:0", pid, session)?);
+            }
+            let addrs: HashMap<PartyId, String> = eps
+                .iter()
+                .map(|t| (t.party(), t.local_addr().to_string()))
+                .collect();
+            for t in &eps {
+                t.set_peers(addrs.clone())?;
+            }
+            (eps.into_iter().map(Endpoint::Tcp).collect(), None)
+        }
+    };
+    let mut ep_iter = endpoints.into_iter();
+    let ta_ep = ep_iter.next().expect("TA endpoint");
+    let csp_ep = ep_iter.next().expect("CSP endpoint");
+    let user_eps: Vec<Endpoint> = ep_iter.collect();
 
-    let (ta_res, csp_res, users_res) = std::thread::scope(|scope| {
-        // ---- TA ----------------------------------------------------------
+    // ---- run the parties ----------------------------------------------
+    let ((ta_res, ta_led), (csp_res, csp_led), users_res) = std::thread::scope(|scope| {
         let ta_handle = {
-            let sched = Arc::clone(&sched);
-            let user_boxes = user_boxes.clone();
-            let all_boxes = all_boxes.clone();
             let widths = widths.clone();
             scope.spawn(move || {
-                party(&sched, &all_boxes, || {
-                    ta_body(&sched, &user_boxes, &widths, cfg, m, n, b)
-                })
+                let r = run_party(ta_ep.as_transport(), |link| {
+                    ta_body(link, &widths, cfg, m, n, b)
+                });
+                (r, ta_ep.sent_ledger())
             })
         };
 
-        // ---- CSP ---------------------------------------------------------
-        let csp_handle = {
-            let sched = Arc::clone(&sched);
-            let csp_box = csp_box.clone();
-            let user_boxes = user_boxes.clone();
-            let all_boxes = all_boxes.clone();
-            let spill_root = spill_root.clone();
-            scope.spawn(move || {
-                party(&sched, &all_boxes, || {
-                    csp_body(
-                        &sched, &csp_box, &user_boxes, cfg, backend, app, k, n, n_batches,
-                        shard_rows, mem_budget, &spill_root,
-                    )
-                })
-            })
-        };
+        let csp_handle = scope.spawn(move || {
+            let r = run_party(csp_ep.as_transport(), |link| {
+                csp_body(
+                    link, cfg, backend, app, k, n, n_batches, shard_rows, mem_budget,
+                    &spill_root,
+                )
+            });
+            (r, csp_ep.sent_ledger())
+        });
 
-        // ---- users -------------------------------------------------------
-        let user_handles: Vec<_> = (0..k)
-            .map(|i| {
-                let sched = Arc::clone(&sched);
-                let user_boxes = user_boxes.clone();
-                let csp_box = csp_box.clone();
-                let all_boxes = all_boxes.clone();
+        let user_handles: Vec<_> = user_eps
+            .into_iter()
+            .enumerate()
+            .map(|(i, ep)| {
                 scope.spawn(move || {
-                    party(&sched, &all_boxes, || {
+                    let r = run_party(ep.as_transport(), |link| {
                         user_body(
-                            &sched, &user_boxes, &csp_box, cfg, backend, app, &parts[i],
-                            i, k, m, n_batches, shard_rows,
+                            link, cfg, backend, app, &parts[i], i, k, m, n_batches,
+                            shard_rows,
                         )
-                    })
+                    });
+                    (r, ep.sent_ledger())
                 })
             })
             .collect();
 
         let ta_r = join_party(ta_handle);
         let csp_r = join_party(csp_handle);
-        let users_r: Vec<Result<UserOut>> =
+        let users_r: Vec<(Result<UserOut>, Ledger)> =
             user_handles.into_iter().map(join_party).collect();
         (ta_r, csp_r, users_r)
     });
 
     let ta_metrics = ta_res?;
     let csp_out = csp_res?;
-    let users_out = users_res.into_iter().collect::<Result<Vec<UserOut>>>()?;
+    let (user_results, user_leds): (Vec<Result<UserOut>>, Vec<Ledger>) =
+        users_res.into_iter().unzip();
+    let users_out = user_results.into_iter().collect::<Result<Vec<UserOut>>>()?;
 
-    let round_traffic = sched.labelled_bytes();
-    let net = Arc::try_unwrap(sched)
-        .map_err(|_| Error::Runtime("round scheduler still shared after join".into()))?
-        .into_net();
+    // ---- traffic accounting per fabric --------------------------------
+    let (transport_name, round_traffic, real_bytes, net) = match sched {
+        Some(sched) => {
+            let rt = sched.labelled_bytes();
+            let net = Arc::try_unwrap(sched)
+                .map_err(|_| Error::Runtime("round scheduler still shared after join".into()))?
+                .into_net();
+            ("local-sim", rt, 0u64, net)
+        }
+        None => {
+            let mut merged: HashMap<u64, u64> = HashMap::new();
+            for led in std::iter::once(ta_led)
+                .chain(std::iter::once(csp_led))
+                .chain(user_leds)
+                .flatten()
+            {
+                for (l, bytes) in led {
+                    *merged.entry(l).or_insert(0) += bytes;
+                }
+            }
+            let total: u64 = merged.values().sum();
+            let mut rt: Vec<(u64, u64)> = merged.into_iter().collect();
+            rt.sort_unstable();
+            // real sockets carry no simulated clock: net stays zeroed
+            ("tcp-loopback", rt, total, NetSim::new(cfg.link))
+        }
+    };
 
     let mut metrics = MetricsRecorder::new();
     metrics.absorb_prefixed("ta", &ta_metrics);
@@ -418,11 +608,13 @@ pub fn run_app_cluster(
     let p = p_opt.ok_or_else(|| Error::Runtime("user 0 did not return P".into()))?;
 
     let stats = ClusterStats {
+        transport: transport_name,
         shards: n_batches,
         mem_budget,
         csp_peak_matrix_bytes: csp_out.peak,
         shard_spills: csp_out.spills,
         round_traffic,
+        real_bytes,
     };
     let out = FedSvdOutput {
         u,
@@ -447,57 +639,52 @@ pub fn run_app_cluster(
 // party bodies
 // ---------------------------------------------------------------------------
 
-fn ta_body(
-    sched: &RoundScheduler,
-    user_boxes: &[Mailbox<Msg>],
+pub(crate) fn ta_body(
+    link: &PartyLink<'_>,
     widths: &[usize],
     cfg: &FedSvdConfig,
     m: usize,
     n: usize,
     b: usize,
 ) -> Result<MetricsRecorder> {
+    let k = widths.len();
     let mut metrics = MetricsRecorder::new();
     // identical first draws to the sequential oracle ⇒ identical masks
     let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
     let p_seed = rng.next_u64();
     let q_seed = rng.next_u64();
 
-    let (n0, b0) = meters(sched);
+    let (n0, b0) = link.meters();
     metrics.begin("step1: mask init+delivery", n0, b0);
-    sched.enter(labels::PSEED, 1)?;
-    for (i, ub) in user_boxes.iter().enumerate() {
+    link.enter(labels::PSEED, 1)?;
+    for i in 0..k {
         let d = SeedDelivery {
             seed: p_seed,
             dim: m,
             block: b,
         };
-        sched.send(TA, USER_BASE + i, d.wire_bytes());
-        ub.post(Msg::PSeed(d));
+        link.send(USER_BASE + i, Msg::PSeed(d))?;
     }
-    sched.leave(labels::PSEED)?;
+    link.leave(labels::PSEED)?;
 
     let q = block_orthogonal(n, b, q_seed)?;
-    sched.enter(labels::QSLICE, 1)?;
+    link.enter(labels::QSLICE, 1)?;
     let mut c0 = 0usize;
-    for (i, ub) in user_boxes.iter().enumerate() {
-        let s = q.row_slice(c0, c0 + widths[i])?;
-        let d = SliceDelivery { slice: s };
-        sched.send(TA, USER_BASE + i, d.wire_bytes());
-        ub.post(Msg::QSlice(d.slice));
-        c0 += widths[i];
+    for (i, w) in widths.iter().enumerate() {
+        let s = q.row_slice(c0, c0 + w)?;
+        link.send(USER_BASE + i, Msg::QSlice(s))?;
+        c0 += w;
     }
-    sched.leave(labels::QSLICE)?;
-    let (n1, b1) = meters(sched);
+    link.leave(labels::QSLICE)?;
+    let (n1, b1) = link.meters();
     metrics.end(n1, b1);
     // the TA goes offline here (paper §3.5) — it receives nothing
     Ok(metrics)
 }
 
 #[allow(clippy::too_many_arguments)]
-fn user_body(
-    sched: &RoundScheduler,
-    user_boxes: &[Mailbox<Msg>],
-    csp_box: &Mailbox<Msg>,
+pub(crate) fn user_body(
+    link: &PartyLink<'_>,
     cfg: &FedSvdConfig,
     backend: &dyn GemmBackend,
     app: &ClusterApp<'_>,
@@ -508,38 +695,38 @@ fn user_body(
     n_batches: usize,
     shard_rows: usize,
 ) -> Result<UserOut> {
-    let inbox = &user_boxes[i];
     let mut metrics = MetricsRecorder::new();
-    let uid = USER_BASE + i;
     let mut rng = Xoshiro256::seed_from_u64(cfg.seed).derive(0x75e2 + i as u64);
 
     // ---- step 1: receive masks ----------------------------------------
-    let Msg::PSeed(pd) = inbox.recv()? else {
+    let Msg::PSeed(pd) = link.recv_where(|mg| matches!(mg, Msg::PSeed(_)))? else {
         return Err(proto("expected P seed"));
     };
-    let Msg::QSlice(qi) = inbox.recv()? else {
+    let Msg::QSlice(qi) = link.recv_where(|mg| matches!(mg, Msg::QSlice(_)))? else {
         return Err(proto("expected Q slice"));
     };
     let p = pd.expand()?;
 
     // ---- step 2: mask the local part ----------------------------------
-    let (n0, b0) = meters(sched);
+    let (n0, b0) = link.meters();
     metrics.begin("step2: mask share", n0, b0);
     let xi_masked = mask_matrix_with(&p, xi, &qi, backend)?;
-    let (n1, b1) = meters(sched);
+    let (n1, b1) = link.meters();
     metrics.end(n1, b1);
 
     // ---- step 2: secagg key agreement + sharded upload ----------------
     metrics.begin("step2: secagg upload", n1, b1);
     let key = DhKeyPair::generate(&mut rng);
-    sched.enter(labels::PK, k)?;
-    sched.send(uid, CSP, PK_BYTES);
-    sched.leave(labels::PK)?;
-    csp_box.post(Msg::Pk {
-        user: i,
-        public: key.public.clone(),
-    });
-    let Msg::PkList(pks) = inbox.recv()? else {
+    link.enter(labels::PK, k)?;
+    link.send(
+        CSP,
+        Msg::Pk {
+            user: i,
+            public: key.public.clone(),
+        },
+    )?;
+    link.leave(labels::PK)?;
+    let Msg::PkList(pks) = link.recv_where(|mg| matches!(mg, Msg::PkList(_)))? else {
         return Err(proto("expected public-key list"));
     };
     if pks.len() != k {
@@ -564,28 +751,28 @@ fn user_body(
             flat.extend_from_slice(xi_masked.row(r));
         }
         let share = group.mask_share(i, &flat, t as u64)?;
-        let bytes = (share.len() * 16) as u64;
-        sched.enter(labels::UPLOAD_BASE + t as u64, k)?;
-        sched.send(uid, CSP, bytes);
-        sched.leave(labels::UPLOAD_BASE + t as u64)?;
-        csp_box.post(Msg::Batch {
-            batch: t,
-            user: i,
-            share,
-        });
+        link.enter(labels::UPLOAD_BASE + t as u64, k)?;
+        link.send(
+            CSP,
+            Msg::Batch {
+                batch: t,
+                user: i,
+                share,
+            },
+        )?;
+        link.leave(labels::UPLOAD_BASE + t as u64)?;
     }
     // LR app round: the label owner masks its labels with the very same
     // P and uploads y' = P·y right behind its last shard
     if let ClusterApp::Lr { y, label_owner } = app {
         if i == *label_owner {
             let y_masked = crate::mask::apply::mask_vector(&p, y)?;
-            sched.enter(labels::Y_UPLOAD, 1)?;
-            sched.send(uid, CSP, (y_masked.len() * 8) as u64);
-            sched.leave(labels::Y_UPLOAD)?;
-            csp_box.post(Msg::YMasked(y_masked));
+            link.enter(labels::Y_UPLOAD, 1)?;
+            link.send(CSP, Msg::YMasked(y_masked))?;
+            link.leave(labels::Y_UPLOAD)?;
         }
     }
-    let (n2, b2) = meters(sched);
+    let (n2, b2) = link.meters();
     metrics.end(n2, b2);
 
     // ---- step 4: receive Σ + streamed U' blocks -----------------------
@@ -597,7 +784,7 @@ fn user_body(
     let mut um: Option<Mat> = None;
     let mut got_rows = 0usize;
     while sigma.is_none() || (cfg.recover_u && got_rows < m) {
-        match inbox.recv()? {
+        match link.recv_where(|mg| matches!(mg, Msg::Sigma(_) | Msg::UBlock { .. }))? {
             Msg::Sigma(s) => sigma = Some(s),
             Msg::UBlock { r0, data } => {
                 got_rows += data.rows();
@@ -623,16 +810,15 @@ fn user_body(
     let mut vt_part = None;
     if cfg.recover_v {
         let (ri, blinded) = v_recovery::blind_qit(&qi, &mut rng)?;
-        sched.enter(labels::VREQ, k)?;
-        sched.send(uid, CSP, blinded.payload_bytes());
-        sched.leave(labels::VREQ)?;
-        csp_box.post(Msg::VReq { user: i, blinded });
-        let Msg::VResp(bv) = inbox.recv()? else {
+        link.enter(labels::VREQ, k)?;
+        link.send(CSP, Msg::VReq { user: i, blinded })?;
+        link.leave(labels::VREQ)?;
+        let Msg::VResp(bv) = link.recv_where(|mg| matches!(mg, Msg::VResp(_)))? else {
             return Err(proto("expected blinded V response"));
         };
         vt_part = Some(v_recovery::unblind_vit(&bv, &ri)?);
     }
-    let (n3, b3) = meters(sched);
+    let (n3, b3) = link.meters();
     metrics.end(n3, b3);
 
     // ---- application post-processing (paper §4), local to this user ---
@@ -643,26 +829,26 @@ fn user_body(
     match app {
         ClusterApp::None => {}
         ClusterApp::Pca => {
-            let (na, ba) = meters(sched);
+            let (na, ba) = link.meters();
             metrics.begin("app: local projection", na, ba);
             let ur = u.as_ref().ok_or_else(|| proto("pca: U not recovered"))?;
             proj = Some(ur.t_mul(xi)?);
-            let (nb, bb) = meters(sched);
+            let (nb, bb) = link.meters();
             metrics.end(nb, bb);
         }
         ClusterApp::Lsa => {
-            let (na, ba) = meters(sched);
+            let (na, ba) = link.meters();
             metrics.begin("app: local embeddings", na, ba);
             let vp = vt_part
                 .as_ref()
                 .ok_or_else(|| proto("lsa: Vᵢᵀ not recovered"))?;
             let s = sigma.as_ref().ok_or_else(|| proto("lsa: Σ not received"))?;
             embed = Some(crate::apps::lsa::embed_block(s, vp));
-            let (nb, bb) = meters(sched);
+            let (nb, bb) = link.meters();
             metrics.end(nb, bb);
         }
         ClusterApp::Lr { y, label_owner } => {
-            let (na, ba) = meters(sched);
+            let (na, ba) = link.meters();
             metrics.begin("app: recover model", na, ba);
             if i == *label_owner {
                 // w' and the k−1 partial predictions interleave freely in
@@ -671,7 +857,9 @@ fn user_body(
                 let mut preds: Vec<Option<Vec<f64>>> = (0..k).map(|_| None).collect();
                 let mut got = 0usize;
                 while w_masked.is_none() || got < k - 1 {
-                    match inbox.recv()? {
+                    match link
+                        .recv_where(|mg| matches!(mg, Msg::WMasked(_) | Msg::Pred { .. }))?
+                    {
                         Msg::WMasked(w) => {
                             if w_masked.replace(w).is_some() {
                                 return Err(proto("duplicate masked coefficients"));
@@ -714,18 +902,18 @@ fn user_body(
                 );
                 w_i = Some(wi);
             } else {
-                let Msg::WMasked(wm) = inbox.recv()? else {
+                let Msg::WMasked(wm) = link.recv_where(|mg| matches!(mg, Msg::WMasked(_)))?
+                else {
                     return Err(proto("expected masked coefficients"));
                 };
                 let wi = crate::protocol::fedsvd::block_q_mul_vec(&qi, &wm, backend)?;
                 let pi = xi.mul_vec(&wi)?;
-                sched.enter(labels::PRED, k - 1)?;
-                sched.send(uid, USER_BASE + *label_owner, (m * 8) as u64);
-                sched.leave(labels::PRED)?;
-                user_boxes[*label_owner].post(Msg::Pred { user: i, pred: pi });
+                link.enter(labels::PRED, k - 1)?;
+                link.send(USER_BASE + *label_owner, Msg::Pred { user: i, pred: pi })?;
+                link.leave(labels::PRED)?;
                 w_i = Some(wi);
             }
-            let (nb, bb) = meters(sched);
+            let (nb, bb) = link.meters();
             metrics.end(nb, bb);
         }
     }
@@ -740,6 +928,7 @@ fn user_body(
         metrics,
         q_slice: qi,
         p: (i == 0).then_some(p),
+        sigma,
         u_masked,
         u,
         vt_part,
@@ -751,10 +940,8 @@ fn user_body(
 }
 
 #[allow(clippy::too_many_arguments)]
-fn csp_body(
-    sched: &RoundScheduler,
-    inbox: &Mailbox<Msg>,
-    user_boxes: &[Mailbox<Msg>],
+pub(crate) fn csp_body(
+    link: &PartyLink<'_>,
     cfg: &FedSvdConfig,
     backend: &dyn GemmBackend,
     app: &ClusterApp<'_>,
@@ -769,11 +956,12 @@ fn csp_body(
     let lr_mode = matches!(app, ClusterApp::Lr { .. });
 
     // ---- secagg bulletin board ----------------------------------------
-    let (n0, b0) = meters(sched);
+    let (n0, b0) = link.meters();
     metrics.begin("step2: secagg key board", n0, b0);
     let mut pks: Vec<Option<BigUint>> = (0..k).map(|_| None).collect();
     for _ in 0..k {
-        let Msg::Pk { user, public } = inbox.recv()? else {
+        let Msg::Pk { user, public } = link.recv_where(|mg| matches!(mg, Msg::Pk { .. }))?
+        else {
             return Err(proto("expected a public key"));
         };
         if user >= k || pks[user].replace(public).is_some() {
@@ -784,13 +972,12 @@ fn csp_body(
         .into_iter()
         .map(|p| p.ok_or_else(|| proto("missing public key")))
         .collect::<Result<_>>()?;
-    sched.enter(labels::PKLIST, 1)?;
-    for (j, ub) in user_boxes.iter().enumerate() {
-        sched.send(CSP, USER_BASE + j, PK_BYTES * k as u64);
-        ub.post(Msg::PkList(pk_list.clone()));
+    link.enter(labels::PKLIST, 1)?;
+    for j in 0..k {
+        link.send(USER_BASE + j, Msg::PkList(pk_list.clone()))?;
     }
-    sched.leave(labels::PKLIST)?;
-    let (n1, b1) = meters(sched);
+    link.leave(labels::PKLIST)?;
+    let (n1, b1) = link.meters();
     metrics.end(n1, b1);
 
     // ---- shard ingest: aggregate as uploads complete ------------------
@@ -801,7 +988,7 @@ fn csp_body(
     let mut y_masked: Option<Vec<f64>> = None;
     let mut next = 0usize;
     while next < n_batches {
-        match inbox.recv()? {
+        match link.recv_where(|mg| matches!(mg, Msg::Batch { .. } | Msg::YMasked(_)))? {
             Msg::Batch { batch, user, share } => {
                 if batch >= n_batches || user >= k {
                     return Err(proto("batch out of range"));
@@ -845,7 +1032,7 @@ fn csp_body(
     }
     if lr_mode && y_masked.is_none() {
         // the label owner uploads behind its last shard — drain it now
-        match inbox.recv()? {
+        match link.recv_where(|mg| matches!(mg, Msg::YMasked(_)))? {
             Msg::YMasked(yv) => y_masked = Some(yv),
             _ => return Err(proto("expected the masked label upload")),
         }
@@ -859,7 +1046,7 @@ fn csp_body(
             )));
         }
     }
-    let (n2, b2) = meters(sched);
+    let (n2, b2) = link.meters();
     metrics.end(n2, b2);
 
     // ---- step 3: out-of-core SVD, streaming U' back -------------------
@@ -898,66 +1085,67 @@ fn csp_body(
                 }
             }
             if cfg.recover_u {
-                let bytes = (blk.rows() * blk.cols() * 8) as u64;
-                sched.enter(labels::UBLOCK_BASE + chunk_no, 1)?;
-                for (j, ub) in user_boxes.iter().enumerate() {
-                    sched.send(CSP, USER_BASE + j, bytes);
-                    ub.post(Msg::UBlock {
-                        r0,
-                        data: blk.clone(),
-                    });
+                link.enter(labels::UBLOCK_BASE + chunk_no, 1)?;
+                for j in 0..k {
+                    link.send(
+                        USER_BASE + j,
+                        Msg::UBlock {
+                            r0,
+                            data: blk.clone(),
+                        },
+                    )?;
                 }
-                sched.leave(labels::UBLOCK_BASE + chunk_no)?;
+                link.leave(labels::UBLOCK_BASE + chunk_no)?;
                 chunk_no += 1;
             }
             Ok(())
         },
     )?;
-    let (n3, b3) = meters(sched);
+    let (n3, b3) = link.meters();
     metrics.end(n3, b3);
 
     // ---- step 4: Σ broadcast + blinded V recovery service -------------
     metrics.begin("step4: deliver results", n3, b3);
-    sched.enter(labels::SIGMA, 1)?;
-    for (j, ub) in user_boxes.iter().enumerate() {
-        sched.send(CSP, USER_BASE + j, (ooc.s.len() * 8) as u64);
-        ub.post(Msg::Sigma(ooc.s.clone()));
+    link.enter(labels::SIGMA, 1)?;
+    for j in 0..k {
+        link.send(USER_BASE + j, Msg::Sigma(ooc.s.clone()))?;
     }
-    sched.leave(labels::SIGMA)?;
+    link.leave(labels::SIGMA)?;
 
     if lr_mode {
         // w' = V'·Σ⁺·(U'ᵀ·y'), with the pseudo-inverse cutoff shared
         // with the sequential path — broadcast to every user
         let scaled = crate::protocol::fedsvd::pinv_scale(&ooc.s, &uty);
         let w_masked = ooc.vt.t_mul_vec(&scaled)?;
-        sched.enter(labels::W_BCAST, 1)?;
-        for (j, ub) in user_boxes.iter().enumerate() {
-            sched.send(CSP, USER_BASE + j, (w_masked.len() * 8) as u64);
-            ub.post(Msg::WMasked(w_masked.clone()));
+        link.enter(labels::W_BCAST, 1)?;
+        for j in 0..k {
+            link.send(USER_BASE + j, Msg::WMasked(w_masked.clone()))?;
         }
-        sched.leave(labels::W_BCAST)?;
+        link.leave(labels::W_BCAST)?;
     }
 
     if cfg.recover_v {
-        let mut reqs: Vec<Option<BlockDiagSlice>> = (0..k).map(|_| None).collect();
+        let mut reqs: Vec<Option<crate::mask::block_diag::BlockDiagSlice>> =
+            (0..k).map(|_| None).collect();
         for _ in 0..k {
-            let Msg::VReq { user, blinded } = inbox.recv()? else {
+            let Msg::VReq { user, blinded } =
+                link.recv_where(|mg| matches!(mg, Msg::VReq { .. }))?
+            else {
                 return Err(proto("expected a blinded V request"));
             };
             if user >= k || reqs[user].replace(blinded).is_some() {
                 return Err(proto("bad or duplicate V request"));
             }
         }
-        sched.enter(labels::VRESP, 1)?;
-        for (j, ub) in user_boxes.iter().enumerate() {
-            let blinded = reqs[j].take().expect("all requests collected");
+        link.enter(labels::VRESP, 1)?;
+        for (j, req) in reqs.iter_mut().enumerate() {
+            let blinded = req.take().expect("all requests collected");
             let bv = v_recovery::csp_blind_vit(&ooc.vt, &blinded, backend)?;
-            sched.send(CSP, USER_BASE + j, (bv.rows() * bv.cols() * 8) as u64);
-            ub.post(Msg::VResp(bv));
+            link.send(USER_BASE + j, Msg::VResp(bv))?;
         }
-        sched.leave(labels::VRESP)?;
+        link.leave(labels::VRESP)?;
     }
-    let (n4, b4) = meters(sched);
+    let (n4, b4) = link.meters();
     metrics.end(n4, b4);
 
     Ok(CspOut {

@@ -16,12 +16,16 @@
 use crate::apps::lr::{run_federated_lr, run_federated_lr_cluster, LrOutput};
 use crate::apps::lsa::{run_federated_lsa, run_federated_lsa_cluster, LsaOutput};
 use crate::apps::pca::{run_federated_pca, run_federated_pca_cluster, PcaOutput};
-use crate::cluster::{run_fedsvd_cluster, ClusterConfig, ClusterStats};
+use crate::cluster::{
+    run_fedsvd_cluster, run_party_distributed, ClusterApp, ClusterConfig, ClusterStats,
+    DistConfig, DistOutcome, PartyRole, PeerSpec,
+};
 use crate::linalg::{CpuBackend, GemmBackend, Mat};
+use crate::metrics::MetricsRecorder;
 use crate::protocol::{run_fedsvd_with_backend, FedSvdConfig, FedSvdOutput};
 #[cfg(feature = "pjrt")]
 use crate::runtime::TileEngine;
-use crate::util::Result;
+use crate::util::{Error, Result};
 
 /// Which compute backend a session uses for dense products.
 pub enum KernelChoice {
@@ -59,6 +63,13 @@ impl KernelChoice {
 ///   shards to disk). Results match the sequential oracle to ≤ 1e-9
 ///   relative error on Σ and U/V up to sign; the report additionally
 ///   carries [`ClusterStats`] proving the CSP stayed under budget.
+/// * [`ExecMode::Distributed`] — this process is **one party** of a
+///   federation of separate OS processes exchanging wire frames over
+///   TCP ([`crate::cluster::dist`]). Because a single process only ever
+///   holds its own role's view, the entry point is
+///   [`Session::run_distributed`] (returning that partial view); the
+///   whole-federation methods below reject this mode. Launch peers with
+///   `fedsvd serve`.
 #[derive(Debug, Clone)]
 pub enum ExecMode {
     Sequential,
@@ -69,6 +80,28 @@ pub enum ExecMode {
         /// masked matrix).
         mem_budget: u64,
     },
+    Distributed {
+        /// Which party this process plays.
+        role: PartyRole,
+        /// Listen address (`host:0` binds an ephemeral port).
+        listen: String,
+        /// Peer address book or rendezvous directory.
+        peers: PeerSpec,
+        /// Row-shard count for the masked-matrix upload/ingest.
+        shards: usize,
+        /// CSP matrix-memory budget in bytes.
+        mem_budget: u64,
+    },
+}
+
+/// Which workload a distributed party runs (mirrors the `run_*`
+/// whole-federation methods; every process of a federation must pass
+/// the same task).
+pub enum DistTask<'a> {
+    Svd,
+    Pca { rank: usize },
+    Lr { y: &'a [f64], label_owner: usize },
+    Lsa { rank: usize },
 }
 
 /// A configured FedSVD session.
@@ -171,7 +204,9 @@ impl Session {
         // overstate elapsed time ~(k+2)×; report the session-level clock
         let wall_s = match &self.exec {
             ExecMode::Sequential => protocol.metrics.total_wall_s(),
-            ExecMode::Cluster { .. } => t0.elapsed().as_secs_f64(),
+            ExecMode::Cluster { .. } | ExecMode::Distributed { .. } => {
+                t0.elapsed().as_secs_f64()
+            }
         };
         SessionReport {
             kernel: self.kernel.name(),
@@ -198,6 +233,7 @@ impl Session {
                     run_fedsvd_cluster(parts, &self.cfg, &ccfg, self.kernel.as_backend())?;
                 (out, Some(stats))
             }
+            ExecMode::Distributed { .. } => return Err(Self::distributed_misuse()),
         };
         let report = self.report(&out, cluster, t0);
         Ok((out, report))
@@ -223,6 +259,7 @@ impl Session {
                 )?;
                 (out, Some(stats))
             }
+            ExecMode::Distributed { .. } => return Err(Self::distributed_misuse()),
         };
         let report = self.report(&out.protocol, cluster, t0);
         Ok((out, report))
@@ -254,6 +291,7 @@ impl Session {
                 )?;
                 (out, Some(stats))
             }
+            ExecMode::Distributed { .. } => return Err(Self::distributed_misuse()),
         };
         let report = self.report(&out.protocol, cluster, t0);
         Ok((out, report))
@@ -279,8 +317,94 @@ impl Session {
                 )?;
                 (out, Some(stats))
             }
+            ExecMode::Distributed { .. } => return Err(Self::distributed_misuse()),
         };
         let report = self.report(&out.protocol, cluster, t0);
+        Ok((out, report))
+    }
+
+    fn distributed_misuse() -> Error {
+        Error::Config(
+            "distributed mode runs one party per process and cannot return the \
+             whole-federation output: use Session::run_distributed (or launch \
+             parties with `fedsvd serve`)"
+                .into(),
+        )
+    }
+
+    /// Run this process's party of a multi-process federation
+    /// (`ExecMode::Distributed`). Peers must be launched with the same
+    /// config/seed and the same `task` — e.g. via `fedsvd serve`.
+    ///
+    /// `parts` is the deterministic demo derivation of every user's
+    /// block (each process only touches its own role's slice). Returns
+    /// this party's [`DistOutcome`] — its partial, paper-visibility view
+    /// of the result — plus a [`SessionReport`] whose traffic numbers
+    /// are **real on-the-wire bytes** (`net_s` is 0: nothing is
+    /// simulated on this path).
+    pub fn run_distributed(
+        &self,
+        parts: &[Mat],
+        task: DistTask<'_>,
+    ) -> Result<(DistOutcome, SessionReport)> {
+        let ExecMode::Distributed {
+            role,
+            listen,
+            peers,
+            shards,
+            mem_budget,
+        } = &self.exec
+        else {
+            return Err(Error::Config(
+                "run_distributed requires ExecMode::Distributed".into(),
+            ));
+        };
+        let t0 = std::time::Instant::now();
+        // the same task→protocol-flag mapping as the apps layer, so a
+        // distributed federation reproduces the Sequential/Cluster runs
+        let (app_cfg, app) = match task {
+            DistTask::Svd => (self.cfg.clone(), ClusterApp::None),
+            DistTask::Pca { rank } => (
+                crate::apps::pca::pca_config(parts, rank, &self.cfg)?,
+                ClusterApp::Pca,
+            ),
+            DistTask::Lr { y, label_owner } => {
+                crate::apps::lr::validate_lr(parts, y, label_owner)?;
+                (
+                    crate::apps::lr::lr_config(&self.cfg),
+                    ClusterApp::Lr { y, label_owner },
+                )
+            }
+            DistTask::Lsa { rank } => (
+                crate::apps::lsa::lsa_config(parts, rank, &self.cfg)?,
+                ClusterApp::Lsa,
+            ),
+        };
+        let mut dcfg = DistConfig::new(*role, listen.clone(), peers.clone());
+        dcfg.session = self.cfg.seed;
+        dcfg.shards = *shards;
+        dcfg.mem_budget = *mem_budget;
+        let out =
+            run_party_distributed(parts, &app_cfg, &dcfg, self.kernel.as_backend(), &app)?;
+        let mut metrics = MetricsRecorder::new();
+        metrics.absorb_prefixed(&out.role.name(), &out.metrics);
+        let report = SessionReport {
+            kernel: self.kernel.name(),
+            wall_s: t0.elapsed().as_secs_f64(),
+            net_s: 0.0,
+            total_bytes: out.real_bytes,
+            phase_table: metrics.table(),
+            singular_values: out.sigma.clone(),
+            cluster: Some(ClusterStats {
+                transport: "tcp",
+                shards: out.shards,
+                mem_budget: *mem_budget,
+                csp_peak_matrix_bytes: out.csp_peak_matrix_bytes,
+                shard_spills: out.shard_spills,
+                round_traffic: out.round_traffic.clone(),
+                real_bytes: out.real_bytes,
+            }),
+        };
         Ok((out, report))
     }
 }
@@ -361,6 +485,29 @@ mod tests {
         let (sc, rep) = clu.run_lsa(&parts, 3).unwrap();
         assert_eq!(sc.doc_embeds.len(), 2);
         assert!(rep.cluster.is_some());
+    }
+
+    #[test]
+    fn distributed_mode_rejects_whole_federation_entry_points() {
+        use crate::cluster::{PartyRole, PeerSpec};
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let parts = split_columns(&Mat::gaussian(8, 4, &mut rng), 2).unwrap();
+        let s = Session::cpu(FedSvdConfig::default()).with_exec(ExecMode::Distributed {
+            role: PartyRole::Csp,
+            listen: "127.0.0.1:0".into(),
+            peers: PeerSpec::Addrs(Vec::new()),
+            shards: 2,
+            mem_budget: 1 << 20,
+        });
+        // a single party cannot return the federation's output…
+        let err = s.run_svd(&parts).unwrap_err().to_string();
+        assert!(err.contains("run_distributed"), "got: {err}");
+        assert!(s.run_pca(&parts, 2).is_err());
+        assert!(s.run_lsa(&parts, 2).is_err());
+        assert!(s.run_lr(&parts, &[0.0; 8], 0).is_err());
+        // …and run_distributed requires the Distributed mode
+        let seq = Session::cpu(FedSvdConfig::default());
+        assert!(seq.run_distributed(&parts, DistTask::Svd).is_err());
     }
 
     #[test]

@@ -34,7 +34,7 @@
 //!
 //! ## Execution architecture
 //!
-//! Two ways to run the protocol, selected by `coordinator::ExecMode`:
+//! Three ways to run the protocol, selected by `coordinator::ExecMode`:
 //!
 //! * **Sequential** — [`protocol::run_fedsvd_with_backend`]: every party
 //!   driven from one loop over [`net::NetSim`]. The lossless reference
@@ -46,6 +46,17 @@
 //!   spill-to-disk [`cluster::shard::ShardStore`] — the full masked
 //!   matrix is never resident on any party. Matches the oracle to
 //!   ≤ 1e-9 on Σ (pinned by `tests/cluster_equivalence.rs`).
+//! * **Distributed** — [`cluster::run_party_distributed`] / `fedsvd
+//!   serve`: one party per **OS process**, exchanging real bytes over
+//!   TCP. The party loops are the *same code* as Cluster mode: they are
+//!   written against the [`transport::Transport`] seam, whose
+//!   [`transport::LocalTransport`] adapts the mailboxes + simulated
+//!   metering and whose [`transport::TcpTransport`] speaks the
+//!   versioned, length-prefixed [`transport::wire`] codec over
+//!   `std::net` sockets (f64 payloads bit-exact on the wire, traffic
+//!   ledgers in real frame bytes). Loopback federations of ≥ 4
+//!   processes match the oracle to ≤ 1e-9
+//!   (`tests/distributed_smoke.rs`).
 //!
 //! The §4 applications (PCA / LR / LSA) run through the same seam:
 //! `coordinator::Session::{run_pca, run_lr, run_lsa}` execute on either
@@ -81,6 +92,7 @@ pub mod secagg;
 // Core library
 pub mod mask;
 pub mod protocol;
+pub mod transport;
 pub mod cluster;
 pub mod runtime;
 pub mod coordinator;

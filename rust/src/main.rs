@@ -8,12 +8,31 @@
 //! fedsvd lr    [--m M] [--n N] [--users K]
 //! fedsvd lsa   [--dataset name] [--scale S] [--rank R]
 //! fedsvd attack [--dataset name] [--block B]
+//! fedsvd serve --role ta|csp|user<i> (--peers-dir DIR | --peers r=H:P,...)
+//!              [--task svd|pca|lr|lsa] [--listen H:P] [--m M] [--n N]
+//!              [--users K] [--seed N] [--shards S] [--budget-mb MB]
 //! fedsvd info
 //! ```
 //!
 //! `svd`, `pca`, `lr` and `lsa` additionally take `--shards S`
 //! (+ optional `--budget-mb MB`, default 64) to run on the sharded
 //! multi-party cluster runtime instead of the sequential oracle.
+//!
+//! `serve` runs **one party** of a real multi-process federation over
+//! TCP: launch one process per role (TA, CSP, each user) with identical
+//! data flags and the same `--peers-dir` (rendezvous directory —
+//! ephemeral ports are discovered automatically) or an explicit
+//! `--peers` address book. Example, four terminals on one machine:
+//!
+//! ```text
+//! fedsvd serve --role ta    --peers-dir /tmp/fed --task svd --m 64 --n 24
+//! fedsvd serve --role csp   --peers-dir /tmp/fed --task svd --m 64 --n 24
+//! fedsvd serve --role user0 --peers-dir /tmp/fed --task svd --m 64 --n 24
+//! fedsvd serve --role user1 --peers-dir /tmp/fed --task svd --m 64 --n 24
+//! ```
+//!
+//! Each process prints its own (paper-visibility) share of the result as
+//! `RESULT …` lines plus a per-round-label ledger of real wire bytes.
 
 use fedsvd::apps::lr;
 use fedsvd::attack::{fast_ica, matched_pearson, IcaOptions};
@@ -250,6 +269,180 @@ fn cmd_attack(flags: &HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
+fn fmt_f64s(v: &[f64]) -> String {
+    v.iter()
+        .map(|x| format!("{x:.17e}"))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+fn fmt_mat(m: &fedsvd::linalg::Mat) -> String {
+    format!("{} {} {}", m.rows(), m.cols(), fmt_f64s(m.data()))
+}
+
+/// Print this party's share of a distributed run as machine-parsable
+/// `RESULT` lines (what the multi-process smoke test reads back).
+fn print_dist_outcome(out: &fedsvd::cluster::DistOutcome) {
+    println!("RESULT role {}", out.role.name());
+    if !out.sigma.is_empty() {
+        println!("RESULT sigma {}", fmt_f64s(&out.sigma));
+    }
+    if let Some(u) = &out.u {
+        println!("RESULT u {}", fmt_mat(u));
+    }
+    if let Some(v) = &out.vt_part {
+        println!("RESULT vt_part {}", fmt_mat(v));
+    }
+    if let Some(p) = &out.proj {
+        println!("RESULT proj {}", fmt_mat(p));
+    }
+    if let Some(w) = &out.w_i {
+        println!("RESULT w {}", fmt_f64s(w));
+    }
+    if let Some(mse) = out.train_mse {
+        println!("RESULT mse {mse:.17e}");
+    }
+    println!(
+        "RESULT traffic {}",
+        out.round_traffic
+            .iter()
+            .map(|(l, b)| format!("{l}:{b}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+    println!("RESULT bytes {}", out.real_bytes);
+    println!("DONE {}", out.role.name());
+}
+
+/// `fedsvd serve` — run one party of a multi-process federation. Every
+/// process derives the same deterministic demo data from the shared
+/// flags; each party only ever touches its own role's slice.
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
+    use fedsvd::cluster::{ClusterApp, DistConfig, PartyRole, PeerSpec};
+    use fedsvd::coordinator::DistTask;
+
+    let role = PartyRole::parse(
+        flags
+            .get("role")
+            .ok_or("serve: --role ta|csp|user<i> is required")?,
+    )
+    .map_err(|e| e.to_string())?;
+    let task = flags.get("task").map(String::as_str).unwrap_or("svd");
+    let m = flag_usize(flags, "m", 48);
+    let n = flag_usize(flags, "n", 16);
+    let k = flag_usize(flags, "users", 2);
+    let rank = flag_usize(flags, "rank", 5);
+    let data_seed = flags
+        .get("data-seed")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(7u64);
+    let mut cfg = base_config(flags);
+    if let Some(s) = flags.get("seed").and_then(|v| v.parse().ok()) {
+        cfg.seed = s;
+    }
+    let listen = flags
+        .get("listen")
+        .cloned()
+        .unwrap_or_else(|| "127.0.0.1:0".to_string());
+    let peers = if let Some(dir) = flags.get("peers-dir") {
+        PeerSpec::Dir(std::path::PathBuf::from(dir))
+    } else if let Some(spec) = flags.get("peers") {
+        let mut list = Vec::new();
+        for ent in spec.split(',') {
+            let (name, addr) = ent
+                .split_once('=')
+                .ok_or_else(|| format!("serve: bad --peers entry `{ent}` (want role=host:port)"))?;
+            list.push((
+                PartyRole::parse(name.trim()).map_err(|e| e.to_string())?,
+                addr.trim().to_string(),
+            ));
+        }
+        PeerSpec::Addrs(list)
+    } else {
+        return Err("serve: need --peers-dir DIR or --peers role=host:port,...".into());
+    };
+    let shards = flag_usize(flags, "shards", 2);
+    let mem_budget = (flags
+        .get("budget-mb")
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(64))
+        << 20;
+
+    // deterministic demo data, identical in every process
+    let (parts, y);
+    match task {
+        "lr" => {
+            let (x, _w_true, labels) = regression_task(m, n, 0.1, data_seed);
+            parts = split_columns(&x, k).map_err(|e| e.to_string())?;
+            y = labels;
+        }
+        _ => {
+            let mut rng = Xoshiro256::seed_from_u64(data_seed);
+            let x = Mat::gaussian(m, n, &mut rng);
+            parts = split_columns(&x, k).map_err(|e| e.to_string())?;
+            y = Vec::new();
+        }
+    }
+    eprintln!(
+        "serve: role {} task {task} {m}×{n} ({k} users, {shards} shards, session {})",
+        role.name(),
+        cfg.seed
+    );
+
+    // injected mid-protocol failure (abort-path testing; svd task only)
+    if let Some(point) = flags.get("inject-abort") {
+        if task != "svd" {
+            return Err("serve: --inject-abort is only wired for --task svd".into());
+        }
+        let label = fedsvd::cluster::parse_fault_point(point).map_err(|e| e.to_string())?;
+        let mut dcfg = DistConfig::new(role, listen, peers);
+        dcfg.session = cfg.seed;
+        dcfg.shards = shards;
+        dcfg.mem_budget = mem_budget;
+        dcfg.fault_after_label = Some(label);
+        let out = fedsvd::cluster::run_party_distributed(
+            &parts,
+            &cfg,
+            &dcfg,
+            fedsvd::linalg::CpuBackend::global(),
+            &ClusterApp::None,
+        )
+        .map_err(|e| e.to_string())?;
+        print_dist_outcome(&out);
+        return Ok(());
+    }
+
+    let session = Session::auto(cfg).with_exec(ExecMode::Distributed {
+        role,
+        listen,
+        peers,
+        shards,
+        mem_budget,
+    });
+    let dist_task = match task {
+        "svd" => DistTask::Svd,
+        "pca" => DistTask::Pca { rank },
+        "lr" => DistTask::Lr {
+            y: &y,
+            label_owner: 0,
+        },
+        "lsa" => DistTask::Lsa { rank },
+        other => return Err(format!("serve: unknown task `{other}`")),
+    };
+    let (out, report) = session
+        .run_distributed(&parts, dist_task)
+        .map_err(|e| e.to_string())?;
+    print_cluster_stats(&report);
+    print_dist_outcome(&out);
+    eprintln!(
+        "serve: {} done in {} ({} real bytes on the wire)",
+        out.role.name(),
+        human_secs(report.wall_s),
+        report.total_bytes
+    );
+    Ok(())
+}
+
 fn cmd_info() -> Result<(), String> {
     println!("fedsvd {} — lossless federated SVD (KDD'22 reproduction)", env!("CARGO_PKG_VERSION"));
     println!(
@@ -281,12 +474,18 @@ fn main() -> ExitCode {
         "lr" => cmd_lr(&flags),
         "lsa" => cmd_lsa(&flags),
         "attack" => cmd_attack(&flags),
+        "serve" => cmd_serve(&flags),
         "info" => cmd_info(),
         _ => {
             println!(
-                "usage: fedsvd <svd|pca|lr|lsa|attack|info> [--m M] [--n N] [--users K] \
+                "usage: fedsvd <svd|pca|lr|lsa|attack|serve|info> [--m M] [--n N] [--users K] \
                  [--block B] [--rank R] [--dataset name] [--scale S] [--config file] \
-                 [--shards S [--budget-mb MB]]"
+                 [--shards S [--budget-mb MB]]\n\
+                 \n\
+                 serve (one party of a multi-process federation over TCP):\n\
+                 fedsvd serve --role ta|csp|user<i> (--peers-dir DIR | --peers r=H:P,...)\n\
+                 \x20       [--task svd|pca|lr|lsa] [--listen H:P] [--m M] [--n N] [--users K]\n\
+                 \x20       [--seed N] [--data-seed N] [--shards S] [--budget-mb MB]"
             );
             Ok(())
         }

@@ -215,6 +215,32 @@ pub struct BlockDiagSlice {
 }
 
 impl BlockDiagSlice {
+    /// Rebuild a slice from its pieces (the wire-decode path). Pieces
+    /// must lie inside the `rows × cols` envelope and be sorted by
+    /// `local_row` with no overlap along the rows — the invariants
+    /// `row_slice` produces and V-recovery's Eq. (7) blocking relies on.
+    pub fn from_pieces(rows: usize, cols: usize, pieces: Vec<SlicePiece>) -> Result<Self> {
+        let mut next_row = 0usize;
+        for p in &pieces {
+            if p.local_row < next_row {
+                return Err(Error::Shape(
+                    "slice pieces overlap or are unsorted along rows".into(),
+                ));
+            }
+            if p.local_row + p.mat.rows() > rows || p.global_col + p.mat.cols() > cols {
+                return Err(Error::Shape(format!(
+                    "slice piece {}+{}×{}+{} outside {rows}×{cols}",
+                    p.local_row,
+                    p.mat.rows(),
+                    p.global_col,
+                    p.mat.cols()
+                )));
+            }
+            next_row = p.local_row + p.mat.rows();
+        }
+        Ok(Self { rows, cols, pieces })
+    }
+
     pub fn rows(&self) -> usize {
         self.rows
     }

@@ -1,0 +1,127 @@
+//! In-process transport: mailboxes + the simulated network model.
+//!
+//! [`LocalTransport`] is the PR 2/3 wiring behind the [`Transport`]
+//! trait: delivery is a [`Mailbox`] post, metering is the shared
+//! [`RoundScheduler`] over [`crate::net::NetSim`], and the byte charged
+//! per message is [`ClusterMsg::sim_wire_bytes`] — exactly what the
+//! pre-transport runtime metered, so every simulated-time number and
+//! per-label traffic pin is unchanged by the transport seam.
+
+use std::sync::Arc;
+
+use crate::cluster::mailbox::Mailbox;
+use crate::cluster::round::RoundScheduler;
+use crate::net::link::PartyId;
+use crate::net::LinkSpec;
+use crate::util::{Error, Result};
+
+use super::wire::ClusterMsg;
+use super::Transport;
+
+/// One party's endpoint of the in-process fabric.
+pub struct LocalTransport {
+    party: PartyId,
+    sched: Arc<RoundScheduler>,
+    /// Every party's inbox, indexed by `PartyId` (TA 0, CSP 1, users 2+).
+    boxes: Arc<Vec<Mailbox<ClusterMsg>>>,
+}
+
+impl LocalTransport {
+    /// Build the full in-process fabric for `k` users: one endpoint per
+    /// party in `PartyId` order (TA, CSP, user 0..k), all sharing one
+    /// round scheduler whose meters/ledger survive the endpoints.
+    pub fn fabric(k: usize, link: LinkSpec) -> (Vec<LocalTransport>, Arc<RoundScheduler>) {
+        let sched = Arc::new(RoundScheduler::new(link));
+        let boxes: Arc<Vec<Mailbox<ClusterMsg>>> =
+            Arc::new((0..k + 2).map(|_| Mailbox::new()).collect());
+        let endpoints = (0..k + 2)
+            .map(|party| LocalTransport {
+                party,
+                sched: Arc::clone(&sched),
+                boxes: Arc::clone(&boxes),
+            })
+            .collect();
+        (endpoints, sched)
+    }
+}
+
+impl Transport for LocalTransport {
+    fn party(&self) -> PartyId {
+        self.party
+    }
+
+    fn round_enter(&self, label: u64, senders: usize) -> Result<()> {
+        self.sched.enter(label, senders)
+    }
+
+    fn send(&self, to: PartyId, msg: ClusterMsg) -> Result<()> {
+        let inbox = self
+            .boxes
+            .get(to)
+            .ok_or_else(|| Error::Runtime(format!("local transport: no party {to}")))?;
+        self.sched.send(self.party, to, msg.sim_wire_bytes());
+        // a closed peer inbox means that party aborted — surface it now
+        // instead of letting a later round hang on the missing reply
+        inbox
+            .post(msg)
+            .map_err(|_| Error::Runtime(format!("peer party {to} aborted (inbox closed)")))
+    }
+
+    fn round_leave(&self, label: u64) -> Result<()> {
+        self.sched.leave(label)
+    }
+
+    fn recv(&self) -> Result<ClusterMsg> {
+        self.boxes[self.party].recv()
+    }
+
+    fn meters(&self) -> (f64, u64) {
+        self.sched.with_net(|n| (n.sim_elapsed_s(), n.total_bytes()))
+    }
+
+    fn abort(&self, _reason: &str) {
+        self.sched.abort();
+        for b in self.boxes.iter() {
+            b.close();
+        }
+    }
+
+    fn close(&self) {
+        // only this party's inbox: peers may still be mid-protocol and
+        // their queues must keep working
+        self.boxes[self.party].close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::link::{CSP, USER_BASE};
+
+    #[test]
+    fn send_meters_sim_bytes_and_delivers() {
+        let (eps, sched) = LocalTransport::fabric(2, LinkSpec::default());
+        let user0 = &eps[USER_BASE];
+        let csp = &eps[CSP];
+        user0.round_enter(7, 1).unwrap();
+        user0
+            .send(CSP, ClusterMsg::Sigma(vec![1.0, 2.0, 3.0]))
+            .unwrap();
+        user0.round_leave(7).unwrap();
+        let ClusterMsg::Sigma(s) = csp.recv().unwrap() else {
+            panic!("wrong message")
+        };
+        assert_eq!(s, vec![1.0, 2.0, 3.0]);
+        assert_eq!(sched.labelled_bytes(), vec![(7, 24)]);
+    }
+
+    #[test]
+    fn abort_closes_every_inbox_and_post_errors() {
+        let (eps, _sched) = LocalTransport::fabric(2, LinkSpec::default());
+        eps[USER_BASE].abort("test failure");
+        assert!(eps[CSP].recv().is_err());
+        assert!(eps[CSP]
+            .send(USER_BASE + 1, ClusterMsg::Shutdown { from: CSP })
+            .is_err());
+    }
+}

@@ -1,0 +1,84 @@
+//! The wire seam between the cluster protocol and its deployment.
+//!
+//! PR 2/3 ran TA/CSP/users as threads in one process over in-memory
+//! mailboxes; the deployment the paper actually evaluates is separate
+//! hosts exchanging bytes. This subsystem makes that a seam instead of a
+//! rewrite:
+//!
+//! * [`wire`] — the versioned, length-prefixed little-endian binary
+//!   codec ([`ClusterMsg`], `encode_frame`/`read_frame`): every cluster
+//!   message as bytes, with f64 payloads round-tripping bit-exactly.
+//! * [`Transport`] — what a party needs from its network: metered round
+//!   membership (`round_enter`/`round_leave`), `send(peer, msg)`,
+//!   blocking `recv`, and failure propagation (`abort`/`close`).
+//! * [`local::LocalTransport`] — the in-process implementation: posts
+//!   through [`crate::cluster::mailbox`] and meters **simulated** bytes
+//!   ([`ClusterMsg::sim_wire_bytes`]) through the shared
+//!   [`crate::cluster::round::RoundScheduler`]/[`crate::net::NetSim`]
+//!   model, preserving the PR 2/3 metering bit-for-bit.
+//! * [`tcp::TcpTransport`] — real sockets on `std::net` (zero new
+//!   dependencies): per-peer framed streams, a handshake carrying
+//!   session id + party id + protocol version, and a traffic ledger of
+//!   **real** on-the-wire bytes per round label.
+//!
+//! The party loops in [`crate::cluster::runtime`] are written against
+//! the trait only, so the same choreography runs as threads
+//! (`ExecMode::Cluster`), as loopback-TCP threads (benches/tests), or
+//! as N real OS processes (`ExecMode::Distributed`, `fedsvd serve`).
+//!
+//! Round semantics across implementations: the round *label* is part of
+//! the contract (it keys the traffic ledger on both), but only the
+//! simulated transport serializes rounds globally — real sockets order
+//! bytes per connection, not per federation, so receivers must tolerate
+//! cross-peer interleaving (the runtime's `PartyLink` hold-back queue
+//! does exactly that).
+
+pub mod local;
+pub mod tcp;
+pub mod wire;
+
+use crate::net::link::PartyId;
+use crate::util::Result;
+
+pub use local::LocalTransport;
+pub use tcp::TcpTransport;
+pub use wire::ClusterMsg;
+
+/// One party's endpoint into the federation's network.
+///
+/// Exactly one party thread/process drives an endpoint: `recv` competes
+/// with nobody, and `round_enter`/`round_leave` bracket that party's
+/// sends of one labelled round (see [`crate::cluster::runtime::labels`]).
+pub trait Transport: Send {
+    /// This endpoint's party id ([`crate::net::link`] numbering).
+    fn party(&self) -> PartyId;
+
+    /// Join round `label` as one of `senders` concurrent sending
+    /// parties. Simulated transports rendezvous here (concurrent
+    /// uploads share one metered round); real transports only record
+    /// the label for traffic attribution.
+    fn round_enter(&self, label: u64, senders: usize) -> Result<()>;
+
+    /// Send one message to `to`, metered under the open round's label.
+    fn send(&self, to: PartyId, msg: ClusterMsg) -> Result<()>;
+
+    /// Declare this party done sending in round `label`.
+    fn round_leave(&self, label: u64) -> Result<()>;
+
+    /// Block until the next message addressed to this party arrives.
+    /// Errors once the federation is aborted or torn down.
+    fn recv(&self) -> Result<ClusterMsg>;
+
+    /// Live meters as (simulated network seconds, total bytes seen by
+    /// this endpoint). Simulated transports report the shared `NetSim`
+    /// clock; real transports report 0 simulated seconds and real
+    /// socket bytes.
+    fn meters(&self) -> (f64, u64);
+
+    /// Propagate a local failure: tell every peer (so their `recv`s
+    /// error instead of hanging) and unblock anything waiting locally.
+    fn abort(&self, reason: &str);
+
+    /// Clean teardown after this party finished its protocol role.
+    fn close(&self);
+}

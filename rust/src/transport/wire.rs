@@ -1,0 +1,697 @@
+//! Versioned, length-prefixed little-endian binary codec for every
+//! cluster message.
+//!
+//! This is the byte layer the multi-process deployment speaks: each
+//! protocol message travels as one **frame**
+//!
+//! ```text
+//! magic   u32   0xFED5_F4A3
+//! version u16   WIRE_VERSION
+//! kind    u16   message discriminant (ClusterMsg::kind)
+//! label   u64   round label (cluster::labels) for traffic attribution
+//! len     u64   payload byte length
+//! payload [u8; len]
+//! ```
+//!
+//! Everything is little-endian. Floats travel as their raw IEEE-754 bit
+//! pattern (`f64::to_bits`/`from_bits`), so ±0, subnormals and NaN
+//! payloads round-trip **bit-exactly** — the codec can never be the
+//! place where the paper's losslessness guarantee leaks. Decoding is
+//! strict: truncated payloads, trailing bytes, oversized length
+//! prefixes, unknown kinds and version mismatches are all hard errors
+//! (`tests/wire_codec.rs` pins each rejection path).
+//!
+//! The same [`ClusterMsg`] enum is what the in-process runtime posts
+//! through its mailboxes — [`ClusterMsg::sim_wire_bytes`] preserves the
+//! simulated-network accounting of the pre-transport runtime (seed
+//! deliveries as O(1), secagg shares as 16-byte codewords, …), while
+//! the TCP transport meters the *encoded frame length*, i.e. real bytes
+//! on the wire.
+
+use crate::bignum::BigUint;
+use crate::linalg::Mat;
+use crate::mask::block_diag::{BlockDiagSlice, SlicePiece};
+use crate::mask::delivery::SeedDelivery;
+use crate::net::link::PartyId;
+use crate::util::{Error, Result};
+
+/// Frame marker, first 4 bytes of every frame.
+pub const FRAME_MAGIC: u32 = 0xFED5_F4A3;
+/// Codec version carried by every frame; bump on any layout change.
+pub const WIRE_VERSION: u16 = 1;
+/// Fixed frame-header size in bytes (magic + version + kind + label + len).
+pub const FRAME_HEADER_LEN: usize = 24;
+/// Upper bound on a single frame's payload — anything larger is a
+/// corrupt or hostile length prefix, rejected before allocation.
+pub const MAX_FRAME_PAYLOAD: u64 = 1 << 32;
+
+/// DH public key wire size (1536-bit MODP group element) — the
+/// simulated-metering size of a `Pk`/`PkList` entry.
+pub const PK_BYTES: u64 = 1536 / 8;
+
+fn codec(msg: impl std::fmt::Display) -> Error {
+    Error::Protocol(format!("wire codec: {msg}"))
+}
+
+// ---------------------------------------------------------------------------
+// primitive reader
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked little-endian cursor over one frame payload.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            return Err(codec(format!(
+                "truncated payload: need {n} bytes, {} left",
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("len 2")))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("len 4")))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("len 8")))
+    }
+
+    pub fn u128(&mut self) -> Result<u128> {
+        Ok(u128::from_le_bytes(self.take(16)?.try_into().expect("len 16")))
+    }
+
+    /// A `usize` encoded as u64 (error on 32-bit overflow).
+    pub fn len(&mut self) -> Result<usize> {
+        usize::try_from(self.u64()?).map_err(|_| codec("length exceeds usize"))
+    }
+
+    /// An element count whose `count * elem_bytes` payload must still fit
+    /// in the remaining buffer — checked *before* any allocation, so a
+    /// hostile length prefix cannot trigger an OOM.
+    pub fn counted(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.len()?;
+        match n.checked_mul(elem_bytes) {
+            Some(total) if total <= self.remaining() => Ok(n),
+            _ => Err(codec(format!(
+                "length prefix {n} × {elem_bytes} B overruns payload ({} left)",
+                self.remaining()
+            ))),
+        }
+    }
+
+    /// An f64 as its raw bit pattern — bit-exact for ±0/subnormal/NaN.
+    pub fn f64_bits(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
+    }
+
+    /// Assert the payload was consumed exactly (oversized frames are
+    /// rejected, not silently ignored).
+    pub fn finish(self) -> Result<()> {
+        if self.remaining() > 0 {
+            return Err(codec(format!(
+                "{} trailing bytes after payload",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// encode/decode traits + impls for the payload building blocks
+// ---------------------------------------------------------------------------
+
+/// Append this value's little-endian wire form to `out`.
+pub trait WireEncode {
+    fn encode(&self, out: &mut Vec<u8>);
+}
+
+/// Parse one value from a [`Reader`] (strict: every byte checked).
+pub trait WireDecode: Sized {
+    fn decode(r: &mut Reader<'_>) -> Result<Self>;
+}
+
+impl WireEncode for u64 {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+}
+
+impl WireDecode for u64 {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        r.u64()
+    }
+}
+
+impl WireEncode for f64 {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_bits().to_le_bytes());
+    }
+}
+
+impl WireDecode for f64 {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        r.f64_bits()
+    }
+}
+
+impl WireEncode for Vec<f64> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (self.len() as u64).encode(out);
+        for v in self {
+            v.encode(out);
+        }
+    }
+}
+
+impl WireDecode for Vec<f64> {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        let n = r.counted(8)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(r.f64_bits()?);
+        }
+        Ok(v)
+    }
+}
+
+impl WireEncode for Vec<u128> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (self.len() as u64).encode(out);
+        for v in self {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+impl WireDecode for Vec<u128> {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        let n = r.counted(16)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(r.u128()?);
+        }
+        Ok(v)
+    }
+}
+
+impl WireEncode for String {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (self.len() as u64).encode(out);
+        out.extend_from_slice(self.as_bytes());
+    }
+}
+
+impl WireDecode for String {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        let n = r.counted(1)?;
+        let b = r.bytes(n)?;
+        String::from_utf8(b.to_vec()).map_err(|_| codec("string is not UTF-8"))
+    }
+}
+
+impl WireEncode for BigUint {
+    fn encode(&self, out: &mut Vec<u8>) {
+        let b = self.to_bytes_le();
+        (b.len() as u64).encode(out);
+        out.extend_from_slice(&b);
+    }
+}
+
+impl WireDecode for BigUint {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        let n = r.counted(1)?;
+        Ok(BigUint::from_bytes_le(r.bytes(n)?))
+    }
+}
+
+impl WireEncode for Mat {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (self.rows() as u64).encode(out);
+        (self.cols() as u64).encode(out);
+        for v in self.data() {
+            v.encode(out);
+        }
+    }
+}
+
+impl WireDecode for Mat {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        let rows = r.len()?;
+        let cols = r.len()?;
+        let n = rows
+            .checked_mul(cols)
+            .ok_or_else(|| codec("matrix dims overflow"))?;
+        if n.checked_mul(8).is_none_or(|b| b > r.remaining()) {
+            return Err(codec(format!(
+                "matrix {rows}×{cols} overruns payload ({} bytes left)",
+                r.remaining()
+            )));
+        }
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(r.f64_bits()?);
+        }
+        Mat::from_vec(rows, cols, data)
+    }
+}
+
+impl WireEncode for SeedDelivery {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.seed.encode(out);
+        (self.dim as u64).encode(out);
+        (self.block as u64).encode(out);
+    }
+}
+
+impl WireDecode for SeedDelivery {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(SeedDelivery {
+            seed: r.u64()?,
+            dim: r.len()?,
+            block: r.len()?,
+        })
+    }
+}
+
+impl WireEncode for BlockDiagSlice {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (self.rows() as u64).encode(out);
+        (self.cols() as u64).encode(out);
+        (self.pieces().len() as u64).encode(out);
+        for p in self.pieces() {
+            (p.local_row as u64).encode(out);
+            (p.global_col as u64).encode(out);
+            p.mat.encode(out);
+        }
+    }
+}
+
+impl WireDecode for BlockDiagSlice {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        let rows = r.len()?;
+        let cols = r.len()?;
+        // a piece is ≥ 24 B on the wire (row + col + empty matrix header)
+        let n = r.counted(24)?;
+        let mut pieces = Vec::with_capacity(n);
+        for _ in 0..n {
+            let local_row = r.len()?;
+            let global_col = r.len()?;
+            let mat = Mat::decode(r)?;
+            pieces.push(SlicePiece {
+                local_row,
+                global_col,
+                mat,
+            });
+        }
+        BlockDiagSlice::from_pieces(rows, cols, pieces)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the cluster message set
+// ---------------------------------------------------------------------------
+
+/// Every message the cluster protocol exchanges — what the mailboxes
+/// carry in-process and what [`encode_frame`] puts on a TCP wire.
+///
+/// Variants mirror the paper's rounds: mask deliveries (Step 1), secagg
+/// key agreement + sharded uploads (Step 2), streamed `U'` blocks and
+/// the Σ broadcast (Step 3→4), the blinded V recovery (Step 4), the LR
+/// application rounds (`y'` up, `w'` down, partial predictions), and
+/// two control frames ([`ClusterMsg::Abort`]/[`ClusterMsg::Shutdown`])
+/// for failure propagation and clean connection teardown.
+pub enum ClusterMsg {
+    /// TA → users: the P mask as a seed (Step 1).
+    PSeed(SeedDelivery),
+    /// TA → user i: its `Qᵢ` row slice (Step 1).
+    QSlice(BlockDiagSlice),
+    /// User → CSP: DH public key for secagg (Step 2).
+    Pk { user: usize, public: BigUint },
+    /// CSP → users: the assembled public-key bulletin board (Step 2).
+    PkList(Vec<BigUint>),
+    /// User → CSP: one secagg-masked row-shard share (Step 2).
+    Batch {
+        batch: usize,
+        user: usize,
+        share: Vec<u128>,
+    },
+    /// CSP → users: one streamed `U'` row block (Step 3).
+    UBlock { r0: usize, data: Mat },
+    /// CSP → users: Σ broadcast (Step 4).
+    Sigma(Vec<f64>),
+    /// User i → CSP: blinded `Qᵢᵀ·Rᵢ` for the V recovery (Step 4).
+    VReq { user: usize, blinded: BlockDiagSlice },
+    /// CSP → user i: blinded `Vᵢᵀ` response (Step 4).
+    VResp(Mat),
+    /// LR: label owner → CSP, the masked label vector `y' = P·y`.
+    YMasked(Vec<f64>),
+    /// LR: CSP → users, the masked coefficients `w' = V'·Σ⁺·U'ᵀ·y'`.
+    WMasked(Vec<f64>),
+    /// LR: non-owner user → label owner, partial predictions `Xᵢ·wᵢ`.
+    /// Tagged with the sender so the owner folds in user order — FP
+    /// addition is not associative, and arrival order is thread timing.
+    Pred { user: usize, pred: Vec<f64> },
+    /// Control: a party failed; peers must error out instead of hanging.
+    Abort { from: PartyId, reason: String },
+    /// Control: clean connection teardown — the sender is done sending
+    /// on this link (distinguishes a finished peer from a crashed one).
+    Shutdown { from: PartyId },
+}
+
+impl ClusterMsg {
+    /// Wire discriminant (frame-header `kind`).
+    pub fn kind(&self) -> u16 {
+        match self {
+            ClusterMsg::PSeed(_) => 0,
+            ClusterMsg::QSlice(_) => 1,
+            ClusterMsg::Pk { .. } => 2,
+            ClusterMsg::PkList(_) => 3,
+            ClusterMsg::Batch { .. } => 4,
+            ClusterMsg::UBlock { .. } => 5,
+            ClusterMsg::Sigma(_) => 6,
+            ClusterMsg::VReq { .. } => 7,
+            ClusterMsg::VResp(_) => 8,
+            ClusterMsg::YMasked(_) => 9,
+            ClusterMsg::WMasked(_) => 10,
+            ClusterMsg::Pred { .. } => 11,
+            ClusterMsg::Abort { .. } => 12,
+            ClusterMsg::Shutdown { .. } => 13,
+        }
+    }
+
+    /// Human-readable kind (error messages, logs).
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            ClusterMsg::PSeed(_) => "PSeed",
+            ClusterMsg::QSlice(_) => "QSlice",
+            ClusterMsg::Pk { .. } => "Pk",
+            ClusterMsg::PkList(_) => "PkList",
+            ClusterMsg::Batch { .. } => "Batch",
+            ClusterMsg::UBlock { .. } => "UBlock",
+            ClusterMsg::Sigma(_) => "Sigma",
+            ClusterMsg::VReq { .. } => "VReq",
+            ClusterMsg::VResp(_) => "VResp",
+            ClusterMsg::YMasked(_) => "YMasked",
+            ClusterMsg::WMasked(_) => "WMasked",
+            ClusterMsg::Pred { .. } => "Pred",
+            ClusterMsg::Abort { .. } => "Abort",
+            ClusterMsg::Shutdown { .. } => "Shutdown",
+        }
+    }
+
+    /// The byte size the *simulated* network charges for this message —
+    /// exactly the pre-transport runtime's accounting, so
+    /// `LocalTransport` keeps every `NetSim` meter and per-label traffic
+    /// pin bit-identical (seed deliveries O(1), Q slices as non-zero
+    /// payload + 24 B/piece headers, DH keys at the MODP group size,
+    /// secagg shares as 16-byte codewords, dense payloads at 8 B/f64).
+    pub fn sim_wire_bytes(&self) -> u64 {
+        match self {
+            ClusterMsg::PSeed(d) => d.wire_bytes(),
+            ClusterMsg::QSlice(s) => s.payload_bytes() + (s.pieces().len() as u64) * 24,
+            ClusterMsg::Pk { .. } => PK_BYTES,
+            ClusterMsg::PkList(v) => PK_BYTES * v.len() as u64,
+            ClusterMsg::Batch { share, .. } => (share.len() * 16) as u64,
+            ClusterMsg::UBlock { data, .. } => (data.rows() * data.cols() * 8) as u64,
+            ClusterMsg::Sigma(s) => (s.len() * 8) as u64,
+            ClusterMsg::VReq { blinded, .. } => blinded.payload_bytes(),
+            ClusterMsg::VResp(m) => (m.rows() * m.cols() * 8) as u64,
+            ClusterMsg::YMasked(y) => (y.len() * 8) as u64,
+            ClusterMsg::WMasked(w) => (w.len() * 8) as u64,
+            ClusterMsg::Pred { pred, .. } => (pred.len() * 8) as u64,
+            ClusterMsg::Abort { reason, .. } => 16 + reason.len() as u64,
+            ClusterMsg::Shutdown { .. } => 8,
+        }
+    }
+
+    fn encode_payload(&self, out: &mut Vec<u8>) {
+        match self {
+            ClusterMsg::PSeed(d) => d.encode(out),
+            ClusterMsg::QSlice(s) => s.encode(out),
+            ClusterMsg::Pk { user, public } => {
+                (*user as u64).encode(out);
+                public.encode(out);
+            }
+            ClusterMsg::PkList(v) => {
+                (v.len() as u64).encode(out);
+                for pk in v {
+                    pk.encode(out);
+                }
+            }
+            ClusterMsg::Batch { batch, user, share } => {
+                (*batch as u64).encode(out);
+                (*user as u64).encode(out);
+                share.encode(out);
+            }
+            ClusterMsg::UBlock { r0, data } => {
+                (*r0 as u64).encode(out);
+                data.encode(out);
+            }
+            ClusterMsg::Sigma(s) => s.encode(out),
+            ClusterMsg::VReq { user, blinded } => {
+                (*user as u64).encode(out);
+                blinded.encode(out);
+            }
+            ClusterMsg::VResp(m) => m.encode(out),
+            ClusterMsg::YMasked(y) => y.encode(out),
+            ClusterMsg::WMasked(w) => w.encode(out),
+            ClusterMsg::Pred { user, pred } => {
+                (*user as u64).encode(out);
+                pred.encode(out);
+            }
+            ClusterMsg::Abort { from, reason } => {
+                (*from as u64).encode(out);
+                reason.encode(out);
+            }
+            ClusterMsg::Shutdown { from } => (*from as u64).encode(out),
+        }
+    }
+
+    fn decode_payload(kind: u16, payload: &[u8]) -> Result<ClusterMsg> {
+        let mut r = Reader::new(payload);
+        let msg = match kind {
+            0 => ClusterMsg::PSeed(SeedDelivery::decode(&mut r)?),
+            1 => ClusterMsg::QSlice(BlockDiagSlice::decode(&mut r)?),
+            2 => ClusterMsg::Pk {
+                user: r.len()?,
+                public: BigUint::decode(&mut r)?,
+            },
+            3 => {
+                let n = r.counted(8)?;
+                let mut v = Vec::with_capacity(n);
+                for _ in 0..n {
+                    v.push(BigUint::decode(&mut r)?);
+                }
+                ClusterMsg::PkList(v)
+            }
+            4 => ClusterMsg::Batch {
+                batch: r.len()?,
+                user: r.len()?,
+                share: Vec::<u128>::decode(&mut r)?,
+            },
+            5 => ClusterMsg::UBlock {
+                r0: r.len()?,
+                data: Mat::decode(&mut r)?,
+            },
+            6 => ClusterMsg::Sigma(Vec::<f64>::decode(&mut r)?),
+            7 => ClusterMsg::VReq {
+                user: r.len()?,
+                blinded: BlockDiagSlice::decode(&mut r)?,
+            },
+            8 => ClusterMsg::VResp(Mat::decode(&mut r)?),
+            9 => ClusterMsg::YMasked(Vec::<f64>::decode(&mut r)?),
+            10 => ClusterMsg::WMasked(Vec::<f64>::decode(&mut r)?),
+            11 => ClusterMsg::Pred {
+                user: r.len()?,
+                pred: Vec::<f64>::decode(&mut r)?,
+            },
+            12 => ClusterMsg::Abort {
+                from: r.len()?,
+                reason: String::decode(&mut r)?,
+            },
+            13 => ClusterMsg::Shutdown { from: r.len()? },
+            other => return Err(codec(format!("unknown message kind {other}"))),
+        };
+        r.finish()?;
+        Ok(msg)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// frames
+// ---------------------------------------------------------------------------
+
+/// Encode `msg` as one complete frame tagged with round `label`.
+pub fn encode_frame(msg: &ClusterMsg, label: u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(FRAME_HEADER_LEN + 64);
+    out.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
+    out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    out.extend_from_slice(&msg.kind().to_le_bytes());
+    out.extend_from_slice(&label.to_le_bytes());
+    out.extend_from_slice(&0u64.to_le_bytes()); // len, patched below
+    msg.encode_payload(&mut out);
+    let plen = (out.len() - FRAME_HEADER_LEN) as u64;
+    out[16..24].copy_from_slice(&plen.to_le_bytes());
+    out
+}
+
+/// Parse a frame header, rejecting bad magic, version drift and
+/// oversized length prefixes. Returns `(kind, label, payload_len)`.
+fn parse_header(hdr: &[u8; FRAME_HEADER_LEN]) -> Result<(u16, u64, u64)> {
+    let magic = u32::from_le_bytes(hdr[0..4].try_into().expect("len 4"));
+    if magic != FRAME_MAGIC {
+        return Err(codec(format!("bad frame magic {magic:#010x}")));
+    }
+    let version = u16::from_le_bytes(hdr[4..6].try_into().expect("len 2"));
+    if version != WIRE_VERSION {
+        return Err(codec(format!(
+            "protocol version mismatch: frame v{version}, this build v{WIRE_VERSION}"
+        )));
+    }
+    let kind = u16::from_le_bytes(hdr[6..8].try_into().expect("len 2"));
+    let label = u64::from_le_bytes(hdr[8..16].try_into().expect("len 8"));
+    let plen = u64::from_le_bytes(hdr[16..24].try_into().expect("len 8"));
+    if plen > MAX_FRAME_PAYLOAD {
+        return Err(codec(format!(
+            "frame payload length {plen} exceeds cap {MAX_FRAME_PAYLOAD}"
+        )));
+    }
+    Ok((kind, label, plen))
+}
+
+/// Decode one complete frame from a byte slice. The slice must hold
+/// exactly one frame — shorter is "truncated", longer is rejected.
+pub fn decode_frame(buf: &[u8]) -> Result<(ClusterMsg, u64)> {
+    if buf.len() < FRAME_HEADER_LEN {
+        return Err(codec(format!(
+            "truncated frame: {} bytes, header needs {FRAME_HEADER_LEN}",
+            buf.len()
+        )));
+    }
+    let hdr: &[u8; FRAME_HEADER_LEN] = buf[..FRAME_HEADER_LEN].try_into().expect("header len");
+    let (kind, label, plen) = parse_header(hdr)?;
+    let body = &buf[FRAME_HEADER_LEN..];
+    if (body.len() as u64) < plen {
+        return Err(codec(format!(
+            "truncated frame: payload {} of {plen} bytes",
+            body.len()
+        )));
+    }
+    if (body.len() as u64) > plen {
+        return Err(codec(format!(
+            "frame longer than its length prefix ({} > {plen})",
+            body.len()
+        )));
+    }
+    Ok((ClusterMsg::decode_payload(kind, body)?, label))
+}
+
+/// Read one frame from a stream. Returns `(msg, label, wire_bytes)`
+/// where `wire_bytes` is the full on-the-wire frame size (header +
+/// payload) — the number the real-transport traffic ledger records.
+///
+/// The payload buffer grows only as bytes actually arrive (bounded
+/// initial reservation), so a lying length prefix cannot force a huge
+/// allocation without the peer really sending that much data.
+pub fn read_frame(rd: &mut impl std::io::Read) -> Result<(ClusterMsg, u64, u64)> {
+    let mut hdr = [0u8; FRAME_HEADER_LEN];
+    rd.read_exact(&mut hdr)?;
+    let (kind, label, plen) = parse_header(&hdr)?;
+    let mut payload = Vec::with_capacity(plen.min(1 << 20) as usize);
+    let got = rd.by_ref().take(plen).read_to_end(&mut payload)?;
+    if got as u64 != plen {
+        return Err(codec(format!(
+            "truncated frame: stream ended after {got} of {plen} payload bytes"
+        )));
+    }
+    let msg = ClusterMsg::decode_payload(kind, &payload)?;
+    Ok((msg, label, (FRAME_HEADER_LEN as u64) + plen))
+}
+
+/// Write one frame to a stream; returns the on-the-wire byte count.
+pub fn write_frame(
+    wr: &mut impl std::io::Write,
+    msg: &ClusterMsg,
+    label: u64,
+) -> Result<u64> {
+    let buf = encode_frame(msg, label);
+    wr.write_all(&buf)?;
+    Ok(buf.len() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip_sigma() {
+        let msg = ClusterMsg::Sigma(vec![1.5, -0.0, f64::MIN_POSITIVE / 8.0]);
+        let buf = encode_frame(&msg, 42);
+        let (back, label) = decode_frame(&buf).unwrap();
+        assert_eq!(label, 42);
+        let ClusterMsg::Sigma(s) = back else {
+            panic!("wrong kind")
+        };
+        assert_eq!(s[0].to_bits(), 1.5f64.to_bits());
+        assert_eq!(s[1].to_bits(), (-0.0f64).to_bits());
+        assert_eq!(s[2].to_bits(), (f64::MIN_POSITIVE / 8.0).to_bits());
+    }
+
+    #[test]
+    fn stream_roundtrip_matches_slice_decode() {
+        let msg = ClusterMsg::Pred {
+            user: 3,
+            pred: vec![0.25; 7],
+        };
+        let buf = encode_frame(&msg, 9);
+        let mut cur = std::io::Cursor::new(buf.clone());
+        let (back, label, bytes) = read_frame(&mut cur).unwrap();
+        assert_eq!(label, 9);
+        assert_eq!(bytes, buf.len() as u64);
+        assert!(matches!(back, ClusterMsg::Pred { user: 3, .. }));
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_and_oversize() {
+        let msg = ClusterMsg::Shutdown { from: 1 };
+        let good = encode_frame(&msg, 0);
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xff;
+        assert!(decode_frame(&bad_magic).is_err());
+        let mut bad_version = good.clone();
+        bad_version[4] = 0x7f;
+        assert!(decode_frame(&bad_version).is_err());
+        let mut bad_len = good.clone();
+        bad_len[16..24].copy_from_slice(&(MAX_FRAME_PAYLOAD + 1).to_le_bytes());
+        assert!(decode_frame(&bad_len).is_err());
+        // every strict prefix is truncated
+        for cut in 0..good.len() {
+            assert!(decode_frame(&good[..cut]).is_err(), "prefix {cut}");
+        }
+    }
+}

@@ -1,0 +1,327 @@
+//! Property tests for the transport wire codec (`transport::wire`).
+//!
+//! The codec is the one place where the paper's losslessness guarantee
+//! could silently leak in a real deployment, so the pins are strict:
+//! every message kind round-trips **bit-exactly** over ragged shapes
+//! (m or n = 1, empty blocks), special f64 values (±0, subnormals, NaN
+//! payloads, infinities) survive unchanged, and malformed frames —
+//! truncated, oversized, version-drifted, unknown-kind, trailing-junk,
+//! hostile inner length prefixes — are rejected with errors rather than
+//! panics, allocations or silent acceptance.
+
+use fedsvd::bignum::BigUint;
+use fedsvd::linalg::Mat;
+use fedsvd::mask::block_orthogonal;
+use fedsvd::mask::delivery::SeedDelivery;
+use fedsvd::prop_assert;
+use fedsvd::rng::Xoshiro256;
+use fedsvd::transport::wire::{
+    decode_frame, encode_frame, read_frame, ClusterMsg, FRAME_HEADER_LEN, MAX_FRAME_PAYLOAD,
+};
+use fedsvd::util::bits_equal;
+use fedsvd::util::prop::PropRunner;
+
+fn mats_bit_equal(a: &Mat, b: &Mat) -> bool {
+    a.rows() == b.rows() && a.cols() == b.cols() && bits_equal(a.data(), b.data())
+}
+
+fn rand_mat(rng: &mut Xoshiro256, rows: usize, cols: usize) -> Mat {
+    Mat::gaussian(rows, cols, rng)
+}
+
+/// A ragged block-diagonal row slice (the `Qᵢ` wire shape): pieces of
+/// uneven extents, including width-1 blocks when the dims force them.
+fn rand_slice(rng: &mut Xoshiro256) -> fedsvd::mask::block_diag::BlockDiagSlice {
+    let n = 3 + (rng.next_below(12) as usize);
+    let b = 1 + (rng.next_below(5) as usize);
+    let q = block_orthogonal(n, b, rng.next_u64()).expect("mask");
+    let r0 = rng.next_below(n as u64 - 1) as usize;
+    let r1 = r0 + 1 + rng.next_below((n - r0) as u64 - 1).min(n as u64 - 1) as usize;
+    q.row_slice(r0, r1.min(n)).expect("slice")
+}
+
+fn roundtrip(msg: &ClusterMsg, label: u64) -> (ClusterMsg, u64) {
+    let buf = encode_frame(msg, label);
+    // slice and stream decoders must agree
+    let (m1, l1) = decode_frame(&buf).expect("slice decode");
+    let mut cur = std::io::Cursor::new(buf.clone());
+    let (_m2, l2, bytes) = read_frame(&mut cur).expect("stream decode");
+    assert_eq!(l1, l2);
+    assert_eq!(bytes, buf.len() as u64);
+    (m1, l1)
+}
+
+#[test]
+fn all_message_kinds_roundtrip() {
+    PropRunner::new(0x11f7, 24).run("wire roundtrip", |rng| {
+        // ragged dims, degenerate on purpose: m or n = 1, empty blocks
+        let dims = [
+            (1, 1 + rng.next_below(9) as usize),
+            (1 + rng.next_below(9) as usize, 1),
+            (2 + rng.next_below(6) as usize, 2 + rng.next_below(6) as usize),
+            (0, 0),
+        ];
+        for (r, c) in dims {
+            let mat = if r * c == 0 {
+                Mat::zeros(r, c)
+            } else {
+                rand_mat(rng, r, c)
+            };
+            let (back, label) =
+                roundtrip(&ClusterMsg::UBlock { r0: 7, data: mat.clone() }, 5);
+            prop_assert!(label == 5, "label lost");
+            let ClusterMsg::UBlock { r0, data } = back else {
+                return Err("UBlock kind lost".into());
+            };
+            prop_assert!(r0 == 7, "r0 lost");
+            prop_assert!(mats_bit_equal(&mat, &data), "UBlock {r}x{c} drifted");
+
+            let (back, _) = roundtrip(&ClusterMsg::VResp(mat.clone()), 0);
+            let ClusterMsg::VResp(data) = back else {
+                return Err("VResp kind lost".into());
+            };
+            prop_assert!(mats_bit_equal(&mat, &data), "VResp {r}x{c} drifted");
+        }
+
+        // seed delivery
+        let sd = SeedDelivery {
+            seed: rng.next_u64(),
+            dim: rng.next_below(1 << 20) as usize,
+            block: 1 + rng.next_below(1000) as usize,
+        };
+        let (back, _) = roundtrip(&ClusterMsg::PSeed(sd), 1);
+        let ClusterMsg::PSeed(got) = back else {
+            return Err("PSeed kind lost".into());
+        };
+        prop_assert!(got == sd, "seed delivery drifted");
+
+        // block-diagonal Q slice with ragged pieces
+        let slice = rand_slice(rng);
+        let (back, _) = roundtrip(&ClusterMsg::QSlice(slice.clone()), 2);
+        let ClusterMsg::QSlice(got) = back else {
+            return Err("QSlice kind lost".into());
+        };
+        prop_assert!(
+            got.rows() == slice.rows() && got.cols() == slice.cols(),
+            "slice envelope drifted"
+        );
+        prop_assert!(got.pieces().len() == slice.pieces().len(), "piece count");
+        for (a, b) in slice.pieces().iter().zip(got.pieces()) {
+            prop_assert!(
+                a.local_row == b.local_row
+                    && a.global_col == b.global_col
+                    && mats_bit_equal(&a.mat, &b.mat),
+                "slice piece drifted"
+            );
+        }
+        let (back, _) = roundtrip(
+            &ClusterMsg::VReq { user: 3, blinded: slice.clone() },
+            3,
+        );
+        prop_assert!(
+            matches!(back, ClusterMsg::VReq { user: 3, .. }),
+            "VReq drifted"
+        );
+
+        // big integers (DH keys), including zero and multi-limb
+        let pk = BigUint::from_bytes_le(
+            &(0..(1 + rng.next_below(64) as usize))
+                .map(|_| rng.next_u64() as u8)
+                .collect::<Vec<u8>>(),
+        );
+        let (back, _) = roundtrip(
+            &ClusterMsg::Pk { user: 1, public: pk.clone() },
+            4,
+        );
+        let ClusterMsg::Pk { user, public } = back else {
+            return Err("Pk kind lost".into());
+        };
+        prop_assert!(user == 1 && public == pk, "Pk drifted");
+        let (back, _) = roundtrip(
+            &ClusterMsg::PkList(vec![BigUint::zero(), pk.clone()]),
+            4,
+        );
+        let ClusterMsg::PkList(list) = back else {
+            return Err("PkList kind lost".into());
+        };
+        prop_assert!(list.len() == 2 && list[1] == pk, "PkList drifted");
+
+        // secagg shares: u128 codewords, empty and non-empty
+        for len in [0usize, 1, 5 + rng.next_below(40) as usize] {
+            let share: Vec<u128> = (0..len)
+                .map(|_| (rng.next_u64() as u128) << 64 | rng.next_u64() as u128)
+                .collect();
+            let (back, _) = roundtrip(
+                &ClusterMsg::Batch { batch: 2, user: 0, share: share.clone() },
+                1_000,
+            );
+            let ClusterMsg::Batch { share: got, .. } = back else {
+                return Err("Batch kind lost".into());
+            };
+            prop_assert!(got == share, "Batch share drifted (len {len})");
+        }
+
+        // f64 vector payloads
+        let v: Vec<f64> = (0..rng.next_below(30) as usize)
+            .map(|_| rng.next_u64() as f64 / 1e9 - 4.0)
+            .collect();
+        for msg in [
+            ClusterMsg::Sigma(v.clone()),
+            ClusterMsg::YMasked(v.clone()),
+            ClusterMsg::WMasked(v.clone()),
+            ClusterMsg::Pred { user: 2, pred: v.clone() },
+        ] {
+            let kind = msg.kind();
+            let (back, _) = roundtrip(&msg, 9);
+            prop_assert!(back.kind() == kind, "vector kind {kind} lost");
+            let got = match back {
+                ClusterMsg::Sigma(g)
+                | ClusterMsg::YMasked(g)
+                | ClusterMsg::WMasked(g)
+                | ClusterMsg::Pred { pred: g, .. } => g,
+                _ => return Err("vector kind changed".into()),
+            };
+            prop_assert!(bits_equal(&got, &v), "vector payload drifted");
+        }
+
+        // control frames
+        let (back, _) = roundtrip(
+            &ClusterMsg::Abort { from: 4, reason: "π failed ≤ 1e-9".into() },
+            0,
+        );
+        let ClusterMsg::Abort { from, reason } = back else {
+            return Err("Abort kind lost".into());
+        };
+        prop_assert!(from == 4 && reason == "π failed ≤ 1e-9", "Abort drifted");
+        let (back, _) = roundtrip(&ClusterMsg::Shutdown { from: 1 }, 0);
+        prop_assert!(
+            matches!(back, ClusterMsg::Shutdown { from: 1 }),
+            "Shutdown drifted"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn special_f64_values_roundtrip_bit_exactly() {
+    let specials = vec![
+        0.0,
+        -0.0,
+        f64::MIN_POSITIVE,            // smallest normal
+        f64::MIN_POSITIVE / 1024.0,   // subnormal
+        -f64::MIN_POSITIVE / 4096.0,  // negative subnormal
+        f64::from_bits(1),            // smallest subnormal
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        f64::NAN,
+        f64::from_bits(0x7ff8_dead_beef_1234), // NaN with payload
+        f64::from_bits(0xfff0_0000_0000_0001), // signalling-style NaN
+        f64::MAX,
+        -f64::MAX,
+        1.0 + f64::EPSILON,
+    ];
+    let (back, _) = {
+        let buf = encode_frame(&ClusterMsg::Sigma(specials.clone()), 3);
+        decode_frame(&buf).expect("decode specials")
+    };
+    let ClusterMsg::Sigma(got) = back else {
+        panic!("kind lost")
+    };
+    assert!(
+        bits_equal(&got, &specials),
+        "special values drifted: {:?} vs {:?}",
+        got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        specials.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+    );
+    // and inside a matrix payload
+    let m = Mat::from_vec(specials.len(), 1, specials.clone()).unwrap();
+    let buf = encode_frame(&ClusterMsg::VResp(m), 0);
+    let (ClusterMsg::VResp(got), _) = decode_frame(&buf).expect("decode mat") else {
+        panic!("kind lost")
+    };
+    assert!(bits_equal(got.data(), &specials));
+}
+
+#[test]
+fn truncated_frames_are_rejected_at_every_cut() {
+    PropRunner::new(0x7a11, 12).run("truncation", |rng| {
+        let msg = ClusterMsg::UBlock {
+            r0: 3,
+            data: rand_mat(rng, 1 + rng.next_below(4) as usize, 1 + rng.next_below(6) as usize),
+        };
+        let buf = encode_frame(&msg, 17);
+        for cut in 0..buf.len() {
+            prop_assert!(
+                decode_frame(&buf[..cut]).is_err(),
+                "prefix of {cut}/{} bytes accepted",
+                buf.len()
+            );
+        }
+        // stream decoder: same rejection via read_exact
+        let mut cur = std::io::Cursor::new(buf[..buf.len() - 1].to_vec());
+        prop_assert!(read_frame(&mut cur).is_err(), "stream accepted truncation");
+        Ok(())
+    });
+}
+
+#[test]
+fn tampered_frames_are_rejected() {
+    let msg = ClusterMsg::Sigma(vec![1.0, 2.0, 3.0]);
+    let good = encode_frame(&msg, 8);
+    assert!(decode_frame(&good).is_ok());
+
+    // wrong magic
+    let mut bad = good.clone();
+    bad[0] ^= 0x01;
+    assert!(decode_frame(&bad).is_err(), "bad magic accepted");
+
+    // version drift
+    let mut bad = good.clone();
+    bad[4] = 0xfe;
+    let err = decode_frame(&bad).unwrap_err().to_string();
+    assert!(err.contains("version"), "want version error, got: {err}");
+
+    // unknown message kind
+    let mut bad = good.clone();
+    bad[6..8].copy_from_slice(&999u16.to_le_bytes());
+    let err = decode_frame(&bad).unwrap_err().to_string();
+    assert!(err.contains("unknown"), "want unknown-kind error, got: {err}");
+
+    // oversized length prefix (must be rejected before any allocation)
+    let mut bad = good.clone();
+    bad[16..24].copy_from_slice(&(MAX_FRAME_PAYLOAD + 1).to_le_bytes());
+    assert!(decode_frame(&bad).is_err(), "oversized length accepted");
+
+    // trailing junk after the declared payload
+    let mut bad = good.clone();
+    bad.push(0xAA);
+    assert!(decode_frame(&bad).is_err(), "trailing junk accepted");
+
+    // hostile inner length prefix: header consistent, but the payload
+    // claims far more elements than the bytes that follow
+    let mut bad = good.clone();
+    let lie = (u64::MAX / 16).to_le_bytes();
+    bad[FRAME_HEADER_LEN..FRAME_HEADER_LEN + 8].copy_from_slice(&lie);
+    let err = decode_frame(&bad).unwrap_err().to_string();
+    assert!(
+        err.contains("overruns") || err.contains("truncated"),
+        "want overrun error, got: {err}"
+    );
+}
+
+#[test]
+fn empty_and_boundary_shapes_roundtrip() {
+    // the degenerate shapes sharding can produce: single-row shards,
+    // single-column users, zero-length vectors
+    for msg in [
+        ClusterMsg::Sigma(Vec::new()),
+        ClusterMsg::YMasked(vec![f64::from_bits(0x8000_0000_0000_0000)]), // just -0.0
+        ClusterMsg::UBlock { r0: 0, data: Mat::zeros(1, 1) },
+        ClusterMsg::Batch { batch: 0, user: 0, share: Vec::new() },
+    ] {
+        let kind = msg.kind();
+        let buf = encode_frame(&msg, 0);
+        let (back, _) = decode_frame(&buf).expect("boundary decode");
+        assert_eq!(back.kind(), kind);
+    }
+}
