@@ -127,6 +127,107 @@ fn main() {
          their exact solver); the order of magnitude is the claim."
     );
 
+    // ---- user-side data ingest: in-memory vs streamed (JSON rows) ------
+    // The dataset subsystem's cost model: the same cluster SVD with the
+    // user partitions fully resident vs streamed from disk through each
+    // on-disk format at two chunk sizes. `user_peak_part_bytes` is the
+    // high-water mark of partition rows any user held at once — the
+    // number that lets the user side exceed RAM on billion-scale inputs.
+    section(
+        "Tab 2/ingest",
+        "user partition ingest: in-memory vs streamed from disk — JSON rows",
+    );
+    {
+        use fedsvd::cluster::{
+            run_app_cluster, run_app_cluster_streamed, ClusterApp, ClusterConfig, UserData,
+        };
+        use fedsvd::data::{split_matrix, MatrixFormat, RowChunkReader, SplitOptions};
+
+        let (m, n) = (512usize, 96usize);
+        let x = synthetic_powerlaw(m, n, 0.01, 13);
+        let parts = split_columns(&x, 2).unwrap();
+        let ccfg = ClusterConfig {
+            shards: 8,
+            mem_budget: 64 << 20,
+            spill_root: None,
+        };
+        let emit = |format: &str, chunk_rows: usize, wall_s: f64, part_peak: u64| {
+            println!(
+                "{{\"bench\":\"tab2_data_ingest\",\"m\":{m},\"n\":{n},\
+                 \"format\":\"{format}\",\"chunk_rows\":{chunk_rows},\
+                 \"wall_s\":{wall_s:.6},\"user_peak_rss\":{},\
+                 \"user_peak_part_bytes\":{part_peak}}}",
+                process_peak_rss_bytes()
+            );
+        };
+
+        let t0 = std::time::Instant::now();
+        let (out, stats, _) = run_app_cluster(
+            &parts,
+            &cfg(),
+            &ccfg,
+            CpuBackend::global(),
+            &ClusterApp::None,
+        )
+        .unwrap();
+        std::hint::black_box(&out.s);
+        emit("mem", 0, t0.elapsed().as_secs_f64(), stats.user_peak_part_bytes);
+
+        for format in [MatrixFormat::DenseBin, MatrixFormat::Csv] {
+            for chunk_rows in [32usize, 128] {
+                let dir = std::env::temp_dir().join(format!(
+                    "fedsvd_bench_ingest_{}_{}_{}",
+                    format.name(),
+                    chunk_rows,
+                    std::process::id()
+                ));
+                let _ = std::fs::remove_dir_all(&dir);
+                let manifest = split_matrix(
+                    &x,
+                    &dir,
+                    &SplitOptions {
+                        users: 2,
+                        format,
+                        chunk_rows,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+                let readers: Vec<RowChunkReader> = (0..2)
+                    .map(|i| manifest.open_partition(&dir, i).unwrap())
+                    .collect();
+                let atts = manifest.attests();
+                let data: Vec<UserData<'_>> = readers
+                    .iter()
+                    .enumerate()
+                    .map(|(i, r)| UserData::Stream {
+                        reader: r,
+                        chunk_rows,
+                        attest: Some(atts[i]),
+                    })
+                    .collect();
+                let t0 = std::time::Instant::now();
+                let (out, stats, _) = run_app_cluster_streamed(
+                    &data,
+                    Some(&atts),
+                    &cfg(),
+                    &ccfg,
+                    CpuBackend::global(),
+                    &ClusterApp::None,
+                )
+                .unwrap();
+                std::hint::black_box(&out.s);
+                emit(
+                    format.name(),
+                    chunk_rows,
+                    t0.elapsed().as_secs_f64(),
+                    stats.user_peak_part_bytes,
+                );
+                let _ = std::fs::remove_dir_all(&dir);
+            }
+        }
+    }
+
     // ---- cluster shard-scaling sweep (JSON rows) -----------------------
     // The out-of-core path behind the billion-scale claim, at laptop
     // scale: same matrix, increasing shard counts, CSP budget pinned

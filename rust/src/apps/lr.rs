@@ -143,8 +143,10 @@ pub(crate) fn validate_lr(parts: &[Mat], y: &[f64], label_owner: usize) -> Resul
 }
 
 /// Protocol flags shared by both execution modes: full SVD, no factor
-/// recovery — `U'`, `Σ`, `V'ᵀ` never leave the CSP (paper §4).
-pub(crate) fn lr_config(cfg: &FedSvdConfig) -> FedSvdConfig {
+/// recovery — `U'`, `Σ`, `V'ᵀ` never leave the CSP (paper §4). Public
+/// so disk-backed drivers (`run_app_cluster_streamed`, `fedsvd serve
+/// --data`) can derive the same configuration without in-memory parts.
+pub fn lr_config(cfg: &FedSvdConfig) -> FedSvdConfig {
     let mut app_cfg = cfg.clone();
     app_cfg.mode = SvdMode::Full;
     app_cfg.recover_u = false;

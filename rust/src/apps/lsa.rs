@@ -84,11 +84,27 @@ pub fn run_federated_lsa_cluster(
 /// Validation + protocol flags shared by both execution modes.
 pub(crate) fn lsa_config(parts: &[Mat], rank: usize, cfg: &FedSvdConfig) -> Result<FedSvdConfig> {
     super::validate_rank("lsa", parts, rank)?;
+    Ok(lsa_flags(rank, cfg))
+}
+
+/// [`lsa_config`] from the federation's dimensions alone — for
+/// manifest/disk-backed drivers that hold no in-memory parts.
+pub fn lsa_config_dims(
+    m: usize,
+    n: usize,
+    rank: usize,
+    cfg: &FedSvdConfig,
+) -> Result<FedSvdConfig> {
+    super::validate_rank_dims("lsa", m, n, rank)?;
+    Ok(lsa_flags(rank, cfg))
+}
+
+fn lsa_flags(rank: usize, cfg: &FedSvdConfig) -> FedSvdConfig {
     let mut app_cfg = cfg.clone();
     app_cfg.mode = SvdMode::Truncated { rank };
     app_cfg.recover_u = true;
     app_cfg.recover_v = true;
-    Ok(app_cfg)
+    app_cfg
 }
 
 /// `Σᵣ^{1/2}·Vᵢᵀ`: scale row r of the user's `Vᵢᵀ` by `√σᵣ`. One shared

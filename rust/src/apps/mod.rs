@@ -25,11 +25,18 @@ pub(crate) fn validate_rank(app: &str, parts: &[Mat], rank: usize) -> Result<()>
     if parts.is_empty() {
         return Err(Error::Protocol(format!("{app}: no users")));
     }
+    let m = parts[0].rows();
+    let n: usize = parts.iter().map(|p| p.cols()).sum();
+    validate_rank_dims(app, m, n, rank)
+}
+
+/// [`validate_rank`] from the federation's agreed dimensions alone — a
+/// distributed process on the manifest path holds only its own
+/// partition, so the shapes come from the manifest.
+pub(crate) fn validate_rank_dims(app: &str, m: usize, n: usize, rank: usize) -> Result<()> {
     if rank == 0 {
         return Err(Error::Shape(format!("{app}: rank 0")));
     }
-    let m = parts[0].rows();
-    let n: usize = parts.iter().map(|p| p.cols()).sum();
     if rank > m.min(n) {
         return Err(Error::Shape(format!(
             "{app}: rank {rank} exceeds min(m={m}, n={n})"

@@ -90,12 +90,28 @@ pub fn run_federated_pca_cluster(
 /// Validation + protocol flags shared by both execution modes.
 pub(crate) fn pca_config(parts: &[Mat], rank: usize, cfg: &FedSvdConfig) -> Result<FedSvdConfig> {
     super::validate_rank("pca", parts, rank)?;
+    Ok(pca_flags(rank, cfg))
+}
+
+/// [`pca_config`] from the federation's dimensions alone — for
+/// manifest/disk-backed drivers that hold no in-memory parts.
+pub fn pca_config_dims(
+    m: usize,
+    n: usize,
+    rank: usize,
+    cfg: &FedSvdConfig,
+) -> Result<FedSvdConfig> {
+    super::validate_rank_dims("pca", m, n, rank)?;
+    Ok(pca_flags(rank, cfg))
+}
+
+fn pca_flags(rank: usize, cfg: &FedSvdConfig) -> FedSvdConfig {
     let mut app_cfg = cfg.clone();
     app_cfg.mode = SvdMode::Truncated { rank };
     app_cfg.recover_u = true;
     app_cfg.recover_v = false; // paper: "ignores the computation and
                                // transmission of Σ, V'ᵀ to improve efficiency"
-    Ok(app_cfg)
+    app_cfg
 }
 
 /// The paper's PCA precision metric: projection distance

@@ -23,9 +23,10 @@
 //! beyond its metrics — exactly the paper's visibility matrix.
 
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
+use crate::data::{Manifest, PartitionAttest, RowChunkReader};
 use crate::linalg::{GemmBackend, Mat};
 use crate::metrics::MetricsRecorder;
 use crate::net::link::{PartyId, CSP, TA, USER_BASE};
@@ -34,7 +35,8 @@ use crate::transport::{TcpTransport, Transport};
 use crate::util::{Error, Result};
 
 use super::runtime::{
-    csp_body, labels, run_party, ta_body, user_body, validate_cluster_inputs, ClusterApp,
+    csp_body, derive_dims, labels, run_party, ta_body, user_body, validate_cluster_shapes,
+    ClusterApp, UserData,
 };
 use crate::protocol::FedSvdConfig;
 
@@ -170,6 +172,29 @@ pub struct DistOutcome {
     pub real_bytes: u64,
     /// Shards actually ingested (after clamping).
     pub shards: usize,
+    /// Users only, manifest-backed runs: high-water mark of partition
+    /// rows resident at once (bytes) — bounded by a chunk, never the
+    /// partition. 0 on the demo path (partition fully in memory).
+    pub part_peak_bytes: u64,
+}
+
+/// Where this process's party data comes from.
+pub enum PartyData<'a> {
+    /// Demo deployment: every process derives the full set of user
+    /// blocks deterministically and touches only its own role's slice.
+    DemoParts(&'a [Mat]),
+    /// Manifest-backed deployment (`fedsvd serve --data`): shapes come
+    /// from the shared [`Manifest`]; this process opens **only its own
+    /// partition** (users), verifies it locally (shape + checksum), and
+    /// attests it to the TA before any mask seed is released. User
+    /// partitions stream from disk in `chunk_rows`-bounded chunks.
+    Manifest {
+        manifest: &'a Manifest,
+        /// Directory manifest paths are relative to.
+        root: &'a Path,
+        /// Row-chunk bound for the user-side streaming passes.
+        chunk_rows: usize,
+    },
 }
 
 /// Map a human fault-point name to the round label it fires after
@@ -326,8 +351,40 @@ pub fn run_party_distributed(
     backend: &dyn GemmBackend,
     app: &ClusterApp<'_>,
 ) -> Result<DistOutcome> {
-    let (k, m, widths, n, b, shard_rows, n_batches) =
-        validate_cluster_inputs(parts, cfg, dcfg.shards, app)?;
+    run_party_distributed_with(&PartyData::DemoParts(parts), cfg, dcfg, backend, app)
+}
+
+/// [`run_party_distributed`] over an explicit [`PartyData`] source — the
+/// entry point `fedsvd serve --data <manifest>` uses. On the manifest
+/// path a user process opens only its own partition and streams it from
+/// disk; the TA validates every user's attested shape/checksum against
+/// the manifest at handshake.
+pub fn run_party_distributed_with(
+    data: &PartyData<'_>,
+    cfg: &FedSvdConfig,
+    dcfg: &DistConfig,
+    backend: &dyn GemmBackend,
+    app: &ClusterApp<'_>,
+) -> Result<DistOutcome> {
+    let (m, widths) = match data {
+        PartyData::DemoParts(parts) => {
+            let sources: Vec<UserData<'_>> = parts.iter().map(UserData::Mem).collect();
+            derive_dims(&sources)?
+        }
+        PartyData::Manifest { manifest, .. } => (manifest.rows, manifest.widths()),
+    };
+    // only the process actually holding y can length-check it: on the
+    // manifest path that is the label owner (everyone else runs LR with
+    // an empty slice and never touches it)
+    let require_labels = match data {
+        PartyData::DemoParts(_) => true,
+        PartyData::Manifest { .. } => matches!(
+            (app, dcfg.role),
+            (ClusterApp::Lr { label_owner, .. }, PartyRole::User(i)) if *label_owner == i
+        ),
+    };
+    let (k, n, b, shard_rows, n_batches) =
+        validate_cluster_shapes(m, &widths, cfg, dcfg.shards, app, require_labels)?;
     if let PartyRole::User(i) = dcfg.role {
         if i >= k {
             return Err(Error::Config(format!("role user{i} but only {k} users")));
@@ -372,10 +429,16 @@ pub fn run_party_distributed(
         round_traffic: Vec::new(),
         real_bytes: 0,
         shards: n_batches,
+        part_peak_bytes: 0,
     };
     match dcfg.role {
         PartyRole::Ta => {
-            out.metrics = run_party(link, |l| ta_body(l, &widths, cfg, m, n, b))?;
+            let expected: Option<Vec<PartitionAttest>> = match data {
+                PartyData::DemoParts(_) => None,
+                PartyData::Manifest { manifest, .. } => Some(manifest.attests()),
+            };
+            out.metrics =
+                run_party(link, |l| ta_body(l, &widths, cfg, m, n, b, expected.as_deref()))?;
         }
         PartyRole::Csp => {
             let spill_root = dcfg
@@ -395,10 +458,29 @@ pub fn run_party_distributed(
             out.shard_spills = csp.spills;
         }
         PartyRole::User(i) => {
+            let reader: RowChunkReader;
+            let ud = match data {
+                PartyData::DemoParts(parts) => UserData::Mem(&parts[i]),
+                PartyData::Manifest {
+                    manifest,
+                    root,
+                    chunk_rows,
+                } => {
+                    // local verification (shape + checksum) happens here;
+                    // the attestation carries the *measured* values of
+                    // the opened file, so the TA catches a silo whose
+                    // manifest copy diverged from the federation's
+                    let (r, attest) = manifest.open_partition_attested(root, i)?;
+                    reader = r;
+                    UserData::Stream {
+                        reader: &reader,
+                        chunk_rows: *chunk_rows,
+                        attest: Some(attest),
+                    }
+                }
+            };
             let uo = run_party(link, |l| {
-                user_body(
-                    l, cfg, backend, app, &parts[i], i, k, m, n_batches, shard_rows,
-                )
+                user_body(l, cfg, backend, app, &ud, i, k, m, n_batches, shard_rows)
             })?;
             out.metrics = uo.metrics;
             out.sigma = uo.sigma.unwrap_or_default();
@@ -408,6 +490,7 @@ pub fn run_party_distributed(
             out.train_mse = uo.mse;
             out.proj = uo.proj;
             out.embed = uo.embed;
+            out.part_peak_bytes = uo.part_peak;
         }
     }
     out.round_traffic = transport.seen_ledger();

@@ -43,6 +43,17 @@
 //! post-processing inside the user threads; the entry points are the
 //! `run_federated_*_cluster` functions in `crate::apps` and
 //! `coordinator::Session::{run_pca, run_lr, run_lsa}`.
+//!
+//! Party data flows through [`runtime::UserData`]: fully resident
+//! (`Mem`) or streamed from disk in bounded row chunks (`Stream` over
+//! [`crate::data::RowChunkReader`]) — disk-backed users mask/upload per
+//! P-block-aligned panel and never hold their whole partition
+//! ([`ClusterStats::user_peak_part_bytes`] pins the high-water mark).
+//! Manifest-backed deployments ([`dist::PartyData::Manifest`], `fedsvd
+//! serve --data`) additionally run a pre-seed attestation round: every
+//! user reports its partition's (rows, cols, checksum) to the TA, which
+//! verifies them against the [`crate::data::Manifest`] before releasing
+//! any mask seed.
 
 pub mod dist;
 pub mod mailbox;
@@ -52,13 +63,14 @@ pub mod runtime;
 pub mod shard;
 
 pub use dist::{
-    parse_fault_point, run_party_distributed, DistConfig, DistOutcome, PartyRole, PeerSpec,
+    parse_fault_point, run_party_distributed, run_party_distributed_with, DistConfig,
+    DistOutcome, PartyData, PartyRole, PeerSpec,
 };
 pub use mailbox::Mailbox;
 pub use ooc::{ooc_svd, OocParams, OocSvdResult};
 pub use round::RoundScheduler;
 pub use runtime::{
-    labels, run_app_cluster, run_app_cluster_tcp, run_fedsvd_cluster, run_fedsvd_cluster_tcp,
-    AppClusterOut, ClusterApp, ClusterConfig, ClusterStats,
+    labels, run_app_cluster, run_app_cluster_streamed, run_app_cluster_tcp, run_fedsvd_cluster,
+    run_fedsvd_cluster_tcp, AppClusterOut, ClusterApp, ClusterConfig, ClusterStats, UserData,
 };
 pub use shard::ShardStore;

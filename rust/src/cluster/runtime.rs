@@ -61,12 +61,13 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::bignum::BigUint;
+use crate::data::{PartitionAttest, RowChunkReader};
 use crate::linalg::{GemmBackend, Mat, SvdResult};
 use crate::mask::block_diag::BlockDiagMat;
 use crate::mask::delivery::SeedDelivery;
 use crate::mask::{block_orthogonal, mask_matrix_with};
 use crate::metrics::MetricsRecorder;
-use crate::net::link::{PartyId, CSP, USER_BASE};
+use crate::net::link::{PartyId, CSP, TA, USER_BASE};
 use crate::net::NetSim;
 use crate::protocol::fedsvd::{MaskRep, QSliceRep};
 use crate::protocol::{v_recovery, FedSvdConfig, FedSvdOutput, SvdMode};
@@ -127,6 +128,11 @@ pub struct ClusterStats {
     pub round_traffic: Vec<(u64, u64)>,
     /// Total bytes actually written to sockets (0 on `local-sim`).
     pub real_bytes: u64,
+    /// Largest partition-row residency any user reached (bytes). 0 on
+    /// in-memory runs; on disk-backed runs this is the high-water mark
+    /// of partition rows materialized at once — provably a chunk, not
+    /// the partition (pinned by the data-backed smoke test).
+    pub user_peak_part_bytes: u64,
 }
 
 /// Which §4 application rides on a cluster run — the app-specific rounds
@@ -146,6 +152,75 @@ pub enum ClusterApp<'a> {
     /// FedSVD-LSA: users additionally build their doc-embedding blocks
     /// `Σᵣ^{1/2}·Vᵢᵀ` locally after the blinded `Vᵢᵀ` recovery.
     Lsa,
+}
+
+/// One user's partition as its party loop consumes it.
+///
+/// The party bodies only ever pull bounded row chunks through this seam,
+/// so a [`UserData::Stream`] user masks and uploads its shards — and
+/// runs its PCA/LR post-processing — without its partition ever being
+/// fully resident: the ingest-side mirror of the CSP's out-of-core
+/// discipline. [`UserData::Mem`] keeps the PR-2/3 in-memory semantics
+/// bit-for-bit (whole-matrix fused masking).
+pub enum UserData<'a> {
+    /// Fully resident partition (demo data, benches, existing tests).
+    Mem(&'a Mat),
+    /// Disk-backed partition, streamed in bounded row chunks.
+    Stream {
+        reader: &'a RowChunkReader,
+        /// Row-chunk bound for the app-side streaming passes (the upload
+        /// pass is bounded by the shard size, aligned to P's blocks).
+        chunk_rows: usize,
+        /// Attested to the TA when the run is manifest-backed; must be
+        /// `Some` exactly when the driver passes an expected-attestation
+        /// list to the TA.
+        attest: Option<PartitionAttest>,
+    },
+}
+
+impl UserData<'_> {
+    pub fn rows(&self) -> usize {
+        match self {
+            UserData::Mem(m) => m.rows(),
+            UserData::Stream { reader, .. } => reader.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            UserData::Mem(m) => m.cols(),
+            UserData::Stream { reader, .. } => reader.cols(),
+        }
+    }
+
+    /// Materialize rows `[r0, r1)` of the partition.
+    pub fn read_rows(&self, r0: usize, r1: usize) -> Result<Mat> {
+        match self {
+            UserData::Mem(m) => Ok(m.slice(r0, r1, 0, m.cols())),
+            UserData::Stream { reader, .. } => reader.read_rows(r0, r1),
+        }
+    }
+
+    fn attest(&self) -> Option<PartitionAttest> {
+        match self {
+            UserData::Mem(_) => None,
+            UserData::Stream { attest, .. } => *attest,
+        }
+    }
+}
+
+/// Derive the federation's `(m, per-user widths)` from the data
+/// sources, checking that every user agrees on the row count — the one
+/// shape-derivation point shared by the thread fabrics and the
+/// distributed demo path.
+pub(crate) fn derive_dims(data: &[UserData<'_>]) -> Result<(usize, Vec<usize>)> {
+    let m = data.first().map_or(0, |d| d.rows());
+    for d in data {
+        if d.rows() != m {
+            return Err(Error::Shape("users disagree on m".into()));
+        }
+    }
+    Ok((m, data.iter().map(|d| d.cols()).collect()))
 }
 
 /// Per-user application results produced inside the user threads,
@@ -176,6 +251,10 @@ pub mod labels {
     pub const PK: u64 = 2;
     /// CSP → users: the assembled public-key list.
     pub const PKLIST: u64 = 3;
+    /// Users → TA: partition attestations of a manifest-backed run.
+    /// Precedes `PSEED`: the TA releases no mask seed until every
+    /// user's (rows, cols, checksum) matches the manifest.
+    pub const ATTEST: u64 = 4;
     /// + shard index: the k concurrent secagg uploads of one shard.
     pub const UPLOAD_BASE: u64 = 1_000;
     /// + emitted chunk index: CSP streaming `U'` row blocks to users.
@@ -278,6 +357,9 @@ pub(crate) fn run_party<T>(
 
 pub(crate) struct UserOut {
     pub(crate) metrics: MetricsRecorder,
+    /// High-water mark of partition rows resident at once (bytes);
+    /// 0 for in-memory users.
+    pub(crate) part_peak: u64,
     pub(crate) q_slice: crate::mask::block_diag::BlockDiagSlice,
     pub(crate) p: Option<BlockDiagMat>,
     pub(crate) sigma: Option<Vec<f64>>,
@@ -299,28 +381,26 @@ pub(crate) struct CspOut {
     pub(crate) spills: u64,
 }
 
-/// Shape/flag validation shared by every fabric (threads or processes).
-/// Returns `(k, m, widths, n, b, shard_rows, n_batches)`.
-#[allow(clippy::type_complexity)]
-pub(crate) fn validate_cluster_inputs(
-    parts: &[Mat],
+/// Shape/flag validation shared by every fabric (threads or processes),
+/// from the federation's agreed dimensions alone — a distributed process
+/// holds only its own partition, so shapes come from the manifest there.
+/// `require_labels` controls the strict LR label-length check: a
+/// non-owner process of a manifest run never holds `y` and passes an
+/// empty slice.
+pub(crate) fn validate_cluster_shapes(
+    m: usize,
+    widths: &[usize],
     cfg: &FedSvdConfig,
     shards: usize,
     app: &ClusterApp<'_>,
-) -> Result<(usize, usize, Vec<usize>, usize, usize, usize, usize)> {
-    let k = parts.len();
+    require_labels: bool,
+) -> Result<(usize, usize, usize, usize, usize)> {
+    let k = widths.len();
     if k < 2 {
         return Err(proto("needs at least 2 users (secure aggregation)"));
     }
-    let m = parts[0].rows();
-    for p in parts {
-        if p.rows() != m {
-            return Err(Error::Shape("users disagree on m".into()));
-        }
-    }
-    let widths: Vec<usize> = parts.iter().map(|p| p.cols()).collect();
     let n: usize = widths.iter().sum();
-    if m == 0 || n == 0 {
+    if m == 0 || n == 0 || widths.iter().any(|&w| w == 0) {
         return Err(Error::Shape("empty federated matrix".into()));
     }
     if !cfg.opts.block_masks {
@@ -334,7 +414,7 @@ pub(crate) fn validate_cluster_inputs(
         if *label_owner >= k {
             return Err(Error::Protocol("lr: bad label owner".into()));
         }
-        if y.len() != m {
+        if (require_labels || !y.is_empty()) && y.len() != m {
             return Err(Error::Shape(format!(
                 "lr: {} labels for {} samples",
                 y.len(),
@@ -345,7 +425,7 @@ pub(crate) fn validate_cluster_inputs(
     let b = cfg.block_size.max(1);
     let shard_rows = m.div_ceil(shards.max(1)).max(1);
     let n_batches = m.div_ceil(shard_rows);
-    Ok((k, m, widths, n, b, shard_rows, n_batches))
+    Ok((k, n, b, shard_rows, n_batches))
 }
 
 /// Run FedSVD on the sharded multi-party runtime (in-process threads
@@ -387,7 +467,26 @@ pub fn run_app_cluster(
     backend: &dyn GemmBackend,
     app: &ClusterApp<'_>,
 ) -> Result<(FedSvdOutput, ClusterStats, AppClusterOut)> {
-    run_app_cluster_impl(parts, cfg, ccfg, backend, app, Fabric::Local)
+    let data: Vec<UserData<'_>> = parts.iter().map(UserData::Mem).collect();
+    run_app_cluster_impl(&data, None, cfg, ccfg, backend, app, Fabric::Local)
+}
+
+/// [`run_app_cluster`] over explicit per-user data sources — the entry
+/// point for disk-backed federations on the thread fabrics. A
+/// [`UserData::Stream`] user masks and uploads its shards chunk-by-chunk
+/// from disk (partition never fully resident); `expected` arms the TA's
+/// manifest attestation check (pass `Manifest::attests()` for
+/// manifest-backed runs, `None` otherwise — it must be `Some` exactly
+/// when the stream sources carry attestations).
+pub fn run_app_cluster_streamed(
+    data: &[UserData<'_>],
+    expected: Option<&[PartitionAttest]>,
+    cfg: &FedSvdConfig,
+    ccfg: &ClusterConfig,
+    backend: &dyn GemmBackend,
+    app: &ClusterApp<'_>,
+) -> Result<(FedSvdOutput, ClusterStats, AppClusterOut)> {
+    run_app_cluster_impl(data, expected, cfg, ccfg, backend, app, Fabric::Local)
 }
 
 /// [`run_app_cluster`] on real sockets: the same party threads, but
@@ -403,7 +502,8 @@ pub fn run_app_cluster_tcp(
     backend: &dyn GemmBackend,
     app: &ClusterApp<'_>,
 ) -> Result<(FedSvdOutput, ClusterStats, AppClusterOut)> {
-    run_app_cluster_impl(parts, cfg, ccfg, backend, app, Fabric::TcpLoopback)
+    let data: Vec<UserData<'_>> = parts.iter().map(UserData::Mem).collect();
+    run_app_cluster_impl(&data, None, cfg, ccfg, backend, app, Fabric::TcpLoopback)
 }
 
 enum Fabric {
@@ -450,15 +550,34 @@ fn join_party<T>(
 }
 
 fn run_app_cluster_impl(
-    parts: &[Mat],
+    data: &[UserData<'_>],
+    expected: Option<&[PartitionAttest]>,
     cfg: &FedSvdConfig,
     ccfg: &ClusterConfig,
     backend: &dyn GemmBackend,
     app: &ClusterApp<'_>,
     fabric: Fabric,
 ) -> Result<(FedSvdOutput, ClusterStats, AppClusterOut)> {
-    let (k, m, widths, n, b, shard_rows, n_batches) =
-        validate_cluster_inputs(parts, cfg, ccfg.shards, app)?;
+    let (m, widths) = derive_dims(data)?;
+    // the attestation round only works when both sides agree to run it:
+    // an expected table without a sender (or vice versa) would leave the
+    // TA blocked on a DataMeta that never comes — fail loudly instead
+    let attested = data.iter().filter(|d| d.attest().is_some()).count();
+    if expected.is_some() && attested != data.len() {
+        return Err(Error::Config(format!(
+            "attestation table supplied but only {attested} of {} user data \
+             sources carry an attestation",
+            data.len()
+        )));
+    }
+    if expected.is_none() && attested > 0 {
+        return Err(Error::Config(format!(
+            "{attested} user data sources carry attestations but no expected \
+             table was supplied for the TA"
+        )));
+    }
+    let (k, n, b, shard_rows, n_batches) =
+        validate_cluster_shapes(m, &widths, cfg, ccfg.shards, app, true)?;
     let spill_root = ccfg
         .spill_root
         .clone()
@@ -498,7 +617,7 @@ fn run_app_cluster_impl(
             let widths = widths.clone();
             scope.spawn(move || {
                 let r = run_party(ta_ep.as_transport(), |link| {
-                    ta_body(link, &widths, cfg, m, n, b)
+                    ta_body(link, &widths, cfg, m, n, b, expected)
                 });
                 (r, ta_ep.sent_ledger())
             })
@@ -518,11 +637,11 @@ fn run_app_cluster_impl(
             .into_iter()
             .enumerate()
             .map(|(i, ep)| {
+                let d = &data[i];
                 scope.spawn(move || {
                     let r = run_party(ep.as_transport(), |link| {
                         user_body(
-                            link, cfg, backend, app, &parts[i], i, k, m, n_batches,
-                            shard_rows,
+                            link, cfg, backend, app, d, i, k, m, n_batches, shard_rows,
                         )
                     });
                     (r, ep.sent_ledger())
@@ -581,8 +700,10 @@ fn run_app_cluster_impl(
     let mut q_slices = Vec::with_capacity(k);
     let mut v_parts = Vec::new();
     let mut app_out = AppClusterOut::default();
+    let mut user_peak_part_bytes = 0u64;
     for (idx, uo) in users_out.into_iter().enumerate() {
         metrics.absorb_prefixed(&format!("user{idx}"), &uo.metrics);
+        user_peak_part_bytes = user_peak_part_bytes.max(uo.part_peak);
         if idx == 0 {
             p_opt = uo.p;
             u = uo.u;
@@ -615,6 +736,7 @@ fn run_app_cluster_impl(
         shard_spills: csp_out.spills,
         round_traffic,
         real_bytes,
+        user_peak_part_bytes,
     };
     let out = FedSvdOutput {
         u,
@@ -646,6 +768,7 @@ pub(crate) fn ta_body(
     m: usize,
     n: usize,
     b: usize,
+    expected: Option<&[PartitionAttest]>,
 ) -> Result<MetricsRecorder> {
     let k = widths.len();
     let mut metrics = MetricsRecorder::new();
@@ -653,6 +776,49 @@ pub(crate) fn ta_body(
     let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
     let p_seed = rng.next_u64();
     let q_seed = rng.next_u64();
+
+    // ---- manifest attestation: verify every user's partition before
+    // ---- releasing a single mask seed (data-backed runs only)
+    if let Some(exp) = expected {
+        if exp.len() != k {
+            return Err(proto("attestation table does not match user count"));
+        }
+        let (na, ba) = link.meters();
+        metrics.begin("step0: data attestation", na, ba);
+        let mut seen = vec![false; k];
+        for _ in 0..k {
+            let Msg::DataMeta {
+                user,
+                rows,
+                cols,
+                checksum,
+            } = link.recv_where(|mg| matches!(mg, Msg::DataMeta { .. }))?
+            else {
+                return Err(proto("expected a partition attestation"));
+            };
+            if user >= k || seen[user] {
+                return Err(proto("bad or duplicate partition attestation"));
+            }
+            seen[user] = true;
+            let e = &exp[user];
+            if rows != e.rows || cols != e.cols {
+                return Err(proto(&format!(
+                    "user{user} attests a {rows}×{cols} partition, manifest says {}×{}",
+                    e.rows, e.cols
+                )));
+            }
+            if checksum != e.checksum {
+                return Err(proto(&format!(
+                    "user{user} partition checksum {checksum:016x} does not match \
+                     the manifest ({:016x}) — the silo is serving different data \
+                     than the federation agreed on",
+                    e.checksum
+                )));
+            }
+        }
+        let (nb, bb) = link.meters();
+        metrics.end(nb, bb);
+    }
 
     let (n0, b0) = link.meters();
     metrics.begin("step1: mask init+delivery", n0, b0);
@@ -682,13 +848,58 @@ pub(crate) fn ta_body(
     Ok(metrics)
 }
 
+/// The P-block cover of rows `[r0, r1)`: block indices `[bi0, bi1)` of
+/// `p` spanning rows `[a0, a1) ⊇ [r0, r1)`. A streamed user masks one
+/// cover-aligned partition panel per upload shard — left-mask mixing is
+/// confined to P's diagonal blocks, so rows outside the cover can never
+/// contribute to the shard.
+fn p_block_cover(p: &BlockDiagMat, r0: usize, r1: usize) -> (usize, usize, usize, usize) {
+    let starts = p.starts();
+    let blocks = p.blocks();
+    let bi0 = match starts.binary_search(&r0) {
+        Ok(idx) => idx,
+        Err(idx) => idx - 1,
+    };
+    let mut bi1 = bi0;
+    while starts[bi1] + blocks[bi1].rows() < r1 {
+        bi1 += 1;
+    }
+    (starts[bi0], starts[bi1] + blocks[bi1].rows(), bi0, bi1 + 1)
+}
+
+/// `Xᵢ·w` with the partition pulled in bounded row chunks (LR partial
+/// predictions of a disk-backed user).
+fn stream_mul_vec(
+    data: &UserData<'_>,
+    m: usize,
+    w: &[f64],
+    part_peak: &mut u64,
+) -> Result<Vec<f64>> {
+    match data {
+        UserData::Mem(xi) => xi.mul_vec(w),
+        UserData::Stream { chunk_rows, .. } => {
+            let step = (*chunk_rows).max(1);
+            let mut out = Vec::with_capacity(m);
+            let mut r0 = 0usize;
+            while r0 < m {
+                let r1 = (r0 + step).min(m);
+                let chunk = data.read_rows(r0, r1)?;
+                *part_peak = (*part_peak).max((chunk.rows() * chunk.cols() * 8) as u64);
+                out.extend(chunk.mul_vec(w)?);
+                r0 = r1;
+            }
+            Ok(out)
+        }
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn user_body(
     link: &PartyLink<'_>,
     cfg: &FedSvdConfig,
     backend: &dyn GemmBackend,
     app: &ClusterApp<'_>,
-    xi: &Mat,
+    data: &UserData<'_>,
     i: usize,
     k: usize,
     m: usize,
@@ -697,6 +908,24 @@ pub(crate) fn user_body(
 ) -> Result<UserOut> {
     let mut metrics = MetricsRecorder::new();
     let mut rng = Xoshiro256::seed_from_u64(cfg.seed).derive(0x75e2 + i as u64);
+    let mut part_peak = 0u64;
+
+    // ---- step 0: attest the partition (manifest-backed runs) ----------
+    // Precedes every mask delivery: the TA validates all k attestations
+    // against the manifest before releasing the P seed.
+    if let Some(att) = data.attest() {
+        link.enter(labels::ATTEST, k)?;
+        link.send(
+            TA,
+            Msg::DataMeta {
+                user: i,
+                rows: att.rows,
+                cols: att.cols,
+                checksum: att.checksum,
+            },
+        )?;
+        link.leave(labels::ATTEST)?;
+    }
 
     // ---- step 1: receive masks ----------------------------------------
     let Msg::PSeed(pd) = link.recv_where(|mg| matches!(mg, Msg::PSeed(_)))? else {
@@ -708,9 +937,15 @@ pub(crate) fn user_body(
     let p = pd.expand()?;
 
     // ---- step 2: mask the local part ----------------------------------
+    // In-memory users run the whole-matrix fused masking (bit-identical
+    // to the pre-dataset runtime); streamed users mask per upload shard
+    // below, one P-block-aligned partition panel at a time.
     let (n0, b0) = link.meters();
     metrics.begin("step2: mask share", n0, b0);
-    let xi_masked = mask_matrix_with(&p, xi, &qi, backend)?;
+    let xi_masked = match data {
+        UserData::Mem(xi) => Some(mask_matrix_with(&p, xi, &qi, backend)?),
+        UserData::Stream { .. } => None,
+    };
     let (n1, b1) = link.meters();
     metrics.end(n1, b1);
 
@@ -742,14 +977,60 @@ pub(crate) fn user_body(
     }
     let group = SecAggGroup::from_seeds(seeds)?;
 
-    let nw = xi_masked.cols();
+    let nw = qi.cols();
+    let pieces = qi.scatter_pieces();
+    // streamed ingest keeps the last masked panel around: when a shard
+    // boundary straddles a P block, the next shard's leading rows are
+    // already masked there — no partition row is re-read or re-masked
+    let mut cached: Option<(usize, usize, Mat)> = None; // (a0, a1, masked panel)
     for t in 0..n_batches {
         let r0 = t * shard_rows;
         let r1 = ((t + 1) * shard_rows).min(m);
-        let mut flat = Vec::with_capacity((r1 - r0) * nw);
-        for r in r0..r1 {
-            flat.extend_from_slice(xi_masked.row(r));
-        }
+        let flat: Vec<f64> = match &xi_masked {
+            Some(xm) => {
+                let mut flat = Vec::with_capacity((r1 - r0) * nw);
+                for r in r0..r1 {
+                    flat.extend_from_slice(xm.row(r));
+                }
+                flat
+            }
+            None => {
+                // streamed: pull only the partition panel covering the P
+                // blocks that mix into the not-yet-masked rows of
+                // [r0, r1), run the fused panel masking, upload the
+                // shard's rows, keep the panel for the next boundary —
+                // the partition is never fully resident
+                let mut flat = Vec::with_capacity((r1 - r0) * nw);
+                let mut r = r0;
+                if let Some((ca0, ca1, cm)) = &cached {
+                    let reuse_to = (*ca1).min(r1);
+                    while r < reuse_to {
+                        flat.extend_from_slice(cm.row(r - ca0));
+                        r += 1;
+                    }
+                }
+                if r < r1 {
+                    let (a0, a1, bi0, bi1) = p_block_cover(&p, r, r1);
+                    let panel = data.read_rows(a0, a1)?;
+                    part_peak = part_peak.max((panel.rows() * panel.cols() * 8) as u64);
+                    let local_starts: Vec<usize> =
+                        p.starts()[bi0..bi1].iter().map(|&s| s - a0).collect();
+                    let mut masked = Mat::zeros(a1 - a0, nw);
+                    backend.mask_apply_into(
+                        &local_starts,
+                        &p.blocks()[bi0..bi1],
+                        &panel,
+                        &pieces,
+                        &mut masked,
+                    )?;
+                    for rr in r..r1 {
+                        flat.extend_from_slice(masked.row(rr - a0));
+                    }
+                    cached = Some((a0, a1, masked));
+                }
+                flat
+            }
+        };
         let share = group.mask_share(i, &flat, t as u64)?;
         link.enter(labels::UPLOAD_BASE + t as u64, k)?;
         link.send(
@@ -832,7 +1113,25 @@ pub(crate) fn user_body(
             let (na, ba) = link.meters();
             metrics.begin("app: local projection", na, ba);
             let ur = u.as_ref().ok_or_else(|| proto("pca: U not recovered"))?;
-            proj = Some(ur.t_mul(xi)?);
+            proj = Some(match data {
+                UserData::Mem(xi) => ur.t_mul(xi)?,
+                UserData::Stream { chunk_rows, .. } => {
+                    // Uᵣᵀ·Xᵢ accumulated over bounded partition chunks
+                    let step = (*chunk_rows).max(1);
+                    let mut acc = Mat::zeros(ur.cols(), data.cols());
+                    let mut r0 = 0usize;
+                    while r0 < m {
+                        let r1 = (r0 + step).min(m);
+                        let chunk = data.read_rows(r0, r1)?;
+                        part_peak =
+                            part_peak.max((chunk.rows() * chunk.cols() * 8) as u64);
+                        let urc = ur.slice(r0, r1, 0, ur.cols());
+                        acc.add_assign(&urc.t_mul(&chunk)?)?;
+                        r0 = r1;
+                    }
+                    acc
+                }
+            });
             let (nb, bb) = link.meters();
             metrics.end(nb, bb);
         }
@@ -879,7 +1178,7 @@ pub(crate) fn user_body(
                 }
                 let wm = w_masked.expect("loop exits with w'");
                 let wi = crate::protocol::fedsvd::block_q_mul_vec(&qi, &wm, backend)?;
-                let own = xi.mul_vec(&wi)?;
+                let own = stream_mul_vec(data, m, &wi, &mut part_peak)?;
                 // fold in user order — the sequential oracle's exact FP
                 // accumulation order, independent of arrival timing
                 let mut pred = vec![0.0; m];
@@ -907,7 +1206,7 @@ pub(crate) fn user_body(
                     return Err(proto("expected masked coefficients"));
                 };
                 let wi = crate::protocol::fedsvd::block_q_mul_vec(&qi, &wm, backend)?;
-                let pi = xi.mul_vec(&wi)?;
+                let pi = stream_mul_vec(data, m, &wi, &mut part_peak)?;
                 link.enter(labels::PRED, k - 1)?;
                 link.send(USER_BASE + *label_owner, Msg::Pred { user: i, pred: pi })?;
                 link.leave(labels::PRED)?;
@@ -926,6 +1225,7 @@ pub(crate) fn user_body(
 
     Ok(UserOut {
         metrics,
+        part_peak,
         q_slice: qi,
         p: (i == 0).then_some(p),
         sigma,

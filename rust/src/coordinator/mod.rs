@@ -2,4 +2,4 @@
 //! (populated in the coordinator build-out step).
 
 pub mod session;
-pub use session::{DistTask, ExecMode, Session, SessionReport};
+pub use session::{DataSpec, DistTask, ExecMode, Session, SessionReport};

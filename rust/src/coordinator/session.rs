@@ -17,15 +17,17 @@ use crate::apps::lr::{run_federated_lr, run_federated_lr_cluster, LrOutput};
 use crate::apps::lsa::{run_federated_lsa, run_federated_lsa_cluster, LsaOutput};
 use crate::apps::pca::{run_federated_pca, run_federated_pca_cluster, PcaOutput};
 use crate::cluster::{
-    run_fedsvd_cluster, run_party_distributed, ClusterApp, ClusterConfig, ClusterStats,
-    DistConfig, DistOutcome, PartyRole, PeerSpec,
+    run_fedsvd_cluster, run_party_distributed_with, ClusterApp, ClusterConfig, ClusterStats,
+    DistConfig, DistOutcome, PartyData, PartyRole, PeerSpec,
 };
+use crate::data::Manifest;
 use crate::linalg::{CpuBackend, GemmBackend, Mat};
 use crate::metrics::MetricsRecorder;
 use crate::protocol::{run_fedsvd_with_backend, FedSvdConfig, FedSvdOutput};
 #[cfg(feature = "pjrt")]
 use crate::runtime::TileEngine;
 use crate::util::{Error, Result};
+use std::path::PathBuf;
 
 /// Which compute backend a session uses for dense products.
 pub enum KernelChoice {
@@ -91,7 +93,24 @@ pub enum ExecMode {
         shards: usize,
         /// CSP matrix-memory budget in bytes.
         mem_budget: u64,
+        /// Manifest-backed data loading (`fedsvd serve --data`): shapes
+        /// come from the manifest, each process opens only its own
+        /// partition and streams it from disk. `None` keeps the
+        /// deterministic-demo derivation.
+        data: Option<DataSpec>,
     },
+}
+
+/// On-disk dataset binding for a distributed party (see
+/// [`crate::cluster::PartyData::Manifest`]).
+#[derive(Debug, Clone)]
+pub struct DataSpec {
+    /// Parsed federation manifest (identical across processes).
+    pub manifest: Manifest,
+    /// Directory the manifest's relative paths resolve against.
+    pub root: PathBuf,
+    /// Row-chunk bound for the user-side streaming passes.
+    pub chunk_rows: usize,
 }
 
 /// Which workload a distributed party runs (mirrors the `run_*`
@@ -353,6 +372,7 @@ impl Session {
             peers,
             shards,
             mem_budget,
+            data,
         } = &self.exec
         else {
             return Err(Error::Config(
@@ -361,31 +381,100 @@ impl Session {
         };
         let t0 = std::time::Instant::now();
         // the same task→protocol-flag mapping as the apps layer, so a
-        // distributed federation reproduces the Sequential/Cluster runs
-        let (app_cfg, app) = match task {
-            DistTask::Svd => (self.cfg.clone(), ClusterApp::None),
-            DistTask::Pca { rank } => (
-                crate::apps::pca::pca_config(parts, rank, &self.cfg)?,
-                ClusterApp::Pca,
-            ),
-            DistTask::Lr { y, label_owner } => {
-                crate::apps::lr::validate_lr(parts, y, label_owner)?;
-                (
-                    crate::apps::lr::lr_config(&self.cfg),
-                    ClusterApp::Lr { y, label_owner },
-                )
+        // distributed federation reproduces the Sequential/Cluster runs.
+        // On the manifest path, shapes come from the manifest, the LR
+        // label owner is the manifest's, and only the owner loads y.
+        let y_owned: Vec<f64>;
+        let app_cfg: FedSvdConfig;
+        let app: ClusterApp<'_>;
+        match data {
+            None => match task {
+                DistTask::Svd => {
+                    app_cfg = self.cfg.clone();
+                    app = ClusterApp::None;
+                }
+                DistTask::Pca { rank } => {
+                    app_cfg = crate::apps::pca::pca_config(parts, rank, &self.cfg)?;
+                    app = ClusterApp::Pca;
+                }
+                DistTask::Lr { y, label_owner } => {
+                    crate::apps::lr::validate_lr(parts, y, label_owner)?;
+                    app_cfg = crate::apps::lr::lr_config(&self.cfg);
+                    app = ClusterApp::Lr { y, label_owner };
+                }
+                DistTask::Lsa { rank } => {
+                    app_cfg = crate::apps::lsa::lsa_config(parts, rank, &self.cfg)?;
+                    app = ClusterApp::Lsa;
+                }
+            },
+            Some(spec) => {
+                let (m, n) = (spec.manifest.rows, spec.manifest.total_cols());
+                match task {
+                    DistTask::Svd => {
+                        app_cfg = self.cfg.clone();
+                        app = ClusterApp::None;
+                    }
+                    DistTask::Pca { rank } => {
+                        app_cfg = crate::apps::pca::pca_config_dims(m, n, rank, &self.cfg)?;
+                        app = ClusterApp::Pca;
+                    }
+                    DistTask::Lr { .. } => {
+                        // ownership comes from the manifest (any y/owner in
+                        // the task is the demo path's and is ignored here)
+                        let owner = spec
+                            .manifest
+                            .labels
+                            .as_ref()
+                            .ok_or_else(|| {
+                                Error::Config(
+                                    "lr: the manifest has no label vector (re-split \
+                                     with labels to run LR on this dataset)"
+                                        .into(),
+                                )
+                            })?
+                            .owner;
+                        y_owned = if *role == PartyRole::User(owner) {
+                            spec.manifest.load_labels(&spec.root)?
+                        } else {
+                            Vec::new()
+                        };
+                        app_cfg = crate::apps::lr::lr_config(&self.cfg);
+                        app = ClusterApp::Lr {
+                            y: &y_owned,
+                            label_owner: owner,
+                        };
+                    }
+                    DistTask::Lsa { rank } => {
+                        app_cfg = crate::apps::lsa::lsa_config_dims(m, n, rank, &self.cfg)?;
+                        app = ClusterApp::Lsa;
+                    }
+                }
             }
-            DistTask::Lsa { rank } => (
-                crate::apps::lsa::lsa_config(parts, rank, &self.cfg)?,
-                ClusterApp::Lsa,
-            ),
-        };
+        }
         let mut dcfg = DistConfig::new(*role, listen.clone(), peers.clone());
         dcfg.session = self.cfg.seed;
         dcfg.shards = *shards;
         dcfg.mem_budget = *mem_budget;
-        let out =
-            run_party_distributed(parts, &app_cfg, &dcfg, self.kernel.as_backend(), &app)?;
+        let out = match data {
+            None => run_party_distributed_with(
+                &PartyData::DemoParts(parts),
+                &app_cfg,
+                &dcfg,
+                self.kernel.as_backend(),
+                &app,
+            )?,
+            Some(spec) => run_party_distributed_with(
+                &PartyData::Manifest {
+                    manifest: &spec.manifest,
+                    root: spec.root.as_path(),
+                    chunk_rows: spec.chunk_rows,
+                },
+                &app_cfg,
+                &dcfg,
+                self.kernel.as_backend(),
+                &app,
+            )?,
+        };
         let mut metrics = MetricsRecorder::new();
         metrics.absorb_prefixed(&out.role.name(), &out.metrics);
         let report = SessionReport {
@@ -403,6 +492,7 @@ impl Session {
                 shard_spills: out.shard_spills,
                 round_traffic: out.round_traffic.clone(),
                 real_bytes: out.real_bytes,
+                user_peak_part_bytes: out.part_peak_bytes,
             }),
         };
         Ok((out, report))
@@ -498,6 +588,7 @@ mod tests {
             peers: PeerSpec::Addrs(Vec::new()),
             shards: 2,
             mem_budget: 1 << 20,
+            data: None,
         });
         // a single party cannot return the federation's output…
         let err = s.run_svd(&parts).unwrap_err().to_string();

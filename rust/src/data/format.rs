@@ -1,0 +1,923 @@
+//! On-disk matrix formats with bounded-memory row-chunk readers.
+//!
+//! Three formats cover the deployment surface of `fedsvd split` /
+//! `fedsvd serve --data`:
+//!
+//! * **Chunked dense binary** (`.fsb`) — a 32-byte versioned header
+//!   (magic, version, rows, cols, writer chunk size) followed by
+//!   row-major f64 payloads stored as raw IEEE-754 bit patterns,
+//!   little-endian — the same bit-exact encoding rule as
+//!   [`crate::transport::wire`], so ±0, subnormals and NaN payloads
+//!   survive a write→read round trip unchanged and the on-disk layer can
+//!   never be where the paper's losslessness guarantee leaks.
+//! * **CSV** (`.csv`) — headerless text, one row per line, `{:.16e}`
+//!   fields (17 significant digits: value-exact f64 round trips).
+//!   Tolerates CRLF line endings and trailing blank lines; parse errors
+//!   carry row *and* column numbers, ragged rows are rejected with both
+//!   widths named.
+//! * **MatrixMarket** (`.mtx`) — the `coordinate real general` sparse
+//!   interchange format LSA term-doc matrices ship in. Triplets are held
+//!   sparsely (O(nnz), never the dense matrix) and served as dense row
+//!   chunks.
+//!
+//! [`RowChunkReader`] is the uniform facade: `read_rows(r0, r1)`
+//! materializes only the requested chunk, through positioned I/O
+//! (`&self`, thread-safe), so a party streaming its partition never
+//! holds more than one chunk of it.
+
+use super::manifest::Fnv1a64;
+use crate::linalg::Mat;
+use crate::util::{Error, Result};
+use std::fs::File;
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+
+/// First 4 bytes of a dense-binary dataset file.
+pub const DENSE_MAGIC: u32 = 0xFED5_DA7A;
+/// Dense-binary header version; bump on any layout change.
+pub const DENSE_VERSION: u16 = 1;
+/// Dense-binary header size: magic u32 + version u16 + pad u16 +
+/// rows u64 + cols u64 + chunk_rows u64.
+pub const DENSE_HEADER_LEN: usize = 32;
+
+fn fmt_err(path: &Path, msg: impl std::fmt::Display) -> Error {
+    Error::Config(format!("{}: {msg}", path.display()))
+}
+
+/// The on-disk encodings the dataset subsystem reads and writes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MatrixFormat {
+    /// Chunked dense binary, bit-exact f64 (`.fsb`).
+    DenseBin,
+    /// Headerless CSV, one row per line (`.csv`).
+    Csv,
+    /// MatrixMarket `coordinate real general` sparse text (`.mtx`).
+    MatrixMarket,
+}
+
+impl MatrixFormat {
+    /// Stable name used by the manifest and the CLI/bench JSON rows.
+    pub fn name(&self) -> &'static str {
+        match self {
+            MatrixFormat::DenseBin => "dense-bin",
+            MatrixFormat::Csv => "csv",
+            MatrixFormat::MatrixMarket => "mtx",
+        }
+    }
+
+    /// Parse a format name (manifest field, `fedsvd split --format`).
+    pub fn parse(s: &str) -> Result<MatrixFormat> {
+        match s.to_ascii_lowercase().as_str() {
+            "dense-bin" | "bin" | "fsb" => Ok(MatrixFormat::DenseBin),
+            "csv" => Ok(MatrixFormat::Csv),
+            "mtx" | "matrixmarket" | "matrix-market" => Ok(MatrixFormat::MatrixMarket),
+            other => Err(Error::Config(format!(
+                "unknown matrix format `{other}` (want dense-bin|csv|mtx)"
+            ))),
+        }
+    }
+
+    /// File extension written by [`crate::data::split`].
+    pub fn extension(&self) -> &'static str {
+        match self {
+            MatrixFormat::DenseBin => "fsb",
+            MatrixFormat::Csv => "csv",
+            MatrixFormat::MatrixMarket => "mtx",
+        }
+    }
+
+    /// Infer the format from a file extension.
+    pub fn from_path(path: &Path) -> Result<MatrixFormat> {
+        match path
+            .extension()
+            .and_then(|e| e.to_str())
+            .map(|e| e.to_ascii_lowercase())
+            .as_deref()
+        {
+            Some("fsb") | Some("bin") => Ok(MatrixFormat::DenseBin),
+            Some("csv") => Ok(MatrixFormat::Csv),
+            Some("mtx") => Ok(MatrixFormat::MatrixMarket),
+            _ => Err(fmt_err(
+                path,
+                "cannot infer matrix format from extension (want .fsb/.bin, .csv or .mtx)",
+            )),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dense binary
+// ---------------------------------------------------------------------------
+
+/// Incremental writer for the chunked dense binary format: rows are
+/// appended in order (any chunking), [`DenseBinWriter::finish`] verifies
+/// the declared row count was written exactly.
+pub struct DenseBinWriter {
+    file: File,
+    path: PathBuf,
+    rows: usize,
+    cols: usize,
+    written: usize,
+    /// Running FNV-1a over every byte written (header included), so the
+    /// manifest checksum comes for free — no second read of the file.
+    hash: Fnv1a64,
+}
+
+impl DenseBinWriter {
+    /// Create (truncate) `path` and write the versioned header.
+    /// `chunk_rows` records the writer's chunking in the header (readers
+    /// may stream at any chunk size; the field documents provenance).
+    pub fn create(path: &Path, rows: usize, cols: usize, chunk_rows: usize) -> Result<Self> {
+        let mut file = File::create(path)?;
+        let mut hdr = Vec::with_capacity(DENSE_HEADER_LEN);
+        hdr.extend_from_slice(&DENSE_MAGIC.to_le_bytes());
+        hdr.extend_from_slice(&DENSE_VERSION.to_le_bytes());
+        hdr.extend_from_slice(&0u16.to_le_bytes());
+        hdr.extend_from_slice(&(rows as u64).to_le_bytes());
+        hdr.extend_from_slice(&(cols as u64).to_le_bytes());
+        hdr.extend_from_slice(&(chunk_rows as u64).to_le_bytes());
+        file.write_all(&hdr)?;
+        let mut hash = Fnv1a64::new();
+        hash.update(&hdr);
+        Ok(Self {
+            file,
+            path: path.to_path_buf(),
+            rows,
+            cols,
+            written: 0,
+            hash,
+        })
+    }
+
+    /// Append a row block (must match the declared width).
+    pub fn append_rows(&mut self, block: &Mat) -> Result<()> {
+        if block.cols() != self.cols {
+            return Err(fmt_err(
+                &self.path,
+                format!("append of {} cols into a {}-col file", block.cols(), self.cols),
+            ));
+        }
+        if self.written + block.rows() > self.rows {
+            return Err(fmt_err(
+                &self.path,
+                format!(
+                    "append overflows declared row count ({} + {} > {})",
+                    self.written,
+                    block.rows(),
+                    self.rows
+                ),
+            ));
+        }
+        let mut bytes = Vec::with_capacity(block.data().len() * 8);
+        for v in block.data() {
+            bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        self.file.write_all(&bytes)?;
+        self.hash.update(&bytes);
+        self.written += block.rows();
+        Ok(())
+    }
+
+    /// Flush and verify every declared row was written.
+    pub fn finish(self) -> Result<()> {
+        self.finish_checksummed().map(|_| ())
+    }
+
+    /// [`DenseBinWriter::finish`] returning the FNV-1a checksum of the
+    /// file's bytes — identical to `file_checksum` of the result,
+    /// without re-reading it.
+    pub fn finish_checksummed(mut self) -> Result<u64> {
+        if self.written != self.rows {
+            return Err(fmt_err(
+                &self.path,
+                format!("wrote {} of {} declared rows", self.written, self.rows),
+            ));
+        }
+        self.file.flush()?;
+        Ok(self.hash.digest())
+    }
+}
+
+/// One-shot dense-binary export of an in-memory matrix.
+pub fn write_dense_bin(path: &Path, mat: &Mat, chunk_rows: usize) -> Result<()> {
+    let mut w = DenseBinWriter::create(path, mat.rows(), mat.cols(), chunk_rows)?;
+    w.append_rows(mat)?;
+    w.finish()
+}
+
+struct DenseBinReader {
+    file: File,
+    path: PathBuf,
+    rows: usize,
+    cols: usize,
+}
+
+impl DenseBinReader {
+    fn open(path: &Path) -> Result<Self> {
+        let file = File::open(path)?;
+        let mut hdr = [0u8; DENSE_HEADER_LEN];
+        file.read_exact_at(&mut hdr, 0)
+            .map_err(|e| fmt_err(path, format!("reading dense-bin header: {e}")))?;
+        let magic = u32::from_le_bytes(hdr[0..4].try_into().expect("len 4"));
+        if magic != DENSE_MAGIC {
+            return Err(fmt_err(path, format!("bad dense-bin magic {magic:#010x}")));
+        }
+        let version = u16::from_le_bytes(hdr[4..6].try_into().expect("len 2"));
+        if version != DENSE_VERSION {
+            return Err(fmt_err(
+                path,
+                format!("dense-bin version {version}, this build reads v{DENSE_VERSION}"),
+            ));
+        }
+        let rows = u64::from_le_bytes(hdr[8..16].try_into().expect("len 8"));
+        let cols = u64::from_le_bytes(hdr[16..24].try_into().expect("len 8"));
+        let rows = usize::try_from(rows).map_err(|_| fmt_err(path, "row count exceeds usize"))?;
+        let cols = usize::try_from(cols).map_err(|_| fmt_err(path, "col count exceeds usize"))?;
+        // checked: a hostile header whose rows*cols*8 wraps mod 2^64 must
+        // not slip past the size validation (same discipline as the wire
+        // codec's length-prefix guard)
+        let payload = (rows as u64)
+            .checked_mul(cols as u64)
+            .and_then(|n| n.checked_mul(8))
+            .ok_or_else(|| fmt_err(path, "header dimensions overflow"))?;
+        let expect = DENSE_HEADER_LEN as u64 + payload;
+        let actual = file.metadata()?.len();
+        if actual != expect {
+            return Err(fmt_err(
+                path,
+                format!("file is {actual} bytes, header promises {expect} (truncated or corrupt)"),
+            ));
+        }
+        Ok(Self {
+            file,
+            path: path.to_path_buf(),
+            rows,
+            cols,
+        })
+    }
+
+    fn read_rows(&self, r0: usize, r1: usize) -> Result<Mat> {
+        let count = (r1 - r0) * self.cols;
+        let mut buf = vec![0u8; count * 8];
+        let off = DENSE_HEADER_LEN as u64 + (r0 as u64) * (self.cols as u64) * 8;
+        self.file
+            .read_exact_at(&mut buf, off)
+            .map_err(|e| fmt_err(&self.path, format!("reading rows {r0}..{r1}: {e}")))?;
+        let data: Vec<f64> = buf
+            .chunks_exact(8)
+            .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().expect("len 8"))))
+            .collect();
+        Mat::from_vec(r1 - r0, self.cols, data)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CSV
+// ---------------------------------------------------------------------------
+
+/// Parse one CSV data row; `lineno` is the 1-based file line for errors.
+/// Fields are trimmed; errors carry row and column numbers.
+fn parse_csv_row(line: &str, lineno: usize, expect_cols: Option<usize>, path: &Path) -> Result<Vec<f64>> {
+    let mut row = Vec::with_capacity(expect_cols.unwrap_or(8));
+    for (col, tok) in line.split(',').enumerate() {
+        let t = tok.trim();
+        let v = t.parse::<f64>().map_err(|e| {
+            fmt_err(
+                path,
+                format!("row {lineno}, column {}: bad value `{t}`: {e}", col + 1),
+            )
+        })?;
+        row.push(v);
+    }
+    if let Some(want) = expect_cols {
+        if row.len() != want {
+            return Err(fmt_err(
+                path,
+                format!(
+                    "row {lineno} has {} columns, expected {want} (the width of row 1) — \
+                     ragged rows are not a matrix",
+                    row.len()
+                ),
+            ));
+        }
+    }
+    Ok(row)
+}
+
+/// Streaming CSV matrix reader: one pass at open builds a byte-offset
+/// index per row (O(rows) memory, never the elements; the pass only
+/// counts fields — values are parsed once, by `read_rows`, which still
+/// reports row/column context on errors). `read_rows` reads only the
+/// requested byte range. CRLF endings and trailing blank lines are
+/// tolerated; a blank line *inside* the data is an error.
+struct CsvReader {
+    file: File,
+    path: PathBuf,
+    /// Byte offset where each data row starts; last entry is the end of
+    /// the data region (`offsets.len() == rows + 1`).
+    offsets: Vec<u64>,
+    cols: usize,
+}
+
+impl CsvReader {
+    fn open(path: &Path) -> Result<Self> {
+        let file = File::open(path)?;
+        let mut rd = BufReader::new(&file);
+        let mut offsets: Vec<u64> = Vec::new();
+        let mut cols = 0usize;
+        let mut pos = 0u64;
+        let mut end = 0u64;
+        let mut line = Vec::<u8>::new();
+        let mut lineno = 0usize;
+        let mut blank_at: Option<usize> = None;
+        loop {
+            line.clear();
+            let n = rd.read_until(b'\n', &mut line)?;
+            if n == 0 {
+                break;
+            }
+            lineno += 1;
+            let text = std::str::from_utf8(&line)
+                .map_err(|_| fmt_err(path, format!("line {lineno}: not UTF-8 text")))?;
+            let trimmed = text.trim();
+            if trimmed.is_empty() {
+                blank_at.get_or_insert(lineno);
+            } else {
+                if let Some(b) = blank_at {
+                    return Err(fmt_err(
+                        path,
+                        format!(
+                            "blank line {b} inside the matrix (row {lineno} follows it) — \
+                             blank lines are only tolerated at the end of the file"
+                        ),
+                    ));
+                }
+                // index pass: only the field count matters here (shape +
+                // raggedness); the values themselves are parsed once, at
+                // read time
+                let nfields = trimmed.split(',').count();
+                if cols == 0 {
+                    cols = nfields;
+                } else if nfields != cols {
+                    return Err(fmt_err(
+                        path,
+                        format!(
+                            "row {lineno} has {nfields} columns, expected {cols} (the \
+                             width of row 1) — ragged rows are not a matrix"
+                        ),
+                    ));
+                }
+                offsets.push(pos);
+                end = pos + n as u64;
+            }
+            pos += n as u64;
+        }
+        if offsets.is_empty() {
+            return Err(fmt_err(path, "empty matrix (no data rows)"));
+        }
+        offsets.push(end);
+        Ok(Self {
+            file,
+            path: path.to_path_buf(),
+            offsets,
+            cols,
+        })
+    }
+
+    fn rows(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    fn read_rows(&self, r0: usize, r1: usize) -> Result<Mat> {
+        if r0 == r1 {
+            return Mat::from_vec(0, self.cols, Vec::new());
+        }
+        let (b0, b1) = (self.offsets[r0], self.offsets[r1]);
+        let mut buf = vec![0u8; (b1 - b0) as usize];
+        self.file
+            .read_exact_at(&mut buf, b0)
+            .map_err(|e| fmt_err(&self.path, format!("reading rows {r0}..{r1}: {e}")))?;
+        let text = std::str::from_utf8(&buf)
+            .map_err(|_| fmt_err(&self.path, "matrix chunk is not UTF-8 text"))?;
+        let mut data = Vec::with_capacity((r1 - r0) * self.cols);
+        let mut parsed = 0usize;
+        for line in text.split('\n') {
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue; // the final newline of the chunk
+            }
+            let row = parse_csv_row(trimmed, r0 + parsed + 1, Some(self.cols), &self.path)?;
+            data.extend_from_slice(&row);
+            parsed += 1;
+        }
+        if parsed != r1 - r0 {
+            return Err(fmt_err(
+                &self.path,
+                format!("chunk {r0}..{r1} parsed {parsed} rows (file changed underneath?)"),
+            ));
+        }
+        Mat::from_vec(r1 - r0, self.cols, data)
+    }
+}
+
+/// Append `mat`'s rows as CSV lines — the one row serializer (comma
+/// separators, `{:.16e}` fields) shared by whole-matrix export and the
+/// split partitioner, so partition files and exports can never drift.
+pub(crate) fn append_csv_rows(out: &mut impl Write, mat: &Mat) -> Result<()> {
+    use std::fmt::Write as _;
+    let mut line = String::new();
+    for r in 0..mat.rows() {
+        line.clear();
+        for (c, v) in mat.row(r).iter().enumerate() {
+            if c > 0 {
+                line.push(',');
+            }
+            // fmt::Write into the reused buffer: no per-element String
+            let _ = write!(line, "{v:.16e}");
+        }
+        line.push('\n');
+        out.write_all(line.as_bytes())?;
+    }
+    Ok(())
+}
+
+/// Export a matrix as headerless CSV with `{:.16e}` fields (17
+/// significant digits — every finite f64 value round-trips exactly).
+pub fn write_csv_matrix(path: &Path, mat: &Mat) -> Result<()> {
+    if mat.cols() == 0 {
+        return Err(fmt_err(path, "csv cannot represent a 0-column matrix"));
+    }
+    let mut out = std::io::BufWriter::new(File::create(path)?);
+    append_csv_rows(&mut out, mat)?;
+    out.flush()?;
+    Ok(())
+}
+
+/// Load a real dataset from a headerless CSV of f64 (rows = lines).
+/// Tolerates CRLF and trailing blank lines; parse errors report row and
+/// column numbers, ragged rows are rejected with both widths named.
+pub fn load_csv_matrix(path: &Path) -> Result<Mat> {
+    let rd = CsvReader::open(path)?;
+    rd.read_rows(0, rd.rows())
+}
+
+// ---------------------------------------------------------------------------
+// MatrixMarket
+// ---------------------------------------------------------------------------
+
+/// MatrixMarket `coordinate real general` reader. Triplets live in
+/// memory sorted by (row, col) — O(nnz), the natural residency of a
+/// sparse matrix — and dense row chunks are materialized on demand.
+struct MtxReader {
+    rows: usize,
+    cols: usize,
+    /// (row, col, value), sorted by (row, col), 0-based, no duplicates.
+    entries: Vec<(usize, usize, f64)>,
+}
+
+impl MtxReader {
+    fn open(path: &Path) -> Result<Self> {
+        let file = File::open(path)?;
+        let mut rd = BufReader::new(file);
+        let mut banner = String::new();
+        rd.read_line(&mut banner)?;
+        let lower = banner.to_ascii_lowercase();
+        if !lower.starts_with("%%matrixmarket") {
+            return Err(fmt_err(path, "missing %%MatrixMarket banner"));
+        }
+        for word in ["matrix", "coordinate", "general"] {
+            if !lower.contains(word) {
+                return Err(fmt_err(
+                    path,
+                    format!("unsupported MatrixMarket flavor (need `matrix coordinate real general`): {}", banner.trim()),
+                ));
+            }
+        }
+        if !lower.contains("real") && !lower.contains("integer") {
+            return Err(fmt_err(
+                path,
+                format!("unsupported MatrixMarket value type (need real/integer): {}", banner.trim()),
+            ));
+        }
+        let mut lineno = 1usize;
+        let mut line = String::new();
+        // size line: first non-comment, non-blank line
+        let (rows, cols, nnz) = loop {
+            line.clear();
+            if rd.read_line(&mut line)? == 0 {
+                return Err(fmt_err(path, "missing size line"));
+            }
+            lineno += 1;
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('%') {
+                continue;
+            }
+            let mut it = t.split_whitespace();
+            let parse = |tok: Option<&str>, what: &str| -> Result<usize> {
+                tok.and_then(|s| s.parse::<usize>().ok()).ok_or_else(|| {
+                    fmt_err(path, format!("line {lineno}: bad size line (missing {what})"))
+                })
+            };
+            let r = parse(it.next(), "rows")?;
+            let c = parse(it.next(), "cols")?;
+            let z = parse(it.next(), "nnz")?;
+            if it.next().is_some() {
+                return Err(fmt_err(path, format!("line {lineno}: trailing junk on size line")));
+            }
+            break (r, c, z);
+        };
+        if rows == 0 || cols == 0 {
+            return Err(fmt_err(path, "empty matrix"));
+        }
+        let mut entries: Vec<(usize, usize, f64)> = Vec::with_capacity(nnz);
+        loop {
+            line.clear();
+            if rd.read_line(&mut line)? == 0 {
+                break;
+            }
+            lineno += 1;
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('%') {
+                continue;
+            }
+            let mut it = t.split_whitespace();
+            let i = it
+                .next()
+                .and_then(|s| s.parse::<usize>().ok())
+                .ok_or_else(|| fmt_err(path, format!("line {lineno}: bad row index")))?;
+            let j = it
+                .next()
+                .and_then(|s| s.parse::<usize>().ok())
+                .ok_or_else(|| fmt_err(path, format!("line {lineno}: bad col index")))?;
+            let v = it
+                .next()
+                .and_then(|s| s.parse::<f64>().ok())
+                .ok_or_else(|| fmt_err(path, format!("line {lineno}: bad value")))?;
+            if it.next().is_some() {
+                return Err(fmt_err(path, format!("line {lineno}: trailing junk on entry")));
+            }
+            if i == 0 || j == 0 || i > rows || j > cols {
+                return Err(fmt_err(
+                    path,
+                    format!("line {lineno}: entry ({i},{j}) outside the declared {rows}×{cols} (1-based)"),
+                ));
+            }
+            entries.push((i - 1, j - 1, v));
+        }
+        if entries.len() != nnz {
+            return Err(fmt_err(
+                path,
+                format!("header declares {nnz} entries, file holds {}", entries.len()),
+            ));
+        }
+        entries.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        for w in entries.windows(2) {
+            if w[0].0 == w[1].0 && w[0].1 == w[1].1 {
+                return Err(fmt_err(
+                    path,
+                    format!("duplicate entry at ({}, {}) (1-based)", w[0].0 + 1, w[0].1 + 1),
+                ));
+            }
+        }
+        Ok(Self { rows, cols, entries })
+    }
+
+    fn read_rows(&self, r0: usize, r1: usize) -> Result<Mat> {
+        let mut out = Mat::zeros(r1 - r0, self.cols);
+        let lo = self.entries.partition_point(|e| e.0 < r0);
+        let hi = self.entries.partition_point(|e| e.0 < r1);
+        for &(i, j, v) in &self.entries[lo..hi] {
+            out[(i - r0, j)] = v;
+        }
+        Ok(out)
+    }
+}
+
+/// Serialize 0-based triplets as a MatrixMarket `coordinate real
+/// general` stream — the one MTX serializer shared by whole-matrix
+/// export and the split partitioner.
+pub(crate) fn write_mtx_to(
+    out: &mut impl Write,
+    rows: usize,
+    cols: usize,
+    entries: &[(usize, usize, f64)],
+) -> Result<()> {
+    writeln!(out, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(out, "{rows} {cols} {}", entries.len())?;
+    for &(r, c, v) in entries {
+        writeln!(out, "{} {} {v:.16e}", r + 1, c + 1)?;
+    }
+    Ok(())
+}
+
+/// [`write_mtx_to`] into a fresh file at `path`.
+pub(crate) fn write_mtx_file(
+    path: &Path,
+    rows: usize,
+    cols: usize,
+    entries: &[(usize, usize, f64)],
+) -> Result<()> {
+    if rows == 0 || cols == 0 {
+        return Err(fmt_err(path, "mtx cannot represent an empty matrix"));
+    }
+    let mut out = std::io::BufWriter::new(File::create(path)?);
+    write_mtx_to(&mut out, rows, cols, entries)?;
+    out.flush()?;
+    Ok(())
+}
+
+/// Export a matrix as MatrixMarket `coordinate real general` (only
+/// non-zeros are written; `{:.16e}` keeps finite values exact).
+pub fn write_matrix_market(path: &Path, mat: &Mat) -> Result<()> {
+    let mut entries = Vec::new();
+    for r in 0..mat.rows() {
+        for (c, v) in mat.row(r).iter().enumerate() {
+            if *v != 0.0 {
+                entries.push((r, c, *v));
+            }
+        }
+    }
+    write_mtx_file(path, mat.rows(), mat.cols(), &entries)
+}
+
+// ---------------------------------------------------------------------------
+// the uniform reader facade
+// ---------------------------------------------------------------------------
+
+enum ReaderImpl {
+    Dense(DenseBinReader),
+    Csv(CsvReader),
+    Mtx(MtxReader),
+}
+
+/// Bounded streaming reader over any on-disk matrix format.
+///
+/// `read_rows` serves an arbitrary row chunk through positioned I/O
+/// (dense binary: one seekable read; CSV: a byte-range read through the
+/// row-offset index; MatrixMarket: a binary-searched slice of the sorted
+/// triplets) — `&self` throughout, so party threads can share a reader.
+pub struct RowChunkReader {
+    imp: ReaderImpl,
+    format: MatrixFormat,
+    path: PathBuf,
+}
+
+impl RowChunkReader {
+    /// Open `path`, inferring the format from its extension.
+    pub fn open(path: &Path) -> Result<Self> {
+        Self::open_as(path, MatrixFormat::from_path(path)?)
+    }
+
+    /// Open `path` as an explicit format.
+    pub fn open_as(path: &Path, format: MatrixFormat) -> Result<Self> {
+        let imp = match format {
+            MatrixFormat::DenseBin => ReaderImpl::Dense(DenseBinReader::open(path)?),
+            MatrixFormat::Csv => ReaderImpl::Csv(CsvReader::open(path)?),
+            MatrixFormat::MatrixMarket => ReaderImpl::Mtx(MtxReader::open(path)?),
+        };
+        Ok(Self {
+            imp,
+            format,
+            path: path.to_path_buf(),
+        })
+    }
+
+    pub fn rows(&self) -> usize {
+        match &self.imp {
+            ReaderImpl::Dense(r) => r.rows,
+            ReaderImpl::Csv(r) => r.rows(),
+            ReaderImpl::Mtx(r) => r.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match &self.imp {
+            ReaderImpl::Dense(r) => r.cols,
+            ReaderImpl::Csv(r) => r.cols,
+            ReaderImpl::Mtx(r) => r.cols,
+        }
+    }
+
+    pub fn format(&self) -> MatrixFormat {
+        self.format
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Materialize rows `[r0, r1)` as a dense chunk — the only way data
+    /// leaves this reader, so peak residency is caller-bounded.
+    pub fn read_rows(&self, r0: usize, r1: usize) -> Result<Mat> {
+        if r1 > self.rows() || r0 > r1 {
+            return Err(fmt_err(
+                &self.path,
+                format!("row chunk {r0}..{r1} outside 0..{}", self.rows()),
+            ));
+        }
+        match &self.imp {
+            ReaderImpl::Dense(r) => r.read_rows(r0, r1),
+            ReaderImpl::Csv(r) => r.read_rows(r0, r1),
+            ReaderImpl::Mtx(r) => r.read_rows(r0, r1),
+        }
+    }
+
+    /// Load the whole matrix (tests / small matrices).
+    pub fn read_all(&self) -> Result<Mat> {
+        self.read_rows(0, self.rows())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+    use crate::util::bits_equal;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("fedsvd_format_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn dense_bin_roundtrip_is_bit_exact() {
+        let special = Mat::from_vec(
+            2,
+            3,
+            vec![0.0, -0.0, f64::MIN_POSITIVE / 8.0, f64::NAN, 1.5, -7.25e300],
+        )
+        .unwrap();
+        let p = tmp("special.fsb");
+        write_dense_bin(&p, &special, 1).unwrap();
+        let rd = RowChunkReader::open(&p).unwrap();
+        assert_eq!(rd.rows(), 2);
+        assert_eq!(rd.cols(), 3);
+        let back = rd.read_all().unwrap();
+        assert!(bits_equal(special.data(), back.data()));
+    }
+
+    #[test]
+    fn dense_bin_chunked_writer_and_ragged_reads() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let a = Mat::gaussian(11, 4, &mut rng);
+        let p = tmp("chunked.fsb");
+        let mut w = DenseBinWriter::create(&p, 11, 4, 4).unwrap();
+        for r0 in [0usize, 4, 8] {
+            let r1 = (r0 + 4).min(11);
+            w.append_rows(&a.slice(r0, r1, 0, 4)).unwrap();
+        }
+        w.finish().unwrap();
+        let rd = RowChunkReader::open(&p).unwrap();
+        for width in [1usize, 3, 5, 11] {
+            let mut rebuilt = Mat::zeros(11, 4);
+            let mut r0 = 0;
+            while r0 < 11 {
+                let r1 = (r0 + width).min(11);
+                rebuilt.set_slice(r0, 0, &rd.read_rows(r0, r1).unwrap());
+                r0 = r1;
+            }
+            assert!(bits_equal(a.data(), rebuilt.data()), "width {width}");
+        }
+        // empty chunk is legal
+        assert_eq!(rd.read_rows(5, 5).unwrap().shape(), (0, 4));
+    }
+
+    #[test]
+    fn dense_bin_rejects_truncation_and_miscounts() {
+        let p = tmp("trunc.fsb");
+        write_dense_bin(&p, &Mat::zeros(3, 2), 3).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &full[..full.len() - 8]).unwrap();
+        assert!(RowChunkReader::open(&p).is_err());
+
+        let p2 = tmp("short.fsb");
+        let mut w = DenseBinWriter::create(&p2, 4, 2, 2).unwrap();
+        w.append_rows(&Mat::zeros(2, 2)).unwrap();
+        assert!(w.finish().is_err()); // 2 of 4 rows written
+
+        let p3 = tmp("wide.fsb");
+        let mut w = DenseBinWriter::create(&p3, 2, 2, 2).unwrap();
+        assert!(w.append_rows(&Mat::zeros(2, 3)).is_err());
+    }
+
+    #[test]
+    fn csv_roundtrip_and_chunked_reads() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let a = Mat::gaussian(7, 3, &mut rng);
+        let p = tmp("round.csv");
+        write_csv_matrix(&p, &a).unwrap();
+        let rd = RowChunkReader::open(&p).unwrap();
+        assert_eq!(rd.rows(), 7);
+        assert_eq!(rd.cols(), 3);
+        // {:.16e} round-trips values exactly
+        assert!(bits_equal(a.data(), rd.read_all().unwrap().data()));
+        let mid = rd.read_rows(2, 5).unwrap();
+        assert!(bits_equal(mid.data(), a.slice(2, 5, 0, 3).data()));
+    }
+
+    #[test]
+    fn csv_tolerates_crlf_and_trailing_blanks() {
+        let p = tmp("crlf.csv");
+        std::fs::write(&p, "1.0, 2.0\r\n3.5,-4\r\n\r\n\n").unwrap();
+        let m = load_csv_matrix(&p).unwrap();
+        assert_eq!(m.shape(), (2, 2));
+        assert_eq!(m[(0, 1)], 2.0);
+        assert_eq!(m[(1, 1)], -4.0);
+        // chunked reads see the same rows
+        let rd = RowChunkReader::open(&p).unwrap();
+        assert_eq!(rd.read_rows(1, 2).unwrap()[(0, 0)], 3.5);
+    }
+
+    #[test]
+    fn csv_errors_carry_row_and_column() {
+        let p = tmp("badval.csv");
+        std::fs::write(&p, "1,2\n3,oops\n").unwrap();
+        let err = load_csv_matrix(&p).unwrap_err().to_string();
+        assert!(err.contains("row 2"), "got: {err}");
+        assert!(err.contains("column 2"), "got: {err}");
+        assert!(err.contains("oops"), "got: {err}");
+
+        let p2 = tmp("ragged.csv");
+        std::fs::write(&p2, "1,2,3\n4,5\n").unwrap();
+        let err = load_csv_matrix(&p2).unwrap_err().to_string();
+        assert!(err.contains("row 2"), "got: {err}");
+        assert!(err.contains("2 columns"), "got: {err}");
+        assert!(err.contains("expected 3"), "got: {err}");
+
+        let p3 = tmp("interior_blank.csv");
+        std::fs::write(&p3, "1,2\n\n3,4\n").unwrap();
+        let err = load_csv_matrix(&p3).unwrap_err().to_string();
+        assert!(err.contains("blank line 2"), "got: {err}");
+
+        let p4 = tmp("empty.csv");
+        std::fs::write(&p4, "\n\n").unwrap();
+        assert!(load_csv_matrix(&p4).is_err());
+    }
+
+    #[test]
+    fn mtx_roundtrip_sparse_chunks() {
+        // a sparse term-doc-like matrix with explicit zeros left out
+        let mut a = Mat::zeros(9, 5);
+        a[(0, 0)] = 1.5;
+        a[(2, 4)] = -2.25;
+        a[(3, 1)] = 0.125;
+        a[(8, 3)] = 7.0;
+        let p = tmp("round.mtx");
+        write_matrix_market(&p, &a).unwrap();
+        let rd = RowChunkReader::open(&p).unwrap();
+        assert_eq!(rd.rows(), 9);
+        assert_eq!(rd.cols(), 5);
+        assert!(bits_equal(a.data(), rd.read_all().unwrap().data()));
+        for (r0, r1) in [(0usize, 3usize), (3, 4), (4, 9), (9, 9)] {
+            let chunk = rd.read_rows(r0, r1).unwrap();
+            assert!(
+                bits_equal(chunk.data(), a.slice(r0, r1, 0, 5).data()),
+                "chunk {r0}..{r1}"
+            );
+        }
+    }
+
+    #[test]
+    fn mtx_rejects_malformed_files() {
+        let bad_banner = tmp("banner.mtx");
+        std::fs::write(&bad_banner, "%%MatrixMarket matrix array real general\n2 2\n").unwrap();
+        assert!(RowChunkReader::open(&bad_banner).is_err());
+
+        let out_of_range = tmp("range.mtx");
+        std::fs::write(
+            &out_of_range,
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 5.0\n",
+        )
+        .unwrap();
+        assert!(RowChunkReader::open(&out_of_range).is_err());
+
+        let wrong_count = tmp("count.mtx");
+        std::fs::write(
+            &wrong_count,
+            "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 5.0\n",
+        )
+        .unwrap();
+        assert!(RowChunkReader::open(&wrong_count).is_err());
+
+        let dup = tmp("dup.mtx");
+        std::fs::write(
+            &dup,
+            "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 5.0\n1 1 6.0\n",
+        )
+        .unwrap();
+        assert!(RowChunkReader::open(&dup).is_err());
+    }
+
+    #[test]
+    fn format_names_and_extensions() {
+        for f in [MatrixFormat::DenseBin, MatrixFormat::Csv, MatrixFormat::MatrixMarket] {
+            assert_eq!(MatrixFormat::parse(f.name()).unwrap(), f);
+            let p = PathBuf::from(format!("x.{}", f.extension()));
+            assert_eq!(MatrixFormat::from_path(&p).unwrap(), f);
+        }
+        assert!(MatrixFormat::parse("parquet").is_err());
+        assert!(MatrixFormat::from_path(Path::new("x.unknown")).is_err());
+    }
+}

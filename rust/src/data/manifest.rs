@@ -1,0 +1,533 @@
+//! The federation manifest: which party owns which on-disk partition.
+//!
+//! `fedsvd split` writes one manifest per dataset directory; `fedsvd
+//! serve --data <manifest>` gives every party the same shape/ownership
+//! picture while each process opens **only its own** partition file.
+//! Entries carry an FNV-1a checksum of the partition bytes, so
+//!
+//! * a user detects a corrupt/swapped local file before masking it
+//!   ([`Manifest::open_partition`] verifies shape + checksum), and
+//! * the TA cross-checks every user's *measured* (rows, cols, checksum)
+//!   attestation against its own manifest at handshake time (the
+//!   `DataMeta` round of [`crate::cluster::runtime`]) — a party whose
+//!   manifest copy or partition file diverged from the federation's
+//!   aborts the run before any upload. This is an **integrity** check
+//!   against misconfiguration, not an adversarial guarantee: the
+//!   checksum is self-reported, non-cryptographic FNV-1a.
+//!
+//! The format is a line-oriented text file (this crate is
+//! dependency-free by design — no serde):
+//!
+//! ```text
+//! fedsvd-manifest 1
+//! rows <m>
+//! part <i> <format> <cols> <checksum-hex> <relative-path>
+//! labels <owner> <len> <checksum-hex> <relative-path>   (optional, LR)
+//! ```
+
+use super::format::{MatrixFormat, RowChunkReader};
+use crate::util::{Error, Result};
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+/// Manifest schema version.
+pub const MANIFEST_VERSION: u32 = 1;
+
+/// Filename `fedsvd split` writes inside the output directory.
+pub const MANIFEST_FILE: &str = "manifest.txt";
+
+fn mf_err(msg: impl std::fmt::Display) -> Error {
+    Error::Config(format!("manifest: {msg}"))
+}
+
+/// FNV-1a (64-bit) over a byte stream.
+#[derive(Clone, Copy)]
+pub struct Fnv1a64(u64);
+
+impl Default for Fnv1a64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv1a64 {
+    pub fn new() -> Self {
+        Fnv1a64(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        self.0 = h;
+    }
+
+    pub fn digest(&self) -> u64 {
+        self.0
+    }
+}
+
+/// FNV-1a checksum of a file's bytes (streamed: O(1) memory).
+pub fn file_checksum(path: &Path) -> Result<u64> {
+    let mut f = std::fs::File::open(path)?;
+    let mut hash = Fnv1a64::new();
+    let mut buf = vec![0u8; 64 * 1024];
+    loop {
+        let n = f.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        hash.update(&buf[..n]);
+    }
+    Ok(hash.digest())
+}
+
+/// What a user attests to the TA about its partition at handshake
+/// (and what the TA expects, straight from the manifest).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PartitionAttest {
+    pub rows: u64,
+    pub cols: u64,
+    pub checksum: u64,
+}
+
+/// One party's partition entry.
+#[derive(Debug, Clone)]
+pub struct PartitionMeta {
+    /// Path relative to the manifest's directory (no whitespace).
+    pub path: String,
+    pub format: MatrixFormat,
+    /// This user's column count (rows are the shared `Manifest::rows`).
+    pub cols: usize,
+    /// FNV-1a of the partition file bytes.
+    pub checksum: u64,
+}
+
+/// The LR label vector entry (held by exactly one party).
+#[derive(Debug, Clone)]
+pub struct LabelsMeta {
+    pub owner: usize,
+    pub path: String,
+    pub len: usize,
+    pub checksum: u64,
+}
+
+/// A federation dataset: shared row count, per-party partitions, and an
+/// optional label vector for the LR application.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Sample rows, shared by every partition.
+    pub rows: usize,
+    /// Per-user partitions, in user order.
+    pub parts: Vec<PartitionMeta>,
+    pub labels: Option<LabelsMeta>,
+}
+
+impl Manifest {
+    pub fn users(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Per-user column widths, in user order.
+    pub fn widths(&self) -> Vec<usize> {
+        self.parts.iter().map(|p| p.cols).collect()
+    }
+
+    pub fn total_cols(&self) -> usize {
+        self.parts.iter().map(|p| p.cols).sum()
+    }
+
+    /// The (rows, cols, checksum) triple the TA expects user `i` to
+    /// attest at handshake.
+    pub fn attests(&self) -> Vec<PartitionAttest> {
+        self.parts
+            .iter()
+            .map(|p| PartitionAttest {
+                rows: self.rows as u64,
+                cols: p.cols as u64,
+                checksum: p.checksum,
+            })
+            .collect()
+    }
+
+    /// Internal consistency checks shared by `load` and `save`.
+    fn validate(&self) -> Result<()> {
+        if self.rows == 0 {
+            return Err(mf_err("rows must be positive"));
+        }
+        if self.parts.is_empty() {
+            return Err(mf_err("no partitions"));
+        }
+        for (i, p) in self.parts.iter().enumerate() {
+            if p.cols == 0 {
+                return Err(mf_err(format!("part {i} has 0 columns")));
+            }
+            if p.path.is_empty() || p.path.split_whitespace().count() != 1 {
+                return Err(mf_err(format!(
+                    "part {i} path `{}` must be non-empty without whitespace",
+                    p.path
+                )));
+            }
+        }
+        if let Some(l) = &self.labels {
+            if l.owner >= self.parts.len() {
+                return Err(mf_err(format!(
+                    "label owner user{} but only {} users",
+                    l.owner,
+                    self.parts.len()
+                )));
+            }
+            if l.len != self.rows {
+                return Err(mf_err(format!(
+                    "{} labels for {} rows",
+                    l.len, self.rows
+                )));
+            }
+            if l.path.is_empty() || l.path.split_whitespace().count() != 1 {
+                return Err(mf_err(format!(
+                    "label path `{}` must be non-empty without whitespace",
+                    l.path
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize to `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.validate()?;
+        let mut out = String::new();
+        out.push_str(&format!("fedsvd-manifest {MANIFEST_VERSION}\n"));
+        out.push_str(&format!("rows {}\n", self.rows));
+        for (i, p) in self.parts.iter().enumerate() {
+            out.push_str(&format!(
+                "part {i} {} {} {:016x} {}\n",
+                p.format.name(),
+                p.cols,
+                p.checksum,
+                p.path
+            ));
+        }
+        if let Some(l) = &self.labels {
+            out.push_str(&format!(
+                "labels {} {} {:016x} {}\n",
+                l.owner, l.len, l.checksum, l.path
+            ));
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+
+    /// Parse + validate a manifest file.
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| mf_err(format!("{}: {e}", path.display())))?;
+        let mut rows: Option<usize> = None;
+        let mut parts: Vec<PartitionMeta> = Vec::new();
+        let mut labels: Option<LabelsMeta> = None;
+        let mut lines = text.lines().enumerate();
+        let (_, first) = lines
+            .next()
+            .ok_or_else(|| mf_err(format!("{}: empty file", path.display())))?;
+        let mut head = first.split_whitespace();
+        if head.next() != Some("fedsvd-manifest") {
+            return Err(mf_err(format!(
+                "{}: not a fedsvd manifest (bad header line)",
+                path.display()
+            )));
+        }
+        let version: u32 = head
+            .next()
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| mf_err("bad version field"))?;
+        if version != MANIFEST_VERSION {
+            return Err(mf_err(format!(
+                "version {version}, this build reads v{MANIFEST_VERSION}"
+            )));
+        }
+        for (idx, line) in lines {
+            let lineno = idx + 1;
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('#') {
+                continue;
+            }
+            let toks: Vec<&str> = t.split_whitespace().collect();
+            let ctx = |msg: &str| mf_err(format!("{} line {lineno}: {msg}", path.display()));
+            match toks[0] {
+                "rows" => {
+                    if toks.len() != 2 {
+                        return Err(ctx("want `rows <m>`"));
+                    }
+                    let m = toks[1].parse().map_err(|_| ctx("bad row count"))?;
+                    if rows.replace(m).is_some() {
+                        return Err(ctx("duplicate rows line"));
+                    }
+                }
+                "part" => {
+                    if toks.len() != 6 {
+                        return Err(ctx(
+                            "want `part <i> <format> <cols> <checksum> <path>`",
+                        ));
+                    }
+                    let i: usize = toks[1].parse().map_err(|_| ctx("bad part index"))?;
+                    if i != parts.len() {
+                        return Err(ctx("part entries must be dense and in user order"));
+                    }
+                    parts.push(PartitionMeta {
+                        format: MatrixFormat::parse(toks[2])?,
+                        cols: toks[3].parse().map_err(|_| ctx("bad column count"))?,
+                        checksum: u64::from_str_radix(toks[4], 16)
+                            .map_err(|_| ctx("bad checksum"))?,
+                        path: toks[5].to_string(),
+                    });
+                }
+                "labels" => {
+                    if toks.len() != 5 {
+                        return Err(ctx("want `labels <owner> <len> <checksum> <path>`"));
+                    }
+                    let meta = LabelsMeta {
+                        owner: toks[1].parse().map_err(|_| ctx("bad owner"))?,
+                        len: toks[2].parse().map_err(|_| ctx("bad length"))?,
+                        checksum: u64::from_str_radix(toks[3], 16)
+                            .map_err(|_| ctx("bad checksum"))?,
+                        path: toks[4].to_string(),
+                    };
+                    if labels.replace(meta).is_some() {
+                        return Err(ctx("duplicate labels line"));
+                    }
+                }
+                other => return Err(ctx(&format!("unknown entry `{other}`"))),
+            }
+        }
+        let manifest = Manifest {
+            rows: rows.ok_or_else(|| mf_err("missing rows line"))?,
+            parts,
+            labels,
+        };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    /// Open user `i`'s partition for streaming, verifying the local file
+    /// against this manifest copy first: existence, declared format,
+    /// shape and checksum all must match — a silo serving the wrong file
+    /// fails here, before a single row is masked.
+    pub fn open_partition(&self, root: &Path, i: usize) -> Result<RowChunkReader> {
+        Ok(self.open_partition_attested(root, i)?.0)
+    }
+
+    /// [`Manifest::open_partition`] additionally returning the
+    /// **measured** attestation — shape from the opened reader, checksum
+    /// computed from the file bytes — which is what a party reports to
+    /// the TA: it describes the data this process actually serves, so
+    /// the TA's cross-check catches a silo whose manifest copy (or file)
+    /// diverged from the federation's. Integrity, not security: the
+    /// checksum is self-reported FNV-1a, so this stops misconfiguration,
+    /// not a lying peer.
+    pub fn open_partition_attested(
+        &self,
+        root: &Path,
+        i: usize,
+    ) -> Result<(RowChunkReader, PartitionAttest)> {
+        let meta = self
+            .parts
+            .get(i)
+            .ok_or_else(|| mf_err(format!("no part {i} (only {} users)", self.parts.len())))?;
+        let path = root.join(&meta.path);
+        if !path.exists() {
+            return Err(mf_err(format!(
+                "part {i}: partition file {} is missing",
+                path.display()
+            )));
+        }
+        let sum = file_checksum(&path)?;
+        if sum != meta.checksum {
+            return Err(mf_err(format!(
+                "part {i}: checksum mismatch for {} (file {sum:016x}, manifest {:016x}) — \
+                 the file changed since `fedsvd split` wrote it",
+                path.display(),
+                meta.checksum
+            )));
+        }
+        let reader = RowChunkReader::open_as(&path, meta.format)?;
+        if reader.rows() != self.rows || reader.cols() != meta.cols {
+            return Err(mf_err(format!(
+                "part {i}: {} is {}×{}, manifest says {}×{}",
+                path.display(),
+                reader.rows(),
+                reader.cols(),
+                self.rows,
+                meta.cols
+            )));
+        }
+        let attest = PartitionAttest {
+            rows: reader.rows() as u64,
+            cols: reader.cols() as u64,
+            checksum: sum,
+        };
+        Ok((reader, attest))
+    }
+
+    /// Load and verify the LR label vector (the label owner's call).
+    pub fn load_labels(&self, root: &Path) -> Result<Vec<f64>> {
+        let meta = self
+            .labels
+            .as_ref()
+            .ok_or_else(|| mf_err("dataset has no label vector (not split with --task lr)"))?;
+        let path = root.join(&meta.path);
+        if !path.exists() {
+            return Err(mf_err(format!(
+                "label file {} is missing",
+                path.display()
+            )));
+        }
+        let sum = file_checksum(&path)?;
+        if sum != meta.checksum {
+            return Err(mf_err(format!(
+                "label checksum mismatch for {} (file {sum:016x}, manifest {:016x})",
+                path.display(),
+                meta.checksum
+            )));
+        }
+        let reader = RowChunkReader::open_as(&path, MatrixFormat::Csv)?;
+        if reader.cols() != 1 || reader.rows() != meta.len {
+            return Err(mf_err(format!(
+                "label file {} is {}×{}, expected {}×1",
+                path.display(),
+                reader.rows(),
+                reader.cols(),
+                meta.len
+            )));
+        }
+        Ok(reader.read_all()?.into_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::format::write_dense_bin;
+    use crate::linalg::Mat;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("fedsvd_manifest_tests_{tag}"));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn demo_manifest(dir: &Path) -> Manifest {
+        let a = Mat::from_fn(4, 2, |i, j| (i * 2 + j) as f64);
+        let b = Mat::from_fn(4, 3, |i, j| (i * 3 + j) as f64 * 0.5);
+        write_dense_bin(&dir.join("part0.fsb"), &a, 2).unwrap();
+        write_dense_bin(&dir.join("part1.fsb"), &b, 2).unwrap();
+        Manifest {
+            rows: 4,
+            parts: vec![
+                PartitionMeta {
+                    path: "part0.fsb".into(),
+                    format: MatrixFormat::DenseBin,
+                    cols: 2,
+                    checksum: file_checksum(&dir.join("part0.fsb")).unwrap(),
+                },
+                PartitionMeta {
+                    path: "part1.fsb".into(),
+                    format: MatrixFormat::DenseBin,
+                    cols: 3,
+                    checksum: file_checksum(&dir.join("part1.fsb")).unwrap(),
+                },
+            ],
+            labels: None,
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_open() {
+        let dir = tmp_dir("roundtrip");
+        let m = demo_manifest(&dir);
+        let mp = dir.join(MANIFEST_FILE);
+        m.save(&mp).unwrap();
+        let back = Manifest::load(&mp).unwrap();
+        assert_eq!(back.rows, 4);
+        assert_eq!(back.widths(), vec![2, 3]);
+        assert_eq!(back.total_cols(), 5);
+        assert_eq!(back.attests(), m.attests());
+        let r0 = back.open_partition(&dir, 0).unwrap();
+        assert_eq!((r0.rows(), r0.cols()), (4, 2));
+        assert_eq!(r0.read_rows(1, 2).unwrap()[(0, 1)], 3.0);
+    }
+
+    #[test]
+    fn negative_paths_checksum_shape_missing() {
+        let dir = tmp_dir("negative");
+        let m = demo_manifest(&dir);
+
+        // checksum mismatch: flip a byte of part0
+        let p0 = dir.join("part0.fsb");
+        let mut bytes = std::fs::read(&p0).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xff;
+        std::fs::write(&p0, &bytes).unwrap();
+        let err = m.open_partition(&dir, 0).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "got: {err}");
+
+        // shape mismatch: replace part1 with a wrong-shaped file whose
+        // checksum is updated (so only the shape check can catch it)
+        let p1 = dir.join("part1.fsb");
+        write_dense_bin(&p1, &Mat::zeros(3, 3), 2).unwrap();
+        let mut m2 = m.clone();
+        m2.parts[1].checksum = file_checksum(&p1).unwrap();
+        let err = m2.open_partition(&dir, 1).unwrap_err().to_string();
+        assert!(err.contains("manifest says 4"), "got: {err}");
+
+        // missing file
+        std::fs::remove_file(&p1).unwrap();
+        let err = m2.open_partition(&dir, 1).unwrap_err().to_string();
+        assert!(err.contains("missing"), "got: {err}");
+
+        // out-of-range part index
+        assert!(m.open_partition(&dir, 5).is_err());
+    }
+
+    #[test]
+    fn manifest_validation_rejects_inconsistency() {
+        let dir = tmp_dir("invalid");
+        let mut m = demo_manifest(&dir);
+        m.labels = Some(LabelsMeta {
+            owner: 7, // only 2 users
+            path: "y.csv".into(),
+            len: 4,
+            checksum: 0,
+        });
+        assert!(m.save(&dir.join(MANIFEST_FILE)).is_err());
+
+        let mut m2 = demo_manifest(&dir);
+        m2.rows = 0;
+        assert!(m2.save(&dir.join(MANIFEST_FILE)).is_err());
+
+        // parse rejects unknown entries and version drift
+        let mp = dir.join("bad.txt");
+        std::fs::write(&mp, "fedsvd-manifest 99\nrows 4\n").unwrap();
+        assert!(Manifest::load(&mp).is_err());
+        std::fs::write(&mp, "fedsvd-manifest 1\nrows 4\nwat 1\n").unwrap();
+        assert!(Manifest::load(&mp).is_err());
+        std::fs::write(&mp, "not-a-manifest\n").unwrap();
+        assert!(Manifest::load(&mp).is_err());
+    }
+
+    #[test]
+    fn fnv_is_stable_and_sensitive() {
+        let mut h = Fnv1a64::new();
+        h.update(b"fedsvd");
+        let a = h.digest();
+        let mut h2 = Fnv1a64::new();
+        h2.update(b"fed");
+        h2.update(b"svd");
+        assert_eq!(a, h2.digest(), "streaming must match one-shot");
+        let mut h3 = Fnv1a64::new();
+        h3.update(b"fedsvD");
+        assert_ne!(a, h3.digest());
+    }
+}

@@ -1,362 +1,41 @@
-//! Datasets (paper §5.1 / Appendix A).
+//! The dataset subsystem: generators, on-disk formats, federation
+//! manifests and streaming ingest.
 //!
-//! The environment is offline, so the four real datasets are represented
-//! by deterministic generators that reproduce each dataset's *shape,
-//! value range and spectral character* — which is all the paper's metrics
-//! consume (RMSE to centralized SVD, projection distance, runtime, attack
-//! Pearson). Real files are used instead when dropped into `data/raw/`
-//! (see [`load_csv_matrix`]). The substitution is documented in
-//! DESIGN.md §4.
+//! Four layers, bottom-up:
 //!
-//! * [`synthetic_powerlaw`] — the paper's own synthetic family
-//!   `Y = U Σ Vᵀ, Σᵢᵢ = i^{-α}` (Appendix A, α = 0.01) — implemented
-//!   exactly as specified.
-//! * [`mnist_like`] — 784×10K-shaped, sparse bright strokes on a dark
-//!   background, pixel range [0,255], strong low-rank structure.
-//! * [`wine_like`] — 12×6497-shaped physicochemical-style features with
-//!   per-feature scales and cross-feature correlations.
-//! * [`movielens_like`] — user×movie rating matrix (1–5 stars, sparse,
-//!   power-law popularity); ML-100K shape is 1682×943.
+//! * [`synthetic`] — deterministic generators reproducing the paper's
+//!   datasets' shape/range/spectral character (offline environment;
+//!   §5.1 / Appendix A).
+//! * [`format`] — on-disk matrix encodings with bounded
+//!   [`format::RowChunkReader`] streaming readers: a chunked dense
+//!   binary format whose f64 payloads reuse the wire codec's raw
+//!   bit-pattern rule (±0/subnormal/NaN round-trip bit-exactly), CSV,
+//!   and MatrixMarket sparse for LSA term-doc matrices.
+//! * [`manifest`] — the federation [`Manifest`]: per-party partition
+//!   files, shapes, an optional LR label vector, and FNV-1a checksums
+//!   that both the owning user (at open) and the TA (via the handshake
+//!   attestation round) verify.
+//! * [`split`] — `fedsvd split`: stream any source matrix into
+//!   per-party partitions + manifest (ragged widths supported).
+//!
+//! The cluster runtime consumes this through
+//! [`crate::cluster::UserData`]: a disk-backed user masks and uploads
+//! its shard rows chunk-by-chunk, so its partition is never fully
+//! resident — the ingest-side mirror of the CSP's out-of-core
+//! discipline.
 
-use crate::linalg::{matmul, Mat};
-use crate::linalg::qr::orthonormalize;
-use crate::rng::Xoshiro256;
-use crate::util::{Error, Result};
-use std::path::Path;
+pub mod format;
+pub mod manifest;
+pub mod split;
+pub mod synthetic;
 
-/// Named dataset presets matching the paper's Appendix A shapes.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Dataset {
-    Mnist,
-    Wine,
-    Ml100k,
-    Synthetic,
-}
-
-impl Dataset {
-    /// Paper shape (rows = features, cols = samples, as in Appendix A).
-    pub fn paper_shape(&self) -> (usize, usize) {
-        match self {
-            Dataset::Mnist => (784, 10_000),
-            Dataset::Wine => (12, 6_497),
-            Dataset::Ml100k => (1682, 943),
-            Dataset::Synthetic => (1000, 1000),
-        }
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Dataset::Mnist => "MNIST",
-            Dataset::Wine => "Wine",
-            Dataset::Ml100k => "ML100K",
-            Dataset::Synthetic => "Synthetic",
-        }
-    }
-
-    /// Generate at the paper's shape scaled by `scale` (1.0 = paper size).
-    /// Scaling keeps the aspect ratio and the generator's statistics.
-    pub fn generate(&self, scale: f64, seed: u64) -> Mat {
-        let (m, n) = self.paper_shape();
-        let sm = ((m as f64 * scale).round() as usize).max(4);
-        let sn = ((n as f64 * scale).round() as usize).max(4);
-        match self {
-            Dataset::Mnist => mnist_like(sm, sn, seed),
-            Dataset::Wine => wine_like(sm, sn, seed),
-            Dataset::Ml100k => movielens_like(sm, sn, seed),
-            Dataset::Synthetic => synthetic_powerlaw(sm, sn, 0.01, seed),
-        }
-    }
-}
-
-/// Appendix A synthetic data: `Y = U Σ Vᵀ` with `[U,~] = QR(N^{m×m})`,
-/// `[V,~] = QR(N^{m×n})` and `Σᵢᵢ = i^{-α}`.
-///
-/// Exactly as specified, except U/V come from thin Householder QR of
-/// Gaussian matrices (same distribution as the paper's `QR(N)`).
-pub fn synthetic_powerlaw(m: usize, n: usize, alpha: f64, seed: u64) -> Mat {
-    let mut rng = Xoshiro256::seed_from_u64(seed);
-    let k = m.min(n);
-    let gu = Mat::gaussian(m, k, &mut rng);
-    let gv = Mat::gaussian(n, k, &mut rng);
-    let u = orthonormalize(&gu).expect("gaussian full rank");
-    let v = orthonormalize(&gv).expect("gaussian full rank");
-    let mut us = u;
-    for j in 0..k {
-        let s = ((j + 1) as f64).powf(-alpha);
-        for i in 0..us.rows() {
-            us[(i, j)] *= s;
-        }
-    }
-    matmul(&us, &v.transpose()).expect("shapes agree")
-}
-
-/// MNIST-like: each column is a synthetic "digit" — a sparse superposition
-/// of a handful of smooth stroke templates on a zero background, clipped
-/// to [0, 255]. Low-rank structure (10 class templates) + per-image noise.
-pub fn mnist_like(features: usize, samples: usize, seed: u64) -> Mat {
-    let mut rng = Xoshiro256::seed_from_u64(seed);
-    let side = (features as f64).sqrt().ceil() as usize;
-    let n_classes = 10usize;
-    // class templates: smooth random bumps in the side×side plane
-    let mut templates: Vec<Vec<f64>> = Vec::with_capacity(n_classes);
-    for _ in 0..n_classes {
-        let cx = rng.uniform(0.2, 0.8) * side as f64;
-        let cy = rng.uniform(0.2, 0.8) * side as f64;
-        let sx = rng.uniform(0.04, 0.10) * side as f64;
-        let sy = rng.uniform(0.04, 0.10) * side as f64;
-        let theta = rng.uniform(0.0, std::f64::consts::PI);
-        let (ct, st) = (theta.cos(), theta.sin());
-        let mut t = vec![0.0; features];
-        for (idx, v) in t.iter_mut().enumerate() {
-            let x = (idx % side) as f64 - cx;
-            let y = (idx / side) as f64 - cy;
-            let xr = ct * x + st * y;
-            let yr = -st * x + ct * y;
-            // elongated Gaussian "stroke"
-            *v = (-(xr * xr) / (2.0 * sx * sx) - (yr * yr) / (2.0 * sy * sy * 4.0)).exp();
-        }
-        templates.push(t);
-    }
-    Mat::from_fn(features, samples, |f, s| {
-        // each sample mixes 1-2 templates chosen by its hash
-        let mut h = Xoshiro256::seed_from_u64(seed ^ (s as u64).wrapping_mul(0x9e37_79b9));
-        let c1 = h.next_below(n_classes as u64) as usize;
-        let c2 = h.next_below(n_classes as u64) as usize;
-        let w1 = h.uniform(0.6, 1.0);
-        let w2 = h.uniform(0.0, 0.4);
-        let noise = h.gaussian(0.0, 8.0);
-        let v = 255.0 * (w1 * templates[c1][f] + w2 * templates[c2][f]) + noise;
-        v.clamp(0.0, 255.0)
-    })
-}
-
-/// Wine-like: 12 physicochemical features × samples, each feature with
-/// its own scale/offset, plus a shared 3-factor latent structure (the
-/// red/white/quality axes) so the covariance is realistic.
-pub fn wine_like(features: usize, samples: usize, seed: u64) -> Mat {
-    let mut rng = Xoshiro256::seed_from_u64(seed);
-    let latent = 3usize.min(features);
-    // loading matrix and per-feature scales
-    let loadings = Mat::gaussian(features, latent, &mut rng);
-    let scales: Vec<f64> = (0..features)
-        .map(|i| match i % 4 {
-            0 => rng.uniform(0.5, 2.0),    // acids
-            1 => rng.uniform(5.0, 40.0),   // sulfur dioxide
-            2 => rng.uniform(0.01, 0.2),   // chlorides / sulphates
-            _ => rng.uniform(0.9, 1.3),    // density-like
-        })
-        .collect();
-    let offsets: Vec<f64> = (0..features).map(|_| rng.uniform(0.0, 10.0)).collect();
-    Mat::from_fn(features, samples, |f, s| {
-        // per-sample latent draw (same z for every feature of sample s)
-        let mut hs = Xoshiro256::seed_from_u64(seed ^ 0xdead ^ (s as u64).wrapping_mul(0x51_7cc1));
-        let z: Vec<f64> = (0..latent).map(|_| hs.next_gaussian()).collect();
-        let shared: f64 = (0..latent).map(|l| loadings[(f, l)] * z[l]).sum();
-        // per-element measurement noise (full-rank component, as in the
-        // real physicochemical data)
-        let mut hf = Xoshiro256::seed_from_u64(
-            seed ^ 0xbeef ^ (s as u64).wrapping_mul(0x51_7cc1) ^ (f as u64).wrapping_mul(0x9e3779b9),
-        );
-        offsets[f] + scales[f] * (shared + 0.5 * hf.next_gaussian())
-    })
-}
-
-/// MovieLens-like: rows = movies, cols = users (ML-100K orientation,
-/// 1682×943). Ratings in {0} ∪ [1,5] with ~6% density, power-law movie
-/// popularity and a latent taste model rounding to half-stars.
-pub fn movielens_like(movies: usize, users: usize, seed: u64) -> Mat {
-    let mut rng = Xoshiro256::seed_from_u64(seed);
-    let latent = 8usize;
-    let movie_f = Mat::gaussian(movies, latent, &mut rng);
-    let user_f = Mat::gaussian(users, latent, &mut rng);
-    let movie_pop: Vec<f64> = (0..movies)
-        .map(|i| 1.0 / ((i + 2) as f64).powf(0.8))
-        .collect();
-    let pop_max = movie_pop[0];
-    Mat::from_fn(movies, users, |mv, us| {
-        let mut h = Xoshiro256::seed_from_u64(
-            seed ^ (mv as u64).wrapping_mul(0x6a09_e667) ^ (us as u64).wrapping_mul(0xbb67_ae85),
-        );
-        // sparse: rate only with probability ∝ movie popularity
-        let p_rate = 0.30 * movie_pop[mv] / pop_max + 0.01;
-        if h.next_f64() > p_rate {
-            return 0.0;
-        }
-        let mut dot = 0.0;
-        for l in 0..latent {
-            dot += movie_f[(mv, l)] * user_f[(us, l)];
-        }
-        let raw = 3.3 + 0.7 * dot + 0.4 * h.next_gaussian();
-        (raw.clamp(1.0, 5.0) * 2.0).round() / 2.0
-    })
-}
-
-/// Synthetic regression task for the LR application: X (m×n) with
-/// decaying feature scales plus a bias column, ground-truth w, and noisy
-/// labels y = Xw + ε.
-pub fn regression_task(m: usize, n: usize, noise: f64, seed: u64) -> (Mat, Vec<f64>, Vec<f64>) {
-    let mut rng = Xoshiro256::seed_from_u64(seed);
-    let mut x = Mat::gaussian(m, n, &mut rng);
-    // decaying feature scales + bias column at the end (paper §4: X=[X₀;b])
-    for j in 0..n {
-        let s = 1.0 / (1.0 + j as f64 / 8.0);
-        for i in 0..m {
-            x[(i, j)] *= s;
-        }
-    }
-    for i in 0..m {
-        x[(i, n - 1)] = 1.0;
-    }
-    let w_true: Vec<f64> = (0..n).map(|_| rng.gaussian(0.0, 2.0)).collect();
-    let mut y = x.mul_vec(&w_true).expect("shape");
-    for v in y.iter_mut() {
-        *v += rng.gaussian(0.0, noise);
-    }
-    (x, w_true, y)
-}
-
-/// Load a real dataset from a headerless CSV of f64 (rows = lines).
-/// Used when actual MNIST/Wine/MovieLens exports exist in `data/raw/`.
-pub fn load_csv_matrix(path: &Path) -> Result<Mat> {
-    let text = std::fs::read_to_string(path)?;
-    let mut rows: Vec<Vec<f64>> = Vec::new();
-    for (lineno, line) in text.lines().enumerate() {
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
-        }
-        let row: Vec<f64> = line
-            .split(',')
-            .map(|t| {
-                t.trim()
-                    .parse::<f64>()
-                    .map_err(|e| Error::Config(format!("{path:?}:{}: {e}", lineno + 1)))
-            })
-            .collect::<Result<_>>()?;
-        if let Some(first) = rows.first() {
-            if row.len() != first.len() {
-                return Err(Error::Config(format!(
-                    "{path:?}:{}: ragged row ({} vs {})",
-                    lineno + 1,
-                    row.len(),
-                    first.len()
-                )));
-            }
-        }
-        rows.push(row);
-    }
-    if rows.is_empty() {
-        return Err(Error::Config(format!("{path:?}: empty matrix")));
-    }
-    let m = rows.len();
-    let n = rows[0].len();
-    Mat::from_vec(m, n, rows.into_iter().flatten().collect())
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::linalg::svd;
-
-    #[test]
-    fn powerlaw_spectrum_matches_alpha() {
-        let a = synthetic_powerlaw(24, 30, 0.5, 1);
-        let f = svd(&a).unwrap();
-        // σᵢ should be ≈ (i+1)^-0.5
-        for i in 0..10 {
-            let expect = ((i + 1) as f64).powf(-0.5);
-            assert!(
-                (f.s[i] - expect).abs() < 1e-8,
-                "σ{i}={} expect {expect}",
-                f.s[i]
-            );
-        }
-    }
-
-    #[test]
-    fn generators_are_deterministic() {
-        let a = mnist_like(49, 20, 7);
-        let b = mnist_like(49, 20, 7);
-        assert_eq!(a.data(), b.data());
-        let c = mnist_like(49, 20, 8);
-        assert_ne!(a.data(), c.data());
-    }
-
-    #[test]
-    fn mnist_like_range_and_sparsity() {
-        let a = mnist_like(784, 50, 1);
-        let mut dark = 0usize;
-        for &v in a.data() {
-            assert!((0.0..=255.0).contains(&v));
-            if v < 16.0 {
-                dark += 1;
-            }
-        }
-        // digits are mostly background
-        assert!(dark as f64 > 0.5 * a.data().len() as f64);
-    }
-
-    #[test]
-    fn movielens_like_ratings_valid_and_sparse() {
-        let a = movielens_like(100, 80, 2);
-        let mut rated = 0usize;
-        for &v in a.data() {
-            assert!(v == 0.0 || ((1.0..=5.0).contains(&v) && (v * 2.0).fract() == 0.0));
-            if v > 0.0 {
-                rated += 1;
-            }
-        }
-        let density = rated as f64 / a.data().len() as f64;
-        assert!(density > 0.005 && density < 0.4, "density={density}");
-    }
-
-    #[test]
-    fn wine_like_feature_scales_differ() {
-        let a = wine_like(12, 200, 3);
-        let mut vars = Vec::new();
-        for f in 0..12 {
-            let row = a.row(f);
-            let mean: f64 = row.iter().sum::<f64>() / row.len() as f64;
-            let var: f64 =
-                row.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / row.len() as f64;
-            vars.push(var);
-        }
-        let vmax = vars.iter().cloned().fold(0.0, f64::max);
-        let vmin = vars.iter().cloned().fold(f64::INFINITY, f64::min);
-        assert!(vmax / vmin > 5.0, "feature variances too uniform");
-    }
-
-    #[test]
-    fn regression_task_labels_consistent() {
-        let (x, w, y) = regression_task(50, 6, 0.0, 4);
-        let yhat = x.mul_vec(&w).unwrap();
-        assert!(crate::util::max_abs_diff(&y, &yhat) < 1e-12);
-        // bias column present
-        for i in 0..50 {
-            assert_eq!(x[(i, 5)], 1.0);
-        }
-    }
-
-    #[test]
-    fn dataset_presets_scale() {
-        let d = Dataset::Wine.generate(0.1, 5);
-        assert_eq!(d.rows(), 4.max((12.0f64 * 0.1).round() as usize));
-        assert!(d.cols() >= 600);
-        assert_eq!(Dataset::Mnist.paper_shape(), (784, 10_000));
-    }
-
-    #[test]
-    fn csv_loader_roundtrip_and_errors() {
-        let dir = std::env::temp_dir().join("fedsvd_data_tests");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("ok.csv");
-        std::fs::write(&p, "1.0,2.0\n3.5,-4\n").unwrap();
-        let m = load_csv_matrix(&p).unwrap();
-        assert_eq!(m.shape(), (2, 2));
-        assert_eq!(m[(1, 1)], -4.0);
-
-        let bad = dir.join("bad.csv");
-        std::fs::write(&bad, "1,2\n3\n").unwrap();
-        assert!(load_csv_matrix(&bad).is_err());
-    }
-}
+pub use format::{
+    load_csv_matrix, write_csv_matrix, write_dense_bin, write_matrix_market, DenseBinWriter,
+    MatrixFormat, RowChunkReader,
+};
+pub use manifest::{file_checksum, LabelsMeta, Manifest, PartitionAttest, PartitionMeta,
+    MANIFEST_FILE};
+pub use split::{equal_widths, split_matrix, split_reader, SplitOptions};
+pub use synthetic::{
+    mnist_like, movielens_like, regression_task, synthetic_powerlaw, wine_like, Dataset,
+};

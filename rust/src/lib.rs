@@ -58,6 +58,25 @@
 //!   processes match the oracle to ≤ 1e-9
 //!   (`tests/distributed_smoke.rs`).
 //!
+//! ## Data architecture
+//!
+//! The [`data`] subsystem feeds real per-party data into any execution
+//! mode: on-disk matrix formats with bounded streaming readers
+//! ([`data::RowChunkReader`] over a chunked dense binary format whose
+//! f64 payloads reuse the wire codec's raw-bit rule, CSV, and
+//! MatrixMarket sparse), a checksummed federation manifest
+//! ([`data::Manifest`]), and a streaming column partitioner (`fedsvd
+//! split`). Party loops consume partitions through
+//! [`cluster::UserData`]: a disk-backed user masks and uploads each
+//! secagg shard from one P-block-aligned partition panel and streams
+//! its app passes, so the partition is never fully resident — users
+//! mirror the CSP's out-of-core discipline on the ingest side. In a
+//! `fedsvd serve --data` federation each process opens only its own
+//! partition, verifies it against the manifest locally, and attests
+//! (rows, cols, checksum) to the TA before any mask seed is released
+//! (`tests/dataset_suite.rs`, manifest-driven smoke tests in
+//! `tests/distributed_smoke.rs`).
+//!
 //! The §4 applications (PCA / LR / LSA) run through the same seam:
 //! `coordinator::Session::{run_pca, run_lr, run_lsa}` execute on either
 //! mode unchanged. On the cluster they ride `cluster::ClusterApp` — the

@@ -8,11 +8,21 @@
 //! fedsvd lr    [--m M] [--n N] [--users K]
 //! fedsvd lsa   [--dataset name] [--scale S] [--rank R]
 //! fedsvd attack [--dataset name] [--block B]
+//! fedsvd split --out DIR (--input FILE | --dataset name | --m M --n N)
+//!              [--users K | --widths w0,w1,...] [--format bin|csv|mtx]
+//!              [--chunk-rows N] [--task svd|lr] [--label-owner I]
 //! fedsvd serve --role ta|csp|user<i> (--peers-dir DIR | --peers r=H:P,...)
-//!              [--task svd|pca|lr|lsa] [--listen H:P] [--m M] [--n N]
+//!              [--task svd|pca|lr|lsa] [--data MANIFEST [--chunk-rows N]]
+//!              [--listen H:P] [--m M] [--n N]
 //!              [--users K] [--seed N] [--shards S] [--budget-mb MB]
 //! fedsvd info
 //! ```
+//!
+//! `split` partitions a matrix (an existing `.fsb`/`.csv`/`.mtx` file,
+//! a generated dataset, or the demo matrix) into per-party on-disk
+//! datasets plus a checksummed manifest; `serve --data` runs a real
+//! federation from that manifest with each process streaming only its
+//! own partition from disk.
 //!
 //! `svd`, `pca`, `lr` and `lsa` additionally take `--shards S`
 //! (+ optional `--budget-mb MB`, default 64) to run on the sharded
@@ -36,14 +46,18 @@
 
 use fedsvd::apps::lr;
 use fedsvd::attack::{fast_ica, matched_pearson, IcaOptions};
-use fedsvd::coordinator::{ExecMode, Session};
+use fedsvd::coordinator::{DataSpec, ExecMode, Session};
 use fedsvd::config::Config;
-use fedsvd::data::{regression_task, Dataset};
+use fedsvd::data::{
+    regression_task, split_matrix, split_reader, Dataset, Manifest, MatrixFormat,
+    RowChunkReader, SplitOptions,
+};
 use fedsvd::linalg::Mat;
 use fedsvd::protocol::{split_columns, FedSvdConfig, SvdMode};
 use fedsvd::rng::Xoshiro256;
 use fedsvd::util::{human_bytes, human_secs};
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -269,6 +283,120 @@ fn cmd_attack(flags: &HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
+/// `fedsvd split` — partition a matrix into per-party on-disk datasets
+/// plus a checksummed manifest (what `fedsvd serve --data` consumes).
+/// Sources: `--input file.{fsb,csv,mtx}` streams an existing matrix;
+/// `--dataset name` generates a paper-shaped dataset; bare `--m/--n`
+/// derives the demo matrix (`--task lr` adds a label vector).
+fn cmd_split(flags: &HashMap<String, String>) -> Result<(), String> {
+    let out_dir = PathBuf::from(
+        flags
+            .get("out")
+            .ok_or("split: --out DIR is required")?,
+    );
+    let users = flag_usize(flags, "users", 2);
+    let widths: Vec<usize> = match flags.get("widths") {
+        Some(spec) => spec
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<usize>()
+                    .map_err(|_| format!("split: bad --widths entry `{t}`"))
+            })
+            .collect::<Result<_, _>>()?,
+        None => Vec::new(),
+    };
+    let format = match flags.get("format") {
+        Some(f) => MatrixFormat::parse(f).map_err(|e| e.to_string())?,
+        None => MatrixFormat::DenseBin,
+    };
+    let chunk_rows = flag_usize(flags, "chunk-rows", 1024);
+    let data_seed = flags
+        .get("data-seed")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(7u64);
+    let label_owner = flag_usize(flags, "label-owner", 0);
+    let task = flags.get("task").map(String::as_str).unwrap_or("svd");
+    if task == "lr" && (flags.contains_key("input") || flags.contains_key("dataset")) {
+        // silently writing a label-less manifest would only surface at
+        // serve time ("manifest has no label vector"), with no way to
+        // re-split the same source with labels
+        return Err(
+            "split: --task lr only supports the demo source (--m/--n) — external \
+             inputs and generated datasets have no label source yet"
+                .into(),
+        );
+    }
+    let mut opts = SplitOptions {
+        widths,
+        users,
+        format,
+        chunk_rows,
+        labels: None,
+    };
+
+    let manifest = if let Some(input) = flags.get("input") {
+        let src = RowChunkReader::open(Path::new(input)).map_err(|e| e.to_string())?;
+        println!(
+            "split: streaming {} ({}×{}, {}) into {} partitions",
+            input,
+            src.rows(),
+            src.cols(),
+            src.format().name(),
+            if opts.widths.is_empty() { opts.users } else { opts.widths.len() }
+        );
+        split_reader(&src, &out_dir, &opts).map_err(|e| e.to_string())?
+    } else if let Some(name) = flags.get("dataset") {
+        let ds = dataset_by_name(name).ok_or("unknown dataset")?;
+        let scale: f64 = flags
+            .get("scale")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0.05);
+        let x = ds.generate(scale, data_seed);
+        println!(
+            "split: {}-like data {}×{} (scale {scale}) into partitions",
+            ds.name(),
+            x.rows(),
+            x.cols()
+        );
+        split_matrix(&x, &out_dir, &opts).map_err(|e| e.to_string())?
+    } else {
+        let m = flag_usize(flags, "m", 48);
+        let n = flag_usize(flags, "n", 16);
+        let x = if task == "lr" {
+            let (x, _w_true, y) = regression_task(m, n, 0.1, data_seed);
+            opts.labels = Some((label_owner, y));
+            x
+        } else {
+            let mut rng = Xoshiro256::seed_from_u64(data_seed);
+            Mat::gaussian(m, n, &mut rng)
+        };
+        println!("split: demo matrix {m}×{n} (seed {data_seed}, task {task}) into partitions");
+        split_matrix(&x, &out_dir, &opts).map_err(|e| e.to_string())?
+    };
+
+    println!(
+        "split: wrote {} partitions ({}) + {} under {}",
+        manifest.users(),
+        manifest
+            .widths()
+            .iter()
+            .map(|w| w.to_string())
+            .collect::<Vec<_>>()
+            .join("+"),
+        fedsvd::data::MANIFEST_FILE,
+        out_dir.display()
+    );
+    if let Some(l) = &manifest.labels {
+        println!("split: label vector ({} rows) owned by user{}", l.len, l.owner);
+    }
+    println!(
+        "serve it:  fedsvd serve --role <ta|csp|user0..> --peers-dir /tmp/fed --data {}",
+        out_dir.join(fedsvd::data::MANIFEST_FILE).display()
+    );
+    Ok(())
+}
+
 fn fmt_f64s(v: &[f64]) -> String {
     v.iter()
         .map(|x| format!("{x:.17e}"))
@@ -301,6 +429,9 @@ fn print_dist_outcome(out: &fedsvd::cluster::DistOutcome) {
     }
     if let Some(mse) = out.train_mse {
         println!("RESULT mse {mse:.17e}");
+    }
+    if out.part_peak_bytes > 0 {
+        println!("RESULT part_peak {}", out.part_peak_bytes);
     }
     println!(
         "RESULT traffic {}",
@@ -368,15 +499,48 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
         .unwrap_or(64))
         << 20;
 
-    // deterministic demo data, identical in every process
+    // manifest-backed data loading: shapes come from the manifest and
+    // this process opens only its own partition (`fedsvd split` output)
+    let data_spec = match flags.get("data") {
+        Some(mp) => {
+            let mpath = PathBuf::from(mp);
+            let manifest = Manifest::load(&mpath).map_err(|e| e.to_string())?;
+            let root = mpath
+                .parent()
+                .filter(|p| !p.as_os_str().is_empty())
+                .unwrap_or(Path::new("."))
+                .to_path_buf();
+            Some(DataSpec {
+                manifest,
+                root,
+                chunk_rows: flag_usize(flags, "chunk-rows", 1024),
+            })
+        }
+        None => None,
+    };
+    let (m, n, k) = match &data_spec {
+        Some(spec) => (
+            spec.manifest.rows,
+            spec.manifest.total_cols(),
+            spec.manifest.users(),
+        ),
+        None => (m, n, k),
+    };
+
+    // deterministic demo data, identical in every process (manifest runs
+    // carry no demo data: each party streams its own partition instead)
     let (parts, y);
-    match task {
-        "lr" => {
+    match (&data_spec, task) {
+        (Some(_), _) => {
+            parts = Vec::new();
+            y = Vec::new();
+        }
+        (None, "lr") => {
             let (x, _w_true, labels) = regression_task(m, n, 0.1, data_seed);
             parts = split_columns(&x, k).map_err(|e| e.to_string())?;
             y = labels;
         }
-        _ => {
+        (None, _) => {
             let mut rng = Xoshiro256::seed_from_u64(data_seed);
             let x = Mat::gaussian(m, n, &mut rng);
             parts = split_columns(&x, k).map_err(|e| e.to_string())?;
@@ -384,15 +548,19 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
         }
     }
     eprintln!(
-        "serve: role {} task {task} {m}×{n} ({k} users, {shards} shards, session {})",
+        "serve: role {} task {task} {m}×{n} ({k} users, {shards} shards, session {}{})",
         role.name(),
-        cfg.seed
+        cfg.seed,
+        if data_spec.is_some() { ", manifest data" } else { "" }
     );
 
     // injected mid-protocol failure (abort-path testing; svd task only)
     if let Some(point) = flags.get("inject-abort") {
         if task != "svd" {
             return Err("serve: --inject-abort is only wired for --task svd".into());
+        }
+        if data_spec.is_some() {
+            return Err("serve: --inject-abort is only wired for the demo data path".into());
         }
         let label = fedsvd::cluster::parse_fault_point(point).map_err(|e| e.to_string())?;
         let mut dcfg = DistConfig::new(role, listen, peers);
@@ -418,7 +586,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
         peers,
         shards,
         mem_budget,
+        data: data_spec,
     });
+    // on the manifest path LR ownership/labels come from the manifest;
+    // the task's y/owner fields only drive the demo derivation
     let dist_task = match task {
         "svd" => DistTask::Svd,
         "pca" => DistTask::Pca { rank },
@@ -474,17 +645,24 @@ fn main() -> ExitCode {
         "lr" => cmd_lr(&flags),
         "lsa" => cmd_lsa(&flags),
         "attack" => cmd_attack(&flags),
+        "split" => cmd_split(&flags),
         "serve" => cmd_serve(&flags),
         "info" => cmd_info(),
         _ => {
             println!(
-                "usage: fedsvd <svd|pca|lr|lsa|attack|serve|info> [--m M] [--n N] [--users K] \
+                "usage: fedsvd <svd|pca|lr|lsa|attack|split|serve|info> [--m M] [--n N] [--users K] \
                  [--block B] [--rank R] [--dataset name] [--scale S] [--config file] \
                  [--shards S [--budget-mb MB]]\n\
                  \n\
+                 split (partition a matrix into per-party datasets + manifest):\n\
+                 fedsvd split --out DIR (--input FILE | --dataset name [--scale S] | --m M --n N)\n\
+                 \x20       [--users K | --widths w0,w1,...] [--format bin|csv|mtx]\n\
+                 \x20       [--chunk-rows N] [--task svd|lr] [--label-owner I] [--data-seed N]\n\
+                 \n\
                  serve (one party of a multi-process federation over TCP):\n\
                  fedsvd serve --role ta|csp|user<i> (--peers-dir DIR | --peers r=H:P,...)\n\
-                 \x20       [--task svd|pca|lr|lsa] [--listen H:P] [--m M] [--n N] [--users K]\n\
+                 \x20       [--task svd|pca|lr|lsa] [--data MANIFEST [--chunk-rows N]]\n\
+                 \x20       [--listen H:P] [--m M] [--n N] [--users K]\n\
                  \x20       [--seed N] [--data-seed N] [--shards S] [--budget-mb MB]"
             );
             Ok(())

@@ -70,6 +70,11 @@ struct Shared {
     recvd: Mutex<HashMap<u64, u64>>,
     /// First abort reason seen (local failure or peer `Abort` frame).
     abort_reason: Mutex<Option<String>>,
+    /// Completed inbound handshakes per party: lets a reader that saw a
+    /// zero-frame EOF tell a client's handshake retry (a newer
+    /// connection supersedes this one) from a peer that died right
+    /// after connecting.
+    handshakes: Mutex<HashMap<PartyId, u64>>,
     shutdown: AtomicBool,
 }
 
@@ -84,6 +89,20 @@ impl Shared {
             .expect("abort poisoned")
             .get_or_insert(reason);
         self.inbox.close();
+    }
+}
+
+/// Why one connect+handshake attempt failed: transient I/O (the peer
+/// may still be binding — retryable) vs an explicit rejection by a live
+/// peer (definitive — retrying can never fix a wrong session/version).
+enum HandshakeError {
+    Io(std::io::Error),
+    Rejected(Error),
+}
+
+impl From<std::io::Error> for HandshakeError {
+    fn from(e: std::io::Error) -> Self {
+        HandshakeError::Io(e)
     }
 }
 
@@ -121,6 +140,7 @@ impl TcpTransport {
             sent: Mutex::new(HashMap::new()),
             recvd: Mutex::new(HashMap::new()),
             abort_reason: Mutex::new(None),
+            handshakes: Mutex::new(HashMap::new()),
             shutdown: AtomicBool::new(false),
         });
         let handshake_timeout = default_secs("FEDSVD_HANDSHAKE_TIMEOUT_S", 10);
@@ -200,24 +220,48 @@ impl TcpTransport {
             .ok_or_else(|| Error::Runtime(format!("tcp transport: no address for party {to}")))
     }
 
-    /// Connect + handshake to `to`, retrying while the peer may still be
-    /// binding its listener (bounded by the connect timeout).
+    /// Connect + handshake to `to` with bounded retry and exponential
+    /// backoff, covering the whole startup race window: a refused
+    /// connect (the peer has not bound its listener yet), a connection
+    /// reset during the hello, and a dropped ack are all *transient* —
+    /// `fedsvd serve` processes launch in arbitrary order, so the first
+    /// attempt failing must not abort the federation. Only an explicit
+    /// protocol rejection (wrong version/session/target, which retrying
+    /// can never fix) or the deadline expiring fails the call.
     fn connect_peer(&self, to: PartyId, deadline: Duration) -> Result<TcpStream> {
         let addr = self.addr_of(to)?;
         let t0 = Instant::now();
-        let stream = loop {
-            match TcpStream::connect(addr.as_str()) {
-                Ok(s) => break s,
-                Err(e) => {
+        let mut backoff = Duration::from_millis(20);
+        loop {
+            match self.try_connect_handshake(to, &addr) {
+                Ok(stream) => return Ok(stream),
+                // a rejection is definitive: the peer is alive and said no
+                Err(HandshakeError::Rejected(e)) => return Err(e),
+                Err(HandshakeError::Io(e)) => {
                     if t0.elapsed() >= deadline {
                         return Err(Error::Runtime(format!(
-                            "tcp transport: party {to} unreachable at {addr}: {e}"
+                            "tcp transport: party {to} unreachable at {addr} after \
+                             {:.1}s of retries: {e}",
+                            t0.elapsed().as_secs_f64()
                         )));
                     }
-                    std::thread::sleep(Duration::from_millis(30));
+                    std::thread::sleep(backoff);
+                    // exponential backoff, capped: fast during the launch
+                    // race, gentle on a peer that is genuinely slow to bind
+                    backoff = (backoff * 2).min(Duration::from_millis(500));
                 }
             }
-        };
+        }
+    }
+
+    /// One connect + handshake attempt (see [`TcpTransport::connect_peer`]
+    /// for the retry policy around it).
+    fn try_connect_handshake(
+        &self,
+        to: PartyId,
+        addr: &str,
+    ) -> std::result::Result<TcpStream, HandshakeError> {
+        let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
         stream.set_read_timeout(Some(self.handshake_timeout))?;
         // HELLO: magic, version, pad, session, from, to
@@ -236,7 +280,7 @@ impl TcpTransport {
         let magic = u32::from_le_bytes(ack[0..4].try_into().expect("len 4"));
         let status = u16::from_le_bytes(ack[6..8].try_into().expect("len 2"));
         if magic != HELLO_MAGIC || status != ACK_OK {
-            return Err(Error::Protocol(format!(
+            return Err(HandshakeError::Rejected(Error::Protocol(format!(
                 "tcp transport: party {to} rejected handshake (status {status}: {})",
                 match status {
                     ACK_BAD_VERSION => "protocol version mismatch",
@@ -244,7 +288,7 @@ impl TcpTransport {
                     ACK_BAD_TARGET => "connected to the wrong party",
                     _ => "malformed ack",
                 }
-            )));
+            ))));
         }
         stream.set_read_timeout(None)?;
         Ok(stream)
@@ -413,12 +457,13 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>, handshake_timeout: Du
 }
 
 /// Validate one inbound handshake; answer with an ack. Returns the
-/// connecting party's id when the connection is accepted.
+/// connecting party's id and this connection's handshake generation
+/// (per party, monotonic) when the connection is accepted.
 fn handshake_in(
     stream: &mut TcpStream,
     shared: &Shared,
     timeout: Duration,
-) -> Result<PartyId> {
+) -> Result<(PartyId, u64)> {
     stream.set_read_timeout(Some(timeout))?;
     let mut hello = [0u8; HELLO_LEN];
     stream.read_exact(&mut hello)?;
@@ -452,18 +497,26 @@ fn handshake_in(
     }
     Shared::add(&shared.recvd, UNLABELLED, HELLO_LEN as u64);
     stream.set_read_timeout(None)?;
-    Ok(from)
+    let gen = {
+        let mut h = shared.handshakes.lock().expect("handshakes poisoned");
+        let e = h.entry(from).or_insert(0);
+        *e += 1;
+        *e
+    };
+    Ok((from, gen))
 }
 
 /// Per-connection reader: decode frames and post them to the inbox.
 fn reader(mut stream: TcpStream, shared: Arc<Shared>, handshake_timeout: Duration) {
-    let from = match handshake_in(&mut stream, &shared, handshake_timeout) {
+    let (from, my_gen) = match handshake_in(&mut stream, &shared, handshake_timeout) {
         Ok(p) => p,
         Err(_) => return, // rejected or wedged: never part of the session
     };
+    let mut frames = 0u64;
     loop {
         match wire::read_frame(&mut stream) {
             Ok((msg, label, bytes)) => {
+                frames += 1;
                 // every received frame — control frames included — lands
                 // in the ledger: seen_ledger really is all NIC traffic
                 Shared::add(&shared.recvd, label, bytes);
@@ -481,9 +534,38 @@ fn reader(mut stream: TcpStream, shared: Arc<Shared>, handshake_timeout: Duratio
                 }
             }
             Err(_) => {
-                // end-of-stream without a Shutdown frame: the peer died
-                // without telling us — fail fast instead of hanging the
-                // next recv (unless we are tearing down anyway)
+                // A stream that dies before carrying a single frame is
+                // usually an abandoned handshake attempt: the peer's
+                // connect retry (see connect_peer) timed out reading our
+                // ack, dropped this connection, and will reconnect —
+                // failing immediately would poison a healthy federation.
+                // But it could also be a peer that crashed right after
+                // connecting, so give the retry a bounded grace window
+                // to supersede this connection (a newer handshake from
+                // the same party) before declaring the peer lost. A
+                // stream that carried real frames and then hit EOF
+                // without a Shutdown is a mid-protocol death: fail fast.
+                if frames == 0 {
+                    let deadline = Instant::now() + Duration::from_secs(2);
+                    loop {
+                        if shared.shutdown.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        let superseded = shared
+                            .handshakes
+                            .lock()
+                            .expect("handshakes poisoned")
+                            .get(&from)
+                            .is_some_and(|&g| g > my_gen);
+                        if superseded {
+                            return; // the retry's connection took over
+                        }
+                        if Instant::now() >= deadline {
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_millis(25));
+                    }
+                }
                 if !shared.shutdown.load(Ordering::SeqCst) {
                     shared.fail(format!("connection to party {from} lost"));
                 }
@@ -561,6 +643,40 @@ mod tests {
         assert!(err.is_err());
         a.close();
         b.close();
+    }
+
+    #[test]
+    fn connect_retries_with_backoff_until_the_peer_binds() {
+        if !loopback_available() {
+            eprintln!("skipping: loopback TCP unavailable");
+            return;
+        }
+        // reserve an ephemeral port, free it, and bring the peer up late:
+        // the first connects are refused, the retry/backoff path must
+        // carry the send through once the listener finally binds
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap().to_string();
+        drop(probe);
+        let user = TcpTransport::bind("127.0.0.1:0", USER_BASE, 77).unwrap();
+        let addrs: HashMap<PartyId, String> = [
+            (CSP, addr.clone()),
+            (USER_BASE, user.local_addr().to_string()),
+        ]
+        .into_iter()
+        .collect();
+        user.set_peers(addrs).unwrap();
+        let late = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(250));
+            let csp = TcpTransport::bind(&addr, CSP, 77).unwrap();
+            let msg = csp.recv().unwrap();
+            assert!(matches!(msg, ClusterMsg::Sigma(_)));
+            csp.close();
+        });
+        user.round_enter(1, 1).unwrap();
+        user.send(CSP, ClusterMsg::Sigma(vec![1.0])).unwrap();
+        user.round_leave(1).unwrap();
+        late.join().unwrap();
+        user.close();
     }
 
     #[test]

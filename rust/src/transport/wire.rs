@@ -37,8 +37,9 @@ use crate::util::{Error, Result};
 
 /// Frame marker, first 4 bytes of every frame.
 pub const FRAME_MAGIC: u32 = 0xFED5_F4A3;
-/// Codec version carried by every frame; bump on any layout change.
-pub const WIRE_VERSION: u16 = 1;
+/// Codec version carried by every frame; bump on any layout change
+/// (v2: added the `DataMeta` partition-attestation message).
+pub const WIRE_VERSION: u16 = 2;
 /// Fixed frame-header size in bytes (magic + version + kind + label + len).
 pub const FRAME_HEADER_LEN: usize = 24;
 /// Upper bound on a single frame's payload — anything larger is a
@@ -376,6 +377,16 @@ pub enum ClusterMsg {
     /// Tagged with the sender so the owner folds in user order — FP
     /// addition is not associative, and arrival order is thread timing.
     Pred { user: usize, pred: Vec<f64> },
+    /// User → TA: partition attestation of a manifest-backed run — the
+    /// shape and checksum of the file this user actually opened. The TA
+    /// verifies every attestation against the federation manifest before
+    /// releasing the Step-1 mask seeds.
+    DataMeta {
+        user: usize,
+        rows: u64,
+        cols: u64,
+        checksum: u64,
+    },
     /// Control: a party failed; peers must error out instead of hanging.
     Abort { from: PartyId, reason: String },
     /// Control: clean connection teardown — the sender is done sending
@@ -401,6 +412,7 @@ impl ClusterMsg {
             ClusterMsg::Pred { .. } => 11,
             ClusterMsg::Abort { .. } => 12,
             ClusterMsg::Shutdown { .. } => 13,
+            ClusterMsg::DataMeta { .. } => 14,
         }
     }
 
@@ -421,6 +433,7 @@ impl ClusterMsg {
             ClusterMsg::Pred { .. } => "Pred",
             ClusterMsg::Abort { .. } => "Abort",
             ClusterMsg::Shutdown { .. } => "Shutdown",
+            ClusterMsg::DataMeta { .. } => "DataMeta",
         }
     }
 
@@ -446,6 +459,7 @@ impl ClusterMsg {
             ClusterMsg::Pred { pred, .. } => (pred.len() * 8) as u64,
             ClusterMsg::Abort { reason, .. } => 16 + reason.len() as u64,
             ClusterMsg::Shutdown { .. } => 8,
+            ClusterMsg::DataMeta { .. } => 32,
         }
     }
 
@@ -489,6 +503,17 @@ impl ClusterMsg {
                 reason.encode(out);
             }
             ClusterMsg::Shutdown { from } => (*from as u64).encode(out),
+            ClusterMsg::DataMeta {
+                user,
+                rows,
+                cols,
+                checksum,
+            } => {
+                (*user as u64).encode(out);
+                rows.encode(out);
+                cols.encode(out);
+                checksum.encode(out);
+            }
         }
     }
 
@@ -535,6 +560,12 @@ impl ClusterMsg {
                 reason: String::decode(&mut r)?,
             },
             13 => ClusterMsg::Shutdown { from: r.len()? },
+            14 => ClusterMsg::DataMeta {
+                user: r.len()?,
+                rows: r.u64()?,
+                cols: r.u64()?,
+                checksum: r.u64()?,
+            },
             other => return Err(codec(format!("unknown message kind {other}"))),
         };
         r.finish()?;
@@ -674,6 +705,30 @@ mod tests {
         assert_eq!(label, 9);
         assert_eq!(bytes, buf.len() as u64);
         assert!(matches!(back, ClusterMsg::Pred { user: 3, .. }));
+    }
+
+    #[test]
+    fn frame_roundtrip_data_meta() {
+        let msg = ClusterMsg::DataMeta {
+            user: 2,
+            rows: 48,
+            cols: 9,
+            checksum: 0xdead_beef_cafe_f00d,
+        };
+        let buf = encode_frame(&msg, 4);
+        let (back, label) = decode_frame(&buf).unwrap();
+        assert_eq!(label, 4);
+        let ClusterMsg::DataMeta {
+            user,
+            rows,
+            cols,
+            checksum,
+        } = back
+        else {
+            panic!("wrong kind")
+        };
+        assert_eq!((user, rows, cols, checksum), (2, 48, 9, 0xdead_beef_cafe_f00d));
+        assert_eq!(msg.sim_wire_bytes(), 32);
     }
 
     #[test]

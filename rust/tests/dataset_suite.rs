@@ -1,0 +1,471 @@
+//! The dataset-subsystem acceptance suite.
+//!
+//! Pins the PR-5 bar on the thread fabric (the multi-process variant
+//! lives in `distributed_smoke.rs`):
+//!
+//! * property round-trips: write → chunked-read across every on-disk
+//!   format, ragged chunk sizes, empty chunks/partition edges, and
+//!   ±0/subnormal/NaN bit-exactness for the dense binary format (the
+//!   same discipline `wire_codec.rs` pins for the wire);
+//! * manifest validation negative paths: checksum mismatch, shape
+//!   mismatch, missing partition file — locally at `open_partition` and
+//!   remotely through the TA's attestation round;
+//! * disk-backed federations (`UserData::Stream` over a `fedsvd
+//!   split`-style manifest) matching both the in-memory cluster runtime
+//!   and the sequential oracle to ≤ 1e-9 for SVD, PCA and LR, with each
+//!   user's peak resident partition memory provably a chunk, not the
+//!   partition.
+
+use std::path::{Path, PathBuf};
+
+use fedsvd::cluster::{
+    run_app_cluster, run_app_cluster_streamed, ClusterApp, ClusterConfig, UserData,
+};
+use fedsvd::data::{
+    split_matrix, write_dense_bin, Manifest, MatrixFormat, RowChunkReader, SplitOptions,
+    MANIFEST_FILE,
+};
+use fedsvd::linalg::{CpuBackend, Mat};
+use fedsvd::protocol::{run_fedsvd_with_backend, FedSvdConfig};
+use fedsvd::rng::Xoshiro256;
+use fedsvd::util::prop::PropRunner;
+use fedsvd::util::{bits_equal, max_abs_diff};
+
+const TOL: f64 = 1e-9;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "fedsvd_dataset_suite_{tag}_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn cfg() -> FedSvdConfig {
+    FedSvdConfig {
+        block_size: 4,
+        secagg_batch_rows: 8,
+        ..Default::default()
+    }
+}
+
+fn ccfg(shards: usize) -> ClusterConfig {
+    ClusterConfig {
+        shards,
+        mem_budget: 1 << 20,
+        spill_root: None,
+    }
+}
+
+/// Split `x` raggedly, reopen every partition through the verified
+/// manifest path, and return (manifest, readers).
+fn split_and_open(
+    x: &Mat,
+    dir: &Path,
+    widths: Vec<usize>,
+    format: MatrixFormat,
+    chunk_rows: usize,
+    labels: Option<(usize, Vec<f64>)>,
+) -> (Manifest, Vec<RowChunkReader>) {
+    let opts = SplitOptions {
+        widths,
+        format,
+        chunk_rows,
+        labels,
+        ..Default::default()
+    };
+    let manifest = split_matrix(x, dir, &opts).unwrap();
+    let readers: Vec<RowChunkReader> = (0..manifest.users())
+        .map(|i| manifest.open_partition(dir, i).unwrap())
+        .collect();
+    (manifest, readers)
+}
+
+fn stream_sources<'a>(
+    manifest: &Manifest,
+    readers: &'a [RowChunkReader],
+    chunk_rows: usize,
+) -> Vec<UserData<'a>> {
+    let atts = manifest.attests();
+    readers
+        .iter()
+        .enumerate()
+        .map(|(i, r)| UserData::Stream {
+            reader: r,
+            chunk_rows,
+            attest: Some(atts[i]),
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// format round-trips
+// ---------------------------------------------------------------------------
+
+#[test]
+fn property_roundtrip_every_format_ragged_chunks() {
+    PropRunner::new(0xda7a, 6).run("format roundtrip", |rng| {
+        let m = 3 + (rng.next_below(14) as usize);
+        let n = 1 + (rng.next_below(7) as usize);
+        let a = Mat::gaussian(m, n, rng);
+        for format in [
+            MatrixFormat::DenseBin,
+            MatrixFormat::Csv,
+            MatrixFormat::MatrixMarket,
+        ] {
+            let dir = tmp_dir(&format!("prop_{}", format.name()));
+            let path = dir.join(format!("a.{}", format.extension()));
+            match format {
+                MatrixFormat::DenseBin => write_dense_bin(&path, &a, 4).unwrap(),
+                MatrixFormat::Csv => fedsvd::data::write_csv_matrix(&path, &a).unwrap(),
+                MatrixFormat::MatrixMarket => {
+                    fedsvd::data::write_matrix_market(&path, &a).unwrap()
+                }
+            }
+            let rd = RowChunkReader::open(&path).unwrap();
+            if (rd.rows(), rd.cols()) != (m, n) {
+                return Err(format!("{}: shape drifted", format.name()));
+            }
+            // ragged chunk width, including an empty chunk at the end
+            let width = 1 + (rng.next_below(5) as usize);
+            let mut rebuilt = Mat::zeros(m, n);
+            let mut r0 = 0usize;
+            while r0 < m {
+                let r1 = (r0 + width).min(m);
+                rebuilt.set_slice(r0, 0, &rd.read_rows(r0, r1).unwrap());
+                r0 = r1;
+            }
+            let empty = rd.read_rows(m, m).unwrap();
+            if empty.shape() != (0, n) {
+                return Err(format!("{}: empty chunk misshaped", format.name()));
+            }
+            if !bits_equal(a.data(), rebuilt.data()) {
+                return Err(format!(
+                    "{}: chunked read (width {width}) drifted by {:.3e}",
+                    format.name(),
+                    max_abs_diff(a.data(), rebuilt.data())
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dense_bin_specials_roundtrip_bit_exactly() {
+    // the same f64 edge cases the wire codec pins: ±0, subnormals, NaN,
+    // huge magnitudes — the on-disk layer must never be where the
+    // losslessness guarantee leaks
+    let specials = Mat::from_vec(
+        3,
+        2,
+        vec![
+            0.0,
+            -0.0,
+            f64::MIN_POSITIVE,
+            f64::MIN_POSITIVE / 4096.0,
+            f64::NAN,
+            -1.797e308,
+        ],
+    )
+    .unwrap();
+    let dir = tmp_dir("specials");
+    let p = dir.join("s.fsb");
+    write_dense_bin(&p, &specials, 2).unwrap();
+    let rd = RowChunkReader::open(&p).unwrap();
+    for (r0, r1) in [(0usize, 3usize), (0, 1), (1, 3), (2, 2)] {
+        let back = rd.read_rows(r0, r1).unwrap();
+        assert!(
+            bits_equal(back.data(), specials.slice(r0, r1, 0, 2).data()),
+            "rows {r0}..{r1} not bit-exact"
+        );
+    }
+    // a 0-column partition file is legal in the dense format
+    let p0 = dir.join("zero.fsb");
+    write_dense_bin(&p0, &Mat::zeros(4, 0), 2).unwrap();
+    let rd0 = RowChunkReader::open(&p0).unwrap();
+    assert_eq!((rd0.rows(), rd0.cols()), (4, 0));
+    assert_eq!(rd0.read_rows(1, 3).unwrap().shape(), (2, 0));
+}
+
+// ---------------------------------------------------------------------------
+// manifest negative paths
+// ---------------------------------------------------------------------------
+
+#[test]
+fn manifest_rejects_corrupt_wrong_shape_and_missing_partitions() {
+    let mut rng = Xoshiro256::seed_from_u64(21);
+    let x = Mat::gaussian(10, 6, &mut rng);
+    let dir = tmp_dir("negative");
+    let (manifest, readers) =
+        split_and_open(&x, &dir, vec![4, 2], MatrixFormat::DenseBin, 4, None);
+    drop(readers);
+    let reload = Manifest::load(&dir.join(MANIFEST_FILE)).unwrap();
+    assert_eq!(reload.widths(), vec![4, 2]);
+
+    // corrupt a payload byte → checksum mismatch
+    let p0 = dir.join(&manifest.parts[0].path);
+    let mut bytes = std::fs::read(&p0).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x01;
+    std::fs::write(&p0, &bytes).unwrap();
+    let err = reload.open_partition(&dir, 0).unwrap_err().to_string();
+    assert!(err.contains("checksum mismatch"), "got: {err}");
+
+    // wrong-shaped replacement with a fixed-up checksum → shape check
+    let p1 = dir.join(&manifest.parts[1].path);
+    write_dense_bin(&p1, &Mat::zeros(9, 2), 4).unwrap();
+    let mut patched = reload.clone();
+    patched.parts[1].checksum = fedsvd::data::file_checksum(&p1).unwrap();
+    let err = patched.open_partition(&dir, 1).unwrap_err().to_string();
+    assert!(err.contains("manifest says 10"), "got: {err}");
+
+    // missing file
+    std::fs::remove_file(&p1).unwrap();
+    let err = patched.open_partition(&dir, 1).unwrap_err().to_string();
+    assert!(err.contains("missing"), "got: {err}");
+}
+
+#[test]
+fn ta_attestation_rejects_a_silo_serving_different_data() {
+    let mut rng = Xoshiro256::seed_from_u64(31);
+    let x = Mat::gaussian(12, 6, &mut rng);
+    let dir = tmp_dir("attest");
+    let (manifest, readers) =
+        split_and_open(&x, &dir, vec![3, 3], MatrixFormat::DenseBin, 4, None);
+    let data = stream_sources(&manifest, &readers, 4);
+    // the TA's manifest disagrees with what user 1 actually opened
+    let mut expected = manifest.attests();
+    expected[1].checksum ^= 0xff;
+    let err = run_app_cluster_streamed(
+        &data,
+        Some(&expected),
+        &cfg(),
+        &ccfg(2),
+        CpuBackend::global(),
+        &ClusterApp::None,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("checksum"), "got: {err}");
+
+    // shape drift is caught the same way
+    let mut expected = manifest.attests();
+    expected[0].cols += 1;
+    let err = run_app_cluster_streamed(
+        &data,
+        Some(&expected),
+        &cfg(),
+        &ccfg(2),
+        CpuBackend::global(),
+        &ClusterApp::None,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("manifest says"), "got: {err}");
+}
+
+// ---------------------------------------------------------------------------
+// disk-backed federations vs the oracle
+// ---------------------------------------------------------------------------
+
+/// Worst per-row deviation after sign alignment (singular vectors are
+/// sign-ambiguous; rows of `Vᵢᵀ` / projection blocks are the vectors).
+fn row_aligned_diff(a: &Mat, b: &Mat) -> f64 {
+    assert_eq!(a.shape(), b.shape());
+    let mut worst = 0.0f64;
+    for r in 0..a.rows() {
+        let dot: f64 = a.row(r).iter().zip(b.row(r)).map(|(x, y)| x * y).sum();
+        let sign = if dot >= 0.0 { 1.0 } else { -1.0 };
+        let d = a
+            .row(r)
+            .iter()
+            .zip(b.row(r))
+            .map(|(x, y)| (x - sign * y).abs())
+            .fold(0.0f64, f64::max);
+        worst = worst.max(d);
+    }
+    worst
+}
+
+/// Ragged user parts matching `widths` (the oracle-side view of a split).
+fn parts_of(x: &Mat, widths: &[usize]) -> Vec<Mat> {
+    let mut out = Vec::new();
+    let mut c0 = 0usize;
+    for w in widths {
+        out.push(x.slice(0, x.rows(), c0, c0 + w));
+        c0 += w;
+    }
+    out
+}
+
+#[test]
+fn streamed_svd_matches_in_memory_cluster_and_oracle_every_format() {
+    let mut rng = Xoshiro256::seed_from_u64(41);
+    // m ragged against the P block (4) and the shard size; widths ragged
+    let (m, widths) = (23usize, vec![5usize, 4]);
+    let x = Mat::gaussian(m, 9, &mut rng);
+    let parts = parts_of(&x, &widths);
+    let oracle = run_fedsvd_with_backend(&parts, &cfg(), CpuBackend::global()).unwrap();
+    let (mem_out, _, _) = run_app_cluster(
+        &parts,
+        &cfg(),
+        &ccfg(6),
+        CpuBackend::global(),
+        &ClusterApp::None,
+    )
+    .unwrap();
+    let scale = 1.0 + oracle.s[0].abs();
+
+    for format in [
+        MatrixFormat::DenseBin,
+        MatrixFormat::Csv,
+        MatrixFormat::MatrixMarket,
+    ] {
+        let dir = tmp_dir(&format!("svd_{}", format.name()));
+        let (manifest, readers) =
+            split_and_open(&x, &dir, widths.clone(), format, 4, None);
+        let data = stream_sources(&manifest, &readers, 4);
+        let expected = manifest.attests();
+        let (out, stats, _) = run_app_cluster_streamed(
+            &data,
+            Some(&expected),
+            &cfg(),
+            &ccfg(6),
+            CpuBackend::global(),
+            &ClusterApp::None,
+        )
+        .unwrap();
+        // streamed ingest reproduces the in-memory cluster to FP noise…
+        assert!(
+            max_abs_diff(&out.s, &mem_out.s) <= 1e-12 * scale,
+            "{}: streamed Σ deviates from the in-memory cluster by {:.3e}",
+            format.name(),
+            max_abs_diff(&out.s, &mem_out.s)
+        );
+        // …and the sequential oracle to the acceptance tolerance
+        assert!(
+            max_abs_diff(&out.s, &oracle.s) <= TOL * scale,
+            "{}: streamed Σ deviates from the oracle by {:.3e}",
+            format.name(),
+            max_abs_diff(&out.s, &oracle.s)
+        );
+        for (vp, ov) in out.v_parts.iter().zip(&oracle.v_parts) {
+            let d = row_aligned_diff(vp, ov);
+            assert!(d <= TOL * scale, "{}: Vᵢᵀ deviates by {d:.3e}", format.name());
+        }
+        // the partition was never fully resident: the peak is bounded by
+        // a P-block-aligned shard cover, strictly below the partition
+        let b = 4usize;
+        let shard_rows = m.div_ceil(6);
+        let max_w = *widths.iter().max().unwrap();
+        let bound = ((shard_rows + 2 * b) * max_w * 8) as u64;
+        let part_bytes = (m * max_w * 8) as u64;
+        assert!(
+            stats.user_peak_part_bytes > 0,
+            "{}: streamed run reported no partition residency",
+            format.name()
+        );
+        assert!(
+            stats.user_peak_part_bytes <= bound && stats.user_peak_part_bytes < part_bytes,
+            "{}: user peak {} exceeds chunk bound {bound} (partition {part_bytes})",
+            format.name(),
+            stats.user_peak_part_bytes
+        );
+    }
+}
+
+#[test]
+fn streamed_lr_and_pca_match_the_sequential_oracle() {
+    use fedsvd::apps::lr::run_federated_lr;
+    use fedsvd::apps::pca::run_federated_pca;
+    use fedsvd::data::regression_task;
+
+    // ---- LR from a CSV split with a manifest label vector -------------
+    let (m, n) = (26usize, 7usize);
+    let (x, _w_true, y) = regression_task(m, n, 0.1, 51);
+    let widths = vec![3usize, 4];
+    let parts = parts_of(&x, &widths);
+    let lr_oracle = run_federated_lr(&parts, &y, 1, &cfg(), CpuBackend::global()).unwrap();
+
+    let dir = tmp_dir("lr_csv");
+    let (manifest, readers) = split_and_open(
+        &x,
+        &dir,
+        widths.clone(),
+        MatrixFormat::Csv,
+        5,
+        Some((1, y.clone())),
+    );
+    let y_back = manifest.load_labels(&dir).unwrap();
+    assert!(bits_equal(&y, &y_back), "labels drifted through the csv");
+    let data = stream_sources(&manifest, &readers, 5);
+    let expected = manifest.attests();
+    let (_, stats, app_out) = run_app_cluster_streamed(
+        &data,
+        Some(&expected),
+        &fedsvd::apps::lr::lr_config(&cfg()),
+        &ccfg(5),
+        CpuBackend::global(),
+        &ClusterApp::Lr {
+            y: &y_back,
+            label_owner: 1,
+        },
+    )
+    .unwrap();
+    for (wp, ow) in app_out.w_parts.iter().zip(&lr_oracle.w_parts) {
+        assert!(
+            max_abs_diff(wp, ow) <= TOL,
+            "lr: wᵢ deviates by {:.3e}",
+            max_abs_diff(wp, ow)
+        );
+    }
+    let mse = app_out.train_mse.expect("owner mse");
+    assert!(
+        (mse - lr_oracle.train_mse).abs() <= TOL * (1.0 + lr_oracle.train_mse),
+        "lr: mse {mse} vs {}",
+        lr_oracle.train_mse
+    );
+    assert!(stats.user_peak_part_bytes > 0);
+
+    // ---- PCA from a dense-binary split --------------------------------
+    // spectral-decay data keeps the top-r subspace well separated, so
+    // the cross-solver comparison stays tight (same recipe as
+    // apps_cluster_equivalence.rs)
+    let rank = 3usize;
+    let (mp, np) = (30usize, 8usize);
+    let mut rng = Xoshiro256::seed_from_u64(61);
+    let mut a = Mat::gaussian(mp, rank + 3, &mut rng);
+    for j in 0..rank + 3 {
+        let s = 4.0 / (1.0 + j as f64).powf(1.3);
+        for i in 0..mp {
+            a[(i, j)] *= s;
+        }
+    }
+    let xp = a.mul(&Mat::gaussian(rank + 3, np, &mut rng)).unwrap();
+    let pwidths = vec![5usize, 3];
+    let pparts = parts_of(&xp, &pwidths);
+    let pca_oracle = run_federated_pca(&pparts, rank, &cfg(), CpuBackend::global()).unwrap();
+    let dir = tmp_dir("pca_bin");
+    let (manifest, readers) =
+        split_and_open(&xp, &dir, pwidths, MatrixFormat::DenseBin, 5, None);
+    let data = stream_sources(&manifest, &readers, 5);
+    let expected = manifest.attests();
+    let (_, _, app_out) = run_app_cluster_streamed(
+        &data,
+        Some(&expected),
+        &fedsvd::apps::pca::pca_config_dims(mp, np, rank, &cfg()).unwrap(),
+        &ccfg(5),
+        CpuBackend::global(),
+        &ClusterApp::Pca,
+    )
+    .unwrap();
+    let scale = 1.0 + pca_oracle.s_r[0].abs();
+    for (pp, op) in app_out.projections.iter().zip(&pca_oracle.projections) {
+        // projections are sign-ambiguous per component row
+        let d = row_aligned_diff(pp, op);
+        assert!(d <= TOL * scale, "pca: projections deviate by {d:.3e}");
+    }
+}
