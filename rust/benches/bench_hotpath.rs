@@ -8,9 +8,11 @@
 //! the deltas.
 
 use fedsvd::bench::{bench, section};
+use fedsvd::linalg::kernel::available_isas;
 use fedsvd::linalg::matmul::matmul_naive;
-use fedsvd::linalg::{matmul, svd, CpuBackend, Mat};
+use fedsvd::linalg::{gemm_with_isa, matmul, svd, CpuBackend, Isa, Mat};
 use fedsvd::mask::{block_orthogonal, mask_matrix, mask_matrix_with};
+use fedsvd::pool::ThreadPool;
 use fedsvd::rng::Xoshiro256;
 use fedsvd::secagg::SecAggGroup;
 
@@ -33,6 +35,74 @@ fn main() {
         flops / s_fast.median_s / 1e9,
         s_naive.median_s / s_fast.median_s
     );
+
+    // ---- GEMM kernel comparison: isa × threads × shape class ----------
+    // One JSON row per cell so kernel work can be judged across PRs:
+    // `speedup_vs_scalar_1t` is the SIMD win (same shape, scalar 1-thread
+    // baseline), `speedup_vs_1t` the thread scaling within an ISA. The
+    // wide shape (m ≪ n) is the LSA orientation the column-direction
+    // tile grid exists for. Outputs are asserted bit-identical across
+    // every (isa, threads) cell — determinism is part of the benchmark.
+    section(
+        "hotpath/L3",
+        "GEMM kernel comparison: isa × threads × shape — JSON rows",
+    );
+    {
+        let shapes: [(&str, usize, usize, usize); 3] = [
+            ("square", 512, 512, 512),
+            ("tall", 4096, 256, 64),
+            ("wide", 64, 256, 8192),
+        ];
+        for (class, m, k, n) in shapes {
+            let a = Mat::gaussian(m, k, &mut rng);
+            let b = Mat::gaussian(k, n, &mut rng);
+            let mut scalar_1t = 0.0f64;
+            let mut reference: Option<Mat> = None;
+            // available_isas() lists scalar last; reverse so the scalar
+            // 1-thread baseline is measured before the SIMD rows need it
+            let mut isas = available_isas();
+            isas.reverse();
+            for isa in isas {
+                let mut isa_1t = 0.0f64;
+                for threads in [1usize, 2, 4] {
+                    let pool = ThreadPool::new(threads);
+                    let popt = if threads > 1 { Some(&pool) } else { None };
+                    let mut c = Mat::zeros(m, n);
+                    let s = bench(
+                        &format!("gemm {class} {} {threads}t", isa.name()),
+                        1,
+                        3,
+                        || gemm_with_isa(isa, 1.0, &a, false, &b, false, 0.0, &mut c, popt).unwrap(),
+                    );
+                    println!("{}", s.row());
+                    match reference.as_ref() {
+                        Some(r) => assert!(
+                            fedsvd::util::bits_equal(r.data(), c.data()),
+                            "{class}: isa={} threads={threads} changed output bits!",
+                            isa.name()
+                        ),
+                        None => reference = Some(c),
+                    }
+                    if isa == Isa::Scalar && threads == 1 {
+                        scalar_1t = s.median_s;
+                    }
+                    if threads == 1 {
+                        isa_1t = s.median_s;
+                    }
+                    println!(
+                        "{{\"bench\":\"gemm_kernel\",\"shape\":\"{class}\",\"m\":{m},\"k\":{k},\
+                         \"n\":{n},\"isa\":\"{}\",\"threads\":{threads},\"median_s\":{:.6},\
+                         \"min_s\":{:.6},\"speedup_vs_1t\":{:.3},\"speedup_vs_scalar_1t\":{:.3}}}",
+                        isa.name(),
+                        s.median_s,
+                        s.min_s,
+                        isa_1t / s.median_s,
+                        scalar_1t / s.median_s
+                    );
+                }
+            }
+        }
+    }
 
     section("hotpath/L3", "block-masking product P·X·Q (m=512, n=512, b=64)");
     let p = block_orthogonal(512, 64, 1).unwrap();

@@ -382,43 +382,41 @@ impl Session {
         let t0 = std::time::Instant::now();
         // the same task→protocol-flag mapping as the apps layer, so a
         // distributed federation reproduces the Sequential/Cluster runs.
-        // On the manifest path, shapes come from the manifest, the LR
-        // label owner is the manifest's, and only the owner loads y.
+        // Shapes come from the manifest when one is bound (a process
+        // there holds only its own partition; the LR label owner is the
+        // manifest's, and only the owner loads y), from the demo parts
+        // otherwise — past that, both paths share the `_dims` helpers.
+        let (m, n) = match data {
+            Some(spec) => (spec.manifest.rows, spec.manifest.total_cols()),
+            None => (
+                parts.first().map_or(0, |p| p.rows()),
+                parts.iter().map(|p| p.cols()).sum(),
+            ),
+        };
         let y_owned: Vec<f64>;
         let app_cfg: FedSvdConfig;
         let app: ClusterApp<'_>;
-        match data {
-            None => match task {
-                DistTask::Svd => {
-                    app_cfg = self.cfg.clone();
-                    app = ClusterApp::None;
-                }
-                DistTask::Pca { rank } => {
-                    app_cfg = crate::apps::pca::pca_config(parts, rank, &self.cfg)?;
-                    app = ClusterApp::Pca;
-                }
-                DistTask::Lr { y, label_owner } => {
-                    crate::apps::lr::validate_lr(parts, y, label_owner)?;
-                    app_cfg = crate::apps::lr::lr_config(&self.cfg);
-                    app = ClusterApp::Lr { y, label_owner };
-                }
-                DistTask::Lsa { rank } => {
-                    app_cfg = crate::apps::lsa::lsa_config(parts, rank, &self.cfg)?;
-                    app = ClusterApp::Lsa;
-                }
-            },
-            Some(spec) => {
-                let (m, n) = (spec.manifest.rows, spec.manifest.total_cols());
-                match task {
-                    DistTask::Svd => {
-                        app_cfg = self.cfg.clone();
-                        app = ClusterApp::None;
+        match task {
+            DistTask::Svd => {
+                app_cfg = self.cfg.clone();
+                app = ClusterApp::None;
+            }
+            DistTask::Pca { rank } => {
+                app_cfg = crate::apps::pca::pca_config_dims(m, n, rank, &self.cfg)?;
+                app = ClusterApp::Pca;
+            }
+            DistTask::Lsa { rank } => {
+                app_cfg = crate::apps::lsa::lsa_config_dims(m, n, rank, &self.cfg)?;
+                app = ClusterApp::Lsa;
+            }
+            DistTask::Lr { y, label_owner } => {
+                app_cfg = crate::apps::lr::lr_config(&self.cfg);
+                app = match data {
+                    None => {
+                        crate::apps::lr::validate_lr(parts, y, label_owner)?;
+                        ClusterApp::Lr { y, label_owner }
                     }
-                    DistTask::Pca { rank } => {
-                        app_cfg = crate::apps::pca::pca_config_dims(m, n, rank, &self.cfg)?;
-                        app = ClusterApp::Pca;
-                    }
-                    DistTask::Lr { .. } => {
+                    Some(spec) => {
                         // ownership comes from the manifest (any y/owner in
                         // the task is the demo path's and is ignored here)
                         let owner = spec
@@ -438,17 +436,12 @@ impl Session {
                         } else {
                             Vec::new()
                         };
-                        app_cfg = crate::apps::lr::lr_config(&self.cfg);
-                        app = ClusterApp::Lr {
+                        ClusterApp::Lr {
                             y: &y_owned,
                             label_owner: owner,
-                        };
+                        }
                     }
-                    DistTask::Lsa { rank } => {
-                        app_cfg = crate::apps::lsa::lsa_config_dims(m, n, rank, &self.cfg)?;
-                        app = ClusterApp::Lsa;
-                    }
-                }
+                };
             }
         }
         let mut dcfg = DistConfig::new(*role, listen.clone(), peers.clone());

@@ -321,7 +321,11 @@ struct CsvReader {
 }
 
 impl CsvReader {
-    fn open(path: &Path) -> Result<Self> {
+    /// `hash`, when given, accumulates FNV-1a over every byte of the
+    /// file — the index pass already reads each byte exactly once, so
+    /// the manifest checksum comes for free instead of from a second
+    /// full read ([`RowChunkReader::open_checksummed`]).
+    fn open(path: &Path, mut hash: Option<&mut Fnv1a64>) -> Result<Self> {
         let file = File::open(path)?;
         let mut rd = BufReader::new(&file);
         let mut offsets: Vec<u64> = Vec::new();
@@ -336,6 +340,9 @@ impl CsvReader {
             let n = rd.read_until(b'\n', &mut line)?;
             if n == 0 {
                 break;
+            }
+            if let Some(h) = hash.as_deref_mut() {
+                h.update(&line);
             }
             lineno += 1;
             let text = std::str::from_utf8(&line)
@@ -458,7 +465,7 @@ pub fn write_csv_matrix(path: &Path, mat: &Mat) -> Result<()> {
 /// Tolerates CRLF and trailing blank lines; parse errors report row and
 /// column numbers, ragged rows are rejected with both widths named.
 pub fn load_csv_matrix(path: &Path) -> Result<Mat> {
-    let rd = CsvReader::open(path)?;
+    let rd = CsvReader::open(path, None)?;
     rd.read_rows(0, rd.rows())
 }
 
@@ -477,11 +484,17 @@ struct MtxReader {
 }
 
 impl MtxReader {
-    fn open(path: &Path) -> Result<Self> {
+    /// `hash`, when given, accumulates FNV-1a over every byte of the
+    /// file during the one parse pass (same contract as
+    /// [`CsvReader::open`]).
+    fn open(path: &Path, mut hash: Option<&mut Fnv1a64>) -> Result<Self> {
         let file = File::open(path)?;
         let mut rd = BufReader::new(file);
         let mut banner = String::new();
         rd.read_line(&mut banner)?;
+        if let Some(h) = hash.as_deref_mut() {
+            h.update(banner.as_bytes());
+        }
         let lower = banner.to_ascii_lowercase();
         if !lower.starts_with("%%matrixmarket") {
             return Err(fmt_err(path, "missing %%MatrixMarket banner"));
@@ -507,6 +520,9 @@ impl MtxReader {
             line.clear();
             if rd.read_line(&mut line)? == 0 {
                 return Err(fmt_err(path, "missing size line"));
+            }
+            if let Some(h) = hash.as_deref_mut() {
+                h.update(line.as_bytes());
             }
             lineno += 1;
             let t = line.trim();
@@ -535,6 +551,9 @@ impl MtxReader {
             line.clear();
             if rd.read_line(&mut line)? == 0 {
                 break;
+            }
+            if let Some(h) = hash.as_deref_mut() {
+                h.update(line.as_bytes());
             }
             lineno += 1;
             let t = line.trim();
@@ -673,14 +692,50 @@ impl RowChunkReader {
     pub fn open_as(path: &Path, format: MatrixFormat) -> Result<Self> {
         let imp = match format {
             MatrixFormat::DenseBin => ReaderImpl::Dense(DenseBinReader::open(path)?),
-            MatrixFormat::Csv => ReaderImpl::Csv(CsvReader::open(path)?),
-            MatrixFormat::MatrixMarket => ReaderImpl::Mtx(MtxReader::open(path)?),
+            MatrixFormat::Csv => ReaderImpl::Csv(CsvReader::open(path, None)?),
+            MatrixFormat::MatrixMarket => ReaderImpl::Mtx(MtxReader::open(path, None)?),
         };
         Ok(Self {
             imp,
             format,
             path: path.to_path_buf(),
         })
+    }
+
+    /// [`RowChunkReader::open_as`], additionally returning the FNV-1a
+    /// checksum of the file's bytes (identical to
+    /// [`crate::data::manifest::file_checksum`] of `path`).
+    ///
+    /// The text formats fold hashing into the open pass that already
+    /// reads every byte — CSV's row-offset index pass, MatrixMarket's
+    /// triplet parse — so attested opens stream the file **once**.
+    /// Dense binary opens from its 32-byte header alone and therefore
+    /// pays one streamed hash pass over the payload it never parsed.
+    pub fn open_checksummed(path: &Path, format: MatrixFormat) -> Result<(Self, u64)> {
+        let (imp, sum) = match format {
+            MatrixFormat::DenseBin => {
+                let sum = super::manifest::file_checksum(path)?;
+                (ReaderImpl::Dense(DenseBinReader::open(path)?), sum)
+            }
+            MatrixFormat::Csv => {
+                let mut hash = Fnv1a64::new();
+                let rd = CsvReader::open(path, Some(&mut hash))?;
+                (ReaderImpl::Csv(rd), hash.digest())
+            }
+            MatrixFormat::MatrixMarket => {
+                let mut hash = Fnv1a64::new();
+                let rd = MtxReader::open(path, Some(&mut hash))?;
+                (ReaderImpl::Mtx(rd), hash.digest())
+            }
+        };
+        Ok((
+            Self {
+                imp,
+                format,
+                path: path.to_path_buf(),
+            },
+            sum,
+        ))
     }
 
     pub fn rows(&self) -> usize {
@@ -908,6 +963,36 @@ mod tests {
         )
         .unwrap();
         assert!(RowChunkReader::open(&dup).is_err());
+    }
+
+    #[test]
+    fn open_checksummed_matches_streamed_file_checksum() {
+        use crate::data::manifest::file_checksum;
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let a = Mat::gaussian(6, 3, &mut rng);
+
+        let pb = tmp("sum.fsb");
+        write_dense_bin(&pb, &a, 2).unwrap();
+        let pc = tmp("sum.csv");
+        write_csv_matrix(&pc, &a).unwrap();
+        let pm = tmp("sum.mtx");
+        write_matrix_market(&pm, &a).unwrap();
+        // CRLF + trailing blank lines: every byte must be hashed, not
+        // just the indexed data rows
+        let pc2 = tmp("sum_crlf.csv");
+        std::fs::write(&pc2, "1.0, 2.0\r\n3.5,-4\r\n\r\n\n").unwrap();
+
+        for (p, f) in [
+            (&pb, MatrixFormat::DenseBin),
+            (&pc, MatrixFormat::Csv),
+            (&pm, MatrixFormat::MatrixMarket),
+            (&pc2, MatrixFormat::Csv),
+        ] {
+            let (rd, sum) = RowChunkReader::open_checksummed(p, f).unwrap();
+            assert_eq!(sum, file_checksum(p).unwrap(), "{}", f.name());
+            assert_eq!(rd.format(), f);
+            assert!(rd.rows() > 0 && rd.cols() > 0);
+        }
     }
 
     #[test]

@@ -342,7 +342,9 @@ impl Manifest {
                 path.display()
             )));
         }
-        let sum = file_checksum(&path)?;
+        // one pass: text readers hash the bytes during their own
+        // index/parse pass, so the partition is not streamed twice
+        let (reader, sum) = RowChunkReader::open_checksummed(&path, meta.format)?;
         if sum != meta.checksum {
             return Err(mf_err(format!(
                 "part {i}: checksum mismatch for {} (file {sum:016x}, manifest {:016x}) — \
@@ -351,7 +353,6 @@ impl Manifest {
                 meta.checksum
             )));
         }
-        let reader = RowChunkReader::open_as(&path, meta.format)?;
         if reader.rows() != self.rows || reader.cols() != meta.cols {
             return Err(mf_err(format!(
                 "part {i}: {} is {}×{}, manifest says {}×{}",
@@ -383,7 +384,7 @@ impl Manifest {
                 path.display()
             )));
         }
-        let sum = file_checksum(&path)?;
+        let (reader, sum) = RowChunkReader::open_checksummed(&path, MatrixFormat::Csv)?;
         if sum != meta.checksum {
             return Err(mf_err(format!(
                 "label checksum mismatch for {} (file {sum:016x}, manifest {:016x})",
@@ -391,7 +392,6 @@ impl Manifest {
                 meta.checksum
             )));
         }
-        let reader = RowChunkReader::open_as(&path, MatrixFormat::Csv)?;
         if reader.cols() != 1 || reader.rows() != meta.len {
             return Err(mf_err(format!(
                 "label file {} is {}×{}, expected {}×1",

@@ -20,13 +20,20 @@
 //! fused block-diagonal masking (`mask_apply_into`) and backend-mediated
 //! task parallelism (`run_parallel`). Two implementations exist:
 //!
-//! * [`linalg::CpuBackend`] — always available: the register-blocked
-//!   native GEMM parallelized over disjoint row panels by the std-only
-//!   [`pool::ThreadPool`]. Lane count comes from `FEDSVD_THREADS`
-//!   (default: all cores) and results are **bit-identical at any thread
-//!   count** — partition-invariant accumulation keeps the paper's
-//!   lossless guarantees (Tab. 1) intact while scaling the Step-2 hot
-//!   loop across cores.
+//! * [`linalg::CpuBackend`] — always available: a cache-blocked,
+//!   *packed* GEMM ([`linalg::kernel`], BLIS-style MC×KC×NC blocking
+//!   with a 4×8 register micro-tile) whose inner kernel is explicit
+//!   SIMD FMA selected by **runtime ISA dispatch** — AVX2+FMA on
+//!   x86_64, NEON on aarch64, a scalar `mul_add` fallback everywhere —
+//!   overridable via `FEDSVD_ISA` (`auto|avx2|neon|scalar`).
+//!   Parallelism runs over a fixed row×column tile grid of the output
+//!   (so wide, LSA-shaped products scale too), with lanes from the
+//!   std-only [`pool::ThreadPool`] (`FEDSVD_THREADS`, default: all
+//!   cores). Because every ISA computes identical correctly-rounded FMA
+//!   accumulation chains over a grid fixed by shape alone, results are
+//!   **bit-identical at any thread count and any ISA** — keeping the
+//!   paper's lossless guarantees (Tab. 1) intact while scaling the
+//!   Step-2 hot loop across cores and vector lanes.
 //! * `runtime::TileEngine` (cargo feature `pjrt`, off by default) — the
 //!   AOT-compiled XLA tile path executed through PJRT; requires the
 //!   vendored `xla` crate and `make artifacts`. Python never runs on the

@@ -12,7 +12,8 @@
 //!   into a window of a larger output (the block-diagonal column scatter);
 //! * [`GemmBackend::block_mul_into`] / [`GemmBackend::mask_apply_into`] —
 //!   the fused block-diagonal products `D·X` and `P·Xᵢ·Qᵢ`, parallelized
-//!   over disjoint row panels by [`CpuBackend`];
+//!   by [`CpuBackend`] over a fixed grid of disjoint row-panel × column
+//!   chunk tiles (so wide, LSA-shaped outputs fill every lane too);
 //! * [`GemmBackend::run_parallel`] — backend-mediated task parallelism the
 //!   protocol uses to run per-user work concurrently.
 //!
@@ -27,7 +28,8 @@
 //! `pjrt`) implements this trait too, overriding the tile-shaped entry
 //! points with AOT-compiled XLA executables.
 
-use super::matmul::{gemm, gemm_nn, gemm_tn, gemm_view_acc_impl};
+use super::kernel;
+use super::matmul::{gemm, gemm_view_acc_impl};
 use super::{Mat, MatView};
 use crate::pool::{self, ThreadPool};
 use crate::util::{Error, Result};
@@ -102,10 +104,11 @@ pub trait GemmBackend: Sync {
     }
 
     /// The fused Step-2 masking product `out += P·X·Q` with `P` given as
-    /// diagonal blocks and `Q` as scatter pieces: per P-block, the panel
-    /// `P_b·X[s.., :]` lands in a reused scratch buffer and is scattered
-    /// through the pieces straight into `out[s.., :]` — no per-block `Mat`
-    /// allocations (the old `MatKernel` hot-loop cost).
+    /// diagonal blocks and `Q` as scatter pieces: per P-block × output
+    /// column chunk, the needed slices of the `P_b·X` intermediate land
+    /// in a reused scratch buffer and are scattered through the pieces
+    /// straight into `out[s.., :]` — no per-block `Mat` allocations (the
+    /// old `MatKernel` hot-loop cost).
     fn mask_apply_into(
         &self,
         starts: &[usize],
@@ -257,65 +260,79 @@ fn check_mask_apply(
     Ok(())
 }
 
-/// `out_panel += op(blk)·x_panel` on full-row panel slices — the
-/// per-range body of [`CpuBackend`]'s `block_mul_into`.
-fn block_panel_slices(blk: &Mat, trans: bool, xpanel: &[f64], opanel: &mut [f64], t: usize) {
-    let r = blk.rows();
-    if trans {
-        gemm_tn(r, t, r, 1.0, blk.data(), blk.cols(), xpanel, t, opanel, t, None);
-    } else {
-        gemm_nn(r, t, r, 1.0, blk.data(), blk.cols(), xpanel, t, opanel, t, None);
-    }
-}
-
-/// One Step-2 panel: `out_panel += (P_blk·X_panel)·Q_pieces`.
+/// One Step-2 tile: `out[s.., c0..c0+w) += (P_blk·X_panel)·Q_pieces`,
+/// restricted to the output-column chunk `[c0, c0+w)`.
 ///
-/// `x_panel` is `r×t` contiguous; `out_panel` holds `r` full rows at
-/// stride `ldc`; `scratch` is resized to `r·t` and fully overwritten
-/// (shapes already validated by [`check_mask_apply`]).
-fn mask_panel_core(
+/// Per scatter piece overlapping the chunk, the needed slice of the
+/// `P_blk·X` intermediate — `P_blk · X[:, src_col..src_col+kk]`, an
+/// `r×kk` sub-panel — lands in the reused scratch and multiplies the
+/// piece's overlapped columns straight into the tile. Restricting the
+/// output columns never changes bits: each output element's accumulation
+/// chain runs over the piece's *full* `kk` dimension (and each scratch
+/// element over the full `r`), both pure functions of shape + blocking,
+/// so chunked and unchunked schedules agree exactly (shapes already
+/// validated by [`check_mask_apply`]).
+///
+/// # Safety
+/// `tile` must address `r` rows × `w` writable columns at row stride
+/// `ldc` with no concurrent writer (the disjoint-tile grid guarantees
+/// this).
+#[allow(clippy::too_many_arguments)]
+unsafe fn mask_panel_chunk(
     p_block: &Mat,
     x_panel: &[f64],
     t: usize,
     pieces: &[ScatterPiece<'_>],
-    out_panel: &mut [f64],
+    c0: usize,
+    w: usize,
+    tile: *mut f64,
     ldc: usize,
     scratch: &mut Vec<f64>,
 ) {
     let r = p_block.rows();
-    if r == 0 || t == 0 {
+    if r == 0 || t == 0 || w == 0 {
         return;
     }
-    scratch.clear();
-    scratch.resize(r * t, 0.0);
-    gemm_nn(
-        r,
-        t,
-        r,
-        1.0,
-        p_block.data(),
-        p_block.cols(),
-        x_panel,
-        t,
-        scratch,
-        t,
-        None,
-    );
     for piece in pieces {
-        let (kk, w) = (piece.mat.rows(), piece.mat.cols());
-        if kk == 0 || w == 0 {
+        let (kk, wp) = (piece.mat.rows(), piece.mat.cols());
+        if kk == 0 || wp == 0 {
             continue;
         }
-        gemm_nn(
+        let lo = piece.out_col.max(c0);
+        let hi = (piece.out_col + wp).min(c0 + w);
+        if lo >= hi {
+            continue;
+        }
+        scratch.clear();
+        scratch.resize(r * kk, 0.0);
+        kernel::gemm_packed(
             r,
-            w,
+            kk,
+            r,
+            1.0,
+            p_block.data(),
+            p_block.cols(),
+            false,
+            &x_panel[piece.src_col..],
+            t,
+            false,
+            scratch,
+            kk,
+            None,
+        );
+        kernel::gemm_packed_ptr(
+            kernel::active_isa(),
+            r,
+            hi - lo,
             kk,
             1.0,
-            &scratch[piece.src_col..],
-            t,
-            piece.mat.data(),
-            w,
-            &mut out_panel[piece.out_col..],
+            scratch,
+            kk,
+            false,
+            &piece.mat.data()[lo - piece.out_col..],
+            wp,
+            false,
+            tile.add(lo - c0),
             ldc,
             None,
         );
@@ -407,15 +424,42 @@ impl GemmBackend for CpuBackend {
             .zip(blocks)
             .map(|(s, b)| (*s, b.rows()))
             .collect();
-        pool::for_disjoint_row_panels(
+        // tile grid = P blocks × NC-wide column chunks, so wide X keeps
+        // every lane busy even with a handful of blocks
+        pool::for_disjoint_tiles(
             Some(self.pool()),
             out.data_mut(),
             t,
             &ranges,
-            &|i, opanel| {
+            t,
+            kernel::NC,
+            &|i, c0, w, tile| {
                 let (s, blk) = (ranges[i].0, &blocks[i]);
-                let xpanel = &x.data()[s * t..(s + blk.rows()) * t];
-                block_panel_slices(blk, trans_blocks, xpanel, opanel, t);
+                let r = blk.rows();
+                if r == 0 || w == 0 {
+                    return;
+                }
+                // SAFETY: `tile` is this task's private r×w window of
+                // `out` (disjoint-tile grid); operand slices cover
+                // op(blk) (r×r) and X[s.., c0..c0+w) at stride t.
+                unsafe {
+                    kernel::gemm_packed_ptr(
+                        kernel::active_isa(),
+                        r,
+                        w,
+                        r,
+                        1.0,
+                        blk.data(),
+                        blk.cols(),
+                        trans_blocks,
+                        &x.data()[s * t + c0..],
+                        t,
+                        false,
+                        tile,
+                        t,
+                        None,
+                    );
+                }
             },
         );
         Ok(())
@@ -439,16 +483,32 @@ impl GemmBackend for CpuBackend {
             .zip(blocks)
             .map(|(s, b)| (*s, b.rows()))
             .collect();
-        pool::for_disjoint_row_panels(
+        pool::for_disjoint_tiles(
             Some(self.pool()),
             out.data_mut(),
             ldc,
             &ranges,
-            &|i, opanel| {
+            ldc,
+            kernel::NC,
+            &|i, c0, w, tile| {
                 let (s, blk) = (ranges[i].0, &blocks[i]);
                 let xpanel = &x.data()[s * t..(s + blk.rows()) * t];
                 PANEL_SCRATCH.with(|cell| {
-                    mask_panel_core(blk, xpanel, t, pieces, opanel, ldc, &mut cell.borrow_mut());
+                    // SAFETY: `tile` is this task's private window of
+                    // `out` (disjoint-tile grid), r×w at stride ldc.
+                    unsafe {
+                        mask_panel_chunk(
+                            blk,
+                            xpanel,
+                            t,
+                            pieces,
+                            c0,
+                            w,
+                            tile,
+                            ldc,
+                            &mut cell.borrow_mut(),
+                        );
+                    }
                 });
             },
         );

@@ -1,0 +1,670 @@
+//! Cache-blocked, packed GEMM micro-kernel with runtime ISA dispatch.
+//!
+//! This is the compute core every `linalg::matmul` entry point (and
+//! through it, every `GemmBackend` op) funnels into. The design is the
+//! classic BLIS decomposition:
+//!
+//! * the output C is cut into a **fixed tile grid** of `MC`-row ×
+//!   `NC`-column tiles — the unit of (optional) parallelism;
+//! * per tile, the shared dimension is walked in `KC` blocks; each block
+//!   of `op(A)` is packed into row-major `MR`-row micro-panels and each
+//!   block of `op(B)` into `NR`-column micro-panels, so the inner kernel
+//!   streams both operands contiguously regardless of transpose flags
+//!   (all four transpose combinations share this one code path);
+//! * the inner kernel computes an `MR`×`NR` register tile of C with the
+//!   k-loop innermost, via explicit SIMD FMA: AVX2+FMA on x86_64
+//!   (`_mm256_fmadd_pd`), NEON on aarch64 (`vfmaq_f64`), or a scalar
+//!   `f64::mul_add` fallback.
+//!
+//! **ISA dispatch.** The kernel is selected at runtime:
+//! `is_x86_feature_detected!` / `is_aarch64_feature_detected!` pick the
+//! widest available implementation, and the `FEDSVD_ISA` env var
+//! (`auto|avx2|neon|scalar`) overrides the choice for tests and CI (an
+//! ISA the host cannot run falls back to `scalar`). Read once per
+//! process, like `FEDSVD_THREADS`.
+//!
+//! **Determinism contract (two layers).** Each output element's
+//! accumulation chain — `pc` cache blocks in ascending order, `p`
+//! ascending inside a block, one final fused `c = α·acc + c` — is a pure
+//! function of the problem shape and the fixed blocking constants. It
+//! does not depend on the thread count (the tile grid is fixed before
+//! scheduling) *or on which tile/micro-panel a column lands in* (lanes
+//! accumulate independent elements). And because every implementation —
+//! scalar included — uses correctly-rounded FMA for the same chains,
+//! results are bit-identical **across ISAs** too, not just across thread
+//! counts. That is what lets CI run the whole tier-1 suite under
+//! `FEDSVD_ISA=scalar` and expect byte-equal outputs.
+
+use crate::pool::{SendPtr, ThreadPool};
+use std::cell::RefCell;
+use std::sync::OnceLock;
+
+/// Rows of C per cache tile (the parallel row granularity).
+pub const MC: usize = 128;
+/// Shared-dimension block: one packed panel pair spans `KC` of k.
+pub const KC: usize = 256;
+/// Columns of C per cache tile (the parallel column granularity).
+pub const NC: usize = 512;
+/// Rows of the register micro-tile (broadcast lanes of A).
+pub const MR: usize = 4;
+/// Columns of the register micro-tile (two 4-wide / four 2-wide vectors).
+pub const NR: usize = 8;
+
+/// Instruction-set implementations of the inner micro-kernel. All three
+/// produce bit-identical results (see module docs); the choice only
+/// affects speed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// AVX2 + FMA (x86_64), 4×8 tile in eight ymm accumulators.
+    Avx2,
+    /// NEON (aarch64), 4×8 tile in sixteen float64x2 accumulators.
+    Neon,
+    /// Portable `f64::mul_add` fallback — always available.
+    Scalar,
+}
+
+impl Isa {
+    /// Lowercase name as accepted by `FEDSVD_ISA` (and used in bench
+    /// JSON rows).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+            Isa::Scalar => "scalar",
+        }
+    }
+}
+
+/// Widest micro-kernel this host can execute.
+pub fn detect_isa() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma") {
+            return Isa::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Isa::Neon;
+        }
+    }
+    Isa::Scalar
+}
+
+/// `FEDSVD_ISA` policy: `scalar` forces the fallback, `avx2`/`neon`
+/// request that kernel (downgrading to `scalar` when the host cannot run
+/// it), anything else — including unset and `auto` — autodetects.
+pub(crate) fn isa_from(v: Option<&str>) -> Isa {
+    let req = v.map(|s| s.trim().to_ascii_lowercase());
+    match req.as_deref() {
+        Some("scalar") => Isa::Scalar,
+        Some("avx2") => {
+            if detect_isa() == Isa::Avx2 {
+                Isa::Avx2
+            } else {
+                Isa::Scalar
+            }
+        }
+        Some("neon") => {
+            if detect_isa() == Isa::Neon {
+                Isa::Neon
+            } else {
+                Isa::Scalar
+            }
+        }
+        _ => detect_isa(),
+    }
+}
+
+/// The process-wide kernel choice: `FEDSVD_ISA` override or
+/// autodetection, resolved once.
+pub fn active_isa() -> Isa {
+    static ISA: OnceLock<Isa> = OnceLock::new();
+    *ISA.get_or_init(|| isa_from(std::env::var("FEDSVD_ISA").ok().as_deref()))
+}
+
+/// ISAs worth benchmarking on this host: the detected kernel plus the
+/// scalar fallback (deduplicated when detection already says scalar).
+pub fn available_isas() -> Vec<Isa> {
+    let best = detect_isa();
+    if best == Isa::Scalar {
+        vec![Isa::Scalar]
+    } else {
+        vec![best, Isa::Scalar]
+    }
+}
+
+thread_local! {
+    /// Per-lane packed-panel buffers, reused across tiles and calls so the
+    /// hot loop allocates at most once per worker thread.
+    static PACK_A: RefCell<Vec<f64>> = RefCell::new(Vec::new());
+    static PACK_B: RefCell<Vec<f64>> = RefCell::new(Vec::new());
+}
+
+/// Pack the `mc`×`kc` block of `op(A)` starting at logical `(i0, pc)`
+/// into `MR`-row micro-panels: panel `ip` holds element `(ip·MR + ii, p)`
+/// at `ip·kc·MR + p·MR + ii`. Short trailing panels are zero-padded (the
+/// ragged-edge kernel never reads the padding; see `macro_kernel`).
+fn pack_a(
+    buf: &mut Vec<f64>,
+    a: &[f64],
+    lda: usize,
+    trans: bool,
+    i0: usize,
+    pc: usize,
+    mc: usize,
+    kc: usize,
+) {
+    let panels = mc.div_ceil(MR);
+    buf.clear();
+    buf.resize(panels * kc * MR, 0.0);
+    for ip in 0..panels {
+        let base = ip * kc * MR;
+        let mr = MR.min(mc - ip * MR);
+        for p in 0..kc {
+            for ii in 0..mr {
+                let (row, col) = (i0 + ip * MR + ii, pc + p);
+                buf[base + p * MR + ii] = if trans {
+                    a[col * lda + row]
+                } else {
+                    a[row * lda + col]
+                };
+            }
+        }
+    }
+}
+
+/// Pack the `kc`×`nc` block of `op(B)` starting at logical `(pc, jc)`
+/// into `NR`-column micro-panels: panel `jp` holds element
+/// `(p, jp·NR + jj)` at `jp·kc·NR + p·NR + jj`, zero-padded like `pack_a`.
+fn pack_b(
+    buf: &mut Vec<f64>,
+    b: &[f64],
+    ldb: usize,
+    trans: bool,
+    pc: usize,
+    jc: usize,
+    kc: usize,
+    nc: usize,
+) {
+    let panels = nc.div_ceil(NR);
+    buf.clear();
+    buf.resize(panels * kc * NR, 0.0);
+    for jp in 0..panels {
+        let base = jp * kc * NR;
+        let nr = NR.min(nc - jp * NR);
+        for p in 0..kc {
+            for jj in 0..nr {
+                let (row, col) = (pc + p, jc + jp * NR + jj);
+                buf[base + p * NR + jj] = if trans {
+                    b[col * ldb + row]
+                } else {
+                    b[row * ldb + col]
+                };
+            }
+        }
+    }
+}
+
+/// Full `MR`×`NR` tile, portable FMA. Identical per-element chains to the
+/// SIMD kernels: `acc = fma(a, b, acc)` for `p` ascending, then one
+/// `c = fma(α, acc, c)`.
+///
+/// # Safety
+/// `ap`/`bp` must point at `kc·MR` / `kc·NR` packed elements and `c` at a
+/// tile with `MR` rows of `NR` writable elements at stride `ldc`.
+unsafe fn micro_scalar_full(
+    kc: usize,
+    ap: *const f64,
+    bp: *const f64,
+    alpha: f64,
+    c: *mut f64,
+    ldc: usize,
+) {
+    let mut acc = [[0.0f64; NR]; MR];
+    for p in 0..kc {
+        let app = ap.add(p * MR);
+        let bpp = bp.add(p * NR);
+        for (ii, row) in acc.iter_mut().enumerate() {
+            let av = *app.add(ii);
+            for (jj, cell) in row.iter_mut().enumerate() {
+                *cell = av.mul_add(*bpp.add(jj), *cell);
+            }
+        }
+    }
+    for (ii, row) in acc.iter().enumerate() {
+        let crow = c.add(ii * ldc);
+        for (jj, cell) in row.iter().enumerate() {
+            let cp = crow.add(jj);
+            *cp = alpha.mul_add(*cell, *cp);
+        }
+    }
+}
+
+/// Ragged-edge tile (`mr < MR` and/or `nr < NR`): same chains as the full
+/// kernels, computing only the real elements so zero-padding in the
+/// packed panels is never even read (an FMA against padded ±0/NaN could
+/// otherwise perturb signs).
+///
+/// # Safety
+/// As `micro_scalar_full`, but only `mr` rows × `nr` columns of the tile
+/// are written.
+#[allow(clippy::too_many_arguments)]
+unsafe fn micro_scalar_edge(
+    kc: usize,
+    ap: *const f64,
+    bp: *const f64,
+    alpha: f64,
+    c: *mut f64,
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    for ii in 0..mr {
+        for jj in 0..nr {
+            let mut acc = 0.0f64;
+            for p in 0..kc {
+                acc = (*ap.add(p * MR + ii)).mul_add(*bp.add(p * NR + jj), acc);
+            }
+            let cp = c.add(ii * ldc + jj);
+            *cp = alpha.mul_add(acc, *cp);
+        }
+    }
+}
+
+/// AVX2+FMA 4×8 tile: eight ymm accumulators (4 rows × two 4-lane
+/// vectors), A broadcast per row, B rows streamed from the packed panel.
+/// `vfmadd` is correctly rounded, so lanes reproduce the scalar
+/// `mul_add` chains bit-for-bit.
+///
+/// # Safety
+/// As `micro_scalar_full`; additionally the CPU must support AVX2+FMA
+/// (guaranteed by ISA dispatch).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn micro_avx2(
+    kc: usize,
+    ap: *const f64,
+    bp: *const f64,
+    alpha: f64,
+    c: *mut f64,
+    ldc: usize,
+) {
+    use std::arch::x86_64::*;
+    let mut c00 = _mm256_setzero_pd();
+    let mut c01 = _mm256_setzero_pd();
+    let mut c10 = _mm256_setzero_pd();
+    let mut c11 = _mm256_setzero_pd();
+    let mut c20 = _mm256_setzero_pd();
+    let mut c21 = _mm256_setzero_pd();
+    let mut c30 = _mm256_setzero_pd();
+    let mut c31 = _mm256_setzero_pd();
+    for p in 0..kc {
+        let b0 = _mm256_loadu_pd(bp.add(p * NR));
+        let b1 = _mm256_loadu_pd(bp.add(p * NR + 4));
+        let a0 = _mm256_set1_pd(*ap.add(p * MR));
+        c00 = _mm256_fmadd_pd(a0, b0, c00);
+        c01 = _mm256_fmadd_pd(a0, b1, c01);
+        let a1 = _mm256_set1_pd(*ap.add(p * MR + 1));
+        c10 = _mm256_fmadd_pd(a1, b0, c10);
+        c11 = _mm256_fmadd_pd(a1, b1, c11);
+        let a2 = _mm256_set1_pd(*ap.add(p * MR + 2));
+        c20 = _mm256_fmadd_pd(a2, b0, c20);
+        c21 = _mm256_fmadd_pd(a2, b1, c21);
+        let a3 = _mm256_set1_pd(*ap.add(p * MR + 3));
+        c30 = _mm256_fmadd_pd(a3, b0, c30);
+        c31 = _mm256_fmadd_pd(a3, b1, c31);
+    }
+    let al = _mm256_set1_pd(alpha);
+    let r0 = c;
+    let r1 = c.add(ldc);
+    let r2 = c.add(2 * ldc);
+    let r3 = c.add(3 * ldc);
+    _mm256_storeu_pd(r0, _mm256_fmadd_pd(al, c00, _mm256_loadu_pd(r0)));
+    _mm256_storeu_pd(r0.add(4), _mm256_fmadd_pd(al, c01, _mm256_loadu_pd(r0.add(4))));
+    _mm256_storeu_pd(r1, _mm256_fmadd_pd(al, c10, _mm256_loadu_pd(r1)));
+    _mm256_storeu_pd(r1.add(4), _mm256_fmadd_pd(al, c11, _mm256_loadu_pd(r1.add(4))));
+    _mm256_storeu_pd(r2, _mm256_fmadd_pd(al, c20, _mm256_loadu_pd(r2)));
+    _mm256_storeu_pd(r2.add(4), _mm256_fmadd_pd(al, c21, _mm256_loadu_pd(r2.add(4))));
+    _mm256_storeu_pd(r3, _mm256_fmadd_pd(al, c30, _mm256_loadu_pd(r3)));
+    _mm256_storeu_pd(r3.add(4), _mm256_fmadd_pd(al, c31, _mm256_loadu_pd(r3.add(4))));
+}
+
+/// NEON 4×8 tile: sixteen float64x2 accumulators. `vfmaq_f64` is fused
+/// (single rounding), matching the scalar chains bit-for-bit.
+///
+/// # Safety
+/// As `micro_scalar_full`, on an aarch64 CPU with NEON.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn micro_neon(
+    kc: usize,
+    ap: *const f64,
+    bp: *const f64,
+    alpha: f64,
+    c: *mut f64,
+    ldc: usize,
+) {
+    use std::arch::aarch64::*;
+    let mut acc = [[vdupq_n_f64(0.0); 4]; MR];
+    for p in 0..kc {
+        let bpp = bp.add(p * NR);
+        let b = [
+            vld1q_f64(bpp),
+            vld1q_f64(bpp.add(2)),
+            vld1q_f64(bpp.add(4)),
+            vld1q_f64(bpp.add(6)),
+        ];
+        for (ii, row) in acc.iter_mut().enumerate() {
+            let av = vdupq_n_f64(*ap.add(p * MR + ii));
+            for (h, cell) in row.iter_mut().enumerate() {
+                *cell = vfmaq_f64(*cell, av, b[h]);
+            }
+        }
+    }
+    let al = vdupq_n_f64(alpha);
+    for (ii, row) in acc.iter().enumerate() {
+        let crow = c.add(ii * ldc);
+        for (h, cell) in row.iter().enumerate() {
+            let cp = crow.add(2 * h);
+            vst1q_f64(cp, vfmaq_f64(vld1q_f64(cp), al, *cell));
+        }
+    }
+}
+
+/// One packed block pair → the `mc`×`nc` C tile at `cbase` (stride
+/// `ldc`): full micro-tiles on the selected ISA, ragged edges on the
+/// scalar path (identical chains either way).
+///
+/// # Safety
+/// `apack`/`bpack` must be packed for exactly (`mc`, `nc`, `kc`), and
+/// `cbase` must address `mc` rows × `nc` writable columns at stride
+/// `ldc`, not aliased by any concurrent writer.
+#[allow(clippy::too_many_arguments)]
+unsafe fn macro_kernel(
+    isa: Isa,
+    mc: usize,
+    nc: usize,
+    kc: usize,
+    alpha: f64,
+    apack: &[f64],
+    bpack: &[f64],
+    cbase: *mut f64,
+    ldc: usize,
+) {
+    for jp in 0..nc.div_ceil(NR) {
+        let nr = NR.min(nc - jp * NR);
+        let bp = bpack.as_ptr().add(jp * kc * NR);
+        for ip in 0..mc.div_ceil(MR) {
+            let mr = MR.min(mc - ip * MR);
+            let ap = apack.as_ptr().add(ip * kc * MR);
+            let ctile = cbase.add(ip * MR * ldc + jp * NR);
+            if mr == MR && nr == NR {
+                match isa {
+                    #[cfg(target_arch = "x86_64")]
+                    Isa::Avx2 => micro_avx2(kc, ap, bp, alpha, ctile, ldc),
+                    #[cfg(target_arch = "aarch64")]
+                    Isa::Neon => micro_neon(kc, ap, bp, alpha, ctile, ldc),
+                    _ => micro_scalar_full(kc, ap, bp, alpha, ctile, ldc),
+                }
+            } else {
+                micro_scalar_edge(kc, ap, bp, alpha, ctile, ldc, mr, nr);
+            }
+        }
+    }
+}
+
+/// `C[0..m, 0..n] += α·op(A)·op(B)` on pre-offset row-major slices — the
+/// packed-kernel entry the `gemm` dispatcher and the backend use. Runs on
+/// the process-selected ISA ([`active_isa`]).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_packed(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    trans_a: bool,
+    b: &[f64],
+    ldb: usize,
+    trans_b: bool,
+    c: &mut [f64],
+    ldc: usize,
+    pool: Option<&ThreadPool>,
+) {
+    gemm_packed_isa(active_isa(), m, n, k, alpha, a, lda, trans_a, b, ldb, trans_b, c, ldc, pool)
+}
+
+/// [`gemm_packed`] with an explicit ISA — the hook the equivalence tests
+/// and benches use to pit kernels against each other in one process.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_packed_isa(
+    isa: Isa,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    trans_a: bool,
+    b: &[f64],
+    ldb: usize,
+    trans_b: bool,
+    c: &mut [f64],
+    ldc: usize,
+    pool: Option<&ThreadPool>,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    debug_assert!((m - 1) * ldc + n <= c.len(), "gemm_packed: C slice too short");
+    // SAFETY: the debug-checked bound above plus the tile grid's
+    // disjointness (each task owns its row×column tile) make the raw
+    // writes race- and bounds-safe.
+    unsafe {
+        gemm_packed_ptr(isa, m, n, k, alpha, a, lda, trans_a, b, ldb, trans_b, c.as_mut_ptr(), ldc, pool)
+    }
+}
+
+/// Raw-pointer form of [`gemm_packed_isa`], for callers whose output tile
+/// is a strided window of a larger buffer that cannot be expressed as a
+/// `&mut [f64]` without aliasing a concurrent writer's window (the
+/// column-chunked mask/block products).
+///
+/// # Safety
+/// `cbase` must address `m` rows × `n` writable columns at row stride
+/// `ldc`, valid for the whole call, and no other thread may touch those
+/// elements concurrently. `a`/`b` must cover `op(A)` (`m`×`k`) and
+/// `op(B)` (`k`×`n`) at strides `lda`/`ldb`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn gemm_packed_ptr(
+    isa: Isa,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    trans_a: bool,
+    b: &[f64],
+    ldb: usize,
+    trans_b: bool,
+    cbase: *mut f64,
+    ldc: usize,
+    pool: Option<&ThreadPool>,
+) {
+    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+        return;
+    }
+    let row_tiles = m.div_ceil(MC);
+    let col_tiles = n.div_ceil(NC);
+    let tasks = row_tiles * col_tiles;
+    let base = SendPtr(cbase);
+    let body = move |t: usize| {
+        let (ti, tj) = (t / col_tiles, t % col_tiles);
+        let i0 = ti * MC;
+        let mc = MC.min(m - i0);
+        let jc = tj * NC;
+        let nc = NC.min(n - jc);
+        PACK_A.with(|ca| {
+            PACK_B.with(|cb| {
+                let mut apack = ca.borrow_mut();
+                let mut bpack = cb.borrow_mut();
+                // k blocks in fixed ascending order — the per-element
+                // accumulation chain, independent of the task schedule.
+                for pc in (0..k).step_by(KC) {
+                    let kc = KC.min(k - pc);
+                    pack_a(&mut apack, a, lda, trans_a, i0, pc, mc, kc);
+                    pack_b(&mut bpack, b, ldb, trans_b, pc, jc, kc, nc);
+                    // SAFETY: this task's tile (rows i0.., cols jc..) is
+                    // disjoint from every other task's; bounds per the
+                    // caller contract.
+                    unsafe {
+                        macro_kernel(
+                            isa,
+                            mc,
+                            nc,
+                            kc,
+                            alpha,
+                            &apack,
+                            &bpack,
+                            base.0.add(i0 * ldc + jc),
+                            ldc,
+                        );
+                    }
+                }
+            });
+        });
+    };
+    match pool {
+        Some(p) if p.threads() > 1 && tasks > 1 => p.parallel_for(tasks, &body),
+        _ => {
+            for t in 0..tasks {
+                body(t);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn naive(
+        m: usize,
+        n: usize,
+        k: usize,
+        alpha: f64,
+        a: &[f64],
+        lda: usize,
+        ta: bool,
+        b: &[f64],
+        ldb: usize,
+        tb: bool,
+        c: &mut [f64],
+        ldc: usize,
+    ) {
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for p in 0..k {
+                    let av = if ta { a[p * lda + i] } else { a[i * lda + p] };
+                    let bv = if tb { b[j * ldb + p] } else { b[p * ldb + j] };
+                    acc += av * bv;
+                }
+                c[i * ldc + j] += alpha * acc;
+            }
+        }
+    }
+
+    fn gauss(n: usize, rng: &mut Xoshiro256) -> Vec<f64> {
+        let mut v = vec![0.0; n];
+        rng.fill_gaussian(&mut v);
+        v
+    }
+
+    #[test]
+    fn packed_matches_naive_all_transposes_ragged() {
+        let mut rng = Xoshiro256::seed_from_u64(31);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (5, 7, 9), (13, 17, 11), (130, 300, 33)] {
+            for &(ta, tb) in &[(false, false), (true, false), (false, true), (true, true)] {
+                let (lda, ldb) = (if ta { m } else { k }, if tb { k } else { n });
+                let a = gauss(m * k, &mut rng);
+                let b = gauss(k * n, &mut rng);
+                let mut fast = vec![0.0; m * n];
+                gemm_packed_isa(Isa::Scalar, m, n, k, 1.0, &a, lda, ta, &b, ldb, tb, &mut fast, n, None);
+                let mut slow = vec![0.0; m * n];
+                naive(m, n, k, 1.0, &a, lda, ta, &b, ldb, tb, &mut slow, n);
+                let d = crate::util::max_abs_diff(&fast, &slow);
+                assert!(d < 1e-10, "({m},{k},{n}) ta={ta} tb={tb} diff={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_bits_equal_scalar() {
+        // the keystone: every ISA produces the same bits (FMA everywhere,
+        // same chains), so the FEDSVD_ISA override can never change results
+        let mut rng = Xoshiro256::seed_from_u64(32);
+        for isa in available_isas() {
+            for &(m, k, n) in &[(4usize, 16usize, 8usize), (63, 65, 17), (129, 257, 33)] {
+                let a = gauss(m * k, &mut rng);
+                let b = gauss(k * n, &mut rng);
+                let mut via_isa = vec![0.0; m * n];
+                gemm_packed_isa(isa, m, n, k, 1.5, &a, k, false, &b, n, false, &mut via_isa, n, None);
+                let mut via_scalar = vec![0.0; m * n];
+                gemm_packed_isa(Isa::Scalar, m, n, k, 1.5, &a, k, false, &b, n, false, &mut via_scalar, n, None);
+                assert!(
+                    crate::util::bits_equal(&via_isa, &via_scalar),
+                    "({m},{k},{n}) {} != scalar bits",
+                    isa.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tile_grid_is_thread_invariant() {
+        let mut rng = Xoshiro256::seed_from_u64(33);
+        // wide shape: 2 row tiles but many column tiles — the LSA case
+        let (m, k, n) = (130usize, 64usize, 1200usize);
+        let a = gauss(m * k, &mut rng);
+        let b = gauss(k * n, &mut rng);
+        let mut seq = vec![0.0; m * n];
+        gemm_packed(m, n, k, 1.0, &a, k, false, &b, n, false, &mut seq, n, None);
+        for threads in [2usize, 4] {
+            let pool = ThreadPool::new(threads);
+            let mut par = vec![0.0; m * n];
+            gemm_packed(m, n, k, 1.0, &a, k, false, &b, n, false, &mut par, n, Some(&pool));
+            assert!(crate::util::bits_equal(&seq, &par), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn isa_policy_parsing() {
+        assert_eq!(isa_from(Some("scalar")), Isa::Scalar);
+        assert_eq!(isa_from(Some(" SCALAR ")), Isa::Scalar);
+        assert_eq!(isa_from(None), detect_isa());
+        assert_eq!(isa_from(Some("auto")), detect_isa());
+        assert_eq!(isa_from(Some("bogus")), detect_isa());
+        // requesting a kernel the host lacks falls back to scalar
+        let avx2 = isa_from(Some("avx2"));
+        assert!(avx2 == Isa::Avx2 && detect_isa() == Isa::Avx2 || avx2 == Isa::Scalar);
+        let neon = isa_from(Some("neon"));
+        assert!(neon == Isa::Neon && detect_isa() == Isa::Neon || neon == Isa::Scalar);
+        assert!(available_isas().contains(&Isa::Scalar));
+        assert_eq!(Isa::Scalar.name(), "scalar");
+    }
+
+    #[test]
+    fn zero_and_alpha_zero_are_noops() {
+        let mut c = vec![7.0; 4];
+        gemm_packed(0, 2, 3, 1.0, &[], 1, false, &[0.0; 6], 2, false, &mut c, 2, None);
+        gemm_packed(2, 2, 0, 1.0, &[], 1, false, &[], 2, false, &mut c, 2, None);
+        gemm_packed(2, 2, 3, 0.0, &[0.0; 6], 3, false, &[0.0; 6], 2, false, &mut c, 2, None);
+        assert_eq!(c, vec![7.0; 4]);
+    }
+}

@@ -1,5 +1,5 @@
-//! Register- and cache-blocked dense GEMM — the allocation-free compute
-//! core under the FedSVD hot path.
+//! GEMM entry points over the packed SIMD kernel — the allocation-free
+//! compute core under the FedSVD hot path.
 //!
 //! Masking/unmasking is a stream of (b×b)·(b×t) block products (paper
 //! §3.2, Eq. 5). Every entry point here is *output-buffer* style
@@ -9,31 +9,25 @@
 //! `pjrt`) offloads tile products to an AOT-compiled XLA executable; this
 //! kernel is both the fallback and the cross-check oracle.
 //!
-//! Layout: row-major everywhere, explicit row strides (`lda`/`ldb`/`ldc`)
-//! so panels and scatter targets are views, not copies. The no-transpose
-//! micro-kernel computes a 4×16 register tile of C (8 zmm accumulators on
-//! this AVX-512 core) with the k-loop innermost, streaming B rows
-//! sequentially — ~1.8× over the (auto-vectorized) naive triple loop at
-//! 256³; iteration log in EXPERIMENTS.md §Perf.
+//! The heavy lifting lives in [`super::kernel`]: a cache-blocked
+//! (MC=128/KC=256/NC=512), packed micro-kernel with explicit SIMD FMA
+//! (AVX2 / NEON / scalar `mul_add`) behind runtime ISA dispatch and a
+//! `FEDSVD_ISA` override. All four transpose combinations share that one
+//! path — packing absorbs the strides — and parallelism runs over a
+//! fixed row×column tile grid of C, so wide outputs (m ≪ n, the LSA
+//! orientation) spread across lanes too.
 //!
-//! **Determinism contract.** Multi-threading partitions C into row chunks;
-//! each output element is produced by exactly one chunk with an identical
-//! per-element accumulation order — (jc, pc) cache blocks in fixed order,
-//! k ascending inside a block — regardless of chunk boundaries or thread
-//! count. Results are therefore bit-identical for any [`ThreadPool`],
-//! which is what keeps the protocol lossless *and* reproducible.
+//! **Determinism contract.** Each output element's accumulation chain is
+//! a pure function of the problem shape and the fixed blocking constants
+//! — never of the thread count or tile schedule — and every ISA uses
+//! correctly-rounded FMA for the same chains. Results are therefore
+//! bit-identical for any [`ThreadPool`] *and* any `FEDSVD_ISA`, which is
+//! what keeps the protocol lossless and reproducible.
 
+use super::kernel::{self, Isa};
 use super::{Mat, MatView};
-use crate::pool::{SendPtr, ThreadPool};
+use crate::pool::ThreadPool;
 use crate::util::{Error, Result};
-
-/// Cache-block sizes (tuned on the 1-core target; see §Perf iteration log).
-const MC: usize = 128; // rows of A per L2 block — also the parallel row-chunk
-const KC: usize = 256; // shared dim per block
-const NC: usize = 512; // cols of B per block
-
-/// Row-chunk size for the transpose-path kernels.
-const TC: usize = 64;
 
 /// `C = A * B` (allocating convenience; runs on the global pool).
 pub fn matmul(a: &Mat, b: &Mat) -> Result<Mat> {
@@ -59,10 +53,30 @@ pub fn matmul_acc(a: &Mat, b: &Mat, c: &mut Mat) -> Result<()> {
 ///
 /// `β = 0` overwrites `c` (its prior contents are never read), `β = 1`
 /// accumulates, other values scale first. Supplying a `pool` parallelizes
-/// over row chunks of `C`; see the module docs for the bit-determinism
-/// contract.
+/// over the C tile grid; see the module docs for the bit-determinism
+/// contract. Runs the process-selected kernel
+/// ([`kernel::active_isa`], i.e. the `FEDSVD_ISA` policy).
 #[allow(clippy::too_many_arguments)]
 pub fn gemm(
+    alpha: f64,
+    a: &Mat,
+    trans_a: bool,
+    b: &Mat,
+    trans_b: bool,
+    beta: f64,
+    c: &mut Mat,
+    pool: Option<&ThreadPool>,
+) -> Result<()> {
+    gemm_with_isa(kernel::active_isa(), alpha, a, trans_a, b, trans_b, beta, c, pool)
+}
+
+/// [`gemm`] on an explicitly chosen micro-kernel ISA. The equivalence
+/// suites and `bench_hotpath` use this to pit kernels against each other
+/// within one process; production callers should use [`gemm`], which
+/// follows the `FEDSVD_ISA` policy.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_with_isa(
+    isa: Isa,
     alpha: f64,
     a: &Mat,
     trans_a: bool,
@@ -99,15 +113,23 @@ pub fn gemm(
     if m == 0 || n == 0 || ka == 0 || alpha == 0.0 {
         return Ok(());
     }
-    let k = ka;
     let (lda, ldb, ldc) = (a.cols(), b.cols(), n);
-    let (ad, bd) = (a.data(), b.data());
-    match (trans_a, trans_b) {
-        (false, false) => gemm_nn(m, n, k, alpha, ad, lda, bd, ldb, c.data_mut(), ldc, pool),
-        (true, false) => gemm_tn(m, n, k, alpha, ad, lda, bd, ldb, c.data_mut(), ldc, pool),
-        (false, true) => gemm_nt(m, n, k, alpha, ad, lda, bd, ldb, c.data_mut(), ldc, pool),
-        (true, true) => gemm_tt(m, n, k, alpha, ad, lda, bd, ldb, c.data_mut(), ldc, pool),
-    }
+    kernel::gemm_packed_isa(
+        isa,
+        m,
+        n,
+        ka,
+        alpha,
+        a.data(),
+        lda,
+        trans_a,
+        b.data(),
+        ldb,
+        trans_b,
+        c.data_mut(),
+        ldc,
+        pool,
+    );
     Ok(())
 }
 
@@ -141,272 +163,22 @@ pub(crate) fn gemm_view_acc_impl(
     let off = r0 * ldc + c0;
     let clen = (m - 1) * ldc + n;
     let csub = &mut c.data_mut()[off..off + clen];
-    gemm_nn(m, n, k, alpha, a.data(), a.ld(), b.data(), b.ld(), csub, ldc, pool);
+    kernel::gemm_packed(
+        m,
+        n,
+        k,
+        alpha,
+        a.data(),
+        a.ld(),
+        false,
+        b.data(),
+        b.ld(),
+        false,
+        csub,
+        ldc,
+        pool,
+    );
     Ok(())
-}
-
-/// Partition `c` into row chunks and run `body(r0, rows, c_chunk)` on each,
-/// in parallel when a multi-lane pool is supplied. `c_chunk` starts at row
-/// `r0` and is exactly `(rows-1)*ldc + n` long, so short trailing rows of
-/// offset views stay in bounds. Chunk boundaries never change results:
-/// each output row is produced by exactly one chunk with an identical op
-/// order (see module docs).
-fn parallel_rows(
-    pool: Option<&ThreadPool>,
-    m: usize,
-    n: usize,
-    c: &mut [f64],
-    ldc: usize,
-    chunk: usize,
-    body: &(dyn Fn(usize, usize, &mut [f64]) + Sync),
-) {
-    if m == 0 || n == 0 {
-        return;
-    }
-    debug_assert!((m - 1) * ldc + n <= c.len());
-    let tasks = m.div_ceil(chunk);
-    if tasks <= 1 || pool.map_or(true, |p| p.threads() <= 1) {
-        for t in 0..tasks {
-            let r0 = t * chunk;
-            let rows = chunk.min(m - r0);
-            let clen = (rows - 1) * ldc + n;
-            body(r0, rows, &mut c[r0 * ldc..r0 * ldc + clen]);
-        }
-    } else {
-        let base = SendPtr(c.as_mut_ptr());
-        pool.expect("pool checked above").parallel_for(tasks, &move |t| {
-            let r0 = t * chunk;
-            let rows = chunk.min(m - r0);
-            let clen = (rows - 1) * ldc + n;
-            // SAFETY: row chunks are pairwise disjoint and in bounds.
-            let csub = unsafe { std::slice::from_raw_parts_mut(base.0.add(r0 * ldc), clen) };
-            body(r0, rows, csub);
-        });
-    }
-}
-
-/// `C[0..m, 0..n] += α·A·B` on pre-offset row-major slices (no transpose).
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn gemm_nn(
-    m: usize,
-    n: usize,
-    k: usize,
-    alpha: f64,
-    a: &[f64],
-    lda: usize,
-    b: &[f64],
-    ldb: usize,
-    c: &mut [f64],
-    ldc: usize,
-    pool: Option<&ThreadPool>,
-) {
-    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
-        return;
-    }
-    parallel_rows(pool, m, n, c, ldc, MC, &|r0, rows, csub| {
-        let asub = &a[r0 * lda..];
-        for jc in (0..n).step_by(NC) {
-            let nc = NC.min(n - jc);
-            for pc in (0..k).step_by(KC) {
-                let kc = KC.min(k - pc);
-                block_kernel(asub, b, csub, lda, ldb, ldc, alpha, jc, pc, rows, nc, kc);
-            }
-        }
-    });
-}
-
-/// `C += α·Aᵀ·B`: k-outer accumulation of scaled B rows — the cache
-/// pattern `Mat::t_mul` always used, now row-chunk parallel.
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn gemm_tn(
-    m: usize,
-    n: usize,
-    k: usize,
-    alpha: f64,
-    a: &[f64],
-    lda: usize,
-    b: &[f64],
-    ldb: usize,
-    c: &mut [f64],
-    ldc: usize,
-    pool: Option<&ThreadPool>,
-) {
-    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
-        return;
-    }
-    parallel_rows(pool, m, n, c, ldc, TC, &|r0, rows, csub| {
-        for p in 0..k {
-            let brow = &b[p * ldb..p * ldb + n];
-            let arow = &a[p * lda..];
-            for i in 0..rows {
-                let av = alpha * arow[r0 + i];
-                if av != 0.0 {
-                    let crow = &mut csub[i * ldc..i * ldc + n];
-                    for (cv, &bv) in crow.iter_mut().zip(brow) {
-                        *cv += av * bv;
-                    }
-                }
-            }
-        }
-    });
-}
-
-/// `C += α·A·Bᵀ`: row-row dot products.
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn gemm_nt(
-    m: usize,
-    n: usize,
-    k: usize,
-    alpha: f64,
-    a: &[f64],
-    lda: usize,
-    b: &[f64],
-    ldb: usize,
-    c: &mut [f64],
-    ldc: usize,
-    pool: Option<&ThreadPool>,
-) {
-    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
-        return;
-    }
-    parallel_rows(pool, m, n, c, ldc, TC, &|r0, rows, csub| {
-        for i in 0..rows {
-            let ar = &a[(r0 + i) * lda..(r0 + i) * lda + k];
-            let crow = &mut csub[i * ldc..i * ldc + n];
-            for (j, cv) in crow.iter_mut().enumerate() {
-                let br = &b[j * ldb..j * ldb + k];
-                let mut acc = 0.0;
-                for (x, y) in ar.iter().zip(br) {
-                    acc += x * y;
-                }
-                *cv += alpha * acc;
-            }
-        }
-    });
-}
-
-/// `C += α·Aᵀ·Bᵀ` — cold path (no hot caller), scalar loops.
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn gemm_tt(
-    m: usize,
-    n: usize,
-    k: usize,
-    alpha: f64,
-    a: &[f64],
-    lda: usize,
-    b: &[f64],
-    ldb: usize,
-    c: &mut [f64],
-    ldc: usize,
-    pool: Option<&ThreadPool>,
-) {
-    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
-        return;
-    }
-    parallel_rows(pool, m, n, c, ldc, TC, &|r0, rows, csub| {
-        for i in 0..rows {
-            let crow = &mut csub[i * ldc..i * ldc + n];
-            for (j, cv) in crow.iter_mut().enumerate() {
-                let br = &b[j * ldb..j * ldb + k];
-                let mut acc = 0.0;
-                for (p, &bv) in br.iter().enumerate() {
-                    acc += a[p * lda + r0 + i] * bv;
-                }
-                *cv += alpha * acc;
-            }
-        }
-    });
-}
-
-/// Inner cache block: `C[0..mc, jc..jc+nc] += α·A[0.., pc..]·B[pc.., jc..]`
-/// with a 4×16 register micro-tile. Row indices are relative to the chunk.
-#[allow(clippy::too_many_arguments)]
-#[inline]
-fn block_kernel(
-    a: &[f64],
-    b: &[f64],
-    c: &mut [f64],
-    lda: usize,
-    ldb: usize,
-    ldc: usize,
-    alpha: f64,
-    jc: usize,
-    pc: usize,
-    mc: usize,
-    nc: usize,
-    kc: usize,
-) {
-    const MR: usize = 4;
-    const NR: usize = 16;
-    let mut i = 0;
-    while i < mc {
-        let mr = MR.min(mc - i);
-        let mut j = 0;
-        while j < nc {
-            let nr = NR.min(nc - j);
-            if mr == MR && nr == NR {
-                micro_4x16(a, b, c, lda, ldb, ldc, alpha, i, jc + j, pc, kc);
-            } else {
-                // ragged edge: scalar loop (same per-element k order as the
-                // micro-tile, so tiling raggedness never changes bits)
-                for ii in 0..mr {
-                    let arow = (i + ii) * lda + pc;
-                    let crow = (i + ii) * ldc + jc + j;
-                    for jj in 0..nr {
-                        let mut acc = 0.0;
-                        for p in 0..kc {
-                            acc += a[arow + p] * b[(pc + p) * ldb + jc + j + jj];
-                        }
-                        c[crow + jj] += alpha * acc;
-                    }
-                }
-            }
-            j += nr;
-        }
-        i += mr;
-    }
-}
-
-/// 4×16 register-tiled micro-kernel: 4 rows × two 8-lane f64 vectors of C
-/// stay in registers (8 zmm accumulators — enough independent FMA chains
-/// to cover the FMA latency on this AVX-512 core; see §Perf).
-#[allow(clippy::too_many_arguments)]
-#[inline]
-fn micro_4x16(
-    a: &[f64],
-    b: &[f64],
-    c: &mut [f64],
-    lda: usize,
-    ldb: usize,
-    ldc: usize,
-    alpha: f64,
-    i0: usize,
-    j0: usize,
-    pc: usize,
-    kc: usize,
-) {
-    let mut acc = [[0.0f64; 16]; 4];
-    let a0 = i0 * lda + pc;
-    let a1 = (i0 + 1) * lda + pc;
-    let a2 = (i0 + 2) * lda + pc;
-    let a3 = (i0 + 3) * lda + pc;
-    for p in 0..kc {
-        let brow = (pc + p) * ldb + j0;
-        let bvals = &b[brow..brow + 16];
-        let av = [a[a0 + p], a[a1 + p], a[a2 + p], a[a3 + p]];
-        for (ii, &ai) in av.iter().enumerate() {
-            let accr = &mut acc[ii];
-            for jj in 0..16 {
-                accr[jj] += ai * bvals[jj];
-            }
-        }
-    }
-    for (ii, accr) in acc.iter().enumerate() {
-        let crow = (i0 + ii) * ldc + j0;
-        for jj in 0..16 {
-            c[crow + jj] += alpha * accr[jj];
-        }
-    }
 }
 
 /// Naive triple-loop reference used in tests and as the §Perf baseline.
@@ -455,7 +227,7 @@ mod tests {
 
     #[test]
     fn matches_naive_ragged() {
-        // sizes straddling the 4x16 micro-tile and the cache blocks
+        // sizes straddling the 4x8 micro-tile and the cache blocks
         check_against_naive(5, 7, 9, 4);
         check_against_naive(13, 17, 11, 5);
         check_against_naive(129, 257, 33, 6);
@@ -580,6 +352,20 @@ mod tests {
                 "({m},{k},{n}) parallel bits differ"
             );
         }
+    }
+
+    #[test]
+    fn gemm_with_isa_scalar_matches_active() {
+        // any ISA ≡ scalar bit-for-bit (shared FMA chains) — the property
+        // the FEDSVD_ISA=scalar CI leg relies on
+        let mut rng = Xoshiro256::seed_from_u64(15);
+        let a = Mat::gaussian(66, 129, &mut rng);
+        let b = Mat::gaussian(129, 70, &mut rng);
+        let mut via_active = Mat::zeros(66, 70);
+        gemm(1.0, &a, false, &b, false, 0.0, &mut via_active, None).unwrap();
+        let mut via_scalar = Mat::zeros(66, 70);
+        gemm_with_isa(Isa::Scalar, 1.0, &a, false, &b, false, 0.0, &mut via_scalar, None).unwrap();
+        assert!(crate::util::bits_equal(via_active.data(), via_scalar.data()));
     }
 
     #[test]

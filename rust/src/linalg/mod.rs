@@ -2,14 +2,16 @@
 //!
 //! Everything FedSVD needs, built from scratch (no BLAS/LAPACK in the
 //! offline image): a row-major [`Mat`] type with borrowed [`MatView`]
-//! windows, a register-blocked multi-threaded GEMM behind the
+//! windows, a cache-blocked packed SIMD GEMM (runtime ISA dispatch:
+//! AVX2/NEON/scalar, `FEDSVD_ISA` override — see [`kernel`]) behind the
 //! [`GemmBackend`] seam (accumulating output-buffer ops, transpose flags,
-//! bit-deterministic at any `FEDSVD_THREADS`), Householder QR and
+//! bit-deterministic at any `FEDSVD_THREADS` *and* ISA), Householder QR and
 //! (modified) Gram–Schmidt, a full one-sided-Jacobi SVD, randomized
 //! truncated SVD, a Jacobi symmetric eigendecomposition and an LU solver.
 //! All f64 — the paper's losslessness claims (Tab. 1: errors at
 //! 1e-10..1e-15) are only reproducible in double precision.
 
+pub mod kernel;
 pub mod matmul;
 pub mod backend;
 pub mod qr;
@@ -18,7 +20,8 @@ pub mod eig;
 pub mod lu;
 
 pub use backend::{run_parallel_collect, CpuBackend, GemmBackend, ScatterPiece};
-pub use matmul::{gemm, matmul, matmul_acc, matmul_into};
+pub use kernel::{active_isa, detect_isa, Isa};
+pub use matmul::{gemm, gemm_with_isa, matmul, matmul_acc, matmul_into};
 pub use qr::{gram_schmidt, householder_qr};
 pub use svd::{randomized_svd, svd, svd_with_probe_seed, SvdResult};
 

@@ -265,48 +265,66 @@ pub(crate) fn thread_count_from(v: Option<&str>) -> usize {
     }
 }
 
-/// Run `f(i, panel_i)` for each `(row0, nrows)` range in `ranges`, where
-/// `panel_i` is the mutable row block `[row0, row0 + nrows)` of `data`
-/// (row stride `ld`, full rows). Panels run in parallel when a pool is
-/// supplied. Ranges must be pairwise disjoint and in bounds — checked up
-/// front (panics on violation, it is a caller bug).
-pub(crate) fn for_disjoint_row_panels(
+/// Run `f(i, c0, w, tile)` for every tile of the fixed grid formed by the
+/// disjoint row ranges in `ranges` crossed with `col_chunk`-wide column
+/// chunks of `[0, cols)`: `tile` points at element `(row0, c0)` of `data`
+/// (row stride `ld`) and addresses the `nrows × w` tile. Tiles run in
+/// parallel when a pool is supplied; the grid itself — and therefore what
+/// each tile computes — is a pure function of the arguments, never of the
+/// thread count. Splitting the columns keeps every lane busy on wide
+/// outputs (m ≪ n) where row ranges alone would idle most of the pool.
+///
+/// Ranges must be pairwise disjoint and in bounds — checked up front
+/// (panics on violation, it is a caller bug). `f` must confine its writes
+/// to its tile: rows `[0, nrows)` × columns `[0, w)` at stride `ld` from
+/// `tile` (raw pointer because sibling column tiles interleave in memory,
+/// so per-tile `&mut` slices would alias).
+pub(crate) fn for_disjoint_tiles(
     pool: Option<&ThreadPool>,
     data: &mut [f64],
     ld: usize,
     ranges: &[(usize, usize)],
-    f: &(dyn Fn(usize, &mut [f64]) + Sync),
+    cols: usize,
+    col_chunk: usize,
+    f: &(dyn Fn(usize, usize, usize, *mut f64) + Sync),
 ) {
-    if ranges.is_empty() {
+    if ranges.is_empty() || cols == 0 || ld == 0 {
         return;
     }
+    assert!(cols <= ld, "for_disjoint_tiles: cols > row stride");
     let mut sorted: Vec<(usize, usize)> = ranges.to_vec();
     sorted.sort_unstable();
     for w in sorted.windows(2) {
         assert!(
             w[0].0 + w[0].1 <= w[1].0,
-            "for_disjoint_row_panels: overlapping ranges"
+            "for_disjoint_tiles: overlapping ranges"
         );
     }
     let (last0, lastn) = *sorted.last().expect("nonempty");
     assert!(
-        (last0 + lastn) * ld <= data.len() || ld == 0,
-        "for_disjoint_row_panels: range out of bounds"
+        (last0 + lastn) * ld <= data.len(),
+        "for_disjoint_tiles: range out of bounds"
     );
+    let col_chunks = cols.div_ceil(col_chunk.max(1));
     let base = SendPtr(data.as_mut_ptr());
-    let run = move |i: usize| {
+    let run = move |t: usize| {
+        let (i, cj) = (t / col_chunks, t % col_chunks);
         let (r0, nr) = ranges[i];
-        if nr == 0 || ld == 0 {
+        if nr == 0 {
             return;
         }
-        // SAFETY: ranges are pairwise disjoint and in bounds (checked
-        // above), so concurrent panels never alias.
-        let panel = unsafe { std::slice::from_raw_parts_mut(base.0.add(r0 * ld), nr * ld) };
-        f(i, panel);
+        let c0 = cj * col_chunk;
+        let w = col_chunk.min(cols - c0);
+        // SAFETY: row ranges are pairwise disjoint and in bounds (checked
+        // above) and column chunks partition [0, cols), so no two tiles
+        // share an element; `f` stays inside its tile per the contract.
+        let tile = unsafe { base.0.add(r0 * ld + c0) };
+        f(i, c0, w, tile);
     };
+    let tasks = ranges.len() * col_chunks;
     match pool {
-        Some(p) if p.threads() > 1 => p.parallel_for(ranges.len(), &run),
-        _ => (0..ranges.len()).for_each(run),
+        Some(p) if p.threads() > 1 => p.parallel_for(tasks, &run),
+        _ => (0..tasks).for_each(run),
     }
 }
 
@@ -350,34 +368,40 @@ mod tests {
     }
 
     #[test]
-    fn disjoint_row_panels_write_their_rows() {
-        let mut data = vec![0.0f64; 10 * 4];
+    fn disjoint_tiles_cover_the_grid_exactly_once() {
+        // 10 rows × 7 cols (ld 8), 3 row ranges × 3-col chunks: every
+        // in-grid element is written exactly once with its tile's id
+        let (ld, cols) = (8usize, 7usize);
+        let mut data = vec![0.0f64; 10 * ld];
         let ranges = [(0usize, 3usize), (3, 4), (7, 3)];
         let pool = ThreadPool::new(2);
-        for_disjoint_row_panels(Some(&pool), &mut data, 4, &ranges, &|i, panel| {
-            for v in panel.iter_mut() {
-                *v = (i + 1) as f64;
+        for_disjoint_tiles(Some(&pool), &mut data, ld, &ranges, cols, 3, &|i, c0, w, tile| {
+            let nr = ranges[i].1;
+            let id = (i * 10 + c0 / 3 + 1) as f64;
+            for r in 0..nr {
+                for c in 0..w {
+                    unsafe { *tile.add(r * ld + c) += id };
+                }
             }
         });
         for r in 0..10 {
-            let expect = if r < 3 {
-                1.0
-            } else if r < 7 {
-                2.0
-            } else {
-                3.0
-            };
-            for c in 0..4 {
-                assert_eq!(data[r * 4 + c], expect, "row {r}");
+            let range_i = if r < 3 { 0 } else if r < 7 { 1 } else { 2 };
+            for c in 0..ld {
+                let expect = if c < cols {
+                    (range_i * 10 + c / 3 + 1) as f64
+                } else {
+                    0.0 // stride padding stays untouched
+                };
+                assert_eq!(data[r * ld + c], expect, "({r},{c})");
             }
         }
     }
 
     #[test]
     #[should_panic(expected = "overlapping")]
-    fn overlapping_panels_rejected() {
+    fn overlapping_tile_ranges_rejected() {
         let mut data = vec![0.0f64; 12];
-        for_disjoint_row_panels(None, &mut data, 3, &[(0, 2), (1, 2)], &|_, _| {});
+        for_disjoint_tiles(None, &mut data, 3, &[(0, 2), (1, 2)], 3, 2, &|_, _, _, _| {});
     }
 
     #[test]

@@ -1,0 +1,165 @@
+//! Contract suite for the packed SIMD GEMM micro-kernel.
+//!
+//! The cache-blocked kernel dispatches at runtime between AVX2+FMA,
+//! NEON and a scalar fallback (`FEDSVD_ISA` override). Two properties
+//! make that dispatch safe to ship under the paper's losslessness
+//! guarantee, and this suite pins both:
+//!
+//! * **ISA-invariance** — every available ISA produces *bit-identical*
+//!   output at the fixed blocking parameters, because all lanes
+//!   (including the scalar fallback, via `f64::mul_add`) use correctly
+//!   rounded FMA over the same per-element accumulation chain. The
+//!   `FEDSVD_ISA=scalar` CI leg relies on this being equality, not
+//!   tolerance.
+//! * **Thread-invariance** — the MC×NC tile grid is a pure function of
+//!   the problem shape, so 1/2/4-lane runs agree bitwise under every
+//!   ISA.
+//!
+//! Shapes deliberately straddle the register tile (MR=4 × NR=8) and the
+//! cache blocks (MC=128, KC=256, NC=512): empty, single-element,
+//! sub-tile tails, and block-boundary ± 1.
+
+use fedsvd::linalg::kernel::{available_isas, Isa, KC, MC, MR, NC, NR};
+use fedsvd::linalg::matmul::matmul_naive;
+use fedsvd::linalg::{gemm_with_isa, Mat};
+use fedsvd::pool::ThreadPool;
+use fedsvd::rng::Xoshiro256;
+use fedsvd::util::{bits_equal, max_abs_diff};
+
+/// (m, k, n) triples: degenerate, single-lane, tails shorter than the
+/// vector width, and shapes crossing each blocking boundary.
+fn ragged_shapes() -> Vec<(usize, usize, usize)> {
+    vec![
+        (0, 3, 4),
+        (3, 4, 0),
+        (4, 0, 5),
+        (1, 1, 1),
+        (1, 9, NR - 1),
+        (MR - 1, 5, 1),
+        (MR + 1, 7, NR + 3),
+        (13, 17, 11),
+        (MC - 1, 19, NR),
+        (MC + 2, KC + 3, 21),
+        (33, 40, NC + 5),
+    ]
+}
+
+/// Build (A, B) so that op(A) is m×k and op(B) is k×n.
+fn operands(
+    m: usize,
+    k: usize,
+    n: usize,
+    trans_a: bool,
+    trans_b: bool,
+    rng: &mut Xoshiro256,
+) -> (Mat, Mat) {
+    let a = if trans_a {
+        Mat::gaussian(k, m, rng)
+    } else {
+        Mat::gaussian(m, k, rng)
+    };
+    let b = if trans_b {
+        Mat::gaussian(n, k, rng)
+    } else {
+        Mat::gaussian(k, n, rng)
+    };
+    (a, b)
+}
+
+#[test]
+fn all_isas_match_naive_on_every_transpose_combo() {
+    let isas = available_isas();
+    assert!(isas.contains(&Isa::Scalar), "scalar fallback always listed");
+    let mut rng = Xoshiro256::seed_from_u64(601);
+    for &(m, k, n) in &ragged_shapes() {
+        for &(ta, tb) in &[(false, false), (true, false), (false, true), (true, true)] {
+            let (a, b) = operands(m, k, n, ta, tb, &mut rng);
+            // plain-orientation oracle via explicit transposition
+            let ao = if ta { a.transpose() } else { a.clone() };
+            let bo = if tb { b.transpose() } else { b.clone() };
+            let oracle = matmul_naive(&ao, &bo).unwrap();
+            for &isa in &isas {
+                let mut c = Mat::zeros(m, n);
+                gemm_with_isa(isa, 1.0, &a, ta, &b, tb, 0.0, &mut c, None).unwrap();
+                assert!(
+                    max_abs_diff(oracle.data(), c.data()) < 1e-9,
+                    "({m},{k},{n}) ta={ta} tb={tb} {} diverges from naive",
+                    isa.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn detected_isa_equals_scalar_bit_for_bit() {
+    // not tolerance: equality. Every lane uses correctly rounded FMA
+    // over the same chain, so the SIMD path and the fallback must agree
+    // on every bit, including α-scaled accumulation into a warm C.
+    let mut rng = Xoshiro256::seed_from_u64(602);
+    for &(m, k, n) in &ragged_shapes() {
+        for &(ta, tb) in &[(false, false), (true, false), (false, true), (true, true)] {
+            let (a, b) = operands(m, k, n, ta, tb, &mut rng);
+            let seed = Mat::gaussian(m, n, &mut rng);
+            for &isa in &available_isas() {
+                if isa == Isa::Scalar {
+                    continue;
+                }
+                let mut c_simd = seed.clone();
+                gemm_with_isa(isa, 1.5, &a, ta, &b, tb, 1.0, &mut c_simd, None).unwrap();
+                let mut c_scalar = seed.clone();
+                gemm_with_isa(Isa::Scalar, 1.5, &a, ta, &b, tb, 1.0, &mut c_scalar, None)
+                    .unwrap();
+                assert!(
+                    bits_equal(c_simd.data(), c_scalar.data()),
+                    "({m},{k},{n}) ta={ta} tb={tb}: {} != scalar bits",
+                    isa.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn every_isa_is_thread_invariant_at_1_2_4_lanes() {
+    let pools = [ThreadPool::new(2), ThreadPool::new(4)];
+    let mut rng = Xoshiro256::seed_from_u64(603);
+    // tall, square-ish and wide (m ≪ n, the LSA orientation the
+    // column-direction parallelism exists for)
+    for &(m, k, n) in &[(300usize, 64usize, 24usize), (130, 100, 130), (24, 64, 1200)] {
+        let a = Mat::gaussian(m, k, &mut rng);
+        let b = Mat::gaussian(k, n, &mut rng);
+        for &isa in &available_isas() {
+            let mut reference = Mat::zeros(m, n);
+            gemm_with_isa(isa, 1.0, &a, false, &b, false, 0.0, &mut reference, None).unwrap();
+            for pool in &pools {
+                let mut c = Mat::zeros(m, n);
+                gemm_with_isa(isa, 1.0, &a, false, &b, false, 0.0, &mut c, Some(pool)).unwrap();
+                assert!(
+                    bits_equal(reference.data(), c.data()),
+                    "({m},{k},{n}) {} threads={} bits differ",
+                    isa.name(),
+                    pool.threads()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn wide_shapes_split_into_column_tiles() {
+    // a 4×4096 product has a single 128-row tile but 8 column tiles:
+    // multi-lane runs must still be bitwise equal to sequential (the
+    // grid is fixed by shape, lanes only pick tiles off it)
+    let mut rng = Xoshiro256::seed_from_u64(604);
+    let a = Mat::gaussian(MR, 96, &mut rng);
+    let b = Mat::gaussian(96, 8 * NC, &mut rng);
+    let pool = ThreadPool::new(4);
+    for &isa in &available_isas() {
+        let mut seq = Mat::zeros(MR, 8 * NC);
+        gemm_with_isa(isa, 1.0, &a, false, &b, false, 0.0, &mut seq, None).unwrap();
+        let mut par = Mat::zeros(MR, 8 * NC);
+        gemm_with_isa(isa, 1.0, &a, false, &b, false, 0.0, &mut par, Some(&pool)).unwrap();
+        assert!(bits_equal(seq.data(), par.data()), "{}", isa.name());
+    }
+}
