@@ -11,6 +11,7 @@ use fedsvd::bench::section;
 use fedsvd::cluster::{run_fedsvd_cluster, run_fedsvd_cluster_tcp, ClusterConfig};
 use fedsvd::data::synthetic_powerlaw;
 use fedsvd::linalg::CpuBackend;
+use fedsvd::metrics::jsonl::JsonRow;
 use fedsvd::net::LinkSpec;
 use fedsvd::protocol::{run_fedsvd, split_columns, FedSvdConfig};
 use fedsvd::util::human_secs;
@@ -103,9 +104,15 @@ fn fig5_transport() {
             let wall = t0.elapsed().as_secs_f64();
             let sim_bytes = out.net.total_bytes();
             println!(
-                "{{\"bench\":\"fig5_transport\",\"transport\":\"{}\",\"shards\":{},\
-                 \"wall_s\":{:.6},\"sim_bytes\":{},\"real_bytes\":{}}}",
-                stats.transport, stats.shards, wall, sim_bytes, stats.real_bytes
+                "{}",
+                JsonRow::new()
+                    .str("bench", "fig5_transport")
+                    .str("transport", &stats.transport)
+                    .u64("shards", stats.shards as u64)
+                    .f64("wall_s", wall, 6)
+                    .u64("sim_bytes", sim_bytes)
+                    .u64("real_bytes", stats.real_bytes)
+                    .finish()
             );
         }
     }

@@ -11,6 +11,7 @@ use fedsvd::bench::section;
 use fedsvd::coordinator::{ExecMode, Session};
 use fedsvd::data::regression_task;
 use fedsvd::linalg::CpuBackend;
+use fedsvd::metrics::jsonl::JsonRow;
 use fedsvd::net::{presets, LinkSpec};
 use fedsvd::paillier;
 use fedsvd::protocol::{split_columns, FedSvdConfig};
@@ -152,11 +153,19 @@ fn fig6_cluster() {
             .map(|s| s.csp_peak_matrix_bytes)
             .unwrap_or(0);
         println!(
-            "{{\"bench\":\"fig6_lr_app\",\"exec\":\"{exec_name}\",\
-             \"shards\":{shards},\"m\":{m},\"n\":{n},\
-             \"wall_s\":{wall_s:.6},\"net_s\":{:.6},\"total_bytes\":{},\
-             \"csp_peak_matrix_bytes\":{peak},\"train_mse\":{:.6e}}}",
-            report.net_s, report.total_bytes, out.train_mse
+            "{}",
+            JsonRow::new()
+                .str("bench", "fig6_lr_app")
+                .str("exec", exec_name)
+                .u64("shards", shards as u64)
+                .u64("m", m as u64)
+                .u64("n", n as u64)
+                .f64("wall_s", wall_s, 6)
+                .f64("net_s", report.net_s, 6)
+                .u64("total_bytes", report.total_bytes)
+                .u64("csp_peak_matrix_bytes", peak)
+                .f64e("train_mse", out.train_mse, 6)
+                .finish()
         );
     };
 

@@ -12,6 +12,7 @@ use fedsvd::linalg::kernel::available_isas;
 use fedsvd::linalg::matmul::matmul_naive;
 use fedsvd::linalg::{gemm_with_isa, matmul, svd, CpuBackend, Isa, Mat};
 use fedsvd::mask::{block_orthogonal, mask_matrix, mask_matrix_with};
+use fedsvd::metrics::jsonl::JsonRow;
 use fedsvd::pool::ThreadPool;
 use fedsvd::rng::Xoshiro256;
 use fedsvd::secagg::SecAggGroup;
@@ -90,14 +91,20 @@ fn main() {
                         isa_1t = s.median_s;
                     }
                     println!(
-                        "{{\"bench\":\"gemm_kernel\",\"shape\":\"{class}\",\"m\":{m},\"k\":{k},\
-                         \"n\":{n},\"isa\":\"{}\",\"threads\":{threads},\"median_s\":{:.6},\
-                         \"min_s\":{:.6},\"speedup_vs_1t\":{:.3},\"speedup_vs_scalar_1t\":{:.3}}}",
-                        isa.name(),
-                        s.median_s,
-                        s.min_s,
-                        isa_1t / s.median_s,
-                        scalar_1t / s.median_s
+                        "{}",
+                        JsonRow::new()
+                            .str("bench", "gemm_kernel")
+                            .str("shape", class)
+                            .u64("m", m as u64)
+                            .u64("k", k as u64)
+                            .u64("n", n as u64)
+                            .str("isa", isa.name())
+                            .u64("threads", threads as u64)
+                            .f64("median_s", s.median_s, 6)
+                            .f64("min_s", s.min_s, 6)
+                            .f64("speedup_vs_1t", isa_1t / s.median_s, 3)
+                            .f64("speedup_vs_scalar_1t", scalar_1t / s.median_s, 3)
+                            .finish()
                     );
                 }
             }
@@ -160,14 +167,70 @@ fn main() {
                 reference = Some(out);
             }
             println!(
-                "{{\"bench\":\"step2_mask_scaling\",\"m\":{m},\"n\":{n},\"block\":{blk},\"users\":2,\
-                 \"threads\":{threads},\"median_s\":{:.6},\"min_s\":{:.6},\
-                 \"speedup_vs_1t\":{:.3},\"bit_identical_vs_1t\":{bit_identical}}}",
-                s.median_s,
-                s.min_s,
-                base_median / s.median_s
+                "{}",
+                JsonRow::new()
+                    .str("bench", "step2_mask_scaling")
+                    .u64("m", m as u64)
+                    .u64("n", n as u64)
+                    .u64("block", blk as u64)
+                    .u64("users", 2)
+                    .u64("threads", threads as u64)
+                    .f64("median_s", s.median_s, 6)
+                    .f64("min_s", s.min_s, 6)
+                    .f64("speedup_vs_1t", base_median / s.median_s, 3)
+                    .bool("bit_identical_vs_1t", bit_identical)
+                    .finish()
             );
         }
+    }
+
+    // ---- Tracing overhead: off vs flight-recorder vs full JSONL -------
+    // One JSON row per mode so the cost of the obs layer is tracked in
+    // the perf trajectory like every other knob. "off" measures the
+    // instrumented-seam cost with no party tracer installed (the state
+    // every bench and sequential run is in), "flight" the always-on
+    // ring-buffer sink, "jsonl" the opt-in per-event file sink.
+    section(
+        "hotpath/obs",
+        "tracing overhead: off vs flight-recorder vs JSONL — JSON rows",
+    );
+    {
+        use fedsvd::obs::{self, Tracer};
+        let spans = 20_000u64;
+        let trace_tmp = std::env::temp_dir().join(format!(
+            "fedsvd-bench-obs-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&trace_tmp);
+        for mode in ["off", "flight", "jsonl"] {
+            let tracer = match mode {
+                "off" => None,
+                "flight" => Some(Tracer::with_sink_dir("bench", 0, None)),
+                _ => Some(Tracer::with_sink_dir("bench", 0, Some(&trace_tmp))),
+            };
+            let guard = tracer.map(obs::set_current);
+            let start = std::time::Instant::now();
+            for _ in 0..spans {
+                obs::with_current(|t| t.span_enter("bench_span", None));
+                obs::with_current(|t| t.span_leave("bench_span", None, None));
+            }
+            let elapsed = start.elapsed().as_secs_f64();
+            drop(guard);
+            let ns_per_span = elapsed / spans as f64 * 1e9;
+            println!("obs {mode}: {ns_per_span:.1} ns/span");
+            println!(
+                "{}",
+                JsonRow::new()
+                    .str("bench", "obs_overhead")
+                    .str("mode", mode)
+                    .u64("spans", spans)
+                    .f64("wall_s", elapsed, 6)
+                    .f64("ns_per_span", ns_per_span, 1)
+                    .finish()
+            );
+        }
+        fedsvd::obs::flight_clear();
+        let _ = std::fs::remove_dir_all(&trace_tmp);
     }
 
     section("hotpath/L3", "secagg mask expansion + aggregate (2 users, 64×512)");

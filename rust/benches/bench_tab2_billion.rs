@@ -12,6 +12,7 @@ use fedsvd::bench::section;
 use fedsvd::coordinator::{ExecMode, Session};
 use fedsvd::data::{movielens_like, regression_task, synthetic_powerlaw};
 use fedsvd::linalg::CpuBackend;
+use fedsvd::metrics::jsonl::JsonRow;
 use fedsvd::metrics::process_peak_rss_bytes;
 use fedsvd::protocol::{split_columns, FedSvdConfig};
 use fedsvd::util::human_secs;
@@ -153,11 +154,17 @@ fn main() {
         };
         let emit = |format: &str, chunk_rows: usize, wall_s: f64, part_peak: u64| {
             println!(
-                "{{\"bench\":\"tab2_data_ingest\",\"m\":{m},\"n\":{n},\
-                 \"format\":\"{format}\",\"chunk_rows\":{chunk_rows},\
-                 \"wall_s\":{wall_s:.6},\"user_peak_rss\":{},\
-                 \"user_peak_part_bytes\":{part_peak}}}",
-                process_peak_rss_bytes()
+                "{}",
+                JsonRow::new()
+                    .str("bench", "tab2_data_ingest")
+                    .u64("m", m as u64)
+                    .u64("n", n as u64)
+                    .str("format", format)
+                    .u64("chunk_rows", chunk_rows as u64)
+                    .f64("wall_s", wall_s, 6)
+                    .u64("user_peak_rss", process_peak_rss_bytes())
+                    .u64("user_peak_part_bytes", part_peak)
+                    .finish()
             );
         };
 
@@ -260,16 +267,20 @@ fn main() {
             assert!(stats.csp_peak_matrix_bytes <= mem_budget);
             std::hint::black_box(&out.s);
             println!(
-                "{{\"bench\":\"tab2_cluster_scaling\",\"m\":{m},\"n\":{n},\
-                 \"shards\":{shards},\"mem_budget\":{mem_budget},\
-                 \"wall_s\":{wall_s:.6},\"net_s\":{:.6},\
-                 \"peak_rss\":{},\"total_bytes\":{},\
-                 \"csp_peak_matrix_bytes\":{},\"shard_spills\":{}}}",
-                report.net_s,
-                process_peak_rss_bytes(),
-                report.total_bytes,
-                stats.csp_peak_matrix_bytes,
-                stats.shard_spills
+                "{}",
+                JsonRow::new()
+                    .str("bench", "tab2_cluster_scaling")
+                    .u64("m", m as u64)
+                    .u64("n", n as u64)
+                    .u64("shards", shards as u64)
+                    .u64("mem_budget", mem_budget)
+                    .f64("wall_s", wall_s, 6)
+                    .f64("net_s", report.net_s, 6)
+                    .u64("peak_rss", process_peak_rss_bytes())
+                    .u64("total_bytes", report.total_bytes)
+                    .u64("csp_peak_matrix_bytes", stats.csp_peak_matrix_bytes)
+                    .u64("shard_spills", stats.shard_spills)
+                    .finish()
             );
         }
     }

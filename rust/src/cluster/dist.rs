@@ -229,10 +229,13 @@ impl Transport for FaultTransport<'_> {
     fn party(&self) -> PartyId {
         self.inner.party()
     }
+    fn session(&self) -> u64 {
+        self.inner.session()
+    }
     fn round_enter(&self, label: u64, senders: usize) -> Result<()> {
         self.inner.round_enter(label, senders)
     }
-    fn send(&self, to: PartyId, msg: ClusterMsg) -> Result<()> {
+    fn send(&self, to: PartyId, msg: ClusterMsg) -> Result<u64> {
         self.inner.send(to, msg)
     }
     fn round_leave(&self, label: u64) -> Result<()> {

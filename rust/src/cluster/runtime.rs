@@ -69,6 +69,7 @@ use crate::mask::{block_orthogonal, mask_matrix_with};
 use crate::metrics::MetricsRecorder;
 use crate::net::link::{PartyId, CSP, TA, USER_BASE};
 use crate::net::NetSim;
+use crate::obs;
 use crate::protocol::fedsvd::{MaskRep, QSliceRep};
 use crate::protocol::{v_recovery, FedSvdConfig, FedSvdOutput, SvdMode};
 use crate::rng::Xoshiro256;
@@ -271,6 +272,29 @@ pub mod labels {
     pub const W_BCAST: u64 = 20_000_004;
     /// LR: non-owner users → label owner, partial predictions `Xᵢ·wᵢ`.
     pub const PRED: u64 = 20_000_005;
+
+    /// Human-readable name of a round label (trace spans, flight-dump
+    /// headers, the merged Chrome timeline). Banded labels render with
+    /// their offset: `UPLOAD+3`, `UBLOCK+17`.
+    pub fn name(label: u64) -> String {
+        match label {
+            PSEED => "PSEED".into(),
+            QSLICE => "QSLICE".into(),
+            PK => "PK".into(),
+            PKLIST => "PKLIST".into(),
+            ATTEST => "ATTEST".into(),
+            SIGMA => "SIGMA".into(),
+            VREQ => "VREQ".into(),
+            VRESP => "VRESP".into(),
+            Y_UPLOAD => "Y_UPLOAD".into(),
+            W_BCAST => "W_BCAST".into(),
+            PRED => "PRED".into(),
+            u64::MAX => "UNLABELLED".into(),
+            l if (UPLOAD_BASE..UBLOCK_BASE).contains(&l) => format!("UPLOAD+{}", l - UPLOAD_BASE),
+            l if (UBLOCK_BASE..SIGMA).contains(&l) => format!("UBLOCK+{}", l - UBLOCK_BASE),
+            l => l.to_string(),
+        }
+    }
 }
 
 fn proto(msg: &str) -> Error {
@@ -294,6 +318,9 @@ fn proto(msg: &str) -> Error {
 pub(crate) struct PartyLink<'a> {
     t: &'a dyn Transport,
     stash: std::cell::RefCell<VecDeque<Msg>>,
+    /// The round this party is currently sending in — stamps trace
+    /// `send` events with the same label the transport ledgers use.
+    cur_round: std::cell::Cell<Option<u64>>,
 }
 
 impl<'a> PartyLink<'a> {
@@ -301,19 +328,36 @@ impl<'a> PartyLink<'a> {
         Self {
             t,
             stash: std::cell::RefCell::new(VecDeque::new()),
+            cur_round: std::cell::Cell::new(None),
         }
     }
 
     fn enter(&self, label: u64, senders: usize) -> Result<()> {
-        self.t.round_enter(label, senders)
+        // Span opens *before* the (possibly blocking) scheduler
+        // rendezvous: a federation stalled entering a round leaves that
+        // round as the last flight-recorder entry — exactly the
+        // post-mortem wanted.
+        obs::with_current(|tr| tr.span_enter(&format!("round:{}", labels::name(label)), Some(label)));
+        self.t.round_enter(label, senders)?;
+        self.cur_round.set(Some(label));
+        Ok(())
     }
 
     fn send(&self, to: PartyId, msg: Msg) -> Result<()> {
-        self.t.send(to, msg)
+        let kind = msg.kind_name();
+        // `bytes` is what the transport *metered* (sim bytes on the
+        // local fabric, real frame bytes on TCP), so per-label trace
+        // totals reconcile exactly with `ClusterStats::round_traffic`.
+        let bytes = self.t.send(to, msg)?;
+        obs::with_current(|tr| tr.send_event(kind, self.cur_round.get(), to, bytes));
+        Ok(())
     }
 
     fn leave(&self, label: u64) -> Result<()> {
-        self.t.round_leave(label)
+        self.cur_round.set(None);
+        self.t.round_leave(label)?;
+        obs::with_current(|tr| tr.span_leave(&format!("round:{}", labels::name(label)), Some(label), None));
+        Ok(())
     }
 
     fn meters(&self) -> (f64, u64) {
@@ -330,6 +374,8 @@ impl<'a> PartyLink<'a> {
         }
         loop {
             let msg = self.t.recv()?;
+            // Traced at arrival (stash hits were already recorded).
+            obs::with_current(|tr| tr.recv_event(msg.kind_name(), self.cur_round.get()));
             if want(&msg) {
                 return Ok(msg);
             }
@@ -338,19 +384,42 @@ impl<'a> PartyLink<'a> {
     }
 }
 
+/// Trace/rendezvous role name of a party id: `ta`, `csp`, `user<i>`.
+pub(crate) fn party_role_name(pid: PartyId) -> String {
+    match pid {
+        TA => "ta".into(),
+        CSP => "csp".into(),
+        p => format!("user{}", p - USER_BASE),
+    }
+}
+
 /// Run `body` over `t` with panic containment; on failure abort the
 /// federation through the transport so peers unblock, on success tear
 /// the endpoint down cleanly.
+///
+/// This is also where a party acquires its observability identity: a
+/// thread-local [`obs::Tracer`] (role from the transport's party id,
+/// session from the transport) scoped to the body, and — on *any*
+/// failure path, abort and panic alike — an automatic flight-recorder
+/// dump to stderr identifying the party and the round it died in.
 pub(crate) fn run_party<T>(
     t: &dyn Transport,
     body: impl FnOnce(&PartyLink<'_>) -> Result<T>,
 ) -> Result<T> {
+    let tracer = obs::Tracer::new(&party_role_name(t.party()), t.session());
+    let _scope = obs::set_current(Arc::clone(&tracer));
+    tracer.span_enter("party", None);
     let link = PartyLink::new(t);
     let r = std::panic::catch_unwind(AssertUnwindSafe(|| body(&link)))
         .unwrap_or_else(|_| Err(Error::Runtime("cluster party panicked".into())));
+    tracer.counter_snapshot();
+    tracer.span_leave("party", None, Some(t.meters().1));
     match &r {
         Ok(_) => t.close(),
-        Err(e) => t.abort(&e.to_string()),
+        Err(e) => {
+            obs::flight_dump_stderr(tracer.party(), &e.to_string());
+            t.abort(&e.to_string());
+        }
     }
     r
 }
@@ -587,7 +656,7 @@ fn run_app_cluster_impl(
     // ---- build one endpoint per party ---------------------------------
     let (endpoints, sched): (Vec<Endpoint>, Option<Arc<RoundScheduler>>) = match fabric {
         Fabric::Local => {
-            let (eps, sched) = LocalTransport::fabric(k, cfg.link);
+            let (eps, sched) = LocalTransport::fabric(k, cfg.link, cfg.seed);
             (eps.into_iter().map(Endpoint::Local).collect(), Some(sched))
         }
         Fabric::TcpLoopback => {

@@ -144,9 +144,12 @@ impl ShardStore {
         };
         let path = self.dir.join(format!("shard{i}.bin"));
         let fm = FileMat::from_mat(&path, &mat, Layout::RowMajor)?;
-        self.resident -= mat_bytes(mat.rows(), mat.cols());
+        let bytes = mat_bytes(mat.rows(), mat.cols());
+        self.resident -= bytes;
         self.slots[i].backing = Backing::Spilled(fm);
         self.spills += 1;
+        crate::obs::counters::shard_spill(bytes);
+        crate::obs::with_current(|t| t.instant("shard_spill", Some(bytes)));
         Ok(true)
     }
 
@@ -209,6 +212,8 @@ impl ShardStore {
             let path = self.dir.join(format!("shard{idx}.bin"));
             let fm = FileMat::from_mat(&path, &shard, Layout::RowMajor)?;
             self.spills += 1;
+            crate::obs::counters::shard_spill(bytes);
+            crate::obs::with_current(|t| t.instant("shard_spill", Some(bytes)));
             Backing::Spilled(fm)
         };
         self.slots.push(Slot {
@@ -267,7 +272,11 @@ impl ShardStore {
                         break;
                     }
                     let r = match fm.read_row_block(local, hi) {
-                        Ok(block) => f(r0 + local, &block),
+                        Ok(block) => {
+                            crate::obs::counters::shard_load(bytes);
+                            crate::obs::with_current(|t| t.instant("shard_load", Some(bytes)));
+                            f(r0 + local, &block)
+                        }
                         Err(e) => Err(e),
                     };
                     self.free(bytes);

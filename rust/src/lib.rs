@@ -84,6 +84,29 @@
 //! (`tests/dataset_suite.rs`, manifest-driven smoke tests in
 //! `tests/distributed_smoke.rs`).
 //!
+//! ## Observability architecture
+//!
+//! The [`obs`] subsystem is a zero-dep cross-cutting tracing layer over
+//! the seams above. `cluster::runtime::run_party` installs a
+//! thread-local [`obs::Tracer`] for every party body (thread- or
+//! process-mode alike), stamping each event with party role, session
+//! id, round label, byte counts and a monotonic per-party sequence
+//! number. Two sinks: a bounded always-on **flight recorder** ring that
+//! is dumped to stderr whenever a party body fails (abort, panic,
+//! transport error) so every distributed failure leaves a post-mortem,
+//! and an opt-in JSONL stream per party (`FEDSVD_TRACE=<dir>`) that
+//! `fedsvd trace merge <dir>` aligns into one Chrome `trace_event`
+//! timeline ([`obs::merge`]). Instrumentation rides the existing seams:
+//! `PartyLink` send/recv + round enter/leave carry the *same bytes the
+//! transport ledgers meter* (sim bytes on `LocalTransport`, real frame
+//! bytes on `TcpTransport` — `Transport::send` returns what it
+//! metered), [`metrics::MetricsRecorder`] phases double as spans,
+//! `ShardStore` spill/load emit instants, and the GEMM micro-kernel and
+//! [`pool`] bump process-global relaxed [`obs::counters`] snapshotted
+//! at phase boundaries — the compute hot path never emits events.
+//! Bench JSON rows and trace lines share one escaping emitter,
+//! [`metrics::jsonl`].
+//!
 //! The §4 applications (PCA / LR / LSA) run through the same seam:
 //! `coordinator::Session::{run_pca, run_lr, run_lsa}` execute on either
 //! mode unchanged. On the cluster they ride `cluster::ClusterApp` — the
@@ -129,5 +152,6 @@ pub mod baselines;
 pub mod attack;
 pub mod data;
 pub mod metrics;
+pub mod obs;
 pub mod config;
 pub mod bench;

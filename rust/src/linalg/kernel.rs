@@ -537,6 +537,9 @@ pub(crate) unsafe fn gemm_packed_ptr(
                 }
             });
         });
+        // Off the FMA path (once per output tile): per-ISA tile/FLOP
+        // tally, surfaced by obs counter snapshots.
+        crate::obs::counters::kernel_tile(isa.name(), 2 * (mc * nc * k) as u64);
     };
     match pool {
         Some(p) if p.threads() > 1 && tasks > 1 => p.parallel_for(tasks, &body),

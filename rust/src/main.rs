@@ -15,6 +15,7 @@
 //!              [--task svd|pca|lr|lsa] [--data MANIFEST [--chunk-rows N]]
 //!              [--listen H:P] [--m M] [--n N]
 //!              [--users K] [--seed N] [--shards S] [--budget-mb MB]
+//! fedsvd trace merge DIR [--out FILE]
 //! fedsvd info
 //! ```
 //!
@@ -635,6 +636,34 @@ fn cmd_info() -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_trace(rest: &[String]) -> Result<(), String> {
+    match rest.first().map(String::as_str) {
+        Some("merge") => {
+            let dir = rest
+                .get(1)
+                .filter(|d| !d.starts_with("--"))
+                .ok_or("trace merge: missing <dir> (the FEDSVD_TRACE directory)")?;
+            let flags = parse_flags(&rest[2..]);
+            let merged = fedsvd::obs::merge::merge_dir(Path::new(dir))
+                .map_err(|e| format!("trace merge: {e}"))?;
+            match flags.get("out") {
+                Some(path) => {
+                    std::fs::write(path, &merged)
+                        .map_err(|e| format!("trace merge: cannot write {path}: {e}"))?;
+                    eprintln!("wrote merged Chrome trace to {path} (open in chrome://tracing or ui.perfetto.dev)");
+                }
+                None => println!("{merged}"),
+            }
+            Ok(())
+        }
+        _ => Err(
+            "usage: fedsvd trace merge <dir> [--out FILE] — merge the per-party \
+             FEDSVD_TRACE JSONL streams into one Chrome trace_event timeline"
+                .into(),
+        ),
+    }
+}
+
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
@@ -647,10 +676,11 @@ fn main() -> ExitCode {
         "attack" => cmd_attack(&flags),
         "split" => cmd_split(&flags),
         "serve" => cmd_serve(&flags),
+        "trace" => cmd_trace(&args[1..]),
         "info" => cmd_info(),
         _ => {
             println!(
-                "usage: fedsvd <svd|pca|lr|lsa|attack|split|serve|info> [--m M] [--n N] [--users K] \
+                "usage: fedsvd <svd|pca|lr|lsa|attack|split|serve|trace|info> [--m M] [--n N] [--users K] \
                  [--block B] [--rank R] [--dataset name] [--scale S] [--config file] \
                  [--shards S [--budget-mb MB]]\n\
                  \n\
@@ -663,7 +693,10 @@ fn main() -> ExitCode {
                  fedsvd serve --role ta|csp|user<i> (--peers-dir DIR | --peers r=H:P,...)\n\
                  \x20       [--task svd|pca|lr|lsa] [--data MANIFEST [--chunk-rows N]]\n\
                  \x20       [--listen H:P] [--m M] [--n N] [--users K]\n\
-                 \x20       [--seed N] [--data-seed N] [--shards S] [--budget-mb MB]"
+                 \x20       [--seed N] [--data-seed N] [--shards S] [--budget-mb MB]\n\
+                 \n\
+                 trace (observability; set FEDSVD_TRACE=<dir> on any run to record):\n\
+                 fedsvd trace merge <dir> [--out FILE]"
             );
             Ok(())
         }

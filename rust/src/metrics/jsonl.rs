@@ -1,0 +1,436 @@
+//! Shared JSONL machinery: an escaping row builder and a minimal parser.
+//!
+//! Every JSON line this crate emits — bench rows, `obs` trace events, the
+//! merged Chrome timeline — goes through [`JsonRow`], so escaping and
+//! number formatting live in exactly one place (hand-rolled `format!`
+//! rows can silently produce invalid JSON the moment a string field grows
+//! a quote or a float goes non-finite). The matching [`Json`] parser is
+//! deliberately tiny — recursive descent over the full JSON grammar — and
+//! exists so `fedsvd trace merge` and the test suites can *read back*
+//! what we emit without any external dependency.
+
+use crate::util::{Error, Result};
+
+/// Escape `s` as the body of a JSON string (no surrounding quotes).
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Builder for one single-line JSON object (a JSONL row).
+///
+/// Field order is insertion order; floats are emitted with an explicit
+/// precision (matching the bench-row conventions) and non-finite values
+/// become `null` — JSON has no NaN/inf.
+#[derive(Debug)]
+pub struct JsonRow {
+    buf: String,
+}
+
+impl Default for JsonRow {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JsonRow {
+    pub fn new() -> Self {
+        JsonRow { buf: String::from("{") }
+    }
+
+    fn key(&mut self, k: &str) {
+        if self.buf.len() > 1 {
+            self.buf.push(',');
+        }
+        self.buf.push('"');
+        self.buf.push_str(&escape(k));
+        self.buf.push_str("\":");
+    }
+
+    pub fn str(mut self, k: &str, v: &str) -> Self {
+        self.key(k);
+        self.buf.push('"');
+        self.buf.push_str(&escape(v));
+        self.buf.push('"');
+        self
+    }
+
+    pub fn u64(mut self, k: &str, v: u64) -> Self {
+        self.key(k);
+        self.buf.push_str(&v.to_string());
+        self
+    }
+
+    pub fn bool(mut self, k: &str, v: bool) -> Self {
+        self.key(k);
+        self.buf.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    /// Fixed-precision float, e.g. `f64("wall_s", 1.5, 6)` → `1.500000`.
+    pub fn f64(mut self, k: &str, v: f64, prec: usize) -> Self {
+        self.key(k);
+        if v.is_finite() {
+            self.buf.push_str(&format!("{v:.prec$}"));
+        } else {
+            self.buf.push_str("null");
+        }
+        self
+    }
+
+    /// Scientific-notation float, e.g. `f64e("mse", 1.5e-9, 6)` → `1.500000e-9`.
+    pub fn f64e(mut self, k: &str, v: f64, prec: usize) -> Self {
+        self.key(k);
+        if v.is_finite() {
+            self.buf.push_str(&format!("{v:.prec$e}"));
+        } else {
+            self.buf.push_str("null");
+        }
+        self
+    }
+
+    /// Pre-rendered JSON value (caller guarantees validity).
+    pub fn raw(mut self, k: &str, json: &str) -> Self {
+        self.key(k);
+        self.buf.push_str(json);
+        self
+    }
+
+    pub fn finish(mut self) -> String {
+        self.buf.push('}');
+        self.buf
+    }
+}
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Parse one complete JSON document (trailing whitespace allowed).
+    pub fn parse(s: &str) -> Result<Json> {
+        let b = s.as_bytes();
+        let mut p = Parser { b, i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != b.len() {
+            return Err(Error::Runtime(format!(
+                "json: trailing garbage at byte {}",
+                p.i
+            )));
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (None for non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            // u64::MAX and friends round-trip through f64 lossily; accept
+            // anything that is a non-negative integer once rounded.
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn err(&self, what: &str) -> Error {
+        Error::Runtime(format!("json: {what} at byte {}", self.i))
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.b.get(self.i) {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(c) if c.is_ascii_digit() || *c == b'-' => self.number(),
+            _ => Err(self.err("expected value")),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(self.err("bad literal"))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        if self.b.get(self.i) == Some(&b'-') {
+            self.i += 1;
+        }
+        while self
+            .b
+            .get(self.i)
+            .is_some_and(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+        {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).expect("ascii slice");
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| self.err("bad number"))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        if self.b.get(self.i) != Some(&b'"') {
+            return Err(self.err("expected string"));
+        }
+        self.i += 1;
+        let mut out = String::new();
+        loop {
+            match self.b.get(self.i) {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.b.get(self.i) {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            let cp = self.hex4()?;
+                            // Surrogate pair handling: a high surrogate must
+                            // be followed by \uXXXX low surrogate.
+                            if (0xD800..0xDC00).contains(&cp) {
+                                if self.b.get(self.i + 1) == Some(&b'\\')
+                                    && self.b.get(self.i + 2) == Some(&b'u')
+                                {
+                                    self.i += 2;
+                                    let lo = self.hex4()?;
+                                    let c = 0x10000
+                                        + ((cp - 0xD800) << 10)
+                                        + (lo.wrapping_sub(0xDC00) & 0x3FF);
+                                    out.push(
+                                        char::from_u32(c).ok_or_else(|| self.err("bad surrogate"))?,
+                                    );
+                                } else {
+                                    return Err(self.err("lone surrogate"));
+                                }
+                            } else {
+                                out.push(
+                                    char::from_u32(cp)
+                                        .ok_or_else(|| self.err("bad \\u escape"))?,
+                                );
+                            }
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                    self.i += 1;
+                }
+                Some(_) => {
+                    // Consume one UTF-8 scalar (input is a &str, so valid).
+                    let rest = std::str::from_utf8(&self.b[self.i..]).expect("valid utf8");
+                    let c = rest.chars().next().expect("non-empty");
+                    out.push(c);
+                    self.i += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    /// Reads the 4 hex digits after `\u` (cursor on the `u`); leaves the
+    /// cursor on the last digit.
+    fn hex4(&mut self) -> Result<u32> {
+        let mut v = 0u32;
+        for k in 1..=4 {
+            let d = self
+                .b
+                .get(self.i + k)
+                .and_then(|c| (*c as char).to_digit(16))
+                .ok_or_else(|| self.err("bad \\u escape"))?;
+            v = v * 16 + d;
+        }
+        self.i += 4;
+        Ok(v)
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.i += 1; // '{'
+        let mut fields = Vec::new();
+        self.ws();
+        if self.b.get(self.i) == Some(&b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            if self.b.get(self.i) != Some(&b':') {
+                return Err(self.err("expected ':'"));
+            }
+            self.i += 1;
+            self.ws();
+            let v = self.value()?;
+            fields.push((k, v));
+            self.ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.i += 1; // '['
+        let mut items = Vec::new();
+        self.ws();
+        if self.b.get(self.i) == Some(&b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.ws();
+            items.push(self.value()?);
+            self.ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_builder_emits_valid_single_line_json() {
+        let row = JsonRow::new()
+            .str("bench", "x\"y\\z\n")
+            .u64("n", 42)
+            .f64("wall_s", 1.5, 6)
+            .f64e("mse", 0.00015, 3)
+            .bool("ok", true)
+            .f64("bad", f64::NAN, 3)
+            .finish();
+        assert!(!row.contains('\n') || row.contains("\\n"));
+        assert!(row.starts_with('{') && row.ends_with('}'));
+        let v = Json::parse(&row).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str().unwrap(), "x\"y\\z\n");
+        assert_eq!(v.get("n").unwrap().as_u64(), Some(42));
+        assert!((v.get("wall_s").unwrap().as_f64().unwrap() - 1.5).abs() < 1e-12);
+        assert!((v.get("mse").unwrap().as_f64().unwrap() - 1.5e-4).abs() < 1e-12);
+        assert_eq!(v.get("ok").unwrap(), &Json::Bool(true));
+        assert_eq!(v.get("bad").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn parser_round_trips_nested_values() {
+        let src = r#"{"a":[1,2.5,-3e2],"b":{"c":null,"d":"A😀"},"e":[]}"#;
+        let v = Json::parse(src).unwrap();
+        let a = v.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(a.len(), 3);
+        assert!((a[2].as_f64().unwrap() + 300.0).abs() < 1e-12);
+        assert_eq!(
+            v.get("b").unwrap().get("d").unwrap().as_str().unwrap(),
+            "A\u{1F600}"
+        );
+        assert_eq!(v.get("e").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn parser_rejects_malformed_documents() {
+        for bad in [
+            "",
+            "{",
+            "{\"a\":}",
+            "[1,]",
+            "{\"a\":1} extra",
+            "\"unterminated",
+            "{\"a\" 1}",
+            "nul",
+        ] {
+            assert!(Json::parse(bad).is_err(), "accepted: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn escape_controls_and_quotes() {
+        assert_eq!(escape("a\"b"), "a\\\"b");
+        assert_eq!(escape("a\u{1}b"), "a\\u0001b");
+        assert_eq!(escape("tab\there"), "tab\\there");
+    }
+}

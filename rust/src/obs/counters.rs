@@ -1,0 +1,148 @@
+//! Process-global hot-path counters.
+//!
+//! The GEMM micro-kernel and the thread pool run on pool threads with no
+//! party context, at rates where per-event tracing would distort the
+//! measurement. They bump these relaxed atomics instead; party tracers
+//! snapshot the totals into `counter` events at phase boundaries
+//! ([`crate::obs::Tracer::counter_snapshot`]), so the trace timeline
+//! carries periodic cumulative readings that diff into per-phase rates.
+//!
+//! Counters are process-wide: in a thread-fabric federation all parties
+//! share them (attribution comes from which party's stream the snapshot
+//! lands in); under `fedsvd serve` each party is a process and the
+//! totals are naturally per-party.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+// Indexed by ISA: 0 = avx2, 1 = neon, 2 = scalar (matches the names
+// `linalg::kernel::Isa::name` reports).
+static KERNEL_TILES: [AtomicU64; 3] =
+    [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+static KERNEL_FLOPS: [AtomicU64; 3] =
+    [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+static POOL_JOBS: AtomicU64 = AtomicU64::new(0);
+static POOL_TASKS: AtomicU64 = AtomicU64::new(0);
+static SHARD_SPILLS: AtomicU64 = AtomicU64::new(0);
+static SHARD_SPILL_BYTES: AtomicU64 = AtomicU64::new(0);
+static SHARD_LOADS: AtomicU64 = AtomicU64::new(0);
+static SHARD_LOAD_BYTES: AtomicU64 = AtomicU64::new(0);
+
+const ISA_NAMES: [&str; 3] = ["avx2", "neon", "scalar"];
+
+fn isa_index(isa: &str) -> usize {
+    match isa {
+        "avx2" => 0,
+        "neon" => 1,
+        _ => 2,
+    }
+}
+
+/// One micro-kernel output tile finished on `isa`, costing `flops`
+/// floating-point operations.
+#[inline]
+pub fn kernel_tile(isa: &str, flops: u64) {
+    let i = isa_index(isa);
+    KERNEL_TILES[i].fetch_add(1, Relaxed);
+    KERNEL_FLOPS[i].fetch_add(flops, Relaxed);
+}
+
+/// One `parallel_for` dispatch of `tasks` tasks.
+#[inline]
+pub fn pool_dispatch(tasks: u64) {
+    POOL_JOBS.fetch_add(1, Relaxed);
+    POOL_TASKS.fetch_add(tasks, Relaxed);
+}
+
+/// One shard spilled to disk.
+#[inline]
+pub fn shard_spill(bytes: u64) {
+    SHARD_SPILLS.fetch_add(1, Relaxed);
+    SHARD_SPILL_BYTES.fetch_add(bytes, Relaxed);
+}
+
+/// One spilled block read back from disk.
+#[inline]
+pub fn shard_load(bytes: u64) {
+    SHARD_LOADS.fetch_add(1, Relaxed);
+    SHARD_LOAD_BYTES.fetch_add(bytes, Relaxed);
+}
+
+/// Cumulative totals of every non-zero counter, as `(key, value)` pairs
+/// ready to ride a `counter` event.
+pub fn snapshot() -> Vec<(&'static str, u64)> {
+    const KERNEL_KEYS: [(&str, &str); 3] = [
+        ("kernel_tiles_avx2", "kernel_flops_avx2"),
+        ("kernel_tiles_neon", "kernel_flops_neon"),
+        ("kernel_tiles_scalar", "kernel_flops_scalar"),
+    ];
+    let mut out = Vec::new();
+    for i in 0..ISA_NAMES.len() {
+        let tiles = KERNEL_TILES[i].load(Relaxed);
+        if tiles > 0 {
+            out.push((KERNEL_KEYS[i].0, tiles));
+            out.push((KERNEL_KEYS[i].1, KERNEL_FLOPS[i].load(Relaxed)));
+        }
+    }
+    for (key, ctr) in [
+        ("pool_jobs", &POOL_JOBS),
+        ("pool_tasks", &POOL_TASKS),
+        ("shard_spills", &SHARD_SPILLS),
+        ("shard_spill_bytes", &SHARD_SPILL_BYTES),
+        ("shard_loads", &SHARD_LOADS),
+        ("shard_load_bytes", &SHARD_LOAD_BYTES),
+    ] {
+        let v = ctr.load(Relaxed);
+        if v > 0 {
+            out.push((key, v));
+        }
+    }
+    out
+}
+
+/// Zero every counter (test/bench isolation; never called on the
+/// protocol path — snapshots are cumulative by design).
+pub fn reset() {
+    for c in KERNEL_TILES.iter().chain(KERNEL_FLOPS.iter()) {
+        c.store(0, Relaxed);
+    }
+    for c in [
+        &POOL_JOBS,
+        &POOL_TASKS,
+        &SHARD_SPILLS,
+        &SHARD_SPILL_BYTES,
+        &SHARD_LOADS,
+        &SHARD_LOAD_BYTES,
+    ] {
+        c.store(0, Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_snapshot_skips_zeros() {
+        let _g = crate::obs::tests::OBS_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        reset();
+        assert!(snapshot().is_empty());
+        kernel_tile("scalar", 1024);
+        kernel_tile("scalar", 1024);
+        pool_dispatch(8);
+        shard_spill(4096);
+        shard_load(4096);
+        let snap = snapshot();
+        let get = |k: &str| snap.iter().find(|(n, _)| *n == k).map(|(_, v)| *v);
+        assert_eq!(get("kernel_tiles_scalar"), Some(2));
+        assert_eq!(get("kernel_flops_scalar"), Some(2048));
+        assert_eq!(get("kernel_tiles_avx2"), None);
+        assert_eq!(get("pool_jobs"), Some(1));
+        assert_eq!(get("pool_tasks"), Some(8));
+        assert_eq!(get("shard_spill_bytes"), Some(4096));
+        assert_eq!(get("shard_loads"), Some(1));
+        reset();
+        assert!(snapshot().is_empty());
+    }
+}

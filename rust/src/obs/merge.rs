@@ -1,0 +1,368 @@
+//! Merge per-party JSONL trace streams into one Chrome trace timeline.
+//!
+//! `fedsvd trace merge <dir>` reads every `*.jsonl` stream a federation
+//! wrote under `FEDSVD_TRACE`, aligns the streams and emits a single
+//! JSON document in the Chrome `trace_event` format (load it at
+//! `chrome://tracing` or <https://ui.perfetto.dev>). Alignment:
+//!
+//! * streams are grouped by **session id**; when a directory holds more
+//!   than one session (parallel federations tracing into one dir) the
+//!   largest session is merged and the rest are reported on stderr —
+//!   nothing is dropped silently;
+//! * within the chosen session each party becomes one named track
+//!   (`tid`), ordered ta, csp, user0, user1, …;
+//! * timestamps are per-process monotonic microseconds, so streams from
+//!   different OS processes (`fedsvd serve`) have unrelated epochs. Each
+//!   party is shifted to start at 0, then refined by anchoring the first
+//!   occurrence of the smallest shared round label to a common instant —
+//!   the protocol's lockstep rounds make that a faithful sync point.
+//!
+//! The output also carries a `roundTraffic` object — per-round-label
+//! byte totals summed from the `send` events — which reconciles exactly
+//! with `ClusterStats::round_traffic` (same metering, same labels; see
+//! `tests/obs_trace_suite.rs`).
+
+use crate::metrics::jsonl::{escape, Json, JsonRow};
+use crate::util::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One parsed trace event (the subset of fields merging needs).
+#[derive(Debug, Clone)]
+struct Ev {
+    party: String,
+    session: u64,
+    seq: u64,
+    ts_us: u64,
+    ev: String,
+    name: String,
+    round: Option<u64>,
+    peer: Option<u64>,
+    bytes: Option<u64>,
+    counters: Vec<(String, u64)>,
+}
+
+const FIXED_KEYS: [&str; 9] = [
+    "party", "session", "seq", "ts_us", "ev", "name", "round", "peer", "bytes",
+];
+
+fn parse_event(line: &str, file: &str, lineno: usize) -> Result<Ev> {
+    let bad = |what: &str| Error::Runtime(format!("{file}:{lineno}: {what}"));
+    let v = Json::parse(line).map_err(|e| bad(&format!("unparseable trace line ({e})")))?;
+    let s = |k: &str| v.get(k).and_then(Json::as_str).map(str::to_string);
+    let u = |k: &str| v.get(k).and_then(Json::as_u64);
+    let counters = match &v {
+        Json::Obj(fields) => fields
+            .iter()
+            .filter(|(k, _)| !FIXED_KEYS.contains(&k.as_str()))
+            .filter_map(|(k, val)| val.as_u64().map(|n| (k.clone(), n)))
+            .collect(),
+        _ => Vec::new(),
+    };
+    Ok(Ev {
+        party: s("party").ok_or_else(|| bad("missing party"))?,
+        session: u("session").ok_or_else(|| bad("missing session"))?,
+        seq: u("seq").ok_or_else(|| bad("missing seq"))?,
+        ts_us: u("ts_us").ok_or_else(|| bad("missing ts_us"))?,
+        ev: s("ev").ok_or_else(|| bad("missing ev"))?,
+        name: s("name").ok_or_else(|| bad("missing name"))?,
+        round: u("round"),
+        peer: u("peer"),
+        bytes: u("bytes"),
+        counters,
+    })
+}
+
+fn read_dir_events(dir: &Path) -> Result<Vec<Ev>> {
+    let mut events = Vec::new();
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| Error::Runtime(format!("trace merge: cannot read {}: {e}", dir.display())))?;
+    let mut files: Vec<_> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "jsonl"))
+        .collect();
+    files.sort();
+    if files.is_empty() {
+        return Err(Error::Runtime(format!(
+            "trace merge: no .jsonl streams in {}",
+            dir.display()
+        )));
+    }
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Runtime(format!("trace merge: {}: {e}", path.display())))?;
+        let fname = path.display().to_string();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            events.push(parse_event(line, &fname, i + 1)?);
+        }
+    }
+    Ok(events)
+}
+
+/// Track order: the coordinator first, then the compute provider, then
+/// users by index; anything unrecognized sorts after, by name.
+fn party_rank(p: &str) -> (u8, u64, String) {
+    match p {
+        "ta" => (0, 0, String::new()),
+        "csp" => (1, 0, String::new()),
+        _ => match p.strip_prefix("user").and_then(|n| n.parse::<u64>().ok()) {
+            Some(i) => (2, i, String::new()),
+            None => (3, 0, p.to_string()),
+        },
+    }
+}
+
+/// Per-round-label byte totals of the `send` events in `dir`, sorted by
+/// label — the trace-side counterpart of `ClusterStats::round_traffic`.
+pub fn send_totals(dir: &Path) -> Result<Vec<(u64, u64)>> {
+    let events = read_dir_events(dir)?;
+    let mut totals: BTreeMap<u64, u64> = BTreeMap::new();
+    for e in events.iter().filter(|e| e.ev == "send") {
+        if let (Some(r), Some(b)) = (e.round, e.bytes) {
+            *totals.entry(r).or_insert(0) += b;
+        }
+    }
+    Ok(totals.into_iter().collect())
+}
+
+/// Merge every per-party stream under `dir` into a Chrome trace JSON
+/// document (returned as a string; notes about skipped sessions go to
+/// stderr).
+pub fn merge_dir(dir: &Path) -> Result<String> {
+    let all = read_dir_events(dir)?;
+
+    // Pick the dominant session; report what that excludes.
+    let mut by_session: BTreeMap<u64, usize> = BTreeMap::new();
+    for e in &all {
+        *by_session.entry(e.session).or_insert(0) += 1;
+    }
+    let (&session, _) = by_session
+        .iter()
+        .max_by_key(|(_, n)| **n)
+        .ok_or_else(|| Error::Runtime("trace merge: no events".into()))?;
+    if by_session.len() > 1 {
+        let skipped: Vec<String> = by_session
+            .iter()
+            .filter(|(s, _)| **s != session)
+            .map(|(s, n)| format!("{s:#x} ({n} events)"))
+            .collect();
+        eprintln!(
+            "trace merge: {} sessions in {}; merging {session:#x}, skipping {}",
+            by_session.len(),
+            dir.display(),
+            skipped.join(", ")
+        );
+    }
+    let mut events: Vec<Ev> = all.into_iter().filter(|e| e.session == session).collect();
+
+    // Party → track id, in canonical order.
+    let mut parties: Vec<String> = events.iter().map(|e| e.party.clone()).collect();
+    parties.sort_by_key(|p| party_rank(p));
+    parties.dedup();
+    let tid = |p: &str| parties.iter().position(|q| q == p).expect("known party") as u64;
+
+    // Alignment: shift each party to start at 0, then anchor the first
+    // occurrence of the smallest round label shared by ≥ 2 parties.
+    let mut t0: BTreeMap<String, u64> = BTreeMap::new();
+    for e in &events {
+        let t = t0.entry(e.party.clone()).or_insert(u64::MAX);
+        *t = (*t).min(e.ts_us);
+    }
+    let mut label_parties: BTreeMap<u64, Vec<String>> = BTreeMap::new();
+    for e in &events {
+        if let Some(r) = e.round {
+            let v = label_parties.entry(r).or_default();
+            if !v.contains(&e.party) {
+                v.push(e.party.clone());
+            }
+        }
+    }
+    let anchor = label_parties
+        .iter()
+        .find(|(_, ps)| ps.len() >= 2)
+        .map(|(l, _)| *l);
+    // Offset from party-local to aligned time, per party.
+    let mut offset: BTreeMap<String, i128> = t0
+        .iter()
+        .map(|(p, t)| (p.clone(), -(*t as i128)))
+        .collect();
+    if let Some(anchor) = anchor {
+        let mut rel: BTreeMap<String, u64> = BTreeMap::new();
+        for e in &events {
+            if e.round == Some(anchor) {
+                let r = rel.entry(e.party.clone()).or_insert(u64::MAX);
+                *r = (*r).min(e.ts_us - t0[&e.party]);
+            }
+        }
+        let latest = rel.values().copied().max().unwrap_or(0);
+        for (p, r) in &rel {
+            // Parties that reached the anchor round earlier started
+            // (relative to their own epoch) later in wall time.
+            *offset.get_mut(p).expect("seen party") += (latest - r) as i128;
+        }
+    }
+    let offset = offset; // frozen
+    let aligned = |e: &Ev| -> u64 { (e.ts_us as i128 + offset[&e.party]).max(0) as u64 };
+    events.sort_by_key(|e| (aligned(e), tid(&e.party), e.seq));
+
+    // Render the trace_event array.
+    let mut rows: Vec<String> = Vec::with_capacity(events.len() + parties.len() + 1);
+    rows.push(
+        JsonRow::new()
+            .str("ph", "M")
+            .str("name", "process_name")
+            .u64("pid", 1)
+            .u64("tid", 0)
+            .raw(
+                "args",
+                &format!("{{\"name\":\"fedsvd session {session:#x}\"}}"),
+            )
+            .finish(),
+    );
+    for p in &parties {
+        rows.push(
+            JsonRow::new()
+                .str("ph", "M")
+                .str("name", "thread_name")
+                .u64("pid", 1)
+                .u64("tid", tid(p))
+                .raw("args", &format!("{{\"name\":\"{}\"}}", escape(p)))
+                .finish(),
+        );
+    }
+    for e in &events {
+        let ts = aligned(e);
+        let t = tid(&e.party);
+        let mut args = JsonRow::new().u64("seq", e.seq);
+        if let Some(r) = e.round {
+            args = args
+                .u64("round", r)
+                .str("round_name", &crate::cluster::labels::name(r));
+        }
+        if let Some(p) = e.peer {
+            args = args.u64("peer", p);
+        }
+        if let Some(b) = e.bytes {
+            args = args.u64("bytes", b);
+        }
+        let row = match e.ev.as_str() {
+            "span_enter" | "span_leave" => JsonRow::new()
+                .str("ph", if e.ev == "span_enter" { "B" } else { "E" })
+                .str("name", &e.name)
+                .u64("pid", 1)
+                .u64("tid", t)
+                .u64("ts", ts)
+                .raw("args", &args.finish()),
+            "counter" => {
+                let mut cargs = JsonRow::new();
+                for (k, v) in &e.counters {
+                    cargs = cargs.u64(k, *v);
+                }
+                JsonRow::new()
+                    .str("ph", "C")
+                    .str("name", &format!("counters:{}", e.party))
+                    .u64("pid", 1)
+                    .u64("tid", t)
+                    .u64("ts", ts)
+                    .raw("args", &cargs.finish())
+            }
+            // send / recv / instant become thread-scoped instants.
+            _ => JsonRow::new()
+                .str("ph", "i")
+                .str("s", "t")
+                .str("name", &format!("{}:{}", e.ev, e.name))
+                .u64("pid", 1)
+                .u64("tid", t)
+                .u64("ts", ts)
+                .raw("args", &args.finish()),
+        };
+        rows.push(row.finish());
+    }
+
+    // Per-round byte totals from the send events of the merged session.
+    let mut totals: BTreeMap<u64, u64> = BTreeMap::new();
+    for e in events.iter().filter(|e| e.ev == "send") {
+        if let (Some(r), Some(b)) = (e.round, e.bytes) {
+            *totals.entry(r).or_insert(0) += b;
+        }
+    }
+    let traffic = {
+        let mut row = JsonRow::new();
+        for (r, b) in &totals {
+            row = row.u64(&r.to_string(), *b);
+        }
+        row.finish()
+    };
+
+    Ok(JsonRow::new()
+        .raw("traceEvents", &format!("[{}]", rows.join(",")))
+        .str("displayTimeUnit", "ms")
+        .u64("session", session)
+        .raw("roundTraffic", &traffic)
+        .finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Tracer;
+
+    #[test]
+    fn merge_builds_a_valid_chrome_timeline_with_round_traffic() {
+        let _g = crate::obs::tests::OBS_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        let dir = std::env::temp_dir().join(format!("fedsvd-obs-merge-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let ta = Tracer::with_sink_dir("ta", 5, Some(&dir));
+            let u0 = Tracer::with_sink_dir("user0", 5, Some(&dir));
+            ta.span_enter("round:PSEED", Some(0));
+            ta.send_event("PSeed", Some(0), 2, 100);
+            ta.span_leave("round:PSEED", Some(0), None);
+            u0.span_enter("round:PSEED", Some(0));
+            u0.recv_event("PSeed", Some(0));
+            u0.span_leave("round:PSEED", Some(0), None);
+            u0.send_event("Batch", Some(1_000), 1, 250);
+            u0.send_event("Batch", Some(1_000), 1, 250);
+        }
+        let merged = merge_dir(&dir).unwrap();
+        let v = Json::parse(&merged).unwrap();
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        // 1 process_name + 2 thread_name + 8 events
+        assert_eq!(evs.len(), 11);
+        assert!(evs
+            .iter()
+            .any(|e| e.get("ph").map(|p| p.as_str()) == Some(Some("B"))));
+        let traffic = v.get("roundTraffic").unwrap();
+        assert_eq!(traffic.get("0").unwrap().as_u64(), Some(100));
+        assert_eq!(traffic.get("1000").unwrap().as_u64(), Some(500));
+        assert_eq!(
+            send_totals(&dir).unwrap(),
+            vec![(0, 100), (1_000, 500)]
+        );
+        // ta track precedes user track.
+        let names: Vec<&str> = evs
+            .iter()
+            .filter(|e| e.get("name").map(|n| n.as_str()) == Some(Some("thread_name")))
+            .filter_map(|e| e.get("args").and_then(|a| a.get("name")).and_then(Json::as_str))
+            .collect();
+        assert_eq!(names, vec!["ta", "user0"]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn merge_rejects_empty_and_malformed_input() {
+        let dir = std::env::temp_dir().join(format!("fedsvd-obs-bad-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(merge_dir(&dir).is_err());
+        std::fs::write(dir.join("x.jsonl"), "{not json\n").unwrap();
+        let err = merge_dir(&dir).unwrap_err().to_string();
+        assert!(err.contains("x.jsonl:1"), "got: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,550 @@
+//! Structured tracing and flight-recorder observability.
+//!
+//! Every party in the federation — whether it runs as a thread in a
+//! local fabric or as its own OS process under `fedsvd serve` — carries
+//! a [`Tracer`]: a per-party event source stamping each event with the
+//! party role, session id, a monotonic per-party sequence number and a
+//! microsecond timestamp from one process-wide epoch. Events flow to two
+//! sinks:
+//!
+//! * the **flight recorder** — a bounded process-global ring buffer that
+//!   is *always on*. When a party body fails (protocol `Abort`, panic,
+//!   transport error, watchdog-induced teardown) the runtime dumps the
+//!   ring to stderr ([`flight_dump_stderr`]), so every distributed
+//!   failure leaves a post-mortem identifying the party and the round it
+//!   died in — even when JSONL tracing was never enabled;
+//! * an opt-in **JSONL writer** — set `FEDSVD_TRACE=<dir>` and each
+//!   party appends one event per line to its own
+//!   `<role>-<session>-<pid>.jsonl` stream (line-buffered and flushed
+//!   per event, so streams survive crashes). `fedsvd trace merge <dir>`
+//!   ([`merge`]) aligns the per-party streams into a single Chrome
+//!   `trace_event` timeline.
+//!
+//! The tracer for the current party is installed thread-locally by
+//! `cluster::runtime::run_party` ([`set_current`] / [`with_current`]);
+//! instrumented seams (transport send/recv, round enter/leave,
+//! `MetricsRecorder` phases, `ShardStore` spill/load) emit through it
+//! and become silent no-ops on threads with no party context. Hot
+//! compute paths (the GEMM micro-kernel, pool dispatch) never emit
+//! events — they bump process-global relaxed atomics ([`counters`])
+//! that are snapshotted into `counter` events at phase boundaries.
+
+pub mod counters;
+pub mod merge;
+
+use crate::metrics::jsonl::JsonRow;
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// What an [`Event`] records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// A span opened (round, phase, party body). Balanced by `SpanLeave`.
+    SpanEnter,
+    /// A span closed; `bytes` may carry the span's net traffic.
+    SpanLeave,
+    /// One message handed to the transport; `bytes` is exactly what the
+    /// transport metered for it (sim bytes on `LocalTransport`, real
+    /// frame bytes on `TcpTransport`), `peer` the destination party.
+    Send,
+    /// One message received from the transport.
+    Recv,
+    /// A point event (shard spill/load, ...).
+    Instant,
+    /// A snapshot of the process-global [`counters`].
+    Counter,
+}
+
+impl Kind {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::SpanEnter => "span_enter",
+            Kind::SpanLeave => "span_leave",
+            Kind::Send => "send",
+            Kind::Recv => "recv",
+            Kind::Instant => "instant",
+            Kind::Counter => "counter",
+        }
+    }
+}
+
+/// One trace event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub party: Arc<str>,
+    pub session: u64,
+    /// Monotonic per-party sequence number (gap-free per tracer).
+    pub seq: u64,
+    /// Microseconds since this process's trace epoch.
+    pub ts_us: u64,
+    pub kind: Kind,
+    pub name: String,
+    /// Round label (`cluster::labels`) when the event is round-scoped.
+    pub round: Option<u64>,
+    /// Destination (send) party id.
+    pub peer: Option<usize>,
+    pub bytes: Option<u64>,
+    /// Counter snapshot payload (only for `Kind::Counter`).
+    pub counters: Vec<(&'static str, u64)>,
+}
+
+impl Event {
+    /// Render as one JSONL line (no trailing newline).
+    pub fn jsonl(&self) -> String {
+        let mut row = JsonRow::new()
+            .str("party", &self.party)
+            .u64("session", self.session)
+            .u64("seq", self.seq)
+            .u64("ts_us", self.ts_us)
+            .str("ev", self.kind.name())
+            .str("name", &self.name);
+        if let Some(r) = self.round {
+            row = row.u64("round", r);
+        }
+        if let Some(p) = self.peer {
+            row = row.u64("peer", p as u64);
+        }
+        if let Some(b) = self.bytes {
+            row = row.u64("bytes", b);
+        }
+        for (k, v) in &self.counters {
+            row = row.u64(k, *v);
+        }
+        row.finish()
+    }
+}
+
+/// The process-wide trace epoch: all `ts_us` stamps in one process share
+/// it, so per-party streams from one process are directly comparable.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process trace epoch.
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+enum DirCfg {
+    /// `FEDSVD_TRACE` not consulted yet.
+    Unresolved,
+    Resolved(Option<PathBuf>),
+}
+
+static TRACE_DIR: Mutex<DirCfg> = Mutex::new(DirCfg::Unresolved);
+
+/// The JSONL trace directory: the programmatic override if set, else
+/// `FEDSVD_TRACE` (read once), else `None` (flight recorder only).
+pub fn trace_dir() -> Option<PathBuf> {
+    let mut g = TRACE_DIR.lock().expect("trace dir lock");
+    if matches!(*g, DirCfg::Unresolved) {
+        let env = std::env::var("FEDSVD_TRACE")
+            .ok()
+            .filter(|s| !s.is_empty())
+            .map(PathBuf::from);
+        *g = DirCfg::Resolved(env);
+    }
+    match &*g {
+        DirCfg::Resolved(v) => v.clone(),
+        DirCfg::Unresolved => unreachable!("resolved above"),
+    }
+}
+
+/// Programmatic override of the trace directory (`None` disables JSONL
+/// output). Tests use this instead of mutating `FEDSVD_TRACE`, which
+/// would race across concurrently-running test threads.
+pub fn set_trace_dir_override(dir: Option<&Path>) {
+    *TRACE_DIR.lock().expect("trace dir lock") = DirCfg::Resolved(dir.map(Path::to_path_buf));
+}
+
+/// Per-party event source. Cheap to clone behind an [`Arc`]; all state
+/// is interior so span/send emission takes `&self`.
+pub struct Tracer {
+    party: Arc<str>,
+    session: u64,
+    seq: AtomicU64,
+    sink: Option<Mutex<std::io::BufWriter<std::fs::File>>>,
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer")
+            .field("party", &self.party)
+            .field("session", &self.session)
+            .field("jsonl", &self.sink.is_some())
+            .finish()
+    }
+}
+
+impl Tracer {
+    /// Tracer for `party` in `session`, with the JSONL sink opened iff a
+    /// trace directory is configured (see [`trace_dir`]).
+    pub fn new(party: &str, session: u64) -> Arc<Tracer> {
+        Self::with_sink_dir(party, session, trace_dir().as_deref())
+    }
+
+    /// Tracer with an explicit sink directory (bypasses [`trace_dir`]);
+    /// `None` means flight-recorder only. Benches use this to measure
+    /// sink cost without touching global config.
+    pub fn with_sink_dir(party: &str, session: u64, dir: Option<&Path>) -> Arc<Tracer> {
+        epoch(); // pin the process epoch no later than first tracer
+        let sink = dir.and_then(|d| Self::open_sink(d, party, session));
+        Arc::new(Tracer {
+            party: Arc::from(party),
+            session,
+            seq: AtomicU64::new(0),
+            sink,
+        })
+    }
+
+    /// One stream per party: role + session + pid keeps streams from
+    /// concurrent federations (parallel tests, repeated runs into one
+    /// dir) from clobbering each other.
+    fn open_sink(
+        dir: &Path,
+        party: &str,
+        session: u64,
+    ) -> Option<Mutex<std::io::BufWriter<std::fs::File>>> {
+        std::fs::create_dir_all(dir).ok()?;
+        let path = dir.join(format!(
+            "{party}-{session:016x}-{pid}.jsonl",
+            pid = std::process::id()
+        ));
+        let f = std::fs::File::create(path).ok()?;
+        Some(Mutex::new(std::io::BufWriter::new(f)))
+    }
+
+    pub fn party(&self) -> &str {
+        &self.party
+    }
+
+    pub fn session(&self) -> u64 {
+        self.session
+    }
+
+    /// Number of events emitted so far.
+    pub fn events_emitted(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    fn emit(
+        &self,
+        kind: Kind,
+        name: &str,
+        round: Option<u64>,
+        peer: Option<usize>,
+        bytes: Option<u64>,
+        counters: Vec<(&'static str, u64)>,
+    ) {
+        let ev = Event {
+            party: self.party.clone(),
+            session: self.session,
+            seq: self.seq.fetch_add(1, Ordering::Relaxed),
+            ts_us: now_us(),
+            kind,
+            name: name.to_string(),
+            round,
+            peer,
+            bytes,
+            counters,
+        };
+        flight_push(&ev);
+        if let Some(sink) = &self.sink {
+            if let Ok(mut w) = sink.lock() {
+                // Flush per line: a crashed party must leave a readable
+                // stream. Trace emission is off the compute hot path.
+                let _ = writeln!(w, "{}", ev.jsonl());
+                let _ = w.flush();
+            }
+        }
+    }
+
+    pub fn span_enter(&self, name: &str, round: Option<u64>) {
+        self.emit(Kind::SpanEnter, name, round, None, None, Vec::new());
+    }
+
+    pub fn span_leave(&self, name: &str, round: Option<u64>, bytes: Option<u64>) {
+        self.emit(Kind::SpanLeave, name, round, None, bytes, Vec::new());
+    }
+
+    /// `name` is the message kind; `bytes` must be exactly what the
+    /// transport metered, so trace totals reconcile with the ledgers.
+    pub fn send_event(&self, msg_kind: &str, round: Option<u64>, to: usize, bytes: u64) {
+        self.emit(Kind::Send, msg_kind, round, Some(to), Some(bytes), Vec::new());
+    }
+
+    pub fn recv_event(&self, msg_kind: &str, round: Option<u64>) {
+        self.emit(Kind::Recv, msg_kind, round, None, None, Vec::new());
+    }
+
+    pub fn instant(&self, name: &str, bytes: Option<u64>) {
+        self.emit(Kind::Instant, name, None, None, bytes, Vec::new());
+    }
+
+    /// Emit the current [`counters`] totals as one `counter` event
+    /// (skipped when every counter is still zero).
+    pub fn counter_snapshot(&self) {
+        let snap = counters::snapshot();
+        if !snap.is_empty() {
+            self.emit(Kind::Counter, "counters", None, None, None, snap);
+        }
+    }
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<Arc<Tracer>>> = const { RefCell::new(None) };
+}
+
+/// Restores the previously-installed tracer on drop.
+#[must_use = "dropping the guard immediately uninstalls the tracer"]
+pub struct ScopeGuard {
+    prev: Option<Arc<Tracer>>,
+}
+
+impl Drop for ScopeGuard {
+    fn drop(&mut self) {
+        CURRENT.with(|c| *c.borrow_mut() = self.prev.take());
+    }
+}
+
+/// Install `tracer` as this thread's party context until the returned
+/// guard drops.
+pub fn set_current(tracer: Arc<Tracer>) -> ScopeGuard {
+    let prev = CURRENT.with(|c| c.borrow_mut().replace(tracer));
+    ScopeGuard { prev }
+}
+
+/// Run `f` against this thread's tracer; a silent no-op on threads
+/// without party context — instrumented library code stays usable (and
+/// quiet) outside the federation.
+pub fn with_current(f: impl FnOnce(&Tracer)) {
+    CURRENT.with(|c| {
+        if let Some(t) = c.borrow().as_ref() {
+            f(t);
+        }
+    });
+}
+
+/// This thread's tracer, if a party context is installed.
+pub fn current() -> Option<Arc<Tracer>> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+/// Flight-recorder capacity (events). Old events are evicted FIFO.
+pub const FLIGHT_CAPACITY: usize = 4096;
+
+static FLIGHT: Mutex<VecDeque<Event>> = Mutex::new(VecDeque::new());
+
+fn flight_push(ev: &Event) {
+    if let Ok(mut ring) = FLIGHT.lock() {
+        if ring.len() >= FLIGHT_CAPACITY {
+            ring.pop_front();
+        }
+        ring.push_back(ev.clone());
+    }
+}
+
+/// Copy of the current ring contents, oldest first.
+pub fn flight_snapshot() -> Vec<Event> {
+    FLIGHT
+        .lock()
+        .map(|r| r.iter().cloned().collect())
+        .unwrap_or_default()
+}
+
+/// Drop all recorded events (test isolation).
+pub fn flight_clear() {
+    if let Ok(mut r) = FLIGHT.lock() {
+        r.clear();
+    }
+}
+
+/// Render a post-mortem for `party`: a header identifying the party,
+/// failure reason and the last round it touched, followed by the
+/// party's recent events as JSONL.
+pub fn flight_dump(party: &str, reason: &str) -> String {
+    let events: Vec<Event> = flight_snapshot()
+        .into_iter()
+        .filter(|e| &*e.party == party)
+        .collect();
+    let last_round = events.iter().rev().find_map(|e| e.round);
+    let mut out = format!(
+        "=== FLIGHT-RECORDER DUMP party={party} reason={reason:?} last_round={} events={} ===\n",
+        match last_round {
+            Some(l) => crate::cluster::labels::name(l),
+            None => "none".to_string(),
+        },
+        events.len()
+    );
+    for ev in &events {
+        out.push_str(&ev.jsonl());
+        out.push('\n');
+    }
+    out.push_str(&format!("=== FLIGHT-RECORDER END party={party} ==="));
+    out
+}
+
+/// Dump the flight recorder for `party` to stderr (the abort/panic
+/// path of `cluster::runtime::run_party`).
+pub fn flight_dump_stderr(party: &str, reason: &str) {
+    eprintln!("{}", flight_dump(party, reason));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::jsonl::Json;
+
+    /// Obs tests mutate process-global state (flight ring, trace-dir
+    /// override) — serialize them.
+    pub(crate) static OBS_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        OBS_TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn events_round_trip_through_jsonl() {
+        let _g = lock();
+        let t = Tracer::with_sink_dir("ta", 7, None);
+        t.span_enter("round:PK", Some(2));
+        t.send_event("Pk", Some(2), 1, 48);
+        let ev = Event {
+            party: Arc::from("ta"),
+            session: 7,
+            seq: 9,
+            ts_us: 123,
+            kind: Kind::Counter,
+            name: "counters".into(),
+            round: None,
+            peer: None,
+            bytes: None,
+            counters: vec![("pool_jobs", 3)],
+        };
+        let v = Json::parse(&ev.jsonl()).unwrap();
+        assert_eq!(v.get("party").unwrap().as_str(), Some("ta"));
+        assert_eq!(v.get("ev").unwrap().as_str(), Some("counter"));
+        assert_eq!(v.get("pool_jobs").unwrap().as_u64(), Some(3));
+    }
+
+    #[test]
+    fn flight_ring_is_bounded_and_dump_identifies_party_and_round() {
+        let _g = lock();
+        flight_clear();
+        let t = Tracer::with_sink_dir("user0", 1, None);
+        for i in 0..(FLIGHT_CAPACITY + 100) {
+            t.span_enter(&format!("s{i}"), None);
+        }
+        assert_eq!(flight_snapshot().len(), FLIGHT_CAPACITY);
+        t.send_event("Batch", Some(1_000), 1, 64);
+        let dump = flight_dump("user0", "injected fault");
+        assert!(dump.contains("party=user0"));
+        assert!(dump.contains("injected fault"));
+        assert!(dump.contains("last_round=UPLOAD+0"));
+        // Other parties' events are filtered out of the dump.
+        let other = Tracer::with_sink_dir("csp", 1, None);
+        other.span_enter("x", Some(2));
+        assert!(!flight_dump("user0", "r").contains("\"party\":\"csp\""));
+        flight_clear();
+    }
+
+    #[test]
+    fn sequence_numbers_are_monotonic_and_gap_free() {
+        let _g = lock();
+        flight_clear();
+        let t = Tracer::with_sink_dir("csp", 3, None);
+        for _ in 0..10 {
+            t.instant("tick", None);
+        }
+        let seqs: Vec<u64> = flight_snapshot()
+            .iter()
+            .filter(|e| &*e.party == "csp")
+            .map(|e| e.seq)
+            .collect();
+        assert_eq!(seqs, (0..10).collect::<Vec<u64>>());
+        flight_clear();
+    }
+
+    #[test]
+    fn jsonl_sink_writes_one_stream_per_party() {
+        let _g = lock();
+        flight_clear();
+        let dir = std::env::temp_dir().join(format!("fedsvd-obs-sink-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let t = Tracer::with_sink_dir("ta", 0xabc, Some(&dir));
+        t.span_enter("party", None);
+        t.span_leave("party", None, Some(12));
+        let files: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+        assert_eq!(files.len(), 1);
+        let content =
+            std::fs::read_to_string(files[0].as_ref().unwrap().path()).unwrap();
+        let lines: Vec<&str> = content.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for l in &lines {
+            Json::parse(l).unwrap();
+        }
+        assert!(lines[1].contains("\"bytes\":12"));
+        let _ = std::fs::remove_dir_all(&dir);
+        flight_clear();
+    }
+
+    #[test]
+    fn with_current_is_a_noop_without_party_context() {
+        // No lock needed: touches only this thread's slot.
+        assert!(current().is_none());
+        let t = Tracer::with_sink_dir("ta", 0, None);
+        {
+            let _g = set_current(t);
+            assert_eq!(current().map(|tr| tr.party().to_string()), Some("ta".into()));
+        }
+        assert!(current().is_none());
+    }
+
+    /// Tier-1 guard: with tracing off (no thread-local tracer installed)
+    /// an instrumented seam costs one thread-local read — effectively
+    /// free. The bound is deliberately loose (CI noise), but a
+    /// regression that makes the off path allocate or lock will blow
+    /// through it.
+    #[test]
+    fn tracing_off_overhead_negligible() {
+        let n = 200_000u32;
+        let start = Instant::now();
+        for _ in 0..n {
+            with_current(|t| {
+                t.instant("never-reached", None);
+            });
+        }
+        let per_call = start.elapsed().as_secs_f64() / n as f64;
+        assert!(
+            per_call < 2e-6,
+            "tracing-off seam cost {per_call:.2e}s/call — should be ~ns"
+        );
+    }
+
+    /// Flight-recorder-only emission (the always-on mode) stays cheap:
+    /// one clone + mutex push per event, no I/O.
+    #[test]
+    fn flight_only_overhead_stays_small() {
+        let _g = lock();
+        flight_clear();
+        let t = Tracer::with_sink_dir("bench", 0, None);
+        let n = 20_000u32;
+        let start = Instant::now();
+        for _ in 0..n {
+            t.span_enter("s", None);
+            t.span_leave("s", None, None);
+        }
+        let per_span = start.elapsed().as_secs_f64() / n as f64;
+        flight_clear();
+        assert!(
+            per_span < 1e-4,
+            "flight-only span cost {per_span:.2e}s — should be ~100ns"
+        );
+    }
+}

@@ -99,6 +99,7 @@ impl ThreadPool {
         if n_tasks == 0 {
             return;
         }
+        crate::obs::counters::pool_dispatch(n_tasks as u64);
         if self.threads <= 1 || n_tasks == 1 {
             for i in 0..n_tasks {
                 f(i);

@@ -21,6 +21,7 @@ use super::Transport;
 /// One party's endpoint of the in-process fabric.
 pub struct LocalTransport {
     party: PartyId,
+    session: u64,
     sched: Arc<RoundScheduler>,
     /// Every party's inbox, indexed by `PartyId` (TA 0, CSP 1, users 2+).
     boxes: Arc<Vec<Mailbox<ClusterMsg>>>,
@@ -30,13 +31,19 @@ impl LocalTransport {
     /// Build the full in-process fabric for `k` users: one endpoint per
     /// party in `PartyId` order (TA, CSP, user 0..k), all sharing one
     /// round scheduler whose meters/ledger survive the endpoints.
-    pub fn fabric(k: usize, link: LinkSpec) -> (Vec<LocalTransport>, Arc<RoundScheduler>) {
+    /// `session` stamps this federation's trace events.
+    pub fn fabric(
+        k: usize,
+        link: LinkSpec,
+        session: u64,
+    ) -> (Vec<LocalTransport>, Arc<RoundScheduler>) {
         let sched = Arc::new(RoundScheduler::new(link));
         let boxes: Arc<Vec<Mailbox<ClusterMsg>>> =
             Arc::new((0..k + 2).map(|_| Mailbox::new()).collect());
         let endpoints = (0..k + 2)
             .map(|party| LocalTransport {
                 party,
+                session,
                 sched: Arc::clone(&sched),
                 boxes: Arc::clone(&boxes),
             })
@@ -50,21 +57,27 @@ impl Transport for LocalTransport {
         self.party
     }
 
+    fn session(&self) -> u64 {
+        self.session
+    }
+
     fn round_enter(&self, label: u64, senders: usize) -> Result<()> {
         self.sched.enter(label, senders)
     }
 
-    fn send(&self, to: PartyId, msg: ClusterMsg) -> Result<()> {
+    fn send(&self, to: PartyId, msg: ClusterMsg) -> Result<u64> {
         let inbox = self
             .boxes
             .get(to)
             .ok_or_else(|| Error::Runtime(format!("local transport: no party {to}")))?;
-        self.sched.send(self.party, to, msg.sim_wire_bytes());
+        let bytes = msg.sim_wire_bytes();
+        self.sched.send(self.party, to, bytes);
         // a closed peer inbox means that party aborted — surface it now
         // instead of letting a later round hang on the missing reply
         inbox
             .post(msg)
-            .map_err(|_| Error::Runtime(format!("peer party {to} aborted (inbox closed)")))
+            .map_err(|_| Error::Runtime(format!("peer party {to} aborted (inbox closed)")))?;
+        Ok(bytes)
     }
 
     fn round_leave(&self, label: u64) -> Result<()> {
@@ -100,7 +113,7 @@ mod tests {
 
     #[test]
     fn send_meters_sim_bytes_and_delivers() {
-        let (eps, sched) = LocalTransport::fabric(2, LinkSpec::default());
+        let (eps, sched) = LocalTransport::fabric(2, LinkSpec::default(), 0);
         let user0 = &eps[USER_BASE];
         let csp = &eps[CSP];
         user0.round_enter(7, 1).unwrap();
@@ -117,7 +130,7 @@ mod tests {
 
     #[test]
     fn abort_closes_every_inbox_and_post_errors() {
-        let (eps, _sched) = LocalTransport::fabric(2, LinkSpec::default());
+        let (eps, _sched) = LocalTransport::fabric(2, LinkSpec::default(), 0);
         eps[USER_BASE].abort("test failure");
         assert!(eps[CSP].recv().is_err());
         assert!(eps[CSP]

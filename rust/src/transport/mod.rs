@@ -53,6 +53,13 @@ pub trait Transport: Send {
     /// This endpoint's party id ([`crate::net::link`] numbering).
     fn party(&self) -> PartyId;
 
+    /// The federation session id this endpoint belongs to (stamped on
+    /// trace events; the TCP handshake already carries it). Simulated
+    /// fabrics thread the config seed through.
+    fn session(&self) -> u64 {
+        0
+    }
+
     /// Join round `label` as one of `senders` concurrent sending
     /// parties. Simulated transports rendezvous here (concurrent
     /// uploads share one metered round); real transports only record
@@ -60,7 +67,12 @@ pub trait Transport: Send {
     fn round_enter(&self, label: u64, senders: usize) -> Result<()>;
 
     /// Send one message to `to`, metered under the open round's label.
-    fn send(&self, to: PartyId, msg: ClusterMsg) -> Result<()>;
+    /// Returns the bytes this transport *metered* for the message — the
+    /// same figure its traffic ledger records (simulated wire bytes on
+    /// [`local::LocalTransport`], real frame bytes on
+    /// [`tcp::TcpTransport`]) — so callers can attribute traffic (trace
+    /// `send` events) without re-deriving transport-specific sizes.
+    fn send(&self, to: PartyId, msg: ClusterMsg) -> Result<u64>;
 
     /// Declare this party done sending in round `label`.
     fn round_leave(&self, label: u64) -> Result<()>;

@@ -296,7 +296,7 @@ impl TcpTransport {
 
     /// Write one frame to `to` (opening the connection on first use),
     /// recording real bytes under `label`.
-    fn write_to(&self, to: PartyId, msg: &ClusterMsg, label: u64) -> Result<()> {
+    fn write_to(&self, to: PartyId, msg: &ClusterMsg, label: u64) -> Result<u64> {
         let mut conns = self.conns.lock().expect("conns poisoned");
         if let std::collections::hash_map::Entry::Vacant(e) = conns.entry(to) {
             e.insert(self.connect_peer(to, self.connect_timeout)?);
@@ -305,7 +305,7 @@ impl TcpTransport {
         match wire::write_frame(stream, msg, label) {
             Ok(bytes) => {
                 Shared::add(&self.shared.sent, label, bytes);
-                Ok(())
+                Ok(bytes)
             }
             Err(e) => {
                 // a broken pipe here means the peer died mid-protocol
@@ -350,7 +350,11 @@ impl Transport for TcpTransport {
         Ok(())
     }
 
-    fn send(&self, to: PartyId, msg: ClusterMsg) -> Result<()> {
+    fn session(&self) -> u64 {
+        self.shared.session
+    }
+
+    fn send(&self, to: PartyId, msg: ClusterMsg) -> Result<u64> {
         if self.shared.shutdown.load(Ordering::SeqCst) {
             return Err(Error::Runtime("tcp transport: endpoint is shut down".into()));
         }

@@ -522,5 +522,21 @@ fn injected_abort_fails_every_party_fast_with_no_zombies() {
             );
         }
     }
+    // the aborting party leaves a flight-recorder post-mortem on stderr
+    // identifying itself, the failure reason and the round it died in —
+    // with no FEDSVD_TRACE configured (the ring is always on)
+    let user1_stderr = &outs.iter().find(|(r, ..)| r == "user1").expect("user1 output").3;
+    assert!(
+        user1_stderr.contains("FLIGHT-RECORDER DUMP party=user1"),
+        "user1 stderr lacks the flight-recorder dump:\n{user1_stderr}"
+    );
+    assert!(
+        user1_stderr.contains("injected fault after round 2"),
+        "flight dump does not carry the failure reason:\n{user1_stderr}"
+    );
+    assert!(
+        user1_stderr.contains("last_round=PK"),
+        "flight dump does not identify the round the party died in:\n{user1_stderr}"
+    );
     let _ = std::fs::remove_dir_all(&dir);
 }

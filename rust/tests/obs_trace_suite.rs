@@ -1,0 +1,242 @@
+//! End-to-end observability suite (the PR-7 acceptance bar).
+//!
+//! A real federation run with tracing enabled must leave per-party JSONL
+//! streams whose spans nest and balance, whose sequence numbers are
+//! gap-free, and whose per-round-label `send` byte totals reconcile
+//! *exactly* with `ClusterStats::round_traffic` — on both the simulated
+//! local fabric and real loopback TCP sockets. `fedsvd trace merge`
+//! over those streams must produce a valid Chrome `trace_event`
+//! document carrying the same per-round byte totals.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use fedsvd::cluster::{run_fedsvd_cluster, run_fedsvd_cluster_tcp, ClusterConfig, ClusterStats};
+use fedsvd::linalg::{CpuBackend, Mat};
+use fedsvd::metrics::jsonl::Json;
+use fedsvd::obs;
+use fedsvd::protocol::FedSvdConfig;
+use fedsvd::rng::Xoshiro256;
+
+/// These tests flip the process-global trace-dir override and read the
+/// flight recorder — serialize them within this test binary.
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Installs a fresh trace directory override; restores "no tracing" and
+/// clears the flight ring on drop (panic included), so one failing test
+/// cannot leak tracing into the next.
+struct TraceDirGuard {
+    dir: PathBuf,
+}
+
+impl TraceDirGuard {
+    fn new(tag: &str) -> TraceDirGuard {
+        let dir = std::env::temp_dir().join(format!(
+            "fedsvd_obs_suite_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).expect("trace dir");
+        obs::set_trace_dir_override(Some(&dir));
+        TraceDirGuard { dir }
+    }
+}
+
+impl Drop for TraceDirGuard {
+    fn drop(&mut self) {
+        obs::set_trace_dir_override(None);
+        obs::flight_clear();
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+fn loopback_available() -> bool {
+    std::net::TcpListener::bind("127.0.0.1:0").is_ok()
+}
+
+fn test_parts(m: usize, widths: &[usize], seed: u64) -> Vec<Mat> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    widths.iter().map(|&w| Mat::gaussian(m, w, &mut rng)).collect()
+}
+
+fn cfg() -> FedSvdConfig {
+    FedSvdConfig {
+        block_size: 4,
+        secagg_batch_rows: 16,
+        ..Default::default()
+    }
+}
+
+fn ccfg() -> ClusterConfig {
+    ClusterConfig {
+        shards: 2,
+        mem_budget: 8 << 20,
+        spill_root: None,
+    }
+}
+
+/// One party's parsed stream: (ev, name, seq) per line, in file order.
+fn read_stream(path: &std::path::Path) -> Vec<(String, String, u64)> {
+    let text = std::fs::read_to_string(path).expect("read stream");
+    text.lines()
+        .map(|l| {
+            let v = Json::parse(l).unwrap_or_else(|e| panic!("bad trace line {l:?}: {e}"));
+            (
+                v.get("ev").and_then(Json::as_str).expect("ev").to_string(),
+                v.get("name").and_then(Json::as_str).expect("name").to_string(),
+                v.get("seq").and_then(Json::as_u64).expect("seq"),
+            )
+        })
+        .collect()
+}
+
+fn ledger_without_unlabelled(stats: &ClusterStats) -> Vec<(u64, u64)> {
+    stats
+        .round_traffic
+        .iter()
+        .copied()
+        .filter(|(l, _)| *l != u64::MAX)
+        .collect()
+}
+
+#[test]
+fn spans_balance_and_seqs_are_gap_free_per_party() {
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let guard = TraceDirGuard::new("spans");
+    let parts = test_parts(24, &[5, 4], 11);
+    run_fedsvd_cluster(&parts, &cfg(), &ccfg(), CpuBackend::global()).unwrap();
+
+    let mut files: Vec<PathBuf> = std::fs::read_dir(&guard.dir)
+        .unwrap()
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "jsonl"))
+        .collect();
+    files.sort();
+    // one stream per party: ta, csp, user0, user1
+    assert_eq!(files.len(), 4, "streams: {files:?}");
+
+    for path in &files {
+        let events = read_stream(path);
+        let fname = path.display();
+        assert!(!events.is_empty(), "{fname}: empty stream");
+
+        // the party span brackets the whole stream
+        let (first_ev, first_name, _) = &events[0];
+        assert_eq!((first_ev.as_str(), first_name.as_str()), ("span_enter", "party"), "{fname}");
+        let (last_ev, last_name, _) = &events[events.len() - 1];
+        assert_eq!((last_ev.as_str(), last_name.as_str()), ("span_leave", "party"), "{fname}");
+
+        // per-name enters balance leaves, and depth never goes negative
+        let mut depth: BTreeMap<&str, i64> = BTreeMap::new();
+        for (ev, name, _) in &events {
+            match ev.as_str() {
+                "span_enter" => *depth.entry(name).or_insert(0) += 1,
+                "span_leave" => {
+                    let d = depth.entry(name).or_insert(0);
+                    *d -= 1;
+                    assert!(*d >= 0, "{fname}: span {name} left more than entered");
+                }
+                _ => {}
+            }
+        }
+        for (name, d) in &depth {
+            assert_eq!(*d, 0, "{fname}: span {name} unbalanced ({d})");
+        }
+
+        // every emitted event reached the sink, in order, gap-free
+        let seqs: Vec<u64> = events.iter().map(|(_, _, s)| *s).collect();
+        assert_eq!(
+            seqs,
+            (0..events.len() as u64).collect::<Vec<u64>>(),
+            "{fname}: seq gaps"
+        );
+    }
+}
+
+#[test]
+fn trace_send_totals_match_cluster_ledger_on_both_fabrics() {
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let parts = test_parts(24, &[5, 4], 13);
+
+    // local fabric: simulated payload bytes
+    {
+        let guard = TraceDirGuard::new("totals_local");
+        let (_, stats) =
+            run_fedsvd_cluster(&parts, &cfg(), &ccfg(), CpuBackend::global()).unwrap();
+        assert_eq!(stats.transport, "local-sim");
+        let totals = obs::merge::send_totals(&guard.dir).unwrap();
+        assert!(!totals.is_empty());
+        assert_eq!(totals, ledger_without_unlabelled(&stats), "local-sim ledger mismatch");
+    }
+
+    // loopback TCP: real frame bytes (handshake/control frames ledger
+    // under UNLABELLED and are excluded on both sides)
+    if !loopback_available() {
+        eprintln!("skipping TCP leg: loopback unavailable in this sandbox");
+        return;
+    }
+    {
+        let guard = TraceDirGuard::new("totals_tcp");
+        let (_, stats) =
+            run_fedsvd_cluster_tcp(&parts, &cfg(), &ccfg(), CpuBackend::global()).unwrap();
+        assert_eq!(stats.transport, "tcp-loopback");
+        assert!(stats.real_bytes > 0);
+        let totals = obs::merge::send_totals(&guard.dir).unwrap();
+        assert!(!totals.is_empty());
+        assert_eq!(totals, ledger_without_unlabelled(&stats), "tcp ledger mismatch");
+    }
+}
+
+#[test]
+fn merged_timeline_is_valid_chrome_json_and_reconciles_with_ledger() {
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let guard = TraceDirGuard::new("merge");
+    let parts = test_parts(24, &[5, 4], 17);
+    let config = cfg();
+    let (_, stats) = run_fedsvd_cluster(&parts, &config, &ccfg(), CpuBackend::global()).unwrap();
+
+    let merged = obs::merge::merge_dir(&guard.dir).unwrap();
+    let v = Json::parse(&merged).expect("merged timeline must be valid JSON");
+    assert_eq!(v.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+    // the local fabric stamps the protocol seed as the session id
+    assert_eq!(v.get("session").and_then(Json::as_u64), Some(config.seed));
+
+    let evs = v.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+    assert!(evs.len() > 10, "timeline suspiciously small: {}", evs.len());
+    // every party has a named track, in canonical order
+    let tracks: Vec<&str> = evs
+        .iter()
+        .filter(|e| e.get("name").and_then(Json::as_str) == Some("thread_name"))
+        .filter_map(|e| e.get("args").and_then(|a| a.get("name")).and_then(Json::as_str))
+        .collect();
+    assert_eq!(tracks, vec!["ta", "csp", "user0", "user1"]);
+    // spans survive the merge as begin/end pairs
+    let begins = evs
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("B"))
+        .count();
+    let ends = evs
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("E"))
+        .count();
+    assert!(begins > 0);
+    assert_eq!(begins, ends, "merged timeline has unbalanced spans");
+
+    // the merged document's per-round byte totals ARE the cluster ledger
+    let traffic = v.get("roundTraffic").expect("roundTraffic");
+    let expected = ledger_without_unlabelled(&stats);
+    assert!(!expected.is_empty());
+    for (label, bytes) in &expected {
+        assert_eq!(
+            traffic.get(&label.to_string()).and_then(Json::as_u64),
+            Some(*bytes),
+            "roundTraffic[{label}] mismatch"
+        );
+    }
+    if let Json::Obj(fields) = traffic {
+        assert_eq!(fields.len(), expected.len(), "roundTraffic has extra labels");
+    } else {
+        panic!("roundTraffic is not an object");
+    }
+}
