@@ -122,6 +122,17 @@ pub struct DistConfig {
     /// (drives the injected-abort path of the multi-process smoke test;
     /// see [`parse_fault_point`]).
     pub fault_after_label: Option<u64>,
+    /// Chaos instrumentation: sever the established socket to the CSP
+    /// (at the socket level, under the transport) right after leaving
+    /// this round label — the network "silently dies" mid-protocol and
+    /// the transport must reconnect + replay (see
+    /// [`TcpTransport::sever_conn`]). Shares [`parse_fault_point`]
+    /// naming with `fault_after_label`.
+    pub drop_after_label: Option<u64>,
+    /// Override `FEDSVD_RECONNECT_RETRIES` for this party (`Some(0)`
+    /// makes the first dead socket definitive — the retries-exhausted
+    /// abort path).
+    pub reconnect_retries: Option<u32>,
 }
 
 impl DistConfig {
@@ -136,6 +147,8 @@ impl DistConfig {
             spill_root: None,
             rendezvous_timeout: Duration::from_secs(30),
             fault_after_label: None,
+            drop_after_label: None,
+            reconnect_retries: None,
         }
     }
 }
@@ -176,6 +189,12 @@ pub struct DistOutcome {
     /// rows resident at once (bytes) — bounded by a chunk, never the
     /// partition. 0 on the demo path (partition fully in memory).
     pub part_peak_bytes: u64,
+    /// Mid-protocol reconnects this endpoint performed (0 on a healthy
+    /// network).
+    pub reconnects: u64,
+    /// Bytes re-sent from replay buffers after reconnects — metered
+    /// separately from `round_traffic`, never double-counted there.
+    pub replayed_bytes: u64,
 }
 
 /// Where this process's party data comes from.
@@ -244,6 +263,59 @@ impl Transport for FaultTransport<'_> {
             return Err(Error::Runtime(format!(
                 "injected fault after round {label}"
             )));
+        }
+        Ok(())
+    }
+    fn recv(&self) -> Result<ClusterMsg> {
+        self.inner.recv()
+    }
+    fn meters(&self) -> (f64, u64) {
+        self.inner.meters()
+    }
+    fn abort(&self, reason: &str) {
+        self.inner.abort(reason)
+    }
+    fn close(&self) {
+        self.inner.close()
+    }
+}
+
+/// Transport decorator that severs the established socket to the CSP
+/// right after this party leaves round `trip` — chaos injection for the
+/// reconnect path. Unlike [`FaultTransport`] the party body keeps
+/// running: the *next* send to the CSP finds a dead socket and must
+/// reconnect, resume-handshake and replay without the protocol
+/// noticing. Fires at most once.
+struct SeverTransport<'a> {
+    inner: &'a TcpTransport,
+    trip: u64,
+    fired: std::sync::atomic::AtomicBool,
+}
+
+impl Transport for SeverTransport<'_> {
+    fn party(&self) -> PartyId {
+        self.inner.party()
+    }
+    fn session(&self) -> u64 {
+        self.inner.session()
+    }
+    fn round_enter(&self, label: u64, senders: usize) -> Result<()> {
+        self.inner.round_enter(label, senders)
+    }
+    fn send(&self, to: PartyId, msg: ClusterMsg) -> Result<u64> {
+        self.inner.send(to, msg)
+    }
+    fn round_leave(&self, label: u64) -> Result<()> {
+        self.inner.round_leave(label)?;
+        if label == self.trip
+            && !self
+                .fired
+                .swap(true, std::sync::atomic::Ordering::SeqCst)
+        {
+            let severed = self.inner.sever_conn(CSP);
+            eprintln!(
+                "chaos: severed socket to csp after round {label} (was established: {severed})"
+            );
         }
         Ok(())
     }
@@ -403,17 +475,29 @@ pub fn run_party_distributed_with(
         dcfg.rendezvous_timeout,
     )?;
     transport.set_peers(peers)?;
+    if let Some(n) = dcfg.reconnect_retries {
+        transport.set_reconnect_retries(n);
+    }
 
     let fault;
-    let link: &dyn Transport = match dcfg.fault_after_label {
-        Some(trip) => {
+    let sever;
+    let link: &dyn Transport = match (dcfg.fault_after_label, dcfg.drop_after_label) {
+        (Some(trip), _) => {
             fault = FaultTransport {
                 inner: &transport,
                 trip,
             };
             &fault
         }
-        None => &transport,
+        (None, Some(trip)) => {
+            sever = SeverTransport {
+                inner: &transport,
+                trip,
+                fired: std::sync::atomic::AtomicBool::new(false),
+            };
+            &sever
+        }
+        (None, None) => &transport,
     };
 
     let mut out = DistOutcome {
@@ -433,6 +517,8 @@ pub fn run_party_distributed_with(
         real_bytes: 0,
         shards: n_batches,
         part_peak_bytes: 0,
+        reconnects: 0,
+        replayed_bytes: 0,
     };
     match dcfg.role {
         PartyRole::Ta => {
@@ -498,5 +584,7 @@ pub fn run_party_distributed_with(
     }
     out.round_traffic = transport.seen_ledger();
     out.real_bytes = transport.total_bytes();
+    out.reconnects = transport.reconnects();
+    out.replayed_bytes = transport.replayed_bytes();
     Ok(out)
 }

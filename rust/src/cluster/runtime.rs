@@ -315,6 +315,11 @@ fn proto(msg: &str) -> Error {
 /// races — e.g. a fast user's shard upload arriving at the CSP before a
 /// slow user's DH key, or an LR partial prediction reaching the label
 /// owner ahead of the CSP's Σ broadcast.
+///
+/// Socket loss never reaches this layer: `TcpTransport` sequences,
+/// replays and deduplicates frames across reconnects (wire v3), so the
+/// stash only ever holds each message once and party bodies are written
+/// as if the network were reliable.
 pub(crate) struct PartyLink<'a> {
     t: &'a dyn Transport,
     stash: std::cell::RefCell<VecDeque<Msg>>,

@@ -443,6 +443,8 @@ fn print_dist_outcome(out: &fedsvd::cluster::DistOutcome) {
             .join(" ")
     );
     println!("RESULT bytes {}", out.real_bytes);
+    println!("RESULT reconnects {}", out.reconnects);
+    println!("RESULT replayed_bytes {}", out.replayed_bytes);
     println!("DONE {}", out.role.name());
 }
 
@@ -555,26 +557,52 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
         if data_spec.is_some() { ", manifest data" } else { "" }
     );
 
-    // injected mid-protocol failure (abort-path testing; svd task only)
-    if let Some(point) = flags.get("inject-abort") {
-        if task != "svd" {
-            return Err("serve: --inject-abort is only wired for --task svd".into());
+    // injected mid-protocol chaos (fault-path testing, demo data only):
+    // --inject-abort fails the party after a round; --inject-drop severs
+    // its socket to the CSP after a round (the transport must reconnect
+    // and replay); --reconnect-retries caps the recovery attempts
+    // (0 = the first dead socket aborts the federation).
+    let inject_abort = flags.get("inject-abort");
+    let inject_drop = flags.get("inject-drop");
+    let reconnect_retries = match flags.get("reconnect-retries") {
+        Some(v) => Some(v.parse::<u32>().map_err(|_| {
+            format!("serve: bad --reconnect-retries `{v}` (want a count)")
+        })?),
+        None => None,
+    };
+    if inject_abort.is_some() || inject_drop.is_some() || reconnect_retries.is_some() {
+        if !matches!(task, "svd" | "lr") {
+            return Err("serve: fault injection is only wired for --task svd|lr".into());
         }
         if data_spec.is_some() {
-            return Err("serve: --inject-abort is only wired for the demo data path".into());
+            return Err("serve: fault injection is only wired for the demo data path".into());
         }
-        let label = fedsvd::cluster::parse_fault_point(point).map_err(|e| e.to_string())?;
         let mut dcfg = DistConfig::new(role, listen, peers);
         dcfg.session = cfg.seed;
         dcfg.shards = shards;
         dcfg.mem_budget = mem_budget;
-        dcfg.fault_after_label = Some(label);
+        dcfg.reconnect_retries = reconnect_retries;
+        if let Some(point) = inject_abort {
+            dcfg.fault_after_label =
+                Some(fedsvd::cluster::parse_fault_point(point).map_err(|e| e.to_string())?);
+        }
+        if let Some(point) = inject_drop {
+            dcfg.drop_after_label =
+                Some(fedsvd::cluster::parse_fault_point(point).map_err(|e| e.to_string())?);
+        }
+        let app = match task {
+            "lr" => ClusterApp::Lr {
+                y: &y,
+                label_owner: 0,
+            },
+            _ => ClusterApp::None,
+        };
         let out = fedsvd::cluster::run_party_distributed(
             &parts,
             &cfg,
             &dcfg,
             fedsvd::linalg::CpuBackend::global(),
-            &ClusterApp::None,
+            &app,
         )
         .map_err(|e| e.to_string())?;
         print_dist_outcome(&out);

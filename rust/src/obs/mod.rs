@@ -32,6 +32,17 @@
 pub mod counters;
 pub mod merge;
 
+/// Instant-event name the TCP transport emits when it successfully
+/// reconnects to a peer after a mid-protocol socket loss. Flight
+/// recorder and JSONL streams both carry it, so every recovery is
+/// named in the post-mortem and the merged timeline.
+pub const EV_RECONNECT: &str = "reconnect";
+/// Instant-event name carrying (as `bytes`) how many already-ledgered
+/// bytes a reconnect replayed from the outbound buffer. Replayed bytes
+/// are metered separately from the round-traffic ledgers — this event
+/// is the trace-side view of that separate meter.
+pub const EV_REPLAYED_BYTES: &str = "replayed_bytes";
+
 use crate::metrics::jsonl::JsonRow;
 use std::cell::RefCell;
 use std::collections::VecDeque;

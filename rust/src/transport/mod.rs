@@ -19,7 +19,15 @@
 //! * [`tcp::TcpTransport`] — real sockets on `std::net` (zero new
 //!   dependencies): per-peer framed streams, a handshake carrying
 //!   session id + party id + protocol version, and a traffic ledger of
-//!   **real** on-the-wire bytes per round label.
+//!   **real** on-the-wire bytes per round label. Since wire v3 the
+//!   transport *survives mid-protocol socket loss*: frames are
+//!   sequenced per peer and retained in replay buffers until the
+//!   receiver's round acknowledgement retires them; every handshake is
+//!   a potential resume (the ack reports the receiver's last-delivered
+//!   sequence), so a reconnect replays exactly the unacked suffix and
+//!   the receiver's dedup drops anything it already delivered — party
+//!   bodies never observe the drop. Half-open sockets surface as peer
+//!   loss via an idle deadline kept honest by heartbeat frames.
 //!
 //! The party loops in [`crate::cluster::runtime`] are written against
 //! the trait only, so the same choreography runs as threads

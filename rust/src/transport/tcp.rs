@@ -1,40 +1,64 @@
 //! Real-socket transport on `std::net` (zero new dependencies).
 //!
 //! Each party binds one listener and keeps one lazily-opened outgoing
-//! stream per peer it sends to. A connection starts with a 32-byte
-//! handshake (magic + codec version + session id + sender/target party
-//! ids) answered by an 8-byte ack, then carries [`wire`] frames one
-//! after another. Per-connection TCP ordering is exactly the FIFO the
-//! protocol needs between any two parties; cross-peer interleaving is
-//! handled by the runtime's hold-back queue.
+//! stream per peer it sends to. A connection starts with a 40-byte
+//! handshake (magic + codec version + flags + session id +
+//! sender/target party ids + the sender's highest assigned sequence
+//! number) answered by a 16-byte ack that carries the receiver's
+//! last-delivered sequence for that sender, then carries [`wire`]
+//! frames one after another. Per-connection TCP ordering is exactly the
+//! FIFO the protocol needs between any two parties; cross-peer
+//! interleaving is handled by the runtime's hold-back queue.
+//!
+//! **Resume after a dropped socket.** Every protocol frame a party
+//! sends is numbered per peer (`seq` = 1, 2, 3, …) and retained in a
+//! per-peer replay buffer until the receiver acknowledges it. The
+//! receiver pushes tiny acknowledgement records back on the *reverse*
+//! direction of the same socket at round-label boundaries; the sender
+//! drains them non-blockingly and retires acknowledged frames. When a
+//! write hits a dead socket the sender reconnects with capped retries
+//! (`FEDSVD_RECONNECT_RETRIES`, reusing the connect/backoff machinery),
+//! and because every handshake ack reports the receiver's
+//! last-delivered sequence, the sender replays exactly the
+//! unacknowledged suffix. The receiver discards any frame whose `seq`
+//! it has already delivered, so party bodies in [`crate::cluster`]
+//! never observe a duplicate — a severed connection is invisible above
+//! the transport. Control frames (`Abort`/`Shutdown`/`Heartbeat`) carry
+//! `seq = 0` and are never buffered, replayed or deduplicated.
 //!
 //! Accounting is **real bytes**: every frame (header included) and
 //! handshake is added to the endpoint's ledger — sent bytes under the
 //! round label open at `send` time, received bytes under the label
-//! carried in the frame header, handshakes under the
-//! [`crate::cluster::round::UNLABELLED`] sentinel. Merging the *sent*
-//! ledgers of all endpoints therefore counts each wire byte exactly
-//! once; one endpoint's [`TcpTransport::seen_ledger`] counts everything
-//! that crossed its own NIC.
+//! carried in the frame header, handshakes/heartbeats/acks under the
+//! [`crate::cluster::round::UNLABELLED`] sentinel. *Replayed* frames
+//! and *discarded duplicate* frames are metered separately
+//! ([`TcpTransport::replayed_bytes`]) and never added to the round
+//! ledgers, so merging the *sent* ledgers of all endpoints still counts
+//! each protocol byte exactly once even across reconnects.
 //!
 //! Failure model: a party that errors calls [`Transport::abort`], which
 //! pushes an `Abort` control frame to every reachable peer before
 //! tearing down — peers' `recv`s then error with the originator's
 //! reason instead of hanging. A clean [`Transport::close`] sends
 //! `Shutdown` frames so readers can tell a finished peer from a crashed
-//! one: end-of-stream *without* a preceding `Shutdown` is treated as a
-//! lost peer and aborts the local party too.
+//! one. End-of-stream *without* a preceding `Shutdown` is recoverable
+//! socket death: the reader grants the sender's reconnect a bounded
+//! grace window to supersede the connection and only then declares the
+//! peer lost. A peer that goes completely silent (half-open socket, no
+//! frames and no heartbeats) is declared lost after
+//! `FEDSVD_IDLE_TIMEOUT_S` instead of blocking forever.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::cluster::mailbox::Mailbox;
 use crate::cluster::round::UNLABELLED;
 use crate::net::link::PartyId;
+use crate::obs;
 use crate::util::{Error, Result};
 
 use super::wire::{self, ClusterMsg, WIRE_VERSION};
@@ -42,14 +66,24 @@ use super::Transport;
 
 /// First 4 bytes of a connection handshake (distinct from frame magic).
 const HELLO_MAGIC: u32 = 0xFED5_4E10;
-/// magic u32 + version u16 + pad u16 + session u64 + from u64 + to u64.
-const HELLO_LEN: usize = 32;
-const ACK_LEN: usize = 8;
+/// magic u32 + version u16 + flags u16 + session u64 + from u64 +
+/// to u64 + sent_seq u64.
+const HELLO_LEN: usize = 40;
+/// magic u32 + version u16 + status u16 + delivered u64.
+const ACK_LEN: usize = 16;
+/// Hello flag bit 0: the sender has prior outbound state for this peer
+/// (informational — every handshake is a potential resume).
+const HELLO_FLAG_RESUME: u16 = 1;
 /// Handshake ack status codes.
 const ACK_OK: u16 = 0;
 const ACK_BAD_VERSION: u16 = 2;
 const ACK_BAD_SESSION: u16 = 3;
 const ACK_BAD_TARGET: u16 = 4;
+/// First 4 bytes of a reverse-channel round-acknowledgement record
+/// (distinct from both the frame and hello magics).
+const ACK_RECORD_MAGIC: u32 = 0xFED5_AC4E;
+/// magic u32 + pad u32 + delivered-seq u64.
+const ACK_RECORD_LEN: usize = 16;
 
 fn default_secs(env: &str, default: u64) -> Duration {
     let s = std::env::var(env)
@@ -59,36 +93,176 @@ fn default_secs(env: &str, default: u64) -> Duration {
     Duration::from_secs(s.max(1))
 }
 
-/// State shared with the acceptor/reader threads.
+/// Poison-recovering lock: a panic in one reader thread must degrade to
+/// that single peer failing (and the flight recorder dumping), not
+/// cascade `PoisonError` panics through every thread that shares the
+/// ledgers. All shared maps here stay internally consistent under
+/// panic because each critical section completes its updates or none.
+fn lock_ok<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One frame retained for replay until the receiver acknowledges it.
+struct SentFrame {
+    seq: u64,
+    label: u64,
+    bytes: Vec<u8>,
+    /// Whether this frame's bytes have been added to the sent ledger
+    /// (first successful write). Replays of ledgered frames count
+    /// toward the separate `replayed_bytes` meter instead — a frame is
+    /// never double-counted no matter how many times it crosses a wire.
+    ledgered: bool,
+}
+
+/// Per-peer outbound sequencing + replay state.
+struct Outbound {
+    /// Next sequence number to assign (sequences start at 1; 0 marks
+    /// unsequenced control frames).
+    next_seq: u64,
+    /// Unacknowledged frames, oldest first.
+    buf: VecDeque<SentFrame>,
+}
+
+impl Outbound {
+    fn new() -> Outbound {
+        Outbound { next_seq: 1, buf: VecDeque::new() }
+    }
+}
+
+/// One established outgoing connection.
+struct Conn {
+    stream: TcpStream,
+    /// Partial reverse-channel ack bytes drained off this socket.
+    ack_buf: Vec<u8>,
+    /// Set once the ack channel mis-frames: stop trusting it (the
+    /// replay buffer then only retires on resume handshakes — a memory
+    /// bound lost, never correctness).
+    acks_dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn { stream, ack_buf: Vec::new(), acks_dead: false }
+    }
+}
+
+/// State shared with the acceptor/reader/heartbeat threads.
 struct Shared {
     party: PartyId,
     session: u64,
     inbox: Mailbox<ClusterMsg>,
+    /// Established outgoing connections, one per peer.
+    conns: Mutex<HashMap<PartyId, Conn>>,
+    /// Per-peer outbound sequencing and replay buffers.
+    outbound: Mutex<HashMap<PartyId, Outbound>>,
+    /// Highest sequence number delivered per *sending* peer — the
+    /// receiver-side dedup state a resume handshake reports back.
+    delivered: Mutex<HashMap<PartyId, u64>>,
     /// label → real bytes this endpoint wrote (frames + handshakes).
     sent: Mutex<HashMap<u64, u64>>,
     /// label → real bytes this endpoint read off its socket.
     recvd: Mutex<HashMap<u64, u64>>,
     /// First abort reason seen (local failure or peer `Abort` frame).
     abort_reason: Mutex<Option<String>>,
-    /// Completed inbound handshakes per party: lets a reader that saw a
-    /// zero-frame EOF tell a client's handshake retry (a newer
-    /// connection supersedes this one) from a peer that died right
-    /// after connecting.
+    /// Completed inbound handshakes per party: lets a reader that saw
+    /// an EOF tell a peer's reconnect (a newer connection supersedes
+    /// this one) from a peer that died for good.
     handshakes: Mutex<HashMap<PartyId, u64>>,
+    /// Idle read deadline in ms (atomic so tests can shrink it live).
+    idle_timeout_ms: AtomicU64,
+    /// Reconnect attempts before a dead socket becomes a lost peer.
+    reconnect_retries: AtomicU32,
+    /// How long a mid-protocol EOF waits for a superseding reconnect.
+    reconnect_grace: Duration,
+    /// Successful mid-protocol reconnects (outgoing side).
+    reconnects: AtomicU64,
+    /// Bytes re-sent from replay buffers (already in the sent ledger).
+    replayed_bytes: AtomicU64,
+    /// Bytes received and discarded as already-delivered duplicates.
+    replay_recvd_bytes: AtomicU64,
     shutdown: AtomicBool,
 }
 
 impl Shared {
     fn add(map: &Mutex<HashMap<u64, u64>>, label: u64, bytes: u64) {
-        *map.lock().expect("ledger poisoned").entry(label).or_insert(0) += bytes;
+        *lock_ok(map).entry(label).or_insert(0) += bytes;
     }
 
     fn fail(&self, reason: String) {
-        self.abort_reason
-            .lock()
-            .expect("abort poisoned")
-            .get_or_insert(reason);
+        lock_ok(&self.abort_reason).get_or_insert(reason);
         self.inbox.close();
+    }
+
+    fn idle_timeout(&self) -> Duration {
+        Duration::from_millis(self.idle_timeout_ms.load(Ordering::Relaxed).max(100))
+    }
+
+    /// Drop every buffered frame the receiver has acknowledged.
+    fn retire_through(&self, to: PartyId, seq: u64) {
+        let mut ob = lock_ok(&self.outbound);
+        if let Some(o) = ob.get_mut(&to) {
+            while o.buf.front().is_some_and(|f| f.seq <= seq) {
+                o.buf.pop_front();
+            }
+        }
+    }
+
+    /// Non-blockingly read any round-acknowledgement records the peer
+    /// pushed back on this connection's reverse direction and retire
+    /// the replay buffer up to the highest acknowledged sequence. Best
+    /// effort: acks only bound replay-buffer memory, never correctness
+    /// (a resume handshake retires independently).
+    fn drain_acks(&self, to: PartyId, conn: &mut Conn) {
+        if conn.acks_dead || conn.stream.set_nonblocking(true).is_err() {
+            conn.acks_dead = true;
+            return;
+        }
+        let mut tmp = [0u8; 256];
+        loop {
+            match conn.stream.read(&mut tmp) {
+                Ok(0) => break, // EOF: the write path will notice
+                Ok(n) => {
+                    conn.ack_buf.extend_from_slice(&tmp[..n]);
+                    Shared::add(&self.recvd, UNLABELLED, n as u64);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
+        }
+        let _ = conn.stream.set_nonblocking(false);
+        let mut acked: Option<u64> = None;
+        while conn.ack_buf.len() >= ACK_RECORD_LEN {
+            let rec: Vec<u8> = conn.ack_buf.drain(..ACK_RECORD_LEN).collect();
+            let magic = u32::from_le_bytes(rec[0..4].try_into().expect("len 4"));
+            if magic != ACK_RECORD_MAGIC {
+                conn.acks_dead = true;
+                conn.ack_buf.clear();
+                break;
+            }
+            let seq = u64::from_le_bytes(rec[8..16].try_into().expect("len 8"));
+            acked = Some(acked.map_or(seq, |a| a.max(seq)));
+        }
+        if let Some(seq) = acked {
+            self.retire_through(to, seq);
+        }
+    }
+
+    /// Ledger `seq`'s bytes under its round label exactly once (first
+    /// successful write).
+    fn mark_ledgered(&self, to: PartyId, seq: u64, label: u64, n: u64) {
+        let mut ob = lock_ok(&self.outbound);
+        match ob
+            .get_mut(&to)
+            .and_then(|o| o.buf.iter_mut().find(|f| f.seq == seq))
+        {
+            Some(f) if f.ledgered => {}
+            Some(f) => {
+                f.ledgered = true;
+                Shared::add(&self.sent, label, n);
+            }
+            // already retired by a racing ack: it reached the wire
+            None => Shared::add(&self.sent, label, n),
+        }
     }
 }
 
@@ -111,7 +285,6 @@ pub struct TcpTransport {
     party: PartyId,
     local_addr: SocketAddr,
     peers: OnceLock<HashMap<PartyId, String>>,
-    conns: Mutex<HashMap<PartyId, TcpStream>>,
     open_label: Mutex<Option<u64>>,
     shared: Arc<Shared>,
     connect_timeout: Duration,
@@ -125,22 +298,42 @@ impl TcpTransport {
     /// for *outgoing* connections, and in rendezvous deployments they
     /// are not known until every party has bound.
     ///
-    /// Timeouts: `FEDSVD_CONNECT_TIMEOUT_S` bounds how long `send`
-    /// retries an unreachable peer (default 20 s — peers may still be
-    /// binding), `FEDSVD_HANDSHAKE_TIMEOUT_S` bounds each handshake
-    /// read (default 10 s) so a wedged peer fails fast instead of
-    /// hanging the federation.
+    /// Timeouts and retry knobs: `FEDSVD_CONNECT_TIMEOUT_S` bounds how
+    /// long `send` retries an unreachable peer (default 20 s — peers
+    /// may still be binding), `FEDSVD_HANDSHAKE_TIMEOUT_S` bounds each
+    /// handshake read (default 10 s), `FEDSVD_IDLE_TIMEOUT_S` is the
+    /// steady-state read/write deadline after which a silent peer is
+    /// declared lost (default 300 s; heartbeats flow at a quarter of
+    /// it, so only a genuinely dead peer trips it), and
+    /// `FEDSVD_RECONNECT_RETRIES` caps mid-protocol reconnect attempts
+    /// (default 5, `0` = fail on the first dead write).
     pub fn bind(listen: &str, party: PartyId, session: u64) -> Result<TcpTransport> {
         let listener = TcpListener::bind(listen)?;
         let local_addr = listener.local_addr()?;
+        let connect_timeout = default_secs("FEDSVD_CONNECT_TIMEOUT_S", 20);
+        let reconnect_retries = std::env::var("FEDSVD_RECONNECT_RETRIES")
+            .ok()
+            .and_then(|v| v.parse::<u32>().ok())
+            .unwrap_or(5);
         let shared = Arc::new(Shared {
             party,
             session,
             inbox: Mailbox::new(),
+            conns: Mutex::new(HashMap::new()),
+            outbound: Mutex::new(HashMap::new()),
+            delivered: Mutex::new(HashMap::new()),
             sent: Mutex::new(HashMap::new()),
             recvd: Mutex::new(HashMap::new()),
             abort_reason: Mutex::new(None),
             handshakes: Mutex::new(HashMap::new()),
+            idle_timeout_ms: AtomicU64::new(
+                default_secs("FEDSVD_IDLE_TIMEOUT_S", 300).as_millis() as u64,
+            ),
+            reconnect_retries: AtomicU32::new(reconnect_retries),
+            reconnect_grace: connect_timeout,
+            reconnects: AtomicU64::new(0),
+            replayed_bytes: AtomicU64::new(0),
+            replay_recvd_bytes: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
         });
         let handshake_timeout = default_secs("FEDSVD_HANDSHAKE_TIMEOUT_S", 10);
@@ -151,14 +344,20 @@ impl TcpTransport {
                 .spawn(move || accept_loop(listener, shared, handshake_timeout))
                 .map_err(|e| Error::Runtime(format!("spawn accept thread: {e}")))?;
         }
+        {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("fedsvd-heartbeat-{party}"))
+                .spawn(move || heartbeat_loop(shared))
+                .map_err(|e| Error::Runtime(format!("spawn heartbeat thread: {e}")))?;
+        }
         Ok(TcpTransport {
             party,
             local_addr,
             peers: OnceLock::new(),
-            conns: Mutex::new(HashMap::new()),
             open_label: Mutex::new(None),
             shared,
-            connect_timeout: default_secs("FEDSVD_CONNECT_TIMEOUT_S", 20),
+            connect_timeout,
             handshake_timeout,
         })
     }
@@ -178,9 +377,9 @@ impl TcpTransport {
 
     /// Real bytes this endpoint *wrote*, per round label (sorted).
     /// Summing this ledger across all endpoints counts each wire byte
-    /// exactly once.
+    /// exactly once (replays are metered separately, never here).
     pub fn sent_ledger(&self) -> Vec<(u64, u64)> {
-        let m = self.shared.sent.lock().expect("ledger poisoned");
+        let m = lock_ok(&self.shared.sent);
         let mut v: Vec<(u64, u64)> = m.iter().map(|(&l, &b)| (l, b)).collect();
         v.sort_unstable();
         v
@@ -190,13 +389,8 @@ impl TcpTransport {
     /// round label (sorted) — the single-party view `fedsvd serve`
     /// reports as its `ClusterStats::round_traffic`.
     pub fn seen_ledger(&self) -> Vec<(u64, u64)> {
-        let mut merged: HashMap<u64, u64> = self
-            .shared
-            .sent
-            .lock()
-            .expect("ledger poisoned")
-            .clone();
-        for (&l, &b) in self.shared.recvd.lock().expect("ledger poisoned").iter() {
+        let mut merged: HashMap<u64, u64> = lock_ok(&self.shared.sent).clone();
+        for (&l, &b) in lock_ok(&self.shared.recvd).iter() {
             *merged.entry(l).or_insert(0) += b;
         }
         let mut v: Vec<(u64, u64)> = merged.into_iter().collect();
@@ -207,6 +401,52 @@ impl TcpTransport {
     /// Total real bytes seen by this endpoint (sent + received).
     pub fn total_bytes(&self) -> u64 {
         self.seen_ledger().iter().map(|&(_, b)| b).sum()
+    }
+
+    /// Successful mid-protocol reconnects this endpoint performed.
+    pub fn reconnects(&self) -> u64 {
+        self.shared.reconnects.load(Ordering::Relaxed)
+    }
+
+    /// Bytes re-sent from replay buffers after reconnects. Ledgered
+    /// separately from `sent_ledger` — never double-counted there.
+    pub fn replayed_bytes(&self) -> u64 {
+        self.shared.replayed_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Bytes received and discarded as already-delivered duplicates.
+    pub fn replayed_recv_bytes(&self) -> u64 {
+        self.shared.replay_recvd_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Override `FEDSVD_RECONNECT_RETRIES` for this endpoint.
+    pub fn set_reconnect_retries(&self, n: u32) {
+        self.shared.reconnect_retries.store(n, Ordering::Relaxed);
+    }
+
+    /// Override `FEDSVD_IDLE_TIMEOUT_S` for this endpoint (floored at
+    /// 100 ms). Takes effect on connections established afterwards and
+    /// on the heartbeat cadence within ~50 ms.
+    pub fn set_idle_timeout(&self, d: Duration) {
+        self.shared
+            .idle_timeout_ms
+            .store(d.as_millis() as u64, Ordering::Relaxed);
+    }
+
+    /// Chaos hook: shut down the established socket to `to` while
+    /// keeping all bookkeeping intact — from the transport's point of
+    /// view the network silently died mid-protocol. The next write
+    /// discovers the corpse and takes the reconnect path. Returns
+    /// whether a connection existed.
+    pub fn sever_conn(&self, to: PartyId) -> bool {
+        let conns = lock_ok(&self.shared.conns);
+        match conns.get(&to) {
+            Some(c) => {
+                let _ = c.stream.shutdown(std::net::Shutdown::Both);
+                true
+            }
+            None => false,
+        }
     }
 
     fn addr_of(&self, to: PartyId) -> Result<String> {
@@ -227,14 +467,15 @@ impl TcpTransport {
     /// `fedsvd serve` processes launch in arbitrary order, so the first
     /// attempt failing must not abort the federation. Only an explicit
     /// protocol rejection (wrong version/session/target, which retrying
-    /// can never fix) or the deadline expiring fails the call.
-    fn connect_peer(&self, to: PartyId, deadline: Duration) -> Result<TcpStream> {
+    /// can never fix) or the deadline expiring fails the call. Returns
+    /// the stream plus the peer's last-delivered sequence for us.
+    fn connect_peer(&self, to: PartyId, deadline: Duration) -> Result<(TcpStream, u64)> {
         let addr = self.addr_of(to)?;
         let t0 = Instant::now();
         let mut backoff = Duration::from_millis(20);
         loop {
             match self.try_connect_handshake(to, &addr) {
-                Ok(stream) => return Ok(stream),
+                Ok(got) => return Ok(got),
                 // a rejection is definitive: the peer is alive and said no
                 Err(HandshakeError::Rejected(e)) => return Err(e),
                 Err(HandshakeError::Io(e)) => {
@@ -255,27 +496,36 @@ impl TcpTransport {
     }
 
     /// One connect + handshake attempt (see [`TcpTransport::connect_peer`]
-    /// for the retry policy around it).
+    /// for the retry policy around it). Every handshake is a potential
+    /// resume: the ack reports how far the receiver already got.
     fn try_connect_handshake(
         &self,
         to: PartyId,
         addr: &str,
-    ) -> std::result::Result<TcpStream, HandshakeError> {
-        let stream = TcpStream::connect(addr)?;
+    ) -> std::result::Result<(TcpStream, u64), HandshakeError> {
+        let mut stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
         stream.set_read_timeout(Some(self.handshake_timeout))?;
-        // HELLO: magic, version, pad, session, from, to
+        let (sent_seq, resuming) = {
+            let ob = lock_ok(&self.shared.outbound);
+            match ob.get(&to) {
+                Some(o) => (o.next_seq - 1, true),
+                None => (0, false),
+            }
+        };
+        // HELLO: magic, version, flags, session, from, to, sent_seq
         let mut hello = Vec::with_capacity(HELLO_LEN);
         hello.extend_from_slice(&HELLO_MAGIC.to_le_bytes());
         hello.extend_from_slice(&WIRE_VERSION.to_le_bytes());
-        hello.extend_from_slice(&0u16.to_le_bytes());
+        hello.extend_from_slice(&(if resuming { HELLO_FLAG_RESUME } else { 0u16 }).to_le_bytes());
         hello.extend_from_slice(&self.shared.session.to_le_bytes());
         hello.extend_from_slice(&(self.party as u64).to_le_bytes());
         hello.extend_from_slice(&(to as u64).to_le_bytes());
-        (&stream).write_all(&hello)?;
+        hello.extend_from_slice(&sent_seq.to_le_bytes());
+        stream.write_all(&hello)?;
         Shared::add(&self.shared.sent, UNLABELLED, HELLO_LEN as u64);
         let mut ack = [0u8; ACK_LEN];
-        (&stream).read_exact(&mut ack)?;
+        stream.read_exact(&mut ack)?;
         Shared::add(&self.shared.recvd, UNLABELLED, ACK_LEN as u64);
         let magic = u32::from_le_bytes(ack[0..4].try_into().expect("len 4"));
         let status = u16::from_le_bytes(ack[6..8].try_into().expect("len 2"));
@@ -290,44 +540,168 @@ impl TcpTransport {
                 }
             ))));
         }
-        stream.set_read_timeout(None)?;
-        Ok(stream)
+        let delivered = u64::from_le_bytes(ack[8..16].try_into().expect("len 8"));
+        // Steady state: reads on this socket are the non-blocking ack
+        // drain only; writes get a bounded deadline so a stalled peer
+        // with a full TCP window surfaces as peer loss instead of
+        // blocking the sender forever.
+        let idle = self.shared.idle_timeout();
+        stream.set_read_timeout(Some(idle))?;
+        stream.set_write_timeout(Some(idle))?;
+        Ok((stream, delivered))
     }
 
-    /// Write one frame to `to` (opening the connection on first use),
-    /// recording real bytes under `label`.
-    fn write_to(&self, to: PartyId, msg: &ClusterMsg, label: u64) -> Result<u64> {
-        let mut conns = self.conns.lock().expect("conns poisoned");
-        if let std::collections::hash_map::Entry::Vacant(e) = conns.entry(to) {
-            e.insert(self.connect_peer(to, self.connect_timeout)?);
+    /// Re-send every buffered frame past `delivered`. Frames already in
+    /// the sent ledger count toward the `replayed_bytes` meter instead;
+    /// frames whose first write died are ledgered normally now. Returns
+    /// the replayed (already-ledgered) byte count.
+    fn replay_unacked(&self, to: PartyId, conn: &mut Conn, delivered: u64) -> std::io::Result<u64> {
+        let mut ob = lock_ok(&self.shared.outbound);
+        let Some(o) = ob.get_mut(&to) else { return Ok(0) };
+        let mut replayed = 0u64;
+        for f in o.buf.iter_mut() {
+            if f.seq <= delivered {
+                continue;
+            }
+            conn.stream.write_all(&f.bytes)?;
+            let n = f.bytes.len() as u64;
+            if f.ledgered {
+                replayed += n;
+                self.shared.replayed_bytes.fetch_add(n, Ordering::Relaxed);
+            } else {
+                f.ledgered = true;
+                Shared::add(&self.shared.sent, f.label, n);
+            }
         }
-        let stream = conns.get_mut(&to).expect("just inserted");
-        match wire::write_frame(stream, msg, label) {
-            Ok(bytes) => {
-                Shared::add(&self.shared.sent, label, bytes);
-                Ok(bytes)
+        Ok(replayed)
+    }
+
+    /// The write path's recovery: the socket to `to` died mid-protocol.
+    /// Retry connect + resume-handshake with capped attempts
+    /// (`FEDSVD_RECONNECT_RETRIES`) and the same exponential backoff
+    /// `connect_peer` uses, then replay the unacknowledged suffix. An
+    /// explicit protocol rejection or exhausted retries is definitive
+    /// peer loss.
+    fn reconnect_and_replay(
+        &self,
+        conns: &mut HashMap<PartyId, Conn>,
+        to: PartyId,
+        cause: &str,
+    ) -> Result<()> {
+        conns.remove(&to);
+        let retries = self.shared.reconnect_retries.load(Ordering::Relaxed);
+        let addr = self.addr_of(to)?;
+        let t0 = Instant::now();
+        let mut backoff = Duration::from_millis(20);
+        let mut last_err = cause.to_string();
+        for attempt in 1..=retries {
+            if self.shared.shutdown.load(Ordering::SeqCst) {
+                break;
             }
-            Err(e) => {
-                // a broken pipe here means the peer died mid-protocol
-                conns.remove(&to);
-                Err(Error::Runtime(format!(
-                    "tcp transport: send to party {to} failed: {e}"
-                )))
+            match self.try_connect_handshake(to, &addr) {
+                Ok((stream, delivered)) => {
+                    let mut conn = Conn::new(stream);
+                    self.shared.retire_through(to, delivered);
+                    match self.replay_unacked(to, &mut conn, delivered) {
+                        Ok(replayed) => {
+                            self.shared.reconnects.fetch_add(1, Ordering::Relaxed);
+                            obs::with_current(|t| {
+                                t.instant(obs::EV_RECONNECT, None);
+                                t.instant(obs::EV_REPLAYED_BYTES, Some(replayed));
+                            });
+                            eprintln!(
+                                "tcp transport: party {} reconnected to party {to} \
+                                 after {attempt} attempt(s) ({cause}); replayed \
+                                 {replayed} bytes",
+                                self.party
+                            );
+                            conns.insert(to, conn);
+                            return Ok(());
+                        }
+                        Err(e) => last_err = format!("replay failed: {e}"),
+                    }
+                }
+                Err(HandshakeError::Rejected(e)) => {
+                    return Err(Error::Runtime(format!(
+                        "tcp transport: lost connection to party {to} ({cause}); \
+                         resume rejected: {e}"
+                    )));
+                }
+                Err(HandshakeError::Io(e)) => last_err = e.to_string(),
             }
+            if t0.elapsed() >= self.connect_timeout {
+                break;
+            }
+            std::thread::sleep(backoff);
+            backoff = (backoff * 2).min(Duration::from_millis(500));
+        }
+        Err(Error::Runtime(format!(
+            "tcp transport: lost connection to party {to} mid-protocol ({cause}); \
+             reconnect failed after {retries} attempt(s): {last_err}"
+        )))
+    }
+
+    /// Write one protocol frame to `to` (opening the connection on
+    /// first use), recording real bytes under `label`. The frame is
+    /// sequenced and buffered *before* the first write so a socket that
+    /// dies mid-send can never lose it — the reconnect path replays it.
+    fn write_to(&self, to: PartyId, msg: &ClusterMsg, label: u64) -> Result<u64> {
+        let mut conns = lock_ok(&self.shared.conns);
+        if !conns.contains_key(&to) {
+            let (stream, delivered) = self.connect_peer(to, self.connect_timeout)?;
+            let mut conn = Conn::new(stream);
+            self.shared.retire_through(to, delivered);
+            // a lazily re-opened connection after an earlier failure
+            // may still owe the peer its unacked suffix
+            self.replay_unacked(to, &mut conn, delivered)
+                .map_err(|e| Error::Runtime(format!("tcp transport: replay to party {to}: {e}")))?;
+            conns.insert(to, conn);
+        }
+        let (seq, frame, write_res) = {
+            let conn = conns.get_mut(&to).expect("just ensured");
+            self.shared.drain_acks(to, conn);
+            let (seq, frame) = {
+                let mut ob = lock_ok(&self.shared.outbound);
+                let o = ob.entry(to).or_insert_with(Outbound::new);
+                let seq = o.next_seq;
+                o.next_seq += 1;
+                let frame = wire::encode_frame(msg, label, seq);
+                o.buf.push_back(SentFrame {
+                    seq,
+                    label,
+                    bytes: frame.clone(),
+                    ledgered: false,
+                });
+                (seq, frame)
+            };
+            let res = conn.stream.write_all(&frame);
+            (seq, frame, res)
+        };
+        let n = frame.len() as u64;
+        match write_res {
+            Ok(()) => {
+                self.shared.mark_ledgered(to, seq, label, n);
+                Ok(n)
+            }
+            // recoverable socket death: reconnect + replay (the frame
+            // just queued rides along) or surface definitive peer loss
+            Err(e) => self
+                .reconnect_and_replay(&mut conns, to, &e.to_string())
+                .map(|()| n),
         }
     }
 
     fn teardown(&self, notify: Option<&ClusterMsg>) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
-        let mut conns = self.conns.lock().expect("conns poisoned");
-        for (_, stream) in conns.iter_mut() {
+        let mut conns = lock_ok(&self.shared.conns);
+        for (_, conn) in conns.iter_mut() {
             if let Some(msg) = notify {
-                let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
-                if let Ok(b) = wire::write_frame(stream, msg, UNLABELLED) {
+                let _ = conn.stream.set_write_timeout(Some(Duration::from_secs(2)));
+                if let Ok(b) = wire::write_frame(&mut conn.stream, msg, UNLABELLED, 0) {
                     Shared::add(&self.shared.sent, UNLABELLED, b);
                 }
             }
-            let _ = stream.shutdown(std::net::Shutdown::Both);
+            let _ = conn.stream.shutdown(std::net::Shutdown::Both);
         }
         conns.clear();
         drop(conns);
@@ -345,7 +719,7 @@ impl Transport for TcpTransport {
     fn round_enter(&self, label: u64, _senders: usize) -> Result<()> {
         // no cross-process rendezvous: real sockets impose no global
         // round ordering; the label is recorded for traffic attribution
-        let mut open = self.open_label.lock().expect("label poisoned");
+        let mut open = lock_ok(&self.open_label);
         *open = Some(label);
         Ok(())
     }
@@ -358,16 +732,12 @@ impl Transport for TcpTransport {
         if self.shared.shutdown.load(Ordering::SeqCst) {
             return Err(Error::Runtime("tcp transport: endpoint is shut down".into()));
         }
-        let label = self
-            .open_label
-            .lock()
-            .expect("label poisoned")
-            .unwrap_or(UNLABELLED);
+        let label = lock_ok(&self.open_label).unwrap_or(UNLABELLED);
         self.write_to(to, &msg, label)
     }
 
     fn round_leave(&self, label: u64) -> Result<()> {
-        let mut open = self.open_label.lock().expect("label poisoned");
+        let mut open = lock_ok(&self.open_label);
         if *open != Some(label) {
             return Err(Error::Runtime(format!(
                 "tcp transport: leave({label}) without matching enter (open: {:?})",
@@ -380,13 +750,7 @@ impl Transport for TcpTransport {
 
     fn recv(&self) -> Result<ClusterMsg> {
         self.shared.inbox.recv().map_err(|e| {
-            match self
-                .shared
-                .abort_reason
-                .lock()
-                .expect("abort poisoned")
-                .as_ref()
-            {
+            match lock_ok(&self.shared.abort_reason).as_ref() {
                 Some(r) => Error::Runtime(format!("federation aborted: {r}")),
                 None => e,
             }
@@ -400,33 +764,40 @@ impl Transport for TcpTransport {
     fn abort(&self, reason: &str) {
         self.shared
             .fail(format!("party {} failed: {reason}", self.party));
-        // best effort: reach every peer in the address book, including
-        // ones we never sent to (they may be blocked waiting on us)
+        // best effort: reach every peer in the address book. The open
+        // connection is tried first; if it is dead (possibly the very
+        // socket whose loss caused this abort) fall back to one short
+        // fresh connect so a peer blocked on us still learns the
+        // reason instead of idling out.
         let notify = ClusterMsg::Abort {
             from: self.party,
             reason: reason.to_string(),
         };
         if let Some(peers) = self.peers.get() {
-            let already: Vec<PartyId> = self
-                .conns
-                .lock()
-                .expect("conns poisoned")
-                .keys()
-                .cloned()
-                .collect();
+            let mut conns = lock_ok(&self.shared.conns);
             for &pid in peers.keys() {
-                if pid == self.party || already.contains(&pid) {
+                if pid == self.party {
                     continue;
                 }
-                if let Ok(mut s) = self.connect_peer(pid, Duration::from_secs(2)) {
-                    let _ = s.set_write_timeout(Some(Duration::from_secs(2)));
-                    if let Ok(b) = wire::write_frame(&mut s, &notify, UNLABELLED) {
-                        Shared::add(&self.shared.sent, UNLABELLED, b);
+                let on_open = conns.get_mut(&pid).map(|c| {
+                    let _ = c.stream.set_write_timeout(Some(Duration::from_secs(2)));
+                    wire::write_frame(&mut c.stream, &notify, UNLABELLED, 0)
+                });
+                match on_open {
+                    Some(Ok(b)) => Shared::add(&self.shared.sent, UNLABELLED, b),
+                    _ => {
+                        conns.remove(&pid);
+                        if let Ok((mut s, _)) = self.connect_peer(pid, Duration::from_secs(2)) {
+                            let _ = s.set_write_timeout(Some(Duration::from_secs(2)));
+                            if let Ok(b) = wire::write_frame(&mut s, &notify, UNLABELLED, 0) {
+                                Shared::add(&self.shared.sent, UNLABELLED, b);
+                            }
+                        }
                     }
                 }
             }
         }
-        self.teardown(Some(&notify));
+        self.teardown(None);
     }
 
     fn close(&self) {
@@ -438,6 +809,55 @@ impl Drop for TcpTransport {
     fn drop(&mut self) {
         if !self.shared.shutdown.load(Ordering::SeqCst) {
             self.teardown(None);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// heartbeat side
+// ---------------------------------------------------------------------------
+
+/// Keep every established outgoing connection warm: a `Heartbeat`
+/// control frame every quarter of the idle deadline proves liveness to
+/// the peer's reader (so idle expiry only ever fires on a genuinely
+/// dead peer), and each tick also drains pending round acks so replay
+/// buffers shrink even while the sender computes. A heartbeat that
+/// cannot be written marks the connection dead; the next protocol send
+/// discovers that and reconnects + replays.
+fn heartbeat_loop(shared: Arc<Shared>) {
+    loop {
+        let t0 = Instant::now();
+        loop {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            let tick = (shared.idle_timeout() / 4).max(Duration::from_millis(50));
+            if t0.elapsed() >= tick {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        let frame = wire::encode_frame(
+            &ClusterMsg::Heartbeat { from: shared.party },
+            UNLABELLED,
+            0,
+        );
+        let idle = shared.idle_timeout();
+        let mut conns = lock_ok(&shared.conns);
+        let mut dead: Vec<PartyId> = Vec::new();
+        for (&to, conn) in conns.iter_mut() {
+            shared.drain_acks(to, conn);
+            let _ = conn.stream.set_write_timeout(Some(Duration::from_secs(2)));
+            let ok = conn.stream.write_all(&frame).is_ok();
+            let _ = conn.stream.set_write_timeout(Some(idle));
+            if ok {
+                Shared::add(&shared.sent, UNLABELLED, frame.len() as u64);
+            } else {
+                dead.push(to);
+            }
+        }
+        for to in dead {
+            conns.remove(&to);
         }
     }
 }
@@ -460,9 +880,11 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>, handshake_timeout: Du
     }
 }
 
-/// Validate one inbound handshake; answer with an ack. Returns the
-/// connecting party's id and this connection's handshake generation
-/// (per party, monotonic) when the connection is accepted.
+/// Validate one inbound handshake; answer with an ack carrying the
+/// last sequence we delivered from this sender (0 on a fresh pairing),
+/// which is everything a reconnect needs to replay exactly the missing
+/// suffix. Returns the connecting party's id and this connection's
+/// handshake generation (per party, monotonic) when accepted.
 fn handshake_in(
     stream: &mut TcpStream,
     shared: &Shared,
@@ -476,9 +898,11 @@ fn handshake_in(
         return Err(Error::Protocol("tcp transport: bad hello magic".into()));
     }
     let version = u16::from_le_bytes(hello[4..6].try_into().expect("len 2"));
+    let _flags = u16::from_le_bytes(hello[6..8].try_into().expect("len 2"));
     let session = u64::from_le_bytes(hello[8..16].try_into().expect("len 8"));
     let from = u64::from_le_bytes(hello[16..24].try_into().expect("len 8")) as PartyId;
     let to = u64::from_le_bytes(hello[24..32].try_into().expect("len 8")) as PartyId;
+    let _sent_seq = u64::from_le_bytes(hello[32..40].try_into().expect("len 8"));
     let status = if version != WIRE_VERSION {
         ACK_BAD_VERSION
     } else if session != shared.session {
@@ -488,10 +912,16 @@ fn handshake_in(
     } else {
         ACK_OK
     };
+    let delivered = if status == ACK_OK {
+        lock_ok(&shared.delivered).get(&from).copied().unwrap_or(0)
+    } else {
+        0
+    };
     let mut ack = Vec::with_capacity(ACK_LEN);
     ack.extend_from_slice(&HELLO_MAGIC.to_le_bytes());
     ack.extend_from_slice(&WIRE_VERSION.to_le_bytes());
     ack.extend_from_slice(&status.to_le_bytes());
+    ack.extend_from_slice(&delivered.to_le_bytes());
     stream.write_all(&ack)?;
     Shared::add(&shared.sent, UNLABELLED, ACK_LEN as u64);
     if status != ACK_OK {
@@ -500,9 +930,13 @@ fn handshake_in(
         )));
     }
     Shared::add(&shared.recvd, UNLABELLED, HELLO_LEN as u64);
-    stream.set_read_timeout(None)?;
+    // bugfix: never block forever on a half-open socket — a peer silent
+    // past the idle deadline (heartbeats cover quiet rounds) is lost
+    stream.set_read_timeout(Some(shared.idle_timeout()))?;
+    // the reverse direction carries only tiny ack records; bound those
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
     let gen = {
-        let mut h = shared.handshakes.lock().expect("handshakes poisoned");
+        let mut h = lock_ok(&shared.handshakes);
         let e = h.entry(from).or_insert(0);
         *e += 1;
         *e
@@ -510,69 +944,153 @@ fn handshake_in(
     Ok((from, gen))
 }
 
-/// Per-connection reader: decode frames and post them to the inbox.
+/// Whether a newer inbound handshake from `from` has taken over.
+fn superseded(shared: &Shared, from: PartyId, my_gen: u64) -> bool {
+    lock_ok(&shared.handshakes)
+        .get(&from)
+        .is_some_and(|&g| g > my_gen)
+}
+
+/// Push one acknowledgement record for everything delivered from
+/// `from` back on the reverse direction of the frame socket. Best
+/// effort — returns `false` (disabling further acks on this
+/// connection) on a write error; acks only bound the sender's
+/// replay-buffer memory, never correctness.
+fn send_round_ack(stream: &mut TcpStream, shared: &Shared, from: PartyId) -> bool {
+    let seq = lock_ok(&shared.delivered).get(&from).copied().unwrap_or(0);
+    if seq == 0 {
+        return true;
+    }
+    let mut rec = Vec::with_capacity(ACK_RECORD_LEN);
+    rec.extend_from_slice(&ACK_RECORD_MAGIC.to_le_bytes());
+    rec.extend_from_slice(&0u32.to_le_bytes());
+    rec.extend_from_slice(&seq.to_le_bytes());
+    if stream.write_all(&rec).is_ok() {
+        Shared::add(&shared.sent, UNLABELLED, ACK_RECORD_LEN as u64);
+        true
+    } else {
+        false
+    }
+}
+
+/// Per-connection reader: decode frames, deduplicate replays, post
+/// fresh messages to the inbox, and acknowledge rounds back to the
+/// sender.
 fn reader(mut stream: TcpStream, shared: Arc<Shared>, handshake_timeout: Duration) {
     let (from, my_gen) = match handshake_in(&mut stream, &shared, handshake_timeout) {
         Ok(p) => p,
         Err(_) => return, // rejected or wedged: never part of the session
     };
     let mut frames = 0u64;
+    // the last delivered frame's round label: a change is a round
+    // boundary — the moment to push an ack record back to the sender
+    let mut ack_label: Option<u64> = None;
+    let mut acks_ok = true;
     loop {
         match wire::read_frame(&mut stream) {
-            Ok((msg, label, bytes)) => {
+            Ok((msg, label, seq, bytes)) => {
                 frames += 1;
-                // every received frame — control frames included — lands
-                // in the ledger: seen_ledger really is all NIC traffic
-                Shared::add(&shared.recvd, label, bytes);
                 match msg {
+                    ClusterMsg::Heartbeat { .. } => {
+                        // liveness only; resets the idle clock by arriving
+                        Shared::add(&shared.recvd, label, bytes);
+                    }
                     ClusterMsg::Abort { from, reason } => {
+                        Shared::add(&shared.recvd, label, bytes);
                         shared.fail(format!("party {from} aborted: {reason}"));
                         return;
                     }
-                    ClusterMsg::Shutdown { .. } => return, // clean end
-                    msg => {
-                        if shared.inbox.post(msg).is_err() {
-                            return; // we are shutting down ourselves
+                    ClusterMsg::Shutdown { .. } => {
+                        Shared::add(&shared.recvd, label, bytes);
+                        if acks_ok {
+                            send_round_ack(&mut stream, &shared, from);
                         }
+                        return; // clean end
+                    }
+                    msg => {
+                        // dedup + post under one `delivered` lock so a
+                        // racing superseded connection cannot reorder
+                        let fresh = {
+                            let mut d = lock_ok(&shared.delivered);
+                            let e = d.entry(from).or_insert(0);
+                            if seq != 0 && seq <= *e {
+                                false
+                            } else {
+                                if seq != 0 {
+                                    *e = seq;
+                                }
+                                Shared::add(&shared.recvd, label, bytes);
+                                if shared.inbox.post(msg).is_err() {
+                                    return; // we are shutting down ourselves
+                                }
+                                true
+                            }
+                        };
+                        if !fresh {
+                            // a replayed duplicate: metered separately,
+                            // never ledgered, never delivered twice
+                            shared
+                                .replay_recvd_bytes
+                                .fetch_add(bytes, Ordering::Relaxed);
+                            continue;
+                        }
+                        if acks_ok && ack_label.is_some_and(|l| l != label) {
+                            acks_ok = send_round_ack(&mut stream, &shared, from);
+                        }
+                        ack_label = Some(label);
                     }
                 }
             }
-            Err(_) => {
-                // A stream that dies before carrying a single frame is
-                // usually an abandoned handshake attempt: the peer's
-                // connect retry (see connect_peer) timed out reading our
-                // ack, dropped this connection, and will reconnect —
-                // failing immediately would poison a healthy federation.
-                // But it could also be a peer that crashed right after
-                // connecting, so give the retry a bounded grace window
-                // to supersede this connection (a newer handshake from
-                // the same party) before declaring the peer lost. A
-                // stream that carried real frames and then hit EOF
-                // without a Shutdown is a mid-protocol death: fail fast.
-                if frames == 0 {
-                    let deadline = Instant::now() + Duration::from_secs(2);
-                    loop {
-                        if shared.shutdown.load(Ordering::SeqCst) {
-                            return;
-                        }
-                        let superseded = shared
-                            .handshakes
-                            .lock()
-                            .expect("handshakes poisoned")
-                            .get(&from)
-                            .is_some_and(|&g| g > my_gen);
-                        if superseded {
-                            return; // the retry's connection took over
-                        }
-                        if Instant::now() >= deadline {
-                            break;
-                        }
-                        std::thread::sleep(Duration::from_millis(25));
+            Err(e) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                let timed_out = matches!(
+                    &e,
+                    Error::Io(io) if io.kind() == std::io::ErrorKind::WouldBlock
+                        || io.kind() == std::io::ErrorKind::TimedOut
+                );
+                if timed_out {
+                    // idle deadline expired: not one frame — not even a
+                    // heartbeat — for the whole window. Half-open socket.
+                    if !superseded(&shared, from, my_gen) {
+                        shared.fail(format!(
+                            "connection to party {from} idle past the deadline \
+                             ({}s without frames or heartbeats): peer presumed lost",
+                            shared.idle_timeout().as_secs()
+                        ));
                     }
+                    return;
                 }
-                if !shared.shutdown.load(Ordering::SeqCst) {
-                    shared.fail(format!("connection to party {from} lost"));
+                // EOF/reset without a Shutdown frame: recoverable socket
+                // death. Give the peer's reconnect a bounded grace window
+                // to supersede this connection before declaring it lost.
+                // A zero-frame stream is usually an abandoned handshake
+                // retry (see connect_peer) and gets the short window; a
+                // stream that carried real frames gets the reconnect
+                // grace (the peer is actively retrying with backoff).
+                let grace = if frames == 0 {
+                    Duration::from_secs(2)
+                } else {
+                    shared.reconnect_grace
+                };
+                let deadline = Instant::now() + grace;
+                loop {
+                    if shared.shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    if lock_ok(&shared.abort_reason).is_some() {
+                        return; // federation already failed: first reason wins
+                    }
+                    if superseded(&shared, from, my_gen) {
+                        return; // the reconnect's connection took over
+                    }
+                    if Instant::now() >= deadline {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(25));
                 }
+                shared.fail(format!("connection to party {from} lost"));
                 return;
             }
         }
@@ -619,10 +1137,10 @@ mod tests {
         };
         assert_eq!(s[0], 2.0);
         assert_eq!(s[1].to_bits(), (-0.0f64).to_bits());
-        // 24 B frame header + 8 B count + 16 B payload, plus the 32 B hello
+        // 32 B frame header + 8 B count + 16 B payload, plus the 40 B hello
         let sent = user.sent_ledger();
-        assert!(sent.contains(&(5, 48)), "sent ledger: {sent:?}");
-        assert!(sent.contains(&(UNLABELLED, 32)), "sent ledger: {sent:?}");
+        assert!(sent.contains(&(5, 56)), "sent ledger: {sent:?}");
+        assert!(sent.contains(&(UNLABELLED, 40)), "sent ledger: {sent:?}");
         user.close();
         csp.close();
     }
@@ -694,6 +1212,137 @@ mod tests {
         let err = csp.recv().unwrap_err();
         let text = err.to_string();
         assert!(text.contains("injected failure"), "got: {text}");
+        csp.close();
+    }
+
+    /// The tentpole path end to end: an established connection is
+    /// severed under the transport mid-protocol; the next send must
+    /// reconnect, resume-handshake, replay the unacked suffix, and the
+    /// receiver must deliver every message exactly once, in order.
+    #[test]
+    fn severed_socket_reconnects_and_replays_without_duplicates() {
+        if !loopback_available() {
+            eprintln!("skipping: loopback TCP unavailable");
+            return;
+        }
+        let (csp, user) = pair(21);
+        user.round_enter(5, 1).unwrap();
+        user.send(CSP, ClusterMsg::Sigma(vec![1.0])).unwrap();
+        let ClusterMsg::Sigma(s) = csp.recv().unwrap() else {
+            panic!("wrong message")
+        };
+        assert_eq!(s, vec![1.0]);
+        // the network silently dies under the established connection
+        assert!(user.sever_conn(CSP), "no established connection to sever");
+        user.send(CSP, ClusterMsg::Sigma(vec![2.0])).unwrap();
+        user.send(CSP, ClusterMsg::Sigma(vec![3.0])).unwrap();
+        user.round_leave(5).unwrap();
+        let ClusterMsg::Sigma(s) = csp.recv().unwrap() else {
+            panic!("wrong message")
+        };
+        assert_eq!(s, vec![2.0], "first post-sever message");
+        let ClusterMsg::Sigma(s) = csp.recv().unwrap() else {
+            panic!("wrong message")
+        };
+        assert_eq!(s, vec![3.0], "second post-sever message");
+        assert_eq!(user.reconnects(), 1, "exactly one reconnect");
+        // the first message was already delivered, so the resume
+        // handshake (delivered = 1) retired it instead of replaying it:
+        // nothing re-crossed the wire, nothing was double-ledgered
+        assert_eq!(user.replayed_bytes(), 0, "delivered frame must be retired, not replayed");
+        assert_eq!(csp.replayed_recv_bytes(), 0, "no duplicate reached the receiver");
+        // the round ledger counted each frame exactly once despite the
+        // replay: 3 sigma frames of 48 B each under label 5
+        let sent = user.sent_ledger();
+        assert!(sent.contains(&(5, 144)), "sent ledger: {sent:?}");
+        user.close();
+        csp.close();
+    }
+
+    /// With retries exhausted (0 attempts) a dead socket is definitive
+    /// peer loss: the send errors instead of hanging or panicking.
+    #[test]
+    fn reconnect_retries_exhausted_is_clean_peer_loss() {
+        if !loopback_available() {
+            eprintln!("skipping: loopback TCP unavailable");
+            return;
+        }
+        let (csp, user) = pair(22);
+        user.set_reconnect_retries(0);
+        user.round_enter(5, 1).unwrap();
+        user.send(CSP, ClusterMsg::Sigma(vec![1.0])).unwrap();
+        assert!(user.sever_conn(CSP));
+        let err = user.send(CSP, ClusterMsg::Sigma(vec![2.0])).unwrap_err();
+        let text = err.to_string();
+        assert!(
+            text.contains("lost connection to party 1") && text.contains("reconnect failed"),
+            "got: {text}"
+        );
+        user.close();
+        csp.close();
+    }
+
+    /// A half-open connection (peer vanishes without FIN, heartbeats
+    /// stop) must surface as peer loss via the idle deadline instead of
+    /// blocking `recv` forever.
+    #[test]
+    fn idle_timeout_surfaces_half_open_connection_as_peer_loss() {
+        if !loopback_available() {
+            eprintln!("skipping: loopback TCP unavailable");
+            return;
+        }
+        let csp = TcpTransport::bind("127.0.0.1:0", CSP, 33).unwrap();
+        csp.set_idle_timeout(Duration::from_millis(300));
+        // a raw client that completes a valid handshake, then goes
+        // silent forever — no frames, no heartbeats, no FIN
+        let mut s = TcpStream::connect(csp.local_addr()).unwrap();
+        let mut hello = Vec::with_capacity(HELLO_LEN);
+        hello.extend_from_slice(&HELLO_MAGIC.to_le_bytes());
+        hello.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        hello.extend_from_slice(&0u16.to_le_bytes());
+        hello.extend_from_slice(&33u64.to_le_bytes());
+        hello.extend_from_slice(&(USER_BASE as u64).to_le_bytes());
+        hello.extend_from_slice(&(CSP as u64).to_le_bytes());
+        hello.extend_from_slice(&0u64.to_le_bytes());
+        s.write_all(&hello).unwrap();
+        let mut ack = [0u8; ACK_LEN];
+        s.read_exact(&mut ack).unwrap();
+        let err = csp.recv().unwrap_err();
+        let text = err.to_string();
+        assert!(text.contains("idle past the deadline"), "got: {text}");
+        drop(s);
+        csp.close();
+    }
+
+    /// A panic while holding a shared lock must not cascade: the
+    /// poison-recovering locks keep the transport usable so the failure
+    /// stays scoped to the panicking thread.
+    #[test]
+    fn poisoned_locks_recover_instead_of_cascading() {
+        if !loopback_available() {
+            eprintln!("skipping: loopback TCP unavailable");
+            return;
+        }
+        let (csp, user) = pair(44);
+        let shared = Arc::clone(&user.shared);
+        let _ = std::thread::spawn(move || {
+            let _guard = shared.sent.lock().unwrap();
+            panic!("poison the sent ledger on purpose");
+        })
+        .join();
+        assert!(user.shared.sent.is_poisoned(), "test setup: lock not poisoned");
+        user.round_enter(5, 1).unwrap();
+        user.send(CSP, ClusterMsg::Sigma(vec![4.0])).unwrap();
+        user.round_leave(5).unwrap();
+        let ClusterMsg::Sigma(s) = csp.recv().unwrap() else {
+            panic!("wrong message")
+        };
+        assert_eq!(s, vec![4.0]);
+        assert!(
+            user.sent_ledger().iter().any(|&(l, _)| l == 5),
+            "ledger still readable after poisoning"
+        );
+        user.close();
         csp.close();
     }
 }

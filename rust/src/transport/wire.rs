@@ -9,9 +9,20 @@
 //! version u16   WIRE_VERSION
 //! kind    u16   message discriminant (ClusterMsg::kind)
 //! label   u64   round label (cluster::labels) for traffic attribution
+//! seq     u64   per-peer delivery sequence (0 = unsequenced control)
 //! len     u64   payload byte length
 //! payload [u8; len]
 //! ```
+//!
+//! The `seq` field (new in v3) is what makes a dropped socket
+//! survivable: the sender numbers every protocol frame per peer
+//! (1, 2, 3, …), retains frames until the receiver's round
+//! acknowledgement retires them, and after a reconnect replays exactly
+//! the suffix the receiver reports undelivered. The receiver discards
+//! any frame whose `seq` it has already delivered, so a replay can
+//! never double-deliver. Control frames (`Abort`/`Shutdown`/
+//! `Heartbeat`) carry `seq = 0`: they are never buffered, never
+//! replayed, never deduplicated.
 //!
 //! Everything is little-endian. Floats travel as their raw IEEE-754 bit
 //! pattern (`f64::to_bits`/`from_bits`), so ±0, subnormals and NaN
@@ -38,10 +49,13 @@ use crate::util::{Error, Result};
 /// Frame marker, first 4 bytes of every frame.
 pub const FRAME_MAGIC: u32 = 0xFED5_F4A3;
 /// Codec version carried by every frame; bump on any layout change
-/// (v2: added the `DataMeta` partition-attestation message).
-pub const WIRE_VERSION: u16 = 2;
-/// Fixed frame-header size in bytes (magic + version + kind + label + len).
-pub const FRAME_HEADER_LEN: usize = 24;
+/// (v2: added the `DataMeta` partition-attestation message; v3: added
+/// the per-peer `seq` header field, the `Heartbeat` control message and
+/// the resume handshake — see [`crate::transport::TcpTransport`]).
+pub const WIRE_VERSION: u16 = 3;
+/// Fixed frame-header size in bytes
+/// (magic + version + kind + label + seq + len).
+pub const FRAME_HEADER_LEN: usize = 32;
 /// Upper bound on a single frame's payload — anything larger is a
 /// corrupt or hostile length prefix, rejected before allocation.
 pub const MAX_FRAME_PAYLOAD: u64 = 1 << 32;
@@ -392,6 +406,13 @@ pub enum ClusterMsg {
     /// Control: clean connection teardown — the sender is done sending
     /// on this link (distinguishes a finished peer from a crashed one).
     Shutdown { from: PartyId },
+    /// Control: link keep-alive (v3). The TCP transport emits these on
+    /// otherwise-idle outbound connections so a receiver's idle read
+    /// deadline (`FEDSVD_IDLE_TIMEOUT_S`) only ever fires on a peer
+    /// that is genuinely gone (crashed or half-open), never on a
+    /// healthy federation stuck in a long compute phase. Discarded on
+    /// receipt; ledgered under `UNLABELLED` like every control frame.
+    Heartbeat { from: PartyId },
 }
 
 impl ClusterMsg {
@@ -413,6 +434,7 @@ impl ClusterMsg {
             ClusterMsg::Abort { .. } => 12,
             ClusterMsg::Shutdown { .. } => 13,
             ClusterMsg::DataMeta { .. } => 14,
+            ClusterMsg::Heartbeat { .. } => 15,
         }
     }
 
@@ -434,6 +456,7 @@ impl ClusterMsg {
             ClusterMsg::Abort { .. } => "Abort",
             ClusterMsg::Shutdown { .. } => "Shutdown",
             ClusterMsg::DataMeta { .. } => "DataMeta",
+            ClusterMsg::Heartbeat { .. } => "Heartbeat",
         }
     }
 
@@ -460,6 +483,7 @@ impl ClusterMsg {
             ClusterMsg::Abort { reason, .. } => 16 + reason.len() as u64,
             ClusterMsg::Shutdown { .. } => 8,
             ClusterMsg::DataMeta { .. } => 32,
+            ClusterMsg::Heartbeat { .. } => 8,
         }
     }
 
@@ -503,6 +527,7 @@ impl ClusterMsg {
                 reason.encode(out);
             }
             ClusterMsg::Shutdown { from } => (*from as u64).encode(out),
+            ClusterMsg::Heartbeat { from } => (*from as u64).encode(out),
             ClusterMsg::DataMeta {
                 user,
                 rows,
@@ -566,6 +591,7 @@ impl ClusterMsg {
                 cols: r.u64()?,
                 checksum: r.u64()?,
             },
+            15 => ClusterMsg::Heartbeat { from: r.len()? },
             other => return Err(codec(format!("unknown message kind {other}"))),
         };
         r.finish()?;
@@ -577,23 +603,25 @@ impl ClusterMsg {
 // frames
 // ---------------------------------------------------------------------------
 
-/// Encode `msg` as one complete frame tagged with round `label`.
-pub fn encode_frame(msg: &ClusterMsg, label: u64) -> Vec<u8> {
+/// Encode `msg` as one complete frame tagged with round `label` and
+/// per-peer delivery sequence `seq` (0 for unsequenced control frames).
+pub fn encode_frame(msg: &ClusterMsg, label: u64, seq: u64) -> Vec<u8> {
     let mut out = Vec::with_capacity(FRAME_HEADER_LEN + 64);
     out.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
     out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
     out.extend_from_slice(&msg.kind().to_le_bytes());
     out.extend_from_slice(&label.to_le_bytes());
+    out.extend_from_slice(&seq.to_le_bytes());
     out.extend_from_slice(&0u64.to_le_bytes()); // len, patched below
     msg.encode_payload(&mut out);
     let plen = (out.len() - FRAME_HEADER_LEN) as u64;
-    out[16..24].copy_from_slice(&plen.to_le_bytes());
+    out[24..32].copy_from_slice(&plen.to_le_bytes());
     out
 }
 
 /// Parse a frame header, rejecting bad magic, version drift and
-/// oversized length prefixes. Returns `(kind, label, payload_len)`.
-fn parse_header(hdr: &[u8; FRAME_HEADER_LEN]) -> Result<(u16, u64, u64)> {
+/// oversized length prefixes. Returns `(kind, label, seq, payload_len)`.
+fn parse_header(hdr: &[u8; FRAME_HEADER_LEN]) -> Result<(u16, u64, u64, u64)> {
     let magic = u32::from_le_bytes(hdr[0..4].try_into().expect("len 4"));
     if magic != FRAME_MAGIC {
         return Err(codec(format!("bad frame magic {magic:#010x}")));
@@ -606,18 +634,19 @@ fn parse_header(hdr: &[u8; FRAME_HEADER_LEN]) -> Result<(u16, u64, u64)> {
     }
     let kind = u16::from_le_bytes(hdr[6..8].try_into().expect("len 2"));
     let label = u64::from_le_bytes(hdr[8..16].try_into().expect("len 8"));
-    let plen = u64::from_le_bytes(hdr[16..24].try_into().expect("len 8"));
+    let seq = u64::from_le_bytes(hdr[16..24].try_into().expect("len 8"));
+    let plen = u64::from_le_bytes(hdr[24..32].try_into().expect("len 8"));
     if plen > MAX_FRAME_PAYLOAD {
         return Err(codec(format!(
             "frame payload length {plen} exceeds cap {MAX_FRAME_PAYLOAD}"
         )));
     }
-    Ok((kind, label, plen))
+    Ok((kind, label, seq, plen))
 }
 
 /// Decode one complete frame from a byte slice. The slice must hold
 /// exactly one frame — shorter is "truncated", longer is rejected.
-pub fn decode_frame(buf: &[u8]) -> Result<(ClusterMsg, u64)> {
+pub fn decode_frame(buf: &[u8]) -> Result<(ClusterMsg, u64, u64)> {
     if buf.len() < FRAME_HEADER_LEN {
         return Err(codec(format!(
             "truncated frame: {} bytes, header needs {FRAME_HEADER_LEN}",
@@ -625,7 +654,7 @@ pub fn decode_frame(buf: &[u8]) -> Result<(ClusterMsg, u64)> {
         )));
     }
     let hdr: &[u8; FRAME_HEADER_LEN] = buf[..FRAME_HEADER_LEN].try_into().expect("header len");
-    let (kind, label, plen) = parse_header(hdr)?;
+    let (kind, label, seq, plen) = parse_header(hdr)?;
     let body = &buf[FRAME_HEADER_LEN..];
     if (body.len() as u64) < plen {
         return Err(codec(format!(
@@ -639,20 +668,21 @@ pub fn decode_frame(buf: &[u8]) -> Result<(ClusterMsg, u64)> {
             body.len()
         )));
     }
-    Ok((ClusterMsg::decode_payload(kind, body)?, label))
+    Ok((ClusterMsg::decode_payload(kind, body)?, label, seq))
 }
 
-/// Read one frame from a stream. Returns `(msg, label, wire_bytes)`
-/// where `wire_bytes` is the full on-the-wire frame size (header +
-/// payload) — the number the real-transport traffic ledger records.
+/// Read one frame from a stream. Returns `(msg, label, seq,
+/// wire_bytes)` where `wire_bytes` is the full on-the-wire frame size
+/// (header + payload) — the number the real-transport traffic ledger
+/// records.
 ///
 /// The payload buffer grows only as bytes actually arrive (bounded
 /// initial reservation), so a lying length prefix cannot force a huge
 /// allocation without the peer really sending that much data.
-pub fn read_frame(rd: &mut impl std::io::Read) -> Result<(ClusterMsg, u64, u64)> {
+pub fn read_frame(rd: &mut impl std::io::Read) -> Result<(ClusterMsg, u64, u64, u64)> {
     let mut hdr = [0u8; FRAME_HEADER_LEN];
     rd.read_exact(&mut hdr)?;
-    let (kind, label, plen) = parse_header(&hdr)?;
+    let (kind, label, seq, plen) = parse_header(&hdr)?;
     let mut payload = Vec::with_capacity(plen.min(1 << 20) as usize);
     let got = rd.by_ref().take(plen).read_to_end(&mut payload)?;
     if got as u64 != plen {
@@ -661,7 +691,7 @@ pub fn read_frame(rd: &mut impl std::io::Read) -> Result<(ClusterMsg, u64, u64)>
         )));
     }
     let msg = ClusterMsg::decode_payload(kind, &payload)?;
-    Ok((msg, label, (FRAME_HEADER_LEN as u64) + plen))
+    Ok((msg, label, seq, (FRAME_HEADER_LEN as u64) + plen))
 }
 
 /// Write one frame to a stream; returns the on-the-wire byte count.
@@ -669,8 +699,9 @@ pub fn write_frame(
     wr: &mut impl std::io::Write,
     msg: &ClusterMsg,
     label: u64,
+    seq: u64,
 ) -> Result<u64> {
-    let buf = encode_frame(msg, label);
+    let buf = encode_frame(msg, label, seq);
     wr.write_all(&buf)?;
     Ok(buf.len() as u64)
 }
@@ -682,9 +713,10 @@ mod tests {
     #[test]
     fn frame_roundtrip_sigma() {
         let msg = ClusterMsg::Sigma(vec![1.5, -0.0, f64::MIN_POSITIVE / 8.0]);
-        let buf = encode_frame(&msg, 42);
-        let (back, label) = decode_frame(&buf).unwrap();
+        let buf = encode_frame(&msg, 42, 7);
+        let (back, label, seq) = decode_frame(&buf).unwrap();
         assert_eq!(label, 42);
+        assert_eq!(seq, 7);
         let ClusterMsg::Sigma(s) = back else {
             panic!("wrong kind")
         };
@@ -699,10 +731,11 @@ mod tests {
             user: 3,
             pred: vec![0.25; 7],
         };
-        let buf = encode_frame(&msg, 9);
+        let buf = encode_frame(&msg, 9, 21);
         let mut cur = std::io::Cursor::new(buf.clone());
-        let (back, label, bytes) = read_frame(&mut cur).unwrap();
+        let (back, label, seq, bytes) = read_frame(&mut cur).unwrap();
         assert_eq!(label, 9);
+        assert_eq!(seq, 21);
         assert_eq!(bytes, buf.len() as u64);
         assert!(matches!(back, ClusterMsg::Pred { user: 3, .. }));
     }
@@ -715,8 +748,8 @@ mod tests {
             cols: 9,
             checksum: 0xdead_beef_cafe_f00d,
         };
-        let buf = encode_frame(&msg, 4);
-        let (back, label) = decode_frame(&buf).unwrap();
+        let buf = encode_frame(&msg, 4, 1);
+        let (back, label, _) = decode_frame(&buf).unwrap();
         assert_eq!(label, 4);
         let ClusterMsg::DataMeta {
             user,
@@ -734,7 +767,7 @@ mod tests {
     #[test]
     fn rejects_bad_magic_version_and_oversize() {
         let msg = ClusterMsg::Shutdown { from: 1 };
-        let good = encode_frame(&msg, 0);
+        let good = encode_frame(&msg, 0, 0);
         let mut bad_magic = good.clone();
         bad_magic[0] ^= 0xff;
         assert!(decode_frame(&bad_magic).is_err());
@@ -742,7 +775,7 @@ mod tests {
         bad_version[4] = 0x7f;
         assert!(decode_frame(&bad_version).is_err());
         let mut bad_len = good.clone();
-        bad_len[16..24].copy_from_slice(&(MAX_FRAME_PAYLOAD + 1).to_le_bytes());
+        bad_len[24..32].copy_from_slice(&(MAX_FRAME_PAYLOAD + 1).to_le_bytes());
         assert!(decode_frame(&bad_len).is_err());
         // every strict prefix is truncated
         for cut in 0..good.len() {

@@ -482,6 +482,192 @@ fn lr_federation_from_split_manifest_csv() {
     let _ = std::fs::remove_dir_all(&base);
 }
 
+/// PR-8 acceptance: one established user↔CSP socket is severed at the
+/// socket level mid-round (`--inject-drop upload` shuts the stream down
+/// under the transport right after the shard-0 upload). The transport
+/// must reconnect with the wire-v3 resume handshake and replay the
+/// unacked suffix so the federation still matches the sequential oracle
+/// to ≤ 1e-9 — and the traffic ledger must NOT double-count replays
+/// (user0 and user1 send identical upload payloads, so their per-label
+/// upload totals must stay equal).
+#[test]
+fn svd_federation_survives_a_severed_socket_mid_round() {
+    if !loopback_available() {
+        eprintln!("skipping: loopback TCP unavailable in this sandbox");
+        return;
+    }
+    let dir = fresh_dir("drop_svd");
+    let (m, n, k) = (24usize, 8usize, 2usize);
+    let dirs = dir.to_string_lossy().into_owned();
+    let common = [
+        "--peers-dir", dirs.as_str(), "--task", "svd",
+        "--m", "24", "--n", "8", "--users", "2", "--block", "4", "--shards", "2",
+    ];
+    let extra: HashMap<&str, Vec<&str>> =
+        [("user1", vec!["--inject-drop", "upload"])].into_iter().collect();
+    let outs = run_federation(&["ta", "csp", "user0", "user1"], &common, &extra);
+    if !outs.iter().all(|(_, ok, _, _)| *ok) {
+        dump_and_panic("a party exited non-zero despite reconnect+replay", &outs);
+    }
+    let by_role: HashMap<String, HashMap<String, String>> = outs
+        .iter()
+        .map(|(r, _, so, _)| (r.clone(), results(so)))
+        .collect();
+
+    // the drop actually happened and the transport recovered from it
+    let user1_stderr = &outs.iter().find(|(r, ..)| r == "user1").expect("user1 output").3;
+    assert!(
+        user1_stderr.contains("chaos: severed socket to csp"),
+        "user1 never severed its socket:\n{user1_stderr}"
+    );
+    assert!(
+        user1_stderr.contains("reconnected to party 1"),
+        "user1 stderr shows no reconnect to the CSP:\n{user1_stderr}"
+    );
+    let reconnects: u64 = by_role["user1"]["reconnects"].parse().unwrap();
+    assert!(reconnects >= 1, "user1 reported {reconnects} reconnects");
+
+    // lossless through the drop: same oracle bar as the healthy run
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let x = Mat::gaussian(m, n, &mut rng);
+    let parts = split_columns(&x, k).unwrap();
+    let cfg = FedSvdConfig {
+        block_size: 4,
+        ..Default::default()
+    };
+    let oracle = run_fedsvd_with_backend(&parts, &cfg, CpuBackend::global()).unwrap();
+    let scale = 1.0 + oracle.s[0].abs();
+    for role in ["csp", "user0", "user1"] {
+        let sig = parse_vec(&by_role[role]["sigma"]);
+        assert!(
+            max_abs_diff(&sig, &oracle.s) <= TOL * scale,
+            "{role} Σ deviates through the drop: {:e}",
+            max_abs_diff(&sig, &oracle.s)
+        );
+    }
+    let u = parse_mat(&by_role["user1"]["u"]);
+    let d = aligned_diff(&u, oracle.u.as_ref().unwrap(), true);
+    assert!(d <= TOL * scale, "U deviates through the drop: {d:e}");
+    for (i, role) in ["user0", "user1"].iter().enumerate() {
+        let vt = parse_mat(&by_role[*role]["vt_part"]);
+        let d = aligned_diff(&vt, &oracle.v_parts[i], false);
+        assert!(d <= TOL * scale, "{role} Vᵢᵀ deviates through the drop: {d:e}");
+    }
+
+    // replays are ledgered separately, never double-counted: both users
+    // send byte-identical upload payloads, so their per-label upload
+    // ledgers must agree even though user1 went through a reconnect
+    let upload_traffic = |role: &str| -> u64 {
+        by_role[role]["traffic"]
+            .split_whitespace()
+            .map(|t| {
+                let (l, b) = t.split_once(':').expect("label:bytes");
+                (l.parse::<u64>().unwrap(), b.parse::<u64>().unwrap())
+            })
+            .filter(|(l, _)| (labels::UPLOAD_BASE..labels::UBLOCK_BASE).contains(l))
+            .map(|(_, b)| b)
+            .sum()
+    };
+    let (u0, u1) = (upload_traffic("user0"), upload_traffic("user1"));
+    assert_eq!(
+        u0, u1,
+        "upload ledgers diverge across the reconnect (replays double-counted?)"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The LR variant of the severed-socket run: the drop hits between the
+/// two shard uploads, the transport resumes, and the per-user weights +
+/// training MSE still match the sequential oracle to ≤ 1e-9.
+#[test]
+fn lr_federation_survives_a_severed_socket_mid_round() {
+    if !loopback_available() {
+        eprintln!("skipping: loopback TCP unavailable in this sandbox");
+        return;
+    }
+    let dir = fresh_dir("drop_lr");
+    let (m, n, k) = (40usize, 9usize, 2usize);
+    let dirs = dir.to_string_lossy().into_owned();
+    let common = [
+        "--peers-dir", dirs.as_str(), "--task", "lr",
+        "--m", "40", "--n", "9", "--users", "2", "--block", "4", "--shards", "2",
+    ];
+    let extra: HashMap<&str, Vec<&str>> =
+        [("user1", vec!["--inject-drop", "upload"])].into_iter().collect();
+    let outs = run_federation(&["ta", "csp", "user0", "user1"], &common, &extra);
+    if !outs.iter().all(|(_, ok, _, _)| *ok) {
+        dump_and_panic("a party exited non-zero on the LR drop path", &outs);
+    }
+    let by_role: HashMap<String, HashMap<String, String>> = outs
+        .iter()
+        .map(|(r, _, so, _)| (r.clone(), results(so)))
+        .collect();
+    let reconnects: u64 = by_role["user1"]["reconnects"].parse().unwrap();
+    assert!(reconnects >= 1, "user1 reported {reconnects} reconnects");
+
+    let (x, _w_true, y) = regression_task(m, n, 0.1, 7);
+    let parts = split_columns(&x, k).unwrap();
+    let cfg = FedSvdConfig {
+        block_size: 4,
+        ..Default::default()
+    };
+    let oracle = run_federated_lr(&parts, &y, 0, &cfg, CpuBackend::global()).unwrap();
+    for (i, role) in ["user0", "user1"].iter().enumerate() {
+        let w = parse_vec(&by_role[*role]["w"]);
+        let d = max_abs_diff(&w, &oracle.w_parts[i]);
+        assert!(d <= TOL, "{role} wᵢ deviates through the drop: {d:e}");
+    }
+    let mse: f64 = by_role["user0"]["mse"].parse().unwrap();
+    assert!(
+        (mse - oracle.train_mse).abs() <= TOL * (1.0 + oracle.train_mse),
+        "train MSE deviates through the drop: {mse} vs {}",
+        oracle.train_mse
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// When reconnection is forbidden (`--reconnect-retries 0`), a severed
+/// socket must be a *clean* federation abort, not a hang: the losing
+/// party names the lost peer, dumps its flight recorder, and fails every
+/// blocked peer through the abort broadcast — all well inside the
+/// watchdog deadline.
+#[test]
+fn reconnect_retries_exhausted_aborts_cleanly_with_flight_dump() {
+    if !loopback_available() {
+        eprintln!("skipping: loopback TCP unavailable in this sandbox");
+        return;
+    }
+    let dir = fresh_dir("drop_exhausted");
+    let dirs = dir.to_string_lossy().into_owned();
+    let common = [
+        "--peers-dir", dirs.as_str(), "--task", "svd",
+        "--m", "24", "--n", "8", "--users", "2", "--block", "4", "--shards", "2",
+    ];
+    let extra: HashMap<&str, Vec<&str>> =
+        [("user1", vec!["--inject-drop", "upload", "--reconnect-retries", "0"])]
+            .into_iter()
+            .collect();
+    let outs = run_federation(&["ta", "csp", "user0", "user1"], &common, &extra);
+    let status: HashMap<&str, bool> = outs
+        .iter()
+        .map(|(r, ok, _, _)| (r.as_str(), *ok))
+        .collect();
+    assert!(!status["user1"], "user1 exited 0 with reconnection forbidden");
+    assert!(!status["csp"], "CSP exited 0 despite the peer-loss abort");
+    assert!(!status["user0"], "user0 exited 0 despite the peer-loss abort");
+    let user1_stderr = &outs.iter().find(|(r, ..)| r == "user1").expect("user1 output").3;
+    assert!(
+        user1_stderr.contains("lost connection to party 1")
+            && user1_stderr.contains("reconnect failed"),
+        "user1 stderr does not name the lost peer:\n{user1_stderr}"
+    );
+    assert!(
+        user1_stderr.contains("FLIGHT-RECORDER DUMP party=user1"),
+        "user1 stderr lacks the flight-recorder dump:\n{user1_stderr}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn injected_abort_fails_every_party_fast_with_no_zombies() {
     if !loopback_available() {

@@ -41,12 +41,17 @@ fn rand_slice(rng: &mut Xoshiro256) -> fedsvd::mask::block_diag::BlockDiagSlice 
 }
 
 fn roundtrip(msg: &ClusterMsg, label: u64) -> (ClusterMsg, u64) {
-    let buf = encode_frame(msg, label);
+    // derive a nonzero sequence number so the v3 `seq` header field is
+    // exercised by every round-trip in this suite
+    let seq = label.wrapping_mul(3).wrapping_add(11);
+    let buf = encode_frame(msg, label, seq);
     // slice and stream decoders must agree
-    let (m1, l1) = decode_frame(&buf).expect("slice decode");
+    let (m1, l1, s1) = decode_frame(&buf).expect("slice decode");
     let mut cur = std::io::Cursor::new(buf.clone());
-    let (_m2, l2, bytes) = read_frame(&mut cur).expect("stream decode");
+    let (_m2, l2, s2, bytes) = read_frame(&mut cur).expect("stream decode");
     assert_eq!(l1, l2);
+    assert_eq!(s1, seq);
+    assert_eq!(s2, seq);
     assert_eq!(bytes, buf.len() as u64);
     (m1, l1)
 }
@@ -198,6 +203,11 @@ fn all_message_kinds_roundtrip() {
             matches!(back, ClusterMsg::Shutdown { from: 1 }),
             "Shutdown drifted"
         );
+        let (back, _) = roundtrip(&ClusterMsg::Heartbeat { from: 2 }, 0);
+        prop_assert!(
+            matches!(back, ClusterMsg::Heartbeat { from: 2 }),
+            "Heartbeat drifted"
+        );
         Ok(())
     });
 }
@@ -220,8 +230,8 @@ fn special_f64_values_roundtrip_bit_exactly() {
         -f64::MAX,
         1.0 + f64::EPSILON,
     ];
-    let (back, _) = {
-        let buf = encode_frame(&ClusterMsg::Sigma(specials.clone()), 3);
+    let (back, _, _) = {
+        let buf = encode_frame(&ClusterMsg::Sigma(specials.clone()), 3, 1);
         decode_frame(&buf).expect("decode specials")
     };
     let ClusterMsg::Sigma(got) = back else {
@@ -235,8 +245,8 @@ fn special_f64_values_roundtrip_bit_exactly() {
     );
     // and inside a matrix payload
     let m = Mat::from_vec(specials.len(), 1, specials.clone()).unwrap();
-    let buf = encode_frame(&ClusterMsg::VResp(m), 0);
-    let (ClusterMsg::VResp(got), _) = decode_frame(&buf).expect("decode mat") else {
+    let buf = encode_frame(&ClusterMsg::VResp(m), 0, 2);
+    let (ClusterMsg::VResp(got), _, _) = decode_frame(&buf).expect("decode mat") else {
         panic!("kind lost")
     };
     assert!(bits_equal(got.data(), &specials));
@@ -249,7 +259,7 @@ fn truncated_frames_are_rejected_at_every_cut() {
             r0: 3,
             data: rand_mat(rng, 1 + rng.next_below(4) as usize, 1 + rng.next_below(6) as usize),
         };
-        let buf = encode_frame(&msg, 17);
+        let buf = encode_frame(&msg, 17, 1);
         for cut in 0..buf.len() {
             prop_assert!(
                 decode_frame(&buf[..cut]).is_err(),
@@ -267,7 +277,7 @@ fn truncated_frames_are_rejected_at_every_cut() {
 #[test]
 fn tampered_frames_are_rejected() {
     let msg = ClusterMsg::Sigma(vec![1.0, 2.0, 3.0]);
-    let good = encode_frame(&msg, 8);
+    let good = encode_frame(&msg, 8, 1);
     assert!(decode_frame(&good).is_ok());
 
     // wrong magic
@@ -289,7 +299,7 @@ fn tampered_frames_are_rejected() {
 
     // oversized length prefix (must be rejected before any allocation)
     let mut bad = good.clone();
-    bad[16..24].copy_from_slice(&(MAX_FRAME_PAYLOAD + 1).to_le_bytes());
+    bad[24..32].copy_from_slice(&(MAX_FRAME_PAYLOAD + 1).to_le_bytes());
     assert!(decode_frame(&bad).is_err(), "oversized length accepted");
 
     // trailing junk after the declared payload
@@ -320,8 +330,8 @@ fn empty_and_boundary_shapes_roundtrip() {
         ClusterMsg::Batch { batch: 0, user: 0, share: Vec::new() },
     ] {
         let kind = msg.kind();
-        let buf = encode_frame(&msg, 0);
-        let (back, _) = decode_frame(&buf).expect("boundary decode");
+        let buf = encode_frame(&msg, 0, 1);
+        let (back, _, _) = decode_frame(&buf).expect("boundary decode");
         assert_eq!(back.kind(), kind);
     }
 }
