@@ -233,6 +233,62 @@ fn main() {
         let _ = std::fs::remove_dir_all(&trace_tmp);
     }
 
+    // ---- Live metrics overhead: off vs on vs on-while-scraped ---------
+    // One event = one on_send + one on_recv, the two feeds on the
+    // transport's per-frame hot path. "off" is the default state (no
+    // `--metrics-addr`), "on" the registry cost alone, "on_scraped" the
+    // same while another thread renders `/metrics` in a tight loop —
+    // scrapes must not stall the data plane.
+    section(
+        "hotpath/obs",
+        "live metrics overhead: off vs on vs on+scraped — JSON rows",
+    );
+    {
+        use fedsvd::obs::metrics_live;
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        let events = 200_000u64;
+        for mode in ["off", "on", "on_scraped"] {
+            metrics_live::reset_for_tests();
+            metrics_live::set_enabled(mode != "off");
+            let stop = Arc::new(AtomicBool::new(false));
+            let scraper = (mode == "on_scraped").then(|| {
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let mut scrapes = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        std::hint::black_box(metrics_live::render_metrics());
+                        scrapes += 1;
+                    }
+                    scrapes
+                })
+            });
+            let start = std::time::Instant::now();
+            for i in 0..events {
+                metrics_live::on_send(1_000 + (i % 4), 4 * 1024);
+                metrics_live::on_recv(4 * 1024);
+            }
+            let elapsed = start.elapsed().as_secs_f64();
+            stop.store(true, Ordering::Relaxed);
+            let scrapes = scraper.map_or(0, |h| h.join().unwrap_or(0));
+            metrics_live::set_enabled(false);
+            metrics_live::reset_for_tests();
+            let ns_per_event = elapsed / events as f64 * 1e9;
+            println!("metrics {mode}: {ns_per_event:.1} ns/event ({scrapes} scrapes)");
+            println!(
+                "{}",
+                JsonRow::new()
+                    .str("bench", "metrics_live_overhead")
+                    .str("mode", mode)
+                    .u64("events", events)
+                    .u64("concurrent_scrapes", scrapes)
+                    .f64("wall_s", elapsed, 6)
+                    .f64("ns_per_event", ns_per_event, 1)
+                    .finish()
+            );
+        }
+    }
+
     section("hotpath/L3", "secagg mask expansion + aggregate (2 users, 64×512)");
     let seeds = vec![vec![0, 7], vec![7, 0]];
     let group = SecAggGroup::from_seeds(seeds).unwrap();

@@ -195,6 +195,10 @@ pub struct DistOutcome {
     /// Bytes re-sent from replay buffers after reconnects — metered
     /// separately from `round_traffic`, never double-counted there.
     pub replayed_bytes: u64,
+    /// Control-plane bytes (handshakes, acks, heartbeats, shutdown
+    /// frames) that crossed this endpoint — the `round_traffic` entry
+    /// ledgered under no round label, surfaced separately.
+    pub overhead_bytes: u64,
 }
 
 /// Where this process's party data comes from.
@@ -519,6 +523,7 @@ pub fn run_party_distributed_with(
         part_peak_bytes: 0,
         reconnects: 0,
         replayed_bytes: 0,
+        overhead_bytes: 0,
     };
     match dcfg.role {
         PartyRole::Ta => {
@@ -586,5 +591,10 @@ pub fn run_party_distributed_with(
     out.real_bytes = transport.total_bytes();
     out.reconnects = transport.reconnects();
     out.replayed_bytes = transport.replayed_bytes();
+    out.overhead_bytes = out
+        .round_traffic
+        .iter()
+        .find(|&&(l, _)| l == u64::MAX)
+        .map_or(0, |&(_, b)| b);
     Ok(out)
 }

@@ -326,6 +326,12 @@ pub(crate) struct PartyLink<'a> {
     /// The round this party is currently sending in — stamps trace
     /// `send` events with the same label the transport ledgers use.
     cur_round: std::cell::Cell<Option<u64>>,
+    /// Trace/status role name (`ta`, `csp`, `user<i>`) — keys this
+    /// party's row in the live `/status` snapshot.
+    role: String,
+    /// When the current round was entered (live-metrics latency clock;
+    /// only stamped while the metrics plane is enabled).
+    round_t0: std::cell::Cell<Option<std::time::Instant>>,
 }
 
 impl<'a> PartyLink<'a> {
@@ -334,6 +340,8 @@ impl<'a> PartyLink<'a> {
             t,
             stash: std::cell::RefCell::new(VecDeque::new()),
             cur_round: std::cell::Cell::new(None),
+            role: party_role_name(t.party()),
+            round_t0: std::cell::Cell::new(None),
         }
     }
 
@@ -345,6 +353,10 @@ impl<'a> PartyLink<'a> {
         obs::with_current(|tr| tr.span_enter(&format!("round:{}", labels::name(label)), Some(label)));
         self.t.round_enter(label, senders)?;
         self.cur_round.set(Some(label));
+        if obs::metrics_live::enabled() {
+            obs::metrics_live::round_enter(&self.role, label);
+            self.round_t0.set(Some(std::time::Instant::now()));
+        }
         Ok(())
     }
 
@@ -354,6 +366,7 @@ impl<'a> PartyLink<'a> {
         // local fabric, real frame bytes on TCP), so per-label trace
         // totals reconcile exactly with `ClusterStats::round_traffic`.
         let bytes = self.t.send(to, msg)?;
+        obs::metrics_live::on_send(self.cur_round.get().unwrap_or(u64::MAX), bytes);
         obs::with_current(|tr| tr.send_event(kind, self.cur_round.get(), to, bytes));
         Ok(())
     }
@@ -361,6 +374,9 @@ impl<'a> PartyLink<'a> {
     fn leave(&self, label: u64) -> Result<()> {
         self.cur_round.set(None);
         self.t.round_leave(label)?;
+        if let Some(t0) = self.round_t0.replace(None) {
+            obs::metrics_live::round_complete(&self.role, t0.elapsed().as_micros() as u64);
+        }
         obs::with_current(|tr| tr.span_leave(&format!("round:{}", labels::name(label)), Some(label), None));
         Ok(())
     }
@@ -413,6 +429,11 @@ pub(crate) fn run_party<T>(
 ) -> Result<T> {
     let tracer = obs::Tracer::new(&party_role_name(t.party()), t.session());
     let _scope = obs::set_current(Arc::clone(&tracer));
+    // Live health plane: bind the per-party HTTP listener (if
+    // `FEDSVD_METRICS_ADDR` / `--metrics-addr` names one) for the
+    // party's whole lifetime — close/abort below still serve scrapes,
+    // the guard's drop releases the port.
+    let _metrics = obs::metrics_live::party_scope(tracer.party(), t.session());
     tracer.span_enter("party", None);
     let link = PartyLink::new(t);
     let r = std::panic::catch_unwind(AssertUnwindSafe(|| body(&link)))
@@ -1522,6 +1543,7 @@ pub(crate) fn csp_body(
     let (n4, b4) = link.meters();
     metrics.end(n4, b4);
 
+    obs::metrics_live::set_csp_gauges(store.peak_bytes(), mem_budget);
     Ok(CspOut {
         metrics,
         s: ooc.s,

@@ -107,6 +107,24 @@
 //! Bench JSON rows and trace lines share one escaping emitter,
 //! [`metrics::jsonl`].
 //!
+//! The same seams also feed a **live health plane**
+//! ([`obs::metrics_live`]): a process-global registry of relaxed-atomic
+//! counters, gauges and fixed-bucket histograms, served over a
+//! zero-dep `std::net` HTTP listener (`--metrics-addr` /
+//! `FEDSVD_METRICS_ADDR`) as Prometheus text exposition on
+//! `GET /metrics` plus a JSON `GET /status` snapshot — role, current
+//! round, rounds completed, and a per-round-label byte ledger on the
+//! same sent-bytes basis as the trace ledger, so any mid-run scrape is
+//! a prefix of the final `ClusterStats::round_traffic`. The listener is
+//! refcounted across the party scopes of a process (thread fabrics
+//! share one) and released when the last party exits; `fedsvd status
+//! <addr>,…` polls the `/status` endpoints into one merged progress
+//! table. With no address configured every feed is a branch-predicted
+//! no-op behind one atomic flag (`metrics_live_overhead` rows in
+//! `bench_hotpath` track off/on/on-while-scraped cost;
+//! `tests/metrics_live_suite.rs` pins exposition conformance, listener
+//! lifecycle and scrape-during-federation monotonicity).
+//!
 //! The §4 applications (PCA / LR / LSA) run through the same seam:
 //! `coordinator::Session::{run_pca, run_lr, run_lsa}` execute on either
 //! mode unchanged. On the cluster they ride `cluster::ClusterApp` — the

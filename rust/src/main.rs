@@ -15,7 +15,9 @@
 //!              [--task svd|pca|lr|lsa] [--data MANIFEST [--chunk-rows N]]
 //!              [--listen H:P] [--m M] [--n N]
 //!              [--users K] [--seed N] [--shards S] [--budget-mb MB]
-//! fedsvd trace merge DIR [--out FILE]
+//!              [--metrics-addr H:P]
+//! fedsvd status ADDR[,ADDR...]
+//! fedsvd trace merge DIR [--out FILE] [--session ID]
 //! fedsvd info
 //! ```
 //!
@@ -445,6 +447,7 @@ fn print_dist_outcome(out: &fedsvd::cluster::DistOutcome) {
     println!("RESULT bytes {}", out.real_bytes);
     println!("RESULT reconnects {}", out.reconnects);
     println!("RESULT replayed_bytes {}", out.replayed_bytes);
+    println!("RESULT overhead_bytes {}", out.overhead_bytes);
     println!("DONE {}", out.role.name());
 }
 
@@ -461,6 +464,12 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
             .ok_or("serve: --role ta|csp|user<i> is required")?,
     )
     .map_err(|e| e.to_string())?;
+    // live health plane: `--metrics-addr host:port` (or the
+    // FEDSVD_METRICS_ADDR env var) serves /metrics and /status for this
+    // party's whole run — `fedsvd status` polls it
+    if let Some(addr) = flags.get("metrics-addr") {
+        fedsvd::obs::metrics_live::set_metrics_addr_override(Some(addr));
+    }
     let task = flags.get("task").map(String::as_str).unwrap_or("svd");
     let m = flag_usize(flags, "m", 48);
     let n = flag_usize(flags, "n", 16);
@@ -672,7 +681,22 @@ fn cmd_trace(rest: &[String]) -> Result<(), String> {
                 .filter(|d| !d.starts_with("--"))
                 .ok_or("trace merge: missing <dir> (the FEDSVD_TRACE directory)")?;
             let flags = parse_flags(&rest[2..]);
-            let merged = fedsvd::obs::merge::merge_dir(Path::new(dir))
+            // `--session` pins the run to merge (decimal or 0x-hex);
+            // without it the majority session in the directory wins
+            let want_session = match flags.get("session") {
+                Some(v) => {
+                    let s = v.trim();
+                    let parsed = match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+                        Some(hex) => u64::from_str_radix(hex, 16),
+                        None => s.parse::<u64>(),
+                    };
+                    Some(parsed.map_err(|_| {
+                        format!("trace merge: bad --session `{v}` (want a decimal or 0x-hex id)")
+                    })?)
+                }
+                None => None,
+            };
+            let merged = fedsvd::obs::merge::merge_dir_with(Path::new(dir), want_session)
                 .map_err(|e| format!("trace merge: {e}"))?;
             match flags.get("out") {
                 Some(path) => {
@@ -685,14 +709,159 @@ fn cmd_trace(rest: &[String]) -> Result<(), String> {
             Ok(())
         }
         _ => Err(
-            "usage: fedsvd trace merge <dir> [--out FILE] — merge the per-party \
-             FEDSVD_TRACE JSONL streams into one Chrome trace_event timeline"
+            "usage: fedsvd trace merge <dir> [--out FILE] [--session ID] — merge the \
+             per-party FEDSVD_TRACE JSONL streams into one Chrome trace_event timeline"
                 .into(),
         ),
     }
 }
 
+/// `fedsvd status` — poll the `/status` endpoints of a live federation
+/// (one per `fedsvd serve --metrics-addr` process) and render one
+/// merged progress table.
+fn cmd_status(rest: &[String]) -> Result<(), String> {
+    use fedsvd::metrics::jsonl::Json;
+
+    let addrs: Vec<String> = rest
+        .iter()
+        .filter(|a| !a.starts_with("--"))
+        .flat_map(|a| a.split(','))
+        .map(|a| a.trim().to_string())
+        .filter(|a| !a.is_empty())
+        .collect();
+    if addrs.is_empty() {
+        return Err(
+            "usage: fedsvd status <host:port>[,<host:port>…] — poll the /status \
+             endpoints served by `fedsvd serve --metrics-addr`"
+                .into(),
+        );
+    }
+
+    struct Row {
+        role: String,
+        session: String,
+        round: String,
+        rounds: u64,
+        sent: u64,
+        recv: u64,
+        overhead: u64,
+        reconnects: u64,
+        peak_rss: u64,
+        addr: String,
+    }
+    // canonical federation order: ta, csp, user0, user1, …
+    fn role_rank(role: &str) -> (u8, usize) {
+        match role {
+            "ta" => (0, 0),
+            "csp" => (1, 0),
+            r => (
+                2,
+                r.strip_prefix("user")
+                    .and_then(|i| i.parse().ok())
+                    .unwrap_or(usize::MAX),
+            ),
+        }
+    }
+
+    let mut rows: Vec<Row> = Vec::new();
+    for addr in &addrs {
+        let body = match fedsvd::obs::metrics_live::http_get(addr, "/status") {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("status: {e} — skipping");
+                continue;
+            }
+        };
+        let v = Json::parse(&body).map_err(|e| format!("status: bad JSON from {addr}: {e}"))?;
+        let top_u64 = |k: &str| v.get(k).and_then(Json::as_u64).unwrap_or(0);
+        let session = v
+            .get("session")
+            .and_then(Json::as_str)
+            .unwrap_or("?")
+            .to_string();
+        let mut found_party = false;
+        if let Some(parties) = v.get("parties").and_then(Json::as_arr) {
+            for p in parties {
+                found_party = true;
+                rows.push(Row {
+                    role: p
+                        .get("role")
+                        .and_then(Json::as_str)
+                        .unwrap_or("?")
+                        .to_string(),
+                    session: session.clone(),
+                    round: p
+                        .get("round")
+                        .and_then(Json::as_str)
+                        .unwrap_or("-")
+                        .to_string(),
+                    rounds: p.get("rounds_completed").and_then(Json::as_u64).unwrap_or(0),
+                    sent: top_u64("bytes_sent"),
+                    recv: top_u64("bytes_recv"),
+                    overhead: top_u64("overhead_bytes"),
+                    reconnects: top_u64("reconnects"),
+                    peak_rss: top_u64("peak_rss_bytes"),
+                    addr: addr.clone(),
+                });
+            }
+        }
+        if !found_party {
+            // endpoint is up but no party has registered (yet)
+            rows.push(Row {
+                role: "?".into(),
+                session,
+                round: "-".into(),
+                rounds: top_u64("rounds_completed"),
+                sent: top_u64("bytes_sent"),
+                recv: top_u64("bytes_recv"),
+                overhead: top_u64("overhead_bytes"),
+                reconnects: top_u64("reconnects"),
+                peak_rss: top_u64("peak_rss_bytes"),
+                addr: addr.clone(),
+            });
+        }
+    }
+    if rows.is_empty() {
+        return Err(format!(
+            "status: no endpoint of {} answered — is the federation running with \
+             --metrics-addr?",
+            addrs.join(", ")
+        ));
+    }
+    rows.sort_by_key(|r| role_rank(&r.role));
+
+    println!("session {}", rows[0].session);
+    println!(
+        "{:<8} {:<14} {:>7} {:>12} {:>12} {:>10} {:>7} {:>10}  {}",
+        "PARTY", "ROUND", "ROUNDS", "SENT", "RECV", "OVERHEAD", "RECONN", "PEAK RSS", "ADDR"
+    );
+    for r in &rows {
+        println!(
+            "{:<8} {:<14} {:>7} {:>12} {:>12} {:>10} {:>7} {:>10}  {}",
+            r.role,
+            r.round,
+            r.rounds,
+            human_bytes(r.sent),
+            human_bytes(r.recv),
+            human_bytes(r.overhead),
+            r.reconnects,
+            human_bytes(r.peak_rss),
+            r.addr
+        );
+    }
+    Ok(())
+}
+
 fn main() -> ExitCode {
+    // validate the flight-ring capacity up front: a typo'd
+    // FEDSVD_FLIGHT_EVENTS should be a clean CLI error, not a silent
+    // default (and not a mid-run panic at first flight push)
+    if let Err(e) = fedsvd::obs::parse_flight_capacity(
+        std::env::var("FEDSVD_FLIGHT_EVENTS").ok().as_deref(),
+    ) {
+        eprintln!("error: {e}");
+        return ExitCode::FAILURE;
+    }
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     let flags = parse_flags(&args[args.len().min(1)..]);
@@ -705,10 +874,11 @@ fn main() -> ExitCode {
         "split" => cmd_split(&flags),
         "serve" => cmd_serve(&flags),
         "trace" => cmd_trace(&args[1..]),
+        "status" => cmd_status(&args[1..]),
         "info" => cmd_info(),
         _ => {
             println!(
-                "usage: fedsvd <svd|pca|lr|lsa|attack|split|serve|trace|info> [--m M] [--n N] [--users K] \
+                "usage: fedsvd <svd|pca|lr|lsa|attack|split|serve|status|trace|info> [--m M] [--n N] [--users K] \
                  [--block B] [--rank R] [--dataset name] [--scale S] [--config file] \
                  [--shards S [--budget-mb MB]]\n\
                  \n\
@@ -722,9 +892,13 @@ fn main() -> ExitCode {
                  \x20       [--task svd|pca|lr|lsa] [--data MANIFEST [--chunk-rows N]]\n\
                  \x20       [--listen H:P] [--m M] [--n N] [--users K]\n\
                  \x20       [--seed N] [--data-seed N] [--shards S] [--budget-mb MB]\n\
+                 \x20       [--metrics-addr H:P]\n\
+                 \n\
+                 status (live progress of a federation serving --metrics-addr):\n\
+                 fedsvd status <host:port>[,<host:port>...]\n\
                  \n\
                  trace (observability; set FEDSVD_TRACE=<dir> on any run to record):\n\
-                 fedsvd trace merge <dir> [--out FILE]"
+                 fedsvd trace merge <dir> [--out FILE] [--session ID]"
             );
             Ok(())
         }

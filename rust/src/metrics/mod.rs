@@ -59,6 +59,7 @@ impl MetricsRecorder {
             // process-global hot-path counters.
             t.counter_snapshot();
         });
+        crate::obs::metrics_live::on_phase((phase.wall_s * 1e6) as u64);
         self.phases.push(phase);
     }
 

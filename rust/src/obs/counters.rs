@@ -58,6 +58,7 @@ pub fn pool_dispatch(tasks: u64) {
 pub fn shard_spill(bytes: u64) {
     SHARD_SPILLS.fetch_add(1, Relaxed);
     SHARD_SPILL_BYTES.fetch_add(bytes, Relaxed);
+    super::metrics_live::on_shard_spill(bytes);
 }
 
 /// One spilled block read back from disk.
@@ -65,6 +66,7 @@ pub fn shard_spill(bytes: u64) {
 pub fn shard_load(bytes: u64) {
     SHARD_LOADS.fetch_add(1, Relaxed);
     SHARD_LOAD_BYTES.fetch_add(bytes, Relaxed);
+    super::metrics_live::on_shard_load(bytes);
 }
 
 /// Cumulative totals of every non-zero counter, as `(key, value)` pairs

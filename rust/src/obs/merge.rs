@@ -8,7 +8,9 @@
 //! * streams are grouped by **session id**; when a directory holds more
 //!   than one session (parallel federations tracing into one dir) the
 //!   largest session is merged and the rest are reported on stderr —
-//!   nothing is dropped silently;
+//!   nothing is dropped silently. `--session <id>` overrides the
+//!   majority pick, for when a stray stream from an earlier run
+//!   outvotes the run you want;
 //! * within the chosen session each party becomes one named track
 //!   (`tid`), ordered ta, csp, user0, user1, …;
 //! * timestamps are per-process monotonic microseconds, so streams from
@@ -18,9 +20,11 @@
 //!   the protocol's lockstep rounds make that a faithful sync point.
 //!
 //! The output also carries a `roundTraffic` object — per-round-label
-//! byte totals summed from the `send` events — which reconciles exactly
-//! with `ClusterStats::round_traffic` (same metering, same labels; see
-//! `tests/obs_trace_suite.rs`).
+//! byte totals summed from the `send` events, plus the control-plane
+//! overhead each TCP endpoint reports at teardown
+//! ([`crate::obs::EV_OVERHEAD_BYTES`]) under the `UNLABELLED` key —
+//! which reconciles exactly with the full `ClusterStats::round_traffic`
+//! (same metering, same labels; see `tests/obs_trace_suite.rs`).
 
 use crate::metrics::jsonl::{escape, Json, JsonRow};
 use crate::util::{Error, Result};
@@ -115,34 +119,80 @@ fn party_rank(p: &str) -> (u8, u64, String) {
     }
 }
 
-/// Per-round-label byte totals of the `send` events in `dir`, sorted by
-/// label — the trace-side counterpart of `ClusterStats::round_traffic`.
-pub fn send_totals(dir: &Path) -> Result<Vec<(u64, u64)>> {
-    let events = read_dir_events(dir)?;
-    let mut totals: BTreeMap<u64, u64> = BTreeMap::new();
-    for e in events.iter().filter(|e| e.ev == "send") {
+/// Fold one event into per-round-label byte totals: labelled `send`
+/// events under their round, endpoint-teardown overhead reports
+/// ([`crate::obs::EV_OVERHEAD_BYTES`]) under the transport's
+/// `UNLABELLED` key — together these are exactly the basis of
+/// `ClusterStats::round_traffic`.
+fn fold_traffic(totals: &mut BTreeMap<u64, u64>, e: &Ev) {
+    if e.ev == "send" {
         if let (Some(r), Some(b)) = (e.round, e.bytes) {
             *totals.entry(r).or_insert(0) += b;
         }
+    } else if e.ev == "instant" && e.name == crate::obs::EV_OVERHEAD_BYTES {
+        if let Some(b) = e.bytes {
+            if b > 0 {
+                *totals.entry(u64::MAX).or_insert(0) += b;
+            }
+        }
+    }
+}
+
+/// Per-round-label byte totals of the `send` events in `dir` (plus
+/// control-plane overhead under `u64::MAX`), sorted by label — the
+/// trace-side counterpart of `ClusterStats::round_traffic`.
+pub fn send_totals(dir: &Path) -> Result<Vec<(u64, u64)>> {
+    let events = read_dir_events(dir)?;
+    let mut totals: BTreeMap<u64, u64> = BTreeMap::new();
+    for e in &events {
+        fold_traffic(&mut totals, e);
     }
     Ok(totals.into_iter().collect())
 }
 
 /// Merge every per-party stream under `dir` into a Chrome trace JSON
 /// document (returned as a string; notes about skipped sessions go to
-/// stderr).
+/// stderr). Picks the session with the most events.
 pub fn merge_dir(dir: &Path) -> Result<String> {
+    merge_dir_with(dir, None)
+}
+
+/// [`merge_dir`] with an explicit session override: `Some(id)` merges
+/// exactly that session (erroring with the available ids when the
+/// directory holds no events for it) instead of the majority pick.
+pub fn merge_dir_with(dir: &Path, want_session: Option<u64>) -> Result<String> {
     let all = read_dir_events(dir)?;
 
-    // Pick the dominant session; report what that excludes.
+    // Pick the requested session, else the dominant one; report what
+    // that excludes.
     let mut by_session: BTreeMap<u64, usize> = BTreeMap::new();
     for e in &all {
         *by_session.entry(e.session).or_insert(0) += 1;
     }
-    let (&session, _) = by_session
-        .iter()
-        .max_by_key(|(_, n)| **n)
-        .ok_or_else(|| Error::Runtime("trace merge: no events".into()))?;
+    let session = match want_session {
+        Some(s) => {
+            if !by_session.contains_key(&s) {
+                let have: Vec<String> = by_session
+                    .iter()
+                    .map(|(s, n)| format!("{s:#x} ({n} events)"))
+                    .collect();
+                return Err(Error::Runtime(format!(
+                    "trace merge: no events for session {s:#x} in {}; \
+                     sessions present: {}",
+                    dir.display(),
+                    have.join(", ")
+                )));
+            }
+            s
+        }
+        None => {
+            let (&s, _) = by_session
+                .iter()
+                .max_by_key(|(_, n)| **n)
+                .ok_or_else(|| Error::Runtime("trace merge: no events".into()))?;
+            s
+        }
+    };
     if by_session.len() > 1 {
         let skipped: Vec<String> = by_session
             .iter()
@@ -282,12 +332,11 @@ pub fn merge_dir(dir: &Path) -> Result<String> {
         rows.push(row.finish());
     }
 
-    // Per-round byte totals from the send events of the merged session.
+    // Per-round byte totals from the send events of the merged session
+    // (+ endpoint-teardown overhead reports under UNLABELLED).
     let mut totals: BTreeMap<u64, u64> = BTreeMap::new();
-    for e in events.iter().filter(|e| e.ev == "send") {
-        if let (Some(r), Some(b)) = (e.round, e.bytes) {
-            *totals.entry(r).or_insert(0) += b;
-        }
+    for e in &events {
+        fold_traffic(&mut totals, e);
     }
     let traffic = {
         let mut row = JsonRow::new();
@@ -351,6 +400,80 @@ mod tests {
             .filter_map(|e| e.get("args").and_then(|a| a.get("name")).and_then(Json::as_str))
             .collect();
         assert_eq!(names, vec!["ta", "user0"]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn session_override_beats_majority_in_a_mixed_directory() {
+        let _g = crate::obs::tests::OBS_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        let dir = std::env::temp_dir().join(format!(
+            "fedsvd-obs-mixed-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        // A stray, *louder* stream from an earlier run (session 0x0a)
+        // shares the directory with the run we actually want (0x0b).
+        {
+            let stale = Tracer::with_sink_dir("ta", 0x0a, Some(&dir));
+            for i in 0..20 {
+                stale.span_enter(&format!("old{i}"), None);
+                stale.span_leave(&format!("old{i}"), None, None);
+            }
+            stale.send_event("Old", Some(0), 1, 7_777);
+            let ta = Tracer::with_sink_dir("ta", 0x0b, Some(&dir));
+            ta.span_enter("round:PSEED", Some(0));
+            ta.send_event("PSeed", Some(0), 2, 100);
+            ta.span_leave("round:PSEED", Some(0), None);
+        }
+        // Majority pick merges the stale session…
+        let majority = Json::parse(&merge_dir(&dir).unwrap()).unwrap();
+        assert_eq!(majority.get("session").and_then(Json::as_u64), Some(0x0a));
+        // …the override selects the outvoted run and carries only its
+        // traffic.
+        let wanted = Json::parse(&merge_dir_with(&dir, Some(0x0b)).unwrap()).unwrap();
+        assert_eq!(wanted.get("session").and_then(Json::as_u64), Some(0x0b));
+        let traffic = wanted.get("roundTraffic").unwrap();
+        assert_eq!(traffic.get("0").and_then(Json::as_u64), Some(100));
+        // An absent session is a clear error naming what *is* there.
+        let err = merge_dir_with(&dir, Some(0xdead)).unwrap_err().to_string();
+        assert!(err.contains("0xdead") && err.contains("0xb"), "got: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn overhead_instants_fold_into_round_traffic_unlabelled() {
+        let _g = crate::obs::tests::OBS_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        let dir = std::env::temp_dir().join(format!(
+            "fedsvd-obs-overhead-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let ta = Tracer::with_sink_dir("ta", 9, Some(&dir));
+            let u0 = Tracer::with_sink_dir("user0", 9, Some(&dir));
+            ta.span_enter("party", None);
+            ta.send_event("PSeed", Some(0), 2, 100);
+            ta.span_leave("party", None, None);
+            ta.instant(crate::obs::EV_OVERHEAD_BYTES, Some(96));
+            u0.span_enter("party", None);
+            u0.span_leave("party", None, None);
+            u0.instant(crate::obs::EV_OVERHEAD_BYTES, Some(56));
+        }
+        let totals = send_totals(&dir).unwrap();
+        assert_eq!(totals, vec![(0, 100), (u64::MAX, 152)]);
+        let v = Json::parse(&merge_dir(&dir).unwrap()).unwrap();
+        let traffic = v.get("roundTraffic").unwrap();
+        assert_eq!(traffic.get("0").and_then(Json::as_u64), Some(100));
+        // u64::MAX survives Json's f64 numbers by the as_u64 rounding
+        // contract; assert on the emitted key instead.
+        assert!(
+            merge_dir(&dir).unwrap().contains(&format!("\"{}\":152", u64::MAX)),
+            "overhead key missing from roundTraffic"
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -12,13 +12,20 @@
 //!   transport error, watchdog-induced teardown) the runtime dumps the
 //!   ring to stderr ([`flight_dump_stderr`]), so every distributed
 //!   failure leaves a post-mortem identifying the party and the round it
-//!   died in — even when JSONL tracing was never enabled;
+//!   died in — even when JSONL tracing was never enabled (ring capacity:
+//!   `FEDSVD_FLIGHT_EVENTS`, default [`FLIGHT_CAPACITY`]);
 //! * an opt-in **JSONL writer** — set `FEDSVD_TRACE=<dir>` and each
 //!   party appends one event per line to its own
 //!   `<role>-<session>-<pid>.jsonl` stream (line-buffered and flushed
 //!   per event, so streams survive crashes). `fedsvd trace merge <dir>`
 //!   ([`merge`]) aligns the per-party streams into a single Chrome
-//!   `trace_event` timeline.
+//!   `trace_event` timeline;
+//! * the **live health plane** ([`metrics_live`]) — opt-in via
+//!   `FEDSVD_METRICS_ADDR` / `fedsvd serve --metrics-addr`: a
+//!   process-global registry of counters/gauges/histograms fed from the
+//!   same seams, served over a zero-dep `std::net` HTTP listener as
+//!   Prometheus text (`GET /metrics`) and a JSON federation-progress
+//!   snapshot (`GET /status`, polled by `fedsvd status`).
 //!
 //! The tracer for the current party is installed thread-locally by
 //! `cluster::runtime::run_party` ([`set_current`] / [`with_current`]);
@@ -31,6 +38,7 @@
 
 pub mod counters;
 pub mod merge;
+pub mod metrics_live;
 
 /// Instant-event name the TCP transport emits when it successfully
 /// reconnects to a peer after a mid-protocol socket loss. Flight
@@ -42,6 +50,13 @@ pub const EV_RECONNECT: &str = "reconnect";
 /// are metered separately from the round-traffic ledgers — this event
 /// is the trace-side view of that separate meter.
 pub const EV_REPLAYED_BYTES: &str = "replayed_bytes";
+/// Instant-event name carrying (as `bytes`) a TCP endpoint's total
+/// control-plane traffic — handshake, heartbeat, ack and abort frames,
+/// everything the sent ledger files under `UNLABELLED` — emitted once
+/// at endpoint teardown. The merged timeline folds these into
+/// `roundTraffic` under the `UNLABELLED` key so trace totals reconcile
+/// with the *full* `ClusterStats::round_traffic`, overhead included.
+pub const EV_OVERHEAD_BYTES: &str = "overhead_bytes";
 
 use crate::metrics::jsonl::JsonRow;
 use std::cell::RefCell;
@@ -347,14 +362,46 @@ pub fn current() -> Option<Arc<Tracer>> {
     CURRENT.with(|c| c.borrow().clone())
 }
 
-/// Flight-recorder capacity (events). Old events are evicted FIFO.
+/// Default flight-recorder capacity (events). Old events are evicted
+/// FIFO. Override with `FEDSVD_FLIGHT_EVENTS` (see [`flight_capacity`]).
 pub const FLIGHT_CAPACITY: usize = 4096;
+
+/// Parse a `FEDSVD_FLIGHT_EVENTS` value: unset/empty means the default
+/// [`FLIGHT_CAPACITY`]; anything else must be a positive integer.
+/// A malformed value is a hard error, never a silent default — a ring
+/// silently sized 4096 when the operator asked for 65536 would throw
+/// away exactly the post-mortem they tried to keep.
+pub fn parse_flight_capacity(v: Option<&str>) -> crate::util::Result<usize> {
+    match v.map(str::trim).filter(|s| !s.is_empty()) {
+        None => Ok(FLIGHT_CAPACITY),
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n > 0 => Ok(n),
+            _ => Err(crate::util::Error::Runtime(format!(
+                "FEDSVD_FLIGHT_EVENTS must be a positive integer \
+                 (event count), got {s:?}"
+            ))),
+        },
+    }
+}
+
+/// Flight-recorder capacity: `FEDSVD_FLIGHT_EVENTS` read once per
+/// process (like `FEDSVD_THREADS`), default [`FLIGHT_CAPACITY`].
+/// Panics on a malformed value; `fedsvd` validates the variable at
+/// startup (`main.rs`) so CLI users get a clean error instead.
+pub fn flight_capacity() -> usize {
+    static CAP: OnceLock<usize> = OnceLock::new();
+    *CAP.get_or_init(|| {
+        parse_flight_capacity(std::env::var("FEDSVD_FLIGHT_EVENTS").ok().as_deref())
+            .unwrap_or_else(|e| panic!("{e}"))
+    })
+}
 
 static FLIGHT: Mutex<VecDeque<Event>> = Mutex::new(VecDeque::new());
 
 fn flight_push(ev: &Event) {
+    let cap = flight_capacity();
     if let Ok(mut ring) = FLIGHT.lock() {
-        if ring.len() >= FLIGHT_CAPACITY {
+        if ring.len() >= cap {
             ring.pop_front();
         }
         ring.push_back(ev.clone());
@@ -449,10 +496,12 @@ mod tests {
         let _g = lock();
         flight_clear();
         let t = Tracer::with_sink_dir("user0", 1, None);
-        for i in 0..(FLIGHT_CAPACITY + 100) {
+        let cap = flight_capacity();
+        assert_eq!(cap, FLIGHT_CAPACITY, "tests run with FEDSVD_FLIGHT_EVENTS unset");
+        for i in 0..(cap + 100) {
             t.span_enter(&format!("s{i}"), None);
         }
-        assert_eq!(flight_snapshot().len(), FLIGHT_CAPACITY);
+        assert_eq!(flight_snapshot().len(), cap);
         t.send_event("Batch", Some(1_000), 1, 64);
         let dump = flight_dump("user0", "injected fault");
         assert!(dump.contains("party=user0"));
@@ -536,6 +585,25 @@ mod tests {
             per_call < 2e-6,
             "tracing-off seam cost {per_call:.2e}s/call — should be ~ns"
         );
+    }
+
+    #[test]
+    fn flight_capacity_parses_strictly() {
+        // unset / blank → default
+        assert_eq!(parse_flight_capacity(None).unwrap(), FLIGHT_CAPACITY);
+        assert_eq!(parse_flight_capacity(Some("")).unwrap(), FLIGHT_CAPACITY);
+        assert_eq!(parse_flight_capacity(Some("  ")).unwrap(), FLIGHT_CAPACITY);
+        // explicit sizes
+        assert_eq!(parse_flight_capacity(Some("1")).unwrap(), 1);
+        assert_eq!(parse_flight_capacity(Some(" 65536 ")).unwrap(), 65536);
+        // malformed values are a hard error, not a silent default
+        for bad in ["4k", "-1", "0", "4096.0", "lots", "0x1000"] {
+            let err = parse_flight_capacity(Some(bad)).unwrap_err().to_string();
+            assert!(
+                err.contains("FEDSVD_FLIGHT_EVENTS") && err.contains(bad),
+                "unhelpful error for {bad:?}: {err}"
+            );
+        }
     }
 
     /// Flight-recorder-only emission (the always-on mode) stays cheap:

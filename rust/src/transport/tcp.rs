@@ -186,6 +186,27 @@ struct Shared {
 impl Shared {
     fn add(map: &Mutex<HashMap<u64, u64>>, label: u64, bytes: u64) {
         *lock_ok(map).entry(label).or_insert(0) += bytes;
+        if label == UNLABELLED {
+            // every control byte (handshake, ack, heartbeat, shutdown)
+            // in either direction counts toward the live overhead gauge
+            crate::obs::metrics_live::on_overhead_bytes(bytes);
+        }
+    }
+
+    /// Ledger control bytes written by a *background* thread (heartbeat
+    /// ticks, ack records) — but not once teardown has begun. Teardown
+    /// snapshots the sent-side overhead total into a trace instant, and
+    /// that snapshot must be final: the shutdown check happens under
+    /// the same lock the snapshot reads, so a best-effort ack racing
+    /// the snapshot is either counted by it or not ledgered at all.
+    fn add_sent_unless_down(&self, bytes: u64) {
+        let mut m = lock_ok(&self.sent);
+        if self.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        *m.entry(UNLABELLED).or_insert(0) += bytes;
+        drop(m);
+        crate::obs::metrics_live::on_overhead_bytes(bytes);
     }
 
     fn fail(&self, reason: String) {
@@ -605,6 +626,7 @@ impl TcpTransport {
                     match self.replay_unacked(to, &mut conn, delivered) {
                         Ok(replayed) => {
                             self.shared.reconnects.fetch_add(1, Ordering::Relaxed);
+                            obs::metrics_live::on_reconnect(replayed);
                             obs::with_current(|t| {
                                 t.instant(obs::EV_RECONNECT, None);
                                 t.instant(obs::EV_REPLAYED_BYTES, Some(replayed));
@@ -692,7 +714,7 @@ impl TcpTransport {
     }
 
     fn teardown(&self, notify: Option<&ClusterMsg>) {
-        self.shared.shutdown.store(true, Ordering::SeqCst);
+        let already_down = self.shared.shutdown.swap(true, Ordering::SeqCst);
         let mut conns = lock_ok(&self.shared.conns);
         for (_, conn) in conns.iter_mut() {
             if let Some(msg) = notify {
@@ -705,6 +727,19 @@ impl TcpTransport {
         }
         conns.clear();
         drop(conns);
+        // surface this endpoint's control-byte total exactly once: an
+        // `overhead_bytes` instant on the *sent* basis, so summing the
+        // instants across all endpoints counts each wire byte once —
+        // the same invariant `sent_ledger` gives labelled traffic
+        if !already_down {
+            let overhead = lock_ok(&self.shared.sent)
+                .get(&UNLABELLED)
+                .copied()
+                .unwrap_or(0);
+            if overhead > 0 {
+                obs::with_current(|t| t.instant(obs::EV_OVERHEAD_BYTES, Some(overhead)));
+            }
+        }
         self.shared.inbox.close();
         // wake the accept loop so it observes the shutdown flag
         let _ = TcpStream::connect(self.local_addr);
@@ -851,7 +886,7 @@ fn heartbeat_loop(shared: Arc<Shared>) {
             let ok = conn.stream.write_all(&frame).is_ok();
             let _ = conn.stream.set_write_timeout(Some(idle));
             if ok {
-                Shared::add(&shared.sent, UNLABELLED, frame.len() as u64);
+                shared.add_sent_unless_down(frame.len() as u64);
             } else {
                 dead.push(to);
             }
@@ -923,7 +958,7 @@ fn handshake_in(
     ack.extend_from_slice(&status.to_le_bytes());
     ack.extend_from_slice(&delivered.to_le_bytes());
     stream.write_all(&ack)?;
-    Shared::add(&shared.sent, UNLABELLED, ACK_LEN as u64);
+    shared.add_sent_unless_down(ACK_LEN as u64);
     if status != ACK_OK {
         return Err(Error::Protocol(format!(
             "tcp transport: rejected inbound handshake (status {status})"
@@ -966,7 +1001,7 @@ fn send_round_ack(stream: &mut TcpStream, shared: &Shared, from: PartyId) -> boo
     rec.extend_from_slice(&0u32.to_le_bytes());
     rec.extend_from_slice(&seq.to_le_bytes());
     if stream.write_all(&rec).is_ok() {
-        Shared::add(&shared.sent, UNLABELLED, ACK_RECORD_LEN as u64);
+        shared.add_sent_unless_down(ACK_RECORD_LEN as u64);
         true
     } else {
         false
@@ -994,14 +1029,17 @@ fn reader(mut stream: TcpStream, shared: Arc<Shared>, handshake_timeout: Duratio
                     ClusterMsg::Heartbeat { .. } => {
                         // liveness only; resets the idle clock by arriving
                         Shared::add(&shared.recvd, label, bytes);
+                        crate::obs::metrics_live::on_recv(bytes);
                     }
                     ClusterMsg::Abort { from, reason } => {
                         Shared::add(&shared.recvd, label, bytes);
+                        crate::obs::metrics_live::on_recv(bytes);
                         shared.fail(format!("party {from} aborted: {reason}"));
                         return;
                     }
                     ClusterMsg::Shutdown { .. } => {
                         Shared::add(&shared.recvd, label, bytes);
+                        crate::obs::metrics_live::on_recv(bytes);
                         if acks_ok {
                             send_round_ack(&mut stream, &shared, from);
                         }
@@ -1020,6 +1058,7 @@ fn reader(mut stream: TcpStream, shared: Arc<Shared>, handshake_timeout: Duratio
                                     *e = seq;
                                 }
                                 Shared::add(&shared.recvd, label, bytes);
+                                crate::obs::metrics_live::on_recv(bytes);
                                 if shared.inbox.post(msg).is_err() {
                                     return; // we are shutting down ourselves
                                 }

@@ -1,0 +1,350 @@
+//! Live health-plane suite (the PR-9 acceptance bar).
+//!
+//! The `obs::metrics_live` registry must render conformant Prometheus
+//! text exposition v0.0.4, the per-party HTTP listener must serve
+//! `/metrics` and `/status` while a real federation runs and refuse
+//! cleanly (port released) after the last party exits, and any mid-run
+//! `/status` ledger must be a prefix of the final
+//! `ClusterStats::round_traffic`.
+//!
+//! These tests run in one process and flip the registry's process-wide
+//! state (enable gate, address override, instruments), so they
+//! serialize on a binary-local lock — the lib's own unit tests run in a
+//! different process and cannot interfere.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use fedsvd::cluster::{labels, run_fedsvd_cluster_tcp, ClusterConfig};
+use fedsvd::linalg::{CpuBackend, Mat};
+use fedsvd::metrics::jsonl::Json;
+use fedsvd::obs::metrics_live;
+use fedsvd::protocol::FedSvdConfig;
+use fedsvd::rng::Xoshiro256;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Installs a clean registry with the given listener address override;
+/// restores "no live plane" on drop (panic included).
+struct MetricsGuard;
+
+impl MetricsGuard {
+    fn new(addr: Option<&str>) -> MetricsGuard {
+        metrics_live::set_metrics_addr_override(addr);
+        metrics_live::reset_for_tests();
+        MetricsGuard
+    }
+}
+
+impl Drop for MetricsGuard {
+    fn drop(&mut self) {
+        metrics_live::set_metrics_addr_override(None);
+        metrics_live::set_enabled(false);
+        metrics_live::reset_for_tests();
+    }
+}
+
+fn loopback_available() -> bool {
+    std::net::TcpListener::bind("127.0.0.1:0").is_ok()
+}
+
+fn metric_name_ok(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// Exposition-format conformance over rendered text: every sample
+/// belongs to a `# TYPE`-declared family, all names match
+/// `[a-zA-Z_:][a-zA-Z0-9_:]*`, histogram buckets are cumulative and
+/// `+Inf`-terminated with `_count` equal to the `+Inf` bucket.
+fn check_exposition(text: &str) {
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    for line in text.lines().filter(|l| l.starts_with("# TYPE ")) {
+        let mut f = line["# TYPE ".len()..].split_whitespace();
+        let name = f.next().expect("TYPE name").to_string();
+        let ty = f.next().expect("TYPE kind").to_string();
+        assert!(metric_name_ok(&name), "bad family name {name:?}");
+        assert!(
+            matches!(ty.as_str(), "counter" | "gauge" | "histogram"),
+            "unknown TYPE {ty:?} for {name}"
+        );
+        types.insert(name, ty);
+    }
+    assert!(!types.is_empty(), "no # TYPE declarations in exposition");
+
+    // per-histogram bucket walk state: (last cumulative, saw +Inf, inf value)
+    let mut hist: BTreeMap<String, (u64, bool, u64)> = BTreeMap::new();
+    for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+        let (series, value) = line.rsplit_once(' ').expect("sample line");
+        let name = series.split('{').next().expect("series name");
+        assert!(metric_name_ok(name), "bad metric name {name:?} in {line:?}");
+        // resolve the declaring family: exact, or histogram suffix
+        let family = if types.contains_key(name) {
+            name.to_string()
+        } else {
+            let base = ["_bucket", "_sum", "_count"]
+                .iter()
+                .find_map(|s| name.strip_suffix(s))
+                .unwrap_or_else(|| panic!("sample {name} has no # TYPE family"));
+            assert_eq!(
+                types.get(base).map(String::as_str),
+                Some("histogram"),
+                "suffixed sample {name} must belong to a histogram family"
+            );
+            base.to_string()
+        };
+        if name.ends_with("_bucket") {
+            let cum: u64 = value.parse().unwrap_or_else(|_| panic!("bucket value {line:?}"));
+            let le = series
+                .split("le=\"")
+                .nth(1)
+                .and_then(|s| s.split('"').next())
+                .unwrap_or_else(|| panic!("bucket without le label: {line:?}"));
+            let e = hist.entry(family.clone()).or_insert((0, false, 0));
+            assert!(!e.1, "{family}: bucket after +Inf");
+            assert!(cum >= e.0, "{family}: buckets not cumulative at le={le}");
+            e.0 = cum;
+            if le == "+Inf" {
+                e.1 = true;
+                e.2 = cum;
+            }
+        } else if name.ends_with("_count") && types.get(&family).map(String::as_str) == Some("histogram") {
+            let count: u64 = value.parse().expect("count value");
+            let e = hist.get(&family).unwrap_or_else(|| panic!("{family}: _count before buckets"));
+            assert!(e.1, "{family}: no +Inf bucket");
+            assert_eq!(count, e.2, "{family}: _count != +Inf bucket");
+        } else {
+            value.parse::<f64>().unwrap_or_else(|_| panic!("non-numeric sample {line:?}"));
+        }
+    }
+    // every declared histogram actually rendered its buckets
+    for (name, ty) in &types {
+        if ty == "histogram" {
+            let e = hist.get(name).unwrap_or_else(|| panic!("{name}: histogram with no buckets"));
+            assert!(e.1, "{name}: buckets not +Inf-terminated");
+        }
+    }
+}
+
+#[test]
+fn exposition_conforms_to_prometheus_text_format() {
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _guard = MetricsGuard::new(None);
+    metrics_live::set_enabled(true);
+    // populate every instrument class so conformance covers non-zero
+    // families too
+    metrics_live::on_send(labels::PSEED, 32);
+    metrics_live::on_send(labels::UPLOAD_BASE, 800);
+    metrics_live::on_recv(4096);
+    metrics_live::on_overhead_bytes(56);
+    metrics_live::on_reconnect(128);
+    metrics_live::on_shard_spill(1 << 20);
+    metrics_live::on_shard_load(1 << 20);
+    metrics_live::round_complete("ta", 1_500);
+    metrics_live::on_phase(250_000);
+    metrics_live::set_csp_gauges(10, 64 << 20);
+    check_exposition(&metrics_live::render_metrics());
+}
+
+#[test]
+fn feeds_accumulate_and_render() {
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _guard = MetricsGuard::new(None);
+    metrics_live::set_enabled(true);
+    metrics_live::on_send(labels::PSEED, 32);
+    metrics_live::on_send(labels::UPLOAD_BASE, 800);
+    metrics_live::on_overhead_bytes(56);
+    metrics_live::on_reconnect(128);
+    metrics_live::set_csp_gauges(10, 64 << 20);
+    let text = metrics_live::render_metrics();
+    assert!(text.contains("fedsvd_bytes_sent_total 832"), "{text}");
+    assert!(text.contains("fedsvd_msgs_sent_total 2"), "{text}");
+    assert!(text.contains("fedsvd_overhead_bytes_total 56"), "{text}");
+    assert!(text.contains("fedsvd_reconnects_total 1"), "{text}");
+    assert!(text.contains("fedsvd_replayed_bytes_total 128"), "{text}");
+    assert!(text.contains("fedsvd_csp_peak_bytes 10"), "{text}");
+    assert!(
+        text.contains("fedsvd_round_bytes_total{label=\"0\",round=\"PSEED\"} 32"),
+        "{text}"
+    );
+    assert!(
+        text.contains("fedsvd_round_bytes_total{label=\"1000\",round=\"UPLOAD+0\"} 800"),
+        "{text}"
+    );
+}
+
+#[test]
+fn status_snapshot_carries_parties_and_ledger() {
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    if !loopback_available() {
+        eprintln!("skipping: loopback TCP unavailable");
+        return;
+    }
+    let _guard = MetricsGuard::new(Some("127.0.0.1:0"));
+    let scope = metrics_live::party_scope("user0", 0xabc);
+    metrics_live::round_enter("user0", labels::UBLOCK_BASE + 3);
+    metrics_live::on_send(labels::UBLOCK_BASE + 3, 4096);
+
+    let v = Json::parse(&metrics_live::render_status()).expect("status JSON");
+    assert_eq!(v.get("session").and_then(Json::as_str), Some("0000000000000abc"));
+    let parties = v.get("parties").and_then(Json::as_arr).expect("parties");
+    assert_eq!(parties.len(), 1);
+    let p = &parties[0];
+    assert_eq!(p.get("role").and_then(Json::as_str), Some("user0"));
+    assert_eq!(p.get("round").and_then(Json::as_str), Some("UBLOCK+3"));
+    assert_eq!(p.get("round_label").and_then(Json::as_u64), Some(10_000_003));
+    assert_eq!(p.get("rounds_completed").and_then(Json::as_u64), Some(0));
+    let ledger = v.get("ledger").expect("ledger");
+    assert_eq!(ledger.get("10000003").and_then(Json::as_u64), Some(4096));
+
+    metrics_live::round_complete("user0", 1234);
+    let v = Json::parse(&metrics_live::render_status()).expect("status JSON");
+    let p = &v.get("parties").and_then(Json::as_arr).expect("parties")[0];
+    assert_eq!(p.get("round"), Some(&Json::Null));
+    assert_eq!(p.get("rounds_completed").and_then(Json::as_u64), Some(1));
+    assert_eq!(v.get("rounds_completed").and_then(Json::as_u64), Some(1));
+    drop(scope);
+}
+
+#[test]
+fn listener_serves_scrapes_and_releases_the_port() {
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    if !loopback_available() {
+        eprintln!("skipping: loopback TCP unavailable");
+        return;
+    }
+    let _guard = MetricsGuard::new(Some("127.0.0.1:0"));
+    let s1 = metrics_live::party_scope("ta", 7);
+    let s2 = metrics_live::party_scope("csp", 7);
+    assert!(metrics_live::enabled());
+    let addr = metrics_live::bound_addr().expect("listener bound").to_string();
+
+    let text = metrics_live::http_get(&addr, "/metrics").expect("scrape /metrics");
+    assert!(text.contains("# TYPE fedsvd_bytes_sent_total counter"));
+    check_exposition(&text);
+    let status = metrics_live::http_get(&addr, "/status").expect("scrape /status");
+    assert!(status.contains("\"role\":\"ta\""), "{status}");
+    assert!(status.contains("\"role\":\"csp\""), "{status}");
+    assert!(
+        metrics_live::http_get(&addr, "/nope").is_err(),
+        "unknown path must not return 200"
+    );
+
+    // the listener survives as long as any party is alive…
+    drop(s1);
+    assert!(metrics_live::http_get(&addr, "/metrics").is_ok());
+
+    // …and the last exit joins the accept thread, disables the
+    // registry, and provably releases the port
+    drop(s2);
+    assert!(metrics_live::bound_addr().is_none());
+    assert!(!metrics_live::enabled());
+    assert!(
+        metrics_live::http_get(&addr, "/metrics").is_err(),
+        "scrape after shutdown must be refused"
+    );
+    std::net::TcpListener::bind(&addr)
+        .expect("port must be released after the last party exits");
+}
+
+/// Scrape a live loopback-TCP federation: counters must be monotonic
+/// across scrapes and every `/status` ledger must be a prefix of
+/// (≤ per label, labelled entries equal at the end) the final
+/// `ClusterStats::round_traffic`.
+#[test]
+fn concurrent_scrapes_during_a_tcp_federation_are_monotonic_prefixes() {
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    if !loopback_available() {
+        eprintln!("skipping: loopback TCP unavailable");
+        return;
+    }
+    let _guard = MetricsGuard::new(Some("127.0.0.1:0"));
+    // a probe scope holds the listener open past the federation's own
+    // party scopes, so the final post-join scrape is deterministic
+    let probe = metrics_live::party_scope("probe", 0);
+    let addr = metrics_live::bound_addr().expect("listener bound").to_string();
+
+    // the federation runs on its own thread; scrapes happen here
+    let handle = std::thread::spawn(|| {
+        let mut rng = Xoshiro256::seed_from_u64(19);
+        let parts: Vec<Mat> = [10usize, 8]
+            .iter()
+            .map(|&w| Mat::gaussian(96, w, &mut rng))
+            .collect();
+        let cfg = FedSvdConfig {
+            block_size: 4,
+            secagg_batch_rows: 16,
+            ..Default::default()
+        };
+        let ccfg = ClusterConfig {
+            shards: 2,
+            mem_budget: 8 << 20,
+            spill_root: None,
+        };
+        run_fedsvd_cluster_tcp(&parts, &cfg, &ccfg, CpuBackend::global())
+    });
+
+    fn scrape_sent_total(addr: &str) -> u64 {
+        let text = metrics_live::http_get(addr, "/metrics").expect("scrape");
+        text.lines()
+            .find_map(|l| l.strip_prefix("fedsvd_bytes_sent_total "))
+            .and_then(|v| v.parse().ok())
+            .expect("fedsvd_bytes_sent_total sample")
+    }
+    fn scrape_ledger(addr: &str) -> BTreeMap<u64, u64> {
+        let body = metrics_live::http_get(addr, "/status").expect("scrape /status");
+        let v = Json::parse(&body).expect("status JSON");
+        match v.get("ledger") {
+            Some(Json::Obj(fields)) => fields
+                .iter()
+                .map(|(k, v)| {
+                    (
+                        k.parse::<u64>().expect("numeric ledger key"),
+                        v.as_u64().expect("ledger bytes"),
+                    )
+                })
+                .collect(),
+            other => panic!("ledger missing or not an object: {other:?}"),
+        }
+    }
+
+    let mut last_sent = 0u64;
+    let mut mid_ledgers: Vec<BTreeMap<u64, u64>> = Vec::new();
+    while !handle.is_finished() {
+        let sent = scrape_sent_total(&addr);
+        assert!(sent >= last_sent, "bytes_sent_total went backwards");
+        last_sent = sent;
+        mid_ledgers.push(scrape_ledger(&addr));
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let (_, stats) = handle.join().expect("federation thread").expect("federation run");
+    let finals: BTreeMap<u64, u64> = stats.round_traffic.iter().copied().collect();
+
+    // final scrape: the live ledger's labelled entries ARE the final
+    // cluster ledger (all four parties fed one in-process registry)
+    let sent = scrape_sent_total(&addr);
+    assert!(sent >= last_sent, "bytes_sent_total went backwards");
+    let end = scrape_ledger(&addr);
+    for (&label, &bytes) in finals.iter().filter(|&(&l, _)| l != u64::MAX) {
+        assert_eq!(end.get(&label), Some(&bytes), "final ledger[{label}]");
+    }
+
+    // every mid-run scrape is a prefix: per-label bytes never exceed
+    // the final ledger, and never name an unknown label
+    for (i, ledger) in mid_ledgers.iter().enumerate() {
+        for (&label, &bytes) in ledger.iter().filter(|&(&l, _)| l != u64::MAX) {
+            let fin = finals
+                .get(&label)
+                .unwrap_or_else(|| panic!("scrape {i}: label {label} not in final ledger"));
+            assert!(
+                bytes <= *fin,
+                "scrape {i}: ledger[{label}] = {bytes} exceeds final {fin}"
+            );
+        }
+    }
+    drop(probe);
+}

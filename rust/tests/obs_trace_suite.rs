@@ -91,13 +91,13 @@ fn read_stream(path: &std::path::Path) -> Vec<(String, String, u64)> {
         .collect()
 }
 
-fn ledger_without_unlabelled(stats: &ClusterStats) -> Vec<(u64, u64)> {
-    stats
-        .round_traffic
-        .iter()
-        .copied()
-        .filter(|(l, _)| *l != u64::MAX)
-        .collect()
+/// The full cluster ledger, control-plane bytes included: labelled
+/// rounds from `send` events, plus the `overhead_bytes` instants each
+/// TCP endpoint emits at teardown (folded under `u64::MAX`). On the
+/// local fabric there is no control plane and no `u64::MAX` entry on
+/// either side, so the same full-equality check covers both fabrics.
+fn full_ledger(stats: &ClusterStats) -> Vec<(u64, u64)> {
+    stats.round_traffic.clone()
 }
 
 #[test]
@@ -167,11 +167,12 @@ fn trace_send_totals_match_cluster_ledger_on_both_fabrics() {
         assert_eq!(stats.transport, "local-sim");
         let totals = obs::merge::send_totals(&guard.dir).unwrap();
         assert!(!totals.is_empty());
-        assert_eq!(totals, ledger_without_unlabelled(&stats), "local-sim ledger mismatch");
+        assert_eq!(totals, full_ledger(&stats), "local-sim ledger mismatch");
     }
 
-    // loopback TCP: real frame bytes (handshake/control frames ledger
-    // under UNLABELLED and are excluded on both sides)
+    // loopback TCP: real frame bytes, control plane included — the
+    // teardown `overhead_bytes` instants must reproduce the ledger's
+    // UNLABELLED entry exactly
     if !loopback_available() {
         eprintln!("skipping TCP leg: loopback unavailable in this sandbox");
         return;
@@ -184,7 +185,7 @@ fn trace_send_totals_match_cluster_ledger_on_both_fabrics() {
         assert!(stats.real_bytes > 0);
         let totals = obs::merge::send_totals(&guard.dir).unwrap();
         assert!(!totals.is_empty());
-        assert_eq!(totals, ledger_without_unlabelled(&stats), "tcp ledger mismatch");
+        assert_eq!(totals, full_ledger(&stats), "tcp ledger mismatch");
     }
 }
 
@@ -225,7 +226,7 @@ fn merged_timeline_is_valid_chrome_json_and_reconciles_with_ledger() {
 
     // the merged document's per-round byte totals ARE the cluster ledger
     let traffic = v.get("roundTraffic").expect("roundTraffic");
-    let expected = ledger_without_unlabelled(&stats);
+    let expected = full_ledger(&stats);
     assert!(!expected.is_empty());
     for (label, bytes) in &expected {
         assert_eq!(

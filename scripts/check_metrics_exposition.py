@@ -1,0 +1,127 @@
+#!/usr/bin/env python3
+"""Validate Prometheus text exposition v0.0.4 (stdlib only).
+
+Usage: check_metrics_exposition.py [FILE ...]   (no FILE: read stdin)
+
+Checks, per input:
+  * every sample line's metric name matches [a-zA-Z_:][a-zA-Z0-9_:]*
+  * every sample belongs to a family declared with a `# TYPE` line
+    (histogram samples may use the `_bucket` / `_sum` / `_count`
+    suffixes of a declared histogram family)
+  * `# TYPE` kinds are counter / gauge / histogram / summary / untyped
+  * histogram buckets are cumulative, `+Inf`-terminated, and `_count`
+    equals the `+Inf` bucket
+  * sample values parse as numbers
+
+Exits non-zero with one message per violation.
+"""
+
+import re
+import sys
+
+NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+TYPE_KINDS = {"counter", "gauge", "histogram", "summary", "untyped"}
+HIST_SUFFIXES = ("_bucket", "_sum", "_count")
+
+
+def check(text, source, errors):
+    types = {}
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if line.startswith("# TYPE "):
+            fields = line[len("# TYPE ") :].split()
+            if len(fields) != 2:
+                errors.append(f"{source}:{lineno}: malformed TYPE line: {line!r}")
+                continue
+            name, kind = fields
+            if not NAME_RE.match(name):
+                errors.append(f"{source}:{lineno}: bad family name {name!r}")
+            if kind not in TYPE_KINDS:
+                errors.append(f"{source}:{lineno}: unknown TYPE kind {kind!r}")
+            if name in types:
+                errors.append(f"{source}:{lineno}: duplicate TYPE for {name}")
+            types[name] = kind
+    if not types:
+        errors.append(f"{source}: no # TYPE declarations")
+        return
+
+    # family -> [last cumulative, saw +Inf, +Inf value]
+    hist = {}
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line or line.startswith("#"):
+            continue
+        where = f"{source}:{lineno}"
+        series, _, value = line.rpartition(" ")
+        if not series:
+            errors.append(f"{where}: malformed sample line: {line!r}")
+            continue
+        name = series.split("{", 1)[0]
+        if not NAME_RE.match(name):
+            errors.append(f"{where}: bad metric name {name!r}")
+            continue
+        if name in types:
+            family = name
+        else:
+            base = next(
+                (name[: -len(s)] for s in HIST_SUFFIXES if name.endswith(s)), None
+            )
+            if base is None or types.get(base) != "histogram":
+                errors.append(f"{where}: sample {name} has no # TYPE family")
+                continue
+            family = base
+        try:
+            num = float(value)
+        except ValueError:
+            errors.append(f"{where}: non-numeric sample value {value!r}")
+            continue
+        if name.endswith("_bucket") and types.get(family) == "histogram":
+            m = re.search(r'le="([^"]*)"', series)
+            if m is None:
+                errors.append(f"{where}: bucket without le label")
+                continue
+            state = hist.setdefault(family, [0.0, False, 0.0])
+            if state[1]:
+                errors.append(f"{where}: {family}: bucket after +Inf")
+            if num < state[0]:
+                errors.append(
+                    f"{where}: {family}: buckets not cumulative at le={m.group(1)}"
+                )
+            state[0] = num
+            if m.group(1) == "+Inf":
+                state[1] = True
+                state[2] = num
+        elif name.endswith("_count") and types.get(family) == "histogram":
+            state = hist.get(family)
+            if state is None or not state[1]:
+                errors.append(f"{where}: {family}: _count before +Inf bucket")
+            elif num != state[2]:
+                errors.append(
+                    f"{where}: {family}: _count {num} != +Inf bucket {state[2]}"
+                )
+    for name, kind in types.items():
+        if kind == "histogram":
+            state = hist.get(name)
+            if state is None:
+                errors.append(f"{source}: {name}: histogram with no buckets")
+            elif not state[1]:
+                errors.append(f"{source}: {name}: buckets not +Inf-terminated")
+
+
+def main(argv):
+    errors = []
+    if len(argv) > 1:
+        for path in argv[1:]:
+            with open(path, encoding="utf-8") as f:
+                check(f.read(), path, errors)
+    else:
+        check(sys.stdin.read(), "<stdin>", errors)
+    for e in errors:
+        print(e, file=sys.stderr)
+    if errors:
+        print(f"exposition check FAILED ({len(errors)} violations)", file=sys.stderr)
+        return 1
+    print("exposition check OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
