@@ -332,6 +332,11 @@ pub(crate) struct PartyLink<'a> {
     /// When the current round was entered (live-metrics latency clock;
     /// only stamped while the metrics plane is enabled).
     round_t0: std::cell::Cell<Option<std::time::Instant>>,
+    /// Microseconds this party has spent blocked (gate rendezvous +
+    /// blocking receives) since entering the current round. Reset at
+    /// `enter`, read at `leave` to split round latency into wait vs
+    /// compute for the live plane and trace `dur_us` stamps.
+    wait_us: std::cell::Cell<u64>,
 }
 
 impl<'a> PartyLink<'a> {
@@ -342,6 +347,7 @@ impl<'a> PartyLink<'a> {
             cur_round: std::cell::Cell::new(None),
             role: party_role_name(t.party()),
             round_t0: std::cell::Cell::new(None),
+            wait_us: std::cell::Cell::new(0),
         }
     }
 
@@ -351,11 +357,18 @@ impl<'a> PartyLink<'a> {
         // round as the last flight-recorder entry — exactly the
         // post-mortem wanted.
         obs::with_current(|tr| tr.span_enter(&format!("round:{}", labels::name(label)), Some(label)));
+        let gate_t0 = std::time::Instant::now();
         self.t.round_enter(label, senders)?;
+        let gate_us = gate_t0.elapsed().as_micros() as u64;
+        self.wait_us.set(gate_us);
+        obs::with_current(|tr| tr.gate_event(label, gate_us));
         self.cur_round.set(Some(label));
         if obs::metrics_live::enabled() {
             obs::metrics_live::round_enter(&self.role, label);
-            self.round_t0.set(Some(std::time::Instant::now()));
+            // Latency clock starts at the *gate*, not after it: a round
+            // stalled on the rendezvous is a slow round, and counting
+            // the gate keeps wait ≤ latency by construction.
+            self.round_t0.set(Some(gate_t0));
         }
         Ok(())
     }
@@ -375,8 +388,11 @@ impl<'a> PartyLink<'a> {
         self.cur_round.set(None);
         self.t.round_leave(label)?;
         if let Some(t0) = self.round_t0.replace(None) {
-            obs::metrics_live::round_complete(&self.role, t0.elapsed().as_micros() as u64);
+            let latency_us = t0.elapsed().as_micros() as u64;
+            let wait_us = self.wait_us.get().min(latency_us);
+            obs::metrics_live::round_observe(&self.role, label, latency_us, wait_us);
         }
+        self.wait_us.set(0);
         obs::with_current(|tr| tr.span_leave(&format!("round:{}", labels::name(label)), Some(label), None));
         Ok(())
     }
@@ -394,9 +410,16 @@ impl<'a> PartyLink<'a> {
             return Ok(stash.remove(i).expect("index in range"));
         }
         loop {
+            let wait_t0 = std::time::Instant::now();
             let msg = self.t.recv()?;
-            // Traced at arrival (stash hits were already recorded).
-            obs::with_current(|tr| tr.recv_event(msg.kind_name(), self.cur_round.get()));
+            let waited_us = wait_t0.elapsed().as_micros() as u64;
+            self.wait_us.set(self.wait_us.get().saturating_add(waited_us));
+            // Traced at arrival (stash hits were already recorded); the
+            // dur_us stamp is exactly how long this party blocked on
+            // the transport for this message.
+            obs::with_current(|tr| {
+                tr.recv_event_waited(msg.kind_name(), self.cur_round.get(), waited_us)
+            });
             if want(&msg) {
                 return Ok(msg);
             }

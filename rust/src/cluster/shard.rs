@@ -143,13 +143,15 @@ impl ShardStore {
             unreachable!("victim was checked resident");
         };
         let path = self.dir.join(format!("shard{i}.bin"));
+        let io_t0 = std::time::Instant::now();
         let fm = FileMat::from_mat(&path, &mat, Layout::RowMajor)?;
+        let io_us = io_t0.elapsed().as_micros() as u64;
         let bytes = mat_bytes(mat.rows(), mat.cols());
         self.resident -= bytes;
         self.slots[i].backing = Backing::Spilled(fm);
         self.spills += 1;
         crate::obs::counters::shard_spill(bytes);
-        crate::obs::with_current(|t| t.instant("shard_spill", Some(bytes)));
+        crate::obs::with_current(|t| t.instant_dur(crate::obs::EV_SHARD_SPILL, Some(bytes), io_us));
         Ok(true)
     }
 
@@ -210,10 +212,14 @@ impl ShardStore {
             Backing::Resident(shard)
         } else {
             let path = self.dir.join(format!("shard{idx}.bin"));
+            let io_t0 = std::time::Instant::now();
             let fm = FileMat::from_mat(&path, &shard, Layout::RowMajor)?;
+            let io_us = io_t0.elapsed().as_micros() as u64;
             self.spills += 1;
             crate::obs::counters::shard_spill(bytes);
-            crate::obs::with_current(|t| t.instant("shard_spill", Some(bytes)));
+            crate::obs::with_current(|t| {
+                t.instant_dur(crate::obs::EV_SHARD_SPILL, Some(bytes), io_us)
+            });
             Backing::Spilled(fm)
         };
         self.slots.push(Slot {
@@ -271,10 +277,14 @@ impl ShardStore {
                         out = Err(e);
                         break;
                     }
+                    let io_t0 = std::time::Instant::now();
                     let r = match fm.read_row_block(local, hi) {
                         Ok(block) => {
+                            let io_us = io_t0.elapsed().as_micros() as u64;
                             crate::obs::counters::shard_load(bytes);
-                            crate::obs::with_current(|t| t.instant("shard_load", Some(bytes)));
+                            crate::obs::with_current(|t| {
+                                t.instant_dur(crate::obs::EV_SHARD_LOAD, Some(bytes), io_us)
+                            });
                             f(r0 + local, &block)
                         }
                         Err(e) => Err(e),

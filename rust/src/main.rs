@@ -673,6 +673,27 @@ fn cmd_info() -> Result<(), String> {
     Ok(())
 }
 
+/// Parse a `--session` value: decimal or 0x-hex id. `ctx` names the
+/// failing subcommand in the error.
+fn parse_session_flag(
+    flags: &HashMap<String, String>,
+    ctx: &str,
+) -> Result<Option<u64>, String> {
+    match flags.get("session") {
+        Some(v) => {
+            let s = v.trim();
+            let parsed = match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+                Some(hex) => u64::from_str_radix(hex, 16),
+                None => s.parse::<u64>(),
+            };
+            Ok(Some(parsed.map_err(|_| {
+                format!("{ctx}: bad --session `{v}` (want a decimal or 0x-hex id)")
+            })?))
+        }
+        None => Ok(None),
+    }
+}
+
 fn cmd_trace(rest: &[String]) -> Result<(), String> {
     match rest.first().map(String::as_str) {
         Some("merge") => {
@@ -683,19 +704,7 @@ fn cmd_trace(rest: &[String]) -> Result<(), String> {
             let flags = parse_flags(&rest[2..]);
             // `--session` pins the run to merge (decimal or 0x-hex);
             // without it the majority session in the directory wins
-            let want_session = match flags.get("session") {
-                Some(v) => {
-                    let s = v.trim();
-                    let parsed = match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
-                        Some(hex) => u64::from_str_radix(hex, 16),
-                        None => s.parse::<u64>(),
-                    };
-                    Some(parsed.map_err(|_| {
-                        format!("trace merge: bad --session `{v}` (want a decimal or 0x-hex id)")
-                    })?)
-                }
-                None => None,
-            };
+            let want_session = parse_session_flag(&flags, "trace merge")?;
             let merged = fedsvd::obs::merge::merge_dir_with(Path::new(dir), want_session)
                 .map_err(|e| format!("trace merge: {e}"))?;
             match flags.get("out") {
@@ -708,9 +717,77 @@ fn cmd_trace(rest: &[String]) -> Result<(), String> {
             }
             Ok(())
         }
+        Some("analyze") => {
+            let dir = rest
+                .get(1)
+                .filter(|d| !d.starts_with("--"))
+                .ok_or("trace analyze: missing <dir> (the FEDSVD_TRACE directory)")?;
+            let flags = parse_flags(&rest[2..]);
+            let want_session = parse_session_flag(&flags, "trace analyze")?;
+            let analysis = fedsvd::obs::profile::analyze_dir(Path::new(dir), want_session)
+                .map_err(|e| format!("trace analyze: {e}"))?;
+            let text = if flags.contains_key("json") {
+                fedsvd::obs::profile::json_rows(&analysis)
+            } else {
+                fedsvd::obs::profile::render_report(&analysis)
+            };
+            match flags.get("out") {
+                Some(path) => {
+                    std::fs::write(path, &text)
+                        .map_err(|e| format!("trace analyze: cannot write {path}: {e}"))?;
+                    eprintln!("wrote trace analysis to {path}");
+                }
+                None => print!("{text}"),
+            }
+            Ok(())
+        }
         _ => Err(
-            "usage: fedsvd trace merge <dir> [--out FILE] [--session ID] — merge the \
-             per-party FEDSVD_TRACE JSONL streams into one Chrome trace_event timeline"
+            "usage: fedsvd trace <merge|analyze> <dir> [--out FILE] [--session ID] [--json]\n\
+             merge   — merge the per-party FEDSVD_TRACE JSONL streams into one Chrome \
+             trace_event timeline\n\
+             analyze — attribute wall time (compute/wait/IO/untracked per party and \
+             round), extract the cross-party critical path, rank stragglers and report \
+             roofline-style phase rates (--json for JSONL rows)"
+                .into(),
+        ),
+    }
+}
+
+/// `fedsvd bench diff <old.jsonl> <new.jsonl>` — compare two bench-row
+/// collections with noise-aware thresholds; exits non-zero on a
+/// hard-threshold regression (the CI gate against `BENCH_BASELINE.jsonl`).
+fn cmd_bench(rest: &[String]) -> Result<(), String> {
+    match rest.first().map(String::as_str) {
+        Some("diff") => {
+            let mut paths = rest[1..].iter().filter(|a| !a.starts_with("--"));
+            let old = paths
+                .next()
+                .ok_or("bench diff: missing <old.jsonl> (the baseline run)")?;
+            let new = paths
+                .next()
+                .ok_or("bench diff: missing <new.jsonl> (the current run)")?;
+            let flags = parse_flags(&rest[1..]);
+            let report =
+                fedsvd::metrics::trajectory::diff_files(Path::new(old), Path::new(new))
+                    .map_err(|e| e.to_string())?;
+            if flags.contains_key("json") {
+                print!("{}", report.json_rows());
+            } else {
+                print!("{}", report.render());
+            }
+            if report.has_hard_regressions() {
+                return Err(format!(
+                    "bench diff: {} hard regression(s) against {old}",
+                    report.hard.len()
+                ));
+            }
+            Ok(())
+        }
+        _ => Err(
+            "usage: fedsvd bench diff <old.jsonl> <new.jsonl> [--json] — diff two \
+             bench_rows.jsonl collections (noise-aware per-metric thresholds; exits \
+             non-zero on hard regressions: Step-2 4-thread speedup < 2×, GEMM SIMD \
+             ratio collapse, determinism flag flips)"
                 .into(),
         ),
     }
@@ -742,6 +819,10 @@ fn cmd_status(rest: &[String]) -> Result<(), String> {
         session: String,
         round: String,
         rounds: u64,
+        p50_s: Option<f64>,
+        p95_s: Option<f64>,
+        wait_fraction: Option<f64>,
+        straggler: bool,
         sent: u64,
         recv: u64,
         overhead: u64,
@@ -779,16 +860,22 @@ fn cmd_status(rest: &[String]) -> Result<(), String> {
             .and_then(Json::as_str)
             .unwrap_or("?")
             .to_string();
+        let straggler = v
+            .get("straggler")
+            .and_then(Json::as_str)
+            .map(str::to_string);
         let mut found_party = false;
         if let Some(parties) = v.get("parties").and_then(Json::as_arr) {
             for p in parties {
                 found_party = true;
+                let role = p
+                    .get("role")
+                    .and_then(Json::as_str)
+                    .unwrap_or("?")
+                    .to_string();
                 rows.push(Row {
-                    role: p
-                        .get("role")
-                        .and_then(Json::as_str)
-                        .unwrap_or("?")
-                        .to_string(),
+                    straggler: straggler.as_deref() == Some(role.as_str()),
+                    role,
                     session: session.clone(),
                     round: p
                         .get("round")
@@ -796,6 +883,9 @@ fn cmd_status(rest: &[String]) -> Result<(), String> {
                         .unwrap_or("-")
                         .to_string(),
                     rounds: p.get("rounds_completed").and_then(Json::as_u64).unwrap_or(0),
+                    p50_s: p.get("round_p50_s").and_then(Json::as_f64),
+                    p95_s: p.get("round_p95_s").and_then(Json::as_f64),
+                    wait_fraction: p.get("wait_fraction").and_then(Json::as_f64),
                     sent: top_u64("bytes_sent"),
                     recv: top_u64("bytes_recv"),
                     overhead: top_u64("overhead_bytes"),
@@ -812,6 +902,10 @@ fn cmd_status(rest: &[String]) -> Result<(), String> {
                 session,
                 round: "-".into(),
                 rounds: top_u64("rounds_completed"),
+                p50_s: None,
+                p95_s: None,
+                wait_fraction: None,
+                straggler: false,
                 sent: top_u64("bytes_sent"),
                 recv: top_u64("bytes_recv"),
                 overhead: top_u64("overhead_bytes"),
@@ -832,15 +926,29 @@ fn cmd_status(rest: &[String]) -> Result<(), String> {
 
     println!("session {}", rows[0].session);
     println!(
-        "{:<8} {:<14} {:>7} {:>12} {:>12} {:>10} {:>7} {:>10}  {}",
-        "PARTY", "ROUND", "ROUNDS", "SENT", "RECV", "OVERHEAD", "RECONN", "PEAK RSS", "ADDR"
+        "{:<8} {:<14} {:>7} {:>8} {:>8} {:>6} {:>12} {:>12} {:>10} {:>7} {:>10}  {}",
+        "PARTY", "ROUND", "ROUNDS", "P50", "P95", "WAIT%", "SENT", "RECV", "OVERHEAD", "RECONN",
+        "PEAK RSS", "ADDR"
     );
+    // "-" for parties with no completed-round history yet; a trailing "*"
+    // on the role marks the live straggler candidate (everyone else is
+    // waiting on this party — it has the lowest wait fraction).
+    let fmt_s = |v: Option<f64>| v.map_or("-".to_string(), |s| format!("{s:.3}s"));
+    let fmt_pct = |v: Option<f64>| v.map_or("-".to_string(), |f| format!("{:.0}%", f * 100.0));
     for r in &rows {
+        let role = if r.straggler {
+            format!("{}*", r.role)
+        } else {
+            r.role.clone()
+        };
         println!(
-            "{:<8} {:<14} {:>7} {:>12} {:>12} {:>10} {:>7} {:>10}  {}",
-            r.role,
+            "{:<8} {:<14} {:>7} {:>8} {:>8} {:>6} {:>12} {:>12} {:>10} {:>7} {:>10}  {}",
+            role,
             r.round,
             r.rounds,
+            fmt_s(r.p50_s),
+            fmt_s(r.p95_s),
+            fmt_pct(r.wait_fraction),
             human_bytes(r.sent),
             human_bytes(r.recv),
             human_bytes(r.overhead),
@@ -848,6 +956,9 @@ fn cmd_status(rest: &[String]) -> Result<(), String> {
             human_bytes(r.peak_rss),
             r.addr
         );
+    }
+    if rows.iter().any(|r| r.straggler) {
+        println!("* = straggler candidate (lowest wait fraction — the party others wait on)");
     }
     Ok(())
 }
@@ -874,11 +985,12 @@ fn main() -> ExitCode {
         "split" => cmd_split(&flags),
         "serve" => cmd_serve(&flags),
         "trace" => cmd_trace(&args[1..]),
+        "bench" => cmd_bench(&args[1..]),
         "status" => cmd_status(&args[1..]),
         "info" => cmd_info(),
         _ => {
             println!(
-                "usage: fedsvd <svd|pca|lr|lsa|attack|split|serve|status|trace|info> [--m M] [--n N] [--users K] \
+                "usage: fedsvd <svd|pca|lr|lsa|attack|split|serve|status|trace|bench|info> [--m M] [--n N] [--users K] \
                  [--block B] [--rank R] [--dataset name] [--scale S] [--config file] \
                  [--shards S [--budget-mb MB]]\n\
                  \n\
@@ -898,7 +1010,11 @@ fn main() -> ExitCode {
                  fedsvd status <host:port>[,<host:port>...]\n\
                  \n\
                  trace (observability; set FEDSVD_TRACE=<dir> on any run to record):\n\
-                 fedsvd trace merge <dir> [--out FILE] [--session ID]"
+                 fedsvd trace merge <dir> [--out FILE] [--session ID]\n\
+                 fedsvd trace analyze <dir> [--json] [--out FILE] [--session ID]\n\
+                 \n\
+                 bench (performance trajectory):\n\
+                 fedsvd bench diff <old.jsonl> <new.jsonl> [--json]"
             );
             Ok(())
         }

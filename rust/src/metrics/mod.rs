@@ -7,6 +7,7 @@
 //! printer shared by benches.
 
 pub mod jsonl;
+pub mod trajectory;
 
 use std::time::Instant;
 

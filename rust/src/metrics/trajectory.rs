@@ -1,0 +1,565 @@
+//! Bench trajectory: noise-aware diffing of `bench_rows.jsonl` runs.
+//!
+//! Every bench in this repo emits machine-readable JSON rows (one
+//! object per line, `bench`-discriminated). CI collects them into
+//! `bench_rows.jsonl` per run — and, until this module, never compared
+//! two runs, so the ROADMAP's "track the bench trajectory across PRs"
+//! had no teeth. `fedsvd bench diff <old.jsonl> <new.jsonl>` closes the
+//! loop:
+//!
+//! * rows are matched across runs by their **identity**: the `bench`
+//!   name plus every configuration field ([`IDENTITY_KEYS`] — shape,
+//!   ISA, thread count, transport, …). Measurement fields and unknown
+//!   fields never participate in identity, so adding a metric to a
+//!   bench does not orphan its history;
+//! * each known metric ([`METRICS`]) carries a direction
+//!   (lower-is-better or higher-is-better) and a per-metric **noise
+//!   allowance** — wall-clock medians on shared CI runners jitter far
+//!   more than byte counts, and the thresholds encode exactly that;
+//! * beyond the soft per-metric regressions, a small set of **hard
+//!   rules** ([`hard_regressions`]) guards the paper's headline scaling
+//!   claims: the Step-2 4-thread speedup staying ≥ 2×, the GEMM
+//!   micro-kernel's SIMD-vs-scalar advantage not collapsing, and
+//!   bit-identical multi-thread masking staying bit-identical. A hard
+//!   hit fails CI ([`DiffReport::has_hard_regressions`]); soft drifts
+//!   and vocabulary changes (missing/new rows) are reported but pass.
+//!
+//! `BENCH_BASELINE.jsonl` at the repo root is the checked-in reference
+//! run; re-seed it deliberately when a PR legitimately moves a
+//! threshold (the report prints the exact rows to copy).
+
+use crate::metrics::jsonl::{Json, JsonRow};
+use crate::util::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Fields that define a row's identity (when present). Everything else
+/// on a row is either a known metric or ignored — varying integers like
+/// `peak_rss` must never become identity, or no row would ever match.
+pub const IDENTITY_KEYS: &[&str] = &[
+    "bench",
+    "shape",
+    "isa",
+    "mode",
+    "transport",
+    "format",
+    "exec",
+    "m",
+    "k",
+    "n",
+    "threads",
+    "users",
+    "block",
+    "shards",
+    "spans",
+    "events",
+    "chunk_rows",
+    "mem_budget",
+];
+
+/// Which way a metric is supposed to move.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    LowerIsBetter,
+    HigherIsBetter,
+}
+
+/// A known measurement field: direction plus the relative change
+/// tolerated as run-to-run noise before a soft regression is reported.
+#[derive(Debug, Clone, Copy)]
+pub struct Metric {
+    pub key: &'static str,
+    pub dir: Direction,
+    pub noise: f64,
+}
+
+use Direction::{HigherIsBetter as H, LowerIsBetter as L};
+
+/// The measurement vocabulary of every bench row schema in the repo,
+/// with noise allowances calibrated to what each metric actually is:
+/// wall times on shared runners jitter hugely (±35–60%), byte counts
+/// are near-deterministic (±2–5%), ratios of co-measured times cancel
+/// most machine noise (±25%).
+pub const METRICS: &[Metric] = &[
+    Metric { key: "median_s", dir: L, noise: 0.35 },
+    Metric { key: "min_s", dir: L, noise: 0.40 },
+    Metric { key: "wall_s", dir: L, noise: 0.40 },
+    Metric { key: "net_s", dir: L, noise: 0.40 },
+    Metric { key: "ns_per_span", dir: L, noise: 0.60 },
+    Metric { key: "ns_per_event", dir: L, noise: 0.60 },
+    Metric { key: "speedup_vs_1t", dir: H, noise: 0.25 },
+    Metric { key: "speedup_vs_scalar_1t", dir: H, noise: 0.25 },
+    Metric { key: "sim_bytes", dir: L, noise: 0.02 },
+    Metric { key: "real_bytes", dir: L, noise: 0.05 },
+    Metric { key: "total_bytes", dir: L, noise: 0.05 },
+    Metric { key: "peak_rss", dir: L, noise: 0.60 },
+    Metric { key: "user_peak_rss", dir: L, noise: 0.60 },
+    Metric { key: "user_peak_part_bytes", dir: L, noise: 0.30 },
+    Metric { key: "csp_peak_matrix_bytes", dir: L, noise: 0.30 },
+    Metric { key: "shard_spills", dir: L, noise: 0.50 },
+    Metric { key: "train_mse", dir: L, noise: 0.50 },
+];
+
+/// One parsed bench row: identity string, metrics, bools.
+#[derive(Debug, Clone)]
+pub struct Row {
+    /// `key=value` pairs of the present identity fields, sorted — the
+    /// match key across runs.
+    pub id: String,
+    pub metrics: BTreeMap<&'static str, f64>,
+    pub bools: BTreeMap<String, bool>,
+}
+
+fn row_identity(v: &Json) -> String {
+    let mut parts: Vec<String> = Vec::new();
+    for &k in IDENTITY_KEYS {
+        match v.get(k) {
+            Some(Json::Str(s)) => parts.push(format!("{k}={s}")),
+            Some(Json::Num(n)) => parts.push(format!("{k}={n}")),
+            _ => {}
+        }
+    }
+    parts.join(" ")
+}
+
+/// Parse one run's JSONL text into rows keyed by identity. Non-object
+/// lines are rejected; rows without a `bench` field are skipped (other
+/// JSONL streams may share a file in hand-rolled setups).
+pub fn parse_rows(text: &str, source: &str) -> Result<BTreeMap<String, Row>> {
+    let mut out = BTreeMap::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line)
+            .map_err(|e| Error::Runtime(format!("{source}:{}: {e}", i + 1)))?;
+        if v.get("bench").and_then(Json::as_str).is_none() {
+            continue;
+        }
+        let mut metrics = BTreeMap::new();
+        for m in METRICS {
+            if let Some(x) = v.get(m.key).and_then(Json::as_f64) {
+                metrics.insert(m.key, x);
+            }
+        }
+        let mut bools = BTreeMap::new();
+        if let Json::Obj(fields) = &v {
+            for (k, val) in fields {
+                if let Json::Bool(b) = val {
+                    bools.insert(k.clone(), *b);
+                }
+            }
+        }
+        let row = Row { id: row_identity(&v), metrics, bools };
+        out.insert(row.id.clone(), row);
+    }
+    Ok(out)
+}
+
+/// One metric's movement on one matched row.
+#[derive(Debug, Clone)]
+pub struct MetricDiff {
+    pub key: &'static str,
+    pub old: f64,
+    pub new: f64,
+    /// Signed relative change, positive = worse (direction-normalized).
+    pub rel_worse: f64,
+    /// Worse by more than the metric's noise allowance.
+    pub regressed: bool,
+    /// Better by more than the noise allowance.
+    pub improved: bool,
+}
+
+/// One matched row's metric movements.
+#[derive(Debug, Clone)]
+pub struct RowDiff {
+    pub id: String,
+    pub metrics: Vec<MetricDiff>,
+}
+
+/// One hard-threshold violation (fails CI).
+#[derive(Debug, Clone)]
+pub struct HardRegression {
+    pub id: String,
+    pub what: String,
+}
+
+/// The full comparison of two runs.
+#[derive(Debug)]
+pub struct DiffReport {
+    pub rows: Vec<RowDiff>,
+    /// Identities present in the old run only.
+    pub missing: Vec<String>,
+    /// Identities present in the new run only.
+    pub added: Vec<String>,
+    pub hard: Vec<HardRegression>,
+}
+
+impl DiffReport {
+    pub fn has_hard_regressions(&self) -> bool {
+        !self.hard.is_empty()
+    }
+
+    pub fn regressions(&self) -> usize {
+        self.rows
+            .iter()
+            .flat_map(|r| &r.metrics)
+            .filter(|m| m.regressed)
+            .count()
+    }
+
+    pub fn improvements(&self) -> usize {
+        self.rows
+            .iter()
+            .flat_map(|r| &r.metrics)
+            .filter(|m| m.improved)
+            .count()
+    }
+
+    /// Human-readable report (what CI tees into the artifact).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "=== bench diff: {} matched rows, {} regressions, {} improvements, \
+             {} missing, {} new, {} HARD ===\n",
+            self.rows.len(),
+            self.regressions(),
+            self.improvements(),
+            self.missing.len(),
+            self.added.len(),
+            self.hard.len()
+        ));
+        for h in &self.hard {
+            out.push_str(&format!("HARD  {}\n      {}\n", h.id, h.what));
+        }
+        for r in &self.rows {
+            for m in &r.metrics {
+                if m.regressed || m.improved {
+                    out.push_str(&format!(
+                        "{} {}\n      {}: {} -> {} ({}{:.1}%)\n",
+                        if m.regressed { "WORSE " } else { "BETTER" },
+                        r.id,
+                        m.key,
+                        fmt(m.old),
+                        fmt(m.new),
+                        if m.rel_worse >= 0.0 { "+" } else { "" },
+                        m.rel_worse * 100.0
+                    ));
+                }
+            }
+        }
+        for id in &self.missing {
+            out.push_str(&format!("MISSING (in old run only) {id}\n"));
+        }
+        for id in &self.added {
+            out.push_str(&format!("NEW (no baseline yet)     {id}\n"));
+        }
+        if self.hard.is_empty() {
+            out.push_str("hard thresholds: all clear\n");
+        } else {
+            out.push_str(&format!(
+                "hard thresholds: {} VIOLATION(S) — failing\n",
+                self.hard.len()
+            ));
+        }
+        out
+    }
+
+    /// Machine-readable JSONL of the same findings.
+    pub fn json_rows(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            &JsonRow::new()
+                .str("kind", "summary")
+                .u64("matched", self.rows.len() as u64)
+                .u64("regressions", self.regressions() as u64)
+                .u64("improvements", self.improvements() as u64)
+                .u64("missing", self.missing.len() as u64)
+                .u64("added", self.added.len() as u64)
+                .u64("hard", self.hard.len() as u64)
+                .bool("fail", self.has_hard_regressions())
+                .finish(),
+        );
+        out.push('\n');
+        for h in &self.hard {
+            out.push_str(
+                &JsonRow::new()
+                    .str("kind", "hard")
+                    .str("id", &h.id)
+                    .str("what", &h.what)
+                    .finish(),
+            );
+            out.push('\n');
+        }
+        for r in &self.rows {
+            for m in r.metrics.iter().filter(|m| m.regressed || m.improved) {
+                out.push_str(
+                    &JsonRow::new()
+                        .str("kind", if m.regressed { "regression" } else { "improvement" })
+                        .str("id", &r.id)
+                        .str("metric", m.key)
+                        .f64("old", m.old, 6)
+                        .f64("new", m.new, 6)
+                        .f64("rel_worse", m.rel_worse, 4)
+                        .finish(),
+                );
+                out.push('\n');
+            }
+        }
+        for id in &self.missing {
+            out.push_str(&JsonRow::new().str("kind", "missing").str("id", id).finish());
+            out.push('\n');
+        }
+        for id in &self.added {
+            out.push_str(&JsonRow::new().str("kind", "added").str("id", id).finish());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn fmt(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 1e6 || v.abs() < 1e-3 {
+        format!("{v:.3e}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+/// Does `id` carry `key=value`?
+fn id_has(id: &str, key: &str, value: &str) -> bool {
+    id.split(' ').any(|p| p == format!("{key}={value}"))
+}
+
+fn id_field<'a>(id: &'a str, key: &str) -> Option<&'a str> {
+    id.split(' ')
+        .find_map(|p| p.strip_prefix(key)?.strip_prefix('='))
+}
+
+/// The hard rules guarding the repo's headline numbers. These fire on
+/// the *new* run's absolute values (plus one relative collapse guard),
+/// so a regression fails even if the baseline had already drifted.
+fn hard_regressions(old: &Row, new: &Row) -> Vec<HardRegression> {
+    let mut out = Vec::new();
+    let id = &new.id;
+    // Step-2 masking must keep its ≥ 2× speedup at 4 threads (the
+    // ROADMAP's "one to watch"; Tab. 4 of the paper is the 10000×
+    // headline this multi-thread path feeds).
+    if id_has(id, "bench", "step2_mask_scaling") && id_field(id, "threads") == Some("4") {
+        if let Some(&s) = new.metrics.get("speedup_vs_1t") {
+            if s < 2.0 {
+                out.push(HardRegression {
+                    id: id.clone(),
+                    what: format!("speedup_vs_1t {s:.2} < 2.0 (hard floor at 4 threads)"),
+                });
+            }
+        }
+    }
+    // The GEMM micro-kernel's SIMD advantage must not collapse: never
+    // below scalar, and never below 60% of the baseline ratio.
+    if id_has(id, "bench", "gemm_kernel")
+        && id_field(id, "threads") == Some("1")
+        && id_field(id, "isa").is_some_and(|i| i != "scalar")
+    {
+        if let Some(&s) = new.metrics.get("speedup_vs_scalar_1t") {
+            if s < 1.0 {
+                out.push(HardRegression {
+                    id: id.clone(),
+                    what: format!("speedup_vs_scalar_1t {s:.2} < 1.0 (SIMD slower than scalar)"),
+                });
+            } else if let Some(&old_s) = old.metrics.get("speedup_vs_scalar_1t") {
+                if old_s > 0.0 && s < old_s * 0.6 {
+                    out.push(HardRegression {
+                        id: id.clone(),
+                        what: format!(
+                            "speedup_vs_scalar_1t collapsed {old_s:.2} -> {s:.2} \
+                             (below 60% of baseline)"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    // Determinism flags may only flip towards true.
+    for (k, &was) in &old.bools {
+        if was {
+            if let Some(false) = new.bools.get(k).copied() {
+                out.push(HardRegression {
+                    id: id.clone(),
+                    what: format!("{k} flipped true -> false"),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Diff two runs given their JSONL text (old = baseline, new = current).
+pub fn diff_streams(old_text: &str, new_text: &str) -> Result<DiffReport> {
+    let old = parse_rows(old_text, "old")?;
+    let new = parse_rows(new_text, "new")?;
+    let mut rows = Vec::new();
+    let mut hard = Vec::new();
+    for (id, n) in &new {
+        let Some(o) = old.get(id) else { continue };
+        let mut metrics = Vec::new();
+        for m in METRICS {
+            let (Some(&ov), Some(&nv)) = (o.metrics.get(m.key), n.metrics.get(m.key)) else {
+                continue;
+            };
+            // Relative worsening, normalized so positive is always bad.
+            let rel_worse = if ov.abs() < 1e-12 {
+                0.0
+            } else {
+                match m.dir {
+                    Direction::LowerIsBetter => (nv - ov) / ov.abs(),
+                    Direction::HigherIsBetter => (ov - nv) / ov.abs(),
+                }
+            };
+            metrics.push(MetricDiff {
+                key: m.key,
+                old: ov,
+                new: nv,
+                rel_worse,
+                regressed: rel_worse > m.noise,
+                improved: rel_worse < -m.noise,
+            });
+        }
+        hard.extend(hard_regressions(o, n));
+        rows.push(RowDiff { id: id.clone(), metrics });
+    }
+    let missing: Vec<String> = old.keys().filter(|k| !new.contains_key(*k)).cloned().collect();
+    let added: Vec<String> = new.keys().filter(|k| !old.contains_key(*k)).cloned().collect();
+    Ok(DiffReport { rows, missing, added, hard })
+}
+
+/// [`diff_streams`] over files.
+pub fn diff_files(old_path: &Path, new_path: &Path) -> Result<DiffReport> {
+    let read = |p: &Path| {
+        std::fs::read_to_string(p)
+            .map_err(|e| Error::Runtime(format!("bench diff: cannot read {}: {e}", p.display())))
+    };
+    diff_streams(&read(old_path)?, &read(new_path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const OLD: &str = concat!(
+        r#"{"bench":"step2_mask_scaling","m":512,"n":256,"block":128,"users":8,"threads":4,"median_s":0.5,"speedup_vs_1t":3.1,"bit_identical_vs_1t":true}"#,
+        "\n",
+        r#"{"bench":"gemm_kernel","shape":"wide-lsa","m":64,"k":4096,"n":64,"isa":"avx2","threads":1,"median_s":0.01,"speedup_vs_scalar_1t":4.0}"#,
+        "\n",
+        r#"{"bench":"fig5_transport","transport":"tcp","shards":4,"wall_s":1.0,"real_bytes":1000000,"peak_rss":123456789}"#,
+        "\n",
+    );
+
+    fn edit(src: &str, from: &str, to: &str) -> String {
+        assert!(src.contains(from), "test fixture drift: {from}");
+        src.replace(from, to)
+    }
+
+    #[test]
+    fn identical_runs_are_clean() {
+        let d = diff_streams(OLD, OLD).unwrap();
+        assert_eq!(d.rows.len(), 3);
+        assert_eq!(d.regressions(), 0);
+        assert_eq!(d.improvements(), 0);
+        assert!(!d.has_hard_regressions());
+        assert!(d.missing.is_empty() && d.added.is_empty());
+    }
+
+    #[test]
+    fn noise_sized_drift_is_ignored_but_real_drift_reported() {
+        // +20% median_s: inside the 35% allowance.
+        let new = edit(OLD, r#""median_s":0.5"#, r#""median_s":0.6"#);
+        let d = diff_streams(OLD, &new).unwrap();
+        assert_eq!(d.regressions(), 0, "{}", d.render());
+        // +100% median_s: reported as a soft regression, not hard.
+        let new = edit(OLD, r#""median_s":0.5"#, r#""median_s":1.0"#);
+        let d = diff_streams(OLD, &new).unwrap();
+        assert_eq!(d.regressions(), 1);
+        assert!(!d.has_hard_regressions());
+        assert!(d.render().contains("WORSE"));
+        // Halving a wall time is an improvement.
+        let new = edit(OLD, r#""wall_s":1.0"#, r#""wall_s":0.4"#);
+        let d = diff_streams(OLD, &new).unwrap();
+        assert_eq!(d.improvements(), 1);
+    }
+
+    #[test]
+    fn hard_thresholds_fail_the_diff() {
+        // Step-2 speedup below the 2× floor at 4 threads.
+        let new = edit(OLD, r#""speedup_vs_1t":3.1"#, r#""speedup_vs_1t":1.4"#);
+        let d = diff_streams(OLD, &new).unwrap();
+        assert!(d.has_hard_regressions(), "{}", d.render());
+        assert!(d.render().contains("HARD"));
+        // SIMD ratio collapsing below 60% of baseline (still > 1).
+        let new = edit(
+            OLD,
+            r#""speedup_vs_scalar_1t":4.0"#,
+            r#""speedup_vs_scalar_1t":1.5"#,
+        );
+        let d = diff_streams(OLD, &new).unwrap();
+        assert!(d.has_hard_regressions());
+        // SIMD slower than scalar is hard regardless of baseline.
+        let new = edit(
+            OLD,
+            r#""speedup_vs_scalar_1t":4.0"#,
+            r#""speedup_vs_scalar_1t":0.8"#,
+        );
+        assert!(diff_streams(OLD, &new).unwrap().has_hard_regressions());
+        // Bit-identical flipping false is hard.
+        let new = edit(
+            OLD,
+            r#""bit_identical_vs_1t":true"#,
+            r#""bit_identical_vs_1t":false"#,
+        );
+        let d = diff_streams(OLD, &new).unwrap();
+        assert!(d.has_hard_regressions());
+        assert!(d.render().contains("bit_identical_vs_1t"));
+    }
+
+    #[test]
+    fn missing_and_new_rows_are_reported_not_fatal() {
+        let mut lines: Vec<&str> = OLD.lines().collect();
+        lines.pop();
+        let shrunk = format!("{}\n", lines.join("\n"));
+        let d = diff_streams(OLD, &shrunk).unwrap();
+        assert_eq!(d.missing.len(), 1);
+        assert!(!d.has_hard_regressions());
+        let grown = format!(
+            "{OLD}{}\n",
+            r#"{"bench":"tab2_data_ingest","m":100,"n":50,"format":"csv","chunk_rows":10,"wall_s":0.2}"#
+        );
+        let d = diff_streams(OLD, &grown).unwrap();
+        assert_eq!(d.added.len(), 1);
+        assert!(!d.has_hard_regressions());
+    }
+
+    #[test]
+    fn varying_integers_do_not_break_identity() {
+        // peak_rss differs wildly between runs — rows must still match.
+        let new = edit(OLD, r#""peak_rss":123456789"#, r#""peak_rss":987654321"#);
+        let d = diff_streams(OLD, &new).unwrap();
+        assert!(d.missing.is_empty() && d.added.is_empty());
+        assert_eq!(d.rows.len(), 3);
+    }
+
+    #[test]
+    fn json_rows_parse_and_carry_the_verdict() {
+        let new = edit(OLD, r#""speedup_vs_1t":3.1"#, r#""speedup_vs_1t":1.0"#);
+        let d = diff_streams(OLD, &new).unwrap();
+        let rows = d.json_rows();
+        let first = rows.lines().next().unwrap();
+        let v = Json::parse(first).unwrap();
+        assert_eq!(v.get("kind").and_then(Json::as_str), Some("summary"));
+        assert_eq!(v.get("fail"), Some(&Json::Bool(true)));
+        for line in rows.lines() {
+            Json::parse(line).unwrap();
+        }
+    }
+}

@@ -31,23 +31,25 @@ use crate::util::{Error, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 
-/// One parsed trace event (the subset of fields merging needs).
+/// One parsed trace event (the subset of fields merging and profiling
+/// need; shared with [`crate::obs::profile`]).
 #[derive(Debug, Clone)]
-struct Ev {
-    party: String,
-    session: u64,
-    seq: u64,
-    ts_us: u64,
-    ev: String,
-    name: String,
-    round: Option<u64>,
-    peer: Option<u64>,
-    bytes: Option<u64>,
-    counters: Vec<(String, u64)>,
+pub(crate) struct Ev {
+    pub(crate) party: String,
+    pub(crate) session: u64,
+    pub(crate) seq: u64,
+    pub(crate) ts_us: u64,
+    pub(crate) ev: String,
+    pub(crate) name: String,
+    pub(crate) round: Option<u64>,
+    pub(crate) peer: Option<u64>,
+    pub(crate) bytes: Option<u64>,
+    pub(crate) dur_us: Option<u64>,
+    pub(crate) counters: Vec<(String, u64)>,
 }
 
-const FIXED_KEYS: [&str; 9] = [
-    "party", "session", "seq", "ts_us", "ev", "name", "round", "peer", "bytes",
+const FIXED_KEYS: [&str; 10] = [
+    "party", "session", "seq", "ts_us", "ev", "name", "round", "peer", "bytes", "dur_us",
 ];
 
 fn parse_event(line: &str, file: &str, lineno: usize) -> Result<Ev> {
@@ -73,14 +75,18 @@ fn parse_event(line: &str, file: &str, lineno: usize) -> Result<Ev> {
         round: u("round"),
         peer: u("peer"),
         bytes: u("bytes"),
+        dur_us: u("dur_us"),
         counters,
     })
 }
 
 fn read_dir_events(dir: &Path) -> Result<Vec<Ev>> {
     let mut events = Vec::new();
+    // No command prefix on these: `fedsvd trace <sub>` prepends its own
+    // `trace merge:` / `trace analyze:` context, and a doubled prefix
+    // is exactly the kind of noise a one-line error shouldn't carry.
     let entries = std::fs::read_dir(dir)
-        .map_err(|e| Error::Runtime(format!("trace merge: cannot read {}: {e}", dir.display())))?;
+        .map_err(|e| Error::Runtime(format!("cannot read {}: {e}", dir.display())))?;
     let mut files: Vec<_> = entries
         .filter_map(|e| e.ok().map(|e| e.path()))
         .filter(|p| p.extension().is_some_and(|x| x == "jsonl"))
@@ -88,13 +94,13 @@ fn read_dir_events(dir: &Path) -> Result<Vec<Ev>> {
     files.sort();
     if files.is_empty() {
         return Err(Error::Runtime(format!(
-            "trace merge: no .jsonl streams in {}",
+            "no .jsonl streams in {}",
             dir.display()
         )));
     }
     for path in &files {
         let text = std::fs::read_to_string(path)
-            .map_err(|e| Error::Runtime(format!("trace merge: {}: {e}", path.display())))?;
+            .map_err(|e| Error::Runtime(format!("{}: {e}", path.display())))?;
         let fname = path.display().to_string();
         for (i, line) in text.lines().enumerate() {
             if line.trim().is_empty() {
@@ -150,17 +156,24 @@ pub fn send_totals(dir: &Path) -> Result<Vec<(u64, u64)>> {
     Ok(totals.into_iter().collect())
 }
 
-/// Merge every per-party stream under `dir` into a Chrome trace JSON
-/// document (returned as a string; notes about skipped sessions go to
-/// stderr). Picks the session with the most events.
-pub fn merge_dir(dir: &Path) -> Result<String> {
-    merge_dir_with(dir, None)
+/// One session's events from a trace directory, epoch-aligned: `ts_us`
+/// rewritten onto a common zero-based timeline, sorted by (aligned ts,
+/// party rank, seq), with parties in canonical track order. The shared
+/// loading path of `trace merge` and `trace analyze`.
+pub(crate) struct Aligned {
+    pub(crate) session: u64,
+    pub(crate) parties: Vec<String>,
+    pub(crate) events: Vec<Ev>,
 }
 
-/// [`merge_dir`] with an explicit session override: `Some(id)` merges
-/// exactly that session (erroring with the available ids when the
-/// directory holds no events for it) instead of the majority pick.
-pub fn merge_dir_with(dir: &Path, want_session: Option<u64>) -> Result<String> {
+/// Load `dir`, pick a session (`want_session` override, else majority —
+/// skipped sessions reported on stderr) and align the per-party streams
+/// onto one timeline. Alignment: shift each party to start at 0, then
+/// anchor the first occurrence of the smallest round label shared by
+/// ≥ 2 parties — the protocol's lockstep rounds make that a faithful
+/// sync point. Per-party shifts preserve intra-party deltas, so span
+/// durations and `dur_us` intervals are shift-invariant.
+pub(crate) fn load_aligned(dir: &Path, want_session: Option<u64>) -> Result<Aligned> {
     let all = read_dir_events(dir)?;
 
     // Pick the requested session, else the dominant one; report what
@@ -177,19 +190,21 @@ pub fn merge_dir_with(dir: &Path, want_session: Option<u64>) -> Result<String> {
                     .map(|(s, n)| format!("{s:#x} ({n} events)"))
                     .collect();
                 return Err(Error::Runtime(format!(
-                    "trace merge: no events for session {s:#x} in {}; \
-                     sessions present: {}",
+                    "no events for session {s:#x} in {}; sessions present: {}",
                     dir.display(),
-                    have.join(", ")
+                    if have.is_empty() {
+                        "none".to_string()
+                    } else {
+                        have.join(", ")
+                    }
                 )));
             }
             s
         }
         None => {
-            let (&s, _) = by_session
-                .iter()
-                .max_by_key(|(_, n)| **n)
-                .ok_or_else(|| Error::Runtime("trace merge: no events".into()))?;
+            let (&s, _) = by_session.iter().max_by_key(|(_, n)| **n).ok_or_else(|| {
+                Error::Runtime(format!("no trace events in {}", dir.display()))
+            })?;
             s
         }
     };
@@ -200,7 +215,7 @@ pub fn merge_dir_with(dir: &Path, want_session: Option<u64>) -> Result<String> {
             .map(|(s, n)| format!("{s:#x} ({n} events)"))
             .collect();
         eprintln!(
-            "trace merge: {} sessions in {}; merging {session:#x}, skipping {}",
+            "trace: {} sessions in {}; using {session:#x}, skipping {}",
             by_session.len(),
             dir.display(),
             skipped.join(", ")
@@ -214,8 +229,6 @@ pub fn merge_dir_with(dir: &Path, want_session: Option<u64>) -> Result<String> {
     parties.dedup();
     let tid = |p: &str| parties.iter().position(|q| q == p).expect("known party") as u64;
 
-    // Alignment: shift each party to start at 0, then anchor the first
-    // occurrence of the smallest round label shared by ≥ 2 parties.
     let mut t0: BTreeMap<String, u64> = BTreeMap::new();
     for e in &events {
         let t = t0.entry(e.party.clone()).or_insert(u64::MAX);
@@ -254,9 +267,34 @@ pub fn merge_dir_with(dir: &Path, want_session: Option<u64>) -> Result<String> {
             *offset.get_mut(p).expect("seen party") += (latest - r) as i128;
         }
     }
-    let offset = offset; // frozen
-    let aligned = |e: &Ev| -> u64 { (e.ts_us as i128 + offset[&e.party]).max(0) as u64 };
-    events.sort_by_key(|e| (aligned(e), tid(&e.party), e.seq));
+    for e in &mut events {
+        e.ts_us = (e.ts_us as i128 + offset[&e.party]).max(0) as u64;
+    }
+    events.sort_by_key(|e| (e.ts_us, tid(&e.party), e.seq));
+    Ok(Aligned {
+        session,
+        parties,
+        events,
+    })
+}
+
+/// Merge every per-party stream under `dir` into a Chrome trace JSON
+/// document (returned as a string; notes about skipped sessions go to
+/// stderr). Picks the session with the most events.
+pub fn merge_dir(dir: &Path) -> Result<String> {
+    merge_dir_with(dir, None)
+}
+
+/// [`merge_dir`] with an explicit session override: `Some(id)` merges
+/// exactly that session (erroring with the available ids when the
+/// directory holds no events for it) instead of the majority pick.
+pub fn merge_dir_with(dir: &Path, want_session: Option<u64>) -> Result<String> {
+    let Aligned {
+        session,
+        parties,
+        events,
+    } = load_aligned(dir, want_session)?;
+    let tid = |p: &str| parties.iter().position(|q| q == p).expect("known party") as u64;
 
     // Render the trace_event array.
     let mut rows: Vec<String> = Vec::with_capacity(events.len() + parties.len() + 1);
@@ -284,7 +322,7 @@ pub fn merge_dir_with(dir: &Path, want_session: Option<u64>) -> Result<String> {
         );
     }
     for e in &events {
-        let ts = aligned(e);
+        let ts = e.ts_us;
         let t = tid(&e.party);
         let mut args = JsonRow::new().u64("seq", e.seq);
         if let Some(r) = e.round {
@@ -297,6 +335,9 @@ pub fn merge_dir_with(dir: &Path, want_session: Option<u64>) -> Result<String> {
         }
         if let Some(b) = e.bytes {
             args = args.u64("bytes", b);
+        }
+        if let Some(d) = e.dur_us {
+            args = args.u64("dur_us", d);
         }
         let row = match e.ev.as_str() {
             "span_enter" | "span_leave" => JsonRow::new()

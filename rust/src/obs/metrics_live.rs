@@ -169,6 +169,9 @@ const FRAME_BOUNDS_B: &[u64] = &[
     64, 256, 1_024, 4_096, 16_384, 65_536, 262_144, 1_048_576, 4_194_304,
 ];
 
+/// Completed-round latencies kept per party for live percentiles.
+const LATENCY_RING: usize = 512;
+
 /// One party's live status (thread fabrics register several per
 /// process; `fedsvd serve` exactly one).
 #[derive(Debug, Clone)]
@@ -177,6 +180,55 @@ struct PartyStatus {
     /// Currently-open round label, if inside one.
     round: Option<u64>,
     rounds_completed: u64,
+    /// Cumulative µs this party spent blocked (gate + recv) in
+    /// completed rounds.
+    wait_us: u64,
+    /// Cumulative µs of completed-round wall time minus waits.
+    compute_us: u64,
+    /// Recent completed-round latencies (µs, newest last, bounded).
+    latencies_us: std::collections::VecDeque<u64>,
+}
+
+impl PartyStatus {
+    fn new(session: u64) -> PartyStatus {
+        PartyStatus {
+            session,
+            round: None,
+            rounds_completed: 0,
+            wait_us: 0,
+            compute_us: 0,
+            latencies_us: std::collections::VecDeque::new(),
+        }
+    }
+
+    /// Fraction of completed-round wall time spent blocked.
+    fn wait_fraction(&self) -> f64 {
+        let total = self.wait_us + self.compute_us;
+        if total == 0 {
+            0.0
+        } else {
+            self.wait_us as f64 / total as f64
+        }
+    }
+
+    /// Nearest-rank percentile over the latency ring, in µs.
+    fn latency_pct(&self, q: f64) -> Option<u64> {
+        if self.latencies_us.is_empty() {
+            return None;
+        }
+        let mut v: Vec<u64> = self.latencies_us.iter().copied().collect();
+        v.sort_unstable();
+        let rank = ((q * v.len() as f64).ceil() as usize).clamp(1, v.len());
+        Some(v[rank - 1])
+    }
+}
+
+/// Per-round-label wait/compute aggregation (µs + round count).
+#[derive(Debug, Clone, Copy, Default)]
+struct LabelAgg {
+    wait_us: u64,
+    compute_us: u64,
+    rounds: u64,
 }
 
 struct Registry {
@@ -199,6 +251,16 @@ struct Registry {
     phase_duration_us: Hist,
     send_frame_bytes: Hist,
     recv_frame_bytes: Hist,
+    /// Global (unlabelled) histograms of per-round wait and compute —
+    /// the live view of the `obs::profile` decomposition. Kept
+    /// unlabelled on purpose: the exposition checkers walk one
+    /// cumulative bucket state per histogram family, so the per-label
+    /// split is exposed through [`Registry::round_split`] counters
+    /// instead of labelled sub-series.
+    round_wait_us: Hist,
+    round_compute_us: Hist,
+    /// Round label → cumulative wait/compute µs and round count.
+    round_split: Mutex<BTreeMap<u64, LabelAgg>>,
     /// Per-round-label *sent* bytes — the same basis as the trace-side
     /// `send` events, so any scrape is a prefix of the final
     /// `ClusterStats::round_traffic`.
@@ -226,6 +288,9 @@ fn reg() -> &'static Registry {
         phase_duration_us: Hist::new(DUR_BOUNDS_US, 1e-6),
         send_frame_bytes: Hist::new(FRAME_BOUNDS_B, 1.0),
         recv_frame_bytes: Hist::new(FRAME_BOUNDS_B, 1.0),
+        round_wait_us: Hist::new(DUR_BOUNDS_US, 1e-6),
+        round_compute_us: Hist::new(DUR_BOUNDS_US, 1e-6),
+        round_split: Mutex::new(BTreeMap::new()),
         ledger: Mutex::new(BTreeMap::new()),
         parties: Mutex::new(BTreeMap::new()),
     })
@@ -257,6 +322,8 @@ pub fn reset_for_tests() {
         &r.phase_duration_us,
         &r.send_frame_bytes,
         &r.recv_frame_bytes,
+        &r.round_wait_us,
+        &r.round_compute_us,
     ] {
         for b in &h.buckets {
             b.store(0, Ordering::Relaxed);
@@ -265,6 +332,7 @@ pub fn reset_for_tests() {
         h.sum.store(0, Ordering::Relaxed);
         h.count.store(0, Ordering::Relaxed);
     }
+    r.round_split.lock().expect("round split lock").clear();
     r.ledger.lock().expect("ledger lock").clear();
     r.parties.lock().expect("parties lock").clear();
 }
@@ -349,18 +417,50 @@ pub fn round_enter(role: &str, label: u64) {
     }
 }
 
-/// A party left round `label` after `micros` µs of wall time.
+/// A party left a round after `micros` µs of wall time (no wait split
+/// known — kept for callers without one; the runtime's round seam uses
+/// [`round_observe`]).
 pub fn round_complete(role: &str, micros: u64) {
+    round_observe_inner(role, None, micros, 0);
+}
+
+/// A party left round `label` after `total_us` µs of wall time, of
+/// which `wait_us` were spent blocked (gate rendezvous + receives) —
+/// the live feed of the `obs::profile` wait/compute decomposition.
+/// Callers must pre-clamp `wait_us ≤ total_us`.
+pub fn round_observe(role: &str, label: u64, total_us: u64, wait_us: u64) {
+    round_observe_inner(role, Some(label), total_us, wait_us);
+}
+
+fn round_observe_inner(role: &str, label: Option<u64>, total_us: u64, wait_us: u64) {
     if !enabled() {
         return;
     }
+    let wait_us = wait_us.min(total_us);
+    let compute_us = total_us - wait_us;
     let r = reg();
     r.rounds_completed.fetch_add(1, Ordering::Relaxed);
-    r.round_latency_us.observe(micros);
+    r.round_latency_us.observe(total_us);
+    r.round_wait_us.observe(wait_us);
+    r.round_compute_us.observe(compute_us);
+    if let Some(label) = label {
+        if let Ok(mut m) = r.round_split.lock() {
+            let agg = m.entry(label).or_default();
+            agg.wait_us += wait_us;
+            agg.compute_us += compute_us;
+            agg.rounds += 1;
+        }
+    }
     if let Ok(mut p) = r.parties.lock() {
         if let Some(s) = p.get_mut(role) {
             s.round = None;
             s.rounds_completed += 1;
+            s.wait_us += wait_us;
+            s.compute_us += compute_us;
+            if s.latencies_us.len() >= LATENCY_RING {
+                s.latencies_us.pop_front();
+            }
+            s.latencies_us.push_back(total_us);
         }
     }
 }
@@ -435,11 +535,78 @@ pub fn render_metrics() -> String {
             ));
         }
     }
+    // Per-round-label wait/compute split as labelled *counters* (the
+    // histogram families below stay unlabelled: the exposition
+    // validators walk one cumulative bucket state per family).
+    out.push_str("# TYPE fedsvd_round_wait_seconds_total counter\n");
+    if let Ok(m) = r.round_split.lock() {
+        for (&label, agg) in m.iter() {
+            out.push_str(&format!(
+                "fedsvd_round_wait_seconds_total{{label=\"{label}\",round=\"{}\"}} {}\n",
+                crate::cluster::labels::name(label),
+                fmt_f64(agg.wait_us as f64 * 1e-6)
+            ));
+        }
+    }
+    out.push_str("# TYPE fedsvd_round_compute_seconds_total counter\n");
+    if let Ok(m) = r.round_split.lock() {
+        for (&label, agg) in m.iter() {
+            out.push_str(&format!(
+                "fedsvd_round_compute_seconds_total{{label=\"{label}\",round=\"{}\"}} {}\n",
+                crate::cluster::labels::name(label),
+                fmt_f64(agg.compute_us as f64 * 1e-6)
+            ));
+        }
+    }
+    // Per-party wait fraction and the straggler flag ("who is the
+    // federation waiting on": the party that itself waits least).
+    let parties = r.parties.lock().map(|p| p.clone()).unwrap_or_default();
+    let straggler = straggler_role(&parties);
+    out.push_str("# TYPE fedsvd_wait_fraction gauge\n");
+    for (role, s) in &parties {
+        out.push_str(&format!(
+            "fedsvd_wait_fraction{{party=\"{role}\"}} {}\n",
+            fmt_f64(s.wait_fraction())
+        ));
+    }
+    out.push_str("# TYPE fedsvd_straggler gauge\n");
+    for role in parties.keys() {
+        out.push_str(&format!(
+            "fedsvd_straggler{{party=\"{role}\"}} {}\n",
+            u64::from(straggler.as_deref() == Some(role))
+        ));
+    }
     r.round_latency_us.render(&mut out, "fedsvd_round_latency_seconds");
     r.phase_duration_us.render(&mut out, "fedsvd_phase_duration_seconds");
     r.send_frame_bytes.render(&mut out, "fedsvd_send_frame_bytes");
     r.recv_frame_bytes.render(&mut out, "fedsvd_recv_frame_bytes");
+    r.round_wait_us.render(&mut out, "fedsvd_round_wait_seconds");
+    r.round_compute_us.render(&mut out, "fedsvd_round_compute_seconds");
     out
+}
+
+/// The live straggler heuristic: with ≥ 2 parties that have completed
+/// rounds, the bottleneck is the party everyone else waits *on* — i.e.
+/// the one spending the smallest fraction of its own round time
+/// blocked. `None` until two parties have history, or when no time has
+/// been recorded at all.
+fn straggler_role(parties: &BTreeMap<String, PartyStatus>) -> Option<String> {
+    let with_history: Vec<(&String, &PartyStatus)> = parties
+        .iter()
+        .filter(|(_, s)| s.wait_us + s.compute_us > 0)
+        .collect();
+    if with_history.len() < 2 {
+        return None;
+    }
+    with_history
+        .iter()
+        .min_by(|(an, a), (bn, b)| {
+            a.wait_fraction()
+                .partial_cmp(&b.wait_fraction())
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| an.cmp(bn))
+        })
+        .map(|(n, _)| (*n).clone())
 }
 
 /// Render the `/status` JSON snapshot.
@@ -447,6 +614,7 @@ pub fn render_status() -> String {
     let r = reg();
     let parties = r.parties.lock().map(|p| p.clone()).unwrap_or_default();
     let session = parties.values().next().map(|s| s.session).unwrap_or(0);
+    let straggler = straggler_role(&parties);
     let mut parts = String::from("[");
     for (i, (role, s)) in parties.iter().enumerate() {
         if i > 0 {
@@ -462,6 +630,18 @@ pub fn render_status() -> String {
                 .str("round", &crate::cluster::labels::name(l)),
             None => row.raw("round", "null"),
         };
+        row = row
+            .f64("wait_s", s.wait_us as f64 * 1e-6, 6)
+            .f64("compute_s", s.compute_us as f64 * 1e-6, 6)
+            .f64("wait_fraction", s.wait_fraction(), 4);
+        row = match s.latency_pct(0.50) {
+            Some(us) => row.f64("round_p50_s", us as f64 * 1e-6, 6),
+            None => row.raw("round_p50_s", "null"),
+        };
+        row = match s.latency_pct(0.95) {
+            Some(us) => row.f64("round_p95_s", us as f64 * 1e-6, 6),
+            None => row.raw("round_p95_s", "null"),
+        };
         parts.push_str(&row.finish());
     }
     parts.push(']');
@@ -475,9 +655,14 @@ pub fn render_status() -> String {
         }
     }
     ledger.push('}');
-    JsonRow::new()
+    let mut top = JsonRow::new()
         .str("session", &format!("{session:016x}"))
-        .raw("parties", &parts)
+        .raw("parties", &parts);
+    top = match &straggler {
+        Some(role) => top.str("straggler", role),
+        None => top.raw("straggler", "null"),
+    };
+    top
         .u64("bytes_sent", r.bytes_sent.load(Ordering::Relaxed))
         .u64("bytes_recv", r.bytes_recv.load(Ordering::Relaxed))
         .u64("overhead_bytes", r.overhead_bytes.load(Ordering::Relaxed))
@@ -552,10 +737,7 @@ pub fn party_scope(role: &str, session: u64) -> PartyScope {
     }
     drop(g);
     if let Ok(mut p) = reg().parties.lock() {
-        p.insert(
-            role.to_string(),
-            PartyStatus { session, round: None, rounds_completed: 0 },
-        );
+        p.insert(role.to_string(), PartyStatus::new(session));
     }
     PartyScope { role: role.to_string() }
 }

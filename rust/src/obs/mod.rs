@@ -39,6 +39,7 @@
 pub mod counters;
 pub mod merge;
 pub mod metrics_live;
+pub mod profile;
 
 /// Instant-event name the TCP transport emits when it successfully
 /// reconnects to a peer after a mid-protocol socket loss. Flight
@@ -57,6 +58,17 @@ pub const EV_REPLAYED_BYTES: &str = "replayed_bytes";
 /// `roundTraffic` under the `UNLABELLED` key so trace totals reconcile
 /// with the *full* `ClusterStats::round_traffic`, overhead included.
 pub const EV_OVERHEAD_BYTES: &str = "overhead_bytes";
+/// Instant-event name emitted once per round right after the (possibly
+/// blocking) rendezvous completes; `dur_us` carries how long the party
+/// was held at the gate waiting for its peers — the scheduler-side
+/// component of transport wait in the `obs::profile` decomposition.
+pub const EV_ROUND_GATE: &str = "round_gate";
+/// Instant-event name of one `ShardStore` spill to disk (`bytes` =
+/// matrix bytes written, `dur_us` = write duration).
+pub const EV_SHARD_SPILL: &str = "shard_spill";
+/// Instant-event name of one `ShardStore` read-back from disk
+/// (`bytes` = matrix bytes read, `dur_us` = read duration).
+pub const EV_SHARD_LOAD: &str = "shard_load";
 
 use crate::metrics::jsonl::JsonRow;
 use std::cell::RefCell;
@@ -115,6 +127,12 @@ pub struct Event {
     /// Destination (send) party id.
     pub peer: Option<usize>,
     pub bytes: Option<u64>,
+    /// Duration in microseconds of the interval this event closes,
+    /// ending at `ts_us`: blocking-receive wait (`recv`), round-gate
+    /// wait ([`EV_ROUND_GATE`]), shard disk IO ([`EV_SHARD_SPILL`] /
+    /// [`EV_SHARD_LOAD`]). `obs::profile` turns these into the
+    /// wait/IO legs of the wall-time decomposition.
+    pub dur_us: Option<u64>,
     /// Counter snapshot payload (only for `Kind::Counter`).
     pub counters: Vec<(&'static str, u64)>,
 }
@@ -137,6 +155,9 @@ impl Event {
         }
         if let Some(b) = self.bytes {
             row = row.u64("bytes", b);
+        }
+        if let Some(d) = self.dur_us {
+            row = row.u64("dur_us", d);
         }
         for (k, v) in &self.counters {
             row = row.u64(k, *v);
@@ -259,6 +280,7 @@ impl Tracer {
         self.seq.load(Ordering::Relaxed)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn emit(
         &self,
         kind: Kind,
@@ -266,6 +288,7 @@ impl Tracer {
         round: Option<u64>,
         peer: Option<usize>,
         bytes: Option<u64>,
+        dur_us: Option<u64>,
         counters: Vec<(&'static str, u64)>,
     ) {
         let ev = Event {
@@ -278,6 +301,7 @@ impl Tracer {
             round,
             peer,
             bytes,
+            dur_us,
             counters,
         };
         flight_push(&ev);
@@ -292,25 +316,52 @@ impl Tracer {
     }
 
     pub fn span_enter(&self, name: &str, round: Option<u64>) {
-        self.emit(Kind::SpanEnter, name, round, None, None, Vec::new());
+        self.emit(Kind::SpanEnter, name, round, None, None, None, Vec::new());
     }
 
     pub fn span_leave(&self, name: &str, round: Option<u64>, bytes: Option<u64>) {
-        self.emit(Kind::SpanLeave, name, round, None, bytes, Vec::new());
+        self.emit(Kind::SpanLeave, name, round, None, bytes, None, Vec::new());
     }
 
     /// `name` is the message kind; `bytes` must be exactly what the
     /// transport metered, so trace totals reconcile with the ledgers.
     pub fn send_event(&self, msg_kind: &str, round: Option<u64>, to: usize, bytes: u64) {
-        self.emit(Kind::Send, msg_kind, round, Some(to), Some(bytes), Vec::new());
+        self.emit(Kind::Send, msg_kind, round, Some(to), Some(bytes), None, Vec::new());
     }
 
     pub fn recv_event(&self, msg_kind: &str, round: Option<u64>) {
-        self.emit(Kind::Recv, msg_kind, round, None, None, Vec::new());
+        self.emit(Kind::Recv, msg_kind, round, None, None, None, Vec::new());
+    }
+
+    /// A receive that blocked for `wait_us` before the message arrived.
+    /// The wait interval ends at this event's `ts_us`; `obs::profile`
+    /// charges it to the party's transport-wait leg.
+    pub fn recv_event_waited(&self, msg_kind: &str, round: Option<u64>, wait_us: u64) {
+        self.emit(Kind::Recv, msg_kind, round, None, None, Some(wait_us), Vec::new());
+    }
+
+    /// The round-`label` rendezvous completed after holding this party
+    /// for `wait_us` at the gate (ends at this event's `ts_us`).
+    pub fn gate_event(&self, label: u64, wait_us: u64) {
+        self.emit(
+            Kind::Instant,
+            EV_ROUND_GATE,
+            Some(label),
+            None,
+            None,
+            Some(wait_us),
+            Vec::new(),
+        );
     }
 
     pub fn instant(&self, name: &str, bytes: Option<u64>) {
-        self.emit(Kind::Instant, name, None, None, bytes, Vec::new());
+        self.emit(Kind::Instant, name, None, None, bytes, None, Vec::new());
+    }
+
+    /// An instant event that closes a `dur_us`-long interval ending at
+    /// its `ts_us` (shard spill/load disk IO).
+    pub fn instant_dur(&self, name: &str, bytes: Option<u64>, dur_us: u64) {
+        self.emit(Kind::Instant, name, None, None, bytes, Some(dur_us), Vec::new());
     }
 
     /// Emit the current [`counters`] totals as one `counter` event
@@ -318,7 +369,7 @@ impl Tracer {
     pub fn counter_snapshot(&self) {
         let snap = counters::snapshot();
         if !snap.is_empty() {
-            self.emit(Kind::Counter, "counters", None, None, None, snap);
+            self.emit(Kind::Counter, "counters", None, None, None, None, snap);
         }
     }
 }
@@ -425,12 +476,13 @@ pub fn flight_clear() {
 
 /// Render a post-mortem for `party`: a header identifying the party,
 /// failure reason and the last round it touched, followed by the
-/// party's recent events as JSONL.
+/// party's recent events as JSONL, and an attribution footer (compute
+/// vs wait vs IO split plus the last-round straggler candidate —
+/// computed by [`profile::flight_attribution`] over the full ring so
+/// peers' ring spans can name who the party was waiting on).
 pub fn flight_dump(party: &str, reason: &str) -> String {
-    let events: Vec<Event> = flight_snapshot()
-        .into_iter()
-        .filter(|e| &*e.party == party)
-        .collect();
+    let all = flight_snapshot();
+    let events: Vec<&Event> = all.iter().filter(|e| &*e.party == party).collect();
     let last_round = events.iter().rev().find_map(|e| e.round);
     let mut out = format!(
         "=== FLIGHT-RECORDER DUMP party={party} reason={reason:?} last_round={} events={} ===\n",
@@ -444,6 +496,8 @@ pub fn flight_dump(party: &str, reason: &str) -> String {
         out.push_str(&ev.jsonl());
         out.push('\n');
     }
+    out.push_str(&profile::flight_attribution(party, &all));
+    out.push('\n');
     out.push_str(&format!("=== FLIGHT-RECORDER END party={party} ==="));
     out
 }
@@ -483,6 +537,7 @@ mod tests {
             round: None,
             peer: None,
             bytes: None,
+            dur_us: None,
             counters: vec![("pool_jobs", 3)],
         };
         let v = Json::parse(&ev.jsonl()).unwrap();

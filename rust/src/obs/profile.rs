@@ -1,0 +1,1067 @@
+//! Performance attribution over trace streams: where did the time go?
+//!
+//! `fedsvd trace analyze <dir>` consumes the same per-party JSONL
+//! streams `trace merge` does (via [`super::merge::load_aligned`], so
+//! session picking and epoch alignment are shared) and answers three
+//! questions the raw timeline leaves open:
+//!
+//! * **decomposition** — for each party (and each round label) the wall
+//!   time splits *exactly* into compute / transport-wait / disk-IO /
+//!   untracked. The split is computed by interval algebra with a strict
+//!   priority (wait ≻ IO ≻ tracked-active ≻ untracked), so the four
+//!   legs sum to the party's wall time with no double-count and no gap
+//!   — an invariant `tests/obs_profile_suite.rs` asserts to the
+//!   microsecond;
+//! * **critical path** — the cross-party chain of compute stretches,
+//!   message transfers and gate rendezvous that bounds end-to-end wall
+//!   time, walked backwards from the last party to finish through the
+//!   ledger-exact `send`/`recv` events. Steps tile the walked range by
+//!   construction, so the reported coverage is the honest fraction of
+//!   wall time the chain explains;
+//! * **stragglers and rates** — per round label, who arrived last at
+//!   the gate and by how much; per phase, `obs::counters` FLOP deltas
+//!   joined against metered send bytes for roofline-style GF/s and
+//!   bytes/s. (Counters are process-global: per-party rates are exact
+//!   in multi-process runs (`fedsvd serve`), shared across the
+//!   federation in single-process local-sim runs.)
+//!
+//! The same wait/compute split feeds the live plane while a federation
+//! runs (`cluster::runtime` → [`super::metrics_live::round_observe`]),
+//! and a compact per-party footer of it closes every flight-recorder
+//! dump ([`flight_attribution`]).
+
+use super::merge::{self, Aligned, Ev};
+use crate::cluster::labels;
+use crate::metrics::jsonl::JsonRow;
+use crate::util::Result;
+use std::collections::{BTreeMap, HashSet};
+use std::path::Path;
+
+// ---------------------------------------------------------------------------
+// interval algebra (half-open [t0, t1) microsecond intervals)
+// ---------------------------------------------------------------------------
+
+type Iv = (u64, u64);
+
+/// Sort and merge overlapping/adjacent intervals; drops empty ones.
+fn coalesce(mut ivs: Vec<Iv>) -> Vec<Iv> {
+    ivs.retain(|(a, b)| b > a);
+    ivs.sort_unstable();
+    let mut out: Vec<Iv> = Vec::with_capacity(ivs.len());
+    for (a, b) in ivs {
+        match out.last_mut() {
+            Some((_, e)) if a <= *e => *e = (*e).max(b),
+            _ => out.push((a, b)),
+        }
+    }
+    out
+}
+
+/// Clip a coalesced set to `[lo, hi)`.
+fn clip(ivs: &[Iv], lo: u64, hi: u64) -> Vec<Iv> {
+    ivs.iter()
+        .filter_map(|&(a, b)| {
+            let (a, b) = (a.max(lo), b.min(hi));
+            (b > a).then_some((a, b))
+        })
+        .collect()
+}
+
+/// `a \ b` for coalesced sets.
+fn subtract(a: &[Iv], b: &[Iv]) -> Vec<Iv> {
+    let mut out = Vec::new();
+    for &(mut lo, hi) in a {
+        for &(b0, b1) in b {
+            if b1 <= lo || b0 >= hi {
+                continue;
+            }
+            if b0 > lo {
+                out.push((lo, b0));
+            }
+            lo = lo.max(b1);
+            if lo >= hi {
+                break;
+            }
+        }
+        if lo < hi {
+            out.push((lo, hi));
+        }
+    }
+    out
+}
+
+/// Total length of a coalesced set.
+fn measure(ivs: &[Iv]) -> u64 {
+    ivs.iter().map(|(a, b)| b - a).sum()
+}
+
+// ---------------------------------------------------------------------------
+// decomposition
+// ---------------------------------------------------------------------------
+
+/// An exact wall-time split: the four legs always sum to `wall_us`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Breakdown {
+    pub wall_us: u64,
+    pub compute_us: u64,
+    pub wait_us: u64,
+    pub io_us: u64,
+    pub untracked_us: u64,
+}
+
+impl Breakdown {
+    /// Classify `[w0, w1)` with priority wait ≻ io ≻ active ≻ untracked.
+    /// All inputs may overlap arbitrarily; the output legs are disjoint
+    /// and tile `[w0, w1)` exactly.
+    fn cut(w0: u64, w1: u64, waits: Vec<Iv>, ios: Vec<Iv>, actives: Vec<Iv>) -> Breakdown {
+        let wall_us = w1.saturating_sub(w0);
+        let wait = clip(&coalesce(waits), w0, w1);
+        let io = subtract(&clip(&coalesce(ios), w0, w1), &wait);
+        let act = subtract(&subtract(&clip(&coalesce(actives), w0, w1), &wait), &io);
+        let (wait_us, io_us, compute_us) = (measure(&wait), measure(&io), measure(&act));
+        Breakdown {
+            wall_us,
+            compute_us,
+            wait_us,
+            io_us,
+            untracked_us: wall_us - wait_us - io_us - compute_us,
+        }
+    }
+
+    pub fn wait_fraction(&self) -> f64 {
+        if self.wall_us == 0 {
+            0.0
+        } else {
+            self.wait_us as f64 / self.wall_us as f64
+        }
+    }
+}
+
+/// What one party's trace contributes to the analysis.
+#[derive(Debug, Default)]
+struct PartyTape {
+    /// `[enter, leave)` of the `party` span (else the event extent).
+    wall: Option<Iv>,
+    /// Blocking intervals: receive waits and gate waits, each ending at
+    /// its event's timestamp.
+    waits: Vec<Iv>,
+    /// Shard spill/load disk-IO intervals.
+    ios: Vec<Iv>,
+    /// Tracked-active intervals: round spans ∪ phase spans.
+    actives: Vec<Iv>,
+    /// Round label → that party's round-span intervals.
+    rounds: BTreeMap<u64, Vec<Iv>>,
+    /// Round label → earliest `span_enter` timestamp (gate arrival).
+    round_enters: BTreeMap<u64, u64>,
+    /// Phase name → intervals (non-round, non-party spans).
+    phases: Vec<(String, Iv)>,
+}
+
+/// Pair spans per name with a stack in seq order; unclosed spans are
+/// closed at `end` (crash-truncated streams still decompose).
+fn build_tape(party_events: &[&Ev], end: u64) -> PartyTape {
+    let mut tape = PartyTape::default();
+    let mut open: BTreeMap<&str, Vec<u64>> = BTreeMap::new();
+    let mut spans: Vec<(String, Option<u64>, Iv)> = Vec::new();
+    for e in party_events {
+        match e.ev.as_str() {
+            "span_enter" => open.entry(&e.name).or_default().push(e.ts_us),
+            "span_leave" => {
+                if let Some(t0) = open.get_mut(e.name.as_str()).and_then(Vec::pop) {
+                    spans.push((e.name.clone(), e.round, (t0, e.ts_us)));
+                }
+            }
+            "recv" => {
+                if let Some(d) = e.dur_us.filter(|&d| d > 0) {
+                    tape.waits.push((e.ts_us.saturating_sub(d), e.ts_us));
+                }
+            }
+            "instant" => match e.name.as_str() {
+                super::EV_ROUND_GATE => {
+                    if let Some(d) = e.dur_us.filter(|&d| d > 0) {
+                        tape.waits.push((e.ts_us.saturating_sub(d), e.ts_us));
+                    }
+                }
+                super::EV_SHARD_SPILL | super::EV_SHARD_LOAD => {
+                    if let Some(d) = e.dur_us.filter(|&d| d > 0) {
+                        tape.ios.push((e.ts_us.saturating_sub(d), e.ts_us));
+                    }
+                }
+                _ => {}
+            },
+            _ => {}
+        }
+    }
+    for (name, stack) in open {
+        for t0 in stack {
+            spans.push((name.to_string(), None, (t0, end.max(t0))));
+        }
+    }
+    for (name, round, iv) in spans {
+        if name == "party" {
+            let cur = tape.wall.get_or_insert(iv);
+            cur.0 = cur.0.min(iv.0);
+            cur.1 = cur.1.max(iv.1);
+        } else if let Some(label) = round.filter(|_| name.starts_with("round:")) {
+            tape.actives.push(iv);
+            tape.rounds.entry(label).or_default().push(iv);
+            let en = tape.round_enters.entry(label).or_insert(iv.0);
+            *en = (*en).min(iv.0);
+        } else {
+            tape.actives.push(iv);
+            tape.phases.push((name, iv));
+        }
+    }
+    if tape.wall.is_none() {
+        let lo = party_events.iter().map(|e| e.ts_us).min().unwrap_or(0);
+        let hi = party_events.iter().map(|e| e.ts_us).max().unwrap_or(0);
+        tape.wall = Some((lo, hi));
+    }
+    tape
+}
+
+// ---------------------------------------------------------------------------
+// critical path
+// ---------------------------------------------------------------------------
+
+/// What one critical-path step was doing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepKind {
+    /// The party ran (or idled) locally.
+    Local,
+    /// A message transfer bounded progress (`from_party` → `party`).
+    Xfer,
+    /// A round-gate rendezvous: `party` was held until `from_party` —
+    /// the last arriver — reached the gate.
+    Gate,
+}
+
+impl StepKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            StepKind::Local => "local",
+            StepKind::Xfer => "xfer",
+            StepKind::Gate => "gate",
+        }
+    }
+}
+
+/// One step of the critical path; consecutive steps tile the walked
+/// time range (`t1` of a step is the `t0` of its successor).
+#[derive(Debug, Clone)]
+pub struct Step {
+    pub kind: StepKind,
+    /// The party whose progress this step bounds.
+    pub party: String,
+    /// Sender (xfer) or last gate arriver (gate).
+    pub from_party: Option<String>,
+    /// Span/message/round name the step is attributed to.
+    pub name: String,
+    pub t0: u64,
+    pub t1: u64,
+    pub bytes: Option<u64>,
+}
+
+/// Party-role → transport party id (`ta`=0, `csp`=1, `user<i>`=2+i),
+/// the id space `send` events stamp in `peer`.
+fn role_pid(role: &str) -> Option<u64> {
+    match role {
+        "ta" => Some(0),
+        "csp" => Some(1),
+        _ => role
+            .strip_prefix("user")
+            .and_then(|n| n.parse::<u64>().ok())
+            .map(|i| i + 2),
+    }
+}
+
+/// A blocking interval on some party's timeline, with enough identity
+/// to chase it across the federation.
+#[derive(Debug, Clone)]
+enum Block {
+    RecvWait { t0: u64, t1: u64, msg: String },
+    GateWait { t0: u64, t1: u64, label: u64 },
+}
+
+impl Block {
+    fn t0(&self) -> u64 {
+        match self {
+            Block::RecvWait { t0, .. } | Block::GateWait { t0, .. } => *t0,
+        }
+    }
+    fn t1(&self) -> u64 {
+        match self {
+            Block::RecvWait { t1, .. } | Block::GateWait { t1, .. } => *t1,
+        }
+    }
+}
+
+/// Walk the critical path backwards from the last party to finish.
+/// Returns the steps (forward order) and the fraction of
+/// `[global_start, global_end)` they tile.
+fn critical_path(
+    parties: &[String],
+    by_party: &BTreeMap<String, Vec<&Ev>>,
+    tapes: &BTreeMap<String, PartyTape>,
+) -> (Vec<Step>, f64) {
+    let walls: BTreeMap<&str, Iv> = tapes
+        .iter()
+        .filter_map(|(p, t)| t.wall.map(|w| (p.as_str(), w)))
+        .collect();
+    let global_start = walls.values().map(|w| w.0).min().unwrap_or(0);
+    let global_end = walls.values().map(|w| w.1).max().unwrap_or(0);
+    let Some((last_party, _)) = walls.iter().max_by_key(|(_, w)| w.1) else {
+        return (Vec::new(), 0.0);
+    };
+    if global_end <= global_start {
+        return (Vec::new(), 0.0);
+    }
+
+    // Per-party blocking intervals, sorted by end time.
+    let mut blocks: BTreeMap<&str, Vec<Block>> = BTreeMap::new();
+    for (p, evs) in by_party {
+        let mut v = Vec::new();
+        for e in evs.iter() {
+            let Some(d) = e.dur_us.filter(|&d| d > 0) else {
+                continue;
+            };
+            let t0 = e.ts_us.saturating_sub(d);
+            if e.ev == "recv" {
+                v.push(Block::RecvWait {
+                    t0,
+                    t1: e.ts_us,
+                    msg: e.name.clone(),
+                });
+            } else if e.ev == "instant" && e.name == super::EV_ROUND_GATE {
+                if let Some(label) = e.round {
+                    v.push(Block::GateWait {
+                        t0,
+                        t1: e.ts_us,
+                        label,
+                    });
+                }
+            }
+        }
+        v.sort_by_key(Block::t1);
+        blocks.insert(p, v);
+    }
+    // All sends, by destination pid, for recv matching.
+    struct SendEv<'a> {
+        from: &'a str,
+        ts: u64,
+        msg: &'a str,
+        dest: u64,
+        bytes: Option<u64>,
+    }
+    let sends: Vec<SendEv> = parties
+        .iter()
+        .flat_map(|p| by_party.get(p).into_iter().flatten().map(move |e| (p, e)))
+        .filter(|(_, e)| e.ev == "send")
+        .filter_map(|(p, e)| {
+            e.peer.map(|dest| SendEv {
+                from: p,
+                ts: e.ts_us,
+                msg: &e.name,
+                dest,
+                bytes: e.bytes,
+            })
+        })
+        .collect();
+    // Round-gate arrivals: label → per-party earliest round-span enter.
+    let arrivals: BTreeMap<u64, Vec<(&str, u64)>> = {
+        let mut m: BTreeMap<u64, Vec<(&str, u64)>> = BTreeMap::new();
+        for (p, t) in tapes {
+            for (&label, &ts) in &t.round_enters {
+                m.entry(label).or_default().push((p.as_str(), ts));
+            }
+        }
+        m
+    };
+
+    let mut steps: Vec<Step> = Vec::new(); // built backwards
+    let mut used_sends: HashSet<usize> = HashSet::new();
+    let mut p: &str = last_party;
+    let mut t = global_end;
+    let total_events: usize = by_party.values().map(Vec::len).sum();
+    let cap = total_events + 16;
+    for _ in 0..cap {
+        if t <= global_start {
+            break;
+        }
+        let blk = blocks
+            .get(p)
+            .and_then(|v| v.iter().rev().find(|b| b.t1() <= t))
+            .cloned();
+        let Some(blk) = blk else {
+            // No earlier block: the party computed straight from its
+            // start (or the global start) to `t`.
+            let lo = walls.get(p).map_or(global_start, |w| w.0).min(t);
+            steps.push(Step {
+                kind: StepKind::Local,
+                party: p.to_string(),
+                from_party: None,
+                name: "(compute)".into(),
+                t0: lo,
+                t1: t,
+                bytes: None,
+            });
+            t = lo;
+            break;
+        };
+        if blk.t1() < t {
+            steps.push(Step {
+                kind: StepKind::Local,
+                party: p.to_string(),
+                from_party: None,
+                name: "(compute)".into(),
+                t0: blk.t1(),
+                t1: t,
+                bytes: None,
+            });
+        }
+        match blk {
+            Block::RecvWait { t0, t1, ref msg } => {
+                let my_pid = role_pid(p);
+                // Latest unused matching send not after the wait end;
+                // fall back to the earliest match (clock-skew slack).
+                let pick = |pred: &dyn Fn(&SendEv) -> bool| {
+                    sends
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, s)| {
+                            !used_sends.contains(i)
+                                && s.from != p
+                                && Some(s.dest) == my_pid
+                                && s.msg == msg.as_str()
+                                && pred(s)
+                        })
+                        .max_by_key(|(_, s)| s.ts)
+                        .map(|(i, _)| i)
+                };
+                let found = pick(&|s: &SendEv| s.ts <= t1).or_else(|| {
+                    sends
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, s)| {
+                            !used_sends.contains(i)
+                                && s.from != p
+                                && Some(s.dest) == my_pid
+                                && s.msg == msg.as_str()
+                        })
+                        .min_by_key(|(_, s)| s.ts)
+                        .map(|(i, _)| i)
+                });
+                match found {
+                    Some(i) => {
+                        used_sends.insert(i);
+                        let s = &sends[i];
+                        let x0 = s.ts.min(t1);
+                        steps.push(Step {
+                            kind: StepKind::Xfer,
+                            party: p.to_string(),
+                            from_party: Some(s.from.to_string()),
+                            name: msg.clone(),
+                            t0: x0,
+                            t1,
+                            bytes: s.bytes,
+                        });
+                        p = s.from;
+                        t = x0;
+                    }
+                    None => {
+                        // Sender unknown (truncated stream): absorb the
+                        // wait locally and keep walking this party.
+                        steps.push(Step {
+                            kind: StepKind::Local,
+                            party: p.to_string(),
+                            from_party: None,
+                            name: "(wait)".into(),
+                            t0,
+                            t1,
+                            bytes: None,
+                        });
+                        t = t0;
+                    }
+                }
+            }
+            Block::GateWait { t0, t1, label } => {
+                // The gate released when the last party arrived: jump
+                // to the latest other-party round enter at or before
+                // the release.
+                let last_in = arrivals
+                    .get(&label)
+                    .into_iter()
+                    .flatten()
+                    .filter(|(q, ts)| *q != p && *ts <= t1)
+                    .max_by_key(|(_, ts)| *ts)
+                    .copied();
+                match last_in {
+                    Some((q, ts)) => {
+                        let x0 = ts.min(t1);
+                        steps.push(Step {
+                            kind: StepKind::Gate,
+                            party: p.to_string(),
+                            from_party: Some(q.to_string()),
+                            name: labels::name(label),
+                            t0: x0,
+                            t1,
+                            bytes: None,
+                        });
+                        p = q;
+                        t = x0;
+                    }
+                    None => {
+                        steps.push(Step {
+                            kind: StepKind::Local,
+                            party: p.to_string(),
+                            from_party: None,
+                            name: "(wait)".into(),
+                            t0,
+                            t1,
+                            bytes: None,
+                        });
+                        t = t0;
+                    }
+                }
+            }
+        }
+    }
+    steps.retain(|s| s.t1 > s.t0);
+    steps.reverse();
+    let covered = global_end - t.max(global_start).min(global_end);
+    let coverage = covered as f64 / (global_end - global_start) as f64;
+    (steps, coverage)
+}
+
+// ---------------------------------------------------------------------------
+// the analysis
+// ---------------------------------------------------------------------------
+
+/// Per-round-label gate-arrival spread.
+#[derive(Debug, Clone)]
+pub struct Straggler {
+    pub label: u64,
+    /// Last party to arrive at the gate.
+    pub last_party: String,
+    /// How far behind the first arriver the last one was.
+    pub spread_us: u64,
+    /// `(party, arrival ts)` sorted by arrival.
+    pub arrivals: Vec<(String, u64)>,
+}
+
+/// FLOP/byte rate of one instrumented phase on one party.
+#[derive(Debug, Clone)]
+pub struct PhaseRate {
+    pub party: String,
+    pub phase: String,
+    pub isa: String,
+    pub dur_us: u64,
+    pub flops: u64,
+    pub send_bytes: u64,
+}
+
+impl PhaseRate {
+    pub fn gflops_per_s(&self) -> f64 {
+        if self.dur_us == 0 {
+            0.0
+        } else {
+            self.flops as f64 / 1e3 / self.dur_us as f64
+        }
+    }
+    pub fn mbytes_per_s(&self) -> f64 {
+        if self.dur_us == 0 {
+            0.0
+        } else {
+            self.send_bytes as f64 / self.dur_us as f64
+        }
+    }
+}
+
+/// The full attribution of one traced session.
+#[derive(Debug)]
+pub struct Analysis {
+    pub session: u64,
+    /// End-to-end federation wall time (first start → last finish).
+    pub wall_us: u64,
+    /// Per party, in canonical order.
+    pub parties: Vec<(String, Breakdown)>,
+    /// Per (round label, party), label-major.
+    pub rounds: Vec<(u64, String, Breakdown)>,
+    pub critical_path: Vec<Step>,
+    /// Fraction of `wall_us` the critical path tiles.
+    pub coverage: f64,
+    /// Worst gate spreads first.
+    pub stragglers: Vec<Straggler>,
+    pub phase_rates: Vec<PhaseRate>,
+}
+
+/// Analyze a trace directory (majority session, or `want_session`).
+pub fn analyze_dir(dir: &Path, want_session: Option<u64>) -> Result<Analysis> {
+    Ok(analyze(&merge::load_aligned(dir, want_session)?))
+}
+
+pub(crate) fn analyze(aligned: &Aligned) -> Analysis {
+    let mut by_party: BTreeMap<String, Vec<&Ev>> = BTreeMap::new();
+    for e in &aligned.events {
+        by_party.entry(e.party.clone()).or_default().push(e);
+    }
+    // Events arrive ts-sorted from alignment; tape building needs
+    // per-party *seq* order so span stacks pair correctly.
+    for v in by_party.values_mut() {
+        v.sort_by_key(|e| e.seq);
+    }
+    let global_end = aligned.events.iter().map(|e| e.ts_us).max().unwrap_or(0);
+    let tapes: BTreeMap<String, PartyTape> = by_party
+        .iter()
+        .map(|(p, evs)| (p.clone(), build_tape(evs, global_end)))
+        .collect();
+
+    let global_start = tapes
+        .values()
+        .filter_map(|t| t.wall.map(|w| w.0))
+        .min()
+        .unwrap_or(0);
+    let wall_end = tapes
+        .values()
+        .filter_map(|t| t.wall.map(|w| w.1))
+        .max()
+        .unwrap_or(0);
+
+    let mut parties = Vec::new();
+    let mut rounds: Vec<(u64, String, Breakdown)> = Vec::new();
+    for p in &aligned.parties {
+        let Some(tape) = tapes.get(p) else { continue };
+        let (w0, w1) = tape.wall.unwrap_or((0, 0));
+        parties.push((
+            p.clone(),
+            Breakdown::cut(
+                w0,
+                w1,
+                tape.waits.clone(),
+                tape.ios.clone(),
+                tape.actives.clone(),
+            ),
+        ));
+        for (&label, ivs) in &tape.rounds {
+            // Within a round span the round itself is the active set:
+            // wall = wait + io + compute exactly, untracked 0.
+            let mut acc = Breakdown::default();
+            for &(r0, r1) in ivs {
+                let b = Breakdown::cut(
+                    r0,
+                    r1,
+                    tape.waits.clone(),
+                    tape.ios.clone(),
+                    vec![(r0, r1)],
+                );
+                acc.wall_us += b.wall_us;
+                acc.compute_us += b.compute_us;
+                acc.wait_us += b.wait_us;
+                acc.io_us += b.io_us;
+                acc.untracked_us += b.untracked_us;
+            }
+            rounds.push((label, p.clone(), acc));
+        }
+    }
+    rounds.sort_by(|a, b| (a.0, &a.1).cmp(&(b.0, &b.1)));
+
+    let (critical_path, coverage) = critical_path(&aligned.parties, &by_party, &tapes);
+
+    // Stragglers: per label, gate-arrival spread across parties.
+    let mut by_label: BTreeMap<u64, Vec<(String, u64)>> = BTreeMap::new();
+    for (p, tape) in &tapes {
+        for (&label, &ts) in &tape.round_enters {
+            by_label.entry(label).or_default().push((p.clone(), ts));
+        }
+    }
+    let mut stragglers: Vec<Straggler> = by_label
+        .into_iter()
+        .filter(|(_, arr)| arr.len() >= 2)
+        .map(|(label, mut arrivals)| {
+            arrivals.sort_by_key(|(_, ts)| *ts);
+            let first = arrivals.first().map_or(0, |(_, ts)| *ts);
+            let (last_party, last_ts) = arrivals.last().cloned().unwrap_or_default();
+            Straggler {
+                label,
+                last_party,
+                spread_us: last_ts - first,
+                arrivals,
+            }
+        })
+        .collect();
+    stragglers.sort_by_key(|s| std::cmp::Reverse(s.spread_us));
+
+    // Roofline: counter-event deltas attributed to the phase whose
+    // span_leave immediately precedes the snapshot (the
+    // `MetricsRecorder::end` emission order), joined with send bytes
+    // inside the phase interval.
+    let mut phase_rates = Vec::new();
+    for (p, evs) in &by_party {
+        let tape = &tapes[p];
+        let mut prev: BTreeMap<String, u64> = BTreeMap::new();
+        let mut last_phase: Option<(String, Iv)> = None;
+        let mut flops_by_phase: BTreeMap<(String, String), (u64, Iv)> = BTreeMap::new();
+        for e in evs {
+            if e.ev == "span_leave" && e.name != "party" && !e.name.starts_with("round:") {
+                let iv = tape
+                    .phases
+                    .iter()
+                    .find(|(n, (_, t1))| n == &e.name && *t1 == e.ts_us)
+                    .map(|(_, iv)| *iv)
+                    .unwrap_or((e.ts_us, e.ts_us));
+                last_phase = Some((e.name.clone(), iv));
+            } else if e.ev == "counter" {
+                for (k, v) in &e.counters {
+                    let Some(isa) = k.strip_prefix("kernel_flops_") else {
+                        continue;
+                    };
+                    let before = prev.insert(k.clone(), *v).unwrap_or(0);
+                    let delta = v.saturating_sub(before);
+                    if delta == 0 {
+                        continue;
+                    }
+                    let (phase, iv) = last_phase
+                        .clone()
+                        .unwrap_or_else(|| ("(unattributed)".into(), (0, 0)));
+                    let slot = flops_by_phase
+                        .entry((phase, isa.to_string()))
+                        .or_insert((0, iv));
+                    slot.0 += delta;
+                }
+            }
+        }
+        for ((phase, isa), (flops, (p0, p1))) in flops_by_phase {
+            let send_bytes: u64 = evs
+                .iter()
+                .filter(|e| e.ev == "send" && e.ts_us >= p0 && e.ts_us <= p1)
+                .filter_map(|e| e.bytes)
+                .sum();
+            phase_rates.push(PhaseRate {
+                party: p.clone(),
+                phase,
+                isa,
+                dur_us: p1.saturating_sub(p0),
+                flops,
+                send_bytes,
+            });
+        }
+    }
+    phase_rates.sort_by(|a, b| (&a.party, &a.phase, &a.isa).cmp(&(&b.party, &b.phase, &b.isa)));
+
+    Analysis {
+        session: aligned.session,
+        wall_us: wall_end.saturating_sub(global_start),
+        parties,
+        rounds,
+        critical_path,
+        coverage,
+        stragglers,
+        phase_rates,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rendering
+// ---------------------------------------------------------------------------
+
+fn secs(us: u64) -> String {
+    format!("{:.3}s", us as f64 / 1e6)
+}
+
+fn pct(part: u64, whole: u64) -> String {
+    if whole == 0 {
+        "0.0%".into()
+    } else {
+        format!("{:.1}%", 100.0 * part as f64 / whole as f64)
+    }
+}
+
+/// The human-readable report `fedsvd trace analyze` prints.
+pub fn render_report(a: &Analysis) -> String {
+    let mut out = format!(
+        "=== trace analyze: session {:#x}  wall {}  parties {} ===\n",
+        a.session,
+        secs(a.wall_us),
+        a.parties.len()
+    );
+    out.push_str("\n-- where the time went, per party --\n");
+    out.push_str(&format!(
+        "{:<8} {:>9} {:>16} {:>16} {:>16} {:>16}\n",
+        "party", "wall", "compute", "wait", "io", "untracked"
+    ));
+    for (p, b) in &a.parties {
+        out.push_str(&format!(
+            "{:<8} {:>9} {:>9} {:>6} {:>9} {:>6} {:>9} {:>6} {:>9} {:>6}\n",
+            p,
+            secs(b.wall_us),
+            secs(b.compute_us),
+            pct(b.compute_us, b.wall_us),
+            secs(b.wait_us),
+            pct(b.wait_us, b.wall_us),
+            secs(b.io_us),
+            pct(b.io_us, b.wall_us),
+            secs(b.untracked_us),
+            pct(b.untracked_us, b.wall_us),
+        ));
+    }
+    out.push_str(&format!(
+        "\n-- critical path ({} steps, {:.1}% of wall) --\n",
+        a.critical_path.len(),
+        a.coverage * 100.0
+    ));
+    for s in &a.critical_path {
+        let who = match &s.from_party {
+            Some(q) => format!("{q}→{}", s.party),
+            None => s.party.clone(),
+        };
+        let extra = s.bytes.map(|b| format!(" ({b} B)")).unwrap_or_default();
+        out.push_str(&format!(
+            "  [{:>9}..{:>9}] {:<5} {:<14} {}{}\n",
+            secs(s.t0),
+            secs(s.t1),
+            s.kind.name(),
+            who,
+            s.name,
+            extra
+        ));
+    }
+    let worst: Vec<&Straggler> = a
+        .stragglers
+        .iter()
+        .filter(|s| s.spread_us > 0)
+        .take(5)
+        .collect();
+    if !worst.is_empty() {
+        out.push_str("\n-- stragglers (worst gate spreads) --\n");
+        for s in worst {
+            let arr: Vec<String> = s
+                .arrivals
+                .iter()
+                .map(|(p, ts)| format!("{p}+{}", secs(ts.saturating_sub(s.arrivals[0].1))))
+                .collect();
+            out.push_str(&format!(
+                "  {:<12} last={} spread={}  [{}]\n",
+                labels::name(s.label),
+                s.last_party,
+                secs(s.spread_us),
+                arr.join(" ")
+            ));
+        }
+    }
+    if !a.phase_rates.is_empty() {
+        out.push_str(
+            "\n-- phase rates (counters are process-global: exact per party \
+             under `fedsvd serve`, federation-wide in local-sim) --\n",
+        );
+        for r in &a.phase_rates {
+            out.push_str(&format!(
+                "  {:<8} {:<28} isa={:<6} {:>8.2} GF/s {:>9.1} MB/s out\n",
+                r.party,
+                r.phase,
+                r.isa,
+                r.gflops_per_s(),
+                r.mbytes_per_s()
+            ));
+        }
+    }
+    out
+}
+
+/// Machine-readable JSONL: one row per finding, `kind`-discriminated.
+pub fn json_rows(a: &Analysis) -> String {
+    let mut out = String::new();
+    out.push_str(
+        &JsonRow::new()
+            .str("kind", "summary")
+            .u64("session", a.session)
+            .f64("wall_s", a.wall_us as f64 / 1e6, 6)
+            .u64("parties", a.parties.len() as u64)
+            .u64("steps", a.critical_path.len() as u64)
+            .f64("critical_path_coverage", a.coverage, 4)
+            .finish(),
+    );
+    out.push('\n');
+    for (p, b) in &a.parties {
+        out.push_str(
+            &JsonRow::new()
+                .str("kind", "party")
+                .str("party", p)
+                .f64("wall_s", b.wall_us as f64 / 1e6, 6)
+                .f64("compute_s", b.compute_us as f64 / 1e6, 6)
+                .f64("wait_s", b.wait_us as f64 / 1e6, 6)
+                .f64("io_s", b.io_us as f64 / 1e6, 6)
+                .f64("untracked_s", b.untracked_us as f64 / 1e6, 6)
+                .f64("wait_fraction", b.wait_fraction(), 4)
+                .finish(),
+        );
+        out.push('\n');
+    }
+    for (label, p, b) in &a.rounds {
+        out.push_str(
+            &JsonRow::new()
+                .str("kind", "round")
+                .u64("label", *label)
+                .str("round", &labels::name(*label))
+                .str("party", p)
+                .f64("wall_s", b.wall_us as f64 / 1e6, 6)
+                .f64("compute_s", b.compute_us as f64 / 1e6, 6)
+                .f64("wait_s", b.wait_us as f64 / 1e6, 6)
+                .f64("io_s", b.io_us as f64 / 1e6, 6)
+                .finish(),
+        );
+        out.push('\n');
+    }
+    for (i, s) in a.critical_path.iter().enumerate() {
+        let mut row = JsonRow::new()
+            .str("kind", "critical_step")
+            .u64("i", i as u64)
+            .str("step", s.kind.name())
+            .str("party", &s.party)
+            .str("name", &s.name)
+            .f64("t0_s", s.t0 as f64 / 1e6, 6)
+            .f64("t1_s", s.t1 as f64 / 1e6, 6);
+        if let Some(q) = &s.from_party {
+            row = row.str("from", q);
+        }
+        if let Some(b) = s.bytes {
+            row = row.u64("bytes", b);
+        }
+        out.push_str(&row.finish());
+        out.push('\n');
+    }
+    for s in &a.stragglers {
+        out.push_str(
+            &JsonRow::new()
+                .str("kind", "straggler")
+                .u64("label", s.label)
+                .str("round", &labels::name(s.label))
+                .str("last", &s.last_party)
+                .f64("spread_s", s.spread_us as f64 / 1e6, 6)
+                .finish(),
+        );
+        out.push('\n');
+    }
+    for r in &a.phase_rates {
+        out.push_str(
+            &JsonRow::new()
+                .str("kind", "phase_rate")
+                .str("party", &r.party)
+                .str("phase", &r.phase)
+                .str("isa", &r.isa)
+                .f64("dur_s", r.dur_us as f64 / 1e6, 6)
+                .u64("flops", r.flops)
+                .f64("gf_s", r.gflops_per_s(), 3)
+                .u64("send_bytes", r.send_bytes)
+                .f64("mb_s", r.mbytes_per_s(), 3)
+                .finish(),
+        );
+        out.push('\n');
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// flight-recorder attribution footer
+// ---------------------------------------------------------------------------
+
+/// One-line attribution footer for a flight-recorder dump: `party`'s
+/// compute/wait/IO/untracked split over its ring extent plus the
+/// last-round straggler candidate (the other party that arrived last at
+/// `party`'s final round gate, from peers' ring spans). Plain text only
+/// — dumps are filtered to one party's JSONL and must stay that way.
+pub fn flight_attribution(party: &str, ring: &[super::Event]) -> String {
+    let mine: Vec<&super::Event> = ring.iter().filter(|e| &*e.party == party).collect();
+    if mine.is_empty() {
+        return format!("=== ATTRIBUTION party={party} (no ring events) ===");
+    }
+    let evs: Vec<Ev> = mine
+        .iter()
+        .map(|e| Ev {
+            party: e.party.to_string(),
+            session: e.session,
+            seq: e.seq,
+            ts_us: e.ts_us,
+            ev: e.kind.name().to_string(),
+            name: e.name.clone(),
+            round: e.round,
+            peer: e.peer.map(|p| p as u64),
+            bytes: e.bytes,
+            dur_us: e.dur_us,
+            counters: Vec::new(),
+        })
+        .collect();
+    let refs: Vec<&Ev> = evs.iter().collect();
+    let end = refs.iter().map(|e| e.ts_us).max().unwrap_or(0);
+    let tape = build_tape(&refs, end);
+    let (w0, w1) = tape.wall.unwrap_or((0, 0));
+    let b = Breakdown::cut(w0, w1, tape.waits, tape.ios, tape.actives);
+
+    // Straggler candidate: who arrived last (per the ring's spans) at
+    // this party's final round gate.
+    let last_label = mine.iter().rev().find_map(|e| e.round);
+    let straggler = last_label
+        .and_then(|label| {
+            ring.iter()
+                .filter(|e| {
+                    &*e.party != party
+                        && e.kind == super::Kind::SpanEnter
+                        && e.round == Some(label)
+                })
+                .max_by_key(|e| e.ts_us)
+                .map(|e| format!("{}@{}", e.party, labels::name(label)))
+        })
+        .unwrap_or_else(|| "none".into());
+    format!(
+        "=== ATTRIBUTION party={party} wall={} compute={}({}) wait={}({}) \
+         io={}({}) untracked={}({}) straggler={} ===",
+        secs(b.wall_us),
+        secs(b.compute_us),
+        pct(b.compute_us, b.wall_us),
+        secs(b.wait_us),
+        pct(b.wait_us, b.wall_us),
+        secs(b.io_us),
+        pct(b.io_us, b.wall_us),
+        secs(b.untracked_us),
+        pct(b.untracked_us, b.wall_us),
+        straggler
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interval_algebra_is_exact() {
+        let c = coalesce(vec![(5, 10), (8, 12), (20, 25), (12, 13), (30, 30)]);
+        assert_eq!(c, vec![(5, 13), (20, 25)]);
+        assert_eq!(measure(&c), 13);
+        assert_eq!(clip(&c, 6, 22), vec![(6, 13), (20, 22)]);
+        assert_eq!(
+            subtract(&[(0, 100)], &[(10, 20), (50, 60)]),
+            vec![(0, 10), (20, 50), (60, 100)]
+        );
+        assert_eq!(subtract(&[(10, 20)], &[(0, 100)]), Vec::<Iv>::new());
+    }
+
+    #[test]
+    fn cut_priority_never_double_counts() {
+        // wait [10,30), io [20,40), active [0,50) inside wall [0,60):
+        // wait 20, io gets only [30,40) = 10, compute [0,10)∪[40,50) =
+        // 20, untracked [50,60) = 10 — sums to 60 exactly.
+        let b = Breakdown::cut(0, 60, vec![(10, 30)], vec![(20, 40)], vec![(0, 50)]);
+        assert_eq!(b.wait_us, 20);
+        assert_eq!(b.io_us, 10);
+        assert_eq!(b.compute_us, 20);
+        assert_eq!(b.untracked_us, 10);
+        assert_eq!(
+            b.wall_us,
+            b.compute_us + b.wait_us + b.io_us + b.untracked_us
+        );
+    }
+
+    #[test]
+    fn flight_attribution_handles_empty_ring() {
+        assert!(flight_attribution("ta", &[]).contains("no ring events"));
+    }
+}

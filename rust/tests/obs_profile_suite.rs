@@ -1,0 +1,551 @@
+//! Performance-attribution suite (the PR-10 acceptance bar).
+//!
+//! Three layers under test:
+//!
+//! * `obs::profile` on a **synthetic** two-party trace whose critical
+//!   path and wait/compute/IO split are known by construction — the
+//!   decomposition is asserted to the microsecond and the walked path
+//!   step by step;
+//! * real federations on the local-sim AND tcp-loopback fabrics: for
+//!   every party the four legs must tile the party's wall time exactly
+//!   (no gap, no double-count), per-round rows must close with zero
+//!   untracked time, and the critical path must tile contiguously;
+//! * the `fedsvd` CLI: `trace analyze` error paths stay one-line with a
+//!   single context prefix, `--json` emits parseable rows, and
+//!   `bench diff` gates hard regressions with a non-zero exit while
+//!   letting noise-sized drift pass (the checked-in
+//!   `BENCH_BASELINE.jsonl` must parse and self-diff clean).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::sync::Mutex;
+
+use fedsvd::cluster::{run_fedsvd_cluster, run_fedsvd_cluster_tcp, ClusterConfig};
+use fedsvd::linalg::{CpuBackend, Mat};
+use fedsvd::metrics::jsonl::Json;
+use fedsvd::metrics::trajectory;
+use fedsvd::obs::{self, profile, Tracer};
+use fedsvd::protocol::FedSvdConfig;
+use fedsvd::rng::Xoshiro256;
+
+const BIN: &str = env!("CARGO_BIN_EXE_fedsvd");
+
+/// These tests flip process-global observability state (trace-dir
+/// override, flight ring, live-metrics registry) — serialize them
+/// within this test binary.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fedsvd_profile_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("tmp dir");
+    dir
+}
+
+fn loopback_available() -> bool {
+    std::net::TcpListener::bind("127.0.0.1:0").is_ok()
+}
+
+// ---------------------------------------------------------------------------
+// synthetic trace: every number below is asserted exactly
+// ---------------------------------------------------------------------------
+
+/// Two parties, session 0x42, both epochs already aligned (first event
+/// at ts 0, shared anchor round PSEED entered at ts 5000 on both):
+///
+/// ```text
+/// ta:    party [0, 95000)   round:PSEED [5000, 30000)
+///        send PSeed @10000 → user0 (4096 B)
+/// user0: party [0, 100000)  round:PSEED [5000, 30000)
+///        recv PSeed @25000 waited 15000  → wait [10000, 25000)
+///        phase mask/upload [30000, 90000)
+///        shard_load @50000 dur 5000      → io  [45000, 50000)
+/// ```
+///
+/// Expected: user0 compute 65000, wait 15000, io 5000, untracked 15000;
+/// ta compute 25000, untracked 70000; critical path = ta compute →
+/// PSeed transfer → user0 compute, tiling [0, 100000) exactly.
+fn write_synthetic(dir: &Path) {
+    let ta = [
+        r#"{"party":"ta","session":66,"seq":0,"ts_us":0,"ev":"span_enter","name":"party"}"#,
+        r#"{"party":"ta","session":66,"seq":1,"ts_us":5000,"ev":"span_enter","name":"round:PSEED","round":0}"#,
+        r#"{"party":"ta","session":66,"seq":2,"ts_us":10000,"ev":"send","name":"PSeed","round":0,"peer":2,"bytes":4096}"#,
+        r#"{"party":"ta","session":66,"seq":3,"ts_us":30000,"ev":"span_leave","name":"round:PSEED","round":0}"#,
+        r#"{"party":"ta","session":66,"seq":4,"ts_us":95000,"ev":"span_leave","name":"party"}"#,
+    ];
+    let user0 = [
+        r#"{"party":"user0","session":66,"seq":0,"ts_us":0,"ev":"span_enter","name":"party"}"#,
+        r#"{"party":"user0","session":66,"seq":1,"ts_us":5000,"ev":"span_enter","name":"round:PSEED","round":0}"#,
+        r#"{"party":"user0","session":66,"seq":2,"ts_us":25000,"ev":"recv","name":"PSeed","round":0,"dur_us":15000}"#,
+        r#"{"party":"user0","session":66,"seq":3,"ts_us":30000,"ev":"span_leave","name":"round:PSEED","round":0}"#,
+        r#"{"party":"user0","session":66,"seq":4,"ts_us":30000,"ev":"span_enter","name":"mask/upload"}"#,
+        r#"{"party":"user0","session":66,"seq":5,"ts_us":50000,"ev":"instant","name":"shard_load","bytes":8192,"dur_us":5000}"#,
+        r#"{"party":"user0","session":66,"seq":6,"ts_us":90000,"ev":"span_leave","name":"mask/upload"}"#,
+        r#"{"party":"user0","session":66,"seq":7,"ts_us":100000,"ev":"span_leave","name":"party"}"#,
+    ];
+    std::fs::write(dir.join("ta-0000000000000042-1.jsonl"), ta.join("\n")).unwrap();
+    std::fs::write(dir.join("user0-0000000000000042-1.jsonl"), user0.join("\n")).unwrap();
+}
+
+fn breakdown_of<'a>(a: &'a profile::Analysis, party: &str) -> &'a profile::Breakdown {
+    &a.parties
+        .iter()
+        .find(|(p, _)| p == party)
+        .unwrap_or_else(|| panic!("party {party} missing from analysis"))
+        .1
+}
+
+#[test]
+fn synthetic_trace_attributes_exactly_and_walks_the_critical_path() {
+    let dir = tmp("synthetic");
+    write_synthetic(&dir);
+    let a = profile::analyze_dir(&dir, None).expect("analyze");
+    assert_eq!(a.session, 0x42);
+    assert_eq!(a.wall_us, 100_000);
+    assert_eq!(a.parties.len(), 2);
+
+    let u0 = breakdown_of(&a, "user0");
+    assert_eq!(u0.wall_us, 100_000);
+    assert_eq!(u0.wait_us, 15_000);
+    assert_eq!(u0.io_us, 5_000);
+    assert_eq!(u0.compute_us, 65_000);
+    assert_eq!(u0.untracked_us, 15_000);
+    assert!((u0.wait_fraction() - 0.15).abs() < 1e-12);
+
+    let ta = breakdown_of(&a, "ta");
+    assert_eq!(ta.wall_us, 95_000);
+    assert_eq!(ta.compute_us, 25_000);
+    assert_eq!(ta.wait_us, 0);
+    assert_eq!(ta.io_us, 0);
+    assert_eq!(ta.untracked_us, 70_000);
+
+    // Per-round rows close exactly with zero untracked time.
+    assert_eq!(a.rounds.len(), 2);
+    let (label, party, b) = &a.rounds[1];
+    assert_eq!((*label, party.as_str()), (0, "user0"));
+    assert_eq!(b.wall_us, 25_000);
+    assert_eq!(b.wait_us, 15_000);
+    assert_eq!(b.compute_us, 10_000);
+    assert_eq!(b.io_us, 0);
+    assert_eq!(b.untracked_us, 0);
+
+    // The critical path: ta computes, hands PSeed to user0, user0
+    // computes to the end — three steps tiling [0, 100000) exactly.
+    assert_eq!(a.critical_path.len(), 3, "{:#?}", a.critical_path);
+    let s = &a.critical_path;
+    assert_eq!(s[0].kind, profile::StepKind::Local);
+    assert_eq!(s[0].party, "ta");
+    assert_eq!((s[0].t0, s[0].t1), (0, 10_000));
+    assert_eq!(s[1].kind, profile::StepKind::Xfer);
+    assert_eq!(s[1].party, "user0");
+    assert_eq!(s[1].from_party.as_deref(), Some("ta"));
+    assert_eq!(s[1].name, "PSeed");
+    assert_eq!((s[1].t0, s[1].t1), (10_000, 25_000));
+    assert_eq!(s[1].bytes, Some(4096));
+    assert_eq!(s[2].kind, profile::StepKind::Local);
+    assert_eq!(s[2].party, "user0");
+    assert_eq!((s[2].t0, s[2].t1), (25_000, 100_000));
+    assert!((a.coverage - 1.0).abs() < 1e-12, "coverage {}", a.coverage);
+
+    // Both parties reached the PSEED gate at the same aligned instant.
+    assert_eq!(a.stragglers.len(), 1);
+    assert_eq!(a.stragglers[0].spread_us, 0);
+
+    // JSON rows all parse; the summary row carries the verdict.
+    let rows = profile::json_rows(&a);
+    let first = Json::parse(rows.lines().next().unwrap()).unwrap();
+    assert_eq!(first.get("kind").and_then(Json::as_str), Some("summary"));
+    assert_eq!(first.get("parties").and_then(Json::as_u64), Some(2));
+    assert_eq!(first.get("steps").and_then(Json::as_u64), Some(3));
+    assert_eq!(
+        first.get("critical_path_coverage").and_then(Json::as_f64),
+        Some(1.0)
+    );
+    for line in rows.lines() {
+        Json::parse(line).unwrap_or_else(|e| panic!("bad json row {line:?}: {e}"));
+    }
+
+    // The human report names the verdicts too.
+    let report = profile::render_report(&a);
+    assert!(report.contains("critical path (3 steps, 100.0% of wall)"), "{report}");
+    assert!(report.contains("-- where the time went, per party --"), "{report}");
+    assert!(report.contains("PSeed (4096 B)"), "{report}");
+
+    // --session: the right id works, a wrong one names what's there.
+    assert!(profile::analyze_dir(&dir, Some(0x42)).is_ok());
+    let err = profile::analyze_dir(&dir, Some(0x99)).unwrap_err().to_string();
+    assert!(err.contains("sessions present") && err.contains("0x42"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// real fabrics: exactness invariants on live traces
+// ---------------------------------------------------------------------------
+
+/// Shared invariants: per party the four legs tile the wall exactly and
+/// never exceed it individually; per round the split closes with zero
+/// untracked time; the critical path is non-empty, contiguous and its
+/// coverage is a valid fraction.
+fn assert_exact_decomposition(a: &profile::Analysis, parties_expected: usize) {
+    assert_eq!(a.parties.len(), parties_expected, "parties: {:?}", a.parties);
+    for (p, b) in &a.parties {
+        assert_eq!(
+            b.wall_us,
+            b.compute_us + b.wait_us + b.io_us + b.untracked_us,
+            "{p}: legs do not tile wall: {b:?}"
+        );
+        for (leg, v) in [
+            ("compute", b.compute_us),
+            ("wait", b.wait_us),
+            ("io", b.io_us),
+            ("untracked", b.untracked_us),
+        ] {
+            assert!(v <= b.wall_us, "{p}: {leg} {v} exceeds wall {}", b.wall_us);
+        }
+    }
+    assert!(!a.rounds.is_empty(), "no per-round rows");
+    for (label, p, b) in &a.rounds {
+        assert_eq!(
+            b.untracked_us, 0,
+            "{p} round {label}: untracked inside a round span: {b:?}"
+        );
+        assert_eq!(
+            b.wall_us,
+            b.compute_us + b.wait_us + b.io_us,
+            "{p} round {label}: round legs do not close: {b:?}"
+        );
+    }
+    assert!(!a.critical_path.is_empty(), "empty critical path");
+    for w in a.critical_path.windows(2) {
+        assert_eq!(
+            w[0].t1, w[1].t0,
+            "critical path not contiguous: {:?} -> {:?}",
+            w[0], w[1]
+        );
+    }
+    for s in &a.critical_path {
+        assert!(s.t1 > s.t0, "empty step survived: {s:?}");
+    }
+    assert!(
+        a.coverage > 0.0 && a.coverage <= 1.0 + 1e-12,
+        "coverage {} out of range",
+        a.coverage
+    );
+}
+
+/// Installs a fresh trace directory override; restores "no tracing" and
+/// clears the flight ring on drop (panic included).
+struct TraceDirGuard {
+    dir: PathBuf,
+}
+
+impl TraceDirGuard {
+    fn new(tag: &str) -> TraceDirGuard {
+        let dir = tmp(tag);
+        obs::set_trace_dir_override(Some(&dir));
+        TraceDirGuard { dir }
+    }
+}
+
+impl Drop for TraceDirGuard {
+    fn drop(&mut self) {
+        obs::set_trace_dir_override(None);
+        obs::flight_clear();
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+fn test_parts(m: usize, widths: &[usize], seed: u64) -> Vec<Mat> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    widths.iter().map(|&w| Mat::gaussian(m, w, &mut rng)).collect()
+}
+
+fn cfg() -> FedSvdConfig {
+    FedSvdConfig {
+        block_size: 4,
+        secagg_batch_rows: 16,
+        ..Default::default()
+    }
+}
+
+fn ccfg() -> ClusterConfig {
+    ClusterConfig {
+        shards: 2,
+        mem_budget: 8 << 20,
+        spill_root: None,
+    }
+}
+
+#[test]
+fn decomposition_tiles_wall_exactly_on_local_sim_fabric() {
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let guard = TraceDirGuard::new("localsim");
+    let parts = test_parts(24, &[5, 4], 21);
+    run_fedsvd_cluster(&parts, &cfg(), &ccfg(), CpuBackend::global()).unwrap();
+    let a = profile::analyze_dir(&guard.dir, None).expect("analyze local-sim trace");
+    assert_exact_decomposition(&a, 4); // ta, csp, user0, user1
+}
+
+#[test]
+fn decomposition_tiles_wall_exactly_on_tcp_loopback_fabric() {
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    if !loopback_available() {
+        eprintln!("skipping: loopback TCP unavailable");
+        return;
+    }
+    let guard = TraceDirGuard::new("tcploop");
+    let parts = test_parts(24, &[5, 4], 22);
+    run_fedsvd_cluster_tcp(&parts, &cfg(), &ccfg(), CpuBackend::global()).unwrap();
+    let a = profile::analyze_dir(&guard.dir, None).expect("analyze tcp-loopback trace");
+    assert_exact_decomposition(&a, 4);
+}
+
+// ---------------------------------------------------------------------------
+// flight-recorder attribution footer
+// ---------------------------------------------------------------------------
+
+#[test]
+fn flight_dump_carries_attribution_footer_without_leaking_peer_lines() {
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    obs::flight_clear();
+    {
+        // Two parties share the process ring; user1's dump must
+        // attribute its own time and name ta only as the straggler
+        // candidate of its last round — never as a JSONL line.
+        let ta = Tracer::with_sink_dir("ta", 0x77, None);
+        let u1 = Tracer::with_sink_dir("user1", 0x77, None);
+        u1.span_enter("party", None);
+        u1.span_enter("round:PSEED", Some(0));
+        ta.span_enter("round:PSEED", Some(0));
+        u1.recv_event_waited("PSeed", Some(0), 1_000);
+        u1.span_leave("round:PSEED", Some(0), None);
+        u1.span_leave("party", None, None);
+    }
+    let dump = obs::flight_dump("user1", "test reason");
+    obs::flight_clear();
+    let attr_at = dump.find("=== ATTRIBUTION party=user1").unwrap_or_else(|| {
+        panic!("no attribution footer in dump:\n{dump}")
+    });
+    let end_at = dump.find("=== FLIGHT-RECORDER END").expect("end marker");
+    assert!(attr_at < end_at, "footer must precede the END marker:\n{dump}");
+    assert!(dump.contains("wall="), "{dump}");
+    assert!(dump.contains("compute="), "{dump}");
+    assert!(dump.contains("straggler=ta@PSEED"), "{dump}");
+    // The dump body stays filtered to the dumping party.
+    assert!(!dump.contains("\"party\":\"ta\""), "peer JSONL leaked:\n{dump}");
+}
+
+// ---------------------------------------------------------------------------
+// CLI: trace analyze error paths + JSON rows
+// ---------------------------------------------------------------------------
+
+fn run_bin(args: &[&str]) -> (bool, String, String) {
+    let out = Command::new(BIN).args(args).output().expect("spawn fedsvd");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn trace_analyze_cli_fails_cleanly_and_emits_parseable_json() {
+    // Empty directory → one line, one context prefix (the PR-10 bugfix:
+    // the library error must not carry its own `trace …:` prefix).
+    let empty = tmp("cli_empty");
+    let (ok, _, err) = run_bin(&["trace", "analyze", empty.to_str().unwrap()]);
+    assert!(!ok);
+    let line = err.lines().last().unwrap_or_default();
+    assert!(
+        line.contains("trace analyze:") && line.contains("no .jsonl streams"),
+        "unexpected error: {err}"
+    );
+    assert_eq!(
+        line.matches("trace analyze:").count(),
+        1,
+        "doubled context prefix: {line}"
+    );
+    // Missing directory → clean one-line error too.
+    let gone = empty.join("definitely-not-here");
+    let (ok, _, err) = run_bin(&["trace", "analyze", gone.to_str().unwrap()]);
+    assert!(!ok);
+    assert!(err.contains("cannot read"), "unexpected error: {err}");
+    // Missing <dir> operand names the usage.
+    let (ok, _, err) = run_bin(&["trace", "analyze"]);
+    assert!(!ok && err.contains("missing <dir>"), "{err}");
+
+    // A real directory: --json rows parse line by line, and --out lands
+    // the same report in a file.
+    write_synthetic(&empty);
+    let (ok, out, _) = run_bin(&["trace", "analyze", empty.to_str().unwrap(), "--json"]);
+    assert!(ok, "analyze failed on synthetic dir");
+    let mut kinds: BTreeMap<String, usize> = BTreeMap::new();
+    for line in out.lines() {
+        let v = Json::parse(line).unwrap_or_else(|e| panic!("bad row {line:?}: {e}"));
+        let k = v.get("kind").and_then(Json::as_str).expect("kind").to_string();
+        *kinds.entry(k).or_insert(0) += 1;
+    }
+    assert_eq!(kinds.get("summary"), Some(&1), "kinds: {kinds:?}");
+    assert_eq!(kinds.get("party"), Some(&2));
+    assert_eq!(kinds.get("critical_step"), Some(&3));
+    let out_file = empty.join("report.txt");
+    let (ok, _, _) = run_bin(&[
+        "trace",
+        "analyze",
+        empty.to_str().unwrap(),
+        "--out",
+        out_file.to_str().unwrap(),
+    ]);
+    assert!(ok);
+    let report = std::fs::read_to_string(&out_file).expect("report file");
+    assert!(report.contains("critical path"), "{report}");
+    let _ = std::fs::remove_dir_all(&empty);
+}
+
+// ---------------------------------------------------------------------------
+// CLI: bench diff gate + the checked-in baseline
+// ---------------------------------------------------------------------------
+
+const DIFF_FIXTURE: &str = concat!(
+    r#"{"bench":"step2_mask_scaling","m":4096,"n":4096,"block":64,"users":2,"threads":4,"median_s":0.4,"speedup_vs_1t":3.2,"bit_identical_vs_1t":true}"#,
+    "\n",
+    r#"{"bench":"gemm_kernel","shape":"square","m":512,"k":512,"n":512,"isa":"avx2","threads":1,"median_s":0.03,"speedup_vs_scalar_1t":3.5}"#,
+    "\n",
+);
+
+#[test]
+fn bench_diff_cli_gates_hard_regressions_and_passes_noise() {
+    let dir = tmp("benchdiff");
+    let old = dir.join("old.jsonl");
+    let new_ok = dir.join("new_ok.jsonl");
+    let new_bad = dir.join("new_bad.jsonl");
+    std::fs::write(&old, DIFF_FIXTURE).unwrap();
+    // +10% wall noise: well inside the allowance, exit 0.
+    std::fs::write(&new_ok, DIFF_FIXTURE.replace("\"median_s\":0.4", "\"median_s\":0.44")).unwrap();
+    // Step-2 speedup collapses below the 2× hard floor: exit non-zero.
+    std::fs::write(
+        &new_bad,
+        DIFF_FIXTURE.replace("\"speedup_vs_1t\":3.2", "\"speedup_vs_1t\":1.2"),
+    )
+    .unwrap();
+
+    let (ok, out, _) = run_bin(&["bench", "diff", old.to_str().unwrap(), new_ok.to_str().unwrap()]);
+    assert!(ok, "noise-sized drift must pass:\n{out}");
+    assert!(out.contains("hard thresholds: all clear"), "{out}");
+
+    let (ok, out, err) =
+        run_bin(&["bench", "diff", old.to_str().unwrap(), new_bad.to_str().unwrap()]);
+    assert!(!ok, "hard regression must fail the diff");
+    assert!(out.contains("HARD"), "{out}");
+    assert!(out.contains("speedup_vs_1t"), "{out}");
+    assert!(err.contains("hard regression"), "{err}");
+
+    // --json: rows parse, the summary carries the failing verdict.
+    let (ok, out, _) = run_bin(&[
+        "bench",
+        "diff",
+        old.to_str().unwrap(),
+        new_bad.to_str().unwrap(),
+        "--json",
+    ]);
+    assert!(!ok);
+    let first = Json::parse(out.lines().next().expect("summary row")).unwrap();
+    assert_eq!(first.get("kind").and_then(Json::as_str), Some("summary"));
+    assert_eq!(first.get("fail"), Some(&Json::Bool(true)));
+    for line in out.lines() {
+        Json::parse(line).unwrap_or_else(|e| panic!("bad row {line:?}: {e}"));
+    }
+
+    // Unreadable input is a clean error, not a panic.
+    let (ok, _, err) = run_bin(&["bench", "diff", "no-such.jsonl", old.to_str().unwrap()]);
+    assert!(!ok && err.contains("cannot read"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checked_in_baseline_parses_and_self_diffs_clean() {
+    let baseline = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_BASELINE.jsonl");
+    let text = std::fs::read_to_string(&baseline)
+        .unwrap_or_else(|e| panic!("BENCH_BASELINE.jsonl unreadable: {e}"));
+    let rows = trajectory::parse_rows(&text, "BENCH_BASELINE.jsonl").expect("baseline parses");
+    assert!(rows.len() >= 40, "baseline suspiciously small: {} rows", rows.len());
+    let d = trajectory::diff_streams(&text, &text).expect("self diff");
+    assert_eq!(d.rows.len(), rows.len());
+    assert_eq!(d.regressions() + d.improvements(), 0, "{}", d.render());
+    assert!(!d.has_hard_regressions(), "{}", d.render());
+    assert!(d.missing.is_empty() && d.added.is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// live plane: /status percentiles, wait fraction, straggler
+// ---------------------------------------------------------------------------
+
+#[test]
+fn status_json_carries_percentiles_wait_fraction_and_straggler() {
+    use fedsvd::obs::metrics_live;
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    if !loopback_available() {
+        eprintln!("skipping: loopback TCP unavailable");
+        return;
+    }
+    metrics_live::set_metrics_addr_override(Some("127.0.0.1:0"));
+    metrics_live::reset_for_tests();
+    let scope_ta = metrics_live::party_scope("ta", 0xf00);
+    let scope_csp = metrics_live::party_scope("csp", 0xf00);
+
+    // ta waits 10% of its round time, csp 95%: the federation is
+    // waiting on ta (min wait fraction = straggler candidate).
+    for total in [1_000u64, 2_000, 3_000, 4_000] {
+        metrics_live::round_observe("ta", 0, total, total / 10);
+    }
+    metrics_live::round_observe("csp", 0, 2_000, 1_900);
+
+    let v = Json::parse(&metrics_live::render_status()).expect("status JSON");
+    assert_eq!(v.get("straggler").and_then(Json::as_str), Some("ta"));
+    let parties = v.get("parties").and_then(Json::as_arr).expect("parties");
+    let ta = parties
+        .iter()
+        .find(|p| p.get("role").and_then(Json::as_str) == Some("ta"))
+        .expect("ta row");
+    // nearest-rank percentiles over [1000, 2000, 3000, 4000] µs
+    assert_eq!(ta.get("round_p50_s").and_then(Json::as_f64), Some(0.002));
+    assert_eq!(ta.get("round_p95_s").and_then(Json::as_f64), Some(0.004));
+    let wf = ta.get("wait_fraction").and_then(Json::as_f64).expect("wait_fraction");
+    assert!((wf - 0.1).abs() < 1e-3, "ta wait_fraction {wf}");
+    let csp = parties
+        .iter()
+        .find(|p| p.get("role").and_then(Json::as_str) == Some("csp"))
+        .expect("csp row");
+    let wf = csp.get("wait_fraction").and_then(Json::as_f64).expect("wait_fraction");
+    assert!((wf - 0.95).abs() < 1e-3, "csp wait_fraction {wf}");
+
+    // The exposition grew the same story: labelled split counters, the
+    // wait-fraction gauge and the straggler flag.
+    let text = metrics_live::render_metrics();
+    assert!(
+        text.contains("fedsvd_round_wait_seconds_total{label=\"0\",round=\"PSEED\"}"),
+        "{text}"
+    );
+    assert!(
+        text.contains("fedsvd_round_compute_seconds_total{label=\"0\",round=\"PSEED\"}"),
+        "{text}"
+    );
+    assert!(text.contains("fedsvd_wait_fraction{party=\"ta\"}"), "{text}");
+    assert!(text.contains("fedsvd_straggler{party=\"ta\"} 1"), "{text}");
+    assert!(text.contains("fedsvd_straggler{party=\"csp\"} 0"), "{text}");
+    assert!(text.contains("# TYPE fedsvd_round_wait_seconds histogram"), "{text}");
+    assert!(text.contains("# TYPE fedsvd_round_compute_seconds histogram"), "{text}");
+
+    // A lone party has no peers to compare against: no straggler.
+    metrics_live::reset_for_tests();
+    let scope_lone = metrics_live::party_scope("ta", 0xf00);
+    metrics_live::round_observe("ta", 0, 1_000, 100);
+    let v = Json::parse(&metrics_live::render_status()).expect("status JSON");
+    assert_eq!(v.get("straggler"), Some(&Json::Null));
+    drop(scope_lone);
+    drop(scope_csp);
+    drop(scope_ta);
+    metrics_live::set_metrics_addr_override(None);
+    metrics_live::reset_for_tests();
+}
